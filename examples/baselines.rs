@@ -1,0 +1,75 @@
+//! Baseline comparison: the local-SGD family the paper positions against
+//! (FedAvg, FedProx, SCAFFOLD, FedNova) plus FedLAMA, on a non-IID
+//! workload with heterogeneous client data sizes.
+//!
+//!   cargo run --release --example baselines
+
+use fedlama::aggregation::Policy;
+use fedlama::config::{Algorithm, PartitionKind, RunConfig};
+use fedlama::coordinator::Coordinator;
+use fedlama::data::DatasetKind;
+use fedlama::metrics::tables::Table;
+
+fn main() -> anyhow::Result<()> {
+    let base = RunConfig {
+        model_dir: "artifacts/mlp".into(),
+        dataset: DatasetKind::Toy,
+        partition: PartitionKind::Dirichlet { alpha: 0.2 },
+        n_clients: 8,
+        samples: 200,
+        lr: 0.08,
+        warmup_rounds: 2,
+        iterations: 240,
+        eval_every_rounds: 0,
+        eval_examples: 1024,
+        seed: 21,
+        use_chunk: false,
+        ..Default::default()
+    };
+
+    let runs: Vec<(&str, Algorithm, Policy, bool)> = vec![
+        ("FedAvg(6)", Algorithm::Sgd, Policy::fedavg(6), false),
+        ("FedProx(6) mu=0.01", Algorithm::Prox { mu: 0.01 }, Policy::fedavg(6), false),
+        ("SCAFFOLD(6)", Algorithm::Scaffold, Policy::fedavg(6), false),
+        ("FedNova(6) hetero", Algorithm::Nova, Policy::fedavg(6), true),
+        ("FedLAMA(6,2)", Algorithm::Sgd, Policy::fedlama(6, 2), false),
+        ("FedLAMA(6,4)", Algorithm::Sgd, Policy::fedlama(6, 4), false),
+    ];
+
+    let mut t = Table::new(
+        "Local-SGD baselines under non-IID data (Dirichlet 0.2, 8 clients)",
+        &["Algorithm", "Validation acc.", "Final loss", "Comm. cost", "Wall (s)"],
+    );
+    let mut baseline_cost = None;
+    for (label, algo, policy, hetero) in runs {
+        let cfg = RunConfig {
+            algorithm: algo,
+            policy,
+            hetero_local_steps: hetero,
+            ..base.clone()
+        };
+        let mut coord = Coordinator::new(cfg)?;
+        let m = coord.run()?;
+        let cost_pct = match baseline_cost {
+            None => {
+                baseline_cost = Some(m.total_comm_cost);
+                100.0
+            }
+            Some(b) => 100.0 * m.total_comm_cost as f64 / b as f64,
+        };
+        t.row(vec![
+            label.to_string(),
+            format!("{:.2}%", 100.0 * m.final_acc),
+            format!("{:.4}", m.final_loss),
+            format!("{cost_pct:.2}%"),
+            format!("{:.1}", m.wall_secs),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "Note: the variance-reduction baselines tackle client drift at full\n\
+         communication cost; FedLAMA attacks the cost itself.  The paper\n\
+         (§2) treats the two directions as composable."
+    );
+    Ok(())
+}

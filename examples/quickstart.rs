@@ -1,0 +1,53 @@
+//! Quickstart: FedLAMA vs FedAvg on the toy MLP workload, in ~30 seconds.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+//!
+//! Trains the same federated workload three ways — FedAvg with the short
+//! interval tau'=6 (accuracy anchor), FedAvg with the long interval 24
+//! (communication anchor), and FedLAMA(6,4) — and prints the paper's
+//! headline trade-off: FedLAMA keeps the short-interval accuracy at close
+//! to the long-interval communication cost.
+
+use fedlama::aggregation::Policy;
+use fedlama::config::RunConfig;
+use fedlama::coordinator::Coordinator;
+use fedlama::data::DatasetKind;
+use fedlama::reports;
+
+fn main() -> anyhow::Result<()> {
+    let base = RunConfig {
+        model_dir: "artifacts/mlp".into(),
+        dataset: DatasetKind::Toy,
+        n_clients: 8,
+        partition: fedlama::config::PartitionKind::Dirichlet { alpha: 0.3 },
+        samples: 256,
+        lr: 0.08,
+        warmup_rounds: 2,
+        iterations: 240,
+        eval_every_rounds: 0,
+        eval_examples: 1024,
+        seed: 42,
+        ..Default::default()
+    };
+
+    let mut results = Vec::new();
+    for (label, policy) in [
+        ("FedAvg(6)", Policy::fedavg(6)),
+        ("FedAvg(24)", Policy::fedavg(24)),
+        ("FedLAMA(6,4)", Policy::fedlama(6, 4)),
+    ] {
+        let cfg = RunConfig { policy, ..base.clone() };
+        let mut coord = Coordinator::new(cfg)?;
+        let m = coord.run()?;
+        println!("{}", reports::summary_line(label, &m));
+        results.push(m);
+    }
+
+    println!();
+    println!("{}", reports::tradeoff_note(&results[0], &results[1], &results[2]));
+    println!(
+        "\n(The paper's claim, Table 1: FedLAMA matches FedAvg(tau') accuracy at a \
+         communication cost close to FedAvg(phi*tau').)"
+    );
+    Ok(())
+}

@@ -1,0 +1,200 @@
+"""AOT compile path: lower every L2 entry point to HLO *text* + a manifest.
+
+HLO text (NOT serialized HloModuleProto): jax >= 0.5 emits protos with
+64-bit instruction ids which xla_extension 0.5.1 (what the rust `xla` 0.1.6
+crate links) rejects; the text parser reassigns ids and round-trips cleanly.
+
+Outputs, per model, under <out>/<model>/:
+  init.hlo.txt                 (seed:u32[]) -> (p_0..p_{P-1})
+  train_step.hlo.txt           (p.., x[B,..], y[B]:i32, lr:f32[]) -> (p'.., loss)
+  train_step_prox.hlo.txt      (p.., g.., x, y, lr, mu) -> (p'.., loss)
+  train_step_scaffold.hlo.txt  (p.., ci.., c.., x, y, lr) -> (p'.., loss)
+  grad_step.hlo.txt            (p.., x, y) -> (grads.., loss)
+  eval_step.hlo.txt            (p.., x[E,..], y[E]) -> (correct, loss_sum)
+  agg_d{dim}_m{m}.hlo.txt      (X[m,dim], w[m]) -> (u[dim], disc)   [L1 Pallas]
+  manifest.json                layer/group/entry metadata for the rust runtime
+
+Usage: python -m compile.aot --out ../artifacts [--models a,b] [--agg-m 4,8,16]
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile.kernels.agg_discrepancy import agg_discrepancy
+
+# Build matrix: artifact name -> (model factory kwargs).  Widths are scaled
+# for the CPU testbed; see DESIGN.md §4 (substitutions).
+MODEL_BUILDS = {
+    "mlp": ("mlp", dict(input_dim=64, hidden=(128, 64), num_classes=10)),
+    "femnist_cnn": ("femnist_cnn", dict(width=8, num_classes=62)),
+    "cifar_cnn": ("cifar_cnn", dict(width=8, num_classes=10)),
+    "cifar_cnn100": ("cifar_cnn", dict(width=8, num_classes=100)),
+    "resnet20": ("resnet20", dict(width=8, num_classes=10)),
+    "resnet20w16": ("resnet20", dict(width=16, num_classes=10)),
+}
+
+DEFAULT_AGG_M = (4, 8, 16, 32)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def lower_entry(fn, args, path, verbose=True):
+    t0 = time.time()
+    text = to_hlo_text(jax.jit(fn).lower(*args))
+    with open(path, "w") as f:
+        f.write(text)
+    if verbose:
+        print(f"  {os.path.basename(path):34s} {len(text):>9d} chars  {time.time() - t0:5.1f}s")
+
+
+def build_model_artifacts(name, out_dir, batch, eval_batch, agg_ms, chunk=6, verbose=True):
+    base, kw = MODEL_BUILDS[name]
+    mdl = M.get_model(base, **kw)
+    mdir = os.path.join(out_dir, name)
+    os.makedirs(mdir, exist_ok=True)
+    if verbose:
+        print(f"[{name}] {mdl.num_params} params, {len(mdl.specs)} tensors, "
+              f"{len(mdl.groups())} groups")
+
+    pspecs = [spec(s.shape) for s in mdl.specs]
+    x_t = spec((batch, *mdl.input_shape))
+    y_t = spec((batch,), jnp.int32)
+    x_e = spec((eval_batch, *mdl.input_shape))
+    y_e = spec((eval_batch,), jnp.int32)
+    f32 = spec(())
+
+    P = len(mdl.specs)
+
+    init = M.make_init(mdl)
+    lower_entry(lambda seed: init(seed), [spec((), jnp.uint32)],
+                os.path.join(mdir, "init.hlo.txt"), verbose)
+
+    ts = M.make_train_step(mdl)
+    lower_entry(lambda *a: ts(a[:P], a[P], a[P + 1], a[P + 2]),
+                [*pspecs, x_t, y_t, f32],
+                os.path.join(mdir, "train_step.hlo.txt"), verbose)
+
+    tsp = M.make_train_step_prox(mdl)
+    lower_entry(lambda *a: tsp(a[:P], a[P:2 * P], a[2 * P], a[2 * P + 1], a[2 * P + 2], a[2 * P + 3]),
+                [*pspecs, *pspecs, x_t, y_t, f32, f32],
+                os.path.join(mdir, "train_step_prox.hlo.txt"), verbose)
+
+    tss = M.make_train_step_scaffold(mdl)
+    lower_entry(lambda *a: tss(a[:P], a[P:2 * P], a[2 * P:3 * P], a[3 * P], a[3 * P + 1], a[3 * P + 2]),
+                [*pspecs, *pspecs, *pspecs, x_t, y_t, f32],
+                os.path.join(mdir, "train_step_scaffold.hlo.txt"), verbose)
+
+    tc = M.make_train_chunk(mdl, chunk)
+    lower_entry(lambda *a: tc(a[:P], a[P], a[P + 1], a[P + 2]),
+                [*pspecs, spec((chunk, batch, *mdl.input_shape)),
+                 spec((chunk, batch), jnp.int32), f32],
+                os.path.join(mdir, "train_chunk.hlo.txt"), verbose)
+
+    gs = M.make_grad_step(mdl)
+    lower_entry(lambda *a: gs(a[:P], a[P], a[P + 1]),
+                [*pspecs, x_t, y_t],
+                os.path.join(mdir, "grad_step.hlo.txt"), verbose)
+
+    ev = M.make_eval_step(mdl)
+    lower_entry(lambda *a: ev(a[:P], a[P], a[P + 1]),
+                [*pspecs, x_e, y_e],
+                os.path.join(mdir, "eval_step.hlo.txt"), verbose)
+
+    # Fused Pallas aggregation kernels: one per (distinct group dim, m).
+    groups = mdl.groups()
+    group_dims = sorted({sum(mdl.specs[i].dim for i in idx) for _, idx in groups})
+    agg_files = {}
+    for d in group_dims:
+        agg_files[str(d)] = {}
+        for m in agg_ms:
+            fname = f"agg_d{d}_m{m}.hlo.txt"
+            lower_entry(lambda X, w: agg_discrepancy(X, w),
+                        [spec((m, d)), spec((m,))],
+                        os.path.join(mdir, fname), verbose=False)
+            agg_files[str(d)][str(m)] = fname
+    if verbose:
+        print(f"  agg kernels: {len(group_dims)} dims x {len(agg_ms)} m-values")
+
+    manifest = {
+        "model": name,
+        "base": base,
+        "batch_size": batch,
+        "eval_batch_size": eval_batch,
+        "input_shape": list(mdl.input_shape),
+        "num_classes": mdl.num_classes,
+        "num_param_tensors": P,
+        "num_params": mdl.num_params,
+        "params": [
+            {"name": s.name, "shape": list(s.shape), "dim": s.dim, "group": s.group}
+            for s in mdl.specs
+        ],
+        "groups": [
+            {"name": g, "params": idx, "dim": sum(mdl.specs[i].dim for i in idx)}
+            for g, idx in groups
+        ],
+        "chunk_k": chunk,
+        "entries": {
+            "init": "init.hlo.txt",
+            "train_step": "train_step.hlo.txt",
+            "train_chunk": "train_chunk.hlo.txt",
+            "train_step_prox": "train_step_prox.hlo.txt",
+            "train_step_scaffold": "train_step_scaffold.hlo.txt",
+            "grad_step": "grad_step.hlo.txt",
+            "eval_step": "eval_step.hlo.txt",
+        },
+        "agg": {"m_values": list(agg_ms), "by_dim": agg_files},
+    }
+    with open(os.path.join(mdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default=",".join(MODEL_BUILDS))
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--eval-batch", type=int, default=256)
+    ap.add_argument("--agg-m", default=",".join(str(m) for m in DEFAULT_AGG_M))
+    ap.add_argument("--chunk", type=int, default=6)
+    args = ap.parse_args()
+
+    models = [m for m in args.models.split(",") if m]
+    agg_ms = [int(v) for v in args.agg_m.split(",") if v]
+    os.makedirs(args.out, exist_ok=True)
+    t0 = time.time()
+    names = []
+    for name in models:
+        if name not in MODEL_BUILDS:
+            print(f"unknown model {name!r}; have {sorted(MODEL_BUILDS)}", file=sys.stderr)
+            return 1
+        build_model_artifacts(name, args.out, args.batch, args.eval_batch, agg_ms, args.chunk)
+        names.append(name)
+    with open(os.path.join(args.out, "index.json"), "w") as f:
+        json.dump({"models": names, "batch_size": args.batch,
+                   "eval_batch_size": args.eval_batch}, f, indent=1)
+    print(f"artifacts complete in {time.time() - t0:.1f}s -> {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

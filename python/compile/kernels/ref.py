@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: every Pallas kernel in this package
+must match its oracle to float32 tolerance (pytest + hypothesis enforce it).
+"""
+
+import jax.numpy as jnp
+
+
+def ref_agg_discrepancy(stacked, weights):
+    """Weighted model aggregation + unit model discrepancy (paper Eq. 2 numerator).
+
+    Args:
+      stacked: f32[m, d] — one flattened layer from each of the m clients.
+      weights: f32[m]    — aggregation weights p_i (sum to 1 over active
+        clients; inactive clients contribute weight 0).
+
+    Returns:
+      (u, disc): u = sum_i p_i x_i  (f32[d]) and
+      disc = sum_i p_i * ||u - x_i||^2  (f32 scalar).
+    """
+    u = jnp.einsum("m,md->d", weights, stacked)
+    diff = stacked - u[None, :]
+    disc = jnp.sum(weights * jnp.sum(diff * diff, axis=1))
+    return u, disc
+
+
+def ref_sgd(param, grad, lr):
+    """Plain SGD update: p <- p - lr * g (elementwise, any shape)."""
+    return param - lr * grad
+
+
+def ref_weighted_average(stacked, weights):
+    """Aggregation only (no discrepancy)."""
+    return jnp.einsum("m,md->d", weights, stacked)

@@ -1,0 +1,80 @@
+"""L1 Pallas kernel: fused SGD parameter update.
+
+Applied to every parameter tensor of every client at every local step — the
+highest-frequency elementwise op in the system.  The kernel tiles the
+flattened parameter through VMEM in BLOCK elements and fuses the scale and
+subtract (p - lr*g) in a single pass, so each parameter is read once and
+written once (vs. read-twice/write-once if the scale materializes lr*g).
+
+interpret=True: CPU PJRT cannot execute Mosaic custom-calls; the kernel
+lowers to plain HLO and fuses there.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 32768
+
+
+def _sgd_kernel(lr_ref, p_ref, g_ref, o_ref):
+    o_ref[...] = p_ref[...] - lr_ref[0] * g_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def sgd_update_flat(param, grad, lr, block=DEFAULT_BLOCK):
+    """p - lr*g over a flat f32[d] tensor via the tiled Pallas kernel."""
+    (d,) = param.shape
+    block = min(block, _next_multiple(d, 128))
+    d_pad = _next_multiple(d, block)
+    if d_pad != d:
+        param = jnp.pad(param, (0, d_pad - d))
+        grad = jnp.pad(grad, (0, d_pad - d))
+    out = pl.pallas_call(
+        _sgd_kernel,
+        grid=(d_pad // block,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((d_pad,), jnp.float32),
+        interpret=True,
+    )(lr.reshape(1).astype(jnp.float32), param.astype(jnp.float32), grad.astype(jnp.float32))
+    return out[:d]
+
+
+def sgd_update(param, grad, lr):
+    """Shape-preserving SGD update on an arbitrary-rank tensor."""
+    flat = sgd_update_flat(param.reshape(-1), grad.reshape(-1), lr)
+    return flat.reshape(param.shape)
+
+
+def sgd_update_tree(params, grads, lr):
+    """Fused SGD update over a whole parameter list via ONE Pallas call.
+
+    Concatenates all tensors into a single flat vector, runs the tiled
+    kernel once, and splits back.  One kernel invocation per training step
+    (instead of one per tensor) keeps the lowered HLO small and lets XLA
+    fuse the gather/scatter copies — critical for deep models like ResNet20
+    where per-tensor kernel ceremony dominated the step time.
+    """
+    sizes = [int(p.size) for p in params]
+    pflat = jnp.concatenate([p.reshape(-1) for p in params])
+    gflat = jnp.concatenate([g.reshape(-1) for g in grads])
+    new_flat = sgd_update_flat(pflat, gflat, lr)
+    offsets = []
+    off = 0
+    for s in sizes:
+        offsets.append((off, off + s))
+        off += s
+    return [
+        new_flat[a:b].reshape(p.shape) for (a, b), p in zip(offsets, params)
+    ]
+
+
+def _next_multiple(x, base):
+    return ((x + base - 1) // base) * base

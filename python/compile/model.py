@@ -1,0 +1,446 @@
+"""L2: the paper's models and federated train/eval steps in pure JAX.
+
+Everything here is build-time only: `aot.py` lowers the entry points to HLO
+text and the rust coordinator executes them via PJRT.  Parameters are an
+explicit *list* of tensors (no pytree nesting) so the rust side can address
+each FedLAMA aggregation unit ("layer") positionally, exactly as listed in
+the manifest.
+
+Models (paper §6):
+  mlp          — quickstart model.
+  femnist_cnn  — the LEAF/Caldas FEMNIST CNN (2 conv + 2 fc), width-scalable.
+  cifar_cnn    — VGG-style CNN, the scaled stand-in for WideResNet28-10.
+  resnet20     — faithful ResNet20 topology (He et al.), norm-free residual
+                 blocks with trainable scale/bias (see DESIGN.md §4).
+
+Entry points lowered per model:
+  init(seed)                                  -> params
+  train_step(params.., x, y, lr)              -> params'.., loss
+  train_step_prox(params.., glob.., x, y, lr, mu) -> params'.., loss  (FedProx)
+  train_step_scaffold(params.., ci.., c.., x, y, lr) -> params'.., loss (SCAFFOLD)
+  eval_step(params.., x, y)                   -> correct, loss_sum
+  grad_step(params.., x, y)                   -> grads.., loss (FedNova & tests)
+
+The SGD update inside train_step goes through the L1 Pallas kernel
+(kernels.sgd) so the kernel lowers into the same HLO module.
+"""
+
+import dataclasses
+import math
+from typing import Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.sgd import sgd_update, sgd_update_tree
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """One parameter tensor: FedLAMA schedules aggregation per `group`."""
+
+    name: str  # e.g. "stage2.block1.conv1.w"
+    shape: Tuple[int, ...]
+    group: str  # aggregation unit ("layer" in the paper's sense)
+    init: str  # "he", "glorot", "zeros", "ones", "small"
+
+    @property
+    def dim(self) -> int:
+        return int(math.prod(self.shape))
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelDef:
+    name: str
+    input_shape: Tuple[int, ...]  # per-example, e.g. (32, 32, 3)
+    num_classes: int
+    specs: Tuple[ParamSpec, ...]
+    apply: Callable  # (params: List[Array], x: Array[B,...]) -> logits[B, C]
+
+    @property
+    def num_params(self) -> int:
+        return sum(s.dim for s in self.specs)
+
+    def groups(self):
+        """Ordered aggregation units: [(group_name, [param indices])]."""
+        out, index = [], {}
+        for i, s in enumerate(self.specs):
+            if s.group not in index:
+                index[s.group] = len(out)
+                out.append((s.group, []))
+            out[index[s.group]][1].append(i)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+
+def init_param(key, spec: ParamSpec):
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, jnp.float32)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, jnp.float32)
+    if spec.init == "small":
+        # Residual-branch output scale: start near zero so each block is
+        # near-identity at init (fixup-style, replaces BatchNorm's effect).
+        return jnp.full(spec.shape, 0.1, jnp.float32)
+    if spec.init == "glorot":
+        fan_in, fan_out = _fans(spec.shape)
+        lim = math.sqrt(6.0 / (fan_in + fan_out))
+        return jax.random.uniform(key, spec.shape, jnp.float32, -lim, lim)
+    # He normal (default for conv/dense + relu)
+    fan_in, _ = _fans(spec.shape)
+    std = math.sqrt(2.0 / max(fan_in, 1))
+    return std * jax.random.normal(key, spec.shape, jnp.float32)
+
+
+def _fans(shape):
+    if len(shape) == 1:
+        return shape[0], shape[0]
+    if len(shape) == 2:
+        return shape[0], shape[1]
+    if len(shape) == 4:  # HWIO conv
+        rf = shape[0] * shape[1]
+        return rf * shape[2], rf * shape[3]
+    n = int(math.prod(shape))
+    return n, n
+
+
+def init_params(model: ModelDef, seed):
+    """Deterministic init from a traced uint32 seed (AOT `init` entry)."""
+    key = jax.random.PRNGKey(seed)
+    keys = jax.random.split(key, len(model.specs))
+    return [init_param(k, s) for k, s in zip(keys, model.specs)]
+
+
+# ---------------------------------------------------------------------------
+# Primitive layers (pure functions over the params list)
+# ---------------------------------------------------------------------------
+
+
+def conv2d(x, w, b=None, stride=1):
+    """NHWC x HWIO -> NHWC, SAME padding."""
+    y = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    if b is not None:
+        y = y + b
+    return y
+
+
+def dense(x, w, b=None):
+    y = x @ w
+    if b is not None:
+        y = y + b
+    return y
+
+
+def maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def avgpool_global(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+def scale_bias(x, s, b):
+    """Channelwise affine (the norm-free stand-in for BatchNorm)."""
+    return x * s + b
+
+
+# ---------------------------------------------------------------------------
+# Model zoo
+# ---------------------------------------------------------------------------
+
+
+def make_mlp(input_dim=64, hidden=(128, 64), num_classes=10, name="mlp"):
+    specs: List[ParamSpec] = []
+    dims = [input_dim, *hidden, num_classes]
+    for i in range(len(dims) - 1):
+        g = f"fc{i + 1}"
+        specs.append(ParamSpec(f"{g}.w", (dims[i], dims[i + 1]), g, "he"))
+        specs.append(ParamSpec(f"{g}.b", (dims[i + 1],), g, "zeros"))
+
+    nlayers = len(dims) - 1
+
+    def apply(params, x):
+        h = x.reshape(x.shape[0], -1)
+        for i in range(nlayers):
+            h = dense(h, params[2 * i], params[2 * i + 1])
+            if i < nlayers - 1:
+                h = jax.nn.relu(h)
+        return h
+
+    return ModelDef(name, (input_dim,), num_classes, tuple(specs), apply)
+
+
+def make_femnist_cnn(width=16, num_classes=62, image=28, name="femnist_cnn"):
+    """LEAF FEMNIST CNN (Caldas et al. 2018), width-scalable.
+
+    conv5x5(1->w) relu pool2 | conv5x5(w->2w) relu pool2 | fc(->8w) relu | fc.
+    """
+    w1, w2, fc = width, 2 * width, 8 * width
+    flat = (image // 4) * (image // 4) * w2
+    specs = (
+        ParamSpec("conv1.w", (5, 5, 1, w1), "conv1", "he"),
+        ParamSpec("conv1.b", (w1,), "conv1", "zeros"),
+        ParamSpec("conv2.w", (5, 5, w1, w2), "conv2", "he"),
+        ParamSpec("conv2.b", (w2,), "conv2", "zeros"),
+        ParamSpec("fc1.w", (flat, fc), "fc1", "he"),
+        ParamSpec("fc1.b", (fc,), "fc1", "zeros"),
+        ParamSpec("fc2.w", (fc, num_classes), "fc2", "he"),
+        ParamSpec("fc2.b", (num_classes,), "fc2", "zeros"),
+    )
+
+    def apply(params, x):
+        h = jax.nn.relu(conv2d(x, params[0], params[1]))
+        h = maxpool2(h)
+        h = jax.nn.relu(conv2d(h, params[2], params[3]))
+        h = maxpool2(h)
+        h = h.reshape(h.shape[0], -1)
+        h = jax.nn.relu(dense(h, params[4], params[5]))
+        return dense(h, params[6], params[7])
+
+    return ModelDef(name, (image, image, 1), num_classes, specs, apply)
+
+
+def make_cifar_cnn(width=16, num_classes=10, image=32, name="cifar_cnn"):
+    """VGG-style CNN: 3 conv-conv-pool stages + 2 fc.
+
+    Stand-in for WideResNet28-10: preserves the property the paper's
+    Figures 2/3 rely on — the output-side layers hold most parameters.
+    """
+    w = width
+    chans = [(3, w), (w, w), (w, 2 * w), (2 * w, 2 * w), (2 * w, 4 * w), (4 * w, 4 * w)]
+    specs: List[ParamSpec] = []
+    for i, (ci, co) in enumerate(chans):
+        g = f"conv{i + 1}"
+        specs.append(ParamSpec(f"{g}.w", (3, 3, ci, co), g, "he"))
+        specs.append(ParamSpec(f"{g}.b", (co,), g, "zeros"))
+    flat = (image // 8) * (image // 8) * 4 * w
+    specs.append(ParamSpec("fc1.w", (flat, 8 * w), "fc1", "he"))
+    specs.append(ParamSpec("fc1.b", (8 * w,), "fc1", "zeros"))
+    specs.append(ParamSpec("fc2.w", (8 * w, num_classes), "fc2", "he"))
+    specs.append(ParamSpec("fc2.b", (num_classes,), "fc2", "zeros"))
+
+    def apply(params, x):
+        h = x
+        for stage in range(3):
+            for j in range(2):
+                i = stage * 2 + j
+                h = jax.nn.relu(conv2d(h, params[2 * i], params[2 * i + 1]))
+            h = maxpool2(h)
+        h = h.reshape(h.shape[0], -1)
+        h = jax.nn.relu(dense(h, params[12], params[13]))
+        return dense(h, params[14], params[15])
+
+    return ModelDef(name, (image, image, 3), num_classes, tuple(specs), apply)
+
+
+def make_resnet20(width=16, num_classes=10, image=32, name="resnet20"):
+    """ResNet20 (He et al. 2016): stem + 3 stages x 3 blocks x 2 convs + fc.
+
+    BatchNorm is replaced by trainable channelwise scale/bias with a
+    small-initialized scale on the residual branch output (fixup-style), so
+    every parameter is a plain tensor the aggregation scheme can average
+    (see DESIGN.md §4 substitutions).
+    """
+    w = width
+    specs: List[ParamSpec] = []
+
+    def add_conv(g, k, ci, co, bias=True):
+        specs.append(ParamSpec(f"{g}.w", (k, k, ci, co), g, "he"))
+        if bias:
+            # Downsample shortcuts are bias-free: an unused parameter would
+            # be DCE'd out of the eval/grad HLO signatures by XLA and break
+            # the positional calling convention.
+            specs.append(ParamSpec(f"{g}.b", (co,), g, "zeros"))
+
+    def add_sb(g, c, small=False):
+        specs.append(ParamSpec(f"{g}.s", (c,), g, "small" if small else "ones"))
+        specs.append(ParamSpec(f"{g}.bb", (c,), g, "zeros"))
+
+    add_conv("stem", 3, 3, w)
+    stage_ch = [w, 2 * w, 4 * w]
+    cin = w
+    for s, ch in enumerate(stage_ch):
+        for b in range(3):
+            g = f"s{s + 1}b{b + 1}"
+            add_conv(f"{g}.conv1", 3, cin if b == 0 else ch, ch)
+            add_sb(f"{g}.sb1", ch)
+            add_conv(f"{g}.conv2", 3, ch, ch)
+            add_sb(f"{g}.sb2", ch, small=True)
+            if b == 0 and cin != ch:
+                add_conv(f"{g}.down", 1, cin, ch, bias=False)
+        cin = ch
+    specs.append(ParamSpec("fc.w", (4 * w, num_classes), "fc", "he"))
+    specs.append(ParamSpec("fc.b", (num_classes,), "fc", "zeros"))
+
+    index = {s.name: i for i, s in enumerate(specs)}
+
+    def p(params, name):
+        return params[index[name]]
+
+    def apply(params, x):
+        h = jax.nn.relu(conv2d(x, p(params, "stem.w"), p(params, "stem.b")))
+        cin_l = w
+        for s, ch in enumerate(stage_ch):
+            for b in range(3):
+                g = f"s{s + 1}b{b + 1}"
+                stride = 2 if (b == 0 and s > 0) else 1
+                y = conv2d(h, p(params, f"{g}.conv1.w"), p(params, f"{g}.conv1.b"), stride)
+                y = jax.nn.relu(scale_bias(y, p(params, f"{g}.sb1.s"), p(params, f"{g}.sb1.bb")))
+                y = conv2d(y, p(params, f"{g}.conv2.w"), p(params, f"{g}.conv2.b"))
+                y = scale_bias(y, p(params, f"{g}.sb2.s"), p(params, f"{g}.sb2.bb"))
+                if b == 0 and cin_l != ch:
+                    h = conv2d(h, p(params, f"{g}.down.w"), None, stride)
+                h = jax.nn.relu(h + y)
+            cin_l = ch
+        h = avgpool_global(h)
+        return dense(h, p(params, "fc.w"), p(params, "fc.b"))
+
+    return ModelDef(name, (image, image, 3), num_classes, tuple(specs), apply)
+
+
+MODELS = {
+    "mlp": make_mlp,
+    "femnist_cnn": make_femnist_cnn,
+    "cifar_cnn": make_cifar_cnn,
+    "resnet20": make_resnet20,
+}
+
+
+def get_model(name: str, **kw) -> ModelDef:
+    if name not in MODELS:
+        raise KeyError(f"unknown model {name!r}; have {sorted(MODELS)}")
+    return MODELS[name](**kw, name=name)
+
+
+# ---------------------------------------------------------------------------
+# Losses + entry points
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits, labels):
+    """Mean softmax cross-entropy; labels are int32 class ids."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(nll)
+
+
+def make_train_step(model: ModelDef):
+    """(params.., x, y, lr) -> (params'.., loss). One local SGD step."""
+
+    def loss_fn(params, x, y):
+        return cross_entropy(model.apply(params, x), y)
+
+    def train_step(params: Sequence, x, y, lr):
+        loss, grads = jax.value_and_grad(loss_fn)(list(params), x, y)
+        new = sgd_update_tree(list(params), grads, lr)
+        return (*new, loss)
+
+    return train_step
+
+
+def make_train_step_prox(model: ModelDef):
+    """FedProx: local loss + (mu/2) * ||params - global||^2."""
+
+    def loss_fn(params, glob, x, y, mu):
+        base = cross_entropy(model.apply(params, x), y)
+        prox = sum(jnp.sum((p - g) ** 2) for p, g in zip(params, glob))
+        return base + 0.5 * mu * prox
+
+    def train_step(params: Sequence, glob: Sequence, x, y, lr, mu):
+        loss, grads = jax.value_and_grad(loss_fn)(list(params), list(glob), x, y, mu)
+        new = sgd_update_tree(list(params), grads, lr)
+        return (*new, loss)
+
+    return train_step
+
+
+def make_train_step_scaffold(model: ModelDef):
+    """SCAFFOLD local step: p <- p - lr * (g - c_i + c)."""
+
+    def loss_fn(params, x, y):
+        return cross_entropy(model.apply(params, x), y)
+
+    def train_step(params: Sequence, ci: Sequence, c: Sequence, x, y, lr):
+        loss, grads = jax.value_and_grad(loss_fn)(list(params), x, y)
+        corrected = [g - a + b for g, a, b in zip(grads, ci, c)]
+        new = sgd_update_tree(list(params), corrected, lr)
+        return (*new, loss)
+
+    return train_step
+
+
+def make_train_chunk(model: ModelDef, k: int):
+    """(params.., xs[K,B,..], ys[K,B], lr) -> (params'.., losses[K]).
+
+    K local SGD steps fused into one executable, amortizing the rust<->PJRT
+    literal boundary over K steps (the L3 hot-path optimization; DESIGN.md
+    §7).  The loop is UNROLLED rather than lax.scan: xla_extension 0.5.1's
+    CPU backend executes while-loop bodies ~18x slower than straight-line
+    code (measured in EXPERIMENTS.md §Perf), so scan would defeat the
+    purpose of chunking.
+    """
+    step = make_train_step(model)
+
+    def chunk(params: Sequence, xs, ys, lr):
+        carry = list(params)
+        losses = []
+        for s in range(k):
+            out = step(carry, xs[s], ys[s], lr)
+            carry = list(out[:-1])
+            losses.append(out[-1])
+        return (*carry, jnp.stack(losses))
+
+    return chunk
+
+
+def make_grad_step(model: ModelDef):
+    """(params.., x, y) -> (grads.., loss) — used by FedNova and tests."""
+
+    def loss_fn(params, x, y):
+        return cross_entropy(model.apply(params, x), y)
+
+    def grad_step(params: Sequence, x, y):
+        loss, grads = jax.value_and_grad(loss_fn)(list(params), x, y)
+        return (*grads, loss)
+
+    return grad_step
+
+
+def make_eval_step(model: ModelDef):
+    """(params.., x, y) -> (correct_count, loss_sum) over one batch."""
+
+    def eval_step(params: Sequence, x, y):
+        logits = model.apply(list(params), x)
+        pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        correct = jnp.sum((pred == y).astype(jnp.float32))
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, y[:, None], axis=-1)[:, 0]
+        return correct, jnp.sum(nll)
+
+    return eval_step
+
+
+def make_init(model: ModelDef):
+    """(seed: u32) -> params.."""
+
+    def init(seed):
+        return tuple(init_params(model, seed))
+
+    return init

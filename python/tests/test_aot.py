@@ -1,0 +1,86 @@
+"""AOT pipeline tests: manifest consistency + HLO text emission."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+def test_model_builds_cover_experiments():
+    for name in ["mlp", "femnist_cnn", "cifar_cnn", "cifar_cnn100", "resnet20"]:
+        assert name in aot.MODEL_BUILDS
+
+
+def test_to_hlo_text_emits_parsable_module():
+    import jax
+
+    def fn(a, b):
+        return (a @ b,)
+
+    spec = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    text = aot.to_hlo_text(jax.jit(fn).lower(spec, spec))
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # parameters appear with f32[4,4] shapes
+    assert "f32[4,4]" in text
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    manifest = aot.build_model_artifacts(
+        "mlp", out, batch=8, eval_batch=16, agg_ms=[2, 3], chunk=2, verbose=False
+    )
+    return out, manifest
+
+
+def test_manifest_round_trips(built):
+    out, manifest = built
+    path = os.path.join(out, "mlp", "manifest.json")
+    with open(path) as f:
+        loaded = json.load(f)
+    assert loaded == manifest
+
+
+def test_manifest_consistency(built):
+    _, m = built
+    mdl = M.get_model(aot.MODEL_BUILDS["mlp"][0], **aot.MODEL_BUILDS["mlp"][1])
+    assert m["num_params"] == mdl.num_params
+    assert m["num_param_tensors"] == len(mdl.specs)
+    assert m["batch_size"] == 8
+    assert m["eval_batch_size"] == 16
+    assert m["chunk_k"] == 2
+    # group dims sum to total
+    assert sum(g["dim"] for g in m["groups"]) == m["num_params"]
+    # every group's params indices are valid and disjoint
+    seen = set()
+    for g in m["groups"]:
+        for i in g["params"]:
+            assert 0 <= i < len(m["params"])
+            assert i not in seen
+            seen.add(i)
+    assert len(seen) == len(m["params"])
+
+
+def test_all_entry_files_exist_and_are_hlo(built):
+    out, m = built
+    for entry, fname in m["entries"].items():
+        path = os.path.join(out, "mlp", fname)
+        assert os.path.exists(path), entry
+        with open(path) as f:
+            head = f.read(64)
+        assert head.startswith("HloModule"), f"{entry} is not HLO text"
+
+
+def test_agg_kernels_exist_per_dim_and_m(built):
+    out, m = built
+    dims = {str(g["dim"]) for g in m["groups"]}
+    assert set(m["agg"]["by_dim"].keys()) == dims
+    for d, by_m in m["agg"]["by_dim"].items():
+        assert set(by_m.keys()) == {"2", "3"}
+        for f in by_m.values():
+            assert os.path.exists(os.path.join(out, "mlp", f))

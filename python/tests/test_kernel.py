@@ -1,0 +1,153 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+hypothesis sweeps shapes/dtypes/client counts; assert_allclose against
+kernels/ref.py everywhere.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.agg_discrepancy import agg_discrepancy, DEFAULT_BLOCK_D
+from compile.kernels.ref import ref_agg_discrepancy, ref_sgd, ref_weighted_average
+from compile.kernels.sgd import sgd_update, sgd_update_flat, sgd_update_tree
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (scale * jax.random.normal(jax.random.PRNGKey(key), shape)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# agg_discrepancy
+# ---------------------------------------------------------------------------
+
+
+class TestAggDiscrepancy:
+    def check(self, m, d, key=0, block_d=DEFAULT_BLOCK_D):
+        X = rand(key, (m, d))
+        w = jnp.abs(rand(key + 1, (m,))) + 0.01
+        w = w / w.sum()
+        u, disc = agg_discrepancy(X, w, block_d=block_d)
+        u_ref, disc_ref = ref_agg_discrepancy(X, w)
+        np.testing.assert_allclose(u, u_ref, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(disc, disc_ref, rtol=1e-4, atol=1e-5)
+
+    def test_basic(self):
+        self.check(4, 1000)
+
+    def test_single_client(self):
+        X = rand(3, (1, 257))
+        u, disc = agg_discrepancy(X, jnp.ones((1,)))
+        np.testing.assert_allclose(u, X[0], rtol=1e-6)
+        assert float(disc) < 1e-8
+
+    def test_unpadded_exact_multiple(self):
+        self.check(2, 2 * DEFAULT_BLOCK_D)
+
+    def test_ragged_padding(self):
+        self.check(3, DEFAULT_BLOCK_D + 17)
+
+    def test_tiny_dim(self):
+        self.check(8, 3)
+
+    def test_identical_clients_zero_discrepancy(self):
+        x = rand(5, (1, 400))
+        X = jnp.tile(x, (6, 1))
+        w = jnp.full((6,), 1.0 / 6.0)
+        u, disc = agg_discrepancy(X, w)
+        np.testing.assert_allclose(u, x[0], rtol=1e-5, atol=1e-6)
+        assert float(disc) < 1e-6
+
+    def test_zero_weight_rows_ignored(self):
+        X = rand(6, (3, 128))
+        X = X.at[2].set(1e6)  # junk row
+        w = jnp.array([0.5, 0.5, 0.0])
+        u, disc = agg_discrepancy(X, w)
+        u_ref, disc_ref = ref_agg_discrepancy(X[:2], jnp.array([0.5, 0.5]))
+        np.testing.assert_allclose(u, u_ref, rtol=1e-5)
+        np.testing.assert_allclose(disc, disc_ref, rtol=1e-4)
+
+    def test_weighted_average_matches(self):
+        X = rand(7, (4, 300))
+        w = jnp.array([0.1, 0.2, 0.3, 0.4])
+        u, _ = agg_discrepancy(X, w)
+        np.testing.assert_allclose(u, ref_weighted_average(X, w), rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.integers(1, 12),
+        d=st.integers(1, 3000),
+        block=st.sampled_from([128, 256, 1024, 2048]),
+        key=st.integers(0, 10_000),
+    )
+    def test_hypothesis_shapes(self, m, d, block, key):
+        self.check(m, d, key=key, block_d=block)
+
+    @settings(max_examples=8, deadline=None)
+    @given(m=st.integers(2, 6), d=st.integers(10, 500), key=st.integers(0, 100))
+    def test_hypothesis_bf16_inputs_upcast(self, m, d, key):
+        # bf16 client tensors are accepted and accumulated in f32
+        X = rand(key, (m, d), jnp.bfloat16)
+        w = jnp.full((m,), 1.0 / m)
+        u, disc = agg_discrepancy(X, w)
+        u_ref, disc_ref = ref_agg_discrepancy(X.astype(jnp.float32), w)
+        np.testing.assert_allclose(u, u_ref, rtol=1e-2, atol=1e-2)
+        np.testing.assert_allclose(disc, disc_ref, rtol=5e-2, atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# sgd
+# ---------------------------------------------------------------------------
+
+
+class TestSgd:
+    def test_flat_matches_ref(self):
+        p = rand(0, (5000,))
+        g = rand(1, (5000,))
+        out = sgd_update_flat(p, g, jnp.float32(0.3))
+        np.testing.assert_allclose(out, ref_sgd(p, g, 0.3), rtol=1e-5, atol=1e-6)
+
+    def test_shaped(self):
+        p = rand(2, (3, 4, 5))
+        g = rand(3, (3, 4, 5))
+        out = sgd_update(p, g, jnp.float32(0.01))
+        np.testing.assert_allclose(out, ref_sgd(p, g, 0.01), rtol=1e-5, atol=1e-6)
+        assert out.shape == p.shape
+
+    def test_zero_lr_is_identity(self):
+        p = rand(4, (130,))
+        out = sgd_update_flat(p, rand(5, (130,)), jnp.float32(0.0))
+        np.testing.assert_allclose(out, p, rtol=0, atol=0)
+
+    def test_tree_update_matches_per_tensor(self):
+        shapes = [(3, 3, 2, 4), (4,), (10, 7), (1,), (128,)]
+        params = [rand(10 + i, s) for i, s in enumerate(shapes)]
+        grads = [rand(20 + i, s) for i, s in enumerate(shapes)]
+        lr = jnp.float32(0.05)
+        tree = sgd_update_tree(params, grads, lr)
+        for t, p, g in zip(tree, params, grads):
+            np.testing.assert_allclose(t, ref_sgd(p, g, 0.05), rtol=1e-5, atol=1e-6)
+            assert t.shape == p.shape
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(1, 100_000),
+        lr=st.floats(0.0, 2.0, allow_nan=False),
+        key=st.integers(0, 1000),
+    )
+    def test_hypothesis_sizes(self, n, lr, key):
+        p = rand(key, (n,))
+        g = rand(key + 1, (n,))
+        out = sgd_update_flat(p, g, jnp.float32(lr))
+        np.testing.assert_allclose(out, ref_sgd(p, g, np.float32(lr)), rtol=1e-5, atol=1e-6)
+
+    def test_inside_jit(self):
+        p = rand(6, (64,))
+        g = rand(7, (64,))
+
+        @jax.jit
+        def f(p, g, lr):
+            return sgd_update_flat(p, g, lr)
+
+        np.testing.assert_allclose(f(p, g, jnp.float32(0.1)), ref_sgd(p, g, 0.1), rtol=1e-5, atol=1e-6)

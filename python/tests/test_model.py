@@ -1,0 +1,184 @@
+"""L2 model tests: shapes, gradients, training dynamics, entry points."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+MODELS = [
+    ("mlp", dict(input_dim=32, hidden=(32, 16), num_classes=5)),
+    ("femnist_cnn", dict(width=4, num_classes=62)),
+    ("cifar_cnn", dict(width=4, num_classes=10)),
+    ("resnet20", dict(width=4, num_classes=10)),
+]
+
+
+def make(name, kw):
+    return M.get_model(name, **kw)
+
+
+def batch_for(mdl, b=4, key=0):
+    x = jax.random.normal(jax.random.PRNGKey(key), (b, *mdl.input_shape))
+    y = jnp.arange(b, dtype=jnp.int32) % mdl.num_classes
+    return x, y
+
+
+@pytest.mark.parametrize("name,kw", MODELS)
+class TestModelZoo:
+    def test_specs_consistent(self, name, kw):
+        mdl = make(name, kw)
+        assert mdl.num_params == sum(int(np.prod(s.shape)) for s in mdl.specs)
+        names = [s.name for s in mdl.specs]
+        assert len(names) == len(set(names)), "duplicate param names"
+        groups = mdl.groups()
+        covered = sorted(i for _, idx in groups for i in idx)
+        assert covered == list(range(len(mdl.specs))), "groups must cover all params"
+
+    def test_init_shapes_and_determinism(self, name, kw):
+        mdl = make(name, kw)
+        p1 = M.init_params(mdl, jnp.uint32(7))
+        p2 = M.init_params(mdl, jnp.uint32(7))
+        p3 = M.init_params(mdl, jnp.uint32(8))
+        for a, b, s in zip(p1, p2, mdl.specs):
+            assert a.shape == s.shape
+            np.testing.assert_array_equal(a, b)
+        assert any(not np.array_equal(a, c) for a, c in zip(p1, p3))
+
+    def test_forward_shape(self, name, kw):
+        mdl = make(name, kw)
+        params = M.init_params(mdl, jnp.uint32(0))
+        x, _ = batch_for(mdl)
+        logits = mdl.apply(params, x)
+        assert logits.shape == (4, mdl.num_classes)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_gradients_flow_to_every_param(self, name, kw):
+        mdl = make(name, kw)
+        params = M.init_params(mdl, jnp.uint32(1))
+        x, y = batch_for(mdl)
+
+        def loss(params):
+            return M.cross_entropy(mdl.apply(params, x), y)
+
+        grads = jax.grad(loss)(params)
+        for g, s in zip(grads, mdl.specs):
+            assert bool(jnp.all(jnp.isfinite(g))), s.name
+            # every tensor must receive gradient signal somewhere
+            assert float(jnp.max(jnp.abs(g))) > 0.0, f"dead parameter {s.name}"
+
+    def test_train_step_reduces_fixed_batch_loss(self, name, kw):
+        mdl = make(name, kw)
+        params = list(M.init_params(mdl, jnp.uint32(2)))
+        x, y = batch_for(mdl, b=8)
+        step = make_jitted_step(mdl)
+        first = None
+        for _ in range(10):
+            out = step(params, x, y, jnp.float32(0.05))
+            params = list(out[:-1])
+            if first is None:
+                first = float(out[-1])
+        last = float(out[-1])
+        assert last < first, f"{name}: {first} -> {last}"
+
+    def test_eval_step_counts(self, name, kw):
+        mdl = make(name, kw)
+        params = M.init_params(mdl, jnp.uint32(3))
+        x, y = batch_for(mdl, b=8)
+        correct, loss_sum = M.make_eval_step(mdl)(params, x, y)
+        assert 0.0 <= float(correct) <= 8.0
+        assert float(loss_sum) > 0.0
+
+
+def make_jitted_step(mdl):
+    raw = M.make_train_step(mdl)
+    return jax.jit(lambda params, x, y, lr: raw(params, x, y, lr))
+
+
+class TestEntryPoints:
+    def setup_method(self):
+        self.mdl = make("mlp", dict(input_dim=16, hidden=(16,), num_classes=4))
+        self.params = list(M.init_params(self.mdl, jnp.uint32(0)))
+        self.x, self.y = batch_for(self.mdl, b=4)
+
+    def test_prox_penalizes_distance(self):
+        step = M.make_train_step_prox(self.mdl)
+        glob = [p + 1.0 for p in self.params]
+        out_mu0 = step(self.params, glob, self.x, self.y, jnp.float32(0.0), jnp.float32(0.0))
+        out_mu1 = step(self.params, glob, self.x, self.y, jnp.float32(0.0), jnp.float32(1.0))
+        # with mu>0 the loss includes the prox term: P params off by 1 each
+        extra = 0.5 * sum(float(jnp.sum((p - g) ** 2)) for p, g in zip(self.params, glob))
+        assert float(out_mu1[-1]) == pytest.approx(float(out_mu0[-1]) + extra, rel=1e-4)
+
+    def test_scaffold_correction_shifts_update(self):
+        step = M.make_train_step_scaffold(self.mdl)
+        zeros = [jnp.zeros_like(p) for p in self.params]
+        ones = [jnp.ones_like(p) * 0.1 for p in self.params]
+        lr = jnp.float32(0.1)
+        base = step(self.params, zeros, zeros, self.x, self.y, lr)
+        # c_i = c -> identical to plain sgd
+        same = step(self.params, ones, ones, self.x, self.y, lr)
+        for a, b in zip(base[:-1], same[:-1]):
+            np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+        # c != c_i shifts every parameter by lr*(c - c_i) = lr*0.1
+        shifted = step(self.params, zeros, ones, self.x, self.y, lr)
+        for a, b in zip(base[:-1], shifted[:-1]):
+            np.testing.assert_allclose(b, a - 0.01, rtol=1e-4, atol=1e-6)
+
+    def test_grad_step_matches_autodiff(self):
+        gs = M.make_grad_step(self.mdl)
+        out = gs(self.params, self.x, self.y)
+        grads, loss = out[:-1], out[-1]
+
+        def loss_fn(params):
+            return M.cross_entropy(self.mdl.apply(params, self.x), self.y)
+
+        want = jax.grad(loss_fn)(self.params)
+        assert float(loss) == pytest.approx(float(loss_fn(self.params)), rel=1e-5)
+        for g, w in zip(grads, want):
+            np.testing.assert_allclose(g, w, rtol=1e-5, atol=1e-6)
+
+    def test_train_chunk_matches_sequential_steps(self):
+        k = 3
+        chunk = M.make_train_chunk(self.mdl, k)
+        step = M.make_train_step(self.mdl)
+        xs = jax.random.normal(jax.random.PRNGKey(9), (k, 4, *self.mdl.input_shape))
+        ys = jnp.tile(self.y, (k, 1))
+        lr = jnp.float32(0.05)
+        out = chunk(self.params, xs, ys, lr)
+        chunk_params, losses = list(out[:-1]), out[-1]
+        assert losses.shape == (k,)
+        params = self.params
+        for s in range(k):
+            o = step(params, xs[s], ys[s], lr)
+            params = list(o[:-1])
+            np.testing.assert_allclose(float(o[-1]), float(losses[s]), rtol=1e-5)
+        for a, b in zip(chunk_params, params):
+            np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+    def test_cross_entropy_uniform_logits(self):
+        logits = jnp.zeros((4, 10))
+        y = jnp.zeros((4,), jnp.int32)
+        assert float(M.cross_entropy(logits, y)) == pytest.approx(np.log(10.0), rel=1e-5)
+
+
+class TestResnetStructure:
+    def test_layer_count_matches_paper(self):
+        mdl = make("resnet20", dict(width=8, num_classes=10))
+        conv_weights = [s for s in mdl.specs if len(s.shape) == 4]
+        fc = [s for s in mdl.specs if s.name.startswith("fc.")]
+        # 20 weight layers: stem + 18 block convs + fc; +2 downsample 1x1
+        assert len(conv_weights) == 1 + 18 + 2
+        assert len(fc) == 2
+        # downsample shortcuts are bias-free (would be DCE'd from eval HLO)
+        assert not any(s.name.endswith("down.b") for s in mdl.specs)
+
+    def test_output_side_layers_dominate_size(self):
+        # the property Figures 2/3 rely on: later groups hold most params
+        mdl = make("resnet20", dict(width=8, num_classes=10))
+        groups = mdl.groups()
+        dims = [sum(mdl.specs[i].dim for i in idx) for _, idx in groups]
+        first_half = sum(dims[: len(dims) / 2 if False else len(dims) // 2])
+        second_half = sum(dims[len(dims) // 2 :])
+        assert second_half > 2 * first_half

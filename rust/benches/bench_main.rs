@@ -1,0 +1,312 @@
+//! Benchmark harness (`cargo bench`), custom — no criterion offline.
+//!
+//! Three sections:
+//!   1. Microbenches: the aggregation hot path (native vs Pallas/XLA
+//!      kernel) across layer sizes and client counts, plus per-model
+//!      train-step / train-chunk / eval latency and the literal-boundary
+//!      cost.  These are the §Perf numbers in EXPERIMENTS.md.
+//!   2. Paper tables: regenerates Tables 1-5 (+ the baselines ablation) at
+//!      smoke scale and prints the paper-format rows.  BENCH_ALL=1 also
+//!      runs the appendix tables 6-11.
+//!   3. Paper figures: Figure 1 crossover curves, Figures 2/3 per-layer
+//!      comm profile, Figures 4-6 learning-curve endpoints.
+//!
+//! Environment:
+//!   BENCH_SCALE=smoke|default   experiment scale (default: smoke)
+//!   BENCH_ALL=1                 include appendix tables
+//!   BENCH_FILTER=<substr>       only run sections whose name matches
+
+use std::time::Instant;
+
+use fedlama::aggregation::{aggregate_native, Policy};
+use fedlama::config::presets::{self, Scale};
+use fedlama::config::{PartitionKind, RunConfig};
+use fedlama::coordinator::Coordinator;
+use fedlama::data::DatasetKind;
+use fedlama::metrics::tables::Table;
+use fedlama::reports;
+use fedlama::runtime::ModelRuntime;
+use fedlama::util::rng::Rng;
+use fedlama::util::stats;
+
+fn main() -> anyhow::Result<()> {
+    let filter = std::env::var("BENCH_FILTER").unwrap_or_default();
+    let scale = Scale::parse(&std::env::var("BENCH_SCALE").unwrap_or_else(|_| "smoke".into()))
+        .unwrap_or(Scale::Smoke);
+    let run = |name: &str| filter.is_empty() || name.contains(&filter);
+
+    let t0 = Instant::now();
+    if run("micro-agg") {
+        bench_aggregation()?;
+    }
+    if run("micro-step") {
+        bench_model_steps()?;
+    }
+    if run("micro-boundary") {
+        bench_literal_boundary()?;
+    }
+    if run("tables") {
+        bench_tables(scale)?;
+    }
+    if run("figures") {
+        bench_figures()?;
+    }
+    eprintln!("\ntotal bench time: {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+/// Section 1a: fused aggregation kernel vs native rust across sizes.
+fn bench_aggregation() -> anyhow::Result<()> {
+    println!("\n### micro-agg: aggregation backends (u_l + d_l per sync)\n");
+    let rt = ModelRuntime::load(std::path::Path::new("artifacts/resnet20"))?;
+    let mut rng = Rng::new(7);
+    let mut t = Table::new(
+        "aggregation throughput (one group sync)",
+        &["dim", "m", "native (us)", "pallas/xla (us)", "native GB/s", "speedup"],
+    );
+    // representative group dims present in the resnet20 artifact set
+    let dims: Vec<usize> = rt.manifest.agg_by_dim.keys().cloned().collect();
+    let ms = [4usize, 8, 16];
+    for &dim in dims.iter().filter(|&&d| d >= 512) {
+        for &m in &ms {
+            let stack: Vec<f32> = (0..m * dim).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let w: Vec<f32> = vec![1.0 / m as f32; m];
+            let rows: Vec<&[f32]> = (0..m).map(|i| &stack[i * dim..(i + 1) * dim]).collect();
+            let mut u = vec![0.0f32; dim];
+            let reps = (1_000_000 / (m * dim)).clamp(3, 100);
+            // native
+            let mut nat = Vec::new();
+            for _ in 0..reps {
+                let s = Instant::now();
+                let d = aggregate_native(&rows, &w, &mut u);
+                nat.push(s.elapsed().as_secs_f64() * 1e6);
+                std::hint::black_box(d);
+            }
+            // pallas/xla (if artifact exists for this (dim, m))
+            let xla_us = rt.agg_kernel(dim, m).map(|exe| {
+                let mut xs = Vec::new();
+                for _ in 0..reps.min(20) {
+                    let s = Instant::now();
+                    let out = rt.run_agg(&exe, &stack, &w, dim).unwrap();
+                    xs.push(s.elapsed().as_secs_f64() * 1e6);
+                    std::hint::black_box(out.1);
+                }
+                stats::mean(&xs)
+            });
+            let nat_us = stats::mean(&nat);
+            let bytes = (m * dim * 4) as f64; // one pass reads the stack
+            t.row(vec![
+                dim.to_string(),
+                m.to_string(),
+                format!("{nat_us:.1}"),
+                xla_us.map(|v| format!("{v:.1}")).unwrap_or_else(|| "-".into()),
+                format!("{:.2}", 2.0 * bytes / (nat_us * 1e-6) / 1e9),
+                xla_us.map(|v| format!("{:.2}x", v / nat_us)).unwrap_or_else(|| "-".into()),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    println!(
+        "(speedup < 1x means the Pallas/XLA path is slower than native here: on CPU the\n\
+         kernel pays a literal round-trip per call; on TPU the same artifact runs from\n\
+         VMEM — see DESIGN.md Hardware-Adaptation.)\n"
+    );
+    Ok(())
+}
+
+/// Section 1b: per-model executable latency.
+fn bench_model_steps() -> anyhow::Result<()> {
+    println!("\n### micro-step: AOT executable latency per model\n");
+    let mut t = Table::new(
+        "executable latency",
+        &["model", "params", "train_step (ms)", "train_chunk/step (ms)", "eval_step (ms)"],
+    );
+    for model in ["mlp", "femnist_cnn", "cifar_cnn", "resnet20"] {
+        let dir = std::path::Path::new("artifacts").join(model);
+        if !dir.join("manifest.json").exists() {
+            continue;
+        }
+        let rt = ModelRuntime::load(&dir)?;
+        let mut params = rt.init_params(0)?;
+        let b = rt.manifest.batch_size;
+        let k = rt.manifest.chunk_k;
+        let d: usize = rt.manifest.input_shape.iter().product();
+        let mut rng = Rng::new(1);
+        let x: Vec<f32> = (0..k * b * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let y: Vec<i32> = (0..k * b).map(|i| (i % rt.manifest.num_classes) as i32).collect();
+        let reps = if model == "mlp" { 10 } else { 3 };
+        let mut ts = Vec::new();
+        for _ in 0..reps {
+            let s = Instant::now();
+            rt.train_step(&mut params, &x[..b * d], &y[..b], 0.05)?;
+            ts.push(s.elapsed().as_secs_f64() * 1e3);
+        }
+        let mut tc = Vec::new();
+        for _ in 0..reps {
+            let s = Instant::now();
+            rt.train_chunk(&mut params, &x, &y, 0.05)?;
+            tc.push(s.elapsed().as_secs_f64() * 1e3 / k as f64);
+        }
+        let eb = rt.manifest.eval_batch_size;
+        let ex: Vec<f32> = (0..eb * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let ey: Vec<i32> = (0..eb).map(|i| (i % rt.manifest.num_classes) as i32).collect();
+        let mut te = Vec::new();
+        for _ in 0..reps {
+            let s = Instant::now();
+            rt.eval_step(&params, &ex, &ey)?;
+            te.push(s.elapsed().as_secs_f64() * 1e3);
+        }
+        t.row(vec![
+            model.to_string(),
+            rt.manifest.num_params.to_string(),
+            format!("{:.2} ±{:.2}", stats::mean(&ts), stats::stddev(&ts)),
+            format!("{:.2} ±{:.2}", stats::mean(&tc), stats::stddev(&tc)),
+            format!("{:.2} ±{:.2}", stats::mean(&te), stats::stddev(&te)),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+/// Section 1c: the rust<->PJRT literal boundary (what train_chunk amortizes).
+fn bench_literal_boundary() -> anyhow::Result<()> {
+    println!("\n### micro-boundary: literal construction + readback cost\n");
+    let rt = ModelRuntime::load(std::path::Path::new("artifacts/resnet20"))?;
+    let params = rt.init_params(0)?;
+    let reps = 50;
+    let mut build = Vec::new();
+    for _ in 0..reps {
+        let s = Instant::now();
+        let lits: Vec<_> = params.iter().map(|p| p.to_literal().unwrap()).collect();
+        build.push(s.elapsed().as_secs_f64() * 1e3);
+        std::hint::black_box(lits.len());
+    }
+    println!(
+        "building {} param literals ({} params): {:.2} ±{:.2} ms per call set",
+        params.len(),
+        rt.manifest.num_params,
+        stats::mean(&build),
+        stats::stddev(&build)
+    );
+    println!(
+        "-> at chunk_k={} the boundary is paid once per {} local steps\n",
+        rt.manifest.chunk_k, rt.manifest.chunk_k
+    );
+    Ok(())
+}
+
+/// Section 2: the paper tables.
+fn bench_tables(scale: Scale) -> anyhow::Result<()> {
+    let all = std::env::var("BENCH_ALL").ok().is_some_and(|v| v == "1");
+    let ids: Vec<&str> = if all {
+        presets::ALL_TABLE_IDS.to_vec()
+    } else {
+        vec!["table1", "table2", "table3", "table4", "table5", "baselines"]
+    };
+    for id in ids {
+        let exp = presets::by_id(id, scale).unwrap();
+        println!("\n### {id} ({:?} scale)\n", scale);
+        let t0 = Instant::now();
+        let results = reports::run_experiment(&exp, 1, false)?;
+        println!("{}", reports::render_table(&exp, &results).render());
+        eprintln!("[{id} took {:.1}s]", t0.elapsed().as_secs_f64());
+    }
+    Ok(())
+}
+
+/// Section 3: the paper figures (compact textual form).
+fn bench_figures() -> anyhow::Result<()> {
+    println!("\n### figures\n");
+    // Figure 1: crossover curves on resnet20
+    let cfg = RunConfig {
+        model_dir: "artifacts/resnet20".into(),
+        dataset: DatasetKind::Cifar10,
+        partition: PartitionKind::Dirichlet { alpha: 0.1 },
+        policy: Policy::fedlama(6, 2),
+        n_clients: 4,
+        samples: 128,
+        lr: 0.4,
+        warmup_rounds: 0,
+        iterations: 24,
+        eval_every_rounds: 0,
+        eval_examples: 512,
+        ..Default::default()
+    };
+    let mut coord = Coordinator::new(cfg.clone())?;
+    coord.run()?;
+    if let Some(ascii) = reports::figure1_ascii(&coord, 56, 12) {
+        println!("{ascii}");
+    }
+
+    // Figures 2/3: per-layer comm profile, FedAvg vs FedLAMA
+    let mk = |policy| RunConfig { policy, iterations: 72, warmup_rounds: 2, ..cfg.clone() };
+    let mut avg = Coordinator::new(mk(Policy::fedavg(6)))?;
+    let m_avg = avg.run()?;
+    let mut lama = Coordinator::new(mk(Policy::fedlama(6, 2)))?;
+    let m_lama = lama.run()?;
+    let top: Vec<_> = m_avg
+        .per_group
+        .iter()
+        .zip(&m_lama.per_group)
+        .filter(|(a, _)| a.1 > 1000)
+        .map(|(a, l)| format!("{}(d={}): {} vs {} syncs", a.0, a.1, a.2, l.2))
+        .collect();
+    println!("Figure 2 (largest layers, FedAvg vs FedLAMA syncs over {} iters):", 72);
+    for line in top {
+        println!("  {line}");
+    }
+    println!(
+        "Figure 3 totals (Eq.9): FedAvg {} vs FedLAMA {} ({:.1}%)\n",
+        m_avg.total_comm_cost,
+        m_lama.total_comm_cost,
+        100.0 * m_lama.total_comm_cost as f64 / m_avg.total_comm_cost as f64
+    );
+
+    // Figures 4-6: learning-curve endpoints (full curves via `fedlama figure`)
+    for (fig, model, ds, tau, lr) in [
+        (4, "resnet20", DatasetKind::Cifar10, 6usize, 0.4f32),
+        (5, "cifar_cnn100", DatasetKind::Cifar100, 6, 0.3),
+        (6, "femnist_cnn", DatasetKind::Femnist, 10, 0.06),
+    ] {
+        let iters = 8 * tau * 4 / 4; // 8 rounds of phi*tau with phi=4
+        let partition = if fig == 6 {
+            PartitionKind::Writers
+        } else {
+            PartitionKind::Dirichlet { alpha: 0.1 }
+        };
+        let mk = |policy| RunConfig {
+            model_dir: format!("artifacts/{model}").into(),
+            dataset: ds,
+            partition,
+            policy,
+            n_clients: 4,
+            samples: 128,
+            lr,
+            warmup_rounds: 2,
+            iterations: iters,
+            eval_every_rounds: 0,
+            eval_examples: 512,
+            ..Default::default()
+        };
+        let mut lines = Vec::new();
+        for (label, policy) in [
+            (format!("FedAvg({tau})"), Policy::fedavg(tau)),
+            (format!("FedAvg({})", 4 * tau), Policy::fedavg(4 * tau)),
+            (format!("FedLAMA({tau},4)"), Policy::fedlama(tau, 4)),
+        ] {
+            let mut c = Coordinator::new(mk(policy))?;
+            let m = c.run()?;
+            lines.push(format!(
+                "  {label:14} final loss {:.4}, acc {:.2}%, comm {}",
+                m.final_loss,
+                100.0 * m.final_acc,
+                m.total_comm_cost
+            ));
+        }
+        println!("Figure {fig} endpoints ({model}, {iters} iters):");
+        for l in lines {
+            println!("{l}");
+        }
+    }
+    Ok(())
+}

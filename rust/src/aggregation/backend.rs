@@ -1,0 +1,71 @@
+//! Aggregation backends: native rust vs the AOT Pallas kernel.
+//!
+//! Both compute (u_l, disc_l) for one group across active clients.  The
+//! native path reads client tensors in place (no stacking copy); the Xla
+//! path stacks rows into a scratch [m, d] buffer and runs the fused Pallas
+//! kernel artifact.  `Auto` uses the kernel when one exists for (dim, m)
+//! and falls back to native otherwise.  Tests assert the two agree.
+
+use anyhow::Result;
+
+use super::discrepancy::aggregate_native;
+use crate::runtime::ModelRuntime;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AggBackend {
+    Native,
+    Xla,
+    Auto,
+}
+
+impl AggBackend {
+    pub fn parse(s: &str) -> Option<AggBackend> {
+        match s {
+            "native" => Some(AggBackend::Native),
+            "xla" => Some(AggBackend::Xla),
+            "auto" => Some(AggBackend::Auto),
+            _ => None,
+        }
+    }
+}
+
+/// Reusable scratch to avoid per-sync allocation on the hot path.
+#[derive(Default)]
+pub struct AggScratch {
+    pub stack: Vec<f32>,
+    pub u: Vec<f32>,
+}
+
+/// Aggregate one group.  `rows[i]` is active client i's flattened group
+/// tensor; `weights` the renormalized p_i.  Writes u into scratch.u and
+/// returns the discrepancy.
+pub fn aggregate_group(
+    backend: AggBackend,
+    runtime: &ModelRuntime,
+    rows: &[&[f32]],
+    weights: &[f32],
+    scratch: &mut AggScratch,
+) -> Result<f64> {
+    let m = rows.len();
+    let dim = rows[0].len();
+    scratch.u.resize(dim, 0.0);
+    let use_xla = match backend {
+        AggBackend::Native => false,
+        AggBackend::Xla | AggBackend::Auto => runtime.agg_kernel(dim, m).is_some(),
+    };
+    if backend == AggBackend::Xla && !use_xla {
+        anyhow::bail!("no AOT agg kernel for dim={dim}, m={m} (re-run `make artifacts` with --agg-m)");
+    }
+    if use_xla {
+        let exe = runtime.agg_kernel(dim, m).unwrap();
+        scratch.stack.resize(m * dim, 0.0);
+        for (i, row) in rows.iter().enumerate() {
+            scratch.stack[i * dim..(i + 1) * dim].copy_from_slice(row);
+        }
+        let (u, disc) = runtime.run_agg(&exe, &scratch.stack, weights, dim)?;
+        scratch.u.copy_from_slice(&u);
+        Ok(disc as f64)
+    } else {
+        Ok(aggregate_native(rows, weights, &mut scratch.u))
+    }
+}

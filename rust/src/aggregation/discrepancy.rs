@@ -1,0 +1,123 @@
+//! Native (pure-rust) weighted aggregation + unit model discrepancy.
+//!
+//! This is the reference backend for the L1 Pallas kernel (`agg_d*_m*`
+//! artifacts) and the fallback when no kernel was AOT-compiled for a
+//! (dim, m) configuration.  It operates directly on per-client tensor
+//! slices — no [m, d] stacking copy — which also makes it the performance
+//! baseline the Pallas path is compared against in EXPERIMENTS.md §Perf.
+
+/// Weighted average of client rows into `u` (u must be zeroed or will be
+/// overwritten), followed by the weighted squared-distance reduction.
+///
+/// rows[i] is client i's flattened group parameters, weights[i] its
+/// (renormalized) aggregation weight.  Returns the discrepancy
+/// sum_i w_i ||u - x_i||^2 (paper Eq. 2 numerator).
+pub fn aggregate_native(rows: &[&[f32]], weights: &[f32], u: &mut [f32]) -> f64 {
+    assert_eq!(rows.len(), weights.len());
+    assert!(!rows.is_empty());
+    let d = u.len();
+    for r in rows {
+        assert_eq!(r.len(), d);
+    }
+    // pass 1: u = sum_i w_i x_i  (f32 accumulate matches the XLA kernel)
+    u.fill(0.0);
+    for (row, &w) in rows.iter().zip(weights) {
+        if w == 0.0 {
+            continue;
+        }
+        for (uj, &xj) in u.iter_mut().zip(row.iter()) {
+            *uj += w * xj;
+        }
+    }
+    // pass 2: disc = sum_i w_i ||u - x_i||^2 (f64 accumulate for stability)
+    let mut disc = 0.0f64;
+    for (row, &w) in rows.iter().zip(weights) {
+        if w == 0.0 {
+            continue;
+        }
+        let mut s = 0.0f64;
+        for (uj, &xj) in u.iter().zip(row.iter()) {
+            let dlt = (*uj - xj) as f64;
+            s += dlt * dlt;
+        }
+        disc += w as f64 * s;
+    }
+    disc
+}
+
+/// The paper's layer-wise *unit* model discrepancy (Eq. 2):
+/// d_l = disc / (tau_l * dim).
+pub fn unit_discrepancy(disc: f64, tau: usize, dim: usize) -> f64 {
+    disc / (tau as f64 * dim as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_rows_have_zero_discrepancy() {
+        let a = vec![1.0f32, -2.0, 3.0];
+        let rows: Vec<&[f32]> = vec![&a, &a, &a];
+        let mut u = vec![0.0; 3];
+        let disc = aggregate_native(&rows, &[0.2, 0.3, 0.5], &mut u);
+        assert!(disc.abs() < 1e-12);
+        for (x, y) in u.iter().zip(&a) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn matches_hand_computation() {
+        // two clients, equal weight: u = (x1+x2)/2, disc = 0.5*||u-x1||^2*2
+        let x1 = vec![0.0f32, 0.0];
+        let x2 = vec![2.0f32, 4.0];
+        let rows: Vec<&[f32]> = vec![&x1, &x2];
+        let mut u = vec![0.0; 2];
+        let disc = aggregate_native(&rows, &[0.5, 0.5], &mut u);
+        assert_eq!(u, vec![1.0, 2.0]);
+        // ||u-x1||^2 = 1+4 = 5, same for x2 -> disc = 0.5*5 + 0.5*5 = 5
+        assert!((disc - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_weight_rows_are_ignored() {
+        let x1 = vec![1.0f32, 1.0];
+        let junk = vec![f32::MAX, -1.0e30];
+        let rows: Vec<&[f32]> = vec![&x1, &junk];
+        let mut u = vec![0.0; 2];
+        let disc = aggregate_native(&rows, &[1.0, 0.0], &mut u);
+        assert_eq!(u, vec![1.0, 1.0]);
+        assert_eq!(disc, 0.0);
+    }
+
+    #[test]
+    fn unit_discrepancy_normalizes() {
+        assert!((unit_discrepancy(12.0, 3, 4) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weighted_average_is_convex_combination() {
+        // result stays within [min, max] per coordinate
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(9);
+        for _ in 0..50 {
+            let m = 2 + rng.below(5);
+            let d = 1 + rng.below(8);
+            let rows_data: Vec<Vec<f32>> =
+                (0..m).map(|_| (0..d).map(|_| rng.normal_f32(0.0, 2.0)).collect()).collect();
+            let mut w: Vec<f32> = (0..m).map(|_| rng.f32() + 0.01).collect();
+            let s: f32 = w.iter().sum();
+            w.iter_mut().for_each(|v| *v /= s);
+            let rows: Vec<&[f32]> = rows_data.iter().map(|r| r.as_slice()).collect();
+            let mut u = vec![0.0; d];
+            let disc = aggregate_native(&rows, &w, &mut u);
+            assert!(disc >= 0.0);
+            for j in 0..d {
+                let mn = rows.iter().map(|r| r[j]).fold(f32::INFINITY, f32::min);
+                let mx = rows.iter().map(|r| r[j]).fold(f32::NEG_INFINITY, f32::max);
+                assert!(u[j] >= mn - 1e-4 && u[j] <= mx + 1e-4);
+            }
+        }
+    }
+}

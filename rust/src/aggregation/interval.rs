@@ -1,0 +1,265 @@
+//! Algorithm 2: Layer-wise Adaptive Interval Adjustment — the core of the
+//! paper's contribution.
+//!
+//! Given the observed unit discrepancies d_l (Eq. 2), sort ascending and
+//! find the prefix of "least critical layers" whose cumulative discrepancy
+//! share delta_l (Eq. 3) is still below their cumulative parameter share
+//! lambda_l (Eq. 4): those layers get the long interval phi*tau', the rest
+//! keep tau'.  Because delta_l grows slower than lambda_l exactly when
+//! small-d_l layers are large, the crossover lands below 0.5 and the bulk
+//! of traffic is relaxed at minimal discrepancy cost (paper Fig. 1).
+//!
+//! The "accelerate" variant (paper §4, last paragraph) sorts descending
+//! and compares 1 - delta_l with lambda_l, shortening intervals of the
+//! most critical layers instead — for latency-insensitive deployments.
+
+/// Outcome of one interval adjustment.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Adjustment {
+    /// Per-group aggregation interval tau_l (either tau or phi*tau).
+    pub intervals: Vec<usize>,
+    /// Number of groups assigned the long interval.
+    pub relaxed: usize,
+    /// delta_l and 1 - lambda_l at each sorted prefix length (Figure 1's
+    /// two curves), for diagnostics and the figure bench.
+    pub delta_curve: Vec<f64>,
+    pub comm_curve: Vec<f64>,
+    /// Crossover prefix length (first l where delta_l >= lambda_l).
+    pub crossover: usize,
+}
+
+/// Algorithm 2.  `d` is the latest unit discrepancy per group, `dims` the
+/// group sizes, `tau` the base interval, `phi` the increase factor.
+pub fn adjust_intervals(d: &[f64], dims: &[usize], tau: usize, phi: usize) -> Adjustment {
+    assert_eq!(d.len(), dims.len());
+    assert!(!d.is_empty());
+    assert!(tau >= 1 && phi >= 1);
+    let l_total = d.len();
+
+    // Lines 1-2: sort ascending by d_l.
+    let mut order: Vec<usize> = (0..l_total).collect();
+    order.sort_by(|&a, &b| d[a].partial_cmp(&d[b]).unwrap_or(std::cmp::Ordering::Equal));
+
+    // Lines 3-4: totals.
+    let lambda_total: f64 = dims.iter().map(|&x| x as f64).sum();
+    let delta_total: f64 = d.iter().zip(dims).map(|(di, &sz)| di * sz as f64).sum();
+
+    let mut intervals = vec![tau; l_total];
+    let mut delta_curve = Vec::with_capacity(l_total);
+    let mut comm_curve = Vec::with_capacity(l_total);
+    let mut cum_delta = 0.0;
+    let mut cum_lambda = 0.0;
+    let mut relaxed = 0;
+    let mut crossover = l_total;
+    // Lines 5-12.
+    for (pos, &gi) in order.iter().enumerate() {
+        cum_delta += d[gi] * dims[gi] as f64;
+        cum_lambda += dims[gi] as f64;
+        // Degenerate case delta_total == 0 (all layers identical across
+        // clients): treat every layer as least-critical.
+        let delta_l = if delta_total > 0.0 { cum_delta / delta_total } else { 0.0 };
+        let lambda_l = cum_lambda / lambda_total;
+        delta_curve.push(delta_l);
+        comm_curve.push(1.0 - lambda_l);
+        if delta_l < lambda_l {
+            intervals[gi] = phi * tau;
+            relaxed += 1;
+        } else if crossover == l_total {
+            crossover = pos;
+        }
+    }
+    Adjustment { intervals, relaxed, delta_curve, comm_curve, crossover }
+}
+
+/// The accelerate variant: the *most* critical layers get the short
+/// interval tau, everything else phi*tau... inverted: sort descending and
+/// shorten while 1 - delta_l > lambda_l would hold.  Following the paper's
+/// sketch, we compute the crossover of 1 - delta_l (descending sort) with
+/// lambda_l and give the prefix (most critical) the short interval.
+pub fn adjust_intervals_accelerate(
+    d: &[f64],
+    dims: &[usize],
+    tau: usize,
+    phi: usize,
+) -> Adjustment {
+    assert_eq!(d.len(), dims.len());
+    let l_total = d.len();
+    let mut order: Vec<usize> = (0..l_total).collect();
+    order.sort_by(|&a, &b| d[b].partial_cmp(&d[a]).unwrap_or(std::cmp::Ordering::Equal));
+
+    let lambda_total: f64 = dims.iter().map(|&x| x as f64).sum();
+    let delta_total: f64 = d.iter().zip(dims).map(|(di, &sz)| di * sz as f64).sum();
+
+    let mut intervals = vec![phi * tau; l_total];
+    let mut delta_curve = Vec::with_capacity(l_total);
+    let mut comm_curve = Vec::with_capacity(l_total);
+    let mut cum_delta = 0.0;
+    let mut cum_lambda = 0.0;
+    let mut relaxed = l_total;
+    let mut crossover = l_total;
+    for (pos, &gi) in order.iter().enumerate() {
+        cum_delta += d[gi] * dims[gi] as f64;
+        cum_lambda += dims[gi] as f64;
+        let delta_l = if delta_total > 0.0 { cum_delta / delta_total } else { 1.0 };
+        let lambda_l = cum_lambda / lambda_total;
+        delta_curve.push(1.0 - delta_l);
+        comm_curve.push(lambda_l);
+        if 1.0 - delta_l > lambda_l {
+            // still in the high-discrepancy prefix: keep aggressive syncing
+            intervals[gi] = tau;
+            relaxed -= 1;
+        } else if crossover == l_total {
+            crossover = pos;
+        }
+    }
+    Adjustment { intervals, relaxed, delta_curve, comm_curve, crossover }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, Strategy, VecF64};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn phi_one_reduces_to_fedavg() {
+        let adj = adjust_intervals(&[0.5, 0.1, 0.9], &[10, 1000, 10], 6, 1);
+        assert!(adj.intervals.iter().all(|&t| t == 6));
+    }
+
+    #[test]
+    fn large_low_discrepancy_layer_is_relaxed() {
+        // fc layer: tiny d_l, huge dim -> relaxed; conv: large d_l -> kept.
+        let d = vec![1.0, 0.001];
+        let dims = vec![100, 100_000];
+        let adj = adjust_intervals(&d, &dims, 6, 4);
+        assert_eq!(adj.intervals, vec![6, 24]);
+        assert_eq!(adj.relaxed, 1);
+    }
+
+    #[test]
+    fn paper_fig1_narrative_crossover_below_half() {
+        // Paper Fig. 1: output-side layers are large and low-discrepancy ->
+        // the delta_l and 1-lambda_l curves cross well below y=0.5.  Build
+        // such a profile: 20 layers, dims grow geometrically, unit
+        // discrepancy shrinks super-linearly with size.
+        let dims: Vec<usize> = (0..20).map(|i| 100 << (i / 2)).collect();
+        let d: Vec<f64> = dims.iter().map(|&s| 1.0 / (s as f64 * s as f64)).collect();
+        let adj = adjust_intervals(&d, &dims, 6, 2);
+        // find where delta_l rises above 1 - lambda_l (the Fig. 1 crossing)
+        let cross = adj
+            .delta_curve
+            .iter()
+            .zip(&adj.comm_curve)
+            .position(|(dl, cl)| dl >= cl)
+            .unwrap();
+        let height = adj.delta_curve[cross];
+        assert!(height < 0.5, "Fig.1 crossing height {height} should be < 0.5");
+        assert!(adj.relaxed > 0 && adj.relaxed < 20);
+    }
+
+    #[test]
+    fn intervals_are_only_tau_or_phitau() {
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let n = 1 + rng.below(30);
+            let d: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+            let dims: Vec<usize> = (0..n).map(|_| 1 + rng.below(10_000)).collect();
+            let adj = adjust_intervals(&d, &dims, 6, 4);
+            assert!(adj.intervals.iter().all(|&t| t == 6 || t == 24));
+        }
+    }
+
+    #[test]
+    fn monotone_in_discrepancy() {
+        // Raising one layer's d_l can never move it short -> long.
+        let dims = vec![500, 500, 500, 500];
+        let d0 = vec![0.1, 0.2, 0.3, 0.4];
+        let base = adjust_intervals(&d0, &dims, 6, 2);
+        for i in 0..4 {
+            let mut d = d0.clone();
+            d[i] *= 10.0;
+            let adj = adjust_intervals(&d, &dims, 6, 2);
+            if base.intervals[i] == 6 {
+                assert_eq!(adj.intervals[i], 6, "layer {i} got relaxed after d_l increased");
+            }
+        }
+    }
+
+    #[test]
+    fn curves_are_monotone() {
+        let d = vec![0.3, 0.1, 0.7, 0.05, 0.9];
+        let dims = vec![10, 2000, 50, 30_000, 20];
+        let adj = adjust_intervals(&d, &dims, 10, 4);
+        for w in adj.delta_curve.windows(2) {
+            assert!(w[1] >= w[0] - 1e-12, "delta_l must be nondecreasing");
+        }
+        for w in adj.comm_curve.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12, "1-lambda_l must be nonincreasing");
+        }
+        assert!((adj.delta_curve.last().unwrap() - 1.0).abs() < 1e-9);
+        assert!(adj.comm_curve.last().unwrap().abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_discrepancy_relaxes_everything() {
+        let adj = adjust_intervals(&[0.0, 0.0], &[10, 10], 6, 2);
+        assert_eq!(adj.relaxed, 2);
+        assert!(adj.intervals.iter().all(|&t| t == 12));
+    }
+
+    #[test]
+    fn accelerate_variant_keeps_critical_short() {
+        let d = vec![1.0, 0.001];
+        let dims = vec![100, 100_000];
+        let adj = adjust_intervals_accelerate(&d, &dims, 6, 4);
+        // the high-discrepancy layer keeps tau, the low one phi*tau
+        assert_eq!(adj.intervals, vec![6, 24]);
+    }
+
+    /// Property: Algorithm 2 invariants over random profiles.
+    #[test]
+    fn prop_invariants() {
+        struct Profile;
+        impl Strategy for Profile {
+            type Value = (Vec<f64>, Vec<usize>);
+            fn generate(&self, rng: &mut Rng) -> Self::Value {
+                let n = 1 + rng.below(40);
+                let d = (0..n).map(|_| rng.f64() * 10.0).collect();
+                let dims = (0..n).map(|_| 1 + rng.below(100_000)).collect();
+                (d, dims)
+            }
+        }
+        forall(42, 300, &Profile, |(d, dims)| {
+            let adj = adjust_intervals(d, dims, 6, 4);
+            if adj.intervals.len() != d.len() {
+                return Err("arity".into());
+            }
+            if !adj.intervals.iter().all(|&t| t == 6 || t == 24) {
+                return Err(format!("bad interval in {:?}", adj.intervals));
+            }
+            if adj.relaxed != adj.intervals.iter().filter(|&&t| t == 24).count() {
+                return Err("relaxed count mismatch".into());
+            }
+            // full sync guaranteed at phi*tau: lcm(6,24)=24 divides 24
+            if adj.intervals.iter().any(|&t| 24 % t != 0) {
+                return Err("phi*tau not a multiple of tau_l".into());
+            }
+            Ok(())
+        });
+        // If the smallest d_l sits strictly below the dim-weighted mean of
+        // d, then the first sorted layer satisfies delta_1 < lambda_1 and
+        // at least one layer must be relaxed.
+        forall(43, 300, &Profile, |(d, dims)| {
+            let adj = adjust_intervals(d, dims, 6, 2);
+            let lambda: f64 = dims.iter().map(|&s| s as f64).sum();
+            let delta: f64 = d.iter().zip(dims).map(|(x, &s)| x * s as f64).sum();
+            let dmin = d.iter().cloned().fold(f64::INFINITY, f64::min);
+            if delta > 0.0 && dmin < delta / lambda * 0.999 && adj.relaxed == 0 {
+                return Err(format!("dmin {dmin} < mean {} but nothing relaxed", delta / lambda));
+            }
+            Ok(())
+        });
+        let _ = VecF64 { min_len: 1, max_len: 2, lo: 0.0, hi: 1.0 }; // keep import used
+    }
+}

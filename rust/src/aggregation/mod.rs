@@ -1,0 +1,12 @@
+//! FedLAMA's core: layer-wise discrepancy, Algorithm 2 interval
+//! adjustment, schedule state, and the aggregation compute backends.
+
+pub mod backend;
+pub mod discrepancy;
+pub mod interval;
+pub mod policy;
+
+pub use backend::{aggregate_group, AggBackend, AggScratch};
+pub use discrepancy::{aggregate_native, unit_discrepancy};
+pub use interval::{adjust_intervals, adjust_intervals_accelerate, Adjustment};
+pub use policy::{Policy, Schedule};

@@ -1,0 +1,171 @@
+//! Aggregation policies: which groups sync at iteration k, and how
+//! intervals evolve (Algorithm 1's schedule state machine).
+
+use super::interval::{adjust_intervals, adjust_intervals_accelerate, Adjustment};
+
+/// Aggregation scheduling policy.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Policy {
+    /// Periodic full aggregation with a fixed interval (FedAvg & friends).
+    FullSync { interval: usize },
+    /// FedLAMA (Algorithm 1): per-group intervals in {tau, phi*tau},
+    /// re-adjusted every phi*tau iterations from observed discrepancies.
+    FedLama { tau: usize, phi: usize, accelerate: bool },
+}
+
+impl Policy {
+    pub fn fedavg(interval: usize) -> Policy {
+        Policy::FullSync { interval }
+    }
+    pub fn fedlama(tau: usize, phi: usize) -> Policy {
+        Policy::FedLama { tau, phi, accelerate: false }
+    }
+
+    /// The period after which the whole model is guaranteed synchronized
+    /// (round boundary: client re-sampling + eval happen here).
+    pub fn round_len(&self) -> usize {
+        match self {
+            Policy::FullSync { interval } => *interval,
+            Policy::FedLama { tau, phi, .. } => tau * phi,
+        }
+    }
+
+    pub fn base_interval(&self) -> usize {
+        match self {
+            Policy::FullSync { interval } => *interval,
+            Policy::FedLama { tau, .. } => *tau,
+        }
+    }
+}
+
+/// Live schedule state for one training run.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub policy: Policy,
+    /// Current per-group intervals tau_l.
+    pub intervals: Vec<usize>,
+    /// Latest observed unit discrepancy per group (Eq. 2), refreshed at
+    /// each group sync.
+    pub last_unit_disc: Vec<f64>,
+    /// Group dims (for Algorithm 2).
+    dims: Vec<usize>,
+    /// History of adjustments (for Figure 1 and diagnostics).
+    pub adjustments: Vec<Adjustment>,
+}
+
+impl Schedule {
+    pub fn new(policy: Policy, dims: Vec<usize>) -> Schedule {
+        let l = dims.len();
+        let tau = policy.base_interval();
+        Schedule {
+            policy,
+            intervals: vec![tau; l],
+            last_unit_disc: vec![0.0; l],
+            dims,
+            adjustments: Vec::new(),
+        }
+    }
+
+    /// Groups due for aggregation at iteration k (1-based, as Algorithm 1).
+    pub fn due_groups(&self, k: usize) -> Vec<usize> {
+        (0..self.intervals.len()).filter(|&g| k % self.intervals[g] == 0).collect()
+    }
+
+    /// Is iteration k a round boundary (full model synchronized)?
+    pub fn is_round_boundary(&self, k: usize) -> bool {
+        k % self.policy.round_len() == 0
+    }
+
+    /// Record the discrepancy observed when group g synced at interval
+    /// tau_g (Algorithm 1 line 7): d_l = disc / (tau_l * dim_l).
+    pub fn observe(&mut self, g: usize, disc: f64) {
+        self.last_unit_disc[g] =
+            super::discrepancy::unit_discrepancy(disc, self.intervals[g], self.dims[g]);
+    }
+
+    /// Algorithm 1 line 8-9: at round boundaries, re-run Algorithm 2.
+    /// No-op for FullSync and for phi == 1.
+    pub fn maybe_adjust(&mut self, k: usize) {
+        let Policy::FedLama { tau, phi, accelerate } = self.policy else {
+            return;
+        };
+        if phi == 1 || k % (tau * phi) != 0 {
+            return;
+        }
+        let adj = if accelerate {
+            adjust_intervals_accelerate(&self.last_unit_disc, &self.dims, tau, phi)
+        } else {
+            adjust_intervals(&self.last_unit_disc, &self.dims, tau, phi)
+        };
+        self.intervals = adj.intervals.clone();
+        self.adjustments.push(adj);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fullsync_schedule() {
+        let s = Schedule::new(Policy::fedavg(6), vec![10, 20, 30]);
+        assert!(s.due_groups(5).is_empty());
+        assert_eq!(s.due_groups(6), vec![0, 1, 2]);
+        assert_eq!(s.due_groups(12), vec![0, 1, 2]);
+        assert!(s.is_round_boundary(6));
+        assert!(!s.is_round_boundary(7));
+    }
+
+    #[test]
+    fn fedlama_starts_at_base_interval() {
+        let s = Schedule::new(Policy::fedlama(6, 4), vec![10, 20]);
+        assert_eq!(s.intervals, vec![6, 6]);
+        assert_eq!(s.policy.round_len(), 24);
+    }
+
+    #[test]
+    fn adjustment_splits_intervals() {
+        let mut s = Schedule::new(Policy::fedlama(6, 4), vec![100, 100_000]);
+        // big layer has tiny discrepancy -> relaxed after adjustment
+        s.observe(0, 600.0); // unit = 600/(6*100) = 1.0
+        s.observe(1, 600.0); // unit = 600/(6*100000) = 0.001
+        s.maybe_adjust(23); // not a boundary -> no-op
+        assert_eq!(s.intervals, vec![6, 6]);
+        s.maybe_adjust(24);
+        assert_eq!(s.intervals, vec![6, 24]);
+        assert_eq!(s.adjustments.len(), 1);
+        // due groups under mixed intervals
+        assert_eq!(s.due_groups(30), vec![0]);
+        assert_eq!(s.due_groups(48), vec![0, 1]);
+    }
+
+    #[test]
+    fn phi_one_never_adjusts() {
+        let mut s = Schedule::new(Policy::fedlama(6, 1), vec![10, 10]);
+        s.observe(0, 1.0);
+        s.observe(1, 100.0);
+        s.maybe_adjust(6);
+        assert!(s.adjustments.is_empty());
+        assert_eq!(s.intervals, vec![6, 6]);
+    }
+
+    #[test]
+    fn full_sync_guaranteed_every_round() {
+        let mut s = Schedule::new(Policy::fedlama(3, 2), vec![50, 50, 50]);
+        s.observe(0, 0.01);
+        s.observe(1, 5.0);
+        s.observe(2, 5.0);
+        s.maybe_adjust(6);
+        // whatever the intervals, every group is due at k = 6m
+        for k in [6, 12, 18, 24] {
+            assert_eq!(s.due_groups(k).len(), 3, "full sync at {k}");
+        }
+    }
+
+    #[test]
+    fn observe_normalizes_by_interval_and_dim() {
+        let mut s = Schedule::new(Policy::fedlama(5, 2), vec![4]);
+        s.observe(0, 40.0);
+        assert!((s.last_unit_disc[0] - 2.0).abs() < 1e-12); // 40/(5*4)
+    }
+}

@@ -1,0 +1,53 @@
+//! Client state and participation sampling.
+
+pub mod sampler;
+
+use crate::runtime::HostTensor;
+use crate::util::rng::Rng;
+
+/// One simulated federated client.
+#[derive(Debug, Clone)]
+pub struct ClientState {
+    pub id: usize,
+    /// Local model (same tensor layout as the manifest).
+    pub params: Vec<HostTensor>,
+    /// Model at the start of the current round (FedProx reference /
+    /// FedNova delta base).  Only kept when the algorithm needs it.
+    pub round_start: Option<Vec<HostTensor>>,
+    /// SCAFFOLD client control variate c_i.
+    pub control: Option<Vec<HostTensor>>,
+    /// Local steps taken in the current round (FedNova a_i accounting).
+    pub steps_in_round: usize,
+    /// Target local steps this round (heterogeneous workloads; usize::MAX
+    /// means "every iteration").
+    pub local_budget: usize,
+    /// Private data-sampling stream (deterministic per client).
+    pub rng: Rng,
+}
+
+impl ClientState {
+    pub fn new(id: usize, params: Vec<HostTensor>, seed: u64) -> ClientState {
+        ClientState {
+            id,
+            params,
+            round_start: None,
+            control: None,
+            steps_in_round: 0,
+            local_budget: usize::MAX,
+            rng: Rng::new(seed).fork(id as u64 ^ 0xC11E_17),
+        }
+    }
+
+    /// Download the current global model.
+    pub fn pull(&mut self, global: &[HostTensor]) {
+        for (p, g) in self.params.iter_mut().zip(global) {
+            p.data.copy_from_slice(&g.data);
+        }
+    }
+
+    pub fn snapshot_round_start(&mut self) {
+        self.round_start = Some(self.params.clone());
+    }
+}
+
+pub use sampler::ClientSampler;

@@ -1,0 +1,80 @@
+//! Partial-participation sampling: at every round boundary (phi*tau'
+//! iterations), a fresh subset of clients becomes active (paper §6,
+//! "randomly chosen 25% of the clients participate ... at every phi*tau'
+//! iterations").
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct ClientSampler {
+    pub n_clients: usize,
+    pub n_active: usize,
+    rng: Rng,
+}
+
+impl ClientSampler {
+    /// `active_ratio` in (0, 1]; at least one client is always active.
+    pub fn new(n_clients: usize, active_ratio: f64, seed: u64) -> ClientSampler {
+        assert!(n_clients > 0);
+        assert!(active_ratio > 0.0 && active_ratio <= 1.0, "active_ratio in (0,1]");
+        let n_active = ((n_clients as f64 * active_ratio).round() as usize).clamp(1, n_clients);
+        ClientSampler { n_clients, n_active, rng: Rng::new(seed).fork(0x5A_3317) }
+    }
+
+    /// Sample the active set for the next round (sorted, distinct).
+    pub fn sample(&mut self) -> Vec<usize> {
+        if self.n_active == self.n_clients {
+            return (0..self.n_clients).collect();
+        }
+        let mut ids = self.rng.choose_k(self.n_clients, self.n_active);
+        ids.sort_unstable();
+        ids
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_participation_is_identity() {
+        let mut s = ClientSampler::new(8, 1.0, 1);
+        assert_eq!(s.sample(), (0..8).collect::<Vec<_>>());
+        assert_eq!(s.sample(), (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn partial_is_distinct_and_sized() {
+        let mut s = ClientSampler::new(16, 0.25, 2);
+        for _ in 0..50 {
+            let ids = s.sample();
+            assert_eq!(ids.len(), 4);
+            let mut d = ids.clone();
+            d.dedup();
+            assert_eq!(d.len(), 4);
+            assert!(ids.iter().all(|&i| i < 16));
+        }
+    }
+
+    #[test]
+    fn rounds_vary_and_cover() {
+        let mut s = ClientSampler::new(16, 0.25, 3);
+        let mut seen = vec![false; 16];
+        let mut distinct_rounds = std::collections::BTreeSet::new();
+        for _ in 0..100 {
+            let ids = s.sample();
+            for &i in &ids {
+                seen[i] = true;
+            }
+            distinct_rounds.insert(ids);
+        }
+        assert!(seen.iter().all(|&b| b), "all clients eventually sampled");
+        assert!(distinct_rounds.len() > 10, "sampling should vary across rounds");
+    }
+
+    #[test]
+    fn at_least_one_active() {
+        let mut s = ClientSampler::new(3, 0.01, 4);
+        assert_eq!(s.sample().len(), 1);
+    }
+}

@@ -1,0 +1,253 @@
+//! Update-compression substrates (paper §2 / §7: "harmonizing FedLAMA with
+//! gradient compression ... is a promising future work").
+//!
+//! These compose with the layer-wise schedule: a compressor transforms each
+//! layer's *update* (u_l - previous u_l, or the raw tensor) before it is
+//! "sent", and the ledger charges the compressed byte count.  Implemented:
+//!
+//!   - `Quantizer` — QSGD-style stochastic uniform quantization to b bits
+//!     with per-chunk scale (Alistarh et al. 2017).
+//!   - `TopK` — magnitude sparsification keeping the top k fraction
+//!     (Wangni et al. 2017), with index overhead accounted.
+//!
+//! Both are *lossy simulations* faithful in the quantity the paper reports
+//! (Eq. 9 bytes): compress(x) returns the decoded tensor plus the exact
+//! encoded size, so experiments measure the accuracy/traffic trade-off of
+//! FedLAMA x compression.
+
+use crate::util::rng::Rng;
+
+/// A lossy update compressor: returns the decoded (lossy) values in place
+/// and the encoded size in bytes.
+pub trait Compressor {
+    fn compress(&mut self, data: &mut [f32]) -> usize;
+    fn name(&self) -> String;
+}
+
+/// No-op compressor (dense f32): baseline byte accounting.
+pub struct Dense;
+
+impl Compressor for Dense {
+    fn compress(&mut self, data: &mut [f32]) -> usize {
+        std::mem::size_of_val(data)
+    }
+    fn name(&self) -> String {
+        "dense".into()
+    }
+}
+
+/// QSGD-style stochastic uniform quantization to `bits` bits per value,
+/// one f32 scale per `chunk` values.
+pub struct Quantizer {
+    pub bits: u32,
+    pub chunk: usize,
+    rng: Rng,
+}
+
+impl Quantizer {
+    pub fn new(bits: u32, seed: u64) -> Quantizer {
+        assert!((1..=16).contains(&bits), "bits in 1..=16");
+        Quantizer { bits, chunk: 1024, rng: Rng::new(seed).fork(0xC0_DE) }
+    }
+
+    /// Encoded size: bits per value + one f32 scale per chunk.
+    pub fn encoded_bytes(&self, n: usize) -> usize {
+        let payload = (n * self.bits as usize).div_ceil(8);
+        let scales = n.div_ceil(self.chunk) * 4;
+        payload + scales
+    }
+}
+
+impl Compressor for Quantizer {
+    fn compress(&mut self, data: &mut [f32]) -> usize {
+        let levels = ((1u32 << self.bits) - 1) as f32;
+        for chunk in data.chunks_mut(self.chunk) {
+            let max = chunk.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+            if max == 0.0 {
+                continue;
+            }
+            for v in chunk.iter_mut() {
+                let t = v.abs() / max * levels; // in [0, levels]
+                let lo = t.floor();
+                // stochastic rounding: unbiased estimator
+                let q = if self.rng.f32() < t - lo { lo + 1.0 } else { lo };
+                *v = v.signum() * q / levels * max;
+            }
+        }
+        self.encoded_bytes(data.len())
+    }
+    fn name(&self) -> String {
+        format!("q{}", self.bits)
+    }
+}
+
+/// Top-k magnitude sparsification: keeps the `ratio` fraction of largest-
+/// magnitude entries, zeroes the rest.  Encoded size = kept values (f32)
+/// + kept indices (u32).
+pub struct TopK {
+    pub ratio: f64,
+}
+
+impl TopK {
+    pub fn new(ratio: f64) -> TopK {
+        assert!(ratio > 0.0 && ratio <= 1.0);
+        TopK { ratio }
+    }
+
+    pub fn kept(&self, n: usize) -> usize {
+        ((n as f64 * self.ratio).ceil() as usize).clamp(1, n)
+    }
+}
+
+impl Compressor for TopK {
+    fn compress(&mut self, data: &mut [f32]) -> usize {
+        let n = data.len();
+        let k = self.kept(n);
+        if k == n {
+            return 4 * n;
+        }
+        // threshold = k-th largest magnitude (select_nth on a copy)
+        let mut mags: Vec<f32> = data.iter().map(|v| v.abs()).collect();
+        let idx = n - k;
+        mags.select_nth_unstable_by(idx, |a, b| a.partial_cmp(b).unwrap());
+        let thresh = mags[idx];
+        let mut kept = 0usize;
+        for v in data.iter_mut() {
+            if v.abs() >= thresh && kept < k {
+                kept += 1;
+            } else {
+                *v = 0.0;
+            }
+        }
+        kept * (4 + 4)
+    }
+    fn name(&self) -> String {
+        format!("top{:.0}%", 100.0 * self.ratio)
+    }
+}
+
+/// Parse a compressor spec: "dense", "q4", "q8", "top1", "top10" (percent).
+pub fn parse(spec: &str, seed: u64) -> Option<Box<dyn Compressor>> {
+    if spec == "dense" || spec.is_empty() {
+        return Some(Box::new(Dense));
+    }
+    if let Some(bits) = spec.strip_prefix('q').and_then(|s| s.parse::<u32>().ok()) {
+        if (1..=16).contains(&bits) {
+            return Some(Box::new(Quantizer::new(bits, seed)));
+        }
+        return None;
+    }
+    if let Some(pct) = spec.strip_prefix("top").and_then(|s| s.parse::<f64>().ok()) {
+        if pct > 0.0 && pct <= 100.0 {
+            return Some(Box::new(TopK::new(pct / 100.0)));
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn randvec(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn dense_is_identity() {
+        let mut v = randvec(100, 1);
+        let orig = v.clone();
+        let bytes = Dense.compress(&mut v);
+        assert_eq!(v, orig);
+        assert_eq!(bytes, 400);
+    }
+
+    #[test]
+    fn quantizer_is_unbiased_and_bounded() {
+        let mut q = Quantizer::new(4, 2);
+        let orig = randvec(20_000, 3);
+        // unbiased: mean of decoded ~= mean of original
+        let mut v = orig.clone();
+        let bytes = q.compress(&mut v);
+        assert!(bytes < 2 * orig.len()); // 4 bits ~ 0.5B + scales < 2B/value
+        let mo: f64 = orig.iter().map(|&x| x as f64).sum::<f64>() / orig.len() as f64;
+        let md: f64 = v.iter().map(|&x| x as f64).sum::<f64>() / v.len() as f64;
+        assert!((mo - md).abs() < 0.02, "bias {mo} vs {md}");
+        // bounded error: |x - q(x)| <= max/levels per chunk
+        for (a, b) in orig.iter().zip(&v) {
+            assert!((a - b).abs() <= 4.5 / 15.0 + 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn quantizer_high_bits_near_lossless() {
+        let mut q = Quantizer::new(16, 4);
+        let orig = randvec(1000, 5);
+        let mut v = orig.clone();
+        q.compress(&mut v);
+        for (a, b) in orig.iter().zip(&v) {
+            assert!((a - b).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn quantizer_zero_chunk_stays_zero() {
+        let mut q = Quantizer::new(8, 6);
+        let mut v = vec![0.0f32; 512];
+        q.compress(&mut v);
+        assert!(v.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn topk_keeps_largest() {
+        let mut t = TopK::new(0.1);
+        let mut v = randvec(1000, 7);
+        let orig = v.clone();
+        let bytes = t.compress(&mut v);
+        let kept: Vec<usize> = (0..v.len()).filter(|&i| v[i] != 0.0).collect();
+        assert!(kept.len() <= 100 + 1);
+        assert_eq!(bytes, kept.len() * 8);
+        // every kept magnitude >= every dropped magnitude
+        let min_kept = kept.iter().map(|&i| orig[i].abs()).fold(f32::INFINITY, f32::min);
+        let max_dropped = (0..v.len())
+            .filter(|i| !kept.contains(i))
+            .map(|i| orig[i].abs())
+            .fold(0.0f32, f32::max);
+        assert!(min_kept >= max_dropped - 1e-6, "{min_kept} < {max_dropped}");
+        // kept values unchanged
+        for &i in &kept {
+            assert_eq!(v[i], orig[i]);
+        }
+    }
+
+    #[test]
+    fn topk_full_ratio_is_dense() {
+        let mut t = TopK::new(1.0);
+        let mut v = randvec(64, 8);
+        let orig = v.clone();
+        let bytes = t.compress(&mut v);
+        assert_eq!(v, orig);
+        assert_eq!(bytes, 256);
+    }
+
+    #[test]
+    fn parse_specs() {
+        assert_eq!(parse("dense", 0).unwrap().name(), "dense");
+        assert_eq!(parse("q4", 0).unwrap().name(), "q4");
+        assert_eq!(parse("top10", 0).unwrap().name(), "top10%");
+        assert!(parse("q99", 0).is_none());
+        assert!(parse("bogus", 0).is_none());
+        assert!(parse("top0", 0).is_none());
+    }
+
+    #[test]
+    fn compression_reduces_bytes_ordering() {
+        let n = 4096;
+        let dense = Dense.compress(&mut randvec(n, 9));
+        let q8 = Quantizer::new(8, 10).compress(&mut randvec(n, 9));
+        let q4 = Quantizer::new(4, 11).compress(&mut randvec(n, 9));
+        let top1 = TopK::new(0.01).compress(&mut randvec(n, 9));
+        assert!(top1 < q4 && q4 < q8 && q8 < dense, "{top1} {q4} {q8} {dense}");
+    }
+}

@@ -1,0 +1,159 @@
+//! Per-layer communication accounting (the paper's Eq. 9).
+//!
+//! The paper reports the total communication cost C = sum_l dim(u_l) * k_l
+//! where k_l is the number of aggregations at layer l.  The ledger tracks
+//! k_l and C exactly, plus the simulated-network byte count (each
+//! aggregation of layer l moves dim*4 bytes up + dim*4 bytes down per
+//! active client) and an alpha-beta latency estimate.
+
+/// Per aggregation-unit counters.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct GroupComm {
+    pub name: String,
+    pub dim: usize,
+    /// k_l: number of aggregation events.
+    pub syncs: u64,
+    /// Eq. 9 contribution: dim * syncs (parameter count, the paper's unit).
+    pub cost: u64,
+    /// Simulated network bytes (up + down, all active clients).
+    pub bytes: u64,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct CommLedger {
+    pub groups: Vec<GroupComm>,
+    /// Number of synchronization *rounds* (iterations at which >= 1 group
+    /// synced) — the latency-bearing events.
+    pub rounds: u64,
+    /// alpha-beta cost model accumulators.
+    pub latency_alpha_events: u64,
+    pub latency_beta_bytes: u64,
+}
+
+impl CommLedger {
+    pub fn new(groups: &[(String, usize)]) -> CommLedger {
+        CommLedger {
+            groups: groups
+                .iter()
+                .map(|(name, dim)| GroupComm { name: name.clone(), dim: *dim, ..Default::default() })
+                .collect(),
+            ..Default::default()
+        }
+    }
+
+    /// Record one aggregation of group `g` across `m_active` clients.
+    pub fn record_sync(&mut self, g: usize, m_active: usize) {
+        let dense_up = self.groups[g].dim * 4;
+        self.record_sync_bytes(g, m_active, dense_up);
+    }
+
+    /// Like `record_sync` but with a custom per-client uplink byte count
+    /// (update compression).  Eq. 9 cost stays in parameter count — the
+    /// paper's unit — while the byte column reflects the compressed wire
+    /// size (uplink compressed per client + dense downlink broadcast).
+    pub fn record_sync_bytes(&mut self, g: usize, m_active: usize, uplink_per_client: usize) {
+        let grp = &mut self.groups[g];
+        grp.syncs += 1;
+        grp.cost += grp.dim as u64;
+        let wire = ((uplink_per_client + grp.dim * 4) * m_active) as u64;
+        grp.bytes += wire;
+        self.latency_beta_bytes += wire;
+    }
+
+    /// Record that iteration k had at least one sync (one latency event).
+    pub fn record_round(&mut self) {
+        self.rounds += 1;
+        self.latency_alpha_events += 1;
+    }
+
+    /// Paper Eq. 9: total cost in parameter count.
+    pub fn total_cost(&self) -> u64 {
+        self.groups.iter().map(|g| g.cost).sum()
+    }
+
+    pub fn total_syncs(&self) -> u64 {
+        self.groups.iter().map(|g| g.syncs).sum()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.groups.iter().map(|g| g.bytes).sum()
+    }
+
+    /// Cost relative to a baseline ledger (the paper reports "Comm. cost"
+    /// as % of FedAvg with interval tau').
+    pub fn cost_ratio_vs(&self, baseline: &CommLedger) -> f64 {
+        let b = baseline.total_cost();
+        if b == 0 {
+            return f64::NAN;
+        }
+        self.total_cost() as f64 / b as f64
+    }
+
+    /// Estimated wall time of communication under an alpha-beta model:
+    /// alpha secs/round + beta secs/byte.
+    pub fn estimated_latency(&self, alpha: f64, beta: f64) -> f64 {
+        self.latency_alpha_events as f64 * alpha + self.latency_beta_bytes as f64 * beta
+    }
+
+    /// Per-group sync counts: (name, dim, syncs, cost) — Figures 2 and 3.
+    pub fn per_group(&self) -> Vec<(&str, usize, u64, u64)> {
+        self.groups.iter().map(|g| (g.name.as_str(), g.dim, g.syncs, g.cost)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ledger3() -> CommLedger {
+        CommLedger::new(&[
+            ("conv1".to_string(), 100),
+            ("conv2".to_string(), 1000),
+            ("fc".to_string(), 10_000),
+        ])
+    }
+
+    #[test]
+    fn eq9_accounting_is_exact() {
+        let mut l = ledger3();
+        for _ in 0..5 {
+            l.record_sync(0, 4);
+        }
+        for _ in 0..2 {
+            l.record_sync(2, 4);
+        }
+        assert_eq!(l.total_cost(), 5 * 100 + 2 * 10_000);
+        assert_eq!(l.total_syncs(), 7);
+        assert_eq!(l.groups[0].syncs, 5);
+        assert_eq!(l.groups[1].syncs, 0);
+        // bytes: dim*4 bytes up+down per client
+        assert_eq!(l.groups[0].bytes, 5 * 100 * 4 * 2 * 4);
+    }
+
+    #[test]
+    fn ratio_vs_baseline() {
+        let mut a = ledger3();
+        let mut b = ledger3();
+        for _ in 0..10 {
+            a.record_sync(2, 4);
+            b.record_sync(2, 4);
+        }
+        for _ in 0..10 {
+            b.record_sync(0, 4);
+            b.record_sync(1, 4);
+        }
+        let r = a.cost_ratio_vs(&b);
+        let expect = 100_000.0 / (100_000.0 + 11_000.0);
+        assert!((r - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_model() {
+        let mut l = ledger3();
+        l.record_round();
+        l.record_sync(0, 2);
+        l.record_round();
+        let t = l.estimated_latency(0.01, 1e-9);
+        assert!((t - (0.02 + 1600.0 * 1e-9)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,8 @@
+//! Simulated network substrate: per-layer message ledger and the paper's
+//! Eq. 9 communication-cost accounting.
+
+pub mod compression;
+pub mod ledger;
+
+pub use compression::{parse as parse_compressor, Compressor, Dense, Quantizer, TopK};
+pub use ledger::{CommLedger, GroupComm};

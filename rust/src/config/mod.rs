@@ -1,0 +1,216 @@
+//! Experiment configuration + presets for every paper table/figure.
+
+pub mod presets;
+
+use std::path::PathBuf;
+
+use crate::aggregation::{AggBackend, Policy};
+use crate::data::DatasetKind;
+
+/// Local training algorithm (the paper's baselines, §3).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Algorithm {
+    /// Plain local SGD (FedAvg / FedLAMA local step).
+    Sgd,
+    /// FedProx: prox term mu/2 * ||x - x_round_start||^2.
+    Prox { mu: f32 },
+    /// SCAFFOLD: control variates (FullSync policy only).
+    Scaffold,
+    /// FedNova: normalized averaging over heterogeneous local step counts
+    /// (FullSync policy only).
+    Nova,
+}
+
+impl Algorithm {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::Sgd => "sgd",
+            Algorithm::Prox { .. } => "fedprox",
+            Algorithm::Scaffold => "scaffold",
+            Algorithm::Nova => "fednova",
+        }
+    }
+    pub fn parse(s: &str, mu: f32) -> Option<Algorithm> {
+        match s {
+            "sgd" | "fedavg" | "fedlama" => Some(Algorithm::Sgd),
+            "fedprox" | "prox" => Some(Algorithm::Prox { mu }),
+            "scaffold" => Some(Algorithm::Scaffold),
+            "fednova" | "nova" => Some(Algorithm::Nova),
+            _ => None,
+        }
+    }
+}
+
+/// How local data is distributed across clients.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PartitionKind {
+    Iid,
+    Dirichlet { alpha: f64 },
+    /// FEMNIST's natural writer-based heterogeneity.
+    Writers,
+}
+
+/// Full specification of one training run.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// artifacts/<model> directory.
+    pub model_dir: PathBuf,
+    pub dataset: DatasetKind,
+    pub algorithm: Algorithm,
+    pub policy: Policy,
+    pub n_clients: usize,
+    pub active_ratio: f64,
+    pub partition: PartitionKind,
+    /// IID / Writers: samples per client.  Dirichlet: samples per class.
+    pub samples: usize,
+    pub lr: f32,
+    /// Linear LR warmup over this many rounds (paper: 10 epochs).
+    pub warmup_rounds: usize,
+    /// Total local iterations K.
+    pub iterations: usize,
+    /// Evaluate every this many rounds (0 = only at the end).
+    pub eval_every_rounds: usize,
+    /// Validation examples (multiple of the eval batch is used).
+    pub eval_examples: usize,
+    pub seed: u64,
+    pub backend: AggBackend,
+    /// Use the fused train_chunk entry when the gap allows it.
+    pub use_chunk: bool,
+    /// FedNova: give clients heterogeneous local budgets ~ data size.
+    pub hetero_local_steps: bool,
+    /// Uplink update compression: "dense" (default), "qN" (QSGD N bits),
+    /// "topP" (top-P% sparsification).  Composes with the layer-wise
+    /// schedule — the paper's stated future work (§2, §7).
+    pub compressor: String,
+    pub verbose: bool,
+}
+
+impl RunConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.n_clients > 0, "n_clients must be > 0");
+        anyhow::ensure!(self.iterations > 0, "iterations must be > 0");
+        anyhow::ensure!(self.lr > 0.0, "lr must be > 0");
+        anyhow::ensure!(
+            self.active_ratio > 0.0 && self.active_ratio <= 1.0,
+            "active_ratio in (0,1]"
+        );
+        anyhow::ensure!(self.samples > 0, "samples must be > 0");
+        if matches!(self.algorithm, Algorithm::Scaffold | Algorithm::Nova) {
+            anyhow::ensure!(
+                matches!(self.policy, Policy::FullSync { .. }),
+                "{} requires the FullSync policy (paper baselines use periodic full aggregation)",
+                self.algorithm.name()
+            );
+        }
+        anyhow::ensure!(
+            crate::comm::parse_compressor(&self.compressor, 0).is_some(),
+            "unknown compressor {:?} (dense|qN|topP)",
+            self.compressor
+        );
+        anyhow::ensure!(
+            self.iterations % self.policy.round_len() == 0,
+            "iterations ({}) must be a multiple of the round length ({})",
+            self.iterations,
+            self.policy.round_len()
+        );
+        Ok(())
+    }
+
+    /// A human-readable tag used in reports, e.g. "fedlama(6,4)".
+    pub fn tag(&self) -> String {
+        match &self.policy {
+            Policy::FullSync { interval } => match self.algorithm {
+                Algorithm::Sgd => format!("fedavg({interval})"),
+                _ => format!("{}({interval})", self.algorithm.name()),
+            },
+            Policy::FedLama { tau, phi, accelerate } => {
+                if *accelerate {
+                    format!("fedlama-acc({tau},{phi})")
+                } else {
+                    format!("fedlama({tau},{phi})")
+                }
+            }
+        }
+    }
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            model_dir: PathBuf::from("artifacts/mlp"),
+            dataset: DatasetKind::Toy,
+            algorithm: Algorithm::Sgd,
+            policy: Policy::fedavg(6),
+            n_clients: 8,
+            active_ratio: 1.0,
+            partition: PartitionKind::Iid,
+            samples: 512,
+            lr: 0.1,
+            warmup_rounds: 5,
+            iterations: 120,
+            eval_every_rounds: 5,
+            eval_examples: 512,
+            seed: 1,
+            backend: AggBackend::Auto,
+            use_chunk: true,
+            hetero_local_steps: false,
+            compressor: "dense".to_string(),
+            verbose: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_validates() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn scaffold_requires_fullsync() {
+        let cfg = RunConfig {
+            algorithm: Algorithm::Scaffold,
+            policy: Policy::fedlama(6, 2),
+            iterations: 120,
+            ..Default::default()
+        };
+        assert!(cfg.validate().is_err());
+        let ok = RunConfig {
+            algorithm: Algorithm::Scaffold,
+            policy: Policy::fedavg(6),
+            ..Default::default()
+        };
+        ok.validate().unwrap();
+    }
+
+    #[test]
+    fn iterations_must_align_to_rounds() {
+        let cfg = RunConfig { policy: Policy::fedlama(6, 4), iterations: 100, ..Default::default() };
+        assert!(cfg.validate().is_err());
+        let cfg = RunConfig { policy: Policy::fedlama(6, 4), iterations: 120, ..Default::default() };
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn tags() {
+        assert_eq!(RunConfig::default().tag(), "fedavg(6)");
+        let c = RunConfig { policy: Policy::fedlama(6, 4), ..Default::default() };
+        assert_eq!(c.tag(), "fedlama(6,4)");
+        let c = RunConfig {
+            algorithm: Algorithm::Prox { mu: 0.01 },
+            ..Default::default()
+        };
+        assert_eq!(c.tag(), "fedprox(6)");
+    }
+
+    #[test]
+    fn algorithm_parse() {
+        assert_eq!(Algorithm::parse("fedavg", 0.0), Some(Algorithm::Sgd));
+        assert_eq!(Algorithm::parse("fedprox", 0.1), Some(Algorithm::Prox { mu: 0.1 }));
+        assert_eq!(Algorithm::parse("scaffold", 0.0), Some(Algorithm::Scaffold));
+        assert_eq!(Algorithm::parse("bogus", 0.0), None);
+    }
+}

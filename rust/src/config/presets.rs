@@ -1,0 +1,381 @@
+//! Experiment presets: one grid per paper table/figure (DESIGN.md §6).
+//!
+//! Scale note: the paper runs 128 clients / 300 epochs on 8 V100s.  This
+//! testbed is CPU-PJRT, so presets default to a scaled grid (16 clients,
+//! a few hundred rounds) whose *relative* accuracy/comm trade-offs are the
+//! quantities the paper's tables report.  `--scale full` widens toward the
+//! paper's sizes for long runs.
+
+use std::path::PathBuf;
+
+use super::{Algorithm, PartitionKind, RunConfig};
+use crate::aggregation::Policy;
+use crate::data::DatasetKind;
+
+/// One experiment row: a tag plus the run configuration.
+#[derive(Debug, Clone)]
+pub struct ExperimentRow {
+    pub label: String,
+    pub lr: f32,
+    pub cfg: RunConfig,
+}
+
+/// An experiment = a paper table or figure.
+#[derive(Debug, Clone)]
+pub struct Experiment {
+    pub id: String,
+    pub title: String,
+    pub rows: Vec<ExperimentRow>,
+    /// Index of the row used as the 100% comm-cost baseline.
+    pub baseline_row: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    /// Seconds-scale smoke configuration (CI).
+    Smoke,
+    /// Minutes-scale default (EXPERIMENTS.md numbers).
+    Default,
+    /// Closer to paper scale (hours on CPU).
+    Full,
+}
+
+impl Scale {
+    pub fn parse(s: &str) -> Option<Scale> {
+        match s {
+            "smoke" => Some(Scale::Smoke),
+            "default" => Some(Scale::Default),
+            "full" => Some(Scale::Full),
+            _ => None,
+        }
+    }
+}
+
+pub struct PresetParams {
+    pub n_clients: usize,
+    pub iterations_t1: usize,  // iteration budget for tau'=6 grids
+    pub iterations_t10: usize, // for tau'=10 grids (femnist)
+    pub samples: usize,
+    pub eval_examples: usize,
+}
+
+pub fn scale_params(scale: Scale) -> PresetParams {
+    match scale {
+        Scale::Smoke => PresetParams {
+            n_clients: 4,
+            iterations_t1: 96,
+            iterations_t10: 80,
+            samples: 128,
+            eval_examples: 512,
+        },
+        Scale::Default => PresetParams {
+            n_clients: 6,
+            iterations_t1: 240,
+            iterations_t10: 200,
+            samples: 256,
+            eval_examples: 768,
+        },
+        Scale::Full => PresetParams {
+            n_clients: 16,
+            iterations_t1: 1920,
+            iterations_t10: 1600,
+            samples: 512,
+            eval_examples: 2048,
+        },
+    }
+}
+
+fn artifacts_root() -> PathBuf {
+    std::env::var_os("FEDLAMA_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+fn base_cfg(model: &str, dataset: DatasetKind, p: &PresetParams) -> RunConfig {
+    RunConfig {
+        model_dir: artifacts_root().join(model),
+        dataset,
+        n_clients: p.n_clients,
+        samples: p.samples,
+        eval_examples: p.eval_examples,
+        eval_every_rounds: 4,
+        warmup_rounds: 4,
+        ..Default::default()
+    }
+}
+
+fn row(label: &str, lr: f32, policy: Policy, base: &RunConfig, iters: usize) -> ExperimentRow {
+    ExperimentRow {
+        label: label.to_string(),
+        lr,
+        cfg: RunConfig { policy, lr, iterations: iters, ..base.clone() },
+    }
+}
+
+/// Tables 1 & 2 grid: FedAvg tau' in {t,2t,4t} vs FedLAMA (t,2) and (t,4).
+fn iid_grid(
+    model: &str,
+    dataset: DatasetKind,
+    tau: usize,
+    lr: f32,
+    p: &PresetParams,
+) -> Vec<ExperimentRow> {
+    let base = base_cfg(model, dataset, p);
+    let iters = p.iterations_t1;
+    vec![
+        row(&format!("FedAvg tau'={tau}"), lr, Policy::fedavg(tau), &base, iters),
+        row(&format!("FedAvg tau'={}", 2 * tau), lr, Policy::fedavg(2 * tau), &base, iters),
+        row(&format!("FedLAMA ({tau},2)"), lr * 0.75, Policy::fedlama(tau, 2), &base, iters),
+        row(&format!("FedAvg tau'={}", 4 * tau), lr, Policy::fedavg(4 * tau), &base, iters),
+        row(&format!("FedLAMA ({tau},4)"), lr * 0.75, Policy::fedlama(tau, 4), &base, iters),
+    ]
+}
+
+pub fn table1(scale: Scale) -> Experiment {
+    let p = scale_params(scale);
+    Experiment {
+        id: "table1".into(),
+        title: "Table 1: (IID) CIFAR-10 (synthetic), ResNet20".into(),
+        rows: iid_grid("resnet20", DatasetKind::Cifar10, 6, 0.4, &p),
+        baseline_row: 0,
+    }
+}
+
+pub fn table2(scale: Scale) -> Experiment {
+    let p = scale_params(scale);
+    Experiment {
+        id: "table2".into(),
+        title: "Table 2: (IID) CIFAR-100 (synthetic), VGG-CNN (WRN stand-in)".into(),
+        rows: iid_grid("cifar_cnn100", DatasetKind::Cifar100, 6, 0.3, &p),
+        baseline_row: 0,
+    }
+}
+
+/// Table 3: FEMNIST grid across active ratios {25, 50, 100}%.
+pub fn table3(scale: Scale) -> Experiment {
+    let p = scale_params(scale);
+    let mut rows = Vec::new();
+    let tau = 10;
+    let lr = 0.06;
+    for &ratio in &[0.25, 0.5, 1.0] {
+        let mut base = base_cfg("femnist_cnn", DatasetKind::Femnist, &p);
+        base.partition = PartitionKind::Writers;
+        base.active_ratio = ratio;
+        // partial participation needs >= 2 active clients to be meaningful
+        if ratio < 1.0 {
+            base.n_clients = base.n_clients.max(8);
+        }
+        let iters = p.iterations_t10;
+        let pct = (ratio * 100.0) as usize;
+        rows.push(row(&format!("[{pct}%] FedAvg tau'=10"), lr, Policy::fedavg(tau), &base, iters));
+        rows.push(row(
+            &format!("[{pct}%] FedAvg tau'=20"),
+            lr,
+            Policy::fedavg(2 * tau),
+            &base,
+            iters,
+        ));
+        rows.push(row(&format!("[{pct}%] FedLAMA (10,2)"), lr, Policy::fedlama(tau, 2), &base, iters));
+        rows.push(row(
+            &format!("[{pct}%] FedAvg tau'=40"),
+            lr,
+            Policy::fedavg(4 * tau),
+            &base,
+            iters,
+        ));
+        rows.push(row(&format!("[{pct}%] FedLAMA (10,4)"), lr, Policy::fedlama(tau, 4), &base, iters));
+    }
+    Experiment {
+        id: "table3".into(),
+        title: "Table 3: (Non-IID) FEMNIST (synthetic writers), CNN".into(),
+        rows,
+        baseline_row: 0,
+    }
+}
+
+/// Table 4: non-IID CIFAR-10, Dirichlet alpha x active-ratio grid.
+pub fn table4(scale: Scale) -> Experiment {
+    let p = scale_params(scale);
+    let mut rows = Vec::new();
+    for &(ratio, alpha) in &[(0.25, 0.1), (0.25, 1.0), (1.0, 0.1), (1.0, 1.0)] {
+        let mut base = base_cfg("resnet20", DatasetKind::Cifar10, &p);
+        base.partition = PartitionKind::Dirichlet { alpha };
+        base.active_ratio = ratio;
+        if ratio < 1.0 {
+            base.n_clients = base.n_clients.max(8);
+        }
+        let iters = p.iterations_t1;
+        let lr = 0.4;
+        let tag = format!("[{}%,a={alpha}]", (ratio * 100.0) as usize);
+        rows.push(row(&format!("{tag} FedAvg tau'=6"), lr, Policy::fedavg(6), &base, iters));
+        rows.push(row(&format!("{tag} FedAvg tau'=24"), lr, Policy::fedavg(24), &base, iters));
+        rows.push(row(&format!("{tag} FedLAMA (6,4)"), lr, Policy::fedlama(6, 4), &base, iters));
+    }
+    Experiment {
+        id: "table4".into(),
+        title: "Table 4: (Non-IID) CIFAR-10 (synthetic), ResNet20, Dirichlet".into(),
+        rows,
+        baseline_row: 0,
+    }
+}
+
+/// Table 5: non-IID CIFAR-100, Dirichlet grid with phi=2.
+pub fn table5(scale: Scale) -> Experiment {
+    let p = scale_params(scale);
+    let mut rows = Vec::new();
+    for &(ratio, alpha) in &[(0.25, 0.1), (0.25, 0.5), (1.0, 0.1), (1.0, 0.5)] {
+        let mut base = base_cfg("cifar_cnn100", DatasetKind::Cifar100, &p);
+        base.partition = PartitionKind::Dirichlet { alpha };
+        base.active_ratio = ratio;
+        if ratio < 1.0 {
+            base.n_clients = base.n_clients.max(8);
+        }
+        let iters = p.iterations_t1;
+        let lr = 0.3;
+        let tag = format!("[{}%,a={alpha}]", (ratio * 100.0) as usize);
+        rows.push(row(&format!("{tag} FedAvg tau'=6"), lr, Policy::fedavg(6), &base, iters));
+        rows.push(row(&format!("{tag} FedAvg tau'=12"), lr, Policy::fedavg(12), &base, iters));
+        rows.push(row(&format!("{tag} FedLAMA (6,2)"), lr, Policy::fedlama(6, 2), &base, iters));
+    }
+    Experiment {
+        id: "table5".into(),
+        title: "Table 5: (Non-IID) CIFAR-100 (synthetic), VGG-CNN, Dirichlet".into(),
+        rows,
+        baseline_row: 0,
+    }
+}
+
+/// Appendix tables 6/7 & 9/10: phi sweeps.
+pub fn phi_sweep(
+    id: &str,
+    model: &str,
+    dataset: DatasetKind,
+    non_iid: Option<f64>,
+    scale: Scale,
+) -> Experiment {
+    let p = scale_params(scale);
+    let mut base = base_cfg(model, dataset, &p);
+    if let Some(alpha) = non_iid {
+        base.partition = PartitionKind::Dirichlet { alpha };
+    }
+    let iters = p.iterations_t1;
+    let lr = 0.4;
+    let mut rows = vec![row("FedAvg tau'=6 (phi=1)", lr, Policy::fedavg(6), &base, iters)];
+    for phi in [2usize, 4, 8] {
+        rows.push(row(&format!("FedLAMA (6,{phi})"), lr, Policy::fedlama(6, phi), &base, iters));
+    }
+    Experiment {
+        id: id.into(),
+        title: format!(
+            "phi sweep: {model} / {dataset:?}{}",
+            non_iid.map(|a| format!(" Dirichlet({a})")).unwrap_or_default()
+        ),
+        rows,
+        baseline_row: 0,
+    }
+}
+
+/// Appendix tables 8 & 11: tau' sweeps for FedAvg.
+pub fn tau_sweep(id: &str, model: &str, dataset: DatasetKind, scale: Scale) -> Experiment {
+    let p = scale_params(scale);
+    let base = base_cfg(model, dataset, &p);
+    let iters = p.iterations_t1;
+    let lr = 0.4;
+    let rows = [6usize, 12, 24]
+        .iter()
+        .map(|&t| row(&format!("FedAvg tau'={t}"), lr, Policy::fedavg(t), &base, iters))
+        .collect();
+    Experiment { id: id.into(), title: format!("tau' sweep: {model}"), rows, baseline_row: 0 }
+}
+
+/// Baseline-algorithm comparison (FedAvg/FedProx/SCAFFOLD/FedNova vs
+/// FedLAMA) — the §2-related ablation, not a paper table.
+pub fn baselines(scale: Scale) -> Experiment {
+    let p = scale_params(scale);
+    let mut base = base_cfg("mlp", DatasetKind::Toy, &p);
+    base.partition = PartitionKind::Dirichlet { alpha: 0.2 };
+    base.use_chunk = false;
+    let iters = p.iterations_t1.min(480);
+    let lr = 0.08;
+    let mk = |label: &str, algo: Algorithm, policy: Policy, hetero: bool| ExperimentRow {
+        label: label.to_string(),
+        lr,
+        cfg: RunConfig {
+            algorithm: algo,
+            policy,
+            lr,
+            iterations: iters,
+            hetero_local_steps: hetero,
+            ..base.clone()
+        },
+    };
+    Experiment {
+        id: "baselines".into(),
+        title: "Baselines: local-SGD algorithms under non-IID data".into(),
+        rows: vec![
+            mk("FedAvg(6)", Algorithm::Sgd, Policy::fedavg(6), false),
+            mk("FedProx(6) mu=0.01", Algorithm::Prox { mu: 0.01 }, Policy::fedavg(6), false),
+            mk("SCAFFOLD(6)", Algorithm::Scaffold, Policy::fedavg(6), false),
+            mk("FedNova(6) hetero", Algorithm::Nova, Policy::fedavg(6), true),
+            mk("FedLAMA(6,2)", Algorithm::Sgd, Policy::fedlama(6, 2), false),
+        ],
+        baseline_row: 0,
+    }
+}
+
+/// Look up an experiment by id ("table1".."table11", "baselines").
+pub fn by_id(id: &str, scale: Scale) -> Option<Experiment> {
+    match id {
+        "table1" => Some(table1(scale)),
+        "table2" => Some(table2(scale)),
+        "table3" => Some(table3(scale)),
+        "table4" => Some(table4(scale)),
+        "table5" => Some(table5(scale)),
+        "table6" => Some(phi_sweep("table6", "resnet20", DatasetKind::Cifar10, None, scale)),
+        "table7" => Some(phi_sweep("table7", "resnet20", DatasetKind::Cifar10, Some(0.1), scale)),
+        "table8" => Some(tau_sweep("table8", "resnet20", DatasetKind::Cifar10, scale)),
+        "table9" => Some(phi_sweep("table9", "cifar_cnn100", DatasetKind::Cifar100, None, scale)),
+        "table10" => {
+            Some(phi_sweep("table10", "cifar_cnn100", DatasetKind::Cifar100, Some(0.1), scale))
+        }
+        "table11" => Some(tau_sweep("table11", "cifar_cnn100", DatasetKind::Cifar100, scale)),
+        "baselines" => Some(baselines(scale)),
+        _ => None,
+    }
+}
+
+pub const ALL_TABLE_IDS: &[&str] = &[
+    "table1", "table2", "table3", "table4", "table5", "table6", "table7", "table8", "table9",
+    "table10", "table11", "baselines",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_presets_validate() {
+        for id in ALL_TABLE_IDS {
+            for scale in [Scale::Smoke, Scale::Default, Scale::Full] {
+                let exp = by_id(id, scale).unwrap_or_else(|| panic!("missing {id}"));
+                assert!(!exp.rows.is_empty(), "{id} empty");
+                assert!(exp.baseline_row < exp.rows.len());
+                for r in &exp.rows {
+                    r.cfg.validate().unwrap_or_else(|e| panic!("{id} / {}: {e}", r.label));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_id_is_none() {
+        assert!(by_id("table99", Scale::Smoke).is_none());
+    }
+
+    #[test]
+    fn table4_covers_the_paper_grid() {
+        let t = table4(Scale::Smoke);
+        assert_eq!(t.rows.len(), 12); // 4 (ratio, alpha) cells x 3 settings
+        assert!(t.rows.iter().any(|r| r.label.contains("FedLAMA (6,4)")));
+    }
+}

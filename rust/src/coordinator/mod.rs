@@ -1,0 +1,616 @@
+//! The federated training coordinator: Algorithm 1 end-to-end.
+//!
+//! One `Coordinator` owns the PJRT runtime, the simulated client fleet, the
+//! layer-wise aggregation schedule, and the communication ledger, and runs
+//! the paper's training loop:
+//!
+//!   for k = 1..K:
+//!     every active client takes one local SGD step        (L2 executable)
+//!     for every group with k mod tau_l == 0:
+//!       aggregate layer l across clients + measure d_l    (L1 kernel)
+//!     if k mod phi*tau' == 0:
+//!       adjust intervals (Algorithm 2), resample clients  (L3, this file)
+//!
+//! The loop is blocked by base-interval gaps so local work can use the
+//! fused `train_chunk` executable (K steps per PJRT call) — all sync
+//! points are multiples of tau' by construction.
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::aggregation::{AggBackend, AggScratch, Schedule};
+use crate::clients::{ClientSampler, ClientState};
+use crate::comm::CommLedger;
+use crate::config::{Algorithm, PartitionKind, RunConfig};
+use crate::data::{dirichlet_partition, femnist_partition, iid_partition, Generator, Partition};
+use crate::metrics::{CurvePoint, RunMetrics};
+use crate::runtime::{GroupInfo, HostTensor, ModelRuntime};
+use crate::util::rng::Rng;
+
+pub struct Coordinator {
+    pub cfg: RunConfig,
+    pub runtime: ModelRuntime,
+    pub gen: Generator,
+    pub partition: Partition,
+    pub schedule: Schedule,
+    pub ledger: CommLedger,
+    pub sampler: ClientSampler,
+    pub clients: Vec<ClientState>,
+    pub global: Vec<HostTensor>,
+    /// SCAFFOLD server control variate.
+    server_control: Option<Vec<HostTensor>>,
+    /// Uplink update compressor ("dense" = no-op).
+    compressor: Box<dyn crate::comm::Compressor>,
+    compress_enabled: bool,
+    scratch: AggScratch,
+    val_x: Vec<f32>,
+    val_y: Vec<i32>,
+    xbuf: Vec<f32>,
+    ybuf: Vec<i32>,
+}
+
+impl Coordinator {
+    pub fn new(cfg: RunConfig) -> Result<Coordinator> {
+        cfg.validate()?;
+        let runtime = ModelRuntime::load(&cfg.model_dir)
+            .with_context(|| format!("loading artifacts from {}", cfg.model_dir.display()))?;
+        Self::with_runtime(cfg, runtime)
+    }
+
+    pub fn with_runtime(cfg: RunConfig, runtime: ModelRuntime) -> Result<Coordinator> {
+        cfg.validate()?;
+        let manifest = runtime.manifest.clone();
+        anyhow::ensure!(
+            manifest.input_shape == cfg.dataset.input_shape(),
+            "model {} input shape {:?} != dataset {:?} shape {:?}",
+            manifest.model,
+            manifest.input_shape,
+            cfg.dataset,
+            cfg.dataset.input_shape()
+        );
+        anyhow::ensure!(
+            manifest.num_classes == cfg.dataset.num_classes(),
+            "model classes {} != dataset classes {}",
+            manifest.num_classes,
+            cfg.dataset.num_classes()
+        );
+        let gen = Generator::new(cfg.dataset, cfg.seed);
+        let mut prng = Rng::new(cfg.seed).fork(0x9A27);
+        let partition = build_partition(&cfg, &mut prng);
+        let dims: Vec<usize> = manifest.groups.iter().map(|g| g.dim).collect();
+        let names: Vec<(String, usize)> =
+            manifest.groups.iter().map(|g| (g.name.clone(), g.dim)).collect();
+        let schedule = Schedule::new(cfg.policy.clone(), dims);
+        let ledger = CommLedger::new(&names);
+        let sampler = ClientSampler::new(cfg.n_clients, cfg.active_ratio, cfg.seed);
+        let global = runtime.init_params(cfg.seed as u32)?;
+        let clients = (0..cfg.n_clients)
+            .map(|i| ClientState::new(i, global.clone(), cfg.seed))
+            .collect();
+        let eval_b = manifest.eval_batch_size;
+        let n_val = (cfg.eval_examples / eval_b).max(1) * eval_b;
+        let (val_x, val_y) = gen.validation_set(n_val);
+        let compressor = crate::comm::parse_compressor(&cfg.compressor, cfg.seed)
+            .ok_or_else(|| anyhow::anyhow!("unknown compressor {:?}", cfg.compressor))?;
+        let compress_enabled = cfg.compressor != "dense";
+        Ok(Coordinator {
+            cfg,
+            runtime,
+            gen,
+            partition,
+            schedule,
+            ledger,
+            sampler,
+            clients,
+            global,
+            server_control: None,
+            compressor,
+            compress_enabled,
+            scratch: AggScratch::default(),
+            val_x,
+            val_y,
+            xbuf: Vec::new(),
+            ybuf: Vec::new(),
+        })
+    }
+
+    /// Learning rate at a given round (linear warmup, as in the paper).
+    pub fn lr_at(&self, round: usize) -> f32 {
+        if self.cfg.warmup_rounds == 0 || round >= self.cfg.warmup_rounds {
+            self.cfg.lr
+        } else {
+            self.cfg.lr * (round + 1) as f32 / self.cfg.warmup_rounds as f32
+        }
+    }
+
+    /// Run the full training loop; returns the metrics record.
+    pub fn run(&mut self) -> Result<RunMetrics> {
+        let t0 = Instant::now();
+        let round_len = self.cfg.policy.round_len();
+        let gap = self.cfg.policy.base_interval();
+        let total_rounds = self.cfg.iterations / round_len;
+        let mut metrics = RunMetrics { tag: self.cfg.tag(), ..Default::default() };
+
+        // round 0 setup
+        let mut active = self.sampler.sample();
+        let mut weights = self.partition.active_weights(&active);
+        self.begin_round(&active);
+
+        let mut round = 0usize;
+        let mut round_loss_sum = 0.0f64;
+        let mut round_loss_n = 0usize;
+
+        let blocks = self.cfg.iterations / gap;
+        for blk in 1..=blocks {
+            let k = blk * gap;
+            let lr = self.lr_at(round);
+
+            // --- local training: every active client advances `gap` steps
+            for ai in 0..active.len() {
+                let ci = active[ai];
+                let loss = self.advance_client(ci, gap, lr)?;
+                if loss.is_finite() {
+                    round_loss_sum += loss;
+                    round_loss_n += 1;
+                }
+            }
+
+            // --- layer-wise aggregation at due groups
+            if self.cfg.algorithm == Algorithm::Nova {
+                // FedNova replaces plain averaging at the (full-sync) boundary.
+                if self.schedule.is_round_boundary(k) {
+                    self.nova_aggregate(&active, &weights)?;
+                }
+            } else {
+                if self.cfg.algorithm == Algorithm::Scaffold && self.schedule.is_round_boundary(k) {
+                    // control update must read pre-aggregation client params
+                    self.scaffold_update_controls(&active, round_len, lr)?;
+                }
+                let due = self.schedule.due_groups(k);
+                if !due.is_empty() {
+                    self.ledger.record_round();
+                    for g in due {
+                        let (disc, uplink) = self.sync_group(g, &active, &weights)?;
+                        self.schedule.observe(g, disc);
+                        self.ledger.record_sync_bytes(g, active.len(), uplink);
+                    }
+                }
+            }
+
+            // --- Algorithm 2 at round boundaries
+            self.schedule.maybe_adjust(k);
+
+            if k % round_len == 0 {
+                round += 1;
+                let train_loss =
+                    if round_loss_n > 0 { round_loss_sum / round_loss_n as f64 } else { 0.0 };
+                round_loss_sum = 0.0;
+                round_loss_n = 0;
+
+                let do_eval = (self.cfg.eval_every_rounds > 0
+                    && round % self.cfg.eval_every_rounds == 0)
+                    || round == total_rounds;
+                let (val_acc, val_loss) = if do_eval {
+                    let (a, l) = self.evaluate()?;
+                    (Some(a), Some(l))
+                } else {
+                    (None, None)
+                };
+                metrics.curve.push(CurvePoint {
+                    iteration: k,
+                    round,
+                    train_loss,
+                    val_acc,
+                    val_loss,
+                    comm_cost: self.ledger.total_cost(),
+                });
+                if self.cfg.verbose {
+                    let acc =
+                        val_acc.map(|a| format!(" acc={:.2}%", 100.0 * a)).unwrap_or_default();
+                    eprintln!(
+                        "[{}] round {round}/{total_rounds} k={k} loss={train_loss:.4}{acc} comm={}",
+                        metrics.tag,
+                        self.ledger.total_cost()
+                    );
+                }
+
+                if round < total_rounds {
+                    // partial participation: resample every phi*tau' iters
+                    active = self.sampler.sample();
+                    weights = self.partition.active_weights(&active);
+                    self.begin_round(&active);
+                }
+            }
+        }
+
+        let (acc, loss) = self.evaluate()?;
+        metrics.final_acc = acc;
+        metrics.final_loss = loss;
+        metrics.record_ledger(&self.ledger);
+        metrics.wall_secs = t0.elapsed().as_secs_f64();
+        metrics.runtime_secs = self.runtime.stats.borrow().total_secs();
+        Ok(metrics)
+    }
+
+    /// Round-start bookkeeping: newly active clients download the global
+    /// model; algorithm-specific state snapshots.
+    fn begin_round(&mut self, active: &[usize]) {
+        let hetero = self.cfg.hetero_local_steps;
+        let round_len = self.cfg.policy.round_len();
+        let mean_n = self.partition.total as f64 / self.cfg.n_clients as f64;
+        for &ci in active {
+            let need_ref = matches!(self.cfg.algorithm, Algorithm::Prox { .. } | Algorithm::Nova);
+            let frac = self.partition.clients[ci].total as f64 / mean_n;
+            let c = &mut self.clients[ci];
+            c.pull(&self.global);
+            c.steps_in_round = 0;
+            c.local_budget = if hetero {
+                ((round_len as f64 * frac).round() as usize).clamp(1, round_len)
+            } else {
+                usize::MAX
+            };
+            if need_ref {
+                c.snapshot_round_start();
+            }
+            if self.cfg.algorithm == Algorithm::Scaffold && c.control.is_none() {
+                c.control =
+                    Some(self.global.iter().map(|t| HostTensor::zeros(&t.shape)).collect());
+            }
+        }
+        if self.cfg.algorithm == Algorithm::Scaffold && self.server_control.is_none() {
+            self.server_control =
+                Some(self.global.iter().map(|t| HostTensor::zeros(&t.shape)).collect());
+        }
+    }
+
+    /// Advance one client by `gap` local steps; returns the mean loss
+    /// (NaN when the client's heterogeneous budget is already exhausted).
+    fn advance_client(&mut self, ci: usize, gap: usize, lr: f32) -> Result<f64> {
+        let b = self.runtime.manifest.batch_size;
+        let chunk_k = self.runtime.chunk_k();
+        let budget = self.clients[ci].local_budget;
+        let mut remaining = gap.min(budget.saturating_sub(self.clients[ci].steps_in_round));
+        if remaining == 0 {
+            return Ok(f64::NAN);
+        }
+        let mut loss_sum = 0.0f64;
+        let mut loss_n = 0usize;
+        let use_chunk = self.cfg.use_chunk && self.cfg.algorithm == Algorithm::Sgd && chunk_k > 1;
+        while remaining > 0 {
+            if use_chunk && remaining >= chunk_k {
+                self.fill_batches(ci, chunk_k * b);
+                let client = &mut self.clients[ci];
+                let losses =
+                    self.runtime.train_chunk(&mut client.params, &self.xbuf, &self.ybuf, lr)?;
+                loss_sum += losses.iter().map(|&v| v as f64).sum::<f64>();
+                loss_n += losses.len();
+                client.steps_in_round += chunk_k;
+                remaining -= chunk_k;
+            } else {
+                self.fill_batches(ci, b);
+                let loss = match self.cfg.algorithm {
+                    Algorithm::Sgd | Algorithm::Nova => {
+                        let client = &mut self.clients[ci];
+                        self.runtime.train_step(&mut client.params, &self.xbuf, &self.ybuf, lr)?
+                    }
+                    Algorithm::Prox { mu } => {
+                        let client = &mut self.clients[ci];
+                        let reference = client
+                            .round_start
+                            .take()
+                            .context("FedProx requires round_start snapshot")?;
+                        let r = self.runtime.train_step_prox(
+                            &mut client.params,
+                            &reference,
+                            &self.xbuf,
+                            &self.ybuf,
+                            lr,
+                            mu,
+                        );
+                        client.round_start = Some(reference);
+                        r?
+                    }
+                    Algorithm::Scaffold => {
+                        let client = &mut self.clients[ci];
+                        let control = client.control.take().context("SCAFFOLD control missing")?;
+                        let server =
+                            self.server_control.as_ref().context("server control missing")?;
+                        let r = self.runtime.train_step_scaffold(
+                            &mut client.params,
+                            &control,
+                            server,
+                            &self.xbuf,
+                            &self.ybuf,
+                            lr,
+                        );
+                        client.control = Some(control);
+                        r?
+                    }
+                };
+                loss_sum += loss as f64;
+                loss_n += 1;
+                self.clients[ci].steps_in_round += 1;
+                remaining -= 1;
+            }
+        }
+        Ok(loss_sum / loss_n.max(1) as f64)
+    }
+
+    /// Fill `n` examples into the batch buffers from client ci's local
+    /// distribution (deterministic per client stream).
+    fn fill_batches(&mut self, ci: usize, n: usize) {
+        let d = self.gen.input_dim;
+        self.xbuf.resize(n * d, 0.0);
+        self.ybuf.resize(n, 0);
+        let data = &self.partition.clients[ci];
+        let rng = &mut self.clients[ci].rng;
+        for i in 0..n {
+            let class = data.sample_class(rng);
+            let writer = data.sample_writer(rng);
+            self.ybuf[i] = class as i32;
+            self.gen.gen_example(class, writer, rng, &mut self.xbuf[i * d..(i + 1) * d]);
+        }
+    }
+
+    /// Aggregate one group across the active clients (L1 kernel when an
+    /// artifact exists, native fallback otherwise), write the result into
+    /// the global model and broadcast to the active clients.  Returns the
+    /// group discrepancy sum_i w_i ||u - x_i||^2 and the per-client uplink
+    /// byte count (compressed wire size when a compressor is configured).
+    fn sync_group(&mut self, g: usize, active: &[usize], weights: &[f32]) -> Result<(f64, usize)> {
+        let manifest = self.runtime.manifest.clone();
+        let group = &manifest.groups[g];
+        let m = active.len();
+        // Backend choice: on the CPU PJRT each kernel call pays a fixed
+        // ~60-100us literal/dispatch overhead while the native path runs at
+        // memory bandwidth (micro-agg bench, EXPERIMENTS.md §Perf), so Auto
+        // resolves to native here.  `Xla` forces the Pallas artifact — the
+        // path a TPU deployment would take.
+        let use_xla = match self.cfg.backend {
+            AggBackend::Native | AggBackend::Auto => false,
+            AggBackend::Xla => self.runtime.agg_kernel(group.dim, m).is_some(),
+        };
+        if self.cfg.backend == AggBackend::Xla && !use_xla {
+            anyhow::bail!(
+                "backend=xla but no AOT agg kernel for dim={} m={m}; re-run `make artifacts` \
+                 with --agg-m including {m}",
+                group.dim
+            );
+        }
+        if self.compress_enabled {
+            // compression path: clients upload lossy-compressed tensors
+            return self.sync_group_compressed(group, active, weights);
+        }
+        let disc = if use_xla {
+            self.sync_group_xla(group, active, weights)?
+        } else {
+            self.sync_group_native(group, active, weights)?
+        };
+        Ok((disc, group.dim * 4))
+    }
+
+    /// Compression-composed sync (paper §2/§7 future work): each active
+    /// client's group tensor is lossy-compressed before aggregation; the
+    /// server averages the decoded uploads.  Returns (discrepancy,
+    /// per-client uplink bytes).
+    fn sync_group_compressed(
+        &mut self,
+        group: &GroupInfo,
+        active: &[usize],
+        weights: &[f32],
+    ) -> Result<(f64, usize)> {
+        let mut disc = 0.0f64;
+        let mut uplink = 0usize;
+        let m = active.len();
+        for &t in &group.params {
+            let n = self.global[t].data.len();
+            // decode buffer: m rows of the lossy uploads
+            let mut decoded = vec![0.0f32; m * n];
+            for (row, &ci) in active.iter().enumerate() {
+                let dst = &mut decoded[row * n..(row + 1) * n];
+                dst.copy_from_slice(&self.clients[ci].params[t].data);
+                uplink += self.compressor.compress(dst);
+            }
+            let rows: Vec<&[f32]> = (0..m).map(|r| &decoded[r * n..(r + 1) * n]).collect();
+            disc += crate::aggregation::aggregate_native(&rows, weights, &mut self.global[t].data);
+            for &ci in active {
+                self.clients[ci].params[t].data.copy_from_slice(&self.global[t].data);
+            }
+        }
+        Ok((disc, uplink / m.max(1)))
+    }
+
+    fn sync_group_native(
+        &mut self,
+        group: &GroupInfo,
+        active: &[usize],
+        weights: &[f32],
+    ) -> Result<f64> {
+        let mut disc = 0.0f64;
+        for &t in &group.params {
+            {
+                let rows: Vec<&[f32]> =
+                    active.iter().map(|&ci| self.clients[ci].params[t].data.as_slice()).collect();
+                disc +=
+                    crate::aggregation::aggregate_native(&rows, weights, &mut self.global[t].data);
+            }
+            for &ci in active {
+                self.clients[ci].params[t].data.copy_from_slice(&self.global[t].data);
+            }
+        }
+        Ok(disc)
+    }
+
+    fn sync_group_xla(
+        &mut self,
+        group: &GroupInfo,
+        active: &[usize],
+        weights: &[f32],
+    ) -> Result<f64> {
+        let dim = group.dim;
+        let m = active.len();
+        let exe = self.runtime.agg_kernel(dim, m).context("agg kernel vanished")?;
+        self.scratch.stack.resize(m * dim, 0.0);
+        for (row, &ci) in active.iter().enumerate() {
+            let mut off = row * dim;
+            for &t in &group.params {
+                let src = &self.clients[ci].params[t].data;
+                self.scratch.stack[off..off + src.len()].copy_from_slice(src);
+                off += src.len();
+            }
+        }
+        let (u, disc) = self.runtime.run_agg(&exe, &self.scratch.stack, weights, dim)?;
+        // scatter u back into the global tensors + broadcast
+        let mut off = 0;
+        for &t in &group.params {
+            let dst_len = self.global[t].data.len();
+            self.global[t].data.copy_from_slice(&u[off..off + dst_len]);
+            off += dst_len;
+            for &ci in active {
+                self.clients[ci].params[t].data.copy_from_slice(&self.global[t].data);
+            }
+        }
+        Ok(disc as f64)
+    }
+
+    /// FedNova: normalized averaging of client deltas with heterogeneous
+    /// local step counts a_i (Wang et al. 2020).
+    fn nova_aggregate(&mut self, active: &[usize], weights: &[f32]) -> Result<f64> {
+        let tau_eff: f64 = active
+            .iter()
+            .zip(weights)
+            .map(|(&ci, &w)| w as f64 * self.clients[ci].steps_in_round as f64)
+            .sum();
+        // global <- global + tau_eff * sum_i w_i (x_i - x_start)/a_i
+        for t in 0..self.global.len() {
+            let len = self.global[t].data.len();
+            let mut delta = vec![0.0f64; len];
+            for (&ci, &w) in active.iter().zip(weights) {
+                let a_i = self.clients[ci].steps_in_round.max(1) as f64;
+                let start = self.clients[ci]
+                    .round_start
+                    .as_ref()
+                    .context("FedNova requires round_start")?;
+                let x = &self.clients[ci].params[t].data;
+                let s = &start[t].data;
+                for j in 0..len {
+                    delta[j] += w as f64 * (x[j] - s[j]) as f64 / a_i;
+                }
+            }
+            let gdata = &mut self.global[t].data;
+            for j in 0..len {
+                gdata[j] += (tau_eff * delta[j]) as f32;
+            }
+        }
+        for &ci in active {
+            let global = std::mem::take(&mut self.global);
+            self.clients[ci].pull(&global);
+            self.global = global;
+        }
+        // full-model sync: account every group
+        self.ledger.record_round();
+        let n_groups = self.runtime.manifest.groups.len();
+        for g in 0..n_groups {
+            self.ledger.record_sync(g, active.len());
+        }
+        Ok(0.0)
+    }
+
+    /// SCAFFOLD option-II control update (before aggregation):
+    /// c_i+ = c_i - c + (x_start - x_i) / (a_i * lr);  c += sum dc_i / N.
+    fn scaffold_update_controls(
+        &mut self,
+        active: &[usize],
+        round_len: usize,
+        lr: f32,
+    ) -> Result<()> {
+        let n = self.cfg.n_clients as f32;
+        let server = self.server_control.as_mut().context("server control")?;
+        for &ci in active {
+            let a_i = self.clients[ci].steps_in_round.max(1).min(round_len) as f32;
+            let scale = 1.0 / (a_i * lr);
+            let client = &mut self.clients[ci];
+            let control = client.control.as_mut().context("client control")?;
+            for t in 0..control.len() {
+                let x = &client.params[t].data;
+                let g = &self.global[t].data; // x_start == global at round start
+                let c_t = &mut control[t].data;
+                let s_t = &mut server[t].data;
+                for j in 0..c_t.len() {
+                    let c_new = c_t[j] - s_t[j] + scale * (g[j] - x[j]);
+                    let dc = c_new - c_t[j];
+                    c_t[j] = c_new;
+                    s_t[j] += dc / n;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Evaluate the global model on the held-out validation set.
+    pub fn evaluate(&mut self) -> Result<(f64, f64)> {
+        let b = self.runtime.manifest.eval_batch_size;
+        let d = self.gen.input_dim;
+        let n = self.val_y.len();
+        let mut correct = 0.0f64;
+        let mut loss = 0.0f64;
+        for s in (0..n).step_by(b) {
+            let xs = &self.val_x[s * d..(s + b) * d];
+            let ys = &self.val_y[s..s + b];
+            let (c, l) = self.runtime.eval_step(&self.global, xs, ys)?;
+            correct += c as f64;
+            loss += l as f64;
+        }
+        Ok((correct / n as f64, loss / n as f64))
+    }
+}
+
+fn build_partition(cfg: &RunConfig, rng: &mut Rng) -> Partition {
+    let classes = cfg.dataset.num_classes();
+    match cfg.partition {
+        PartitionKind::Iid => iid_partition(cfg.n_clients, classes, cfg.samples),
+        PartitionKind::Dirichlet { alpha } => {
+            dirichlet_partition(cfg.n_clients, classes, cfg.samples, alpha, rng)
+        }
+        PartitionKind::Writers => femnist_partition(
+            cfg.n_clients,
+            classes,
+            cfg.dataset.num_writers().max(cfg.n_clients),
+            cfg.samples,
+            rng,
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetKind;
+
+    #[test]
+    fn partition_builder_kinds() {
+        let mut rng = Rng::new(1);
+        let cfg = RunConfig { n_clients: 4, samples: 100, ..Default::default() };
+        let p = build_partition(&cfg, &mut rng);
+        assert_eq!(p.clients.len(), 4);
+        assert_eq!(p.total, 400);
+        let cfg = RunConfig {
+            partition: PartitionKind::Dirichlet { alpha: 0.1 },
+            n_clients: 4,
+            samples: 50,
+            ..Default::default()
+        };
+        let p = build_partition(&cfg, &mut rng);
+        assert_eq!(p.clients.len(), 4);
+        let cfg = RunConfig {
+            partition: PartitionKind::Writers,
+            dataset: DatasetKind::Femnist,
+            n_clients: 4,
+            samples: 64,
+            ..Default::default()
+        };
+        let p = build_partition(&cfg, &mut rng);
+        assert!(p.clients.iter().all(|c| !c.writers.is_empty()));
+    }
+}

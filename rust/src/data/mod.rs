@@ -1,0 +1,10 @@
+//! Federated data substrates: synthetic benchmark generators, IID /
+//! Dirichlet / writer-based partitioning, batch iterators (DESIGN.md §4).
+
+pub mod batches;
+pub mod partition;
+pub mod synthetic;
+
+pub use batches::BatchSource;
+pub use partition::{dirichlet_partition, femnist_partition, iid_partition, ClientData, Partition};
+pub use synthetic::{DatasetKind, Generator};

@@ -1,0 +1,238 @@
+//! Federated data partitioning: IID and Dirichlet non-IID label skew.
+//!
+//! Follows the FedML partitioner the paper cites: for each class c, a
+//! Dirichlet(alpha) draw over clients decides how many of that class's
+//! samples each client holds.  A small alpha therefore skews both the label
+//! mix *and* the per-client dataset size, as the paper notes in §A.2.
+
+use crate::util::rng::Rng;
+
+/// One client's local data distribution: per-class sample counts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClientData {
+    pub counts: Vec<usize>,
+    pub total: usize,
+    /// FEMNIST: the writers this client owns (empty for other datasets).
+    pub writers: Vec<usize>,
+}
+
+impl ClientData {
+    pub fn new(counts: Vec<usize>) -> ClientData {
+        let total = counts.iter().sum();
+        ClientData { counts, total, writers: Vec::new() }
+    }
+
+    /// Sample a class label according to this client's local distribution.
+    pub fn sample_class(&self, rng: &mut Rng) -> usize {
+        debug_assert!(self.total > 0);
+        let mut r = rng.below(self.total);
+        for (c, &n) in self.counts.iter().enumerate() {
+            if r < n {
+                return c;
+            }
+            r -= n;
+        }
+        self.counts.len() - 1
+    }
+
+    /// Sample a writer (FEMNIST) or 0.
+    pub fn sample_writer(&self, rng: &mut Rng) -> usize {
+        if self.writers.is_empty() {
+            0
+        } else {
+            self.writers[rng.below(self.writers.len())]
+        }
+    }
+}
+
+/// A full partition of a federated dataset across clients.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    pub clients: Vec<ClientData>,
+    pub total: usize,
+}
+
+impl Partition {
+    /// Aggregation weight p_i = n_i / n (paper Eq. 1).
+    pub fn weight(&self, client: usize) -> f64 {
+        self.clients[client].total as f64 / self.total as f64
+    }
+
+    /// Renormalized weights over an active subset (partial participation).
+    pub fn active_weights(&self, active: &[usize]) -> Vec<f32> {
+        let sum: f64 = active.iter().map(|&i| self.clients[i].total as f64).sum();
+        active.iter().map(|&i| (self.clients[i].total as f64 / sum) as f32).collect()
+    }
+}
+
+/// IID: every client gets `per_client` samples uniformly over classes.
+pub fn iid_partition(n_clients: usize, num_classes: usize, per_client: usize) -> Partition {
+    let base = per_client / num_classes;
+    let rem = per_client % num_classes;
+    let clients = (0..n_clients)
+        .map(|_| {
+            let counts: Vec<usize> =
+                (0..num_classes).map(|c| base + usize::from(c < rem)).collect();
+            ClientData::new(counts)
+        })
+        .collect::<Vec<_>>();
+    let total = clients.iter().map(|c| c.total).sum();
+    Partition { clients, total }
+}
+
+/// Dirichlet non-IID: class c's `samples_per_class` are split across
+/// clients by a Dirichlet(alpha) draw (FedML scheme).  Clients that end up
+/// empty are given one sample of a random class so every p_i > 0.
+pub fn dirichlet_partition(
+    n_clients: usize,
+    num_classes: usize,
+    samples_per_class: usize,
+    alpha: f64,
+    rng: &mut Rng,
+) -> Partition {
+    let mut counts = vec![vec![0usize; num_classes]; n_clients];
+    for c in 0..num_classes {
+        let props = rng.dirichlet(alpha, n_clients);
+        // Largest-remainder apportionment of samples_per_class.
+        let mut assigned = 0usize;
+        let mut fracs: Vec<(usize, f64)> = Vec::with_capacity(n_clients);
+        for (i, p) in props.iter().enumerate() {
+            let exact = p * samples_per_class as f64;
+            let fl = exact.floor() as usize;
+            counts[i][c] += fl;
+            assigned += fl;
+            fracs.push((i, exact - fl as f64));
+        }
+        fracs.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        for &(i, _) in fracs.iter().take(samples_per_class - assigned) {
+            counts[i][c] += 1;
+        }
+    }
+    for row in counts.iter_mut() {
+        if row.iter().sum::<usize>() == 0 {
+            row[rng.below(num_classes)] = 1;
+        }
+    }
+    let clients: Vec<ClientData> = counts.into_iter().map(ClientData::new).collect();
+    let total = clients.iter().map(|c| c.total).sum();
+    Partition { clients, total }
+}
+
+/// FEMNIST natural partition: split `n_writers` writers across clients;
+/// each client's class mix is near-uniform but its data carries its
+/// writers' style shift (the natural heterogeneity of the benchmark).
+pub fn femnist_partition(
+    n_clients: usize,
+    num_classes: usize,
+    n_writers: usize,
+    per_client: usize,
+    rng: &mut Rng,
+) -> Partition {
+    let mut writer_ids: Vec<usize> = (0..n_writers).collect();
+    rng.shuffle(&mut writer_ids);
+    let mut clients = Vec::with_capacity(n_clients);
+    for i in 0..n_clients {
+        // near-uniform class counts with small multiplicative jitter
+        let mut counts = vec![0usize; num_classes];
+        let mut remaining = per_client;
+        for (c, cnt) in counts.iter_mut().enumerate() {
+            let base = remaining / (num_classes - c);
+            let jitter = if base > 1 { rng.below(base / 2 + 1) } else { 0 };
+            let take = (base + jitter).min(remaining);
+            *cnt = take;
+            remaining -= take;
+        }
+        counts[rng.below(num_classes)] += remaining;
+        let mut cd = ClientData::new(counts);
+        // round-robin writer ownership
+        cd.writers = writer_ids.iter().skip(i).step_by(n_clients).copied().collect();
+        if cd.writers.is_empty() {
+            cd.writers.push(writer_ids[i % n_writers]);
+        }
+        clients.push(cd);
+    }
+    let total = clients.iter().map(|c| c.total).sum();
+    Partition { clients, total }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iid_is_uniform() {
+        let p = iid_partition(8, 10, 100);
+        assert_eq!(p.total, 800);
+        for c in &p.clients {
+            assert_eq!(c.total, 100);
+            assert!(c.counts.iter().all(|&n| n == 10));
+        }
+        assert!((p.weight(0) - 1.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dirichlet_conserves_samples() {
+        let mut rng = Rng::new(1);
+        let p = dirichlet_partition(16, 10, 500, 0.1, &mut rng);
+        // every class's samples are fully assigned (plus possible +1 fills)
+        assert!(p.total >= 5000);
+        assert!(p.total <= 5000 + 16);
+        for c in &p.clients {
+            assert!(c.total > 0, "no empty clients allowed");
+        }
+    }
+
+    #[test]
+    fn dirichlet_small_alpha_skews() {
+        let mut rng = Rng::new(2);
+        let skewed = dirichlet_partition(8, 10, 1000, 0.05, &mut rng);
+        let uniform = dirichlet_partition(8, 10, 1000, 1000.0, &mut rng);
+        // max class share per client: skewed >> uniform
+        let max_share = |p: &Partition| {
+            p.clients
+                .iter()
+                .map(|c| {
+                    c.counts.iter().cloned().max().unwrap_or(0) as f64 / c.total.max(1) as f64
+                })
+                .fold(0.0, f64::max)
+        };
+        assert!(max_share(&skewed) > 0.5, "alpha=0.05 should skew: {}", max_share(&skewed));
+        assert!(max_share(&uniform) < 0.25, "alpha=1000 should be uniform: {}", max_share(&uniform));
+    }
+
+    #[test]
+    fn sampling_respects_counts() {
+        let cd = ClientData::new(vec![0, 100, 0, 50]);
+        let mut rng = Rng::new(3);
+        let mut seen = [0usize; 4];
+        for _ in 0..3000 {
+            seen[cd.sample_class(&mut rng)] += 1;
+        }
+        assert_eq!(seen[0], 0);
+        assert_eq!(seen[2], 0);
+        let ratio = seen[1] as f64 / seen[3] as f64;
+        assert!((ratio - 2.0).abs() < 0.3, "ratio {ratio}");
+    }
+
+    #[test]
+    fn active_weights_renormalize() {
+        let mut rng = Rng::new(4);
+        let p = dirichlet_partition(10, 5, 200, 0.5, &mut rng);
+        let w = p.active_weights(&[0, 3, 7]);
+        assert_eq!(w.len(), 3);
+        assert!((w.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn femnist_assigns_all_writers() {
+        let mut rng = Rng::new(5);
+        let p = femnist_partition(8, 62, 100, 300, &mut rng);
+        let mut owned: Vec<usize> = p.clients.iter().flat_map(|c| c.writers.clone()).collect();
+        owned.sort_unstable();
+        owned.dedup();
+        assert_eq!(owned.len(), 100, "every writer owned exactly once");
+        for c in &p.clients {
+            assert_eq!(c.total, 300);
+        }
+    }
+}

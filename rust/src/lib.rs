@@ -1,0 +1,19 @@
+//! FedLAMA: layer-wise adaptive model aggregation for scalable federated
+//! learning (AAAI'23) — rust coordinator + JAX/Pallas AOT compute stack.
+//!
+//! See DESIGN.md for the architecture and EXPERIMENTS.md for the
+//! paper-vs-measured reproduction results.
+
+pub mod aggregation;
+pub mod clients;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod runtime;
+pub mod util;
+
+pub use config::{Algorithm, PartitionKind, RunConfig};
+pub use coordinator::Coordinator;
+pub mod reports;

@@ -1,0 +1,322 @@
+//! fedlama — leader entrypoint / CLI.
+//!
+//! Subcommands:
+//!   train    one federated training run (all knobs exposed)
+//!   repro    regenerate a paper table (table1..table11, baselines, all)
+//!   figure   regenerate a paper figure (1..6)
+//!   inspect  print a model's artifact manifest summary
+//!   list     list available experiment presets
+//!
+//! Examples:
+//!   fedlama train --model resnet20 --dataset cifar10 --policy fedlama \
+//!       --tau 6 --phi 4 --clients 16 --iters 960 --lr 0.4
+//!   fedlama repro --table table1 --scale smoke
+//!   fedlama figure --id 1
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use fedlama::aggregation::AggBackend;
+use fedlama::config::presets::{self, Scale, ALL_TABLE_IDS};
+use fedlama::config::{Algorithm, PartitionKind, RunConfig};
+use fedlama::coordinator::Coordinator;
+use fedlama::data::DatasetKind;
+use fedlama::reports;
+use fedlama::runtime::Manifest;
+use fedlama::util::cli::Args;
+
+fn main() {
+    let args = Args::parse();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let code = match cmd {
+        "train" => run_train(&args),
+        "repro" => run_repro(&args),
+        "figure" => run_figure(&args),
+        "inspect" => run_inspect(&args),
+        "list" => run_list(),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = code {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "fedlama — FedLAMA (AAAI'23) reproduction\n\n\
+         USAGE: fedlama <train|repro|figure|inspect|list> [--flags]\n\n\
+         train   --model M --dataset D [--policy fedavg|fedlama|fedlama-acc]\n\
+                 [--tau 6] [--phi 2] [--clients 16] [--active-ratio 1.0]\n\
+                 [--partition iid|dirichlet|writers] [--alpha 0.1] [--samples 512]\n\
+                 [--lr 0.1] [--warmup 4] [--iters 960] [--eval-every 4]\n\
+                 [--algo sgd|fedprox|scaffold|fednova] [--mu 0.01] [--hetero]\n\
+                 [--backend auto|native|xla] [--no-chunk] [--seed 1]\n\
+                 [--out run.json] [--curve curve.csv] [--verbose]\n\
+         repro   --table table1..table11|baselines|all [--scale smoke|default|full]\n\
+                 [--repeats 1] [--out-dir reports] [--verbose]\n\
+         figure  --id 1..6 [--scale ...] [--out-dir reports]\n\
+         inspect --model M\n\
+         list"
+    );
+}
+
+fn artifacts_root() -> PathBuf {
+    std::env::var_os("FEDLAMA_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+fn cfg_from_args(args: &Args) -> Result<RunConfig> {
+    let model = args.str_or("model", "mlp");
+    let dataset = DatasetKind::parse(&args.str_or("dataset", "toy"))
+        .context("bad --dataset (toy|cifar10|cifar100|femnist)")?;
+    let tau = args.usize_or("tau", 6);
+    let phi = args.usize_or("phi", 2);
+    let policy = reports::policy_of(&args.str_or("policy", "fedavg"), tau, phi)
+        .context("bad --policy (fedavg|fedlama|fedlama-acc)")?;
+    let algorithm = Algorithm::parse(&args.str_or("algo", "sgd"), args.f32_or("mu", 0.01))
+        .context("bad --algo (sgd|fedprox|scaffold|fednova)")?;
+    let partition = match args.str_or("partition", "iid").as_str() {
+        "iid" => PartitionKind::Iid,
+        "dirichlet" => PartitionKind::Dirichlet { alpha: args.f64_or("alpha", 0.1) },
+        "writers" => PartitionKind::Writers,
+        p => anyhow::bail!("bad --partition {p}"),
+    };
+    let backend = AggBackend::parse(&args.str_or("backend", "auto"))
+        .context("bad --backend (auto|native|xla)")?;
+    let iters = args.usize_or("iters", 960);
+    Ok(RunConfig {
+        model_dir: artifacts_root().join(model),
+        dataset,
+        algorithm,
+        policy,
+        n_clients: args.usize_or("clients", 16),
+        active_ratio: args.f64_or("active-ratio", 1.0),
+        partition,
+        samples: args.usize_or("samples", 512),
+        lr: args.f32_or("lr", 0.1),
+        warmup_rounds: args.usize_or("warmup", 4),
+        iterations: iters,
+        eval_every_rounds: args.usize_or("eval-every", 4),
+        eval_examples: args.usize_or("eval-examples", 1024),
+        seed: args.u64_or("seed", 1),
+        backend,
+        use_chunk: !args.bool_or("no-chunk", false),
+        hetero_local_steps: args.bool_or("hetero", false),
+        compressor: args.str_or("compress", "dense"),
+        verbose: args.bool_or("verbose", false),
+    })
+}
+
+fn run_train(args: &Args) -> Result<()> {
+    let cfg = cfg_from_args(args)?;
+    let tag = cfg.tag();
+    eprintln!("running {tag} on {:?} ({} clients)", cfg.dataset, cfg.n_clients);
+    let mut coord = Coordinator::new(cfg)?;
+    let metrics = coord.run()?;
+    println!("{}", reports::summary_line(&tag, &metrics));
+    println!(
+        "runtime: PJRT compute {:.1}s of {:.1}s wall ({:.0}% — coordinator overhead {:.0}%)",
+        metrics.runtime_secs,
+        metrics.wall_secs,
+        100.0 * metrics.runtime_secs / metrics.wall_secs.max(1e-9),
+        100.0 * (1.0 - metrics.runtime_secs / metrics.wall_secs.max(1e-9)),
+    );
+    if let Some(out) = args.get("out") {
+        reports::write_report(std::path::Path::new(out), &metrics.to_json().to_string_pretty())?;
+        eprintln!("wrote {out}");
+    }
+    if let Some(curve) = args.get("curve") {
+        reports::write_report(std::path::Path::new(curve), &metrics.curve_csv())?;
+        eprintln!("wrote {curve}");
+    }
+    Ok(())
+}
+
+fn run_repro(args: &Args) -> Result<()> {
+    let scale = Scale::parse(&args.str_or("scale", "default")).context("bad --scale")?;
+    let repeats = args.usize_or("repeats", 1);
+    let verbose = args.bool_or("verbose", false);
+    let out_dir = PathBuf::from(args.str_or("out-dir", "reports"));
+    let which = args.str_or("table", "all");
+    let ids: Vec<String> = if which == "all" {
+        ALL_TABLE_IDS.iter().map(|s| s.to_string()).collect()
+    } else {
+        which.split(',').map(|s| s.trim().to_string()).collect()
+    };
+    for id in &ids {
+        let exp = presets::by_id(id, scale).with_context(|| format!("unknown table {id}"))?;
+        eprintln!("=== {id}: {} rows ===", exp.rows.len());
+        let results = reports::run_experiment(&exp, repeats, verbose)?;
+        let table = reports::render_table(&exp, &results);
+        println!("{}", table.render());
+        reports::write_report(&out_dir.join(format!("{id}.md")), &table.render_markdown())?;
+        let curves: Vec<(&str, &fedlama::metrics::RunMetrics)> =
+            results.iter().map(|r| (r.label.as_str(), &r.metrics)).collect();
+        reports::write_report(
+            &out_dir.join(format!("{id}_curves.csv")),
+            &reports::curves_csv(&curves),
+        )?;
+    }
+    Ok(())
+}
+
+fn run_figure(args: &Args) -> Result<()> {
+    let scale = Scale::parse(&args.str_or("scale", "default")).context("bad --scale")?;
+    let out_dir = PathBuf::from(args.str_or("out-dir", "reports"));
+    let id = args.usize_or("id", 1);
+    let p = presets::scale_params(scale);
+    match id {
+        1 => {
+            // delta_l / 1-lambda_l curves: (a) resnet20, (b) cifar_cnn100
+            for (model, ds) in
+                [("resnet20", DatasetKind::Cifar10), ("cifar_cnn100", DatasetKind::Cifar100)]
+            {
+                let cfg = RunConfig {
+                    model_dir: artifacts_root().join(model),
+                    dataset: ds,
+                    policy: fedlama::aggregation::Policy::fedlama(6, 2),
+                    n_clients: p.n_clients,
+                    samples: p.samples,
+                    iterations: (p.iterations_t1 / 10).max(12) / 12 * 12,
+                    eval_every_rounds: 0,
+                    eval_examples: 256,
+                    lr: 0.4,
+                    warmup_rounds: 0,
+                    ..Default::default()
+                };
+                let mut coord = Coordinator::new(cfg)?;
+                let _ = coord.run()?;
+                let csv = reports::figure1_csv(&coord).context("no adjustment recorded")?;
+                let ascii =
+                    reports::figure1_ascii(&coord, 60, 16).context("no adjustment recorded")?;
+                println!("--- Figure 1 ({model}) ---\n{ascii}");
+                reports::write_report(&out_dir.join(format!("figure1_{model}.csv")), &csv)?;
+            }
+        }
+        2 | 3 => {
+            // per-layer comm counts (fig 2) and data sizes (fig 3)
+            let mk = |policy| RunConfig {
+                model_dir: artifacts_root().join("resnet20"),
+                dataset: DatasetKind::Cifar10,
+                policy,
+                partition: PartitionKind::Dirichlet { alpha: 0.1 },
+                n_clients: p.n_clients,
+                samples: p.samples,
+                iterations: (p.iterations_t1 / 2).max(12) / 12 * 12,
+                eval_every_rounds: 0,
+                eval_examples: 256,
+                lr: 0.4,
+                warmup_rounds: 2,
+                ..Default::default()
+            };
+            let mut avg = Coordinator::new(mk(fedlama::aggregation::Policy::fedavg(6)))?;
+            let m_avg = avg.run()?;
+            let mut lama = Coordinator::new(mk(fedlama::aggregation::Policy::fedlama(6, 2)))?;
+            let m_lama = lama.run()?;
+            let csv = reports::figure23_csv(&[("fedavg6", &m_avg), ("fedlama6_2", &m_lama)]);
+            println!("{csv}");
+            reports::write_report(&out_dir.join("figure2_3.csv"), &csv)?;
+            println!(
+                "total Eq.9 cost: fedavg={} fedlama={} ({:.1}%)",
+                m_avg.total_comm_cost,
+                m_lama.total_comm_cost,
+                100.0 * m_lama.total_comm_cost as f64 / m_avg.total_comm_cost as f64
+            );
+        }
+        4 | 5 | 6 => {
+            // learning curves
+            let (model, ds, tau): (&str, DatasetKind, usize) = match id {
+                4 => ("resnet20", DatasetKind::Cifar10, 6),
+                5 => ("cifar_cnn100", DatasetKind::Cifar100, 6),
+                _ => ("femnist_cnn", DatasetKind::Femnist, 10),
+            };
+            let iters = if tau == 6 { p.iterations_t1 } else { p.iterations_t10 };
+            let partition = if id == 6 {
+                PartitionKind::Writers
+            } else {
+                PartitionKind::Dirichlet { alpha: 0.1 }
+            };
+            let mk = |policy| RunConfig {
+                model_dir: artifacts_root().join(model),
+                dataset: ds,
+                policy,
+                partition,
+                n_clients: p.n_clients,
+                samples: p.samples,
+                iterations: iters,
+                eval_every_rounds: 2,
+                eval_examples: p.eval_examples,
+                lr: if id == 6 { 0.06 } else { 0.4 },
+                warmup_rounds: 4,
+                ..Default::default()
+            };
+            use fedlama::aggregation::Policy;
+            let runs: Vec<(String, RunConfig)> = vec![
+                (format!("FedAvg({tau})"), mk(Policy::fedavg(tau))),
+                (format!("FedAvg({})", 4 * tau), mk(Policy::fedavg(4 * tau))),
+                (format!("FedLAMA({tau},4)"), mk(Policy::fedlama(tau, 4))),
+            ];
+            let mut results = Vec::new();
+            for (tag, cfg) in runs {
+                let mut coord = Coordinator::new(cfg)?;
+                let m = coord.run()?;
+                eprintln!("{}", reports::summary_line(&tag, &m));
+                results.push((tag, m));
+            }
+            let refs: Vec<(&str, &fedlama::metrics::RunMetrics)> =
+                results.iter().map(|(t, m)| (t.as_str(), m)).collect();
+            let csv = reports::curves_csv(&refs);
+            reports::write_report(&out_dir.join(format!("figure{id}_curves.csv")), &csv)?;
+            println!("wrote {}/figure{id}_curves.csv", out_dir.display());
+        }
+        _ => anyhow::bail!("--id must be 1..6"),
+    }
+    Ok(())
+}
+
+fn run_inspect(args: &Args) -> Result<()> {
+    let model = args.str_or("model", "mlp");
+    let m = Manifest::load(&artifacts_root().join(&model))?;
+    println!("model {} (base {})", m.model, m.base);
+    println!(
+        "  {} params in {} tensors / {} groups; batch={} eval_batch={} chunk_k={}",
+        m.num_params,
+        m.num_tensors(),
+        m.groups.len(),
+        m.batch_size,
+        m.eval_batch_size,
+        m.chunk_k
+    );
+    println!("  input {:?} classes {}", m.input_shape, m.num_classes);
+    println!("  groups:");
+    for g in &m.groups {
+        println!("    {:24} dim {:>8}  ({} tensors)", g.name, g.dim, g.params.len());
+    }
+    println!("  entries: {}", m.entries.keys().cloned().collect::<Vec<_>>().join(", "));
+    println!(
+        "  agg kernels: {} dims x m in {:?}",
+        m.agg_by_dim.len(),
+        m.agg_by_dim
+            .values()
+            .next()
+            .map(|v| v.keys().cloned().collect::<Vec<_>>())
+            .unwrap_or_default()
+    );
+    Ok(())
+}
+
+fn run_list() -> Result<()> {
+    println!("experiment presets (use with: fedlama repro --table <id>):");
+    for id in ALL_TABLE_IDS {
+        let exp = presets::by_id(id, Scale::Default).unwrap();
+        println!("  {:10} {} ({} rows)", id, exp.title, exp.rows.len());
+    }
+    println!("figures (use with: fedlama figure --id <n>): 1..6");
+    Ok(())
+}

@@ -1,0 +1,154 @@
+//! Training metrics: loss/accuracy curves, run reports, CSV + JSON emit,
+//! and paper-style table formatting.
+
+pub mod tables;
+
+use crate::comm::CommLedger;
+use crate::util::json::Json;
+
+/// One point on the learning curve (recorded at round boundaries).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CurvePoint {
+    pub iteration: usize,
+    pub round: usize,
+    pub train_loss: f64,
+    /// Present only at eval rounds.
+    pub val_acc: Option<f64>,
+    pub val_loss: Option<f64>,
+    /// Eq. 9 cumulative comm cost at this point.
+    pub comm_cost: u64,
+}
+
+/// Complete record of one training run.
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    pub tag: String,
+    pub curve: Vec<CurvePoint>,
+    pub final_acc: f64,
+    pub final_loss: f64,
+    pub wall_secs: f64,
+    pub total_comm_cost: u64,
+    pub total_syncs: u64,
+    pub total_bytes: u64,
+    /// Per-group (name, dim, syncs, cost) — Figures 2/3.
+    pub per_group: Vec<(String, usize, u64, u64)>,
+    /// Coordinator overhead: wall time not spent inside PJRT executables.
+    pub runtime_secs: f64,
+}
+
+impl RunMetrics {
+    pub fn record_ledger(&mut self, ledger: &CommLedger) {
+        self.total_comm_cost = ledger.total_cost();
+        self.total_syncs = ledger.total_syncs();
+        self.total_bytes = ledger.total_bytes();
+        self.per_group = ledger
+            .per_group()
+            .into_iter()
+            .map(|(n, d, s, c)| (n.to_string(), d, s, c))
+            .collect();
+    }
+
+    /// Paper-style "Comm. cost" percentage vs a baseline run.
+    pub fn comm_pct_vs(&self, baseline: &RunMetrics) -> f64 {
+        if baseline.total_comm_cost == 0 {
+            return f64::NAN;
+        }
+        100.0 * self.total_comm_cost as f64 / baseline.total_comm_cost as f64
+    }
+
+    /// Learning curve as CSV (iteration,round,loss,acc,comm).
+    pub fn curve_csv(&self) -> String {
+        let mut s = String::from("iteration,round,train_loss,val_acc,val_loss,comm_cost\n");
+        for p in &self.curve {
+            s.push_str(&format!(
+                "{},{},{:.6},{},{},{}\n",
+                p.iteration,
+                p.round,
+                p.train_loss,
+                p.val_acc.map(|v| format!("{v:.4}")).unwrap_or_default(),
+                p.val_loss.map(|v| format!("{v:.4}")).unwrap_or_default(),
+                p.comm_cost
+            ));
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("tag", Json::str(self.tag.clone())),
+            ("final_acc", Json::num(self.final_acc)),
+            ("final_loss", Json::num(self.final_loss)),
+            ("wall_secs", Json::num(self.wall_secs)),
+            ("total_comm_cost", Json::num(self.total_comm_cost as f64)),
+            ("total_syncs", Json::num(self.total_syncs as f64)),
+            ("total_bytes", Json::num(self.total_bytes as f64)),
+            (
+                "per_group",
+                Json::arr(self.per_group.iter().map(|(n, d, s, c)| {
+                    Json::obj(vec![
+                        ("name", Json::str(n.clone())),
+                        ("dim", Json::num(*d as f64)),
+                        ("syncs", Json::num(*s as f64)),
+                        ("cost", Json::num(*c as f64)),
+                    ])
+                })),
+            ),
+            (
+                "curve",
+                Json::arr(self.curve.iter().map(|p| {
+                    Json::obj(vec![
+                        ("iter", Json::num(p.iteration as f64)),
+                        ("loss", Json::num(p.train_loss)),
+                        ("acc", p.val_acc.map(Json::num).unwrap_or(Json::Null)),
+                        ("comm", Json::num(p.comm_cost as f64)),
+                    ])
+                })),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn metrics_with(cost: u64) -> RunMetrics {
+        RunMetrics { total_comm_cost: cost, ..Default::default() }
+    }
+
+    #[test]
+    fn comm_pct() {
+        let a = metrics_with(50);
+        let b = metrics_with(200);
+        assert!((a.comm_pct_vs(&b) - 25.0).abs() < 1e-12);
+        assert!(a.comm_pct_vs(&metrics_with(0)).is_nan());
+    }
+
+    #[test]
+    fn csv_and_json_round_trip() {
+        let mut m = RunMetrics { tag: "fedlama(6,4)".into(), ..Default::default() };
+        m.curve.push(CurvePoint {
+            iteration: 24,
+            round: 1,
+            train_loss: 2.3,
+            val_acc: Some(0.41),
+            val_loss: Some(2.1),
+            comm_cost: 1234,
+        });
+        m.curve.push(CurvePoint {
+            iteration: 48,
+            round: 2,
+            train_loss: 2.0,
+            val_acc: None,
+            val_loss: None,
+            comm_cost: 2468,
+        });
+        let csv = m.curve_csv();
+        assert!(csv.contains("24,1,2.300000,0.4100,2.1000,1234"));
+        assert!(csv.lines().count() == 3);
+        let j = m.to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("tag").unwrap().as_str(), Some("fedlama(6,4)"));
+        assert_eq!(parsed.get("curve").unwrap().as_arr().unwrap().len(), 2);
+    }
+}

@@ -1,0 +1,115 @@
+//! Paper-style table formatting: the bench harness prints the same rows
+//! the paper's tables report.
+
+/// A rendered table with a title and aligned columns.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::from("| ");
+            for i in 0..ncol {
+                s.push_str(&format!("{:w$} | ", cells[i], w = widths[i]));
+            }
+            s.trim_end().to_string()
+        };
+        out.push_str(&line(&self.headers, &widths));
+        out.push('\n');
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        out.push_str(&line(&sep, &widths));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// GitHub-flavored markdown rendering (for EXPERIMENTS.md).
+    pub fn render_markdown(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("### {}\n\n", self.title));
+        out.push_str(&format!("| {} |\n", self.headers.join(" | ")));
+        out.push_str(&format!(
+            "|{}|\n",
+            self.headers.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+        ));
+        for row in &self.rows {
+            out.push_str(&format!("| {} |\n", row.join(" | ")));
+        }
+        out
+    }
+}
+
+/// Format an accuracy cell like the paper: "88.41 ±0.01%".
+pub fn acc_cell(mean: f64, std: f64) -> String {
+    format!("{:.2} ±{:.2}%", 100.0 * mean, 100.0 * std)
+}
+
+/// Format a comm-cost cell like the paper: "62.33%".
+pub fn pct_cell(pct: f64) -> String {
+    format!("{pct:.2}%")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("Table 1", &["LR", "tau", "phi", "acc", "comm"]);
+        t.row(vec!["0.8".into(), "6".into(), "1 (FedAvg)".into(), acc_cell(0.8837, 0.0002), pct_cell(100.0)]);
+        t.row(vec!["0.4".into(), "6".into(), "2 (FedLAMA)".into(), acc_cell(0.8841, 0.0001), pct_cell(62.33)]);
+        let s = t.render();
+        assert!(s.contains("== Table 1 =="));
+        assert!(s.contains("88.37 ±0.02%"));
+        assert!(s.contains("62.33%"));
+        // every body line has the same column separators
+        for line in s.lines().skip(1) {
+            assert_eq!(line.matches('|').count(), 6, "bad row: {line}");
+        }
+    }
+
+    #[test]
+    fn markdown() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let md = t.render_markdown();
+        assert!(md.contains("| a | b |"));
+        assert!(md.contains("|---|---|"));
+        assert!(md.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+}

@@ -1,0 +1,271 @@
+//! Experiment runners + paper-style reports: the code that regenerates
+//! every table and figure (DESIGN.md §6).  Shared by the CLI, examples,
+//! and the bench harness.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::aggregation::Policy;
+use crate::config::presets::{Experiment, ExperimentRow};
+use crate::config::RunConfig;
+use crate::coordinator::Coordinator;
+use crate::metrics::tables::{acc_cell, pct_cell, Table};
+use crate::metrics::RunMetrics;
+
+/// Run every row of an experiment (optionally with `repeats` seeds to get
+/// the paper's ± std column) and return per-row metrics.
+pub fn run_experiment(exp: &Experiment, repeats: usize, verbose: bool) -> Result<Vec<RowResult>> {
+    let mut out = Vec::with_capacity(exp.rows.len());
+    for row in &exp.rows {
+        out.push(run_row(row, repeats, verbose)?);
+    }
+    Ok(out)
+}
+
+#[derive(Debug, Clone)]
+pub struct RowResult {
+    pub label: String,
+    pub lr: f32,
+    pub acc_mean: f64,
+    pub acc_std: f64,
+    pub comm_cost: u64,
+    pub wall_secs: f64,
+    /// Metrics of the first repeat (curves, per-group detail).
+    pub metrics: RunMetrics,
+}
+
+pub fn run_row(row: &ExperimentRow, repeats: usize, verbose: bool) -> Result<RowResult> {
+    let repeats = repeats.max(1);
+    let mut accs = Vec::with_capacity(repeats);
+    let mut first: Option<RunMetrics> = None;
+    let mut comm = 0;
+    let mut wall = 0.0;
+    for r in 0..repeats {
+        let cfg = RunConfig { seed: row.cfg.seed + r as u64, verbose, ..row.cfg.clone() };
+        let mut coord = Coordinator::new(cfg)?;
+        let m = coord.run()?;
+        accs.push(m.final_acc);
+        comm = m.total_comm_cost;
+        wall += m.wall_secs;
+        if first.is_none() {
+            first = Some(m);
+        }
+    }
+    let mean = crate::util::stats::mean(&accs);
+    let std = crate::util::stats::stddev(&accs);
+    Ok(RowResult {
+        label: row.label.clone(),
+        lr: row.lr,
+        acc_mean: mean,
+        acc_std: std,
+        comm_cost: comm,
+        wall_secs: wall,
+        metrics: first.unwrap(),
+    })
+}
+
+/// Render an experiment's results in the paper's table format
+/// (LR | setting | accuracy | comm-cost% vs the baseline row).
+pub fn render_table(exp: &Experiment, results: &[RowResult]) -> Table {
+    let base = results[exp.baseline_row].comm_cost.max(1) as f64;
+    let mut t = Table::new(&exp.title, &["LR", "Setting", "Validation acc.", "Comm. cost"]);
+    for r in results {
+        t.row(vec![
+            format!("{}", r.lr),
+            r.label.clone(),
+            acc_cell(r.acc_mean, r.acc_std),
+            pct_cell(100.0 * r.comm_cost as f64 / base),
+        ]);
+    }
+    t
+}
+
+/// Figure 1: the delta_l / (1 - lambda_l) curves from the *first* interval
+/// adjustment of a FedLAMA run.  Returns CSV: l, delta_l, one_minus_lambda_l.
+pub fn figure1_csv(coord: &Coordinator) -> Option<String> {
+    let adj = coord.schedule.adjustments.first()?;
+    let mut s = String::from("l,delta_l,one_minus_lambda_l\n");
+    for (i, (d, c)) in adj.delta_curve.iter().zip(&adj.comm_curve).enumerate() {
+        s.push_str(&format!("{},{:.6},{:.6}\n", i + 1, d, c));
+    }
+    Some(s)
+}
+
+/// Figures 2 & 3: per-layer sync counts and Eq. 9 data sizes for a set of
+/// finished runs (paper compares FedAvg vs FedLAMA side by side).
+pub fn figure23_csv(results: &[(&str, &RunMetrics)]) -> String {
+    let mut s = String::from("layer,dim");
+    for (tag, _) in results {
+        s.push_str(&format!(",{tag}_syncs,{tag}_cost"));
+    }
+    s.push('\n');
+    let n = results[0].1.per_group.len();
+    for g in 0..n {
+        let (name, dim, _, _) = &results[0].1.per_group[g];
+        s.push_str(&format!("{name},{dim}"));
+        for (_, m) in results {
+            let (_, _, syncs, cost) = &m.per_group[g];
+            s.push_str(&format!(",{syncs},{cost}"));
+        }
+        s.push('\n');
+    }
+    s
+}
+
+/// Figures 4-6: learning curves of several runs, merged on iteration.
+pub fn curves_csv(results: &[(&str, &RunMetrics)]) -> String {
+    let mut s = String::from("tag,iteration,round,train_loss,val_acc,comm_cost\n");
+    for (tag, m) in results {
+        for p in &m.curve {
+            s.push_str(&format!(
+                "{tag},{},{},{:.6},{},{}\n",
+                p.iteration,
+                p.round,
+                p.train_loss,
+                p.val_acc.map(|v| format!("{v:.4}")).unwrap_or_default(),
+                p.comm_cost
+            ));
+        }
+    }
+    s
+}
+
+/// ASCII rendering of Figure 1 (two curves against prefix length).
+pub fn figure1_ascii(coord: &Coordinator, width: usize, height: usize) -> Option<String> {
+    let adj = coord.schedule.adjustments.first()?;
+    let n = adj.delta_curve.len();
+    if n == 0 {
+        return None;
+    }
+    let mut grid = vec![vec![b' '; width]; height];
+    let put = |grid: &mut Vec<Vec<u8>>, x: f64, y: f64, ch: u8| {
+        let col = ((x * (width - 1) as f64).round() as usize).min(width - 1);
+        let row = (((1.0 - y) * (height - 1) as f64).round() as usize).min(height - 1);
+        grid[row][col] = ch;
+    };
+    for (i, (&d, &c)) in adj.delta_curve.iter().zip(&adj.comm_curve).enumerate() {
+        let x = i as f64 / (n - 1).max(1) as f64;
+        put(&mut grid, x, c, b'o'); // 1 - lambda_l
+        put(&mut grid, x, d, b'*'); // delta_l
+    }
+    let mut s = String::new();
+    s.push_str("Figure 1: * = delta_l (discrepancy share), o = 1-lambda_l (comm share)\n");
+    for row in grid {
+        s.push_str("  |");
+        s.push_str(std::str::from_utf8(&row).unwrap());
+        s.push('\n');
+    }
+    s.push_str(&format!("   +{}\n", "-".repeat(width)));
+    s.push_str(&format!("    1 .. L={n} (layers, sorted by d_l ascending)\n"));
+    Some(s)
+}
+
+/// Write a string to a file, creating parent dirs.
+pub fn write_report(path: &Path, content: &str) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, content)?;
+    Ok(())
+}
+
+/// Human summary line for one run (used by quickstart + CLI).
+pub fn summary_line(label: &str, m: &RunMetrics) -> String {
+    format!(
+        "{label:28} acc={:6.2}%  comm(Eq.9)={:>12}  syncs={:>6}  wall={:.1}s",
+        100.0 * m.final_acc,
+        m.total_comm_cost,
+        m.total_syncs,
+        m.wall_secs
+    )
+}
+
+/// Comm-efficiency comparison used in several reports: FedLAMA vs the two
+/// FedAvg reference points the paper anchors on.
+pub fn tradeoff_note(
+    fedavg_short: &RunMetrics,
+    fedavg_long: &RunMetrics,
+    fedlama: &RunMetrics,
+) -> String {
+    format!(
+        "FedLAMA comm = {:.1}% of FedAvg(tau'), accuracy {:+.2}pp vs FedAvg(tau'), \
+         {:+.2}pp vs FedAvg(phi*tau')",
+        100.0 * fedlama.total_comm_cost as f64 / fedavg_short.total_comm_cost.max(1) as f64,
+        100.0 * (fedlama.final_acc - fedavg_short.final_acc),
+        100.0 * (fedlama.final_acc - fedavg_long.final_acc),
+    )
+}
+
+/// Build the Policy for a figure run given CLI-ish params.
+pub fn policy_of(kind: &str, tau: usize, phi: usize) -> Option<Policy> {
+    match kind {
+        "fedavg" => Some(Policy::fedavg(tau)),
+        "fedlama" => Some(Policy::fedlama(tau, phi)),
+        "fedlama-acc" => Some(Policy::FedLama { tau, phi, accelerate: true }),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::CurvePoint;
+
+    fn fake_metrics(tag: &str) -> RunMetrics {
+        RunMetrics {
+            tag: tag.into(),
+            final_acc: 0.84,
+            total_comm_cost: 1000,
+            per_group: vec![
+                ("conv".into(), 100, 10, 1000),
+                ("fc".into(), 900, 5, 4500),
+            ],
+            curve: vec![CurvePoint {
+                iteration: 6,
+                round: 1,
+                train_loss: 2.0,
+                val_acc: Some(0.5),
+                val_loss: Some(1.9),
+                comm_cost: 500,
+            }],
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn figure23_merges_runs() {
+        let a = fake_metrics("fedavg");
+        let b = fake_metrics("fedlama");
+        let csv = figure23_csv(&[("fedavg", &a), ("fedlama", &b)]);
+        assert!(csv.starts_with("layer,dim,fedavg_syncs,fedavg_cost,fedlama_syncs,fedlama_cost"));
+        assert!(csv.contains("conv,100,10,1000,10,1000"));
+        assert_eq!(csv.lines().count(), 3);
+    }
+
+    #[test]
+    fn curves_csv_format() {
+        let a = fake_metrics("x");
+        let csv = curves_csv(&[("x", &a)]);
+        assert!(csv.contains("x,6,1,2.000000,0.5000,500"));
+    }
+
+    #[test]
+    fn summary_and_tradeoff() {
+        let short = RunMetrics { final_acc: 0.9, total_comm_cost: 1000, ..Default::default() };
+        let long = RunMetrics { final_acc: 0.8, total_comm_cost: 250, ..Default::default() };
+        let lama = RunMetrics { final_acc: 0.89, total_comm_cost: 400, ..Default::default() };
+        let note = tradeoff_note(&short, &long, &lama);
+        assert!(note.contains("40.0%"), "{note}");
+        assert!(note.contains("-1.00pp"), "{note}");
+        assert!(note.contains("+9.00pp"), "{note}");
+        assert!(summary_line("t", &short).contains("90.00%"));
+    }
+
+    #[test]
+    fn policy_parse() {
+        assert_eq!(policy_of("fedavg", 6, 2), Some(Policy::fedavg(6)));
+        assert_eq!(policy_of("fedlama", 6, 2), Some(Policy::fedlama(6, 2)));
+        assert!(policy_of("nope", 6, 2).is_none());
+    }
+}

@@ -1,0 +1,395 @@
+//! PJRT execution engine: load AOT HLO-text artifacts, compile once, run.
+//!
+//! Wraps the `xla` crate (xla_extension 0.5.1, CPU PJRT).  All entry points
+//! were lowered with `return_tuple=True`, so every execution returns one
+//! tuple literal which is decomposed into the per-output literals here.
+//!
+//! NOTE: `PjRtClient` is `Rc`-based (not `Send`), so an `Engine` and
+//! everything compiled from it must stay on one thread.  The cluster
+//! runtime (`runtime::cluster`) builds one engine per worker thread.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::manifest::Manifest;
+use super::tensor::{f32_literal, f32_scalar, i32_literal, scalar_f32, u32_scalar, HostTensor};
+
+/// Cumulative per-entry execution stats (count + wall seconds), used by the
+/// perf harness and the coordinator's overhead report.
+#[derive(Debug, Default, Clone)]
+pub struct RuntimeStats {
+    pub by_entry: HashMap<String, (u64, f64)>,
+}
+
+impl RuntimeStats {
+    fn record(&mut self, entry: &str, secs: f64) {
+        let e = self.by_entry.entry(entry.to_string()).or_insert((0, 0.0));
+        e.0 += 1;
+        e.1 += secs;
+    }
+    pub fn total_secs(&self) -> f64 {
+        self.by_entry.values().map(|(_, s)| s).sum()
+    }
+    pub fn count(&self, entry: &str) -> u64 {
+        self.by_entry.get(entry).map(|(c, _)| *c).unwrap_or(0)
+    }
+    pub fn secs(&self, entry: &str) -> f64 {
+        self.by_entry.get(entry).map(|(_, s)| *s).unwrap_or(0.0)
+    }
+}
+
+#[derive(Clone)]
+pub struct Engine {
+    client: PjRtClient,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        Ok(Engine { client: PjRtClient::cpu()? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO text file and compile it for this device.
+    pub fn load_hlo(&self, path: &Path) -> Result<Executable> {
+        let t0 = Instant::now();
+        let proto = HloModuleProto::from_text_file(path.to_str().context("non-utf8 path")?)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        log::debug!("compiled {} in {:.2}s", path.display(), t0.elapsed().as_secs_f64());
+        Ok(Executable { exe, name: path.file_stem().unwrap_or_default().to_string_lossy().into_owned() })
+    }
+}
+
+pub struct Executable {
+    exe: PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute and decompose the tuple result into per-output literals.
+    pub fn run(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        let bufs = self.exe.execute::<Literal>(inputs)?;
+        let mut lit = bufs[0][0].to_literal_sync()?;
+        Ok(lit.decompose_tuple()?)
+    }
+
+    /// Execute with borrowed inputs.
+    pub fn run_ref(&self, inputs: &[&Literal]) -> Result<Vec<Literal>> {
+        let bufs = self.exe.execute::<&Literal>(inputs)?;
+        let mut lit = bufs[0][0].to_literal_sync()?;
+        Ok(lit.decompose_tuple()?)
+    }
+}
+
+/// A model's complete compiled runtime: every AOT entry point + the Pallas
+/// aggregation kernels, plus parameter-shape knowledge from the manifest.
+pub struct ModelRuntime {
+    pub engine: Engine,
+    pub manifest: Rc<Manifest>,
+    init: Executable,
+    train_step: Executable,
+    train_chunk: Option<Executable>,
+    eval_step: Executable,
+    /// Lazily compiled: train_step_prox, train_step_scaffold, grad_step.
+    lazy: RefCell<HashMap<&'static str, Rc<Executable>>>,
+    /// Pallas fused aggregation kernels, compiled on first use per (dim, m).
+    agg: RefCell<HashMap<(usize, usize), Option<Rc<Executable>>>>,
+    pub stats: RefCell<RuntimeStats>,
+}
+
+impl ModelRuntime {
+    /// Compile the core entry points for the model artifacts in `model_dir`.
+    pub fn load(model_dir: &Path) -> Result<ModelRuntime> {
+        let engine = Engine::cpu()?;
+        Self::load_with_engine(engine, model_dir)
+    }
+
+    pub fn load_with_engine(engine: Engine, model_dir: &Path) -> Result<ModelRuntime> {
+        let manifest = Rc::new(Manifest::load(model_dir)?);
+        let init = engine.load_hlo(&manifest.entry_path("init")?)?;
+        let train_step = engine.load_hlo(&manifest.entry_path("train_step")?)?;
+        let train_chunk = match manifest.entry_path("train_chunk") {
+            Ok(p) if p.exists() => Some(engine.load_hlo(&p)?),
+            _ => None,
+        };
+        let eval_step = engine.load_hlo(&manifest.entry_path("eval_step")?)?;
+        Ok(ModelRuntime {
+            engine,
+            manifest,
+            init,
+            train_step,
+            train_chunk,
+            eval_step,
+            lazy: RefCell::new(HashMap::new()),
+            agg: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    pub fn chunk_k(&self) -> usize {
+        if self.train_chunk.is_some() {
+            self.manifest.chunk_k
+        } else {
+            1
+        }
+    }
+
+    fn lazy_entry(&self, name: &'static str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.lazy.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let exe = Rc::new(self.engine.load_hlo(&self.manifest.entry_path(name)?)?);
+        self.lazy.borrow_mut().insert(name, exe.clone());
+        Ok(exe)
+    }
+
+    /// Deterministic parameter init from a seed.
+    pub fn init_params(&self, seed: u32) -> Result<Vec<HostTensor>> {
+        let t0 = Instant::now();
+        let outs = self.init.run(&[u32_scalar(seed)])?;
+        self.stats.borrow_mut().record("init", t0.elapsed().as_secs_f64());
+        anyhow::ensure!(outs.len() == self.manifest.num_tensors(), "init arity");
+        outs.iter().map(HostTensor::from_literal).collect()
+    }
+
+    /// One local SGD step in-place; returns the batch loss.
+    pub fn train_step(
+        &self,
+        params: &mut [HostTensor],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+    ) -> Result<f32> {
+        let t0 = Instant::now();
+        let m = &self.manifest;
+        let b = m.batch_size;
+        let mut inputs = Vec::with_capacity(params.len() + 3);
+        for p in params.iter() {
+            inputs.push(p.to_literal()?);
+        }
+        let mut xshape = vec![b];
+        xshape.extend_from_slice(&m.input_shape);
+        inputs.push(f32_literal(&xshape, x)?);
+        inputs.push(i32_literal(&[b], y)?);
+        inputs.push(f32_scalar(lr));
+        let outs = self.train_step.run(&inputs)?;
+        anyhow::ensure!(outs.len() == params.len() + 1, "train_step arity");
+        for (p, lit) in params.iter_mut().zip(&outs) {
+            lit.copy_raw_to(&mut p.data)?;
+        }
+        let loss = scalar_f32(&outs[params.len()])?;
+        self.stats.borrow_mut().record("train_step", t0.elapsed().as_secs_f64());
+        Ok(loss)
+    }
+
+    /// K fused local SGD steps (K = manifest.chunk_k); xs is [K*B*inp],
+    /// ys is [K*B].  Returns the K per-step losses.
+    pub fn train_chunk(
+        &self,
+        params: &mut [HostTensor],
+        xs: &[f32],
+        ys: &[i32],
+        lr: f32,
+    ) -> Result<Vec<f32>> {
+        let chunk = self.train_chunk.as_ref().context("no train_chunk artifact")?;
+        let t0 = Instant::now();
+        let m = &self.manifest;
+        let (k, b) = (m.chunk_k, m.batch_size);
+        let mut inputs = Vec::with_capacity(params.len() + 3);
+        for p in params.iter() {
+            inputs.push(p.to_literal()?);
+        }
+        let mut xshape = vec![k, b];
+        xshape.extend_from_slice(&m.input_shape);
+        inputs.push(f32_literal(&xshape, xs)?);
+        inputs.push(i32_literal(&[k, b], ys)?);
+        inputs.push(f32_scalar(lr));
+        let outs = chunk.run(&inputs)?;
+        anyhow::ensure!(outs.len() == params.len() + 1, "train_chunk arity");
+        for (p, lit) in params.iter_mut().zip(&outs) {
+            lit.copy_raw_to(&mut p.data)?;
+        }
+        let losses = outs[params.len()].to_vec::<f32>()?;
+        self.stats.borrow_mut().record("train_chunk", t0.elapsed().as_secs_f64());
+        Ok(losses)
+    }
+
+    /// FedProx local step: adds the mu/2 * ||p - global||^2 term.
+    pub fn train_step_prox(
+        &self,
+        params: &mut [HostTensor],
+        global: &[HostTensor],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+        mu: f32,
+    ) -> Result<f32> {
+        let exe = self.lazy_entry("train_step_prox")?;
+        let t0 = Instant::now();
+        let m = &self.manifest;
+        let b = m.batch_size;
+        let mut inputs = Vec::with_capacity(2 * params.len() + 4);
+        for p in params.iter() {
+            inputs.push(p.to_literal()?);
+        }
+        for g in global.iter() {
+            inputs.push(g.to_literal()?);
+        }
+        let mut xshape = vec![b];
+        xshape.extend_from_slice(&m.input_shape);
+        inputs.push(f32_literal(&xshape, x)?);
+        inputs.push(i32_literal(&[b], y)?);
+        inputs.push(f32_scalar(lr));
+        inputs.push(f32_scalar(mu));
+        let outs = exe.run(&inputs)?;
+        anyhow::ensure!(outs.len() == params.len() + 1, "train_step_prox arity");
+        for (p, lit) in params.iter_mut().zip(&outs) {
+            lit.copy_raw_to(&mut p.data)?;
+        }
+        let loss = scalar_f32(&outs[params.len()])?;
+        self.stats.borrow_mut().record("train_step_prox", t0.elapsed().as_secs_f64());
+        Ok(loss)
+    }
+
+    /// SCAFFOLD local step: p <- p - lr*(g - c_i + c).
+    pub fn train_step_scaffold(
+        &self,
+        params: &mut [HostTensor],
+        ci: &[HostTensor],
+        c: &[HostTensor],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+    ) -> Result<f32> {
+        let exe = self.lazy_entry("train_step_scaffold")?;
+        let t0 = Instant::now();
+        let m = &self.manifest;
+        let b = m.batch_size;
+        let mut inputs = Vec::with_capacity(3 * params.len() + 3);
+        for set in [&params[..], ci, c] {
+            for p in set.iter() {
+                inputs.push(p.to_literal()?);
+            }
+        }
+        let mut xshape = vec![b];
+        xshape.extend_from_slice(&m.input_shape);
+        inputs.push(f32_literal(&xshape, x)?);
+        inputs.push(i32_literal(&[b], y)?);
+        inputs.push(f32_scalar(lr));
+        let outs = exe.run(&inputs)?;
+        anyhow::ensure!(outs.len() == params.len() + 1, "train_step_scaffold arity");
+        for (p, lit) in params.iter_mut().zip(&outs) {
+            lit.copy_raw_to(&mut p.data)?;
+        }
+        let loss = scalar_f32(&outs[params.len()])?;
+        self.stats.borrow_mut().record("train_step_scaffold", t0.elapsed().as_secs_f64());
+        Ok(loss)
+    }
+
+    /// Full-batch gradients (FedNova + gradient tests).
+    pub fn grad_step(
+        &self,
+        params: &[HostTensor],
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<(Vec<HostTensor>, f32)> {
+        let exe = self.lazy_entry("grad_step")?;
+        let t0 = Instant::now();
+        let m = &self.manifest;
+        let b = m.batch_size;
+        let mut inputs = Vec::with_capacity(params.len() + 2);
+        for p in params.iter() {
+            inputs.push(p.to_literal()?);
+        }
+        let mut xshape = vec![b];
+        xshape.extend_from_slice(&m.input_shape);
+        inputs.push(f32_literal(&xshape, x)?);
+        inputs.push(i32_literal(&[b], y)?);
+        let outs = exe.run(&inputs)?;
+        anyhow::ensure!(outs.len() == params.len() + 1, "grad_step arity");
+        let grads =
+            outs[..params.len()].iter().map(HostTensor::from_literal).collect::<Result<Vec<_>>>()?;
+        let loss = scalar_f32(&outs[params.len()])?;
+        self.stats.borrow_mut().record("grad_step", t0.elapsed().as_secs_f64());
+        Ok((grads, loss))
+    }
+
+    /// Evaluate one batch: returns (correct_count, loss_sum).
+    pub fn eval_step(&self, params: &[HostTensor], x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
+        let t0 = Instant::now();
+        let m = &self.manifest;
+        let b = m.eval_batch_size;
+        let mut inputs = Vec::with_capacity(params.len() + 2);
+        for p in params.iter() {
+            inputs.push(p.to_literal()?);
+        }
+        let mut xshape = vec![b];
+        xshape.extend_from_slice(&m.input_shape);
+        inputs.push(f32_literal(&xshape, x)?);
+        inputs.push(i32_literal(&[b], y)?);
+        let outs = self.eval_step.run(&inputs)?;
+        anyhow::ensure!(outs.len() == 2, "eval_step arity");
+        let res = (scalar_f32(&outs[0])?, scalar_f32(&outs[1])?);
+        self.stats.borrow_mut().record("eval_step", t0.elapsed().as_secs_f64());
+        Ok(res)
+    }
+
+    /// The Pallas fused aggregation kernel for (dim, m) if AOT-compiled;
+    /// compiled once on first use, then cached.  Returns None when the
+    /// artifact set has no kernel for this configuration (callers fall
+    /// back to the native backend).
+    pub fn agg_kernel(&self, dim: usize, m: usize) -> Option<Rc<Executable>> {
+        if let Some(cached) = self.agg.borrow().get(&(dim, m)) {
+            return cached.clone();
+        }
+        let compiled = self.manifest.agg_path(dim, m).and_then(|p| {
+            if !p.exists() {
+                return None;
+            }
+            match self.engine.load_hlo(&p) {
+                Ok(e) => Some(Rc::new(e)),
+                Err(e) => {
+                    log::warn!("agg kernel {} failed to compile: {e:#}", p.display());
+                    None
+                }
+            }
+        });
+        self.agg.borrow_mut().insert((dim, m), compiled.clone());
+        compiled
+    }
+
+    /// Run the fused Pallas aggregation: stack is m*dim (row-major),
+    /// weights is length m.  Returns (u[dim], discrepancy).
+    pub fn run_agg(
+        &self,
+        exe: &Executable,
+        stack: &[f32],
+        weights: &[f32],
+        dim: usize,
+    ) -> Result<(Vec<f32>, f32)> {
+        let t0 = Instant::now();
+        let m = weights.len();
+        debug_assert_eq!(stack.len(), m * dim);
+        let xs = f32_literal(&[m, dim], stack)?;
+        let ws = f32_literal(&[m], weights)?;
+        let outs = exe.run(&[xs, ws])?;
+        anyhow::ensure!(outs.len() == 2, "agg arity");
+        let u = outs[0].to_vec::<f32>()?;
+        let disc = scalar_f32(&outs[1])?;
+        self.stats.borrow_mut().record("agg", t0.elapsed().as_secs_f64());
+        Ok((u, disc))
+    }
+}

@@ -1,0 +1,249 @@
+//! Artifact manifest: what `python/compile/aot.py` emitted for a model.
+//!
+//! The manifest is the single source of truth for parameter order, shapes,
+//! FedLAMA aggregation units ("groups" = the paper's layers), batch sizes,
+//! and which HLO files implement which entry point.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One parameter tensor of the model.
+#[derive(Debug, Clone)]
+pub struct ParamInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dim: usize,
+    pub group: String,
+}
+
+/// One aggregation unit (the paper's "layer"): a set of parameter tensors
+/// that are always synchronized together.
+#[derive(Debug, Clone)]
+pub struct GroupInfo {
+    pub name: String,
+    /// Indices into `Manifest::params`.
+    pub params: Vec<usize>,
+    /// Total number of scalars in the unit.
+    pub dim: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: String,
+    pub base: String,
+    pub batch_size: usize,
+    pub eval_batch_size: usize,
+    pub chunk_k: usize,
+    pub input_shape: Vec<usize>,
+    pub num_classes: usize,
+    pub num_params: usize,
+    pub params: Vec<ParamInfo>,
+    pub groups: Vec<GroupInfo>,
+    pub entries: BTreeMap<String, String>,
+    /// Pallas aggregation kernels: dim -> (m -> file name).
+    pub agg_by_dim: BTreeMap<usize, BTreeMap<usize, String>>,
+}
+
+impl Manifest {
+    pub fn load(model_dir: &Path) -> Result<Manifest> {
+        let path = model_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        Self::from_json(&j, model_dir)
+    }
+
+    pub fn from_json(j: &Json, dir: &Path) -> Result<Manifest> {
+        let u = |k: &str| -> Result<usize> {
+            j.req(k)?.as_usize().ok_or_else(|| anyhow::anyhow!("{k} not a usize"))
+        };
+        let s = |k: &str| -> Result<String> {
+            Ok(j.req(k)?.as_str().ok_or_else(|| anyhow::anyhow!("{k} not a string"))?.to_string())
+        };
+        let params = j
+            .req("params")?
+            .as_arr()
+            .context("params not an array")?
+            .iter()
+            .map(|p| {
+                Ok(ParamInfo {
+                    name: p.req("name")?.as_str().unwrap_or_default().to_string(),
+                    shape: p
+                        .req("shape")?
+                        .as_arr()
+                        .context("shape")?
+                        .iter()
+                        .filter_map(|v| v.as_usize())
+                        .collect(),
+                    dim: p.req("dim")?.as_usize().context("dim")?,
+                    group: p.req("group")?.as_str().unwrap_or_default().to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let groups = j
+            .req("groups")?
+            .as_arr()
+            .context("groups not an array")?
+            .iter()
+            .map(|g| {
+                Ok(GroupInfo {
+                    name: g.req("name")?.as_str().unwrap_or_default().to_string(),
+                    params: g
+                        .req("params")?
+                        .as_arr()
+                        .context("group params")?
+                        .iter()
+                        .filter_map(|v| v.as_usize())
+                        .collect(),
+                    dim: g.req("dim")?.as_usize().context("group dim")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let entries = j
+            .req("entries")?
+            .as_obj()
+            .context("entries not an object")?
+            .iter()
+            .map(|(k, v)| (k.clone(), v.as_str().unwrap_or_default().to_string()))
+            .collect();
+        let mut agg_by_dim = BTreeMap::new();
+        if let Some(by_dim) = j.req("agg")?.get("by_dim").and_then(|v| v.as_obj()) {
+            for (dim, files) in by_dim {
+                let dim: usize = dim.parse().context("agg dim key")?;
+                let mut by_m = BTreeMap::new();
+                for (m, f) in files.as_obj().context("agg files")? {
+                    by_m.insert(m.parse::<usize>()?, f.as_str().unwrap_or_default().to_string());
+                }
+                agg_by_dim.insert(dim, by_m);
+            }
+        }
+        let m = Manifest {
+            dir: dir.to_path_buf(),
+            model: s("model")?,
+            base: s("base")?,
+            batch_size: u("batch_size")?,
+            eval_batch_size: u("eval_batch_size")?,
+            chunk_k: u("chunk_k").unwrap_or(1),
+            input_shape: j
+                .req("input_shape")?
+                .as_arr()
+                .context("input_shape")?
+                .iter()
+                .filter_map(|v| v.as_usize())
+                .collect(),
+            num_classes: u("num_classes")?,
+            num_params: u("num_params")?,
+            params,
+            groups,
+            entries,
+            agg_by_dim,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Internal consistency: group dims match member params, indices valid.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(!self.params.is_empty(), "no params");
+        anyhow::ensure!(!self.groups.is_empty(), "no groups");
+        for p in &self.params {
+            let prod: usize = p.shape.iter().product();
+            anyhow::ensure!(prod == p.dim, "param {} dim {} != shape product {prod}", p.name, p.dim);
+        }
+        let mut seen = vec![false; self.params.len()];
+        for g in &self.groups {
+            let mut dim = 0;
+            for &i in &g.params {
+                anyhow::ensure!(i < self.params.len(), "group {} bad index {i}", g.name);
+                anyhow::ensure!(!seen[i], "param {i} in two groups");
+                seen[i] = true;
+                dim += self.params[i].dim;
+            }
+            anyhow::ensure!(dim == g.dim, "group {} dim mismatch", g.name);
+        }
+        anyhow::ensure!(seen.iter().all(|&b| b), "some params not in any group");
+        let total: usize = self.params.iter().map(|p| p.dim).sum();
+        anyhow::ensure!(total == self.num_params, "num_params mismatch");
+        Ok(())
+    }
+
+    pub fn entry_path(&self, name: &str) -> Result<PathBuf> {
+        let f = self
+            .entries
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("no entry {name:?} in manifest for {}", self.model))?;
+        Ok(self.dir.join(f))
+    }
+
+    /// Path of the Pallas aggregation kernel for (group dim, m active rows),
+    /// if one was AOT-compiled.
+    pub fn agg_path(&self, dim: usize, m: usize) -> Option<PathBuf> {
+        self.agg_by_dim.get(&dim).and_then(|by_m| by_m.get(&m)).map(|f| self.dir.join(f))
+    }
+
+    pub fn num_tensors(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Largest group dim (used for scratch preallocation).
+    pub fn max_group_dim(&self) -> usize {
+        self.groups.iter().map(|g| g.dim).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_json() -> Json {
+        Json::parse(
+            r#"{
+              "model": "toy", "base": "mlp", "batch_size": 4, "eval_batch_size": 8,
+              "chunk_k": 2,
+              "input_shape": [3], "num_classes": 2, "num_param_tensors": 2,
+              "num_params": 8,
+              "params": [
+                {"name": "fc.w", "shape": [3, 2], "dim": 6, "group": "fc"},
+                {"name": "fc.b", "shape": [2], "dim": 2, "group": "fc"}
+              ],
+              "groups": [{"name": "fc", "params": [0, 1], "dim": 8}],
+              "entries": {"init": "init.hlo.txt"},
+              "agg": {"m_values": [4], "by_dim": {"8": {"4": "agg_d8_m4.hlo.txt"}}}
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_and_validates() {
+        let m = Manifest::from_json(&toy_json(), Path::new("/tmp/x")).unwrap();
+        assert_eq!(m.model, "toy");
+        assert_eq!(m.num_tensors(), 2);
+        assert_eq!(m.groups[0].dim, 8);
+        assert_eq!(m.chunk_k, 2);
+        assert_eq!(m.agg_path(8, 4).unwrap(), Path::new("/tmp/x/agg_d8_m4.hlo.txt"));
+        assert!(m.agg_path(8, 5).is_none());
+        assert!(m.agg_path(9, 4).is_none());
+        assert_eq!(m.entry_path("init").unwrap(), Path::new("/tmp/x/init.hlo.txt"));
+        assert!(m.entry_path("nope").is_err());
+        assert_eq!(m.max_group_dim(), 8);
+    }
+
+    #[test]
+    fn rejects_dim_mismatch() {
+        let mut j = toy_json();
+        if let Json::Obj(pairs) = &mut j {
+            for (k, v) in pairs.iter_mut() {
+                if k == "num_params" {
+                    *v = Json::Num(9.0);
+                }
+            }
+        }
+        assert!(Manifest::from_json(&j, Path::new("/tmp/x")).is_err());
+    }
+}

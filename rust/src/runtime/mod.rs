@@ -1,0 +1,12 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! See /opt/xla-example/load_hlo for the reference wiring and DESIGN.md §5
+//! for the interchange format.
+
+pub mod engine;
+pub mod manifest;
+pub mod tensor;
+
+pub use engine::{Engine, Executable, ModelRuntime, RuntimeStats};
+pub use manifest::{GroupInfo, Manifest, ParamInfo};
+pub use tensor::HostTensor;

@@ -1,0 +1,139 @@
+//! Tiny CLI argument parser (no `clap` offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments.  Typed getters with defaults; unknown-flag detection.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    seen: Vec<String>,
+}
+
+impl Args {
+    pub fn parse_from<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                let (key, val) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let val = match val {
+                    Some(v) => v,
+                    None => {
+                        // consume the next token as the value unless it is
+                        // itself a flag -> boolean switch
+                        match it.peek() {
+                            Some(nxt) if !nxt.starts_with("--") => it.next().unwrap(),
+                            _ => "true".to_string(),
+                        }
+                    }
+                };
+                out.seen.push(key.clone());
+                out.flags.insert(key, val);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn parse() -> Args {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+    pub fn f32_or(&self, key: &str, default: f32) -> f32 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).map(|v| v == "true" || v == "1" || v == "yes").unwrap_or(default)
+    }
+    /// Comma-separated list, e.g. `--phi 2,4`.
+    pub fn list_or<T: std::str::FromStr>(&self, key: &str, default: &[T]) -> Vec<T>
+    where
+        T: Clone,
+    {
+        match self.get(key) {
+            None => default.to_vec(),
+            Some(v) => v.split(',').filter_map(|s| s.trim().parse().ok()).collect(),
+        }
+    }
+    /// Keys the user actually passed (for unknown-flag diagnostics).
+    pub fn given_keys(&self) -> &[String] {
+        &self.seen
+    }
+    /// Error on any flag not in `known` (catches typos in experiment scripts).
+    pub fn check_known(&self, known: &[&str]) -> anyhow::Result<()> {
+        for k in &self.seen {
+            if !known.contains(&k.as_str()) {
+                anyhow::bail!("unknown flag --{k}; known: {}", known.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn parses_forms() {
+        let a = args("train pos1 pos2 --model resnet20 --tau=6 --phi 4 --verbose");
+        assert_eq!(a.positional, vec!["train", "pos1", "pos2"]);
+        assert_eq!(a.str_or("model", "x"), "resnet20");
+        assert_eq!(a.usize_or("tau", 0), 6);
+        assert_eq!(a.usize_or("phi", 0), 4);
+        assert!(a.bool_or("verbose", false));
+        assert!(!a.has("missing"));
+    }
+
+    #[test]
+    fn defaults_and_lists() {
+        let a = args("--phis 2,4,8 --lr 0.8");
+        assert_eq!(a.list_or::<usize>("phis", &[]), vec![2, 4, 8]);
+        assert_eq!(a.list_or::<usize>("taus", &[6]), vec![6]);
+        assert!((a.f64_or("lr", 0.0) - 0.8).abs() < 1e-12);
+        assert_eq!(a.usize_or("clients", 16), 16);
+    }
+
+    #[test]
+    fn boolean_before_flag() {
+        let a = args("--dry-run --out x.json");
+        assert!(a.bool_or("dry-run", false));
+        assert_eq!(a.str_or("out", ""), "x.json");
+    }
+
+    #[test]
+    fn unknown_flags_detected() {
+        let a = args("--model mlp --typo 3");
+        assert!(a.check_known(&["model"]).is_err());
+        assert!(a.check_known(&["model", "typo"]).is_ok());
+    }
+}

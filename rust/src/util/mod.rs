@@ -1,0 +1,10 @@
+//! Zero-dependency substrates (see DESIGN.md §4: the offline vendor set has
+//! no serde_json / clap / rand / rayon / proptest, so these are built from
+//! scratch and tested here).
+
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,92 @@
+//! Scoped parallel-map over clients.
+//!
+//! Substrate: no rayon/tokio offline, so client fan-out uses
+//! `std::thread::scope` with a work-stealing-free static chunking that is
+//! deterministic (each worker owns a fixed index stride).  The PJRT CPU
+//! client is itself multi-threaded for large ops, so the pool is for
+//! overlapping many small per-client executions.
+
+/// Parallel map `f(i)` for `i in 0..n`, preserving output order.
+/// `threads == 0 or 1` runs inline (deterministic and allocation-free).
+pub fn par_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let chunks = split_mut_indexed(&mut out, threads);
+    std::thread::scope(|s| {
+        for (offset, chunk) in chunks {
+            let f = &f;
+            s.spawn(move || {
+                for (j, slot) in chunk.iter_mut().enumerate() {
+                    *slot = Some(f(offset + j));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|v| v.expect("par_map worker panicked")).collect()
+}
+
+/// Split a mutable slice into ~equal chunks, tagging each with its offset.
+fn split_mut_indexed<T>(xs: &mut [T], parts: usize) -> Vec<(usize, &mut [T])> {
+    let n = xs.len();
+    let base = n / parts;
+    let rem = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut rest = xs;
+    let mut offset = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < rem);
+        let (head, tail) = rest.split_at_mut(len);
+        if !head.is_empty() {
+            out.push((offset, head));
+        }
+        offset += len;
+        rest = tail;
+    }
+    out
+}
+
+/// Number of worker threads to use by default: leave two cores for the
+/// PJRT runtime's own pool.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|p| p.get().saturating_sub(2).max(1)).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn preserves_order() {
+        let out = par_map(100, 4, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn runs_all_once() {
+        let counter = AtomicUsize::new(0);
+        let out = par_map(37, 5, |i| {
+            counter.fetch_add(1, Ordering::SeqCst);
+            i
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 37);
+        assert_eq!(out.len(), 37);
+    }
+
+    #[test]
+    fn inline_path_and_empty() {
+        assert_eq!(par_map(3, 1, |i| i + 1), vec![1, 2, 3]);
+        assert_eq!(par_map(0, 8, |i| i), Vec::<usize>::new());
+        assert_eq!(par_map(2, 100, |i| i), vec![0, 1]); // threads clamped to n
+    }
+}

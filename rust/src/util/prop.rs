@@ -1,0 +1,235 @@
+//! Mini property-based testing framework (no `proptest` offline).
+//!
+//! `forall(cases, gen, prop)` runs `prop` on `cases` randomly generated
+//! inputs; on failure it greedily shrinks the input via the strategy's
+//! `shrink` before reporting, and always reports the failing seed so runs
+//! reproduce.  Strategies compose with `map`/`filter`/tuples.
+
+use crate::util::rng::Rng;
+
+pub trait Strategy {
+    type Value: std::fmt::Debug + Clone;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate smaller values; empty = fully shrunk.
+    fn shrink(&self, value: &Self::Value) -> Vec<Self::Value> {
+        let _ = value;
+        Vec::new()
+    }
+}
+
+/// Run a property over `cases` random inputs (seed fixed by caller for
+/// reproducibility).  Panics with the shrunk counterexample on failure.
+pub fn forall<S, F>(seed: u64, cases: usize, strat: &S, prop: F)
+where
+    S: Strategy,
+    F: Fn(&S::Value) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = strat.generate(&mut rng);
+        if let Err(msg) = prop(&input) {
+            let (shrunk, msg) = shrink_loop(strat, input, msg, &prop);
+            panic!(
+                "property failed (seed={seed}, case={case}): {msg}\n  counterexample (shrunk): {shrunk:?}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<S, F>(strat: &S, mut cur: S::Value, mut msg: String, prop: &F) -> (S::Value, String)
+where
+    S: Strategy,
+    F: Fn(&S::Value) -> Result<(), String>,
+{
+    // Greedy descent, bounded to avoid pathological loops.
+    'outer: for _ in 0..200 {
+        for cand in strat.shrink(&cur) {
+            if let Err(m) = prop(&cand) {
+                cur = cand;
+                msg = m;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    (cur, msg)
+}
+
+// ---------------------------------------------------------------------------
+// Base strategies
+// ---------------------------------------------------------------------------
+
+pub struct UsizeIn {
+    pub lo: usize,
+    pub hi: usize, // inclusive
+}
+
+impl Strategy for UsizeIn {
+    type Value = usize;
+    fn generate(&self, rng: &mut Rng) -> usize {
+        self.lo + rng.below(self.hi - self.lo + 1)
+    }
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (v - self.lo) / 2);
+            out.push(v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+pub struct F64In {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Strategy for F64In {
+    type Value = f64;
+    fn generate(&self, rng: &mut Rng) -> f64 {
+        rng.range_f64(self.lo, self.hi)
+    }
+    fn shrink(&self, v: &f64) -> Vec<f64> {
+        let mid = (self.lo + self.hi) / 2.0;
+        if (*v - self.lo).abs() > 1e-9 {
+            vec![self.lo, self.lo + (v - self.lo) / 2.0, mid.min(*v)]
+        } else {
+            vec![]
+        }
+    }
+}
+
+/// Vector of f64 with length in [min_len, max_len].
+pub struct VecF64 {
+    pub min_len: usize,
+    pub max_len: usize,
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Strategy for VecF64 {
+    type Value = Vec<f64>;
+    fn generate(&self, rng: &mut Rng) -> Vec<f64> {
+        let n = self.min_len + rng.below(self.max_len - self.min_len + 1);
+        (0..n).map(|_| rng.range_f64(self.lo, self.hi)).collect()
+    }
+    fn shrink(&self, v: &Vec<f64>) -> Vec<Vec<f64>> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            out.push(v[..v.len() - 1].to_vec());
+            out.push(v[..self.min_len.max(v.len() / 2)].to_vec());
+        }
+        // zero-out elements one at a time
+        for i in 0..v.len().min(8) {
+            if v[i] != self.lo {
+                let mut w = v.clone();
+                w[i] = self.lo;
+                out.push(w);
+            }
+        }
+        out
+    }
+}
+
+/// Pair of independent strategies.
+pub struct Pair<A, B>(pub A, pub B);
+
+impl<A: Strategy, B: Strategy> Strategy for Pair<A, B> {
+    type Value = (A::Value, B::Value);
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> =
+            self.0.shrink(&v.0).into_iter().map(|a| (a, v.1.clone())).collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+/// Map a strategy through a function (no shrinking through the map).
+pub struct Map<S, F> {
+    pub inner: S,
+    pub f: F,
+}
+
+impl<S: Strategy, T: std::fmt::Debug + Clone, F: Fn(S::Value) -> T> Strategy for Map<S, F> {
+    type Value = T;
+    fn generate(&self, rng: &mut Rng) -> T {
+        (self.f)(self.inner.generate(rng))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_true_property() {
+        forall(1, 200, &UsizeIn { lo: 0, hi: 100 }, |&v| {
+            if v <= 100 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "counterexample")]
+    fn fails_and_reports() {
+        forall(2, 200, &UsizeIn { lo: 0, hi: 100 }, |&v| {
+            if v < 50 {
+                Ok(())
+            } else {
+                Err(format!("{v} >= 50"))
+            }
+        });
+    }
+
+    #[test]
+    fn shrinks_toward_minimum() {
+        // capture the panic message and check the counterexample is small
+        let result = std::panic::catch_unwind(|| {
+            forall(3, 500, &UsizeIn { lo: 0, hi: 1000 }, |&v| {
+                if v < 37 {
+                    Ok(())
+                } else {
+                    Err("too big".into())
+                }
+            });
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // greedy shrink should land on exactly 37 (smallest failing value)
+        assert!(msg.contains("(shrunk): 37"), "got: {msg}");
+    }
+
+    #[test]
+    fn vec_strategy_respects_bounds() {
+        forall(4, 100, &VecF64 { min_len: 2, max_len: 9, lo: -1.0, hi: 1.0 }, |v| {
+            if v.len() >= 2 && v.len() <= 9 && v.iter().all(|x| (-1.0..1.0).contains(x)) {
+                Ok(())
+            } else {
+                Err(format!("bad vec {v:?}"))
+            }
+        });
+    }
+
+    #[test]
+    fn pair_strategy() {
+        forall(
+            5,
+            100,
+            &Pair(UsizeIn { lo: 1, hi: 8 }, F64In { lo: 0.0, hi: 1.0 }),
+            |(n, x)| {
+                if *n >= 1 && *x < 1.0 {
+                    Ok(())
+                } else {
+                    Err("bad pair".into())
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,296 @@
+//! Deterministic PRNG + distributions.
+//!
+//! Substrate built from scratch (no `rand`/`rand_distr` in the offline
+//! vendor set).  Core generator is SplitMix64 feeding xoshiro256**, the
+//! usual high-quality non-crypto pairing.  Distributions implemented on
+//! top: uniform, normal (Box–Muller), gamma (Marsaglia–Tsang), Dirichlet
+//! (normalized gammas — what the paper uses for non-IID label skew) and
+//! categorical sampling.
+
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+    /// cached second Box–Muller variate
+    spare: Option<f64>,
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        Rng { s: [splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm)], spare: None }
+    }
+
+    /// Independent child stream (for per-client determinism regardless of
+    /// scheduling order).
+    pub fn fork(&self, stream: u64) -> Rng {
+        let mut sm = self.s[0] ^ stream.wrapping_mul(0xA0761D6478BD642F).wrapping_add(0xE7037ED1A0B428DB);
+        Rng { s: [splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm)], spare: None }
+    }
+
+    /// xoshiro256** next
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire).
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        let n = n as u64;
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(n as u128);
+            let lo = m as u64;
+            if lo >= n.wrapping_neg() % n || n.is_power_of_two() {
+                return (m >> 64) as usize;
+            }
+            if lo >= n {
+                return (m >> 64) as usize;
+            }
+        }
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Standard normal via Box–Muller (cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(v) = self.spare.take() {
+            return v;
+        }
+        loop {
+            let u1 = self.f64();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.f64();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+            self.spare = Some(r * s);
+            return r * c;
+        }
+    }
+
+    pub fn normal_f32(&mut self, mean: f32, std: f32) -> f32 {
+        mean + std * self.normal() as f32
+    }
+
+    /// Gamma(shape k, scale 1) via Marsaglia–Tsang; boost for k < 1.
+    pub fn gamma(&mut self, k: f64) -> f64 {
+        debug_assert!(k > 0.0);
+        if k < 1.0 {
+            // Gamma(k) = Gamma(k+1) * U^(1/k)
+            let u = self.f64().max(f64::MIN_POSITIVE);
+            return self.gamma(k + 1.0) * u.powf(1.0 / k);
+        }
+        let d = k - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.f64();
+            if u < 1.0 - 0.0331 * x.powi(4) {
+                return d * v;
+            }
+            if u > 0.0 && u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+                return d * v;
+            }
+        }
+    }
+
+    /// Dirichlet(alpha * 1_n): the label-skew generator the paper uses.
+    pub fn dirichlet(&mut self, alpha: f64, n: usize) -> Vec<f64> {
+        let mut g: Vec<f64> = (0..n).map(|_| self.gamma(alpha).max(1e-300)).collect();
+        let sum: f64 = g.iter().sum();
+        for v in &mut g {
+            *v /= sum;
+        }
+        g
+    }
+
+    /// Sample an index from unnormalized non-negative weights.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        debug_assert!(total > 0.0, "categorical needs positive mass");
+        let mut r = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            r -= w;
+            if r <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            xs.swap(i, self.below(i + 1));
+        }
+    }
+
+    /// k distinct indices out of [0, n) (partial Fisher–Yates).
+    pub fn choose_k(&mut self, n: usize, k: usize) -> Vec<usize> {
+        debug_assert!(k <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_distinct_streams() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        assert_eq!(a.next_u64(), b.next_u64());
+        let mut c = Rng::new(8);
+        assert_ne!(a.next_u64(), c.next_u64());
+        let mut f1 = Rng::new(7).fork(1);
+        let mut f2 = Rng::new(7).fork(2);
+        assert_ne!(f1.next_u64(), f2.next_u64());
+    }
+
+    #[test]
+    fn uniform_mean_and_bounds() {
+        let mut r = Rng::new(1);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let v = r.f64();
+            assert!((0.0..1.0).contains(&v));
+            sum += v;
+        }
+        assert!((sum / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn below_is_in_range_and_roughly_uniform() {
+        let mut r = Rng::new(2);
+        let mut counts = [0usize; 7];
+        for _ in 0..70_000 {
+            counts[r.below(7)] += 1;
+        }
+        for c in counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "count {c}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(3);
+        let n = 50_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let v = r.normal();
+            s += v;
+            s2 += v * v;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn gamma_moments() {
+        let mut r = Rng::new(4);
+        for &k in &[0.1, 0.5, 1.0, 3.0, 10.0] {
+            let n = 30_000;
+            let mut s = 0.0;
+            for _ in 0..n {
+                let v = r.gamma(k);
+                assert!(v >= 0.0);
+                s += v;
+            }
+            let mean = s / n as f64;
+            assert!((mean - k).abs() < 0.12 * k.max(1.0), "k={k} mean={mean}");
+        }
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one_and_concentrates() {
+        let mut r = Rng::new(5);
+        let p = r.dirichlet(0.1, 10);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        // alpha=0.1 is highly skewed: the max component should dominate.
+        let mx = p.iter().cloned().fold(0.0, f64::max);
+        assert!(mx > 0.3, "alpha=0.1 should concentrate, got max {mx}");
+        // alpha=100 is nearly uniform.
+        let p = r.dirichlet(100.0, 10);
+        for v in &p {
+            assert!((v - 0.1).abs() < 0.05);
+        }
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut r = Rng::new(6);
+        let w = [0.0, 1.0, 3.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..40_000 {
+            counts[r.categorical(&w)] += 1;
+        }
+        assert_eq!(counts[0], 0);
+        let ratio = counts[2] as f64 / counts[1] as f64;
+        assert!((ratio - 3.0).abs() < 0.3, "ratio {ratio}");
+    }
+
+    #[test]
+    fn choose_k_distinct() {
+        let mut r = Rng::new(7);
+        for _ in 0..100 {
+            let mut ks = r.choose_k(20, 5);
+            ks.sort_unstable();
+            ks.dedup();
+            assert_eq!(ks.len(), 5);
+            assert!(ks.iter().all(|&i| i < 20));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(8);
+        let mut xs: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+}
