@@ -1,14 +1,16 @@
 //! Benchmark harness (`cargo bench`), custom — no criterion offline.
 //!
-//! Three sections:
-//!   1. Microbenches: the aggregation hot path (native vs Pallas/XLA
-//!      kernel) across layer sizes and client counts, plus per-model
-//!      train-step / train-chunk / eval latency and the literal-boundary
-//!      cost.  These are the §Perf numbers in EXPERIMENTS.md.
-//!   2. Paper tables: regenerates Tables 1-5 (+ the baselines ablation) at
+//! Four sections, all hermetic (native backend, no artifacts):
+//!   1. Microbenches: the native aggregation hot path across layer sizes
+//!      and client counts, plus per-model train-step / train-chunk / eval
+//!      latency.
+//!   2. Cluster scaling: one federated round at threads = 1, 2, 4, 8 —
+//!      the `runtime::cluster` fan-out speedup (results are bit-identical
+//!      across thread counts; only wall time changes).
+//!   3. Paper tables: regenerates Tables 1-5 (+ the baselines ablation) at
 //!      smoke scale and prints the paper-format rows.  BENCH_ALL=1 also
 //!      runs the appendix tables 6-11.
-//!   3. Paper figures: Figure 1 crossover curves, Figures 2/3 per-layer
+//!   4. Paper figures: Figure 1 crossover curves, Figures 2/3 per-layer
 //!      comm profile, Figures 4-6 learning-curve endpoints.
 //!
 //! Environment:
@@ -25,7 +27,7 @@ use fedlama::coordinator::Coordinator;
 use fedlama::data::DatasetKind;
 use fedlama::metrics::tables::Table;
 use fedlama::reports;
-use fedlama::runtime::ModelRuntime;
+use fedlama::runtime::{ComputeBackend, NativeBackend};
 use fedlama::util::rng::Rng;
 use fedlama::util::stats;
 
@@ -42,8 +44,8 @@ fn main() -> anyhow::Result<()> {
     if run("micro-step") {
         bench_model_steps()?;
     }
-    if run("micro-boundary") {
-        bench_literal_boundary()?;
+    if run("micro-cluster") {
+        bench_cluster_scaling()?;
     }
     if run("tables") {
         bench_tables(scale)?;
@@ -55,26 +57,24 @@ fn main() -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Section 1a: fused aggregation kernel vs native rust across sizes.
+/// Section 1a: native aggregation throughput across sizes.
 fn bench_aggregation() -> anyhow::Result<()> {
-    println!("\n### micro-agg: aggregation backends (u_l + d_l per sync)\n");
-    let rt = ModelRuntime::load(std::path::Path::new("artifacts/resnet20"))?;
+    println!("\n### micro-agg: aggregation hot path (u_l + d_l per sync)\n");
     let mut rng = Rng::new(7);
     let mut t = Table::new(
-        "aggregation throughput (one group sync)",
-        &["dim", "m", "native (us)", "pallas/xla (us)", "native GB/s", "speedup"],
+        "native aggregation throughput (one group sync)",
+        &["dim", "m", "native (us)", "native GB/s"],
     );
-    // representative group dims present in the resnet20 artifact set
-    let dims: Vec<usize> = rt.manifest.agg_by_dim.keys().cloned().collect();
+    // representative group dims of the native MLP manifests (toy + cifar)
+    let dims = [650usize, 8_256, 8_320, 65_536, 393_344];
     let ms = [4usize, 8, 16];
-    for &dim in dims.iter().filter(|&&d| d >= 512) {
+    for &dim in &dims {
         for &m in &ms {
             let stack: Vec<f32> = (0..m * dim).map(|_| rng.normal_f32(0.0, 1.0)).collect();
             let w: Vec<f32> = vec![1.0 / m as f32; m];
             let rows: Vec<&[f32]> = (0..m).map(|i| &stack[i * dim..(i + 1) * dim]).collect();
             let mut u = vec![0.0f32; dim];
-            let reps = (1_000_000 / (m * dim)).clamp(3, 100);
-            // native
+            let reps = (4_000_000 / (m * dim)).clamp(3, 200);
             let mut nat = Vec::new();
             for _ in 0..reps {
                 let s = Instant::now();
@@ -82,59 +82,45 @@ fn bench_aggregation() -> anyhow::Result<()> {
                 nat.push(s.elapsed().as_secs_f64() * 1e6);
                 std::hint::black_box(d);
             }
-            // pallas/xla (if artifact exists for this (dim, m))
-            let xla_us = rt.agg_kernel(dim, m).map(|exe| {
-                let mut xs = Vec::new();
-                for _ in 0..reps.min(20) {
-                    let s = Instant::now();
-                    let out = rt.run_agg(&exe, &stack, &w, dim).unwrap();
-                    xs.push(s.elapsed().as_secs_f64() * 1e6);
-                    std::hint::black_box(out.1);
-                }
-                stats::mean(&xs)
-            });
             let nat_us = stats::mean(&nat);
             let bytes = (m * dim * 4) as f64; // one pass reads the stack
             t.row(vec![
                 dim.to_string(),
                 m.to_string(),
                 format!("{nat_us:.1}"),
-                xla_us.map(|v| format!("{v:.1}")).unwrap_or_else(|| "-".into()),
                 format!("{:.2}", 2.0 * bytes / (nat_us * 1e-6) / 1e9),
-                xla_us.map(|v| format!("{:.2}x", v / nat_us)).unwrap_or_else(|| "-".into()),
             ]);
         }
     }
     println!("{}", t.render());
     println!(
-        "(speedup < 1x means the Pallas/XLA path is slower than native here: on CPU the\n\
-         kernel pays a literal round-trip per call; on TPU the same artifact runs from\n\
-         VMEM — see DESIGN.md Hardware-Adaptation.)\n"
+        "(The PJRT/Pallas kernel path — `--features pjrt` + artifacts — pays a literal\n\
+         round-trip per call on CPU; on TPU the same artifact runs from VMEM.)\n"
     );
     Ok(())
 }
 
-/// Section 1b: per-model executable latency.
+/// Section 1b: per-model native step latency.
 fn bench_model_steps() -> anyhow::Result<()> {
-    println!("\n### micro-step: AOT executable latency per model\n");
+    println!("\n### micro-step: native backend latency per dataset model\n");
     let mut t = Table::new(
-        "executable latency",
+        "native executable latency",
         &["model", "params", "train_step (ms)", "train_chunk/step (ms)", "eval_step (ms)"],
     );
-    for model in ["mlp", "femnist_cnn", "cifar_cnn", "resnet20"] {
-        let dir = std::path::Path::new("artifacts").join(model);
-        if !dir.join("manifest.json").exists() {
-            continue;
-        }
-        let rt = ModelRuntime::load(&dir)?;
+    for (name, kind) in [
+        ("toy-mlp", DatasetKind::Toy),
+        ("femnist-mlp", DatasetKind::Femnist),
+        ("cifar10-mlp", DatasetKind::Cifar10),
+    ] {
+        let rt = NativeBackend::for_dataset(kind);
         let mut params = rt.init_params(0)?;
-        let b = rt.manifest.batch_size;
-        let k = rt.manifest.chunk_k;
-        let d: usize = rt.manifest.input_shape.iter().product();
+        let b = rt.manifest().batch_size;
+        let k = rt.chunk_k();
+        let d: usize = rt.manifest().input_shape.iter().product();
         let mut rng = Rng::new(1);
         let x: Vec<f32> = (0..k * b * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
-        let y: Vec<i32> = (0..k * b).map(|i| (i % rt.manifest.num_classes) as i32).collect();
-        let reps = if model == "mlp" { 10 } else { 3 };
+        let y: Vec<i32> = (0..k * b).map(|i| (i % rt.manifest().num_classes) as i32).collect();
+        let reps = 10;
         let mut ts = Vec::new();
         for _ in 0..reps {
             let s = Instant::now();
@@ -147,9 +133,9 @@ fn bench_model_steps() -> anyhow::Result<()> {
             rt.train_chunk(&mut params, &x, &y, 0.05)?;
             tc.push(s.elapsed().as_secs_f64() * 1e3 / k as f64);
         }
-        let eb = rt.manifest.eval_batch_size;
+        let eb = rt.manifest().eval_batch_size;
         let ex: Vec<f32> = (0..eb * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
-        let ey: Vec<i32> = (0..eb).map(|i| (i % rt.manifest.num_classes) as i32).collect();
+        let ey: Vec<i32> = (0..eb).map(|i| (i % rt.manifest().num_classes) as i32).collect();
         let mut te = Vec::new();
         for _ in 0..reps {
             let s = Instant::now();
@@ -157,45 +143,63 @@ fn bench_model_steps() -> anyhow::Result<()> {
             te.push(s.elapsed().as_secs_f64() * 1e3);
         }
         t.row(vec![
-            model.to_string(),
-            rt.manifest.num_params.to_string(),
-            format!("{:.2} ±{:.2}", stats::mean(&ts), stats::stddev(&ts)),
-            format!("{:.2} ±{:.2}", stats::mean(&tc), stats::stddev(&tc)),
-            format!("{:.2} ±{:.2}", stats::mean(&te), stats::stddev(&te)),
+            name.to_string(),
+            rt.manifest().num_params.to_string(),
+            format!("{:.3} ±{:.3}", stats::mean(&ts), stats::stddev(&ts)),
+            format!("{:.3} ±{:.3}", stats::mean(&tc), stats::stddev(&tc)),
+            format!("{:.3} ±{:.3}", stats::mean(&te), stats::stddev(&te)),
         ]);
     }
     println!("{}", t.render());
     Ok(())
 }
 
-/// Section 1c: the rust<->PJRT literal boundary (what train_chunk amortizes).
-fn bench_literal_boundary() -> anyhow::Result<()> {
-    println!("\n### micro-boundary: literal construction + readback cost\n");
-    let rt = ModelRuntime::load(std::path::Path::new("artifacts/resnet20"))?;
-    let params = rt.init_params(0)?;
-    let reps = 50;
-    let mut build = Vec::new();
-    for _ in 0..reps {
-        let s = Instant::now();
-        let lits: Vec<_> = params.iter().map(|p| p.to_literal().unwrap()).collect();
-        build.push(s.elapsed().as_secs_f64() * 1e3);
-        std::hint::black_box(lits.len());
+/// Section 2: cluster fan-out scaling (same work, more worker threads).
+fn bench_cluster_scaling() -> anyhow::Result<()> {
+    println!("\n### micro-cluster: parallel client fan-out (runtime::cluster)\n");
+    let mk = |threads| RunConfig {
+        dataset: DatasetKind::Cifar10,
+        partition: PartitionKind::Dirichlet { alpha: 0.3 },
+        n_clients: 16,
+        samples: 128,
+        lr: 0.1,
+        warmup_rounds: 0,
+        iterations: 24,
+        eval_every_rounds: 0,
+        eval_examples: 256,
+        seed: 5,
+        threads,
+        ..Default::default()
+    };
+    let mut t = Table::new(
+        "one fedavg(6) run, 16 clients x 24 iters (cifar10-mlp)",
+        &["threads", "wall (s)", "speedup", "final loss"],
+    );
+    let mut base_wall = None;
+    for threads in [1usize, 2, 4, 8] {
+        let mut coord = Coordinator::new(mk(threads))?;
+        let m = coord.run()?;
+        let wall = m.wall_secs;
+        let speedup = match base_wall {
+            None => {
+                base_wall = Some(wall);
+                1.0
+            }
+            Some(b) => b / wall.max(1e-9),
+        };
+        t.row(vec![
+            threads.to_string(),
+            format!("{wall:.2}"),
+            format!("{speedup:.2}x"),
+            format!("{:.4}", m.final_loss),
+        ]);
     }
-    println!(
-        "building {} param literals ({} params): {:.2} ±{:.2} ms per call set",
-        params.len(),
-        rt.manifest.num_params,
-        stats::mean(&build),
-        stats::stddev(&build)
-    );
-    println!(
-        "-> at chunk_k={} the boundary is paid once per {} local steps\n",
-        rt.manifest.chunk_k, rt.manifest.chunk_k
-    );
+    println!("{}", t.render());
+    println!("(final loss is identical by construction: threads=N is bit-identical to 1)\n");
     Ok(())
 }
 
-/// Section 2: the paper tables.
+/// Section 3: the paper tables.
 fn bench_tables(scale: Scale) -> anyhow::Result<()> {
     let all = std::env::var("BENCH_ALL").ok().is_some_and(|v| v == "1");
     let ids: Vec<&str> = if all {
@@ -214,22 +218,21 @@ fn bench_tables(scale: Scale) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Section 3: the paper figures (compact textual form).
+/// Section 4: the paper figures (compact textual form).
 fn bench_figures() -> anyhow::Result<()> {
     println!("\n### figures\n");
-    // Figure 1: crossover curves on resnet20
+    // Figure 1: crossover curves on the cifar10 workload
     let cfg = RunConfig {
-        model_dir: "artifacts/resnet20".into(),
         dataset: DatasetKind::Cifar10,
         partition: PartitionKind::Dirichlet { alpha: 0.1 },
         policy: Policy::fedlama(6, 2),
         n_clients: 4,
         samples: 128,
-        lr: 0.4,
+        lr: 0.1,
         warmup_rounds: 0,
         iterations: 24,
         eval_every_rounds: 0,
-        eval_examples: 512,
+        eval_examples: 256,
         ..Default::default()
     };
     let mut coord = Coordinator::new(cfg.clone())?;
@@ -263,19 +266,18 @@ fn bench_figures() -> anyhow::Result<()> {
     );
 
     // Figures 4-6: learning-curve endpoints (full curves via `fedlama figure`)
-    for (fig, model, ds, tau, lr) in [
-        (4, "resnet20", DatasetKind::Cifar10, 6usize, 0.4f32),
-        (5, "cifar_cnn100", DatasetKind::Cifar100, 6, 0.3),
-        (6, "femnist_cnn", DatasetKind::Femnist, 10, 0.06),
+    for (fig, ds, tau, lr) in [
+        (4, DatasetKind::Cifar10, 6usize, 0.1f32),
+        (5, DatasetKind::Cifar100, 6, 0.1),
+        (6, DatasetKind::Femnist, 10, 0.06),
     ] {
-        let iters = 8 * tau * 4 / 4; // 8 rounds of phi*tau with phi=4
+        let iters = 8 * tau;
         let partition = if fig == 6 {
             PartitionKind::Writers
         } else {
             PartitionKind::Dirichlet { alpha: 0.1 }
         };
         let mk = |policy| RunConfig {
-            model_dir: format!("artifacts/{model}").into(),
             dataset: ds,
             partition,
             policy,
@@ -285,7 +287,7 @@ fn bench_figures() -> anyhow::Result<()> {
             warmup_rounds: 2,
             iterations: iters,
             eval_every_rounds: 0,
-            eval_examples: 512,
+            eval_examples: 256,
             ..Default::default()
         };
         let mut lines = Vec::new();
@@ -303,7 +305,7 @@ fn bench_figures() -> anyhow::Result<()> {
                 m.total_comm_cost
             ));
         }
-        println!("Figure {fig} endpoints ({model}, {iters} iters):");
+        println!("Figure {fig} endpoints ({ds:?}, {iters} iters):");
         for l in lines {
             println!("{l}");
         }

@@ -1,0 +1,52 @@
+//! Minimal vendored stand-in for the `log` crate facade.
+//!
+//! No logger registry: `trace!`/`debug!` type-check their format args and
+//! discard them; `info!`/`warn!`/`error!` print to stderr with a level
+//! prefix.  Enough for an offline build with no registry access.
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => {{
+        let _ = format_args!($($arg)*);
+    }};
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {{
+        let _ = format_args!($($arg)*);
+    }};
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        eprintln!("[info] {}", format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => {
+        eprintln!("[warn] {}", format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => {
+        eprintln!("[error] {}", format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn macros_expand() {
+        trace!("t {}", 1);
+        debug!("d {}", 2);
+        info!("i {}", 3);
+        warn!("w {}", 4);
+        error!("e {}", 5);
+    }
+}

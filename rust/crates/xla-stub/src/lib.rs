@@ -1,0 +1,156 @@
+//! Compile-time stub for the `xla` crate (xla_extension 0.5.1 PJRT
+//! bindings).
+//!
+//! The offline build environment cannot vendor the real native bindings, so
+//! this stub mirrors the API surface `fedlama`'s PJRT engine uses and lets
+//! `--features pjrt` type-check.  Every entry point fails at *runtime* with
+//! a clear error (`PjRtClient::cpu()` is the first call on any path, so
+//! nothing downstream ever executes).  Deployments with the real crate
+//! replace this path dependency via `[patch]` — see rust/DESIGN.md,
+//! "Execution paths".
+
+use std::fmt;
+
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error(
+        "PJRT unavailable: built against the in-tree xla stub; vendor the real \
+         xla_extension bindings (see rust/DESIGN.md) to use the pjrt engine"
+            .to_string(),
+    ))
+}
+
+/// Scalar element types the engine constructs literals from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    U32,
+}
+
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u32 {}
+impl NativeType for u64 {}
+
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+pub struct Literal;
+
+impl Literal {
+    pub fn scalar<T: NativeType>(_v: T) -> Literal {
+        Literal
+    }
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal> {
+        unavailable()
+    }
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        unavailable()
+    }
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        unavailable()
+    }
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        unavailable()
+    }
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        unavailable()
+    }
+    pub fn copy_raw_to<T: NativeType>(&self, _dst: &mut [T]) -> Result<()> {
+        unavailable()
+    }
+}
+
+/// Argument adapter so `execute::<Literal>` and `execute::<&Literal>` both
+/// type-check, as with the real crate.
+pub trait AsLiteral {}
+impl AsLiteral for Literal {}
+impl AsLiteral for &Literal {}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: AsLiteral>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+#[derive(Clone)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn everything_fails_loudly() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("stub"));
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::F32, &[1], &[0; 4])
+            .is_err());
+        assert!(HloModuleProto::from_text_file("x").is_err());
+    }
+}

@@ -2,9 +2,10 @@
 //! a federated client fleet with FedLAMA for a few hundred rounds of local
 //! SGD on the synthetic writer-heterogeneous corpus, logging the loss
 //! curve, then re-runs the FedAvg anchors to report the paper's headline
-//! trade-off end-to-end.  Every layer of the stack is exercised: Pallas
-//! kernels (inside train_chunk + aggregation), the JAX-lowered model, the
-//! PJRT runtime, and the rust coordinator.
+//! trade-off end-to-end.  Every layer of the stack is exercised: the
+//! compute backend (native MLP by default; PJRT/Pallas under `--features
+//! pjrt`), chunked local steps, layer-wise aggregation, and the rust
+//! coordinator with its parallel client cluster.
 //!
 //!   cargo run --release --example e2e_train [iters] [clients]
 
@@ -31,6 +32,7 @@ fn main() -> anyhow::Result<()> {
         eval_every_rounds: 1,
         eval_examples: 1024,
         seed: 3,
+        threads: 0, // auto: fan clients across the cluster's worker threads
         verbose: true,
         ..Default::default()
     };

@@ -31,7 +31,7 @@ fn main() -> anyhow::Result<()> {
     let mut coord = Coordinator::new(cfg)?;
     let metrics = coord.run()?;
 
-    let groups = coord.runtime.manifest.groups.clone();
+    let groups = coord.manifest().groups.clone();
     println!("=== Algorithm 2 adjustments over training ===");
     for (i, adj) in coord.schedule.adjustments.iter().enumerate() {
         let relaxed: Vec<&str> = (0..groups.len())

@@ -1,6 +1,7 @@
-//! Quickstart: FedLAMA vs FedAvg on the toy MLP workload, in ~30 seconds.
+//! Quickstart: FedLAMA vs FedAvg on the toy MLP workload, in seconds.
+//! Runs on the hermetic native backend — no artifacts needed.
 //!
-//!   make artifacts && cargo run --release --example quickstart
+//!   cargo run --release --example quickstart
 //!
 //! Trains the same federated workload three ways — FedAvg with the short
 //! interval tau'=6 (accuracy anchor), FedAvg with the long interval 24

@@ -1,15 +1,17 @@
-//! Aggregation backends: native rust vs the AOT Pallas kernel.
+//! Aggregation backends: native rust vs a fused compute-backend kernel.
 //!
 //! Both compute (u_l, disc_l) for one group across active clients.  The
-//! native path reads client tensors in place (no stacking copy); the Xla
-//! path stacks rows into a scratch [m, d] buffer and runs the fused Pallas
-//! kernel artifact.  `Auto` uses the kernel when one exists for (dim, m)
-//! and falls back to native otherwise.  Tests assert the two agree.
+//! native path reads client tensors in place (no stacking copy); the fused
+//! path stacks rows into a scratch [m, d] buffer and calls
+//! `ComputeBackend::fused_agg` (the Pallas kernel artifact under the pjrt
+//! engine).  `Auto` uses the fused kernel when the backend has one for
+//! (dim, m) and falls back to native otherwise.  Tests assert the two
+//! agree.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use super::discrepancy::aggregate_native;
-use crate::runtime::ModelRuntime;
+use crate::runtime::ComputeBackend;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AggBackend {
@@ -41,7 +43,7 @@ pub struct AggScratch {
 /// returns the discrepancy.
 pub fn aggregate_group(
     backend: AggBackend,
-    runtime: &ModelRuntime,
+    compute: &dyn ComputeBackend,
     rows: &[&[f32]],
     weights: &[f32],
     scratch: &mut AggScratch,
@@ -49,23 +51,49 @@ pub fn aggregate_group(
     let m = rows.len();
     let dim = rows[0].len();
     scratch.u.resize(dim, 0.0);
-    let use_xla = match backend {
+    let use_fused = match backend {
         AggBackend::Native => false,
-        AggBackend::Xla | AggBackend::Auto => runtime.agg_kernel(dim, m).is_some(),
+        AggBackend::Xla | AggBackend::Auto => compute.has_fused_agg(dim, m),
     };
-    if backend == AggBackend::Xla && !use_xla {
-        anyhow::bail!("no AOT agg kernel for dim={dim}, m={m} (re-run `make artifacts` with --agg-m)");
+    if backend == AggBackend::Xla && !use_fused {
+        anyhow::bail!("no fused agg kernel for dim={dim}, m={m} (re-run `make artifacts` with --agg-m)");
     }
-    if use_xla {
-        let exe = runtime.agg_kernel(dim, m).unwrap();
+    if use_fused {
         scratch.stack.resize(m * dim, 0.0);
         for (i, row) in rows.iter().enumerate() {
             scratch.stack[i * dim..(i + 1) * dim].copy_from_slice(row);
         }
-        let (u, disc) = runtime.run_agg(&exe, &scratch.stack, weights, dim)?;
+        let (u, disc) = compute
+            .fused_agg(&scratch.stack, weights, dim)?
+            .context("fused agg kernel vanished")?;
         scratch.u.copy_from_slice(&u);
         Ok(disc as f64)
     } else {
         Ok(aggregate_native(rows, weights, &mut scratch.u))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetKind;
+    use crate::runtime::NativeBackend;
+
+    #[test]
+    fn native_backend_has_no_fused_kernel_and_falls_back() {
+        let nb = NativeBackend::for_dataset(DatasetKind::Toy);
+        assert!(!nb.has_fused_agg(128, 4));
+        assert_eq!(nb.fused_agg(&[0.0; 8], &[0.5, 0.5], 4).unwrap(), None);
+        let r1 = [1.0f32, 2.0];
+        let r2 = [3.0f32, 4.0];
+        let rows: Vec<&[f32]> = vec![&r1, &r2];
+        let mut scratch = AggScratch::default();
+        // Auto falls back to native...
+        let disc = aggregate_group(AggBackend::Auto, &nb, &rows, &[0.5, 0.5], &mut scratch)
+            .unwrap();
+        assert_eq!(scratch.u, vec![2.0, 3.0]);
+        assert!(disc > 0.0);
+        // ...while forcing Xla errors out.
+        assert!(aggregate_group(AggBackend::Xla, &nb, &rows, &[0.5, 0.5], &mut scratch).is_err());
     }
 }

@@ -38,6 +38,21 @@ impl ClientState {
         }
     }
 
+    /// Cheap placeholder left in the fleet while a client's real state is
+    /// temporarily moved out for a parallel training block
+    /// (`runtime::cluster`).  Never trained or aggregated.
+    pub fn placeholder() -> ClientState {
+        ClientState {
+            id: usize::MAX,
+            params: Vec::new(),
+            round_start: None,
+            control: None,
+            steps_in_round: 0,
+            local_budget: 0,
+            rng: Rng::new(0),
+        }
+    }
+
     /// Download the current global model.
     pub fn pull(&mut self, global: &[HostTensor]) {
         for (p, g) in self.params.iter_mut().zip(global) {

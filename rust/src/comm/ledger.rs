@@ -147,6 +147,74 @@ mod tests {
         assert!((r - expect).abs() < 1e-12);
     }
 
+    /// Hand-computed Eq. 9 on a 3-group FedLAMA schedule: tau'=6, phi=2,
+    /// 48 iterations, m=4 active clients.  The first adjustment (k=12)
+    /// relaxes the fc group to tau=12, so from k=13 on it syncs only at
+    /// multiples of 12:
+    ///
+    ///   k:        6   12   18   24   30   36   42   48
+    ///   conv1:    x    x    x    x    x    x    x    x    -> 8 syncs
+    ///   conv2:    x    x    x    x    x    x    x    x    -> 8 syncs
+    ///   fc:       x    x         x         x         x    -> 5 syncs
+    ///
+    /// C = sum_l dim_l * k_l = 100*8 + 1000*8 + 10000*5 = 58_800.
+    #[test]
+    fn eq9_matches_hand_computed_three_group_schedule() {
+        let mut l = ledger3();
+        let dims = [100usize, 1000, 10_000];
+        let m = 4;
+        let mut syncs = [0u64; 3];
+        for k in (6..=48).step_by(6) {
+            let fc_due = if k <= 12 { true } else { k % 12 == 0 };
+            l.record_round();
+            for g in 0..2 {
+                l.record_sync(g, m);
+                syncs[g] += 1;
+            }
+            if fc_due {
+                l.record_sync(2, m);
+                syncs[2] += 1;
+            }
+        }
+        assert_eq!(syncs, [8, 8, 5]);
+        assert_eq!(l.total_cost(), 100 * 8 + 1000 * 8 + 10_000 * 5);
+        assert_eq!(l.total_cost(), 58_800);
+        assert_eq!(l.total_syncs(), 21);
+        assert_eq!(l.rounds, 8);
+        // vs the FedAvg(6) baseline over the same horizon: 8 full syncs
+        let mut avg = ledger3();
+        for _ in 0..8 {
+            avg.record_round();
+            for g in 0..3 {
+                avg.record_sync(g, m);
+            }
+        }
+        assert_eq!(avg.total_cost(), 8 * (100 + 1000 + 10_000));
+        let ratio = l.cost_ratio_vs(&avg);
+        assert!((ratio - 58_800.0 / 88_800.0).abs() < 1e-12);
+        // wire bytes: (uplink + downlink) * m per sync, dense f32 both ways
+        let expect_bytes: u64 =
+            (0..3).map(|g| syncs[g] * (dims[g] * 4 * 2 * m) as u64).sum();
+        assert_eq!(l.total_bytes(), expect_bytes);
+    }
+
+    /// Compressed uplink: Eq. 9 cost stays in parameter count (the paper's
+    /// unit) while the byte column reflects the smaller wire size.
+    #[test]
+    fn compressed_uplink_shrinks_bytes_not_cost() {
+        let mut dense = ledger3();
+        let mut q8 = ledger3();
+        let m = 4;
+        // group 2 (dim 10_000): dense uplink = 40_000 B; q8 ~ 10_040 B
+        dense.record_sync(2, m);
+        q8.record_sync_bytes(2, m, 10_040);
+        assert_eq!(dense.total_cost(), q8.total_cost());
+        assert_eq!(dense.groups[2].syncs, q8.groups[2].syncs);
+        assert_eq!(dense.total_bytes(), ((40_000 + 40_000) * m) as u64);
+        assert_eq!(q8.total_bytes(), ((10_040 + 40_000) * m) as u64);
+        assert!(q8.total_bytes() < dense.total_bytes());
+    }
+
     #[test]
     fn latency_model() {
         let mut l = ledger3();

@@ -50,10 +50,43 @@ pub enum PartitionKind {
     Writers,
 }
 
+/// Which compute backend executes the model (DESIGN.md, "Execution paths").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Pure-rust MLP compute with an in-memory manifest — hermetic, `Sync`,
+    /// parallelizable across the cluster's worker threads.  The default.
+    Native,
+    /// PJRT execution of AOT HLO artifacts from `model_dir` (requires the
+    /// `pjrt` cargo feature and a real `xla` crate).  Thread-confined.
+    Pjrt,
+}
+
+impl EngineKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Native => "native",
+            EngineKind::Pjrt => "pjrt",
+        }
+    }
+    pub fn parse(s: &str) -> Option<EngineKind> {
+        match s {
+            "native" => Some(EngineKind::Native),
+            "pjrt" | "xla" => Some(EngineKind::Pjrt),
+            _ => None,
+        }
+    }
+}
+
 /// Full specification of one training run.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
-    /// artifacts/<model> directory.
+    /// Compute backend (native is hermetic; pjrt reads `model_dir`).
+    pub engine: EngineKind,
+    /// Worker threads for the per-client local-training fan-out
+    /// (`runtime::cluster`): 1 = serial, 0 = auto (leave two cores for the
+    /// runtime), N > 1 = fixed.  Results are bit-identical for every value.
+    pub threads: usize,
+    /// artifacts/<model> directory (pjrt engine only).
     pub model_dir: PathBuf,
     pub dataset: DatasetKind,
     pub algorithm: Algorithm,
@@ -113,6 +146,13 @@ impl RunConfig {
             self.iterations,
             self.policy.round_len()
         );
+        if self.engine == EngineKind::Native {
+            anyhow::ensure!(
+                self.backend != AggBackend::Xla,
+                "backend=xla forces the fused Pallas aggregation kernel, which the \
+                 native engine does not provide (use --engine pjrt or backend=auto)"
+            );
+        }
         Ok(())
     }
 
@@ -137,6 +177,8 @@ impl RunConfig {
 impl Default for RunConfig {
     fn default() -> Self {
         RunConfig {
+            engine: EngineKind::Native,
+            threads: 1,
             model_dir: PathBuf::from("artifacts/mlp"),
             dataset: DatasetKind::Toy,
             algorithm: Algorithm::Sgd,
@@ -204,6 +246,34 @@ mod tests {
             ..Default::default()
         };
         assert_eq!(c.tag(), "fedprox(6)");
+    }
+
+    #[test]
+    fn engine_parse_and_default() {
+        assert_eq!(EngineKind::parse("native"), Some(EngineKind::Native));
+        assert_eq!(EngineKind::parse("pjrt"), Some(EngineKind::Pjrt));
+        assert_eq!(EngineKind::parse("xla"), Some(EngineKind::Pjrt));
+        assert_eq!(EngineKind::parse("bogus"), None);
+        let cfg = RunConfig::default();
+        assert_eq!(cfg.engine, EngineKind::Native);
+        assert_eq!(cfg.threads, 1);
+    }
+
+    #[test]
+    fn native_engine_rejects_xla_agg_backend() {
+        let cfg = RunConfig { backend: AggBackend::Xla, ..Default::default() };
+        assert!(cfg.validate().is_err());
+        let cfg = RunConfig {
+            engine: EngineKind::Pjrt,
+            backend: AggBackend::Xla,
+            ..Default::default()
+        };
+        cfg.validate().unwrap();
+        // threads is free-form: 0 (auto) and large values are both valid
+        let cfg = RunConfig { threads: 0, ..Default::default() };
+        cfg.validate().unwrap();
+        let cfg = RunConfig { threads: 64, ..Default::default() };
+        cfg.validate().unwrap();
     }
 
     #[test]

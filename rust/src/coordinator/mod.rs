@@ -1,19 +1,23 @@
 //! The federated training coordinator: Algorithm 1 end-to-end.
 //!
-//! One `Coordinator` owns the PJRT runtime, the simulated client fleet, the
-//! layer-wise aggregation schedule, and the communication ledger, and runs
-//! the paper's training loop:
+//! One `Coordinator` owns a compute backend (native MLP by default, PJRT
+//! behind `--features pjrt`), the simulated client fleet, the layer-wise
+//! aggregation schedule, and the communication ledger, and runs the
+//! paper's training loop:
 //!
 //!   for k = 1..K:
-//!     every active client takes one local SGD step        (L2 executable)
+//!     every active client takes one local SGD step        (L2 compute)
 //!     for every group with k mod tau_l == 0:
 //!       aggregate layer l across clients + measure d_l    (L1 kernel)
 //!     if k mod phi*tau' == 0:
 //!       adjust intervals (Algorithm 2), resample clients  (L3, this file)
 //!
 //! The loop is blocked by base-interval gaps so local work can use the
-//! fused `train_chunk` executable (K steps per PJRT call) — all sync
-//! points are multiples of tau' by construction.
+//! fused `train_chunk` path (K steps per call) — all sync points are
+//! multiples of tau' by construction.  Within a block the active clients
+//! are independent, and `runtime::cluster` fans them across `cfg.threads`
+//! workers when the backend is `Sync`; results are bit-identical to the
+//! serial order for every thread count.
 
 use std::time::Instant;
 
@@ -22,15 +26,17 @@ use anyhow::{Context, Result};
 use crate::aggregation::{AggBackend, AggScratch, Schedule};
 use crate::clients::{ClientSampler, ClientState};
 use crate::comm::CommLedger;
-use crate::config::{Algorithm, PartitionKind, RunConfig};
-use crate::data::{dirichlet_partition, femnist_partition, iid_partition, Generator, Partition};
+use crate::config::{Algorithm, EngineKind, PartitionKind, RunConfig};
+use crate::data::{
+    dirichlet_partition, femnist_partition, iid_partition, ClientData, Generator, Partition,
+};
 use crate::metrics::{CurvePoint, RunMetrics};
-use crate::runtime::{GroupInfo, HostTensor, ModelRuntime};
+use crate::runtime::{cluster, ComputeBackend, GroupInfo, HostTensor, Manifest, NativeBackend};
 use crate::util::rng::Rng;
 
 pub struct Coordinator {
     pub cfg: RunConfig,
-    pub runtime: ModelRuntime,
+    backend: Box<dyn ComputeBackend>,
     pub gen: Generator,
     pub partition: Partition,
     pub schedule: Schedule,
@@ -46,49 +52,53 @@ pub struct Coordinator {
     scratch: AggScratch,
     val_x: Vec<f32>,
     val_y: Vec<i32>,
-    xbuf: Vec<f32>,
-    ybuf: Vec<i32>,
 }
 
 impl Coordinator {
+    /// Build a coordinator with the backend `cfg.engine` selects.
     pub fn new(cfg: RunConfig) -> Result<Coordinator> {
         cfg.validate()?;
-        let runtime = ModelRuntime::load(&cfg.model_dir)
-            .with_context(|| format!("loading artifacts from {}", cfg.model_dir.display()))?;
-        Self::with_runtime(cfg, runtime)
+        let backend: Box<dyn ComputeBackend> = match cfg.engine {
+            EngineKind::Native => Box::new(NativeBackend::for_dataset(cfg.dataset)),
+            EngineKind::Pjrt => load_pjrt_backend(&cfg)?,
+        };
+        Self::with_backend(cfg, backend)
     }
 
-    pub fn with_runtime(cfg: RunConfig, runtime: ModelRuntime) -> Result<Coordinator> {
+    /// Build a coordinator around an explicit compute backend.
+    pub fn with_backend(cfg: RunConfig, backend: Box<dyn ComputeBackend>) -> Result<Coordinator> {
         cfg.validate()?;
-        let manifest = runtime.manifest.clone();
-        anyhow::ensure!(
-            manifest.input_shape == cfg.dataset.input_shape(),
-            "model {} input shape {:?} != dataset {:?} shape {:?}",
-            manifest.model,
-            manifest.input_shape,
-            cfg.dataset,
-            cfg.dataset.input_shape()
-        );
-        anyhow::ensure!(
-            manifest.num_classes == cfg.dataset.num_classes(),
-            "model classes {} != dataset classes {}",
-            manifest.num_classes,
-            cfg.dataset.num_classes()
-        );
+        {
+            let manifest = backend.manifest();
+            anyhow::ensure!(
+                manifest.input_shape == cfg.dataset.input_shape(),
+                "model {} input shape {:?} != dataset {:?} shape {:?}",
+                manifest.model,
+                manifest.input_shape,
+                cfg.dataset,
+                cfg.dataset.input_shape()
+            );
+            anyhow::ensure!(
+                manifest.num_classes == cfg.dataset.num_classes(),
+                "model classes {} != dataset classes {}",
+                manifest.num_classes,
+                cfg.dataset.num_classes()
+            );
+        }
         let gen = Generator::new(cfg.dataset, cfg.seed);
         let mut prng = Rng::new(cfg.seed).fork(0x9A27);
         let partition = build_partition(&cfg, &mut prng);
-        let dims: Vec<usize> = manifest.groups.iter().map(|g| g.dim).collect();
+        let dims: Vec<usize> = backend.manifest().groups.iter().map(|g| g.dim).collect();
         let names: Vec<(String, usize)> =
-            manifest.groups.iter().map(|g| (g.name.clone(), g.dim)).collect();
+            backend.manifest().groups.iter().map(|g| (g.name.clone(), g.dim)).collect();
         let schedule = Schedule::new(cfg.policy.clone(), dims);
         let ledger = CommLedger::new(&names);
         let sampler = ClientSampler::new(cfg.n_clients, cfg.active_ratio, cfg.seed);
-        let global = runtime.init_params(cfg.seed as u32)?;
+        let global = backend.init_params(cfg.seed as u32)?;
         let clients = (0..cfg.n_clients)
             .map(|i| ClientState::new(i, global.clone(), cfg.seed))
             .collect();
-        let eval_b = manifest.eval_batch_size;
+        let eval_b = backend.manifest().eval_batch_size;
         let n_val = (cfg.eval_examples / eval_b).max(1) * eval_b;
         let (val_x, val_y) = gen.validation_set(n_val);
         let compressor = crate::comm::parse_compressor(&cfg.compressor, cfg.seed)
@@ -96,7 +106,7 @@ impl Coordinator {
         let compress_enabled = cfg.compressor != "dense";
         Ok(Coordinator {
             cfg,
-            runtime,
+            backend,
             gen,
             partition,
             schedule,
@@ -110,9 +120,40 @@ impl Coordinator {
             scratch: AggScratch::default(),
             val_x,
             val_y,
-            xbuf: Vec::new(),
-            ybuf: Vec::new(),
         })
+    }
+
+    /// Build around a PJRT `ModelRuntime` (compat wrapper).
+    #[cfg(feature = "pjrt")]
+    pub fn with_runtime(
+        cfg: RunConfig,
+        runtime: crate::runtime::ModelRuntime,
+    ) -> Result<Coordinator> {
+        Self::with_backend(cfg, Box::new(runtime))
+    }
+
+    /// The backend's manifest (parameter layout and aggregation groups).
+    pub fn manifest(&self) -> &Manifest {
+        self.backend.manifest()
+    }
+
+    /// The compute backend executing this run.
+    pub fn backend(&self) -> &dyn ComputeBackend {
+        self.backend.as_ref()
+    }
+
+    /// Worker threads the local-training fan-out will actually use: 1 when
+    /// the backend is thread-confined (PJRT), otherwise the configured
+    /// count with 0 resolving to auto.
+    pub fn effective_threads(&self) -> usize {
+        if self.backend.as_parallel().is_none() {
+            return 1;
+        }
+        if self.cfg.threads == 0 {
+            crate::util::pool::default_threads()
+        } else {
+            self.cfg.threads
+        }
     }
 
     /// Learning rate at a given round (linear warmup, as in the paper).
@@ -146,10 +187,10 @@ impl Coordinator {
             let k = blk * gap;
             let lr = self.lr_at(round);
 
-            // --- local training: every active client advances `gap` steps
-            for ai in 0..active.len() {
-                let ci = active[ai];
-                let loss = self.advance_client(ci, gap, lr)?;
+            // --- local training: active clients advance `gap` steps, fanned
+            // across the cluster's worker threads (order-preserving).
+            let losses = self.run_local_block(&active, gap, lr)?;
+            for loss in losses {
                 if loss.is_finite() {
                     round_loss_sum += loss;
                     round_loss_n += 1;
@@ -229,7 +270,7 @@ impl Coordinator {
         metrics.final_loss = loss;
         metrics.record_ledger(&self.ledger);
         metrics.wall_secs = t0.elapsed().as_secs_f64();
-        metrics.runtime_secs = self.runtime.stats.borrow().total_secs();
+        metrics.runtime_secs = self.backend.stats_total_secs();
         Ok(metrics)
     }
 
@@ -264,128 +305,71 @@ impl Coordinator {
         }
     }
 
-    /// Advance one client by `gap` local steps; returns the mean loss
-    /// (NaN when the client's heterogeneous budget is already exhausted).
-    fn advance_client(&mut self, ci: usize, gap: usize, lr: f32) -> Result<f64> {
-        let b = self.runtime.manifest.batch_size;
-        let chunk_k = self.runtime.chunk_k();
-        let budget = self.clients[ci].local_budget;
-        let mut remaining = gap.min(budget.saturating_sub(self.clients[ci].steps_in_round));
-        if remaining == 0 {
-            return Ok(f64::NAN);
+    /// Advance every active client `gap` local steps via the cluster
+    /// runtime.  Clients are temporarily moved out of the fleet so the
+    /// workers get disjoint `&mut` access; they are restored afterwards.
+    /// Returns per-client mean losses in `active` order (NaN = budget
+    /// exhausted).
+    fn run_local_block(&mut self, active: &[usize], gap: usize, lr: f32) -> Result<Vec<f64>> {
+        let mut moved: Vec<ClientState> = active
+            .iter()
+            .map(|&ci| std::mem::replace(&mut self.clients[ci], ClientState::placeholder()))
+            .collect();
+        let parts: Vec<&ClientData> =
+            active.iter().map(|&ci| &self.partition.clients[ci]).collect();
+        let ctx = cluster::StepCtx {
+            gen: &self.gen,
+            parts: &parts,
+            algorithm: self.cfg.algorithm,
+            server_control: self.server_control.as_deref(),
+            gap,
+            lr,
+            use_chunk: self.cfg.use_chunk,
+        };
+        let threads = self.effective_threads();
+        let result = match self.backend.as_parallel() {
+            Some(par) if threads > 1 => cluster::advance_parallel(par, &ctx, &mut moved, threads),
+            _ => cluster::advance_serial(self.backend.as_ref(), &ctx, &mut moved),
+        };
+        for (&ci, c) in active.iter().zip(moved) {
+            self.clients[ci] = c;
         }
-        let mut loss_sum = 0.0f64;
-        let mut loss_n = 0usize;
-        let use_chunk = self.cfg.use_chunk && self.cfg.algorithm == Algorithm::Sgd && chunk_k > 1;
-        while remaining > 0 {
-            if use_chunk && remaining >= chunk_k {
-                self.fill_batches(ci, chunk_k * b);
-                let client = &mut self.clients[ci];
-                let losses =
-                    self.runtime.train_chunk(&mut client.params, &self.xbuf, &self.ybuf, lr)?;
-                loss_sum += losses.iter().map(|&v| v as f64).sum::<f64>();
-                loss_n += losses.len();
-                client.steps_in_round += chunk_k;
-                remaining -= chunk_k;
-            } else {
-                self.fill_batches(ci, b);
-                let loss = match self.cfg.algorithm {
-                    Algorithm::Sgd | Algorithm::Nova => {
-                        let client = &mut self.clients[ci];
-                        self.runtime.train_step(&mut client.params, &self.xbuf, &self.ybuf, lr)?
-                    }
-                    Algorithm::Prox { mu } => {
-                        let client = &mut self.clients[ci];
-                        let reference = client
-                            .round_start
-                            .take()
-                            .context("FedProx requires round_start snapshot")?;
-                        let r = self.runtime.train_step_prox(
-                            &mut client.params,
-                            &reference,
-                            &self.xbuf,
-                            &self.ybuf,
-                            lr,
-                            mu,
-                        );
-                        client.round_start = Some(reference);
-                        r?
-                    }
-                    Algorithm::Scaffold => {
-                        let client = &mut self.clients[ci];
-                        let control = client.control.take().context("SCAFFOLD control missing")?;
-                        let server =
-                            self.server_control.as_ref().context("server control missing")?;
-                        let r = self.runtime.train_step_scaffold(
-                            &mut client.params,
-                            &control,
-                            server,
-                            &self.xbuf,
-                            &self.ybuf,
-                            lr,
-                        );
-                        client.control = Some(control);
-                        r?
-                    }
-                };
-                loss_sum += loss as f64;
-                loss_n += 1;
-                self.clients[ci].steps_in_round += 1;
-                remaining -= 1;
-            }
-        }
-        Ok(loss_sum / loss_n.max(1) as f64)
+        result
     }
 
-    /// Fill `n` examples into the batch buffers from client ci's local
-    /// distribution (deterministic per client stream).
-    fn fill_batches(&mut self, ci: usize, n: usize) {
-        let d = self.gen.input_dim;
-        self.xbuf.resize(n * d, 0.0);
-        self.ybuf.resize(n, 0);
-        let data = &self.partition.clients[ci];
-        let rng = &mut self.clients[ci].rng;
-        for i in 0..n {
-            let class = data.sample_class(rng);
-            let writer = data.sample_writer(rng);
-            self.ybuf[i] = class as i32;
-            self.gen.gen_example(class, writer, rng, &mut self.xbuf[i * d..(i + 1) * d]);
-        }
-    }
-
-    /// Aggregate one group across the active clients (L1 kernel when an
-    /// artifact exists, native fallback otherwise), write the result into
-    /// the global model and broadcast to the active clients.  Returns the
-    /// group discrepancy sum_i w_i ||u - x_i||^2 and the per-client uplink
-    /// byte count (compressed wire size when a compressor is configured).
+    /// Aggregate one group across the active clients (fused L1 kernel when
+    /// the backend provides one, native fallback otherwise), write the
+    /// result into the global model and broadcast to the active clients.
+    /// Returns the group discrepancy sum_i w_i ||u - x_i||^2 and the
+    /// per-client uplink byte count (compressed wire size when a compressor
+    /// is configured).
     fn sync_group(&mut self, g: usize, active: &[usize], weights: &[f32]) -> Result<(f64, usize)> {
-        let manifest = self.runtime.manifest.clone();
-        let group = &manifest.groups[g];
+        let group = self.backend.manifest().groups[g].clone();
         let m = active.len();
         // Backend choice: on the CPU PJRT each kernel call pays a fixed
         // ~60-100us literal/dispatch overhead while the native path runs at
-        // memory bandwidth (micro-agg bench, EXPERIMENTS.md §Perf), so Auto
-        // resolves to native here.  `Xla` forces the Pallas artifact — the
-        // path a TPU deployment would take.
-        let use_xla = match self.cfg.backend {
+        // memory bandwidth (micro-agg bench), so Auto resolves to native
+        // here.  `Xla` forces the fused Pallas artifact — the path a TPU
+        // deployment would take.
+        let use_fused = match self.cfg.backend {
             AggBackend::Native | AggBackend::Auto => false,
-            AggBackend::Xla => self.runtime.agg_kernel(group.dim, m).is_some(),
+            AggBackend::Xla => self.backend.has_fused_agg(group.dim, m),
         };
-        if self.cfg.backend == AggBackend::Xla && !use_xla {
+        if self.cfg.backend == AggBackend::Xla && !use_fused {
             anyhow::bail!(
-                "backend=xla but no AOT agg kernel for dim={} m={m}; re-run `make artifacts` \
+                "backend=xla but no fused agg kernel for dim={} m={m}; re-run `make artifacts` \
                  with --agg-m including {m}",
                 group.dim
             );
         }
         if self.compress_enabled {
             // compression path: clients upload lossy-compressed tensors
-            return self.sync_group_compressed(group, active, weights);
+            return self.sync_group_compressed(&group, active, weights);
         }
-        let disc = if use_xla {
-            self.sync_group_xla(group, active, weights)?
+        let disc = if use_fused {
+            self.sync_group_fused(&group, active, weights)?
         } else {
-            self.sync_group_native(group, active, weights)?
+            self.sync_group_native(&group, active, weights)?
         };
         Ok((disc, group.dim * 4))
     }
@@ -442,16 +426,14 @@ impl Coordinator {
         Ok(disc)
     }
 
-    fn sync_group_xla(
+    fn sync_group_fused(
         &mut self,
         group: &GroupInfo,
         active: &[usize],
         weights: &[f32],
     ) -> Result<f64> {
         let dim = group.dim;
-        let m = active.len();
-        let exe = self.runtime.agg_kernel(dim, m).context("agg kernel vanished")?;
-        self.scratch.stack.resize(m * dim, 0.0);
+        self.scratch.stack.resize(active.len() * dim, 0.0);
         for (row, &ci) in active.iter().enumerate() {
             let mut off = row * dim;
             for &t in &group.params {
@@ -460,7 +442,10 @@ impl Coordinator {
                 off += src.len();
             }
         }
-        let (u, disc) = self.runtime.run_agg(&exe, &self.scratch.stack, weights, dim)?;
+        let (u, disc) = self
+            .backend
+            .fused_agg(&self.scratch.stack, weights, dim)?
+            .context("fused agg kernel vanished")?;
         // scatter u back into the global tensors + broadcast
         let mut off = 0;
         for &t in &group.params {
@@ -510,7 +495,7 @@ impl Coordinator {
         }
         // full-model sync: account every group
         self.ledger.record_round();
-        let n_groups = self.runtime.manifest.groups.len();
+        let n_groups = self.backend.manifest().groups.len();
         for g in 0..n_groups {
             self.ledger.record_sync(g, active.len());
         }
@@ -550,7 +535,7 @@ impl Coordinator {
 
     /// Evaluate the global model on the held-out validation set.
     pub fn evaluate(&mut self) -> Result<(f64, f64)> {
-        let b = self.runtime.manifest.eval_batch_size;
+        let b = self.backend.manifest().eval_batch_size;
         let d = self.gen.input_dim;
         let n = self.val_y.len();
         let mut correct = 0.0f64;
@@ -558,12 +543,27 @@ impl Coordinator {
         for s in (0..n).step_by(b) {
             let xs = &self.val_x[s * d..(s + b) * d];
             let ys = &self.val_y[s..s + b];
-            let (c, l) = self.runtime.eval_step(&self.global, xs, ys)?;
+            let (c, l) = self.backend.eval_step(&self.global, xs, ys)?;
             correct += c as f64;
             loss += l as f64;
         }
         Ok((correct / n as f64, loss / n as f64))
     }
+}
+
+#[cfg(feature = "pjrt")]
+fn load_pjrt_backend(cfg: &RunConfig) -> Result<Box<dyn ComputeBackend>> {
+    let runtime = crate::runtime::ModelRuntime::load(&cfg.model_dir)
+        .with_context(|| format!("loading artifacts from {}", cfg.model_dir.display()))?;
+    Ok(Box::new(runtime))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn load_pjrt_backend(_cfg: &RunConfig) -> Result<Box<dyn ComputeBackend>> {
+    anyhow::bail!(
+        "this build has no PJRT support: rebuild with `--features pjrt` (and a real \
+         xla crate, see rust/DESIGN.md) or use --engine native"
+    )
 }
 
 fn build_partition(cfg: &RunConfig, rng: &mut Rng) -> Partition {
@@ -612,5 +612,22 @@ mod tests {
         };
         let p = build_partition(&cfg, &mut rng);
         assert!(p.clients.iter().all(|c| !c.writers.is_empty()));
+    }
+
+    #[test]
+    fn native_coordinator_builds_without_artifacts() {
+        let cfg = RunConfig { n_clients: 2, ..Default::default() };
+        let coord = Coordinator::new(cfg).unwrap();
+        assert_eq!(coord.manifest().model, "native-mlp");
+        assert_eq!(coord.clients.len(), 2);
+        assert_eq!(coord.global.len(), coord.manifest().num_tensors());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_engine_requires_feature() {
+        let cfg = RunConfig { engine: EngineKind::Pjrt, ..Default::default() };
+        let err = Coordinator::new(cfg).unwrap_err();
+        assert!(format!("{err:#}").contains("pjrt"), "{err:#}");
     }
 }

@@ -1,8 +1,10 @@
 //! FedLAMA: layer-wise adaptive model aggregation for scalable federated
-//! learning (AAAI'23) — rust coordinator + JAX/Pallas AOT compute stack.
+//! learning (AAAI'23) — rust coordinator with a hermetic native compute
+//! backend (default) and an optional JAX/Pallas AOT compute stack behind
+//! `--features pjrt`.
 //!
-//! See DESIGN.md for the architecture and EXPERIMENTS.md for the
-//! paper-vs-measured reproduction results.
+//! See rust/DESIGN.md for the architecture (backend trait, cluster
+//! threading model, artifact-vs-native execution paths).
 
 pub mod aggregation;
 pub mod clients;
@@ -14,6 +16,7 @@ pub mod metrics;
 pub mod runtime;
 pub mod util;
 
-pub use config::{Algorithm, PartitionKind, RunConfig};
+pub use config::{Algorithm, EngineKind, PartitionKind, RunConfig};
 pub use coordinator::Coordinator;
+pub use runtime::{ComputeBackend, NativeBackend};
 pub mod reports;

@@ -19,11 +19,11 @@ use anyhow::{Context, Result};
 
 use fedlama::aggregation::AggBackend;
 use fedlama::config::presets::{self, Scale, ALL_TABLE_IDS};
-use fedlama::config::{Algorithm, PartitionKind, RunConfig};
+use fedlama::config::{Algorithm, EngineKind, PartitionKind, RunConfig};
 use fedlama::coordinator::Coordinator;
 use fedlama::data::DatasetKind;
 use fedlama::reports;
-use fedlama::runtime::Manifest;
+use fedlama::runtime::{Manifest, NativeBackend};
 use fedlama::util::cli::Args;
 
 fn main() {
@@ -55,12 +55,13 @@ fn print_help() {
                  [--partition iid|dirichlet|writers] [--alpha 0.1] [--samples 512]\n\
                  [--lr 0.1] [--warmup 4] [--iters 960] [--eval-every 4]\n\
                  [--algo sgd|fedprox|scaffold|fednova] [--mu 0.01] [--hetero]\n\
+                 [--engine native|pjrt] [--threads 1 (0=auto)]\n\
                  [--backend auto|native|xla] [--no-chunk] [--seed 1]\n\
                  [--out run.json] [--curve curve.csv] [--verbose]\n\
          repro   --table table1..table11|baselines|all [--scale smoke|default|full]\n\
                  [--repeats 1] [--out-dir reports] [--verbose]\n\
          figure  --id 1..6 [--scale ...] [--out-dir reports]\n\
-         inspect --model M\n\
+         inspect --model M [--dataset D]   (native manifest when no artifacts)\n\
          list"
     );
 }
@@ -89,8 +90,12 @@ fn cfg_from_args(args: &Args) -> Result<RunConfig> {
     };
     let backend = AggBackend::parse(&args.str_or("backend", "auto"))
         .context("bad --backend (auto|native|xla)")?;
+    let engine = EngineKind::parse(&args.str_or("engine", "native"))
+        .context("bad --engine (native|pjrt)")?;
     let iters = args.usize_or("iters", 960);
     Ok(RunConfig {
+        engine,
+        threads: args.usize_or("threads", 1),
         model_dir: artifacts_root().join(model),
         dataset,
         algorithm,
@@ -116,16 +121,26 @@ fn cfg_from_args(args: &Args) -> Result<RunConfig> {
 fn run_train(args: &Args) -> Result<()> {
     let cfg = cfg_from_args(args)?;
     let tag = cfg.tag();
-    eprintln!("running {tag} on {:?} ({} clients)", cfg.dataset, cfg.n_clients);
+    let engine = cfg.engine.name();
+    eprintln!(
+        "running {tag} on {:?} ({} clients, engine={engine}, threads={})",
+        cfg.dataset,
+        cfg.n_clients,
+        if cfg.threads == 0 { "auto".to_string() } else { cfg.threads.to_string() }
+    );
     let mut coord = Coordinator::new(cfg)?;
+    let threads = coord.effective_threads();
     let metrics = coord.run()?;
     println!("{}", reports::summary_line(&tag, &metrics));
+    // runtime_secs sums per-worker compute time, so normalize utilization by
+    // the worker count — with threads > 1 it can legitimately exceed wall.
+    let budget = metrics.wall_secs.max(1e-9) * threads as f64;
     println!(
-        "runtime: PJRT compute {:.1}s of {:.1}s wall ({:.0}% — coordinator overhead {:.0}%)",
+        "runtime: {engine} compute {:.1}s summed over {threads} worker thread(s), \
+         {:.1}s wall — worker utilization {:.0}%",
         metrics.runtime_secs,
         metrics.wall_secs,
-        100.0 * metrics.runtime_secs / metrics.wall_secs.max(1e-9),
-        100.0 * (1.0 - metrics.runtime_secs / metrics.wall_secs.max(1e-9)),
+        (100.0 * metrics.runtime_secs / budget).min(100.0),
     );
     if let Some(out) = args.get("out") {
         reports::write_report(std::path::Path::new(out), &metrics.to_json().to_string_pretty())?;
@@ -282,7 +297,29 @@ fn run_figure(args: &Args) -> Result<()> {
 
 fn run_inspect(args: &Args) -> Result<()> {
     let model = args.str_or("model", "mlp");
-    let m = Manifest::load(&artifacts_root().join(&model))?;
+    let dir = artifacts_root().join(&model);
+    let m = if dir.join("manifest.json").exists() {
+        Manifest::load(&dir)?
+    } else {
+        // Without artifacts the only manifests that exist are the native
+        // engine's per-dataset MLPs — don't silently substitute one for an
+        // arbitrary model name unless the user picked the dataset.
+        if !args.has("dataset") && model != "mlp" {
+            anyhow::bail!(
+                "no artifacts at {} and no --dataset given; the native engine only \
+                 synthesizes MLP manifests (pass --dataset toy|cifar10|cifar100|femnist \
+                 to inspect one, or run `make artifacts` for {model})",
+                dir.display()
+            );
+        }
+        let dataset = DatasetKind::parse(&args.str_or("dataset", "toy"))
+            .context("bad --dataset (toy|cifar10|cifar100|femnist)")?;
+        eprintln!(
+            "(no artifacts at {}; showing the native engine's synthesized manifest)",
+            dir.display()
+        );
+        NativeBackend::for_dataset(dataset).manifest().clone()
+    };
     println!("model {} (base {})", m.model, m.base);
     println!(
         "  {} params in {} tensors / {} groups; batch={} eval_batch={} chunk_k={}",

@@ -1,0 +1,183 @@
+//! The compute-backend seam between the coordinator and model execution.
+//!
+//! `ComputeBackend` is everything Algorithm 1 needs from a model runtime:
+//! deterministic init, the local-step family (SGD / FedProx / SCAFFOLD),
+//! full-batch gradients, evaluation, and an optional fused aggregation
+//! kernel.  Two implementations exist:
+//!
+//!   - `runtime::native::NativeBackend` — pure-rust MLP compute with an
+//!     in-memory synthesized manifest.  Hermetic (no artifacts, no foreign
+//!     deps), `Sync`, and therefore fan-out-able across worker threads by
+//!     `runtime::cluster`.  The default.
+//!   - `runtime::engine::ModelRuntime` (`--features pjrt`) — PJRT execution
+//!     of AOT HLO artifacts.  `Rc`-based, thread-confined, serial.
+//!
+//! The trait is object-safe; the coordinator holds a `Box<dyn
+//! ComputeBackend>` and upgrades to parallel execution via `as_parallel`
+//! only when the backend is `Sync`.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use super::manifest::Manifest;
+use super::tensor::HostTensor;
+
+/// Cumulative per-entry execution stats (count + wall seconds), used by the
+/// perf harness and the coordinator's overhead report.
+#[derive(Debug, Default, Clone)]
+pub struct RuntimeStats {
+    pub by_entry: HashMap<String, (u64, f64)>,
+}
+
+impl RuntimeStats {
+    pub fn record(&mut self, entry: &str, secs: f64) {
+        let e = self.by_entry.entry(entry.to_string()).or_insert((0, 0.0));
+        e.0 += 1;
+        e.1 += secs;
+    }
+    pub fn total_secs(&self) -> f64 {
+        self.by_entry.values().map(|(_, s)| s).sum()
+    }
+    pub fn count(&self, entry: &str) -> u64 {
+        self.by_entry.get(entry).map(|(c, _)| *c).unwrap_or(0)
+    }
+    pub fn secs(&self, entry: &str) -> f64 {
+        self.by_entry.get(entry).map(|(_, s)| *s).unwrap_or(0.0)
+    }
+}
+
+/// Model compute: the L2 entry points of DESIGN.md plus the optional L1
+/// fused aggregation kernel.  All methods take `&self`; implementations
+/// that keep scratch state guard it internally so a `Sync` backend can be
+/// shared by the cluster's worker threads.
+pub trait ComputeBackend {
+    /// Parameter order, shapes, aggregation groups, batch sizes.
+    fn manifest(&self) -> &Manifest;
+
+    /// Deterministic parameter init from a seed.
+    fn init_params(&self, seed: u32) -> Result<Vec<HostTensor>>;
+
+    /// One local SGD step in place; returns the batch loss.
+    fn train_step(&self, params: &mut [HostTensor], x: &[f32], y: &[i32], lr: f32)
+        -> Result<f32>;
+
+    /// FedProx local step: adds the mu/2 * ||p - global||^2 term.
+    fn train_step_prox(
+        &self,
+        params: &mut [HostTensor],
+        global: &[HostTensor],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+        mu: f32,
+    ) -> Result<f32>;
+
+    /// SCAFFOLD local step: p <- p - lr * (g - c_i + c).
+    fn train_step_scaffold(
+        &self,
+        params: &mut [HostTensor],
+        ci: &[HostTensor],
+        c: &[HostTensor],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+    ) -> Result<f32>;
+
+    /// Full-batch gradients (FedNova + tests).
+    fn grad_step(&self, params: &[HostTensor], x: &[f32], y: &[i32])
+        -> Result<(Vec<HostTensor>, f32)>;
+
+    /// Evaluate one batch of `manifest().eval_batch_size` examples:
+    /// returns (correct_count, loss_sum).
+    fn eval_step(&self, params: &[HostTensor], x: &[f32], y: &[i32]) -> Result<(f32, f32)>;
+
+    /// K fused local SGD steps; xs is [K*B*inp], ys is [K*B].  Returns the
+    /// K per-step losses.  The default loops `train_step`, which is exactly
+    /// what chunking must be bit-equivalent to.
+    fn train_chunk(
+        &self,
+        params: &mut [HostTensor],
+        xs: &[f32],
+        ys: &[i32],
+        lr: f32,
+    ) -> Result<Vec<f32>> {
+        let b = self.manifest().batch_size;
+        let d: usize = self.manifest().input_shape.iter().product();
+        anyhow::ensure!(b > 0 && ys.len() % b == 0, "train_chunk batch alignment");
+        let k = ys.len() / b;
+        anyhow::ensure!(
+            xs.len() == k * b * d,
+            "train_chunk xs len {} != {k}x{b}x{d}",
+            xs.len()
+        );
+        let mut losses = Vec::with_capacity(k);
+        for s in 0..k {
+            let x = &xs[s * b * d..(s + 1) * b * d];
+            let y = &ys[s * b..(s + 1) * b];
+            losses.push(self.train_step(params, x, y, lr)?);
+        }
+        Ok(losses)
+    }
+
+    /// Steps per `train_chunk` call (1 = chunking unavailable/pointless).
+    fn chunk_k(&self) -> usize {
+        self.manifest().chunk_k.max(1)
+    }
+
+    /// Fused aggregation of an [m, dim] row-major `stack` with weights of
+    /// length m: returns (u, discrepancy), or `None` when this backend has
+    /// no fused kernel for the configuration (callers fall back to
+    /// `aggregation::aggregate_native`).
+    fn fused_agg(
+        &self,
+        stack: &[f32],
+        weights: &[f32],
+        dim: usize,
+    ) -> Result<Option<(Vec<f32>, f32)>> {
+        let _ = (stack, weights, dim);
+        Ok(None)
+    }
+
+    /// Whether `fused_agg` would return Some for (dim, m active rows).
+    fn has_fused_agg(&self, dim: usize, m: usize) -> bool {
+        let _ = (dim, m);
+        false
+    }
+
+    /// Total wall seconds spent inside compute entry points.
+    fn stats_total_secs(&self) -> f64 {
+        0.0
+    }
+
+    /// Snapshot of the per-entry stats (for the perf harness).
+    fn stats(&self) -> RuntimeStats {
+        RuntimeStats::default()
+    }
+
+    /// A `Sync` view of this backend, if it supports being shared across
+    /// the cluster's worker threads.  `None` (the default) confines
+    /// execution to the coordinator thread — the PJRT engine is `Rc`-based
+    /// and must stay serial.
+    fn as_parallel(&self) -> Option<&(dyn ComputeBackend + Sync)> {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_accumulate() {
+        let mut s = RuntimeStats::default();
+        s.record("train_step", 0.5);
+        s.record("train_step", 0.25);
+        s.record("eval_step", 1.0);
+        assert_eq!(s.count("train_step"), 2);
+        assert!((s.secs("train_step") - 0.75).abs() < 1e-12);
+        assert!((s.total_secs() - 1.75).abs() < 1e-12);
+        assert_eq!(s.count("missing"), 0);
+        assert_eq!(s.secs("missing"), 0.0);
+    }
+}

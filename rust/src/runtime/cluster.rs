@@ -1,0 +1,227 @@
+//! Parallel client fan-out: the cluster runtime promised by the engine
+//! docs.
+//!
+//! A training block ("gap" local iterations between sync points) is
+//! embarrassingly parallel across the active clients: each client owns its
+//! parameters and its private data-sampling RNG stream, and only reads the
+//! shared backend / generator / partition state.  `advance_parallel` fans
+//! the active set across `util::pool::par_map_mut` worker threads; because
+//! every per-client computation is self-contained and f32 accumulation
+//! order inside a client never changes, `threads = N` is **bit-identical**
+//! to `threads = 1` (asserted by `tests/determinism.rs`).
+//!
+//! The PJRT engine is `Rc`-based and `!Sync`, so it cannot take this path;
+//! the coordinator falls back to `advance_serial` whenever
+//! `ComputeBackend::as_parallel` returns `None`.
+
+use anyhow::{Context, Result};
+
+use super::backend::ComputeBackend;
+use super::tensor::HostTensor;
+use crate::clients::ClientState;
+use crate::config::Algorithm;
+use crate::data::{ClientData, Generator};
+use crate::util::pool;
+
+/// Shared, read-only context for one local-training block.
+pub struct StepCtx<'a> {
+    pub gen: &'a Generator,
+    /// Per active client: its local data distribution (parallel to the
+    /// `clients` slice passed to the advance functions).
+    pub parts: &'a [&'a ClientData],
+    pub algorithm: Algorithm,
+    /// SCAFFOLD server control variate c (read-only during the block).
+    pub server_control: Option<&'a [HostTensor]>,
+    /// Local iterations to advance each client.
+    pub gap: usize,
+    pub lr: f32,
+    pub use_chunk: bool,
+}
+
+/// Advance every client on the coordinator thread, in order.
+pub fn advance_serial(
+    backend: &dyn ComputeBackend,
+    ctx: &StepCtx<'_>,
+    clients: &mut [ClientState],
+) -> Result<Vec<f64>> {
+    clients
+        .iter_mut()
+        .enumerate()
+        .map(|(i, c)| advance_one(backend, ctx, i, c))
+        .collect()
+}
+
+/// Fan the active clients across `threads` workers.  Output order (and
+/// every client's final state) is identical to `advance_serial`.
+pub fn advance_parallel(
+    backend: &(dyn ComputeBackend + Sync),
+    ctx: &StepCtx<'_>,
+    clients: &mut [ClientState],
+    threads: usize,
+) -> Result<Vec<f64>> {
+    let results =
+        pool::par_map_mut(clients, threads, |i, c| advance_one(backend, ctx, i, c));
+    results.into_iter().collect()
+}
+
+/// Advance one client by `ctx.gap` local steps; returns the mean loss
+/// (NaN when the client's heterogeneous budget is already exhausted).
+fn advance_one(
+    backend: &dyn ComputeBackend,
+    ctx: &StepCtx<'_>,
+    idx: usize,
+    client: &mut ClientState,
+) -> Result<f64> {
+    let b = backend.manifest().batch_size;
+    let d: usize = backend.manifest().input_shape.iter().product();
+    let chunk_k = backend.chunk_k();
+    let budget = client.local_budget;
+    let mut remaining = ctx.gap.min(budget.saturating_sub(client.steps_in_round));
+    if remaining == 0 {
+        return Ok(f64::NAN);
+    }
+    let data = ctx.parts[idx];
+    let mut xbuf: Vec<f32> = Vec::new();
+    let mut ybuf: Vec<i32> = Vec::new();
+    let mut loss_sum = 0.0f64;
+    let mut loss_n = 0usize;
+    let use_chunk = ctx.use_chunk && ctx.algorithm == Algorithm::Sgd && chunk_k > 1;
+    while remaining > 0 {
+        if use_chunk && remaining >= chunk_k {
+            fill_batch(ctx.gen, data, client, chunk_k * b, d, &mut xbuf, &mut ybuf);
+            let losses = backend.train_chunk(&mut client.params, &xbuf, &ybuf, ctx.lr)?;
+            loss_sum += losses.iter().map(|&v| v as f64).sum::<f64>();
+            loss_n += losses.len();
+            client.steps_in_round += chunk_k;
+            remaining -= chunk_k;
+        } else {
+            fill_batch(ctx.gen, data, client, b, d, &mut xbuf, &mut ybuf);
+            let loss = match ctx.algorithm {
+                Algorithm::Sgd | Algorithm::Nova => {
+                    backend.train_step(&mut client.params, &xbuf, &ybuf, ctx.lr)?
+                }
+                Algorithm::Prox { mu } => {
+                    let reference = client
+                        .round_start
+                        .take()
+                        .context("FedProx requires round_start snapshot")?;
+                    let r = backend.train_step_prox(
+                        &mut client.params,
+                        &reference,
+                        &xbuf,
+                        &ybuf,
+                        ctx.lr,
+                        mu,
+                    );
+                    client.round_start = Some(reference);
+                    r?
+                }
+                Algorithm::Scaffold => {
+                    let control = client.control.take().context("SCAFFOLD control missing")?;
+                    let server = ctx.server_control.context("server control missing")?;
+                    let r = backend.train_step_scaffold(
+                        &mut client.params,
+                        &control,
+                        server,
+                        &xbuf,
+                        &ybuf,
+                        ctx.lr,
+                    );
+                    client.control = Some(control);
+                    r?
+                }
+            };
+            loss_sum += loss as f64;
+            loss_n += 1;
+            client.steps_in_round += 1;
+            remaining -= 1;
+        }
+    }
+    Ok(loss_sum / loss_n.max(1) as f64)
+}
+
+/// Fill `n` examples from the client's local distribution into the batch
+/// buffers (deterministic per-client stream, identical to the historical
+/// serial coordinator path).
+fn fill_batch(
+    gen: &Generator,
+    data: &ClientData,
+    client: &mut ClientState,
+    n: usize,
+    d: usize,
+    xs: &mut Vec<f32>,
+    ys: &mut Vec<i32>,
+) {
+    xs.resize(n * d, 0.0);
+    ys.resize(n, 0);
+    for i in 0..n {
+        let class = data.sample_class(&mut client.rng);
+        let writer = data.sample_writer(&mut client.rng);
+        ys[i] = class as i32;
+        gen.gen_example(class, writer, &mut client.rng, &mut xs[i * d..(i + 1) * d]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{iid_partition, DatasetKind};
+    use crate::runtime::NativeBackend;
+
+    fn fleet(backend: &NativeBackend, n: usize, seed: u64) -> Vec<ClientState> {
+        let global = backend.init_params(seed as u32).unwrap();
+        (0..n).map(|i| ClientState::new(i, global.clone(), seed)).collect()
+    }
+
+    #[test]
+    fn parallel_matches_serial_bitwise() {
+        let backend = NativeBackend::for_dataset(DatasetKind::Toy);
+        let part = iid_partition(6, 10, 128);
+        let parts: Vec<&ClientData> = part.clients.iter().collect();
+        let gen = Generator::new(DatasetKind::Toy, 3);
+        let ctx = StepCtx {
+            gen: &gen,
+            parts: &parts,
+            algorithm: Algorithm::Sgd,
+            server_control: None,
+            gap: 6,
+            lr: 0.05,
+            use_chunk: true,
+        };
+        let mut serial = fleet(&backend, 6, 11);
+        let l1 = advance_serial(&backend, &ctx, &mut serial).unwrap();
+        for threads in [2, 4, 8] {
+            let mut par = fleet(&backend, 6, 11);
+            let l2 = advance_parallel(&backend, &ctx, &mut par, threads).unwrap();
+            assert_eq!(l1, l2, "losses diverged at threads={threads}");
+            for (a, b) in serial.iter().zip(&par) {
+                assert_eq!(a.steps_in_round, b.steps_in_round);
+                for (ta, tb) in a.params.iter().zip(&b.params) {
+                    assert_eq!(ta.data, tb.data, "params diverged at threads={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn budget_exhausted_client_reports_nan() {
+        let backend = NativeBackend::for_dataset(DatasetKind::Toy);
+        let part = iid_partition(1, 10, 64);
+        let parts: Vec<&ClientData> = part.clients.iter().collect();
+        let gen = Generator::new(DatasetKind::Toy, 1);
+        let ctx = StepCtx {
+            gen: &gen,
+            parts: &parts,
+            algorithm: Algorithm::Sgd,
+            server_control: None,
+            gap: 4,
+            lr: 0.05,
+            use_chunk: false,
+        };
+        let mut clients = fleet(&backend, 1, 2);
+        clients[0].local_budget = 0;
+        let losses = advance_serial(&backend, &ctx, &mut clients).unwrap();
+        assert!(losses[0].is_nan());
+        assert_eq!(clients[0].steps_in_round, 0);
+    }
+}

@@ -5,8 +5,10 @@
 //! tuple literal which is decomposed into the per-output literals here.
 //!
 //! NOTE: `PjRtClient` is `Rc`-based (not `Send`), so an `Engine` and
-//! everything compiled from it must stay on one thread.  The cluster
-//! runtime (`runtime::cluster`) builds one engine per worker thread.
+//! everything compiled from it must stay on one thread.  Accordingly
+//! `ComputeBackend::as_parallel` returns `None` for `ModelRuntime` and the
+//! cluster runtime (`runtime::cluster`) keeps this backend serial; only the
+//! `Sync` native backend fans out across worker threads.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -17,32 +19,9 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
+use super::backend::{ComputeBackend, RuntimeStats};
 use super::manifest::Manifest;
 use super::tensor::{f32_literal, f32_scalar, i32_literal, scalar_f32, u32_scalar, HostTensor};
-
-/// Cumulative per-entry execution stats (count + wall seconds), used by the
-/// perf harness and the coordinator's overhead report.
-#[derive(Debug, Default, Clone)]
-pub struct RuntimeStats {
-    pub by_entry: HashMap<String, (u64, f64)>,
-}
-
-impl RuntimeStats {
-    fn record(&mut self, entry: &str, secs: f64) {
-        let e = self.by_entry.entry(entry.to_string()).or_insert((0, 0.0));
-        e.0 += 1;
-        e.1 += secs;
-    }
-    pub fn total_secs(&self) -> f64 {
-        self.by_entry.values().map(|(_, s)| s).sum()
-    }
-    pub fn count(&self, entry: &str) -> u64 {
-        self.by_entry.get(entry).map(|(c, _)| *c).unwrap_or(0)
-    }
-    pub fn secs(&self, entry: &str) -> f64 {
-        self.by_entry.get(entry).map(|(_, s)| *s).unwrap_or(0.0)
-    }
-}
 
 #[derive(Clone)]
 pub struct Engine {
@@ -391,5 +370,103 @@ impl ModelRuntime {
         let disc = scalar_f32(&outs[1])?;
         self.stats.borrow_mut().record("agg", t0.elapsed().as_secs_f64());
         Ok((u, disc))
+    }
+}
+
+/// The PJRT engine as a coordinator compute backend.  `Rc`-based and
+/// therefore thread-confined: `as_parallel` stays `None` and the
+/// coordinator runs clients serially on this backend.
+impl ComputeBackend for ModelRuntime {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn init_params(&self, seed: u32) -> Result<Vec<HostTensor>> {
+        ModelRuntime::init_params(self, seed)
+    }
+
+    fn train_step(
+        &self,
+        params: &mut [HostTensor],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+    ) -> Result<f32> {
+        ModelRuntime::train_step(self, params, x, y, lr)
+    }
+
+    fn train_step_prox(
+        &self,
+        params: &mut [HostTensor],
+        global: &[HostTensor],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+        mu: f32,
+    ) -> Result<f32> {
+        ModelRuntime::train_step_prox(self, params, global, x, y, lr, mu)
+    }
+
+    fn train_step_scaffold(
+        &self,
+        params: &mut [HostTensor],
+        ci: &[HostTensor],
+        c: &[HostTensor],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+    ) -> Result<f32> {
+        ModelRuntime::train_step_scaffold(self, params, ci, c, x, y, lr)
+    }
+
+    fn grad_step(
+        &self,
+        params: &[HostTensor],
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<(Vec<HostTensor>, f32)> {
+        ModelRuntime::grad_step(self, params, x, y)
+    }
+
+    fn eval_step(&self, params: &[HostTensor], x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
+        ModelRuntime::eval_step(self, params, x, y)
+    }
+
+    fn train_chunk(
+        &self,
+        params: &mut [HostTensor],
+        xs: &[f32],
+        ys: &[i32],
+        lr: f32,
+    ) -> Result<Vec<f32>> {
+        ModelRuntime::train_chunk(self, params, xs, ys, lr)
+    }
+
+    fn chunk_k(&self) -> usize {
+        ModelRuntime::chunk_k(self)
+    }
+
+    fn fused_agg(
+        &self,
+        stack: &[f32],
+        weights: &[f32],
+        dim: usize,
+    ) -> Result<Option<(Vec<f32>, f32)>> {
+        match self.agg_kernel(dim, weights.len()) {
+            Some(exe) => self.run_agg(&exe, stack, weights, dim).map(Some),
+            None => Ok(None),
+        }
+    }
+
+    fn has_fused_agg(&self, dim: usize, m: usize) -> bool {
+        self.agg_kernel(dim, m).is_some()
+    }
+
+    fn stats_total_secs(&self) -> f64 {
+        self.stats.borrow().total_secs()
+    }
+
+    fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
     }
 }

@@ -147,6 +147,67 @@ impl Manifest {
         Ok(m)
     }
 
+    /// Synthesize an MLP manifest in memory — the native backend's source
+    /// of truth, mirroring `python/compile/model.py::make_mlp` (one `fc{i}`
+    /// aggregation group per layer, each holding its weight + bias).  No
+    /// artifact directory, no entry points: `entries` stays empty and `dir`
+    /// is unused.
+    pub fn synthetic_mlp(
+        input_shape: &[usize],
+        hidden: &[usize],
+        num_classes: usize,
+        batch_size: usize,
+        eval_batch_size: usize,
+        chunk_k: usize,
+    ) -> Manifest {
+        let input_dim: usize = input_shape.iter().product();
+        let mut dims = vec![input_dim];
+        dims.extend_from_slice(hidden);
+        dims.push(num_classes);
+        let mut params = Vec::new();
+        let mut groups = Vec::new();
+        for l in 0..dims.len() - 1 {
+            let (din, dout) = (dims[l], dims[l + 1]);
+            let group = format!("fc{}", l + 1);
+            let w_idx = params.len();
+            params.push(ParamInfo {
+                name: format!("{group}.w"),
+                shape: vec![din, dout],
+                dim: din * dout,
+                group: group.clone(),
+            });
+            params.push(ParamInfo {
+                name: format!("{group}.b"),
+                shape: vec![dout],
+                dim: dout,
+                group: group.clone(),
+            });
+            groups.push(GroupInfo {
+                name: group,
+                params: vec![w_idx, w_idx + 1],
+                dim: din * dout + dout,
+            });
+        }
+        let num_params = params.iter().map(|p| p.dim).sum();
+        let m = Manifest {
+            dir: PathBuf::new(),
+            model: "native-mlp".to_string(),
+            base: "mlp".to_string(),
+            batch_size,
+            eval_batch_size,
+            chunk_k,
+            input_shape: input_shape.to_vec(),
+            num_classes,
+            num_params,
+            params,
+            groups,
+            entries: BTreeMap::new(),
+            agg_by_dim: BTreeMap::new(),
+        };
+        debug_assert!(m.validate().is_ok());
+        m
+    }
+
     /// Internal consistency: group dims match member params, indices valid.
     pub fn validate(&self) -> Result<()> {
         anyhow::ensure!(!self.params.is_empty(), "no params");
@@ -232,6 +293,27 @@ mod tests {
         assert_eq!(m.entry_path("init").unwrap(), Path::new("/tmp/x/init.hlo.txt"));
         assert!(m.entry_path("nope").is_err());
         assert_eq!(m.max_group_dim(), 8);
+    }
+
+    #[test]
+    fn synthetic_mlp_validates_and_matches_make_mlp_layout() {
+        let m = Manifest::synthetic_mlp(&[64], &[128, 64], 10, 16, 64, 4);
+        m.validate().unwrap();
+        assert_eq!(m.model, "native-mlp");
+        assert_eq!(m.num_tensors(), 6);
+        assert_eq!(m.groups.len(), 3);
+        assert_eq!(m.groups[0].dim, 64 * 128 + 128);
+        assert_eq!(m.groups[2].dim, 64 * 10 + 10);
+        assert_eq!(m.num_params, 64 * 128 + 128 + 128 * 64 + 64 + 64 * 10 + 10);
+        assert_eq!(m.params[0].name, "fc1.w");
+        assert_eq!(m.params[5].name, "fc3.b");
+        assert_eq!(m.chunk_k, 4);
+        assert!(m.entries.is_empty());
+        assert!(m.agg_path(m.groups[0].dim, 4).is_none());
+        // multi-axis input shapes flatten into the first weight
+        let m = Manifest::synthetic_mlp(&[32, 32, 3], &[128], 10, 8, 32, 1);
+        assert_eq!(m.params[0].shape, vec![3072, 128]);
+        assert_eq!(m.input_shape, vec![32, 32, 3]);
     }
 
     #[test]

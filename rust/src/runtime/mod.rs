@@ -1,12 +1,20 @@
-//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//! Model execution: the `ComputeBackend` seam, the hermetic native MLP
+//! backend, the parallel client cluster, and (behind `--features pjrt`)
+//! the PJRT engine for AOT HLO artifacts.
 //!
-//! See /opt/xla-example/load_hlo for the reference wiring and DESIGN.md §5
-//! for the interchange format.
+//! See rust/DESIGN.md for the two execution paths and the threading model.
 
+pub mod backend;
+pub mod cluster;
+#[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod manifest;
+pub mod native;
 pub mod tensor;
 
-pub use engine::{Engine, Executable, ModelRuntime, RuntimeStats};
+pub use backend::{ComputeBackend, RuntimeStats};
+#[cfg(feature = "pjrt")]
+pub use engine::{Engine, Executable, ModelRuntime};
 pub use manifest::{GroupInfo, Manifest, ParamInfo};
+pub use native::NativeBackend;
 pub use tensor::HostTensor;

@@ -1,0 +1,551 @@
+//! Native (pure-rust) MLP compute backend — the hermetic execution path.
+//!
+//! Mirrors `python/compile/model.py::make_mlp` and the pure-jnp oracles in
+//! `python/compile/kernels/ref.py`: an L-layer ReLU MLP over the flattened
+//! input with mean softmax cross-entropy, He-normal init, and plain SGD
+//! (`ref_sgd`).  The manifest is synthesized in memory — no `manifest.json`
+//! or HLO artifacts — so the default build trains end-to-end with zero
+//! external files.
+//!
+//! Numerics are deterministic: fixed f32 accumulation order everywhere, so
+//! results are bit-identical across runs and across the cluster's thread
+//! counts.  All methods take `&self` (scratch is per-call) which makes the
+//! backend `Sync` — the property `runtime::cluster` needs to fan clients
+//! across worker threads.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::backend::{ComputeBackend, RuntimeStats};
+use super::manifest::Manifest;
+use super::tensor::HostTensor;
+use crate::data::DatasetKind;
+use crate::util::rng::Rng;
+
+/// Default hidden widths (as `make_mlp` in the python model zoo).
+pub const DEFAULT_HIDDEN: [usize; 2] = [128, 64];
+/// Default batch sizes of the synthesized manifest.
+pub const DEFAULT_BATCH: usize = 16;
+pub const DEFAULT_EVAL_BATCH: usize = 64;
+/// Default fused-chunk length (amortizes per-step dispatch bookkeeping and
+/// keeps the coordinator's chunked path exercised).
+pub const DEFAULT_CHUNK_K: usize = 4;
+
+pub struct NativeBackend {
+    manifest: Manifest,
+    /// Layer widths [d_in, hidden.., num_classes].
+    dims: Vec<usize>,
+    stats: Mutex<RuntimeStats>,
+}
+
+impl NativeBackend {
+    /// An MLP backend for an explicit topology.
+    pub fn new(
+        input_shape: &[usize],
+        hidden: &[usize],
+        num_classes: usize,
+        batch_size: usize,
+        eval_batch_size: usize,
+        chunk_k: usize,
+    ) -> NativeBackend {
+        let input_dim: usize = input_shape.iter().product();
+        let mut dims = vec![input_dim];
+        dims.extend_from_slice(hidden);
+        dims.push(num_classes);
+        let manifest = Manifest::synthetic_mlp(
+            input_shape,
+            hidden,
+            num_classes,
+            batch_size,
+            eval_batch_size,
+            chunk_k,
+        );
+        NativeBackend { manifest, dims, stats: Mutex::new(RuntimeStats::default()) }
+    }
+
+    /// The default backend for a dataset: MLP over the flattened input.
+    pub fn for_dataset(kind: DatasetKind) -> NativeBackend {
+        NativeBackend::new(
+            &kind.input_shape(),
+            &DEFAULT_HIDDEN,
+            kind.num_classes(),
+            DEFAULT_BATCH,
+            DEFAULT_EVAL_BATCH,
+            DEFAULT_CHUNK_K,
+        )
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn n_layers(&self) -> usize {
+        self.dims.len() - 1
+    }
+
+    fn record(&self, entry: &str, t0: Instant) {
+        self.stats.lock().unwrap().record(entry, t0.elapsed().as_secs_f64());
+    }
+
+    fn check_params(&self, params: &[HostTensor]) -> Result<()> {
+        anyhow::ensure!(
+            params.len() == self.manifest.params.len(),
+            "expected {} param tensors, got {}",
+            self.manifest.params.len(),
+            params.len()
+        );
+        Ok(())
+    }
+
+    /// Forward pass over a batch of `b` rows; returns per-layer activations
+    /// (post-ReLU for hidden layers; raw logits for the last).
+    fn forward(&self, params: &[HostTensor], x: &[f32], b: usize) -> Vec<Vec<f32>> {
+        let nl = self.n_layers();
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(nl);
+        for l in 0..nl {
+            let (din, dout) = (self.dims[l], self.dims[l + 1]);
+            let w = &params[2 * l].data;
+            let bias = &params[2 * l + 1].data;
+            let input: &[f32] = if l == 0 { x } else { &acts[l - 1] };
+            let mut out = vec![0.0f32; b * dout];
+            for bi in 0..b {
+                let orow = &mut out[bi * dout..(bi + 1) * dout];
+                orow.copy_from_slice(bias);
+                let xrow = &input[bi * din..(bi + 1) * din];
+                for (i, &xv) in xrow.iter().enumerate() {
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    let wrow = &w[i * dout..(i + 1) * dout];
+                    for (o, &wv) in orow.iter_mut().zip(wrow) {
+                        *o += xv * wv;
+                    }
+                }
+            }
+            if l + 1 < nl {
+                for v in out.iter_mut() {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+            acts.push(out);
+        }
+        acts
+    }
+
+    /// Mean cross-entropy loss + d(loss)/d(logits) for one batch.
+    fn loss_and_dlogits(logits: &[f32], ys: &[i32], b: usize, c: usize) -> (f32, Vec<f32>) {
+        let mut dl = vec![0.0f32; b * c];
+        let mut loss = 0.0f32;
+        let inv_b = 1.0 / b as f32;
+        for bi in 0..b {
+            let row = &logits[bi * c..(bi + 1) * c];
+            let mut mx = f32::NEG_INFINITY;
+            for &v in row {
+                if v > mx {
+                    mx = v;
+                }
+            }
+            let mut sum = 0.0f32;
+            for &v in row {
+                sum += (v - mx).exp();
+            }
+            let ln_sum = sum.ln();
+            let y = ys[bi] as usize;
+            loss += mx + ln_sum - row[y];
+            let drow = &mut dl[bi * c..(bi + 1) * c];
+            for (dv, &v) in drow.iter_mut().zip(row) {
+                *dv = (v - mx).exp() / sum * inv_b;
+            }
+            drow[y] -= inv_b;
+        }
+        (loss * inv_b, dl)
+    }
+
+    /// Backward pass; returns (grads in param order, mean batch loss).
+    fn backward(
+        &self,
+        params: &[HostTensor],
+        x: &[f32],
+        acts: &[Vec<f32>],
+        ys: &[i32],
+        b: usize,
+    ) -> (Vec<HostTensor>, f32) {
+        let nl = self.n_layers();
+        let c = self.dims[nl];
+        let (loss, mut dz) = Self::loss_and_dlogits(&acts[nl - 1], ys, b, c);
+        let mut grads: Vec<HostTensor> =
+            params.iter().map(|p| HostTensor::zeros(&p.shape)).collect();
+        for l in (0..nl).rev() {
+            let (din, dout) = (self.dims[l], self.dims[l + 1]);
+            let input: &[f32] = if l == 0 { x } else { &acts[l - 1] };
+            {
+                let gb = &mut grads[2 * l + 1].data;
+                for bi in 0..b {
+                    let drow = &dz[bi * dout..(bi + 1) * dout];
+                    for (g, &dv) in gb.iter_mut().zip(drow) {
+                        *g += dv;
+                    }
+                }
+            }
+            {
+                let gw = &mut grads[2 * l].data;
+                for bi in 0..b {
+                    let xrow = &input[bi * din..(bi + 1) * din];
+                    let drow = &dz[bi * dout..(bi + 1) * dout];
+                    for (i, &xv) in xrow.iter().enumerate() {
+                        if xv == 0.0 {
+                            continue;
+                        }
+                        let grow = &mut gw[i * dout..(i + 1) * dout];
+                        for (g, &dv) in grow.iter_mut().zip(drow) {
+                            *g += xv * dv;
+                        }
+                    }
+                }
+            }
+            if l > 0 {
+                let w = &params[2 * l].data;
+                let prev = &acts[l - 1];
+                let mut ndz = vec![0.0f32; b * din];
+                for bi in 0..b {
+                    let drow = &dz[bi * dout..(bi + 1) * dout];
+                    let nrow = &mut ndz[bi * din..(bi + 1) * din];
+                    for (i, nv) in nrow.iter_mut().enumerate() {
+                        // ReLU mask: a == 0 means z <= 0, gradient blocked.
+                        if prev[bi * din + i] <= 0.0 {
+                            continue;
+                        }
+                        let wrow = &w[i * dout..(i + 1) * dout];
+                        let mut s = 0.0f32;
+                        for (&dv, &wv) in drow.iter().zip(wrow) {
+                            s += dv * wv;
+                        }
+                        *nv = s;
+                    }
+                }
+                dz = ndz;
+            }
+        }
+        (grads, loss)
+    }
+
+    fn sgd_apply(params: &mut [HostTensor], grads: &[HostTensor], lr: f32) {
+        for (p, g) in params.iter_mut().zip(grads) {
+            for (pv, &gv) in p.data.iter_mut().zip(&g.data) {
+                *pv -= lr * gv;
+            }
+        }
+    }
+
+    fn batch_dims(&self, eval: bool, x: &[f32], y: &[i32]) -> Result<(usize, usize)> {
+        let b = if eval { self.manifest.eval_batch_size } else { self.manifest.batch_size };
+        let d: usize = self.manifest.input_shape.iter().product();
+        anyhow::ensure!(x.len() == b * d, "x len {} != {}x{}", x.len(), b, d);
+        anyhow::ensure!(y.len() == b, "y len {} != batch {b}", y.len());
+        Ok((b, d))
+    }
+}
+
+impl ComputeBackend for NativeBackend {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// He-normal weights / zero biases, one independent RNG stream per
+    /// tensor (adding layers never shifts earlier tensors' draws).
+    fn init_params(&self, seed: u32) -> Result<Vec<HostTensor>> {
+        let t0 = Instant::now();
+        let root = Rng::new(seed as u64 ^ 0x11A7_17E0);
+        let mut out = Vec::with_capacity(self.manifest.params.len());
+        for (t, info) in self.manifest.params.iter().enumerate() {
+            let mut ten = HostTensor::zeros(&info.shape);
+            if info.shape.len() == 2 {
+                let fan_in = info.shape[0].max(1);
+                let std = (2.0 / fan_in as f32).sqrt();
+                let mut rng = root.fork(t as u64);
+                for v in ten.data.iter_mut() {
+                    *v = rng.normal_f32(0.0, std);
+                }
+            }
+            out.push(ten);
+        }
+        self.record("init", t0);
+        Ok(out)
+    }
+
+    fn train_step(
+        &self,
+        params: &mut [HostTensor],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+    ) -> Result<f32> {
+        let t0 = Instant::now();
+        self.check_params(params)?;
+        let (b, _) = self.batch_dims(false, x, y)?;
+        let acts = self.forward(params, x, b);
+        let (grads, loss) = self.backward(params, x, &acts, y, b);
+        Self::sgd_apply(params, &grads, lr);
+        self.record("train_step", t0);
+        Ok(loss)
+    }
+
+    fn train_step_prox(
+        &self,
+        params: &mut [HostTensor],
+        global: &[HostTensor],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+        mu: f32,
+    ) -> Result<f32> {
+        let t0 = Instant::now();
+        self.check_params(params)?;
+        self.check_params(global)?;
+        let (b, _) = self.batch_dims(false, x, y)?;
+        let acts = self.forward(params, x, b);
+        let (mut grads, mut loss) = self.backward(params, x, &acts, y, b);
+        // + mu/2 * ||p - global||^2 (loss term and gradient).
+        let mut prox = 0.0f32;
+        for ((g, p), gl) in grads.iter_mut().zip(params.iter()).zip(global) {
+            for ((gv, &pv), &rv) in g.data.iter_mut().zip(&p.data).zip(&gl.data) {
+                let diff = pv - rv;
+                *gv += mu * diff;
+                prox += diff * diff;
+            }
+        }
+        loss += 0.5 * mu * prox;
+        Self::sgd_apply(params, &grads, lr);
+        self.record("train_step_prox", t0);
+        Ok(loss)
+    }
+
+    fn train_step_scaffold(
+        &self,
+        params: &mut [HostTensor],
+        ci: &[HostTensor],
+        c: &[HostTensor],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+    ) -> Result<f32> {
+        let t0 = Instant::now();
+        self.check_params(params)?;
+        self.check_params(ci)?;
+        self.check_params(c)?;
+        let (b, _) = self.batch_dims(false, x, y)?;
+        let acts = self.forward(params, x, b);
+        let (grads, loss) = self.backward(params, x, &acts, y, b);
+        for (((p, g), cit), ct) in params.iter_mut().zip(&grads).zip(ci).zip(c) {
+            for (((pv, &gv), &civ), &cv) in
+                p.data.iter_mut().zip(&g.data).zip(&cit.data).zip(&ct.data)
+            {
+                *pv -= lr * (gv - civ + cv);
+            }
+        }
+        self.record("train_step_scaffold", t0);
+        Ok(loss)
+    }
+
+    fn grad_step(
+        &self,
+        params: &[HostTensor],
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<(Vec<HostTensor>, f32)> {
+        let t0 = Instant::now();
+        self.check_params(params)?;
+        let (b, _) = self.batch_dims(false, x, y)?;
+        let acts = self.forward(params, x, b);
+        let res = self.backward(params, x, &acts, y, b);
+        self.record("grad_step", t0);
+        Ok(res)
+    }
+
+    fn eval_step(&self, params: &[HostTensor], x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
+        let t0 = Instant::now();
+        self.check_params(params)?;
+        let (b, _) = self.batch_dims(true, x, y)?;
+        let acts = self.forward(params, x, b);
+        let logits = &acts[self.n_layers() - 1];
+        let c = *self.dims.last().unwrap();
+        let mut correct = 0.0f32;
+        let mut loss_sum = 0.0f32;
+        for bi in 0..b {
+            let row = &logits[bi * c..(bi + 1) * c];
+            let mut best = 0usize;
+            let mut mx = f32::NEG_INFINITY;
+            for (j, &v) in row.iter().enumerate() {
+                if v > mx {
+                    mx = v;
+                    best = j;
+                }
+            }
+            let y_bi = y[bi] as usize;
+            if best == y_bi {
+                correct += 1.0;
+            }
+            let mut sum = 0.0f32;
+            for &v in row {
+                sum += (v - mx).exp();
+            }
+            loss_sum += mx + sum.ln() - row[y_bi];
+        }
+        self.record("eval_step", t0);
+        Ok((correct, loss_sum))
+    }
+
+    fn stats_total_secs(&self) -> f64 {
+        self.stats.lock().unwrap().total_secs()
+    }
+
+    fn stats(&self) -> RuntimeStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    fn as_parallel(&self) -> Option<&(dyn ComputeBackend + Sync)> {
+        Some(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_backend() -> NativeBackend {
+        NativeBackend::for_dataset(DatasetKind::Toy)
+    }
+
+    fn fixed_batch(b: &NativeBackend, seed: u64) -> (Vec<f32>, Vec<i32>) {
+        let m = b.manifest();
+        let d: usize = m.input_shape.iter().product();
+        let mut rng = Rng::new(seed);
+        let x: Vec<f32> = (0..m.batch_size * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let y: Vec<i32> = (0..m.batch_size).map(|i| (i % m.num_classes) as i32).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn manifest_is_consistent() {
+        let b = toy_backend();
+        b.manifest().validate().unwrap();
+        assert_eq!(b.manifest().groups.len(), 3);
+        assert_eq!(b.manifest().input_shape, vec![64]);
+        assert_eq!(b.manifest().num_classes, 10);
+    }
+
+    #[test]
+    fn init_is_deterministic_per_seed() {
+        let b = toy_backend();
+        let p1 = b.init_params(3).unwrap();
+        let p2 = b.init_params(3).unwrap();
+        for (a, c) in p1.iter().zip(&p2) {
+            assert_eq!(a.data, c.data);
+        }
+        let p3 = b.init_params(4).unwrap();
+        assert!(p1.iter().zip(&p3).any(|(a, c)| a.data != c.data));
+        // biases are zero, weights are not
+        for (t, info) in p1.iter().zip(&b.manifest().params) {
+            assert_eq!(t.shape, info.shape);
+            if info.shape.len() == 1 {
+                assert!(t.data.iter().all(|&v| v == 0.0), "{} not zero", info.name);
+            } else {
+                assert!(t.data.iter().any(|&v| v != 0.0), "{} all zero", info.name);
+            }
+        }
+    }
+
+    #[test]
+    fn grad_step_matches_train_step() {
+        let b = toy_backend();
+        let (x, y) = fixed_batch(&b, 9);
+        let p0 = b.init_params(1).unwrap();
+        let (grads, gloss) = b.grad_step(&p0, &x, &y).unwrap();
+        let mut p1 = p0.clone();
+        let tloss = b.train_step(&mut p1, &x, &y, 0.1).unwrap();
+        assert_eq!(gloss, tloss);
+        for ((p_new, p_old), g) in p1.iter().zip(&p0).zip(&grads) {
+            for ((&pn, &po), &gv) in p_new.data.iter().zip(&p_old.data).zip(&g.data) {
+                assert_eq!(pn, po - 0.1 * gv);
+            }
+        }
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        // Spot-check d(loss)/d(param) against central differences on a few
+        // coordinates of every tensor.
+        let b = NativeBackend::new(&[6], &[5], 3, 4, 4, 1);
+        let mut rng = Rng::new(2);
+        let x: Vec<f32> = (0..4 * 6).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let y = vec![0, 1, 2, 1];
+        let params = b.init_params(0).unwrap();
+        let (grads, _) = b.grad_step(&params, &x, &y).unwrap();
+        let eps = 1e-2f32;
+        for t in 0..params.len() {
+            for j in [0, params[t].data.len() / 2] {
+                let mut plus = params.clone();
+                plus[t].data[j] += eps;
+                let mut minus = params.clone();
+                minus[t].data[j] -= eps;
+                let (_, lp) = b.grad_step(&plus, &x, &y).unwrap();
+                let (_, lm) = b.grad_step(&minus, &x, &y).unwrap();
+                let fd = (lp - lm) / (2.0 * eps);
+                let an = grads[t].data[j];
+                assert!(
+                    (fd - an).abs() < 2e-2 * (1.0 + an.abs()),
+                    "tensor {t} coord {j}: finite-diff {fd} vs analytic {an}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn scaffold_zero_controls_equal_sgd() {
+        let b = toy_backend();
+        let (x, y) = fixed_batch(&b, 5);
+        let zeros: Vec<HostTensor> = b
+            .manifest()
+            .params
+            .iter()
+            .map(|p| HostTensor::zeros(&p.shape))
+            .collect();
+        let mut p_sgd = b.init_params(7).unwrap();
+        let mut p_sca = p_sgd.clone();
+        let l1 = b.train_step(&mut p_sgd, &x, &y, 0.05).unwrap();
+        let l2 = b.train_step_scaffold(&mut p_sca, &zeros, &zeros, &x, &y, 0.05).unwrap();
+        assert_eq!(l1, l2);
+        for (a, c) in p_sgd.iter().zip(&p_sca) {
+            assert_eq!(a.data, c.data);
+        }
+    }
+
+    #[test]
+    fn prox_mu_zero_equals_sgd() {
+        let b = toy_backend();
+        let (x, y) = fixed_batch(&b, 6);
+        let global = b.init_params(8).unwrap();
+        let mut p_sgd = b.init_params(7).unwrap();
+        let mut p_prox = p_sgd.clone();
+        let l1 = b.train_step(&mut p_sgd, &x, &y, 0.05).unwrap();
+        let l2 = b.train_step_prox(&mut p_prox, &global, &x, &y, 0.05, 0.0).unwrap();
+        assert_eq!(l1, l2);
+        for (a, c) in p_sgd.iter().zip(&p_prox) {
+            assert_eq!(a.data, c.data);
+        }
+    }
+
+    #[test]
+    fn bad_shapes_are_rejected() {
+        let b = toy_backend();
+        let mut params = b.init_params(0).unwrap();
+        assert!(b.train_step(&mut params, &[0.0; 3], &[0], 0.1).is_err());
+        let (x, y) = fixed_batch(&b, 1);
+        let mut short = params[..2].to_vec();
+        assert!(b.train_step(&mut short, &x, &y, 0.1).is_err());
+    }
+}

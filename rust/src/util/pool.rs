@@ -35,6 +35,43 @@ where
     out.into_iter().map(|v| v.expect("par_map worker panicked")).collect()
 }
 
+/// Parallel map with mutable access: `f(i, &mut items[i])` for every item,
+/// preserving output order.  Items are split into contiguous per-worker
+/// chunks (the same deterministic partition as `par_map`), so disjoint
+/// mutable access is guaranteed by construction.  `threads <= 1` runs
+/// inline, in index order — the cluster runtime relies on the parallel
+/// path being observationally identical to that serial order for
+/// independent per-item work.
+pub fn par_map_mut<T, R, F>(items: &mut [T], threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, &mut T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        return items.iter_mut().enumerate().map(|(i, it)| f(i, it)).collect();
+    }
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let item_chunks = split_mut_indexed(items, threads);
+    let out_chunks = split_mut_indexed(&mut out, threads);
+    std::thread::scope(|s| {
+        for ((offset, ichunk), (_, ochunk)) in item_chunks.into_iter().zip(out_chunks) {
+            let f = &f;
+            s.spawn(move || {
+                for (j, (item, slot)) in ichunk.iter_mut().zip(ochunk.iter_mut()).enumerate() {
+                    *slot = Some(f(offset + j, item));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|v| v.expect("par_map_mut worker panicked")).collect()
+}
+
 /// Split a mutable slice into ~equal chunks, tagging each with its offset.
 fn split_mut_indexed<T>(xs: &mut [T], parts: usize) -> Vec<(usize, &mut [T])> {
     let n = xs.len();
@@ -88,5 +125,32 @@ mod tests {
         assert_eq!(par_map(3, 1, |i| i + 1), vec![1, 2, 3]);
         assert_eq!(par_map(0, 8, |i| i), Vec::<usize>::new());
         assert_eq!(par_map(2, 100, |i| i), vec![0, 1]); // threads clamped to n
+    }
+
+    #[test]
+    fn par_map_mut_mutates_and_preserves_order() {
+        for threads in [1, 3, 8] {
+            let mut items: Vec<usize> = (0..37).collect();
+            let out = par_map_mut(&mut items, threads, |i, v| {
+                *v += 100;
+                i * 2
+            });
+            assert_eq!(out, (0..37).map(|i| i * 2).collect::<Vec<_>>(), "t={threads}");
+            assert_eq!(items, (100..137).collect::<Vec<_>>(), "t={threads}");
+        }
+    }
+
+    #[test]
+    fn par_map_mut_runs_each_exactly_once() {
+        let counter = AtomicUsize::new(0);
+        let mut items = vec![0u8; 23];
+        let out = par_map_mut(&mut items, 5, |i, _| {
+            counter.fetch_add(1, Ordering::SeqCst);
+            i
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 23);
+        assert_eq!(out.len(), 23);
+        let mut empty: Vec<u8> = Vec::new();
+        assert!(par_map_mut(&mut empty, 4, |i, _| i).is_empty());
     }
 }

@@ -1,0 +1,104 @@
+//! Cluster determinism: `threads = N` must be **bit-identical** to
+//! `threads = 1` — same global parameters, same losses, same metrics —
+//! because each client's RNG stream, parameter state, and f32 accumulation
+//! order are independent of worker scheduling, and aggregation always runs
+//! on the coordinator thread in a fixed order.
+
+use fedlama::aggregation::Policy;
+use fedlama::config::{Algorithm, PartitionKind, RunConfig};
+use fedlama::coordinator::Coordinator;
+use fedlama::data::DatasetKind;
+use fedlama::metrics::RunMetrics;
+
+fn base_cfg() -> RunConfig {
+    RunConfig {
+        dataset: DatasetKind::Toy,
+        n_clients: 8,
+        active_ratio: 1.0,
+        partition: PartitionKind::Dirichlet { alpha: 0.3 },
+        samples: 64,
+        lr: 0.05,
+        warmup_rounds: 2,
+        iterations: 96,
+        policy: Policy::fedlama(6, 2),
+        eval_every_rounds: 4,
+        eval_examples: 256,
+        seed: 17,
+        ..Default::default()
+    }
+}
+
+/// Everything except wall-clock fields must match exactly.
+fn assert_metrics_identical(a: &RunMetrics, b: &RunMetrics, what: &str) {
+    assert_eq!(a.tag, b.tag, "{what}: tag");
+    assert_eq!(a.curve, b.curve, "{what}: learning curve");
+    assert_eq!(a.final_acc, b.final_acc, "{what}: final_acc");
+    assert_eq!(a.final_loss, b.final_loss, "{what}: final_loss");
+    assert_eq!(a.total_comm_cost, b.total_comm_cost, "{what}: comm cost");
+    assert_eq!(a.total_syncs, b.total_syncs, "{what}: syncs");
+    assert_eq!(a.total_bytes, b.total_bytes, "{what}: bytes");
+    assert_eq!(a.per_group, b.per_group, "{what}: per-group ledger");
+}
+
+fn run_with_threads(cfg: &RunConfig, threads: usize) -> (Coordinator, RunMetrics) {
+    let cfg = RunConfig { threads, ..cfg.clone() };
+    let mut coord = Coordinator::new(cfg).unwrap();
+    let metrics = coord.run().unwrap();
+    (coord, metrics)
+}
+
+fn assert_threads_bit_identical(cfg: RunConfig, threads: usize, what: &str) {
+    let (serial, m1) = run_with_threads(&cfg, 1);
+    let (parallel, mn) = run_with_threads(&cfg, threads);
+    assert_metrics_identical(&m1, &mn, what);
+    for (gt, (a, b)) in serial.global.iter().zip(&parallel.global).enumerate() {
+        assert_eq!(a.data, b.data, "{what}: global tensor {gt} diverged at threads={threads}");
+    }
+    for (a, b) in serial.clients.iter().zip(&parallel.clients) {
+        assert_eq!(a.steps_in_round, b.steps_in_round, "{what}: client step counts");
+        for (ta, tb) in a.params.iter().zip(&b.params) {
+            assert_eq!(ta.data, tb.data, "{what}: client {} params diverged", a.id);
+        }
+    }
+}
+
+#[test]
+fn threads8_bit_identical_sgd_fedlama() {
+    assert_threads_bit_identical(base_cfg(), 8, "sgd/fedlama(6,2)");
+}
+
+#[test]
+fn threads8_bit_identical_scaffold() {
+    let cfg = RunConfig {
+        algorithm: Algorithm::Scaffold,
+        policy: Policy::fedavg(6),
+        iterations: 48,
+        use_chunk: false,
+        ..base_cfg()
+    };
+    assert_threads_bit_identical(cfg, 8, "scaffold/fedavg(6)");
+}
+
+#[test]
+fn odd_thread_counts_and_partial_participation_are_identical() {
+    // 3 workers over 4 active clients exercises uneven chunking; partial
+    // participation exercises the moved-out/restored client bookkeeping.
+    let cfg = RunConfig {
+        active_ratio: 0.5,
+        policy: Policy::fedlama(6, 2),
+        iterations: 48,
+        ..base_cfg()
+    };
+    assert_threads_bit_identical(cfg, 3, "sgd/partial-participation");
+    // threads beyond the active-client count clamp without changing results
+    let cfg = RunConfig { active_ratio: 0.5, iterations: 24, ..base_cfg() };
+    assert_threads_bit_identical(cfg, 64, "sgd/threads>clients");
+}
+
+#[test]
+fn auto_threads_is_identical_too() {
+    // threads = 0 resolves to available_parallelism - 2; whatever that is
+    // on the host, results must not change.
+    let cfg = RunConfig { iterations: 48, ..base_cfg() };
+    assert_threads_bit_identical(cfg, 0, "sgd/auto-threads");
+}

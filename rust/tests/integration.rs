@@ -1,32 +1,21 @@
-//! Integration tests over the real AOT artifacts (built by `make artifacts`).
+//! Integration tests over the hermetic native backend: these run on every
+//! `cargo test` with zero external artifacts, exercising the full stack —
+//! backend compute, the coordinator loop, FedLAMA scheduling, comm
+//! accounting, compression, and the baselines.
 //!
-//! These exercise the full stack: HLO-text load -> PJRT compile -> execute,
-//! the coordinator loop, FedLAMA scheduling, comm accounting, and the
-//! native-vs-Pallas aggregation equivalence.  All tests use the `mlp`
-//! artifacts (fast); model-zoo coverage lives in the python tests.
+//! The PJRT/artifact variants of the backend-equivalence tests live at the
+//! bottom behind `#[cfg(feature = "pjrt")]` and still skip when no AOT
+//! artifacts are present (run `make artifacts` with a real xla crate).
 
-use std::path::{Path, PathBuf};
-
-use fedlama::aggregation::{aggregate_native, AggBackend, Policy};
+use fedlama::aggregation::Policy;
 use fedlama::config::{Algorithm, PartitionKind, RunConfig};
 use fedlama::coordinator::Coordinator;
 use fedlama::data::DatasetKind;
-use fedlama::runtime::ModelRuntime;
+use fedlama::runtime::{ComputeBackend, NativeBackend};
 use fedlama::util::rng::Rng;
 
-fn artifacts(model: &str) -> Option<PathBuf> {
-    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(model);
-    if p.join("manifest.json").exists() {
-        Some(p)
-    } else {
-        eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", p.display());
-        None
-    }
-}
-
-fn toy_cfg(dir: PathBuf) -> RunConfig {
+fn toy_cfg() -> RunConfig {
     RunConfig {
-        model_dir: dir,
         dataset: DatasetKind::Toy,
         n_clients: 4,
         samples: 256,
@@ -42,20 +31,19 @@ fn toy_cfg(dir: PathBuf) -> RunConfig {
 }
 
 #[test]
-fn runtime_loads_and_inits_deterministically() {
-    let Some(dir) = artifacts("mlp") else { return };
-    let rt = ModelRuntime::load(&dir).unwrap();
-    assert_eq!(rt.manifest.model, "mlp");
+fn backend_loads_and_inits_deterministically() {
+    let rt = NativeBackend::for_dataset(DatasetKind::Toy);
+    assert_eq!(rt.manifest().model, "native-mlp");
     let p1 = rt.init_params(3).unwrap();
     let p2 = rt.init_params(3).unwrap();
-    assert_eq!(p1.len(), rt.manifest.num_tensors());
+    assert_eq!(p1.len(), rt.manifest().num_tensors());
     for (a, b) in p1.iter().zip(&p2) {
         assert_eq!(a.data, b.data, "same seed -> same init");
     }
     let p3 = rt.init_params(4).unwrap();
     assert!(p1.iter().zip(&p3).any(|(a, b)| a.data != b.data), "different seed -> different init");
     // shapes match the manifest
-    for (t, info) in p1.iter().zip(&rt.manifest.params) {
+    for (t, info) in p1.iter().zip(&rt.manifest().params) {
         assert_eq!(t.shape, info.shape, "{}", info.name);
         assert_eq!(t.len(), info.dim);
     }
@@ -63,14 +51,13 @@ fn runtime_loads_and_inits_deterministically() {
 
 #[test]
 fn train_step_reduces_loss_on_fixed_batch() {
-    let Some(dir) = artifacts("mlp") else { return };
-    let rt = ModelRuntime::load(&dir).unwrap();
+    let rt = NativeBackend::for_dataset(DatasetKind::Toy);
     let mut params = rt.init_params(0).unwrap();
-    let b = rt.manifest.batch_size;
-    let d: usize = rt.manifest.input_shape.iter().product();
+    let b = rt.manifest().batch_size;
+    let d: usize = rt.manifest().input_shape.iter().product();
     let mut rng = Rng::new(5);
     let x: Vec<f32> = (0..b * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
-    let y: Vec<i32> = (0..b).map(|i| (i % rt.manifest.num_classes) as i32).collect();
+    let y: Vec<i32> = (0..b).map(|i| (i % rt.manifest().num_classes) as i32).collect();
     let first = rt.train_step(&mut params, &x, &y, 0.1).unwrap();
     let mut last = first;
     for _ in 0..30 {
@@ -81,15 +68,14 @@ fn train_step_reduces_loss_on_fixed_batch() {
 
 #[test]
 fn train_chunk_matches_single_steps() {
-    let Some(dir) = artifacts("mlp") else { return };
-    let rt = ModelRuntime::load(&dir).unwrap();
-    let k = rt.manifest.chunk_k;
-    assert!(k > 1, "expected a chunk artifact");
-    let b = rt.manifest.batch_size;
-    let d: usize = rt.manifest.input_shape.iter().product();
+    let rt = NativeBackend::for_dataset(DatasetKind::Toy);
+    let k = rt.chunk_k();
+    assert!(k > 1, "expected a chunked configuration");
+    let b = rt.manifest().batch_size;
+    let d: usize = rt.manifest().input_shape.iter().product();
     let mut rng = Rng::new(6);
     let xs: Vec<f32> = (0..k * b * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
-    let ys: Vec<i32> = (0..k * b).map(|i| (i % rt.manifest.num_classes) as i32).collect();
+    let ys: Vec<i32> = (0..k * b).map(|i| (i % rt.manifest().num_classes) as i32).collect();
 
     let mut p_chunk = rt.init_params(1).unwrap();
     let losses = rt.train_chunk(&mut p_chunk, &xs, &ys, 0.05).unwrap();
@@ -102,54 +88,16 @@ fn train_chunk_matches_single_steps() {
         let y = &ys[s * b..(s + 1) * b];
         step_losses.push(rt.train_step(&mut p_step, x, y, 0.05).unwrap());
     }
-    for (a, b) in losses.iter().zip(&step_losses) {
-        assert!((a - b).abs() < 1e-4, "chunk loss {a} vs step loss {b}");
-    }
+    // chunking is defined as K single steps: bit-identical, not just close
+    assert_eq!(losses, step_losses);
     for (a, b) in p_chunk.iter().zip(&p_step) {
-        let max_diff = a
-            .data
-            .iter()
-            .zip(&b.data)
-            .map(|(x, y)| (x - y).abs())
-            .fold(0.0f32, f32::max);
-        assert!(max_diff < 1e-4, "chunked and stepped params diverged: {max_diff}");
-    }
-}
-
-#[test]
-fn pallas_agg_kernel_matches_native() {
-    let Some(dir) = artifacts("mlp") else { return };
-    let rt = ModelRuntime::load(&dir).unwrap();
-    let mut rng = Rng::new(8);
-    for (&dim, by_m) in rt.manifest.agg_by_dim.clone().iter() {
-        for (&m, _) in by_m {
-            let Some(exe) = rt.agg_kernel(dim, m) else {
-                panic!("manifest lists agg kernel for dim={dim} m={m} but load failed")
-            };
-            let stack: Vec<f32> = (0..m * dim).map(|_| rng.normal_f32(0.0, 1.0)).collect();
-            let mut w: Vec<f32> = (0..m).map(|_| rng.f32() + 0.05).collect();
-            let s: f32 = w.iter().sum();
-            w.iter_mut().for_each(|v| *v /= s);
-            let (u_xla, disc_xla) = rt.run_agg(&exe, &stack, &w, dim).unwrap();
-            let rows: Vec<&[f32]> = (0..m).map(|i| &stack[i * dim..(i + 1) * dim]).collect();
-            let mut u_nat = vec![0.0f32; dim];
-            let disc_nat = aggregate_native(&rows, &w, &mut u_nat);
-            let max_diff = u_xla
-                .iter()
-                .zip(&u_nat)
-                .map(|(a, b)| (a - b).abs())
-                .fold(0.0f32, f32::max);
-            assert!(max_diff < 1e-4, "agg u mismatch dim={dim} m={m}: {max_diff}");
-            let rel = ((disc_xla as f64 - disc_nat) / disc_nat.max(1e-9)).abs();
-            assert!(rel < 1e-3, "disc mismatch dim={dim} m={m}: {disc_xla} vs {disc_nat}");
-        }
+        assert_eq!(a.data, b.data, "chunked and stepped params diverged");
     }
 }
 
 #[test]
 fn fedavg_run_learns_and_accounts_comm() {
-    let Some(dir) = artifacts("mlp") else { return };
-    let mut coord = Coordinator::new(toy_cfg(dir)).unwrap();
+    let mut coord = Coordinator::new(toy_cfg()).unwrap();
     let metrics = coord.run().unwrap();
     // the toy task is easy: accuracy far above chance (10%)
     assert!(metrics.final_acc > 0.5, "final acc {}", metrics.final_acc);
@@ -158,18 +106,17 @@ fn fedavg_run_learns_and_accounts_comm() {
     let last = metrics.curve.last().unwrap().train_loss;
     assert!(last < first, "loss {first} -> {last}");
     // comm accounting: K/interval syncs of the whole model
-    let expected_syncs = (96 / 6) * coord.runtime.manifest.groups.len() as u64;
+    let expected_syncs = (96 / 6) * coord.manifest().groups.len() as u64;
     assert_eq!(metrics.total_syncs, expected_syncs);
-    let expected_cost: u64 = (96 / 6) * coord.runtime.manifest.num_params as u64;
+    let expected_cost: u64 = (96 / 6) * coord.manifest().num_params as u64;
     assert_eq!(metrics.total_comm_cost, expected_cost);
 }
 
 #[test]
 fn fedlama_phi1_is_bit_identical_to_fedavg() {
-    let Some(dir) = artifacts("mlp") else { return };
-    let mut avg = Coordinator::new(toy_cfg(dir.clone())).unwrap();
+    let mut avg = Coordinator::new(toy_cfg()).unwrap();
     let m_avg = avg.run().unwrap();
-    let cfg = RunConfig { policy: Policy::fedlama(6, 1), ..toy_cfg(dir) };
+    let cfg = RunConfig { policy: Policy::fedlama(6, 1), ..toy_cfg() };
     let mut lama = Coordinator::new(cfg).unwrap();
     let m_lama = lama.run().unwrap();
     assert_eq!(m_avg.total_comm_cost, m_lama.total_comm_cost);
@@ -181,8 +128,7 @@ fn fedlama_phi1_is_bit_identical_to_fedavg() {
 
 #[test]
 fn fedlama_reduces_comm_vs_fedavg_base_interval() {
-    let Some(dir) = artifacts("mlp") else { return };
-    let base = toy_cfg(dir.clone());
+    let base = toy_cfg();
     let mut avg = Coordinator::new(base.clone()).unwrap();
     let m_avg = avg.run().unwrap();
     let cfg = RunConfig { policy: Policy::fedlama(6, 4), ..base };
@@ -204,7 +150,6 @@ fn fedlama_reduces_comm_vs_fedavg_base_interval() {
 
 #[test]
 fn partial_participation_runs_and_resamples() {
-    let Some(dir) = artifacts("mlp") else { return };
     let cfg = RunConfig {
         n_clients: 8,
         active_ratio: 0.25,
@@ -212,7 +157,7 @@ fn partial_participation_runs_and_resamples() {
         samples: 64,
         policy: Policy::fedlama(6, 2),
         iterations: 96,
-        ..toy_cfg(dir)
+        ..toy_cfg()
     };
     let mut coord = Coordinator::new(cfg).unwrap();
     let metrics = coord.run().unwrap();
@@ -223,7 +168,6 @@ fn partial_participation_runs_and_resamples() {
 
 #[test]
 fn baselines_run_and_learn() {
-    let Some(dir) = artifacts("mlp") else { return };
     for algo in [
         Algorithm::Prox { mu: 0.01 },
         Algorithm::Scaffold,
@@ -237,7 +181,7 @@ fn baselines_run_and_learn() {
             partition: PartitionKind::Dirichlet { alpha: 0.3 },
             samples: 64,
             use_chunk: false,
-            ..toy_cfg(dir.clone())
+            ..toy_cfg()
         };
         let mut coord = Coordinator::new(cfg).unwrap();
         let metrics = coord.run().unwrap();
@@ -252,35 +196,12 @@ fn baselines_run_and_learn() {
 }
 
 #[test]
-fn xla_and_native_backends_agree_end_to_end() {
-    let Some(dir) = artifacts("mlp") else { return };
-    let base = RunConfig {
-        backend: AggBackend::Native,
-        iterations: 24,
-        eval_every_rounds: 0,
-        ..toy_cfg(dir)
-    };
-    let mut nat = Coordinator::new(base.clone()).unwrap();
-    let m_nat = nat.run().unwrap();
-    let cfg = RunConfig { backend: AggBackend::Xla, ..base };
-    let mut xla = Coordinator::new(cfg).unwrap();
-    let m_xla = xla.run().unwrap();
-    assert_eq!(m_nat.total_comm_cost, m_xla.total_comm_cost);
-    for (a, b) in nat.global.iter().zip(&xla.global) {
-        let max_diff =
-            a.data.iter().zip(&b.data).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
-        assert!(max_diff < 1e-3, "backend divergence {max_diff}");
-    }
-}
-
-#[test]
 fn compression_composes_with_fedlama() {
-    let Some(dir) = artifacts("mlp") else { return };
     let base = RunConfig {
         policy: Policy::fedlama(6, 2),
         iterations: 96,
         eval_every_rounds: 0,
-        ..toy_cfg(dir)
+        ..toy_cfg()
     };
     let mut dense = Coordinator::new(base.clone()).unwrap();
     let m_dense = dense.run().unwrap();
@@ -309,8 +230,7 @@ fn compression_composes_with_fedlama() {
 
 #[test]
 fn accelerate_variant_runs_and_syncs_more() {
-    let Some(dir) = artifacts("mlp") else { return };
-    let base = toy_cfg(dir);
+    let base = toy_cfg();
     let lama = RunConfig { policy: Policy::fedlama(6, 2), ..base.clone() };
     let acc = RunConfig {
         policy: Policy::FedLama { tau: 6, phi: 2, accelerate: true },
@@ -323,4 +243,109 @@ fn accelerate_variant_runs_and_syncs_more() {
     // both keep the full-sync guarantee and produce finite results
     assert!(m_acc.final_loss.is_finite() && m_lama.final_loss.is_finite());
     assert!(m_acc.total_comm_cost <= m_lama.total_comm_cost * 2);
+}
+
+#[test]
+fn grad_step_is_consistent_with_train_step() {
+    let rt = NativeBackend::for_dataset(DatasetKind::Toy);
+    let b = rt.manifest().batch_size;
+    let d: usize = rt.manifest().input_shape.iter().product();
+    let mut rng = Rng::new(12);
+    let x: Vec<f32> = (0..b * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let y: Vec<i32> = (0..b).map(|i| (i % rt.manifest().num_classes) as i32).collect();
+    let p0 = rt.init_params(2).unwrap();
+    let (grads, gloss) = rt.grad_step(&p0, &x, &y).unwrap();
+    let mut p1 = p0.clone();
+    let tloss = rt.train_step(&mut p1, &x, &y, 0.2).unwrap();
+    assert_eq!(gloss, tloss);
+    for ((new, old), g) in p1.iter().zip(&p0).zip(&grads) {
+        for ((&pn, &po), &gv) in new.data.iter().zip(&old.data).zip(&g.data) {
+            assert_eq!(pn, po - 0.2 * gv);
+        }
+    }
+}
+
+#[test]
+fn native_engine_rejects_forced_xla_agg() {
+    use fedlama::aggregation::AggBackend;
+    let cfg = RunConfig { backend: AggBackend::Xla, ..toy_cfg() };
+    assert!(cfg.validate().is_err(), "native engine must reject backend=xla at validation");
+}
+
+// ---------------------------------------------------------------------------
+// PJRT/artifact variants: compiled only with `--features pjrt`, and skipped
+// at runtime unless `make artifacts` has produced AOT HLO files.
+// ---------------------------------------------------------------------------
+
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use super::*;
+    use fedlama::aggregation::{aggregate_native, AggBackend};
+    use fedlama::config::EngineKind;
+    use fedlama::runtime::ModelRuntime;
+    use std::path::{Path, PathBuf};
+
+    fn artifacts(model: &str) -> Option<PathBuf> {
+        let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(model);
+        if p.join("manifest.json").exists() {
+            Some(p)
+        } else {
+            eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", p.display());
+            None
+        }
+    }
+
+    #[test]
+    fn pallas_agg_kernel_matches_native() {
+        let Some(dir) = artifacts("mlp") else { return };
+        let rt = ModelRuntime::load(&dir).unwrap();
+        let mut rng = Rng::new(8);
+        for (&dim, by_m) in rt.manifest.agg_by_dim.clone().iter() {
+            for (&m, _) in by_m {
+                let Some(exe) = rt.agg_kernel(dim, m) else {
+                    panic!("manifest lists agg kernel for dim={dim} m={m} but load failed")
+                };
+                let stack: Vec<f32> = (0..m * dim).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                let mut w: Vec<f32> = (0..m).map(|_| rng.f32() + 0.05).collect();
+                let s: f32 = w.iter().sum();
+                w.iter_mut().for_each(|v| *v /= s);
+                let (u_xla, disc_xla) = rt.run_agg(&exe, &stack, &w, dim).unwrap();
+                let rows: Vec<&[f32]> = (0..m).map(|i| &stack[i * dim..(i + 1) * dim]).collect();
+                let mut u_nat = vec![0.0f32; dim];
+                let disc_nat = aggregate_native(&rows, &w, &mut u_nat);
+                let max_diff = u_xla
+                    .iter()
+                    .zip(&u_nat)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0f32, f32::max);
+                assert!(max_diff < 1e-4, "agg u mismatch dim={dim} m={m}: {max_diff}");
+                let rel = ((disc_xla as f64 - disc_nat) / disc_nat.max(1e-9)).abs();
+                assert!(rel < 1e-3, "disc mismatch dim={dim} m={m}: {disc_xla} vs {disc_nat}");
+            }
+        }
+    }
+
+    #[test]
+    fn xla_and_native_agg_backends_agree_end_to_end() {
+        let Some(dir) = artifacts("mlp") else { return };
+        let base = RunConfig {
+            engine: EngineKind::Pjrt,
+            model_dir: dir,
+            backend: AggBackend::Native,
+            iterations: 24,
+            eval_every_rounds: 0,
+            ..toy_cfg()
+        };
+        let mut nat = Coordinator::new(base.clone()).unwrap();
+        let m_nat = nat.run().unwrap();
+        let cfg = RunConfig { backend: AggBackend::Xla, ..base };
+        let mut xla = Coordinator::new(cfg).unwrap();
+        let m_xla = xla.run().unwrap();
+        assert_eq!(m_nat.total_comm_cost, m_xla.total_comm_cost);
+        for (a, b) in nat.global.iter().zip(&xla.global) {
+            let max_diff =
+                a.data.iter().zip(&b.data).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+            assert!(max_diff < 1e-3, "backend divergence {max_diff}");
+        }
+    }
 }

@@ -1,0 +1,207 @@
+//! Property tests for `comm::compression` under `util::prop::forall`:
+//! wire-size upper bounds, decode idempotence, error bounds, and the dense
+//! round-trip exactness.
+
+use fedlama::comm::{Compressor, Dense, Quantizer, TopK};
+use fedlama::util::prop::{forall, Strategy, VecF64};
+use fedlama::util::rng::Rng;
+
+/// Random f32 vectors, non-degenerate (no zeros, so top-k tie-breaking and
+/// quantizer scales stay well-defined the way real updates are).
+struct F32Vec {
+    min_len: usize,
+    max_len: usize,
+}
+
+impl Strategy for F32Vec {
+    type Value = Vec<f64>;
+    fn generate(&self, rng: &mut Rng) -> Vec<f64> {
+        let inner = VecF64 { min_len: self.min_len, max_len: self.max_len, lo: -8.0, hi: 8.0 };
+        inner
+            .generate(rng)
+            .into_iter()
+            .map(|v| if v.abs() < 1e-3 { v + 0.01 } else { v })
+            .collect()
+    }
+    fn shrink(&self, v: &Vec<f64>) -> Vec<Vec<f64>> {
+        if v.len() > self.min_len {
+            vec![v[..v.len() - 1].to_vec(), v[..self.min_len.max(v.len() / 2)].to_vec()]
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+fn to_f32(v: &[f64]) -> Vec<f32> {
+    v.iter().map(|&x| x as f32).collect()
+}
+
+#[test]
+fn dense_round_trip_is_exact() {
+    forall(101, 200, &F32Vec { min_len: 1, max_len: 256 }, |v| {
+        let mut data = to_f32(v);
+        let orig = data.clone();
+        let bytes = Dense.compress(&mut data);
+        if data != orig {
+            return Err("dense changed values".into());
+        }
+        if bytes != 4 * data.len() {
+            return Err(format!("dense bytes {bytes} != {}", 4 * data.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn quantizer_wire_size_upper_bound() {
+    for bits in [1u32, 4, 8, 16] {
+        forall(200 + bits as u64, 100, &F32Vec { min_len: 1, max_len: 4096 }, |v| {
+            let mut q = Quantizer::new(bits, 7);
+            let mut data = to_f32(v);
+            let n = data.len();
+            let bytes = q.compress(&mut data);
+            if bytes != q.encoded_bytes(n) {
+                return Err(format!("bytes {bytes} != encoded_bytes {}", q.encoded_bytes(n)));
+            }
+            // payload: bits/8 per value rounded up; scales: one f32 per 1024
+            let bound = (n * bits as usize).div_ceil(8) + n.div_ceil(1024) * 4;
+            if bytes > bound {
+                return Err(format!("q{bits}: {bytes} bytes > bound {bound} for n={n}"));
+            }
+            // dense is never beaten by 16-bit+scales on tiny inputs, but 8
+            // bits or fewer must strictly shrink anything >= one chunk
+            if bits <= 8 && n >= 1024 && bytes >= 4 * n {
+                return Err(format!("q{bits} did not compress: {bytes} >= {}", 4 * n));
+            }
+            Ok(())
+        });
+    }
+}
+
+#[test]
+fn quantizer_error_bounded_by_one_level() {
+    for bits in [2u32, 4, 8] {
+        forall(300 + bits as u64, 100, &F32Vec { min_len: 1, max_len: 600 }, |v| {
+            let mut q = Quantizer::new(bits, 11);
+            let orig = to_f32(v);
+            let mut data = orig.clone();
+            q.compress(&mut data);
+            let levels = ((1u32 << bits) - 1) as f32;
+            for chunk_start in (0..orig.len()).step_by(1024) {
+                let end = (chunk_start + 1024).min(orig.len());
+                let max =
+                    orig[chunk_start..end].iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+                let tol = max / levels + 1e-5;
+                for i in chunk_start..end {
+                    let err = (orig[i] - data[i]).abs();
+                    if err > tol {
+                        return Err(format!(
+                            "q{bits}: |{} - {}| = {err} > one level {tol}",
+                            orig[i], data[i]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}
+
+#[test]
+fn quantizer_decode_is_idempotent_up_to_one_level() {
+    // Re-encoding a decoded vector lands on the same grid: values stay
+    // within one quantization level (exact equality can be broken only by
+    // f32 rounding at grid boundaries + stochastic rounding).
+    forall(401, 150, &F32Vec { min_len: 1, max_len: 512 }, |v| {
+        let mut q = Quantizer::new(8, 13);
+        let mut first = to_f32(v);
+        q.compress(&mut first);
+        let mut second = first.clone();
+        let b1 = q.compress(&mut second);
+        if b1 != q.encoded_bytes(first.len()) {
+            return Err("second pass changed wire size".into());
+        }
+        let levels = 255.0f32;
+        for chunk_start in (0..first.len()).step_by(1024) {
+            let end = (chunk_start + 1024).min(first.len());
+            let max = first[chunk_start..end].iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+            let tol = max / levels * 1.01 + 1e-5;
+            for i in chunk_start..end {
+                if (first[i] - second[i]).abs() > tol {
+                    return Err(format!(
+                        "re-encode moved {} -> {} (> one level {tol})",
+                        first[i], second[i]
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn topk_wire_size_upper_bound_and_support() {
+    for &ratio in &[0.01f64, 0.1, 0.25] {
+        forall((ratio * 1000.0) as u64 + 500, 100, &F32Vec { min_len: 2, max_len: 800 }, |v| {
+            let mut t = TopK::new(ratio);
+            let mut data = to_f32(v);
+            let n = data.len();
+            let orig = data.clone();
+            let bytes = t.compress(&mut data);
+            let k = t.kept(n);
+            // 4B value + 4B index per kept entry, never more than dense
+            if bytes > k * 8 {
+                return Err(format!("top{ratio}: {bytes} > {} for n={n}", k * 8));
+            }
+            if bytes > 8 * n {
+                return Err("worse than dense+indices".into());
+            }
+            let nonzero = data.iter().filter(|&&x| x != 0.0).count();
+            if nonzero > k {
+                return Err(format!("kept {nonzero} > k={k}"));
+            }
+            // kept values are unchanged originals
+            for (a, b) in data.iter().zip(&orig) {
+                if *a != 0.0 && a != b {
+                    return Err("kept value was altered".into());
+                }
+            }
+            Ok(())
+        });
+    }
+}
+
+#[test]
+fn topk_decode_is_exactly_idempotent() {
+    forall(601, 150, &F32Vec { min_len: 4, max_len: 800 }, |v| {
+        let mut t = TopK::new(0.1);
+        let mut first = to_f32(v);
+        let b1 = t.compress(&mut first);
+        let mut second = first.clone();
+        let b2 = t.compress(&mut second);
+        if first != second {
+            return Err("top-k re-encode changed the vector".into());
+        }
+        if b2 > b1 {
+            return Err(format!("re-encode grew: {b1} -> {b2}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn compressor_parse_round_trips_names() {
+    for spec in ["dense", "q4", "q8", "q16", "top1", "top10", "top100"] {
+        let c = fedlama::comm::parse_compressor(spec, 1)
+            .unwrap_or_else(|| panic!("spec {spec} should parse"));
+        let mut v = vec![1.0f32, -2.0, 3.0, -4.0];
+        let bytes = {
+            let mut c = c;
+            c.compress(&mut v)
+        };
+        assert!(bytes > 0, "{spec}: zero wire size");
+    }
+    assert!(fedlama::comm::parse_compressor("q0", 1).is_none());
+    assert!(fedlama::comm::parse_compressor("top0", 1).is_none());
+    assert!(fedlama::comm::parse_compressor("gzip", 1).is_none());
+}
