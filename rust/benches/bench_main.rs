@@ -1,21 +1,24 @@
 //! Benchmark harness (`cargo bench`), custom — no criterion offline.
 //!
-//! Four sections, all hermetic (native backend, no artifacts):
+//! Sections, all hermetic (native backend, no artifacts):
 //!   1. Microbenches: the native aggregation hot path across layer sizes
-//!      and client counts, plus per-model train-step / train-chunk / eval
-//!      latency.
+//!      and client counts; per-op dense vs conv2d forward/backward at the
+//!      zoo's preset shapes (the SIMD-work baseline); the scratch-buffer
+//!      reuse delta; per-model train-step / train-chunk / eval latency.
 //!   2. Cluster scaling: one federated round at threads = 1, 2, 4, 8 —
 //!      the `runtime::cluster` fan-out speedup (results are bit-identical
 //!      across thread counts; only wall time changes).
-//!   3. Paper tables: regenerates Tables 1-5 (+ the baselines ablation) at
-//!      smoke scale and prints the paper-format rows.  BENCH_ALL=1 also
-//!      runs the appendix tables 6-11.
+//!   3. Paper tables.  Since the layer-graph refactor, tables 1-5 train
+//!      real conv/ResNet models natively — minutes, not seconds — so the
+//!      default run covers only the MLP baselines ablation; BENCH_CONV=1
+//!      adds tables 1-5 and BENCH_ALL=1 adds the appendix tables too.
 //!   4. Paper figures: Figure 1 crossover curves, Figures 2/3 per-layer
-//!      comm profile, Figures 4-6 learning-curve endpoints.
+//!      comm profile, Figures 4-6 learning-curve endpoints (MLP scale).
 //!
 //! Environment:
 //!   BENCH_SCALE=smoke|default   experiment scale (default: smoke)
-//!   BENCH_ALL=1                 include appendix tables
+//!   BENCH_CONV=1                include the conv-model tables 1-5
+//!   BENCH_ALL=1                 include every table incl. appendix
 //!   BENCH_FILTER=<substr>       only run sections whose name matches
 
 use std::time::Instant;
@@ -27,7 +30,8 @@ use fedlama::coordinator::Coordinator;
 use fedlama::data::DatasetKind;
 use fedlama::metrics::tables::Table;
 use fedlama::reports;
-use fedlama::runtime::{ComputeBackend, NativeBackend};
+use fedlama::runtime::ops::{Conv2d, Dense, LayerOp, Scratch};
+use fedlama::runtime::{zoo, ComputeBackend, HostTensor, NativeBackend};
 use fedlama::util::rng::Rng;
 use fedlama::util::stats;
 
@@ -40,6 +44,12 @@ fn main() -> anyhow::Result<()> {
     let t0 = Instant::now();
     if run("micro-agg") {
         bench_aggregation()?;
+    }
+    if run("micro-op") {
+        bench_ops()?;
+    }
+    if run("micro-scratch") {
+        bench_scratch_reuse()?;
     }
     if run("micro-step") {
         bench_model_steps()?;
@@ -100,19 +110,136 @@ fn bench_aggregation() -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Section 1b: per-model native step latency.
+/// Section 1b: per-op microbench — dense vs conv2d forward/backward at
+/// the zoo's preset shapes.  This is the baseline future SIMD work gets
+/// compared against.
+fn bench_ops() -> anyhow::Result<()> {
+    println!("\n### micro-op: dense vs conv2d forward/backward (preset shapes, batch 8)\n");
+    let b = 8usize;
+    type OpCase = (&'static str, Box<dyn LayerOp>, Vec<usize>);
+    let cases: Vec<OpCase> = vec![
+        ("dense 784->64 (femnist fc1)", Box::new(Dense::new("d1", 784, 64)), vec![784]),
+        ("dense 3072->128 (mlp fc1)", Box::new(Dense::new("d2", 3072, 128)), vec![3072]),
+        (
+            "conv3x3 3->16 @32x32 (stem)",
+            Box::new(Conv2d::new("c1", [32, 32, 3], 16, 3, 1, 1)),
+            vec![32, 32, 3],
+        ),
+        (
+            "conv3x3 16->16 @32x32 (s1)",
+            Box::new(Conv2d::new("c2", [32, 32, 16], 16, 3, 1, 1)),
+            vec![32, 32, 16],
+        ),
+        (
+            "conv3x3 16->32 @32x32 s2",
+            Box::new(Conv2d::new("c3", [32, 32, 16], 32, 3, 2, 1)),
+            vec![32, 32, 16],
+        ),
+    ];
+    let mut t = Table::new(
+        "per-op latency (scalar rust, deterministic accumulation)",
+        &["op", "params", "fwd (ms)", "bwd (ms)", "fwd GFLOP/s"],
+    );
+    for (label, op, in_shape) in cases {
+        let in_dim: usize = in_shape.iter().product();
+        let out_shape = op.out_shape(&in_shape)?;
+        let out_dim: usize = out_shape.iter().product();
+        let root = Rng::new(3);
+        let ps: Vec<HostTensor> = op
+            .params()
+            .iter()
+            .enumerate()
+            .map(|(i, spec)| {
+                let mut r = root.fork(i as u64);
+                spec.init.materialize(&spec.shape, &mut r)
+            })
+            .collect();
+        let n_params: usize = ps.iter().map(|p| p.data.len()).sum();
+        let mut rng = Rng::new(4);
+        let x: Vec<f32> = (0..b * in_dim).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let dy: Vec<f32> = (0..b * out_dim).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut y = vec![0.0f32; b * out_dim];
+        let mut dx = vec![0.0f32; b * in_dim];
+        let mut grads: Vec<HostTensor> = ps.iter().map(|p| HostTensor::zeros(&p.shape)).collect();
+        let mut s = Scratch::default();
+        op.forward(&ps, &x, &mut y, b, &mut s); // warm the scratch pool
+        let reps = 10;
+        let mut fwd = Vec::new();
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            op.forward(&ps, &x, &mut y, b, &mut s);
+            fwd.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        let mut bwd = Vec::new();
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            op.backward(&ps, &x, &y, &dy, &mut dx, &mut grads, b, &mut s);
+            bwd.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        // forward matmul flops: 2 · (b · spatial positions) · weight elems
+        let cout = *out_shape.last().unwrap();
+        let bias_len = ps.last().map(|p| p.data.len()).unwrap_or(0);
+        let flops = 2.0 * (b * out_dim / cout) as f64 * (n_params - bias_len) as f64;
+        let fwd_ms = stats::mean(&fwd);
+        t.row(vec![
+            label.to_string(),
+            n_params.to_string(),
+            format!("{fwd_ms:.3} ±{:.3}", stats::stddev(&fwd)),
+            format!("{:.3} ±{:.3}", stats::mean(&bwd), stats::stddev(&bwd)),
+            format!("{:.2}", flops / (fwd_ms * 1e-3) / 1e9),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+/// Section 1c: the scratch/activation buffer-reuse win (the ROADMAP perf
+/// item): identical numerics, fewer allocations per batch.
+fn bench_scratch_reuse() -> anyhow::Result<()> {
+    println!("\n### micro-scratch: per-batch buffer reuse (femnist_cnn train_step)\n");
+    let timed = |reuse: bool| -> anyhow::Result<(f64, f32)> {
+        let mut rt = zoo::build("femnist_cnn", DatasetKind::Femnist)?;
+        rt.set_scratch_reuse(reuse);
+        let mut params = rt.init_params(0)?;
+        let b = rt.manifest().batch_size;
+        let d: usize = rt.manifest().input_shape.iter().product();
+        let mut rng = Rng::new(1);
+        let x: Vec<f32> = (0..b * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let y: Vec<i32> = (0..b).map(|i| (i % rt.manifest().num_classes) as i32).collect();
+        rt.train_step(&mut params, &x, &y, 0.05)?; // warmup
+        let reps = 20;
+        let mut last = 0.0f32;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            last = rt.train_step(&mut params, &x, &y, 0.05)?;
+        }
+        Ok((t0.elapsed().as_secs_f64() * 1e3 / reps as f64, last))
+    };
+    let (reused_ms, l1) = timed(true)?;
+    let (fresh_ms, l2) = timed(false)?;
+    assert_eq!(l1, l2, "buffer reuse must not change numerics");
+    println!(
+        "train_step: {reused_ms:.3} ms with pooled buffers vs {fresh_ms:.3} ms reallocating \
+         per batch ({:+.1}% wall)\n",
+        100.0 * (reused_ms - fresh_ms) / fresh_ms
+    );
+    Ok(())
+}
+
+/// Section 1d: per-model native step latency.
 fn bench_model_steps() -> anyhow::Result<()> {
     println!("\n### micro-step: native backend latency per dataset model\n");
     let mut t = Table::new(
         "native executable latency",
         &["model", "params", "train_step (ms)", "train_chunk/step (ms)", "eval_step (ms)"],
     );
-    for (name, kind) in [
-        ("toy-mlp", DatasetKind::Toy),
-        ("femnist-mlp", DatasetKind::Femnist),
-        ("cifar10-mlp", DatasetKind::Cifar10),
-    ] {
-        let rt = NativeBackend::for_dataset(kind);
+    let models: Vec<(&str, NativeBackend)> = vec![
+        ("toy-mlp", NativeBackend::for_dataset(DatasetKind::Toy)),
+        ("cifar10-mlp", NativeBackend::for_dataset(DatasetKind::Cifar10)),
+        ("femnist-cnn", zoo::build("femnist_cnn", DatasetKind::Femnist)?),
+        ("cifar-cnn100", zoo::build("cifar_cnn100", DatasetKind::Cifar100)?),
+    ];
+    for (name, rt) in models {
         let mut params = rt.init_params(0)?;
         let b = rt.manifest().batch_size;
         let k = rt.chunk_k();
@@ -202,11 +329,20 @@ fn bench_cluster_scaling() -> anyhow::Result<()> {
 /// Section 3: the paper tables.
 fn bench_tables(scale: Scale) -> anyhow::Result<()> {
     let all = std::env::var("BENCH_ALL").ok().is_some_and(|v| v == "1");
+    let conv = all || std::env::var("BENCH_CONV").ok().is_some_and(|v| v == "1");
     let ids: Vec<&str> = if all {
         presets::ALL_TABLE_IDS.to_vec()
-    } else {
+    } else if conv {
         vec!["table1", "table2", "table3", "table4", "table5", "baselines"]
+    } else {
+        vec!["baselines"]
     };
+    if !conv {
+        println!(
+            "\n(tables 1-5 now train their real conv/ResNet architectures natively — \
+             minutes, not seconds; set BENCH_CONV=1 or BENCH_ALL=1 to include them)"
+        );
+    }
     for id in ids {
         let exp = presets::by_id(id, scale).unwrap();
         println!("\n### {id} ({:?} scale)\n", scale);

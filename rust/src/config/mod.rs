@@ -86,6 +86,11 @@ pub struct RunConfig {
     /// (`runtime::cluster`): 1 = serial, 0 = auto (leave two cores for the
     /// runtime), N > 1 = fixed.  Results are bit-identical for every value.
     pub threads: usize,
+    /// Model architecture by name.  The native engine resolves it through
+    /// the `runtime::zoo` registry (mlp | femnist_cnn | cifar_cnn100 |
+    /// resnet20); unknown names are a validation error, never a silent
+    /// MLP substitution.
+    pub model: String,
     /// artifacts/<model> directory (pjrt engine only).
     pub model_dir: PathBuf,
     pub dataset: DatasetKind,
@@ -148,6 +153,14 @@ impl RunConfig {
         );
         if self.engine == EngineKind::Native {
             anyhow::ensure!(
+                crate::runtime::zoo::is_known(&self.model),
+                "unknown model {:?}: the native engine builds {:?} and never substitutes \
+                 a different architecture silently (use --engine pjrt with artifacts for \
+                 anything else)",
+                self.model,
+                crate::runtime::zoo::MODELS
+            );
+            anyhow::ensure!(
                 self.backend != AggBackend::Xla,
                 "backend=xla forces the fused Pallas aggregation kernel, which the \
                  native engine does not provide (use --engine pjrt or backend=auto)"
@@ -179,6 +192,7 @@ impl Default for RunConfig {
         RunConfig {
             engine: EngineKind::Native,
             threads: 1,
+            model: "mlp".to_string(),
             model_dir: PathBuf::from("artifacts/mlp"),
             dataset: DatasetKind::Toy,
             algorithm: Algorithm::Sgd,
@@ -273,6 +287,24 @@ mod tests {
         let cfg = RunConfig { threads: 0, ..Default::default() };
         cfg.validate().unwrap();
         let cfg = RunConfig { threads: 64, ..Default::default() };
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn native_engine_rejects_unknown_models() {
+        let cfg = RunConfig { model: "vgg16".into(), ..Default::default() };
+        let err = cfg.validate().unwrap_err();
+        assert!(format!("{err:#}").contains("unknown model"), "{err:#}");
+        for m in ["mlp", "femnist_cnn", "cifar_cnn100", "resnet20"] {
+            let cfg = RunConfig { model: m.into(), ..Default::default() };
+            cfg.validate().unwrap_or_else(|e| panic!("{m} should validate: {e:#}"));
+        }
+        // the pjrt engine loads arbitrary artifacts; names are not checked
+        let cfg = RunConfig {
+            engine: EngineKind::Pjrt,
+            model: "anything".into(),
+            ..Default::default()
+        };
         cfg.validate().unwrap();
     }
 

@@ -93,6 +93,7 @@ fn artifacts_root() -> PathBuf {
 
 fn base_cfg(model: &str, dataset: DatasetKind, p: &PresetParams) -> RunConfig {
     RunConfig {
+        model: model.to_string(),
         model_dir: artifacts_root().join(model),
         dataset,
         n_clients: p.n_clients,
@@ -363,6 +364,18 @@ mod tests {
                 for r in &exp.rows {
                     r.cfg.validate().unwrap_or_else(|e| panic!("{id} / {}: {e}", r.label));
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn presets_build_their_real_architecture_natively() {
+        for id in ALL_TABLE_IDS {
+            let exp = by_id(id, Scale::Smoke).unwrap();
+            for r in &exp.rows {
+                let g = crate::runtime::zoo::build(&r.cfg.model, r.cfg.dataset)
+                    .unwrap_or_else(|e| panic!("{id}/{}: {e:#}", r.label));
+                assert_eq!(g.manifest().input_shape, r.cfg.dataset.input_shape());
             }
         }
     }

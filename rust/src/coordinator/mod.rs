@@ -1,7 +1,8 @@
 //! The federated training coordinator: Algorithm 1 end-to-end.
 //!
-//! One `Coordinator` owns a compute backend (native MLP by default, PJRT
-//! behind `--features pjrt`), the simulated client fleet, the layer-wise
+//! One `Coordinator` owns a compute backend (a native layer-graph model
+//! from `runtime::zoo` by default, PJRT behind `--features pjrt`), the
+//! simulated client fleet, the layer-wise
 //! aggregation schedule, and the communication ledger, and runs the
 //! paper's training loop:
 //!
@@ -31,7 +32,7 @@ use crate::data::{
     dirichlet_partition, femnist_partition, iid_partition, ClientData, Generator, Partition,
 };
 use crate::metrics::{CurvePoint, RunMetrics};
-use crate::runtime::{cluster, ComputeBackend, GroupInfo, HostTensor, Manifest, NativeBackend};
+use crate::runtime::{cluster, zoo, ComputeBackend, GroupInfo, HostTensor, Manifest};
 use crate::util::rng::Rng;
 
 pub struct Coordinator {
@@ -59,7 +60,9 @@ impl Coordinator {
     pub fn new(cfg: RunConfig) -> Result<Coordinator> {
         cfg.validate()?;
         let backend: Box<dyn ComputeBackend> = match cfg.engine {
-            EngineKind::Native => Box::new(NativeBackend::for_dataset(cfg.dataset)),
+            // The zoo registry resolves the named architecture (and errors
+            // on unknown names — no silent MLP fallback).
+            EngineKind::Native => Box::new(zoo::build(&cfg.model, cfg.dataset)?),
             EngineKind::Pjrt => load_pjrt_backend(&cfg)?,
         };
         Self::with_backend(cfg, backend)
@@ -621,6 +624,21 @@ mod tests {
         assert_eq!(coord.manifest().model, "native-mlp");
         assert_eq!(coord.clients.len(), 2);
         assert_eq!(coord.global.len(), coord.manifest().num_tensors());
+    }
+
+    #[test]
+    fn native_coordinator_resolves_zoo_models() {
+        let cfg = RunConfig {
+            model: "femnist_cnn".into(),
+            dataset: DatasetKind::Femnist,
+            n_clients: 2,
+            ..Default::default()
+        };
+        let coord = Coordinator::new(cfg).unwrap();
+        assert_eq!(coord.manifest().model, "native-femnist-cnn");
+        // unknown names error instead of degrading to the MLP
+        let cfg = RunConfig { model: "alexnet".into(), ..Default::default() };
+        assert!(Coordinator::new(cfg).is_err());
     }
 
     #[cfg(not(feature = "pjrt"))]

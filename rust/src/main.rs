@@ -23,7 +23,7 @@ use fedlama::config::{Algorithm, EngineKind, PartitionKind, RunConfig};
 use fedlama::coordinator::Coordinator;
 use fedlama::data::DatasetKind;
 use fedlama::reports;
-use fedlama::runtime::{Manifest, NativeBackend};
+use fedlama::runtime::{zoo, Manifest};
 use fedlama::util::cli::Args;
 
 fn main() {
@@ -50,7 +50,8 @@ fn print_help() {
     println!(
         "fedlama — FedLAMA (AAAI'23) reproduction\n\n\
          USAGE: fedlama <train|repro|figure|inspect|list> [--flags]\n\n\
-         train   --model M --dataset D [--policy fedavg|fedlama|fedlama-acc]\n\
+         train   --model mlp|femnist_cnn|cifar_cnn100|resnet20 --dataset D\n\
+                 [--policy fedavg|fedlama|fedlama-acc]\n\
                  [--tau 6] [--phi 2] [--clients 16] [--active-ratio 1.0]\n\
                  [--partition iid|dirichlet|writers] [--alpha 0.1] [--samples 512]\n\
                  [--lr 0.1] [--warmup 4] [--iters 960] [--eval-every 4]\n\
@@ -61,7 +62,7 @@ fn print_help() {
          repro   --table table1..table11|baselines|all [--scale smoke|default|full]\n\
                  [--repeats 1] [--out-dir reports] [--verbose]\n\
          figure  --id 1..6 [--scale ...] [--out-dir reports]\n\
-         inspect --model M [--dataset D]   (native manifest when no artifacts)\n\
+         inspect --model M [--dataset D]   (native zoo manifest when no artifacts)\n\
          list"
     );
 }
@@ -96,7 +97,8 @@ fn cfg_from_args(args: &Args) -> Result<RunConfig> {
     Ok(RunConfig {
         engine,
         threads: args.usize_or("threads", 1),
-        model_dir: artifacts_root().join(model),
+        model_dir: artifacts_root().join(&model),
+        model,
         dataset,
         algorithm,
         policy,
@@ -301,24 +303,25 @@ fn run_inspect(args: &Args) -> Result<()> {
     let m = if dir.join("manifest.json").exists() {
         Manifest::load(&dir)?
     } else {
-        // Without artifacts the only manifests that exist are the native
-        // engine's per-dataset MLPs — don't silently substitute one for an
-        // arbitrary model name unless the user picked the dataset.
-        if !args.has("dataset") && model != "mlp" {
-            anyhow::bail!(
-                "no artifacts at {} and no --dataset given; the native engine only \
-                 synthesizes MLP manifests (pass --dataset toy|cifar10|cifar100|femnist \
-                 to inspect one, or run `make artifacts` for {model})",
-                dir.display()
-            );
-        }
-        let dataset = DatasetKind::parse(&args.str_or("dataset", "toy"))
-            .context("bad --dataset (toy|cifar10|cifar100|femnist)")?;
+        // Without artifacts, resolve through the native model registry —
+        // unknown names are an error, never a silent substitute.
+        anyhow::ensure!(
+            zoo::is_known(&model),
+            "no artifacts at {} and {model:?} is not a native model ({:?}); run \
+             `make artifacts` for custom models",
+            dir.display(),
+            zoo::MODELS
+        );
+        let dataset = match args.get("dataset") {
+            Some(d) => DatasetKind::parse(d)
+                .context("bad --dataset (toy|cifar10|cifar100|femnist)")?,
+            None => zoo::default_dataset(&model).expect("known model has a default dataset"),
+        };
         eprintln!(
-            "(no artifacts at {}; showing the native engine's synthesized manifest)",
+            "(no artifacts at {}; showing the native {model} manifest for {dataset:?})",
             dir.display()
         );
-        NativeBackend::for_dataset(dataset).manifest().clone()
+        zoo::build(&model, dataset)?.manifest().clone()
     };
     println!("model {} (base {})", m.model, m.base);
     println!(

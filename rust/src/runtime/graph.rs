@@ -1,0 +1,526 @@
+//! The layer-graph compute backend: a sequence of `LayerOp`s executed as
+//! one `ComputeBackend`.
+//!
+//! `ModelGraph` owns the op sequence, synthesizes its `Manifest` from the
+//! ops' parameter declarations (one aggregation group per parameterized
+//! op — the paper's "layer"), and implements init / the local-step family
+//! / eval generically over the graph.  Losses are mean softmax
+//! cross-entropy, optimizers mirror the python oracles — identical to the
+//! historical fused-MLP backend, which is now just the `mlp` entry of
+//! `runtime::zoo`.
+//!
+//! Determinism: every op fixes its f32 accumulation order, and all
+//! methods take `&self` — per-call state lives in a pooled `GraphScratch`
+//! whose buffers are zeroed on checkout, so results never depend on pool
+//! history or on which cluster worker runs the step.  The pool is what
+//! makes the hot path allocation-free in steady state (the perf win is
+//! measured by the `micro-scratch` bench section).
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::backend::{ComputeBackend, RuntimeStats};
+use super::manifest::{LayerSpec, Manifest};
+use super::ops::{Init, LayerOp, Scratch};
+use super::tensor::HostTensor;
+use crate::util::rng::Rng;
+
+pub struct ModelGraph {
+    ops: Vec<Box<dyn LayerOp>>,
+    /// Per op: (first tensor index, tensor count) into the flat param vec.
+    param_ranges: Vec<(usize, usize)>,
+    /// Per tensor: its initializer (graph init = fork-per-tensor streams).
+    param_inits: Vec<Init>,
+    /// Per-example element counts: io_dims[0] = input, io_dims[i+1] =
+    /// op i output.
+    io_dims: Vec<usize>,
+    manifest: Manifest,
+    /// When false, checked-out scratch is dropped instead of pooled
+    /// (bench A/B only — results are identical either way).
+    reuse_scratch: bool,
+    pool: Mutex<Vec<GraphScratch>>,
+    stats: Mutex<RuntimeStats>,
+}
+
+/// Reusable per-call state: activations, gradient tensors, the two
+/// ping-pong d-activation buffers, and the ops' temporary pool.
+#[derive(Default)]
+struct GraphScratch {
+    acts: Vec<Vec<f32>>,
+    grads: Vec<HostTensor>,
+    da: Vec<f32>,
+    db: Vec<f32>,
+    ops_scratch: Scratch,
+}
+
+impl ModelGraph {
+    /// Build a graph backend; validates shape inference end-to-end and
+    /// synthesizes the manifest.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_ops(
+        model: &str,
+        base: &str,
+        input_shape: &[usize],
+        num_classes: usize,
+        batch_size: usize,
+        eval_batch_size: usize,
+        chunk_k: usize,
+        ops: Vec<Box<dyn LayerOp>>,
+    ) -> Result<ModelGraph> {
+        anyhow::ensure!(!ops.is_empty(), "model {model}: graph needs at least one op");
+        let mut io_dims = vec![input_shape.iter().product::<usize>()];
+        let mut cur = input_shape.to_vec();
+        let mut layers: Vec<LayerSpec> = Vec::new();
+        let mut param_ranges = Vec::with_capacity(ops.len());
+        let mut param_inits = Vec::new();
+        let mut seen = std::collections::BTreeSet::new();
+        let mut next = 0usize;
+        for op in &ops {
+            cur = op.out_shape(&cur)?;
+            io_dims.push(cur.iter().product());
+            let specs = op.params();
+            if !specs.is_empty() {
+                anyhow::ensure!(
+                    seen.insert(op.name().to_string()),
+                    "model {model}: duplicate group name {:?}",
+                    op.name()
+                );
+            }
+            param_ranges.push((next, specs.len()));
+            next += specs.len();
+            for spec in &specs {
+                param_inits.push(spec.init);
+            }
+            layers.push((
+                op.name().to_string(),
+                specs.into_iter().map(|s| (s.suffix, s.shape)).collect(),
+            ));
+        }
+        let out = *io_dims.last().unwrap();
+        anyhow::ensure!(
+            out == num_classes,
+            "model {model}: final op produces {out} values, expected {num_classes} class logits"
+        );
+        let manifest = Manifest::synthetic_graph(
+            model,
+            base,
+            input_shape,
+            num_classes,
+            batch_size,
+            eval_batch_size,
+            chunk_k,
+            &layers,
+        )?;
+        Ok(ModelGraph {
+            ops,
+            param_ranges,
+            param_inits,
+            io_dims,
+            manifest,
+            reuse_scratch: true,
+            pool: Mutex::new(Vec::new()),
+            stats: Mutex::new(RuntimeStats::default()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Disable cross-call scratch reuse (bench A/B only).
+    pub fn set_scratch_reuse(&mut self, on: bool) {
+        self.reuse_scratch = on;
+    }
+
+    fn take_scratch(&self) -> GraphScratch {
+        self.pool.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    fn put_scratch(&self, sc: GraphScratch) {
+        if self.reuse_scratch {
+            self.pool.lock().unwrap().push(sc);
+        }
+    }
+
+    fn record(&self, entry: &str, t0: Instant) {
+        self.stats.lock().unwrap().record(entry, t0.elapsed().as_secs_f64());
+    }
+
+    fn check_params(&self, params: &[HostTensor]) -> Result<()> {
+        anyhow::ensure!(
+            params.len() == self.manifest.params.len(),
+            "expected {} param tensors, got {}",
+            self.manifest.params.len(),
+            params.len()
+        );
+        Ok(())
+    }
+
+    fn batch_dims(&self, eval: bool, x: &[f32], y: &[i32]) -> Result<(usize, usize)> {
+        let b = if eval { self.manifest.eval_batch_size } else { self.manifest.batch_size };
+        let d: usize = self.manifest.input_shape.iter().product();
+        anyhow::ensure!(x.len() == b * d, "x len {} != {}x{}", x.len(), b, d);
+        anyhow::ensure!(y.len() == b, "y len {} != batch {b}", y.len());
+        Ok((b, d))
+    }
+
+    /// Forward the whole graph into `sc.acts` (acts[i] = op i output).
+    fn run_forward(&self, sc: &mut GraphScratch, params: &[HostTensor], x: &[f32], b: usize) {
+        if sc.acts.len() != self.ops.len() {
+            sc.acts.resize_with(self.ops.len(), Vec::new);
+        }
+        for i in 0..self.ops.len() {
+            let dim = self.io_dims[i + 1];
+            let (head, tail) = sc.acts.split_at_mut(i);
+            let out = &mut tail[0];
+            out.clear();
+            out.resize(b * dim, 0.0);
+            let input: &[f32] = if i == 0 { x } else { &head[i - 1] };
+            let (start, cnt) = self.param_ranges[i];
+            self.ops[i].forward(&params[start..start + cnt], input, out, b, &mut sc.ops_scratch);
+        }
+    }
+
+    /// Backward from the logits in `sc.acts`; leaves the parameter
+    /// gradients in `sc.grads` and returns the mean batch loss.
+    fn run_backward(
+        &self,
+        sc: &mut GraphScratch,
+        params: &[HostTensor],
+        x: &[f32],
+        ys: &[i32],
+        b: usize,
+    ) -> f32 {
+        if sc.grads.len() != params.len() {
+            sc.grads = params.iter().map(|p| HostTensor::zeros(&p.shape)).collect();
+        } else {
+            for g in sc.grads.iter_mut() {
+                g.data.fill(0.0);
+            }
+        }
+        let nl = self.ops.len();
+        let c = self.manifest.num_classes;
+        let loss = loss_and_dlogits(&sc.acts[nl - 1], ys, b, c, &mut sc.da);
+        for i in (0..nl).rev() {
+            sc.db.clear();
+            if i > 0 {
+                // the first op's input gradient is never consumed; an
+                // empty dx tells the op to skip computing it
+                sc.db.resize(b * self.io_dims[i], 0.0);
+            }
+            let input: &[f32] = if i == 0 { x } else { &sc.acts[i - 1] };
+            let (start, cnt) = self.param_ranges[i];
+            self.ops[i].backward(
+                &params[start..start + cnt],
+                input,
+                &sc.acts[i],
+                &sc.da,
+                &mut sc.db,
+                &mut sc.grads[start..start + cnt],
+                b,
+                &mut sc.ops_scratch,
+            );
+            std::mem::swap(&mut sc.da, &mut sc.db);
+        }
+        loss
+    }
+
+    fn sgd_apply(params: &mut [HostTensor], grads: &[HostTensor], lr: f32) {
+        for (p, g) in params.iter_mut().zip(grads) {
+            for (pv, &gv) in p.data.iter_mut().zip(&g.data) {
+                *pv -= lr * gv;
+            }
+        }
+    }
+}
+
+/// Mean cross-entropy loss; writes d(loss)/d(logits) into `dl`.
+fn loss_and_dlogits(logits: &[f32], ys: &[i32], b: usize, c: usize, dl: &mut Vec<f32>) -> f32 {
+    dl.clear();
+    dl.resize(b * c, 0.0);
+    let mut loss = 0.0f32;
+    let inv_b = 1.0 / b as f32;
+    for bi in 0..b {
+        let row = &logits[bi * c..(bi + 1) * c];
+        let mut mx = f32::NEG_INFINITY;
+        for &v in row {
+            if v > mx {
+                mx = v;
+            }
+        }
+        let mut sum = 0.0f32;
+        for &v in row {
+            sum += (v - mx).exp();
+        }
+        let ln_sum = sum.ln();
+        let y = ys[bi] as usize;
+        loss += mx + ln_sum - row[y];
+        let drow = &mut dl[bi * c..(bi + 1) * c];
+        for (dv, &v) in drow.iter_mut().zip(row) {
+            *dv = (v - mx).exp() / sum * inv_b;
+        }
+        drow[y] -= inv_b;
+    }
+    loss * inv_b
+}
+
+impl ComputeBackend for ModelGraph {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Per-spec init (He / zeros / ones), one independent RNG stream per
+    /// tensor — adding layers never shifts earlier tensors' draws, and the
+    /// MLP zoo entry reproduces the historical backend bit-for-bit.
+    fn init_params(&self, seed: u32) -> Result<Vec<HostTensor>> {
+        let t0 = Instant::now();
+        let root = Rng::new(seed as u64 ^ 0x11A7_17E0);
+        let mut out = Vec::with_capacity(self.manifest.params.len());
+        for (t, (info, init)) in self.manifest.params.iter().zip(&self.param_inits).enumerate() {
+            let mut rng = root.fork(t as u64);
+            out.push(init.materialize(&info.shape, &mut rng));
+        }
+        self.record("init", t0);
+        Ok(out)
+    }
+
+    fn train_step(
+        &self,
+        params: &mut [HostTensor],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+    ) -> Result<f32> {
+        let t0 = Instant::now();
+        self.check_params(params)?;
+        let (b, _) = self.batch_dims(false, x, y)?;
+        let mut sc = self.take_scratch();
+        self.run_forward(&mut sc, params, x, b);
+        let loss = self.run_backward(&mut sc, params, x, y, b);
+        Self::sgd_apply(params, &sc.grads, lr);
+        self.put_scratch(sc);
+        self.record("train_step", t0);
+        Ok(loss)
+    }
+
+    fn train_step_prox(
+        &self,
+        params: &mut [HostTensor],
+        global: &[HostTensor],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+        mu: f32,
+    ) -> Result<f32> {
+        let t0 = Instant::now();
+        self.check_params(params)?;
+        self.check_params(global)?;
+        let (b, _) = self.batch_dims(false, x, y)?;
+        let mut sc = self.take_scratch();
+        self.run_forward(&mut sc, params, x, b);
+        let mut loss = self.run_backward(&mut sc, params, x, y, b);
+        // + mu/2 * ||p - global||^2 (loss term and gradient).
+        let mut prox = 0.0f32;
+        for ((g, p), gl) in sc.grads.iter_mut().zip(params.iter()).zip(global) {
+            for ((gv, &pv), &rv) in g.data.iter_mut().zip(&p.data).zip(&gl.data) {
+                let diff = pv - rv;
+                *gv += mu * diff;
+                prox += diff * diff;
+            }
+        }
+        loss += 0.5 * mu * prox;
+        Self::sgd_apply(params, &sc.grads, lr);
+        self.put_scratch(sc);
+        self.record("train_step_prox", t0);
+        Ok(loss)
+    }
+
+    fn train_step_scaffold(
+        &self,
+        params: &mut [HostTensor],
+        ci: &[HostTensor],
+        c: &[HostTensor],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+    ) -> Result<f32> {
+        let t0 = Instant::now();
+        self.check_params(params)?;
+        self.check_params(ci)?;
+        self.check_params(c)?;
+        let (b, _) = self.batch_dims(false, x, y)?;
+        let mut sc = self.take_scratch();
+        self.run_forward(&mut sc, params, x, b);
+        let loss = self.run_backward(&mut sc, params, x, y, b);
+        for (((p, g), cit), ct) in params.iter_mut().zip(&sc.grads).zip(ci).zip(c) {
+            for (((pv, &gv), &civ), &cv) in
+                p.data.iter_mut().zip(&g.data).zip(&cit.data).zip(&ct.data)
+            {
+                *pv -= lr * (gv - civ + cv);
+            }
+        }
+        self.put_scratch(sc);
+        self.record("train_step_scaffold", t0);
+        Ok(loss)
+    }
+
+    fn grad_step(
+        &self,
+        params: &[HostTensor],
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<(Vec<HostTensor>, f32)> {
+        let t0 = Instant::now();
+        self.check_params(params)?;
+        let (b, _) = self.batch_dims(false, x, y)?;
+        let mut sc = self.take_scratch();
+        self.run_forward(&mut sc, params, x, b);
+        let loss = self.run_backward(&mut sc, params, x, y, b);
+        let grads = sc.grads.clone();
+        self.put_scratch(sc);
+        self.record("grad_step", t0);
+        Ok((grads, loss))
+    }
+
+    fn eval_step(&self, params: &[HostTensor], x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
+        let t0 = Instant::now();
+        self.check_params(params)?;
+        let (b, _) = self.batch_dims(true, x, y)?;
+        let mut sc = self.take_scratch();
+        self.run_forward(&mut sc, params, x, b);
+        let logits = &sc.acts[self.ops.len() - 1];
+        let c = self.manifest.num_classes;
+        let mut correct = 0.0f32;
+        let mut loss_sum = 0.0f32;
+        for bi in 0..b {
+            let row = &logits[bi * c..(bi + 1) * c];
+            let mut best = 0usize;
+            let mut mx = f32::NEG_INFINITY;
+            for (j, &v) in row.iter().enumerate() {
+                if v > mx {
+                    mx = v;
+                    best = j;
+                }
+            }
+            let y_bi = y[bi] as usize;
+            if best == y_bi {
+                correct += 1.0;
+            }
+            let mut sum = 0.0f32;
+            for &v in row {
+                sum += (v - mx).exp();
+            }
+            loss_sum += mx + sum.ln() - row[y_bi];
+        }
+        self.put_scratch(sc);
+        self.record("eval_step", t0);
+        Ok((correct, loss_sum))
+    }
+
+    fn stats_total_secs(&self) -> f64 {
+        self.stats.lock().unwrap().total_secs()
+    }
+
+    fn stats(&self) -> RuntimeStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    fn as_parallel(&self) -> Option<&(dyn ComputeBackend + Sync)> {
+        Some(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::ops::{Conv2d, Dense, MaxPool2d, Relu};
+    use super::*;
+
+    fn tiny_conv_graph() -> ModelGraph {
+        let ops: Vec<Box<dyn LayerOp>> = vec![
+            Box::new(Conv2d::new("c1", [4, 4, 1], 2, 3, 1, 1)),
+            Box::new(Relu::new("r1")),
+            Box::new(MaxPool2d::new("p1", [4, 4, 2], 2)),
+            Box::new(Dense::new("fc", 8, 3)),
+        ];
+        ModelGraph::from_ops("tiny-conv", "test", &[4, 4, 1], 3, 2, 2, 1, ops).unwrap()
+    }
+
+    fn batch(g: &ModelGraph, seed: u64) -> (Vec<f32>, Vec<i32>) {
+        let m = g.manifest();
+        let d: usize = m.input_shape.iter().product();
+        let mut rng = Rng::new(seed);
+        let x: Vec<f32> = (0..m.batch_size * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let y: Vec<i32> = (0..m.batch_size).map(|i| (i % m.num_classes) as i32).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn manifest_synthesis_groups_parameterized_ops_only() {
+        let g = tiny_conv_graph();
+        let m = g.manifest();
+        m.validate().unwrap();
+        assert_eq!(m.model, "tiny-conv");
+        assert_eq!(m.groups.len(), 2, "relu/pool own no groups");
+        assert_eq!(m.params[0].name, "c1.w");
+        assert_eq!(m.params[0].shape, vec![9, 2]);
+        assert_eq!(m.params[2].name, "fc.w");
+        assert_eq!(m.num_params, 9 * 2 + 2 + 8 * 3 + 3);
+    }
+
+    #[test]
+    fn bad_graphs_are_rejected() {
+        // wrong logit count
+        let ops: Vec<Box<dyn LayerOp>> = vec![Box::new(Dense::new("fc", 4, 5))];
+        assert!(ModelGraph::from_ops("bad", "test", &[4], 3, 2, 2, 1, ops).is_err());
+        // shape break mid-graph
+        let ops: Vec<Box<dyn LayerOp>> = vec![
+            Box::new(Dense::new("fc1", 4, 5)),
+            Box::new(Dense::new("fc2", 6, 3)),
+        ];
+        assert!(ModelGraph::from_ops("bad", "test", &[4], 3, 2, 2, 1, ops).is_err());
+        // duplicate group names
+        let ops: Vec<Box<dyn LayerOp>> = vec![
+            Box::new(Dense::new("fc", 4, 4)),
+            Box::new(Dense::new("fc", 4, 3)),
+        ];
+        assert!(ModelGraph::from_ops("bad", "test", &[4], 3, 2, 2, 1, ops).is_err());
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_identical_to_fresh_allocation() {
+        let mut fresh = tiny_conv_graph();
+        fresh.set_scratch_reuse(false);
+        let pooled = tiny_conv_graph();
+        let mut p1 = pooled.init_params(3).unwrap();
+        let mut p2 = fresh.init_params(3).unwrap();
+        for step in 0..4 {
+            let (x, y) = batch(&pooled, 100 + step);
+            let l1 = pooled.train_step(&mut p1, &x, &y, 0.1).unwrap();
+            let l2 = fresh.train_step(&mut p2, &x, &y, 0.1).unwrap();
+            assert_eq!(l1, l2, "step {step} loss diverged");
+        }
+        for (a, b) in p1.iter().zip(&p2) {
+            assert_eq!(a.data, b.data);
+        }
+    }
+
+    #[test]
+    fn train_and_eval_batch_shapes_differ() {
+        let ops: Vec<Box<dyn LayerOp>> = vec![Box::new(Dense::new("fc", 4, 3))];
+        let g = ModelGraph::from_ops("t", "test", &[4], 3, 2, 6, 1, ops).unwrap();
+        let mut params = g.init_params(0).unwrap();
+        let (x, y) = batch(&g, 1);
+        g.train_step(&mut params, &x, &y, 0.1).unwrap();
+        // eval uses the eval batch size
+        let mut rng = Rng::new(2);
+        let ex: Vec<f32> = (0..6 * 4).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let ey: Vec<i32> = (0..6).map(|i| (i % 3) as i32).collect();
+        let (correct, loss) = g.eval_step(&params, &ex, &ey).unwrap();
+        assert!((0.0..=6.0).contains(&correct));
+        assert!(loss.is_finite());
+        // and the train-sized batch is rejected by eval
+        assert!(g.eval_step(&params, &x, &y).is_err());
+    }
+}

@@ -11,6 +11,10 @@ use anyhow::{Context, Result};
 
 use crate::util::json::Json;
 
+/// Declaration of one layer-graph op for `Manifest::synthetic_graph`:
+/// (group name, [(param suffix, shape)]).
+pub type LayerSpec = (String, Vec<(String, Vec<usize>)>);
+
 /// One parameter tensor of the model.
 #[derive(Debug, Clone)]
 pub struct ParamInfo {
@@ -147,11 +151,71 @@ impl Manifest {
         Ok(m)
     }
 
-    /// Synthesize an MLP manifest in memory — the native backend's source
-    /// of truth, mirroring `python/compile/model.py::make_mlp` (one `fc{i}`
-    /// aggregation group per layer, each holding its weight + bias).  No
-    /// artifact directory, no entry points: `entries` stays empty and `dir`
-    /// is unused.
+    /// Synthesize a manifest for a native layer-graph model: one
+    /// aggregation group per parameterized op, params named
+    /// `{group}.{suffix}`, in op order.  Ops without parameters contribute
+    /// nothing.  No artifact directory, no entry points.
+    #[allow(clippy::too_many_arguments)]
+    pub fn synthetic_graph(
+        model: &str,
+        base: &str,
+        input_shape: &[usize],
+        num_classes: usize,
+        batch_size: usize,
+        eval_batch_size: usize,
+        chunk_k: usize,
+        layers: &[LayerSpec],
+    ) -> Result<Manifest> {
+        let mut params = Vec::new();
+        let mut groups = Vec::new();
+        for (group, specs) in layers {
+            if specs.is_empty() {
+                continue;
+            }
+            let first = params.len();
+            let mut gdim = 0;
+            for (suffix, shape) in specs {
+                let dim: usize = shape.iter().product();
+                params.push(ParamInfo {
+                    name: format!("{group}.{suffix}"),
+                    shape: shape.clone(),
+                    dim,
+                    group: group.clone(),
+                });
+                gdim += dim;
+            }
+            groups.push(GroupInfo {
+                name: group.clone(),
+                params: (first..params.len()).collect(),
+                dim: gdim,
+            });
+        }
+        let num_params = params.iter().map(|p| p.dim).sum();
+        let m = Manifest {
+            dir: PathBuf::new(),
+            model: model.to_string(),
+            base: base.to_string(),
+            batch_size,
+            eval_batch_size,
+            chunk_k,
+            input_shape: input_shape.to_vec(),
+            num_classes,
+            num_params,
+            params,
+            groups,
+            entries: BTreeMap::new(),
+            agg_by_dim: BTreeMap::new(),
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// The historical MLP manifest layout, mirroring
+    /// `python/compile/model.py::make_mlp` (one `fc{i}` aggregation group
+    /// per layer, each holding its weight + bias).  The live native MLP
+    /// manifest now comes from `ModelGraph::from_ops` via `runtime::zoo`;
+    /// this constructor survives as the layout reference the zoo's MLP is
+    /// pinned against (`zoo::tests::mlp_manifest_matches_synthetic_mlp`).
     pub fn synthetic_mlp(
         input_shape: &[usize],
         hidden: &[usize],
@@ -164,48 +228,28 @@ impl Manifest {
         let mut dims = vec![input_dim];
         dims.extend_from_slice(hidden);
         dims.push(num_classes);
-        let mut params = Vec::new();
-        let mut groups = Vec::new();
-        for l in 0..dims.len() - 1 {
-            let (din, dout) = (dims[l], dims[l + 1]);
-            let group = format!("fc{}", l + 1);
-            let w_idx = params.len();
-            params.push(ParamInfo {
-                name: format!("{group}.w"),
-                shape: vec![din, dout],
-                dim: din * dout,
-                group: group.clone(),
-            });
-            params.push(ParamInfo {
-                name: format!("{group}.b"),
-                shape: vec![dout],
-                dim: dout,
-                group: group.clone(),
-            });
-            groups.push(GroupInfo {
-                name: group,
-                params: vec![w_idx, w_idx + 1],
-                dim: din * dout + dout,
-            });
-        }
-        let num_params = params.iter().map(|p| p.dim).sum();
-        let m = Manifest {
-            dir: PathBuf::new(),
-            model: "native-mlp".to_string(),
-            base: "mlp".to_string(),
+        let layers: Vec<LayerSpec> = (0..dims.len() - 1)
+            .map(|l| {
+                (
+                    format!("fc{}", l + 1),
+                    vec![
+                        ("w".to_string(), vec![dims[l], dims[l + 1]]),
+                        ("b".to_string(), vec![dims[l + 1]]),
+                    ],
+                )
+            })
+            .collect();
+        Self::synthetic_graph(
+            "native-mlp",
+            "mlp",
+            input_shape,
+            num_classes,
             batch_size,
             eval_batch_size,
             chunk_k,
-            input_shape: input_shape.to_vec(),
-            num_classes,
-            num_params,
-            params,
-            groups,
-            entries: BTreeMap::new(),
-            agg_by_dim: BTreeMap::new(),
-        };
-        debug_assert!(m.validate().is_ok());
-        m
+            &layers,
+        )
+        .expect("the MLP manifest is always well-formed")
     }
 
     /// Internal consistency: group dims match member params, indices valid.

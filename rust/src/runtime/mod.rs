@@ -1,20 +1,26 @@
-//! Model execution: the `ComputeBackend` seam, the hermetic native MLP
-//! backend, the parallel client cluster, and (behind `--features pjrt`)
-//! the PJRT engine for AOT HLO artifacts.
+//! Model execution: the `ComputeBackend` seam, the layer-graph native
+//! backend (`ops` + `graph` + the `zoo` model registry), the parallel
+//! client cluster, and (behind `--features pjrt`) the PJRT engine for AOT
+//! HLO artifacts.
 //!
-//! See rust/DESIGN.md for the two execution paths and the threading model.
+//! See rust/DESIGN.md for the execution paths and the threading model.
 
 pub mod backend;
 pub mod cluster;
 #[cfg(feature = "pjrt")]
 pub mod engine;
+pub mod graph;
 pub mod manifest;
 pub mod native;
+pub mod ops;
 pub mod tensor;
+pub mod zoo;
 
 pub use backend::{ComputeBackend, RuntimeStats};
 #[cfg(feature = "pjrt")]
 pub use engine::{Engine, Executable, ModelRuntime};
+pub use graph::ModelGraph;
 pub use manifest::{GroupInfo, Manifest, ParamInfo};
 pub use native::NativeBackend;
+pub use ops::LayerOp;
 pub use tensor::HostTensor;

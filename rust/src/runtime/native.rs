@@ -1,28 +1,17 @@
-//! Native (pure-rust) MLP compute backend — the hermetic execution path.
+//! Back-compat surface of the historical monolithic MLP backend.
 //!
-//! Mirrors `python/compile/model.py::make_mlp` and the pure-jnp oracles in
-//! `python/compile/kernels/ref.py`: an L-layer ReLU MLP over the flattened
-//! input with mean softmax cross-entropy, He-normal init, and plain SGD
-//! (`ref_sgd`).  The manifest is synthesized in memory — no `manifest.json`
-//! or HLO artifacts — so the default build trains end-to-end with zero
-//! external files.
-//!
-//! Numerics are deterministic: fixed f32 accumulation order everywhere, so
-//! results are bit-identical across runs and across the cluster's thread
-//! counts.  All methods take `&self` (scratch is per-call) which makes the
-//! backend `Sync` — the property `runtime::cluster` needs to fan clients
-//! across worker threads.
+//! PR 2 refactored the hand-fused MLP forward/backward into the
+//! composable layer-graph subsystem (`runtime::ops` + `runtime::graph`):
+//! `NativeBackend` is now `ModelGraph`, and the MLP is just the `mlp`
+//! entry of `runtime::zoo`.  The constructors below keep the original
+//! call sites (tests, benches, coordinator defaults) working unchanged,
+//! and the numerics are bit-identical to the pre-graph implementation —
+//! same per-tensor init streams, same f32 accumulation order (asserted by
+//! the seed-era tests kept in this file).
 
-use std::sync::Mutex;
-use std::time::Instant;
-
-use anyhow::Result;
-
-use super::backend::{ComputeBackend, RuntimeStats};
-use super::manifest::Manifest;
-use super::tensor::HostTensor;
+use super::graph::ModelGraph;
+use super::zoo;
 use crate::data::DatasetKind;
-use crate::util::rng::Rng;
 
 /// Default hidden widths (as `make_mlp` in the python model zoo).
 pub const DEFAULT_HIDDEN: [usize; 2] = [128, 64];
@@ -33,15 +22,14 @@ pub const DEFAULT_EVAL_BATCH: usize = 64;
 /// keeps the coordinator's chunked path exercised).
 pub const DEFAULT_CHUNK_K: usize = 4;
 
-pub struct NativeBackend {
-    manifest: Manifest,
-    /// Layer widths [d_in, hidden.., num_classes].
-    dims: Vec<usize>,
-    stats: Mutex<RuntimeStats>,
-}
+/// The hermetic pure-rust backend — since the layer-graph refactor, an
+/// alias of `ModelGraph`.
+pub use super::graph::ModelGraph as NativeBackend;
 
-impl NativeBackend {
-    /// An MLP backend for an explicit topology.
+impl ModelGraph {
+    /// An MLP backend for an explicit topology (the historical
+    /// `NativeBackend::new`).
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         input_shape: &[usize],
         hidden: &[usize],
@@ -50,22 +38,10 @@ impl NativeBackend {
         eval_batch_size: usize,
         chunk_k: usize,
     ) -> NativeBackend {
-        let input_dim: usize = input_shape.iter().product();
-        let mut dims = vec![input_dim];
-        dims.extend_from_slice(hidden);
-        dims.push(num_classes);
-        let manifest = Manifest::synthetic_mlp(
-            input_shape,
-            hidden,
-            num_classes,
-            batch_size,
-            eval_batch_size,
-            chunk_k,
-        );
-        NativeBackend { manifest, dims, stats: Mutex::new(RuntimeStats::default()) }
+        zoo::mlp(input_shape, hidden, num_classes, batch_size, eval_batch_size, chunk_k)
     }
 
-    /// The default backend for a dataset: MLP over the flattened input.
+    /// The default model for a dataset: MLP over the flattened input.
     pub fn for_dataset(kind: DatasetKind) -> NativeBackend {
         NativeBackend::new(
             &kind.input_shape(),
@@ -76,345 +52,14 @@ impl NativeBackend {
             DEFAULT_CHUNK_K,
         )
     }
-
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    fn n_layers(&self) -> usize {
-        self.dims.len() - 1
-    }
-
-    fn record(&self, entry: &str, t0: Instant) {
-        self.stats.lock().unwrap().record(entry, t0.elapsed().as_secs_f64());
-    }
-
-    fn check_params(&self, params: &[HostTensor]) -> Result<()> {
-        anyhow::ensure!(
-            params.len() == self.manifest.params.len(),
-            "expected {} param tensors, got {}",
-            self.manifest.params.len(),
-            params.len()
-        );
-        Ok(())
-    }
-
-    /// Forward pass over a batch of `b` rows; returns per-layer activations
-    /// (post-ReLU for hidden layers; raw logits for the last).
-    fn forward(&self, params: &[HostTensor], x: &[f32], b: usize) -> Vec<Vec<f32>> {
-        let nl = self.n_layers();
-        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(nl);
-        for l in 0..nl {
-            let (din, dout) = (self.dims[l], self.dims[l + 1]);
-            let w = &params[2 * l].data;
-            let bias = &params[2 * l + 1].data;
-            let input: &[f32] = if l == 0 { x } else { &acts[l - 1] };
-            let mut out = vec![0.0f32; b * dout];
-            for bi in 0..b {
-                let orow = &mut out[bi * dout..(bi + 1) * dout];
-                orow.copy_from_slice(bias);
-                let xrow = &input[bi * din..(bi + 1) * din];
-                for (i, &xv) in xrow.iter().enumerate() {
-                    if xv == 0.0 {
-                        continue;
-                    }
-                    let wrow = &w[i * dout..(i + 1) * dout];
-                    for (o, &wv) in orow.iter_mut().zip(wrow) {
-                        *o += xv * wv;
-                    }
-                }
-            }
-            if l + 1 < nl {
-                for v in out.iter_mut() {
-                    if *v < 0.0 {
-                        *v = 0.0;
-                    }
-                }
-            }
-            acts.push(out);
-        }
-        acts
-    }
-
-    /// Mean cross-entropy loss + d(loss)/d(logits) for one batch.
-    fn loss_and_dlogits(logits: &[f32], ys: &[i32], b: usize, c: usize) -> (f32, Vec<f32>) {
-        let mut dl = vec![0.0f32; b * c];
-        let mut loss = 0.0f32;
-        let inv_b = 1.0 / b as f32;
-        for bi in 0..b {
-            let row = &logits[bi * c..(bi + 1) * c];
-            let mut mx = f32::NEG_INFINITY;
-            for &v in row {
-                if v > mx {
-                    mx = v;
-                }
-            }
-            let mut sum = 0.0f32;
-            for &v in row {
-                sum += (v - mx).exp();
-            }
-            let ln_sum = sum.ln();
-            let y = ys[bi] as usize;
-            loss += mx + ln_sum - row[y];
-            let drow = &mut dl[bi * c..(bi + 1) * c];
-            for (dv, &v) in drow.iter_mut().zip(row) {
-                *dv = (v - mx).exp() / sum * inv_b;
-            }
-            drow[y] -= inv_b;
-        }
-        (loss * inv_b, dl)
-    }
-
-    /// Backward pass; returns (grads in param order, mean batch loss).
-    fn backward(
-        &self,
-        params: &[HostTensor],
-        x: &[f32],
-        acts: &[Vec<f32>],
-        ys: &[i32],
-        b: usize,
-    ) -> (Vec<HostTensor>, f32) {
-        let nl = self.n_layers();
-        let c = self.dims[nl];
-        let (loss, mut dz) = Self::loss_and_dlogits(&acts[nl - 1], ys, b, c);
-        let mut grads: Vec<HostTensor> =
-            params.iter().map(|p| HostTensor::zeros(&p.shape)).collect();
-        for l in (0..nl).rev() {
-            let (din, dout) = (self.dims[l], self.dims[l + 1]);
-            let input: &[f32] = if l == 0 { x } else { &acts[l - 1] };
-            {
-                let gb = &mut grads[2 * l + 1].data;
-                for bi in 0..b {
-                    let drow = &dz[bi * dout..(bi + 1) * dout];
-                    for (g, &dv) in gb.iter_mut().zip(drow) {
-                        *g += dv;
-                    }
-                }
-            }
-            {
-                let gw = &mut grads[2 * l].data;
-                for bi in 0..b {
-                    let xrow = &input[bi * din..(bi + 1) * din];
-                    let drow = &dz[bi * dout..(bi + 1) * dout];
-                    for (i, &xv) in xrow.iter().enumerate() {
-                        if xv == 0.0 {
-                            continue;
-                        }
-                        let grow = &mut gw[i * dout..(i + 1) * dout];
-                        for (g, &dv) in grow.iter_mut().zip(drow) {
-                            *g += xv * dv;
-                        }
-                    }
-                }
-            }
-            if l > 0 {
-                let w = &params[2 * l].data;
-                let prev = &acts[l - 1];
-                let mut ndz = vec![0.0f32; b * din];
-                for bi in 0..b {
-                    let drow = &dz[bi * dout..(bi + 1) * dout];
-                    let nrow = &mut ndz[bi * din..(bi + 1) * din];
-                    for (i, nv) in nrow.iter_mut().enumerate() {
-                        // ReLU mask: a == 0 means z <= 0, gradient blocked.
-                        if prev[bi * din + i] <= 0.0 {
-                            continue;
-                        }
-                        let wrow = &w[i * dout..(i + 1) * dout];
-                        let mut s = 0.0f32;
-                        for (&dv, &wv) in drow.iter().zip(wrow) {
-                            s += dv * wv;
-                        }
-                        *nv = s;
-                    }
-                }
-                dz = ndz;
-            }
-        }
-        (grads, loss)
-    }
-
-    fn sgd_apply(params: &mut [HostTensor], grads: &[HostTensor], lr: f32) {
-        for (p, g) in params.iter_mut().zip(grads) {
-            for (pv, &gv) in p.data.iter_mut().zip(&g.data) {
-                *pv -= lr * gv;
-            }
-        }
-    }
-
-    fn batch_dims(&self, eval: bool, x: &[f32], y: &[i32]) -> Result<(usize, usize)> {
-        let b = if eval { self.manifest.eval_batch_size } else { self.manifest.batch_size };
-        let d: usize = self.manifest.input_shape.iter().product();
-        anyhow::ensure!(x.len() == b * d, "x len {} != {}x{}", x.len(), b, d);
-        anyhow::ensure!(y.len() == b, "y len {} != batch {b}", y.len());
-        Ok((b, d))
-    }
-}
-
-impl ComputeBackend for NativeBackend {
-    fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    /// He-normal weights / zero biases, one independent RNG stream per
-    /// tensor (adding layers never shifts earlier tensors' draws).
-    fn init_params(&self, seed: u32) -> Result<Vec<HostTensor>> {
-        let t0 = Instant::now();
-        let root = Rng::new(seed as u64 ^ 0x11A7_17E0);
-        let mut out = Vec::with_capacity(self.manifest.params.len());
-        for (t, info) in self.manifest.params.iter().enumerate() {
-            let mut ten = HostTensor::zeros(&info.shape);
-            if info.shape.len() == 2 {
-                let fan_in = info.shape[0].max(1);
-                let std = (2.0 / fan_in as f32).sqrt();
-                let mut rng = root.fork(t as u64);
-                for v in ten.data.iter_mut() {
-                    *v = rng.normal_f32(0.0, std);
-                }
-            }
-            out.push(ten);
-        }
-        self.record("init", t0);
-        Ok(out)
-    }
-
-    fn train_step(
-        &self,
-        params: &mut [HostTensor],
-        x: &[f32],
-        y: &[i32],
-        lr: f32,
-    ) -> Result<f32> {
-        let t0 = Instant::now();
-        self.check_params(params)?;
-        let (b, _) = self.batch_dims(false, x, y)?;
-        let acts = self.forward(params, x, b);
-        let (grads, loss) = self.backward(params, x, &acts, y, b);
-        Self::sgd_apply(params, &grads, lr);
-        self.record("train_step", t0);
-        Ok(loss)
-    }
-
-    fn train_step_prox(
-        &self,
-        params: &mut [HostTensor],
-        global: &[HostTensor],
-        x: &[f32],
-        y: &[i32],
-        lr: f32,
-        mu: f32,
-    ) -> Result<f32> {
-        let t0 = Instant::now();
-        self.check_params(params)?;
-        self.check_params(global)?;
-        let (b, _) = self.batch_dims(false, x, y)?;
-        let acts = self.forward(params, x, b);
-        let (mut grads, mut loss) = self.backward(params, x, &acts, y, b);
-        // + mu/2 * ||p - global||^2 (loss term and gradient).
-        let mut prox = 0.0f32;
-        for ((g, p), gl) in grads.iter_mut().zip(params.iter()).zip(global) {
-            for ((gv, &pv), &rv) in g.data.iter_mut().zip(&p.data).zip(&gl.data) {
-                let diff = pv - rv;
-                *gv += mu * diff;
-                prox += diff * diff;
-            }
-        }
-        loss += 0.5 * mu * prox;
-        Self::sgd_apply(params, &grads, lr);
-        self.record("train_step_prox", t0);
-        Ok(loss)
-    }
-
-    fn train_step_scaffold(
-        &self,
-        params: &mut [HostTensor],
-        ci: &[HostTensor],
-        c: &[HostTensor],
-        x: &[f32],
-        y: &[i32],
-        lr: f32,
-    ) -> Result<f32> {
-        let t0 = Instant::now();
-        self.check_params(params)?;
-        self.check_params(ci)?;
-        self.check_params(c)?;
-        let (b, _) = self.batch_dims(false, x, y)?;
-        let acts = self.forward(params, x, b);
-        let (grads, loss) = self.backward(params, x, &acts, y, b);
-        for (((p, g), cit), ct) in params.iter_mut().zip(&grads).zip(ci).zip(c) {
-            for (((pv, &gv), &civ), &cv) in
-                p.data.iter_mut().zip(&g.data).zip(&cit.data).zip(&ct.data)
-            {
-                *pv -= lr * (gv - civ + cv);
-            }
-        }
-        self.record("train_step_scaffold", t0);
-        Ok(loss)
-    }
-
-    fn grad_step(
-        &self,
-        params: &[HostTensor],
-        x: &[f32],
-        y: &[i32],
-    ) -> Result<(Vec<HostTensor>, f32)> {
-        let t0 = Instant::now();
-        self.check_params(params)?;
-        let (b, _) = self.batch_dims(false, x, y)?;
-        let acts = self.forward(params, x, b);
-        let res = self.backward(params, x, &acts, y, b);
-        self.record("grad_step", t0);
-        Ok(res)
-    }
-
-    fn eval_step(&self, params: &[HostTensor], x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
-        let t0 = Instant::now();
-        self.check_params(params)?;
-        let (b, _) = self.batch_dims(true, x, y)?;
-        let acts = self.forward(params, x, b);
-        let logits = &acts[self.n_layers() - 1];
-        let c = *self.dims.last().unwrap();
-        let mut correct = 0.0f32;
-        let mut loss_sum = 0.0f32;
-        for bi in 0..b {
-            let row = &logits[bi * c..(bi + 1) * c];
-            let mut best = 0usize;
-            let mut mx = f32::NEG_INFINITY;
-            for (j, &v) in row.iter().enumerate() {
-                if v > mx {
-                    mx = v;
-                    best = j;
-                }
-            }
-            let y_bi = y[bi] as usize;
-            if best == y_bi {
-                correct += 1.0;
-            }
-            let mut sum = 0.0f32;
-            for &v in row {
-                sum += (v - mx).exp();
-            }
-            loss_sum += mx + sum.ln() - row[y_bi];
-        }
-        self.record("eval_step", t0);
-        Ok((correct, loss_sum))
-    }
-
-    fn stats_total_secs(&self) -> f64 {
-        self.stats.lock().unwrap().total_secs()
-    }
-
-    fn stats(&self) -> RuntimeStats {
-        self.stats.lock().unwrap().clone()
-    }
-
-    fn as_parallel(&self) -> Option<&(dyn ComputeBackend + Sync)> {
-        Some(self)
-    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::backend::ComputeBackend;
+    use crate::runtime::tensor::HostTensor;
+    use crate::util::rng::Rng;
 
     fn toy_backend() -> NativeBackend {
         NativeBackend::for_dataset(DatasetKind::Toy)

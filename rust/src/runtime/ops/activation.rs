@@ -1,0 +1,73 @@
+//! Elementwise activations.
+
+use anyhow::Result;
+
+use super::{LayerOp, Scratch};
+use crate::runtime::tensor::HostTensor;
+
+/// Rectified linear unit.  Shape-preserving, stateless.
+///
+/// Forward keeps non-negative values unchanged (including the sign of
+/// zero, matching the historical fused-MLP backend bit-for-bit); backward
+/// blocks the gradient wherever the output is not strictly positive.
+pub struct Relu {
+    name: String,
+}
+
+impl Relu {
+    pub fn new(name: &str) -> Relu {
+        Relu { name: name.to_string() }
+    }
+}
+
+impl LayerOp for Relu {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn out_shape(&self, input: &[usize]) -> Result<Vec<usize>> {
+        Ok(input.to_vec())
+    }
+
+    fn forward(&self, _ps: &[HostTensor], x: &[f32], y: &mut [f32], _b: usize, _s: &mut Scratch) {
+        for (yv, &xv) in y.iter_mut().zip(x) {
+            *yv = if xv < 0.0 { 0.0 } else { xv };
+        }
+    }
+
+    fn backward(
+        &self,
+        _ps: &[HostTensor],
+        _x: &[f32],
+        y: &[f32],
+        dy: &[f32],
+        dx: &mut [f32],
+        _grads: &mut [HostTensor],
+        _b: usize,
+        _s: &mut Scratch,
+    ) {
+        for ((dv, &yv), &dyv) in dx.iter_mut().zip(y).zip(dy) {
+            *dv = if yv > 0.0 { dyv } else { 0.0 };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_and_backward_mask() {
+        let r = Relu::new("r");
+        assert_eq!(r.out_shape(&[2, 3]).unwrap(), vec![2, 3]);
+        let x = [-1.0f32, 0.0, 2.5, -0.5];
+        let mut y = [9.0f32; 4];
+        let mut s = Scratch::default();
+        r.forward(&[], &x, &mut y, 1, &mut s);
+        assert_eq!(y, [0.0, 0.0, 2.5, 0.0]);
+        let dy = [1.0f32, 1.0, 1.0, 1.0];
+        let mut dx = [9.0f32; 4];
+        r.backward(&[], &x, &y, &dy, &mut dx, &mut [], 1, &mut s);
+        assert_eq!(dx, [0.0, 0.0, 1.0, 0.0]);
+    }
+}

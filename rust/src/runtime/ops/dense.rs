@@ -1,0 +1,102 @@
+//! Fully-connected layer: `y = x · W + b` over the flattened input.
+
+use anyhow::Result;
+
+use super::matmul::{matmul_acc, matmul_at_acc, matmul_bt};
+use super::{Init, LayerOp, ParamSpec, Scratch};
+use crate::runtime::tensor::HostTensor;
+
+pub struct Dense {
+    name: String,
+    din: usize,
+    dout: usize,
+}
+
+impl Dense {
+    pub fn new(name: &str, din: usize, dout: usize) -> Dense {
+        Dense { name: name.to_string(), din, dout }
+    }
+}
+
+impl LayerOp for Dense {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn params(&self) -> Vec<ParamSpec> {
+        vec![
+            ParamSpec::new("w", &[self.din, self.dout], Init::He { fan_in: self.din }),
+            ParamSpec::new("b", &[self.dout], Init::Zeros),
+        ]
+    }
+
+    fn out_shape(&self, input: &[usize]) -> Result<Vec<usize>> {
+        let d: usize = input.iter().product();
+        anyhow::ensure!(
+            d == self.din,
+            "dense {}: input {input:?} has {d} elements, expected {}",
+            self.name,
+            self.din
+        );
+        Ok(vec![self.dout])
+    }
+
+    fn forward(&self, ps: &[HostTensor], x: &[f32], y: &mut [f32], b: usize, _s: &mut Scratch) {
+        let (w, bias) = (&ps[0].data, &ps[1].data);
+        for bi in 0..b {
+            y[bi * self.dout..(bi + 1) * self.dout].copy_from_slice(bias);
+        }
+        matmul_acc(x, w, y, b, self.din, self.dout);
+    }
+
+    fn backward(
+        &self,
+        ps: &[HostTensor],
+        x: &[f32],
+        _y: &[f32],
+        dy: &[f32],
+        dx: &mut [f32],
+        grads: &mut [HostTensor],
+        b: usize,
+        _s: &mut Scratch,
+    ) {
+        {
+            let gb = &mut grads[1].data;
+            for bi in 0..b {
+                let drow = &dy[bi * self.dout..(bi + 1) * self.dout];
+                for (g, &dv) in gb.iter_mut().zip(drow) {
+                    *g += dv;
+                }
+            }
+        }
+        matmul_at_acc(x, dy, &mut grads[0].data, b, self.din, self.dout);
+        if !dx.is_empty() {
+            matmul_bt(dy, &ps[0].data, dx, b, self.dout, self.din);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::check;
+    use super::*;
+
+    #[test]
+    fn shapes_and_params() {
+        let d = Dense::new("fc1", 6, 4);
+        assert_eq!(d.out_shape(&[6]).unwrap(), vec![4]);
+        assert_eq!(d.out_shape(&[2, 3]).unwrap(), vec![4], "input flattens");
+        assert!(d.out_shape(&[5]).is_err());
+        let ps = d.params();
+        assert_eq!(ps.len(), 2);
+        assert_eq!(ps[0].suffix, "w");
+        assert_eq!(ps[0].shape, vec![6, 4]);
+        assert_eq!(ps[1].shape, vec![4]);
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        let d = Dense::new("fc", 5, 3);
+        check::finite_diff(&d, &[5], 4, 7, 1e-2);
+    }
+}

@@ -1,0 +1,157 @@
+//! The blocked matmul kernels shared by `Dense` and `Conv2d` (im2col).
+//!
+//! All three kernels fix the f32 accumulation order per output element —
+//! `matmul_acc` tiles the k dimension for cache locality, but within one
+//! output element the additions still happen in strictly increasing k
+//! order, so tiling is bit-identical to the untiled triple loop.  Zero
+//! multiplicands are skipped where that is value-preserving (x + 0·w = x),
+//! which turns post-ReLU sparsity into real savings.
+
+/// k-dimension tile: big enough to amortize loop overhead, small enough
+/// that the touched B rows stay cache-resident between row passes.
+const KC: usize = 256;
+
+/// `c[m,n] += a[m,k] · b[k,n]` (all row-major).
+pub fn matmul_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    for k0 in (0..k).step_by(KC) {
+        let k1 = (k0 + KC).min(k);
+        for i in 0..m {
+            let arow = &a[i * k + k0..i * k + k1];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (dk, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[(k0 + dk) * n..(k0 + dk + 1) * n];
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += av * bv;
+                }
+            }
+        }
+    }
+}
+
+/// `gw[k,n] += aᵀ · dy` for `a[m,k]`, `dy[m,n]` — the weight-gradient
+/// kernel.  Per gw element the accumulation runs over m in increasing
+/// order.
+pub fn matmul_at_acc(a: &[f32], dy: &[f32], gw: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(dy.len(), m * n);
+    debug_assert_eq!(gw.len(), k * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let dyrow = &dy[i * n..(i + 1) * n];
+        for (l, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let grow = &mut gw[l * n..(l + 1) * n];
+            for (g, &dv) in grow.iter_mut().zip(dyrow) {
+                *g += av * dv;
+            }
+        }
+    }
+}
+
+/// `dx[m,k] = dy[m,n] · bᵀ` for row-major `b[k,n]` — the input-gradient
+/// kernel.  Fully writes `dx`; per element the dot product runs over n in
+/// increasing order.
+pub fn matmul_bt(dy: &[f32], b: &[f32], dx: &mut [f32], m: usize, n: usize, k: usize) {
+    debug_assert_eq!(dy.len(), m * n);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(dx.len(), m * k);
+    for i in 0..m {
+        let dyrow = &dy[i * n..(i + 1) * n];
+        let dxrow = &mut dx[i * k..(i + 1) * k];
+        for (l, xv) in dxrow.iter_mut().enumerate() {
+            let brow = &b[l * n..(l + 1) * n];
+            let mut acc = 0.0f32;
+            for (&dv, &bv) in dyrow.iter().zip(brow) {
+                acc += dv * bv;
+            }
+            *xv = acc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        for i in 0..m {
+            for l in 0..k {
+                let av = a[i * k + l];
+                if av == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    c[i * n + j] += av * b[l * n + j];
+                }
+            }
+        }
+    }
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn tiled_matmul_is_bit_identical_to_naive() {
+        // k = 600 spans three KC tiles; results must match the untiled
+        // loop exactly, not approximately.
+        let (m, k, n) = (3, 600, 5);
+        let mut rng = Rng::new(1);
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let mut c1 = randv(&mut rng, m * n);
+        let mut c2 = c1.clone();
+        matmul_acc(&a, &b, &mut c1, m, k, n);
+        naive_acc(&a, &b, &mut c2, m, k, n);
+        assert_eq!(c1, c2);
+    }
+
+    #[test]
+    fn at_and_bt_match_references() {
+        let (m, k, n) = (4, 7, 3);
+        let mut rng = Rng::new(2);
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let dy = randv(&mut rng, m * n);
+
+        let mut gw = vec![0.0f32; k * n];
+        matmul_at_acc(&a, &dy, &mut gw, m, k, n);
+        for l in 0..k {
+            for j in 0..n {
+                let want: f32 = (0..m).map(|i| a[i * k + l] * dy[i * n + j]).sum();
+                assert!((gw[l * n + j] - want).abs() < 1e-5);
+            }
+        }
+
+        let mut dx = vec![9.0f32; m * k]; // stale values must be overwritten
+        matmul_bt(&dy, &b, &mut dx, m, n, k);
+        for i in 0..m {
+            for l in 0..k {
+                let want: f32 = (0..n).map(|j| dy[i * n + j] * b[l * n + j]).sum();
+                assert!((dx[i * k + l] - want).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_rows_are_skipped_without_changing_results() {
+        let (m, k, n) = (2, 4, 3);
+        let a = vec![0.0, 1.0, 0.0, 2.0, 0.5, 0.0, 0.0, 0.0];
+        let mut rng = Rng::new(3);
+        let b = randv(&mut rng, k * n);
+        let mut c1 = vec![0.0f32; m * n];
+        let mut c2 = vec![0.0f32; m * n];
+        matmul_acc(&a, &b, &mut c1, m, k, n);
+        naive_acc(&a, &b, &mut c2, m, k, n);
+        assert_eq!(c1, c2);
+    }
+}

@@ -1,0 +1,322 @@
+//! Composable layer ops for the native layer-graph backend.
+//!
+//! A `LayerOp` is one node of a `runtime::graph::ModelGraph` sequence:
+//! it declares its parameter tensors (`params`), infers its output shape
+//! (`out_shape`), and implements batched `forward`/`backward`.  Concrete
+//! ops: `Dense`, `Conv2d` (im2col + the blocked matmul shared with
+//! `Dense`), `MaxPool2d`/`AvgPool2d`, `Relu`, `GroupNorm` (GroupNorm-lite)
+//! and the `Residual` block combinator.
+//!
+//! Numeric contract (the backend's determinism guarantee lives here):
+//! every op uses a **fixed f32 accumulation order** — independent of
+//! scratch-buffer history and of which worker thread runs the op — so the
+//! cluster's `threads = N` stays bit-identical to `threads = 1`.
+//!
+//! Buffer contract: `forward` fully writes `y`; `backward` fully writes
+//! `dx` and **accumulates** (`+=`) into `grads` (the graph zeroes them
+//! once per backward pass).  Temporaries come from the caller's `Scratch`
+//! pool so steady-state training allocates nothing per batch.
+#![allow(clippy::too_many_arguments)]
+
+pub mod activation;
+pub mod conv2d;
+pub mod dense;
+pub mod matmul;
+pub mod norm;
+pub mod pool;
+pub mod residual;
+
+pub use activation::Relu;
+pub use conv2d::Conv2d;
+pub use dense::Dense;
+pub use norm::GroupNorm;
+pub use pool::{AvgPool2d, MaxPool2d};
+pub use residual::Residual;
+
+use anyhow::Result;
+
+use super::tensor::HostTensor;
+use crate::util::rng::Rng;
+
+/// How one parameter tensor is initialized (deterministically, from a
+/// per-tensor forked RNG stream).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Init {
+    /// He-normal: std = sqrt(2 / fan_in).  Weights.
+    He { fan_in: usize },
+    /// All zeros.  Biases, GroupNorm shifts.
+    Zeros,
+    /// All ones.  GroupNorm gains.
+    Ones,
+}
+
+impl Init {
+    /// Materialize this initializer into a fresh tensor.  `rng` is the
+    /// tensor's private stream; initializers that draw nothing leave it
+    /// untouched (streams are independent, so that is harmless).
+    pub fn materialize(&self, shape: &[usize], rng: &mut Rng) -> HostTensor {
+        let mut t = HostTensor::zeros(shape);
+        match *self {
+            Init::He { fan_in } => {
+                let std = (2.0 / fan_in.max(1) as f32).sqrt();
+                for v in t.data.iter_mut() {
+                    *v = rng.normal_f32(0.0, std);
+                }
+            }
+            Init::Zeros => {}
+            Init::Ones => t.data.fill(1.0),
+        }
+        t
+    }
+}
+
+/// Declaration of one parameter tensor owned by an op.  The graph names
+/// the tensor `{op.name()}.{suffix}` and groups all of an op's tensors
+/// into one aggregation unit (the paper's "layer").
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub suffix: String,
+    pub shape: Vec<usize>,
+    pub init: Init,
+}
+
+impl ParamSpec {
+    pub fn new(suffix: &str, shape: &[usize], init: Init) -> ParamSpec {
+        ParamSpec { suffix: suffix.to_string(), shape: shape.to_vec(), init }
+    }
+}
+
+/// A small free-list of f32 buffers so the hot path reuses capacity
+/// instead of reallocating per batch.  Pooling stays bit-identical to
+/// fresh allocation because checked-out contents are never *read* before
+/// being written: `take` returns a zeroed buffer, and `take_full` (no
+/// memset) is reserved for buffers the caller fully overwrites — the
+/// contract every op upholds for its `y`/`dx` outputs.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    free: Vec<Vec<f32>>,
+}
+
+impl Scratch {
+    /// A zeroed buffer of exactly `len`.
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        let mut buf = self.take_full(len);
+        buf.fill(0.0);
+        buf
+    }
+
+    /// A buffer of exactly `len` with **unspecified** contents (stale
+    /// pool data) — callers must write every element before reading any.
+    /// Skips the memset that dominates `take` for the conv-sized buffers.
+    pub fn take_full(&mut self, len: usize) -> Vec<f32> {
+        let mut buf = self.free.pop().unwrap_or_default();
+        if buf.len() < len {
+            buf.resize(len, 0.0);
+        } else {
+            buf.truncate(len);
+        }
+        buf
+    }
+
+    pub fn put(&mut self, buf: Vec<f32>) {
+        self.free.push(buf);
+    }
+}
+
+/// One node of the model graph.  Activations are row-major `[b, dim]`
+/// batches where `dim` is the product of the per-example shape (images
+/// are `[h, w, c]`).
+pub trait LayerOp: Send + Sync {
+    /// Aggregation-group name; must be unique among parameterized ops of
+    /// one graph.
+    fn name(&self) -> &str;
+
+    /// Parameter tensors owned by this op, in positional order.  Empty
+    /// for stateless ops (ReLU, pooling).
+    fn params(&self) -> Vec<ParamSpec> {
+        Vec::new()
+    }
+
+    /// Per-example output shape for the given input shape; errors when
+    /// the input is incompatible (shape inference = graph validation).
+    fn out_shape(&self, input: &[usize]) -> Result<Vec<usize>>;
+
+    /// Batched forward: read `x` (`[b, in_dim]`), fully write `y`
+    /// (`[b, out_dim]`).  `ps` is exactly this op's tensors.
+    fn forward(&self, ps: &[HostTensor], x: &[f32], y: &mut [f32], b: usize, s: &mut Scratch);
+
+    /// Batched backward: given this op's forward input `x`, output `y`,
+    /// and upstream gradient `dy`, fully write `dx` and accumulate
+    /// parameter gradients into `grads` (same layout as `ps`).
+    ///
+    /// An **empty** `dx` means the caller does not need the input
+    /// gradient (the graph's first op): ops must still accumulate their
+    /// parameter gradients but may skip the input-gradient compute.
+    fn backward(
+        &self,
+        ps: &[HostTensor],
+        x: &[f32],
+        y: &[f32],
+        dy: &[f32],
+        dx: &mut [f32],
+        grads: &mut [HostTensor],
+        b: usize,
+        s: &mut Scratch,
+    );
+}
+
+#[cfg(test)]
+pub(crate) mod check {
+    //! Shared finite-difference harness for op unit tests: checks the
+    //! analytic gradients of J = sum(forward(x) ⊙ r) for a fixed random
+    //! `r` against central differences, on both inputs and parameters.
+
+    use super::*;
+
+    pub fn random_params(op: &dyn LayerOp, rng: &mut Rng) -> Vec<HostTensor> {
+        op.params()
+            .iter()
+            .map(|spec| {
+                let mut t = HostTensor::zeros(&spec.shape);
+                match spec.init {
+                    Init::He { fan_in } => {
+                        let std = (2.0 / fan_in.max(1) as f32).sqrt();
+                        for v in t.data.iter_mut() {
+                            *v = rng.normal_f32(0.0, std);
+                        }
+                    }
+                    // perturb around the rest point so every gradient
+                    // path carries signal
+                    Init::Zeros => {
+                        for v in t.data.iter_mut() {
+                            *v = rng.normal_f32(0.0, 0.1);
+                        }
+                    }
+                    Init::Ones => {
+                        for v in t.data.iter_mut() {
+                            *v = rng.normal_f32(1.0, 0.1);
+                        }
+                    }
+                }
+                t
+            })
+            .collect()
+    }
+
+    fn objective(
+        op: &dyn LayerOp,
+        ps: &[HostTensor],
+        x: &[f32],
+        r: &[f32],
+        b: usize,
+        out_dim: usize,
+    ) -> f64 {
+        let mut s = Scratch::default();
+        let mut y = vec![0.0f32; b * out_dim];
+        op.forward(ps, x, &mut y, b, &mut s);
+        y.iter().zip(r).map(|(&yv, &rv)| yv as f64 * rv as f64).sum()
+    }
+
+    fn probe_coords(len: usize) -> [usize; 4] {
+        [0, len / 3, len / 2, len - 1]
+    }
+
+    /// Central-difference check on a few coordinates of the input and of
+    /// every parameter tensor.  `eps` trades truncation error against
+    /// kink sensitivity (use a smaller eps for ops with hard maxes).
+    pub fn finite_diff(op: &dyn LayerOp, in_shape: &[usize], b: usize, seed: u64, eps: f32) {
+        let in_dim: usize = in_shape.iter().product();
+        let out_dim: usize = op.out_shape(in_shape).unwrap().iter().product();
+        let mut rng = Rng::new(seed);
+        let ps = random_params(op, &mut rng);
+        let x: Vec<f32> = (0..b * in_dim).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let r: Vec<f32> = (0..b * out_dim).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+
+        let mut s = Scratch::default();
+        let mut y = vec![0.0f32; b * out_dim];
+        op.forward(&ps, &x, &mut y, b, &mut s);
+        let mut dx = vec![0.0f32; b * in_dim];
+        let mut grads: Vec<HostTensor> = ps.iter().map(|p| HostTensor::zeros(&p.shape)).collect();
+        op.backward(&ps, &x, &y, &r, &mut dx, &mut grads, b, &mut s);
+
+        let tol = |an: f64| 2e-2 * (1.0 + an.abs());
+        for j in probe_coords(x.len()) {
+            let mut xp = x.clone();
+            xp[j] += eps;
+            let mut xm = x.clone();
+            xm[j] -= eps;
+            let fp = objective(op, &ps, &xp, &r, b, out_dim);
+            let fm = objective(op, &ps, &xm, &r, b, out_dim);
+            let fd = (fp - fm) / (2.0 * eps as f64);
+            let an = dx[j] as f64;
+            assert!(
+                (fd - an).abs() < tol(an),
+                "{}: d/dx[{j}] finite-diff {fd} vs analytic {an}",
+                op.name()
+            );
+        }
+        for t in 0..ps.len() {
+            for j in probe_coords(ps[t].data.len()) {
+                let mut pp = ps.clone();
+                pp[t].data[j] += eps;
+                let mut pm = ps.clone();
+                pm[t].data[j] -= eps;
+                let fp = objective(op, &pp, &x, &r, b, out_dim);
+                let fm = objective(op, &pm, &x, &r, b, out_dim);
+                let fd = (fp - fm) / (2.0 * eps as f64);
+                let an = grads[t].data[j] as f64;
+                assert!(
+                    (fd - an).abs() < tol(an),
+                    "{}: tensor {t} coord {j} finite-diff {fd} vs analytic {an}",
+                    op.name()
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_materialize_modes() {
+        let root = Rng::new(1);
+        let mut r1 = root.fork(0);
+        let he = Init::He { fan_in: 4 }.materialize(&[4, 2], &mut r1);
+        assert!(he.data.iter().any(|&v| v != 0.0));
+        let mut r2 = root.fork(0);
+        let he2 = Init::He { fan_in: 4 }.materialize(&[4, 2], &mut r2);
+        assert_eq!(he.data, he2.data, "same stream -> same draw");
+        let z = Init::Zeros.materialize(&[3], &mut r1);
+        assert!(z.data.iter().all(|&v| v == 0.0));
+        let o = Init::Ones.materialize(&[3], &mut r1);
+        assert!(o.data.iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn scratch_take_is_always_zeroed() {
+        let mut s = Scratch::default();
+        let mut buf = s.take(4);
+        buf.copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        s.put(buf);
+        let again = s.take(6);
+        assert_eq!(again, vec![0.0; 6], "pooled buffer must come back zeroed");
+        s.put(again);
+        let shorter = s.take(2);
+        assert_eq!(shorter.len(), 2);
+    }
+
+    #[test]
+    fn scratch_take_full_has_exact_length_without_memset_guarantee() {
+        let mut s = Scratch::default();
+        let mut buf = s.take_full(3);
+        assert_eq!(buf.len(), 3);
+        buf.copy_from_slice(&[7.0, 8.0, 9.0]);
+        s.put(buf);
+        // contents are unspecified — only the length is guaranteed
+        assert_eq!(s.take_full(2).len(), 2);
+        assert_eq!(s.take_full(5).len(), 5);
+        assert_eq!(s.take_full(0).len(), 0);
+    }
+}

@@ -1,0 +1,191 @@
+//! GroupNorm-lite: per-example group normalization with a learned
+//! per-channel gain/shift — the batch-independent normalizer (BatchNorm
+//! would couple examples and break the per-client determinism story).
+
+use anyhow::Result;
+
+use super::{Init, LayerOp, ParamSpec, Scratch};
+use crate::runtime::tensor::HostTensor;
+
+pub struct GroupNorm {
+    name: String,
+    h: usize,
+    w: usize,
+    c: usize,
+    groups: usize,
+    eps: f32,
+}
+
+impl GroupNorm {
+    pub fn new(name: &str, in_shape: [usize; 3], groups: usize) -> GroupNorm {
+        let [h, w, c] = in_shape;
+        assert!(groups >= 1 && c % groups == 0, "groupnorm {name}: {c} channels not divisible into {groups} groups");
+        GroupNorm { name: name.to_string(), h, w, c, groups, eps: 1e-5 }
+    }
+
+    /// (mean, 1/sqrt(var + eps)) of one example's group `g`, two fixed
+    /// passes in memory order.
+    fn stats(&self, xe: &[f32], g: usize) -> (f32, f32) {
+        let gs = self.c / self.groups;
+        let c0 = g * gs;
+        let n = (self.h * self.w * gs) as f32;
+        let mut sum = 0.0f32;
+        for p in 0..self.h * self.w {
+            for ch in c0..c0 + gs {
+                sum += xe[p * self.c + ch];
+            }
+        }
+        let mean = sum / n;
+        let mut var = 0.0f32;
+        for p in 0..self.h * self.w {
+            for ch in c0..c0 + gs {
+                let d = xe[p * self.c + ch] - mean;
+                var += d * d;
+            }
+        }
+        (mean, 1.0 / (var / n + self.eps).sqrt())
+    }
+}
+
+impl LayerOp for GroupNorm {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn params(&self) -> Vec<ParamSpec> {
+        vec![
+            ParamSpec::new("g", &[self.c], Init::Ones),
+            ParamSpec::new("b", &[self.c], Init::Zeros),
+        ]
+    }
+
+    fn out_shape(&self, input: &[usize]) -> Result<Vec<usize>> {
+        anyhow::ensure!(
+            input == [self.h, self.w, self.c],
+            "groupnorm {}: input {input:?} != expected [{}, {}, {}]",
+            self.name,
+            self.h,
+            self.w,
+            self.c
+        );
+        Ok(input.to_vec())
+    }
+
+    fn forward(&self, ps: &[HostTensor], x: &[f32], y: &mut [f32], b: usize, _s: &mut Scratch) {
+        let (gamma, beta) = (&ps[0].data, &ps[1].data);
+        let gs = self.c / self.groups;
+        let dim = self.h * self.w * self.c;
+        for bi in 0..b {
+            let xe = &x[bi * dim..(bi + 1) * dim];
+            let ye = &mut y[bi * dim..(bi + 1) * dim];
+            for g in 0..self.groups {
+                let (mean, inv) = self.stats(xe, g);
+                let c0 = g * gs;
+                for p in 0..self.h * self.w {
+                    for ch in c0..c0 + gs {
+                        let i = p * self.c + ch;
+                        ye[i] = gamma[ch] * (xe[i] - mean) * inv + beta[ch];
+                    }
+                }
+            }
+        }
+    }
+
+    fn backward(
+        &self,
+        ps: &[HostTensor],
+        x: &[f32],
+        _y: &[f32],
+        dy: &[f32],
+        dx: &mut [f32],
+        grads: &mut [HostTensor],
+        b: usize,
+        _s: &mut Scratch,
+    ) {
+        let gamma = &ps[0].data;
+        let gs = self.c / self.groups;
+        let dim = self.h * self.w * self.c;
+        let n = (self.h * self.w * gs) as f32;
+        let need_dx = !dx.is_empty();
+        for bi in 0..b {
+            let xe = &x[bi * dim..(bi + 1) * dim];
+            let dye = &dy[bi * dim..(bi + 1) * dim];
+            for g in 0..self.groups {
+                let (mean, inv) = self.stats(xe, g);
+                let c0 = g * gs;
+                // s1 = sum(dy*gamma), s2 = sum(dy*gamma*xhat); the
+                // gain/shift gradients ride along in the same pass.
+                let mut s1 = 0.0f32;
+                let mut s2 = 0.0f32;
+                for p in 0..self.h * self.w {
+                    for ch in c0..c0 + gs {
+                        let i = p * self.c + ch;
+                        let xhat = (xe[i] - mean) * inv;
+                        let gup = dye[i] * gamma[ch];
+                        s1 += gup;
+                        s2 += gup * xhat;
+                        grads[0].data[ch] += dye[i] * xhat;
+                        grads[1].data[ch] += dye[i];
+                    }
+                }
+                if need_dx {
+                    let dxe = &mut dx[bi * dim..(bi + 1) * dim];
+                    let m1 = s1 / n;
+                    let m2 = s2 / n;
+                    for p in 0..self.h * self.w {
+                        for ch in c0..c0 + gs {
+                            let i = p * self.c + ch;
+                            let xhat = (xe[i] - mean) * inv;
+                            dxe[i] = inv * (dye[i] * gamma[ch] - m1 - xhat * m2);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::check;
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn normalizes_each_group_per_example() {
+        let gn = GroupNorm::new("gn", [2, 2, 4], 2);
+        let mut rng = Rng::new(4);
+        let x: Vec<f32> = (0..2 * 16).map(|_| rng.normal_f32(3.0, 2.0)).collect();
+        let ps = vec![
+            Init::Ones.materialize(&[4], &mut rng),
+            Init::Zeros.materialize(&[4], &mut rng),
+        ];
+        let mut y = vec![0.0f32; 2 * 16];
+        let mut s = Scratch::default();
+        gn.forward(&ps, &x, &mut y, 2, &mut s);
+        // with unit gain / zero shift every group is ~zero-mean, unit-var
+        for bi in 0..2 {
+            for g in 0..2 {
+                let vals: Vec<f32> = (0..4)
+                    .flat_map(|p| (0..2).map(move |dc| y[bi * 16 + p * 4 + g * 2 + dc]))
+                    .collect();
+                let mean: f32 = vals.iter().sum::<f32>() / 8.0;
+                let var: f32 = vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 8.0;
+                assert!(mean.abs() < 1e-4, "group mean {mean}");
+                assert!((var - 1.0).abs() < 1e-2, "group var {var}");
+            }
+        }
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        let gn = GroupNorm::new("gn", [3, 3, 4], 2);
+        check::finite_diff(&gn, &[3, 3, 4], 2, 12, 1e-2);
+    }
+
+    #[test]
+    fn single_group_is_layernorm() {
+        let gn = GroupNorm::new("ln", [2, 2, 3], 1);
+        check::finite_diff(&gn, &[2, 2, 3], 3, 13, 1e-2);
+    }
+}

@@ -1,0 +1,263 @@
+//! Spatial pooling over `[h, w, c]` activations.  Window == stride
+//! (non-overlapping), which is all the zoo models need; `win == h == w`
+//! gives global pooling.
+
+use anyhow::Result;
+
+use super::{LayerOp, Scratch};
+use crate::runtime::tensor::HostTensor;
+
+fn pool_geometry(name: &str, in_shape: [usize; 3], win: usize) -> (usize, usize) {
+    let [h, w, _] = in_shape;
+    assert!(win >= 1 && h % win == 0 && w % win == 0, "pool {name}: {h}x{w} not divisible by {win}");
+    (h / win, w / win)
+}
+
+fn check_shape(kind: &str, name: &str, input: &[usize], expect: [usize; 3]) -> Result<()> {
+    anyhow::ensure!(
+        input == expect,
+        "{kind} {name}: input {input:?} != expected {expect:?}"
+    );
+    Ok(())
+}
+
+/// Max pooling.  Backward routes the gradient to the first maximum of
+/// each window (fixed scan order -> deterministic tie-breaking).
+pub struct MaxPool2d {
+    name: String,
+    h: usize,
+    w: usize,
+    c: usize,
+    win: usize,
+    oh: usize,
+    ow: usize,
+}
+
+impl MaxPool2d {
+    pub fn new(name: &str, in_shape: [usize; 3], win: usize) -> MaxPool2d {
+        let (oh, ow) = pool_geometry(name, in_shape, win);
+        let [h, w, c] = in_shape;
+        MaxPool2d { name: name.to_string(), h, w, c, win, oh, ow }
+    }
+}
+
+impl LayerOp for MaxPool2d {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn out_shape(&self, input: &[usize]) -> Result<Vec<usize>> {
+        check_shape("maxpool", &self.name, input, [self.h, self.w, self.c])?;
+        Ok(vec![self.oh, self.ow, self.c])
+    }
+
+    fn forward(&self, _ps: &[HostTensor], x: &[f32], y: &mut [f32], b: usize, _s: &mut Scratch) {
+        let in_dim = self.h * self.w * self.c;
+        let out_dim = self.oh * self.ow * self.c;
+        for bi in 0..b {
+            let xe = &x[bi * in_dim..(bi + 1) * in_dim];
+            let ye = &mut y[bi * out_dim..(bi + 1) * out_dim];
+            for oy in 0..self.oh {
+                for ox in 0..self.ow {
+                    for ch in 0..self.c {
+                        let mut m = f32::NEG_INFINITY;
+                        for ky in 0..self.win {
+                            for kx in 0..self.win {
+                                let iy = oy * self.win + ky;
+                                let ix = ox * self.win + kx;
+                                let v = xe[(iy * self.w + ix) * self.c + ch];
+                                if v > m {
+                                    m = v;
+                                }
+                            }
+                        }
+                        ye[(oy * self.ow + ox) * self.c + ch] = m;
+                    }
+                }
+            }
+        }
+    }
+
+    fn backward(
+        &self,
+        _ps: &[HostTensor],
+        x: &[f32],
+        _y: &[f32],
+        dy: &[f32],
+        dx: &mut [f32],
+        _grads: &mut [HostTensor],
+        b: usize,
+        _s: &mut Scratch,
+    ) {
+        if dx.is_empty() {
+            return; // stateless: nothing to do without an input gradient
+        }
+        let in_dim = self.h * self.w * self.c;
+        let out_dim = self.oh * self.ow * self.c;
+        dx.fill(0.0);
+        for bi in 0..b {
+            let xe = &x[bi * in_dim..(bi + 1) * in_dim];
+            let dxe = &mut dx[bi * in_dim..(bi + 1) * in_dim];
+            let dye = &dy[bi * out_dim..(bi + 1) * out_dim];
+            for oy in 0..self.oh {
+                for ox in 0..self.ow {
+                    for ch in 0..self.c {
+                        let mut m = f32::NEG_INFINITY;
+                        let mut arg = 0usize;
+                        for ky in 0..self.win {
+                            for kx in 0..self.win {
+                                let iy = oy * self.win + ky;
+                                let ix = ox * self.win + kx;
+                                let idx = (iy * self.w + ix) * self.c + ch;
+                                if xe[idx] > m {
+                                    m = xe[idx];
+                                    arg = idx;
+                                }
+                            }
+                        }
+                        dxe[arg] += dye[(oy * self.ow + ox) * self.c + ch];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Average pooling.  Backward spreads the gradient uniformly.
+pub struct AvgPool2d {
+    name: String,
+    h: usize,
+    w: usize,
+    c: usize,
+    win: usize,
+    oh: usize,
+    ow: usize,
+}
+
+impl AvgPool2d {
+    pub fn new(name: &str, in_shape: [usize; 3], win: usize) -> AvgPool2d {
+        let (oh, ow) = pool_geometry(name, in_shape, win);
+        let [h, w, c] = in_shape;
+        AvgPool2d { name: name.to_string(), h, w, c, win, oh, ow }
+    }
+}
+
+impl LayerOp for AvgPool2d {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn out_shape(&self, input: &[usize]) -> Result<Vec<usize>> {
+        check_shape("avgpool", &self.name, input, [self.h, self.w, self.c])?;
+        Ok(vec![self.oh, self.ow, self.c])
+    }
+
+    fn forward(&self, _ps: &[HostTensor], x: &[f32], y: &mut [f32], b: usize, _s: &mut Scratch) {
+        let in_dim = self.h * self.w * self.c;
+        let out_dim = self.oh * self.ow * self.c;
+        let inv = 1.0 / (self.win * self.win) as f32;
+        for bi in 0..b {
+            let xe = &x[bi * in_dim..(bi + 1) * in_dim];
+            let ye = &mut y[bi * out_dim..(bi + 1) * out_dim];
+            for oy in 0..self.oh {
+                for ox in 0..self.ow {
+                    for ch in 0..self.c {
+                        let mut acc = 0.0f32;
+                        for ky in 0..self.win {
+                            for kx in 0..self.win {
+                                let iy = oy * self.win + ky;
+                                let ix = ox * self.win + kx;
+                                acc += xe[(iy * self.w + ix) * self.c + ch];
+                            }
+                        }
+                        ye[(oy * self.ow + ox) * self.c + ch] = acc * inv;
+                    }
+                }
+            }
+        }
+    }
+
+    fn backward(
+        &self,
+        _ps: &[HostTensor],
+        _x: &[f32],
+        _y: &[f32],
+        dy: &[f32],
+        dx: &mut [f32],
+        _grads: &mut [HostTensor],
+        b: usize,
+        _s: &mut Scratch,
+    ) {
+        if dx.is_empty() {
+            return; // stateless: nothing to do without an input gradient
+        }
+        let in_dim = self.h * self.w * self.c;
+        let out_dim = self.oh * self.ow * self.c;
+        let inv = 1.0 / (self.win * self.win) as f32;
+        for bi in 0..b {
+            let dxe = &mut dx[bi * in_dim..(bi + 1) * in_dim];
+            let dye = &dy[bi * out_dim..(bi + 1) * out_dim];
+            for oy in 0..self.oh {
+                for ox in 0..self.ow {
+                    for ch in 0..self.c {
+                        let g = dye[(oy * self.ow + ox) * self.c + ch] * inv;
+                        for ky in 0..self.win {
+                            for kx in 0..self.win {
+                                let iy = oy * self.win + ky;
+                                let ix = ox * self.win + kx;
+                                dxe[(iy * self.w + ix) * self.c + ch] = g;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::check;
+    use super::*;
+
+    #[test]
+    fn max_pool_picks_window_maxima() {
+        let p = MaxPool2d::new("p", [2, 2, 1], 2);
+        assert_eq!(p.out_shape(&[2, 2, 1]).unwrap(), vec![1, 1, 1]);
+        let x = [1.0f32, 4.0, 3.0, 2.0];
+        let mut y = [0.0f32];
+        let mut s = Scratch::default();
+        p.forward(&[], &x, &mut y, 1, &mut s);
+        assert_eq!(y, [4.0]);
+        let mut dx = [9.0f32; 4];
+        p.backward(&[], &x, &y, &[2.0], &mut dx, &mut [], 1, &mut s);
+        assert_eq!(dx, [0.0, 2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn avg_pool_means_and_spreads() {
+        let p = AvgPool2d::new("p", [2, 2, 2], 2);
+        // channels interleaved: [c0 c1] per pixel
+        let x = [1.0f32, 10.0, 2.0, 20.0, 3.0, 30.0, 4.0, 40.0];
+        let mut y = [0.0f32; 2];
+        let mut s = Scratch::default();
+        p.forward(&[], &x, &mut y, 1, &mut s);
+        assert_eq!(y, [2.5, 25.0]);
+        let mut dx = [9.0f32; 8];
+        p.backward(&[], &x, &y, &[4.0, 8.0], &mut dx, &mut [], 1, &mut s);
+        assert_eq!(dx, [1.0, 2.0, 1.0, 2.0, 1.0, 2.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn max_pool_gradients_match_finite_differences() {
+        // smaller eps: keeps the perturbation away from argmax flips
+        let p = MaxPool2d::new("p", [4, 4, 3], 2);
+        check::finite_diff(&p, &[4, 4, 3], 2, 9, 1e-3);
+    }
+
+    #[test]
+    fn avg_pool_gradients_match_finite_differences() {
+        let p = AvgPool2d::new("p", [4, 4, 2], 2);
+        check::finite_diff(&p, &[4, 4, 2], 2, 10, 1e-2);
+    }
+}

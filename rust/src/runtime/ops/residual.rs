@@ -1,0 +1,275 @@
+//! Residual block combinator: `y = body(x) + skip(x)`, where `body` is an
+//! inner op sequence and `skip` is the identity or a projection conv
+//! (1x1, strided) when the geometry changes.
+//!
+//! The combinator stores no activations: `backward` recomputes the body
+//! forward (deterministically, so gradients match a stored-activation
+//! implementation bit-for-bit) and chains the inner backwards in reverse.
+//! Parameter tensors of all inner ops concatenate into ONE aggregation
+//! group — a residual block is one of the paper's "layers".
+
+use anyhow::Result;
+
+use super::conv2d::Conv2d;
+use super::{LayerOp, ParamSpec, Scratch};
+use crate::runtime::tensor::HostTensor;
+
+pub struct Residual {
+    name: String,
+    body: Vec<Box<dyn LayerOp>>,
+    proj: Option<Conv2d>,
+    /// Parameter-tensor count per body op, and its start offset into this
+    /// block's parameter slice.
+    body_counts: Vec<usize>,
+    body_starts: Vec<usize>,
+    /// Offset of the projection's tensors (== total body tensor count).
+    proj_start: usize,
+    /// Per-example element counts along the body: dims[0] = input,
+    /// dims[i+1] = body op i output.
+    dims: Vec<usize>,
+    in_shape: Vec<usize>,
+    out_shape_v: Vec<usize>,
+}
+
+impl Residual {
+    pub fn new(
+        name: &str,
+        in_shape: &[usize],
+        body: Vec<Box<dyn LayerOp>>,
+        proj: Option<Conv2d>,
+    ) -> Result<Residual> {
+        anyhow::ensure!(!body.is_empty(), "residual {name}: empty body");
+        let mut dims = vec![in_shape.iter().product::<usize>()];
+        let mut cur = in_shape.to_vec();
+        let mut body_counts = Vec::with_capacity(body.len());
+        let mut body_starts = Vec::with_capacity(body.len());
+        let mut next = 0usize;
+        for op in &body {
+            cur = op.out_shape(&cur)?;
+            dims.push(cur.iter().product());
+            let cnt = op.params().len();
+            body_starts.push(next);
+            body_counts.push(cnt);
+            next += cnt;
+        }
+        let skip_shape = match &proj {
+            Some(p) => p.out_shape(in_shape)?,
+            None => in_shape.to_vec(),
+        };
+        anyhow::ensure!(
+            skip_shape == cur,
+            "residual {name}: skip path produces {skip_shape:?} but body produces {cur:?}"
+        );
+        Ok(Residual {
+            name: name.to_string(),
+            body,
+            proj,
+            body_counts,
+            body_starts,
+            proj_start: next,
+            dims,
+            in_shape: in_shape.to_vec(),
+            out_shape_v: cur,
+        })
+    }
+
+    /// Run the body chain, returning every intermediate activation
+    /// (bufs[i] = body op i output) borrowed from the scratch pool.
+    fn body_forward(
+        &self,
+        ps: &[HostTensor],
+        x: &[f32],
+        b: usize,
+        s: &mut Scratch,
+    ) -> Vec<Vec<f32>> {
+        let mut bufs: Vec<Vec<f32>> = Vec::with_capacity(self.body.len());
+        for (i, op) in self.body.iter().enumerate() {
+            let mut out = s.take_full(b * self.dims[i + 1]);
+            let (start, cnt) = (self.body_starts[i], self.body_counts[i]);
+            let input: &[f32] = if i == 0 { x } else { &bufs[i - 1] };
+            op.forward(&ps[start..start + cnt], input, &mut out, b, s);
+            bufs.push(out);
+        }
+        bufs
+    }
+}
+
+impl LayerOp for Residual {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn params(&self) -> Vec<ParamSpec> {
+        let mut specs = Vec::new();
+        for op in &self.body {
+            for spec in op.params() {
+                specs.push(ParamSpec {
+                    suffix: format!("{}.{}", op.name(), spec.suffix),
+                    shape: spec.shape,
+                    init: spec.init,
+                });
+            }
+        }
+        if let Some(p) = &self.proj {
+            for spec in p.params() {
+                specs.push(ParamSpec {
+                    suffix: format!("{}.{}", p.name(), spec.suffix),
+                    shape: spec.shape,
+                    init: spec.init,
+                });
+            }
+        }
+        specs
+    }
+
+    fn out_shape(&self, input: &[usize]) -> Result<Vec<usize>> {
+        anyhow::ensure!(
+            input == self.in_shape.as_slice(),
+            "residual {}: input {input:?} != expected {:?}",
+            self.name,
+            self.in_shape
+        );
+        Ok(self.out_shape_v.clone())
+    }
+
+    fn forward(&self, ps: &[HostTensor], x: &[f32], y: &mut [f32], b: usize, s: &mut Scratch) {
+        let bufs = self.body_forward(ps, x, b, s);
+        let body_out = bufs.last().expect("non-empty body");
+        match &self.proj {
+            Some(p) => {
+                p.forward(&ps[self.proj_start..], x, y, b, s);
+                for (yv, &bv) in y.iter_mut().zip(body_out) {
+                    *yv += bv;
+                }
+            }
+            None => {
+                for ((yv, &bv), &xv) in y.iter_mut().zip(body_out).zip(x) {
+                    *yv = xv + bv;
+                }
+            }
+        }
+        for buf in bufs {
+            s.put(buf);
+        }
+    }
+
+    fn backward(
+        &self,
+        ps: &[HostTensor],
+        x: &[f32],
+        _y: &[f32],
+        dy: &[f32],
+        dx: &mut [f32],
+        grads: &mut [HostTensor],
+        b: usize,
+        s: &mut Scratch,
+    ) {
+        // recompute body activations, then chain inner backwards
+        let bufs = self.body_forward(ps, x, b, s);
+        let mut dcur = s.take_full(dy.len());
+        dcur.copy_from_slice(dy);
+        for i in (0..self.body.len()).rev() {
+            let (start, cnt) = (self.body_starts[i], self.body_counts[i]);
+            // when the caller doesn't need dx, the first body op doesn't
+            // need its input gradient either — propagate the empty-slice
+            // convention down
+            let mut dprev = if i == 0 && dx.is_empty() {
+                s.take_full(0)
+            } else {
+                s.take_full(b * self.dims[i])
+            };
+            let input: &[f32] = if i == 0 { x } else { &bufs[i - 1] };
+            self.body[i].backward(
+                &ps[start..start + cnt],
+                input,
+                &bufs[i],
+                &dcur,
+                &mut dprev,
+                &mut grads[start..start + cnt],
+                b,
+                s,
+            );
+            s.put(std::mem::replace(&mut dcur, dprev));
+        }
+        // dcur is now d(x) through the body; add the skip path
+        match &self.proj {
+            Some(p) => {
+                // Conv2d::backward never reads its `y` argument, so the
+                // projection's forward output is not recomputed for it.
+                let pp = &ps[self.proj_start..];
+                let mut dskip = s.take_full(dx.len());
+                p.backward(pp, x, &[], dy, &mut dskip, &mut grads[self.proj_start..], b, s);
+                for ((dv, &bv), &sv) in dx.iter_mut().zip(&dcur).zip(&dskip) {
+                    *dv = bv + sv;
+                }
+                s.put(dskip);
+            }
+            None => {
+                for ((dv, &bv), &dyv) in dx.iter_mut().zip(&dcur).zip(dy) {
+                    *dv = bv + dyv;
+                }
+            }
+        }
+        s.put(dcur);
+        for buf in bufs {
+            s.put(buf);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::check;
+    use super::super::norm::GroupNorm;
+    use super::super::Relu;
+    use super::*;
+
+    fn block(stride: usize, cin: usize, cout: usize) -> Residual {
+        let (h, w) = (4usize, 4usize);
+        let (oh, ow) = (h / stride, w / stride);
+        let body: Vec<Box<dyn LayerOp>> = vec![
+            Box::new(Conv2d::new("c1", [h, w, cin], cout, 3, stride, 1)),
+            Box::new(GroupNorm::new("gn1", [oh, ow, cout], 1)),
+            Box::new(Relu::new("relu")),
+            Box::new(Conv2d::new("c2", [oh, ow, cout], cout, 3, 1, 1)),
+        ];
+        let proj = if stride != 1 || cin != cout {
+            Some(Conv2d::new("proj", [h, w, cin], cout, 1, stride, 0))
+        } else {
+            None
+        };
+        Residual::new("blk", &[h, w, cin], body, proj).unwrap()
+    }
+
+    #[test]
+    fn params_concatenate_with_prefixes() {
+        let r = block(2, 2, 3);
+        let names: Vec<String> = r.params().iter().map(|p| p.suffix.clone()).collect();
+        assert_eq!(names, vec!["c1.w", "c1.b", "gn1.g", "gn1.b", "c2.w", "c2.b", "proj.w", "proj.b"]);
+        assert_eq!(r.out_shape(&[4, 4, 2]).unwrap(), vec![2, 2, 3]);
+        assert!(r.out_shape(&[4, 4, 3]).is_err());
+        // identity-skip variant has no proj tensors
+        let id = block(1, 3, 3);
+        assert_eq!(id.params().len(), 6);
+    }
+
+    #[test]
+    fn shape_mismatch_is_rejected_at_construction() {
+        let body: Vec<Box<dyn LayerOp>> =
+            vec![Box::new(Conv2d::new("c", [4, 4, 2], 3, 3, 2, 1))];
+        // body halves the spatial dims but the skip is identity
+        assert!(Residual::new("bad", &[4, 4, 2], body, None).is_err());
+    }
+
+    #[test]
+    fn identity_skip_gradients_match_finite_differences() {
+        let r = block(1, 3, 3);
+        check::finite_diff(&r, &[4, 4, 3], 2, 21, 5e-3);
+    }
+
+    #[test]
+    fn projection_skip_gradients_match_finite_differences() {
+        let r = block(2, 2, 3);
+        check::finite_diff(&r, &[4, 4, 2], 2, 22, 5e-3);
+    }
+}

@@ -1,0 +1,301 @@
+//! The native model zoo: every architecture the presets reference, built
+//! as a `ModelGraph` — no artifacts, no silent MLP fallback.
+//!
+//! `build(model, dataset)` is the single resolution point used by the
+//! coordinator, the CLI, and `RunConfig::validate`: unknown model names
+//! and model/dataset geometry mismatches are hard errors, never quiet
+//! substitutions (the registry exists so layer-wise scheduling always
+//! runs over the architecture the experiment names).
+
+use anyhow::Result;
+
+use super::graph::ModelGraph;
+use super::native::{DEFAULT_BATCH, DEFAULT_CHUNK_K, DEFAULT_EVAL_BATCH};
+use super::ops::{AvgPool2d, Conv2d, Dense, GroupNorm, LayerOp, MaxPool2d, Relu, Residual};
+use crate::data::DatasetKind;
+
+/// Every model name the native engine can build.
+pub const MODELS: &[&str] = &["mlp", "femnist_cnn", "cifar_cnn100", "resnet20"];
+
+pub fn is_known(model: &str) -> bool {
+    MODELS.contains(&model)
+}
+
+/// The dataset a model was designed for (used by `inspect` when the user
+/// names only the model).
+pub fn default_dataset(model: &str) -> Option<DatasetKind> {
+    match model {
+        "mlp" => Some(DatasetKind::Toy),
+        "femnist_cnn" => Some(DatasetKind::Femnist),
+        "cifar_cnn100" => Some(DatasetKind::Cifar100),
+        "resnet20" => Some(DatasetKind::Cifar10),
+        _ => None,
+    }
+}
+
+/// Resolve a model name to a ready backend for `dataset`.
+pub fn build(model: &str, kind: DatasetKind) -> Result<ModelGraph> {
+    match model {
+        "mlp" => Ok(ModelGraph::for_dataset(kind)),
+        "femnist_cnn" => femnist_cnn(kind),
+        "cifar_cnn100" => cifar_cnn100(kind),
+        "resnet20" => resnet20(kind),
+        other => anyhow::bail!(
+            "unknown model {other:?}: native models are {MODELS:?} (the engine never \
+             substitutes a different architecture silently)"
+        ),
+    }
+}
+
+fn require_input(model: &str, kind: DatasetKind, want: [usize; 3]) -> Result<()> {
+    anyhow::ensure!(
+        kind.input_shape() == want,
+        "model {model} requires a {}x{}x{} input, but dataset {kind:?} provides {:?}",
+        want[0],
+        want[1],
+        want[2],
+        kind.input_shape()
+    );
+    Ok(())
+}
+
+/// ReLU MLP over the flattened input — the historical native backend,
+/// bit-identical to the pre-graph implementation (same init streams, same
+/// accumulation order).
+pub fn mlp(
+    input_shape: &[usize],
+    hidden: &[usize],
+    num_classes: usize,
+    batch_size: usize,
+    eval_batch_size: usize,
+    chunk_k: usize,
+) -> ModelGraph {
+    let input_dim: usize = input_shape.iter().product();
+    let mut dims = vec![input_dim];
+    dims.extend_from_slice(hidden);
+    dims.push(num_classes);
+    let mut ops: Vec<Box<dyn LayerOp>> = Vec::new();
+    for l in 0..dims.len() - 1 {
+        ops.push(Box::new(Dense::new(&format!("fc{}", l + 1), dims[l], dims[l + 1])));
+        if l + 2 < dims.len() {
+            ops.push(Box::new(Relu::new(&format!("relu{}", l + 1))));
+        }
+    }
+    ModelGraph::from_ops(
+        "native-mlp",
+        "mlp",
+        input_shape,
+        num_classes,
+        batch_size,
+        eval_batch_size,
+        chunk_k,
+        ops,
+    )
+    .expect("the MLP graph is always well-formed")
+}
+
+/// Small LeNet-style CNN for 28x28x1 FEMNIST: two conv+pool stages and a
+/// dense head.
+pub fn femnist_cnn(kind: DatasetKind) -> Result<ModelGraph> {
+    require_input("femnist_cnn", kind, [28, 28, 1])?;
+    let classes = kind.num_classes();
+    let ops: Vec<Box<dyn LayerOp>> = vec![
+        Box::new(Conv2d::new("conv1", [28, 28, 1], 8, 3, 1, 1)),
+        Box::new(Relu::new("relu1")),
+        Box::new(MaxPool2d::new("pool1", [28, 28, 8], 2)),
+        Box::new(Conv2d::new("conv2", [14, 14, 8], 16, 3, 1, 1)),
+        Box::new(Relu::new("relu2")),
+        Box::new(MaxPool2d::new("pool2", [14, 14, 16], 2)),
+        Box::new(Dense::new("fc1", 7 * 7 * 16, 64)),
+        Box::new(Relu::new("relu3")),
+        Box::new(Dense::new("fc2", 64, classes)),
+    ];
+    ModelGraph::from_ops(
+        "native-femnist-cnn",
+        "cnn",
+        &[28, 28, 1],
+        classes,
+        DEFAULT_BATCH,
+        DEFAULT_EVAL_BATCH,
+        DEFAULT_CHUNK_K,
+        ops,
+    )
+}
+
+/// VGG-style CNN for 32x32x3 inputs (the paper's CIFAR-100 stand-in):
+/// three conv stages with group-normed stem, then a dense head.
+pub fn cifar_cnn100(kind: DatasetKind) -> Result<ModelGraph> {
+    require_input("cifar_cnn100", kind, [32, 32, 3])?;
+    let classes = kind.num_classes();
+    let ops: Vec<Box<dyn LayerOp>> = vec![
+        Box::new(Conv2d::new("conv1", [32, 32, 3], 16, 3, 1, 1)),
+        Box::new(GroupNorm::new("gn1", [32, 32, 16], 4)),
+        Box::new(Relu::new("relu1")),
+        Box::new(MaxPool2d::new("pool1", [32, 32, 16], 2)),
+        Box::new(Conv2d::new("conv2", [16, 16, 16], 32, 3, 1, 1)),
+        Box::new(Relu::new("relu2")),
+        Box::new(MaxPool2d::new("pool2", [16, 16, 32], 2)),
+        Box::new(Conv2d::new("conv3", [8, 8, 32], 32, 3, 1, 1)),
+        Box::new(Relu::new("relu3")),
+        Box::new(AvgPool2d::new("pool3", [8, 8, 32], 2)),
+        Box::new(Dense::new("fc1", 4 * 4 * 32, 128)),
+        Box::new(Relu::new("relu4")),
+        Box::new(Dense::new("fc2", 128, classes)),
+    ];
+    ModelGraph::from_ops(
+        "native-cifar-cnn",
+        "cnn",
+        &[32, 32, 3],
+        classes,
+        DEFAULT_BATCH,
+        DEFAULT_EVAL_BATCH,
+        DEFAULT_CHUNK_K,
+        ops,
+    )
+}
+
+/// ResNet-20 (CIFAR variant, GroupNorm instead of BatchNorm): 3x3 stem,
+/// three stages of three residual blocks at widths 16/32/64 with strided
+/// projection transitions, global average pooling, dense head.  Uses a
+/// smaller batch than the MLPs — each step is ~50x the compute.
+pub fn resnet20(kind: DatasetKind) -> Result<ModelGraph> {
+    require_input("resnet20", kind, [32, 32, 3])?;
+    let classes = kind.num_classes();
+    let mut ops: Vec<Box<dyn LayerOp>> = vec![
+        Box::new(Conv2d::new("stem", [32, 32, 3], 16, 3, 1, 1)),
+        Box::new(GroupNorm::new("stem_gn", [32, 32, 16], 4)),
+        Box::new(Relu::new("stem_relu")),
+    ];
+    let widths = [16usize, 32, 64];
+    let mut shape = [32usize, 32, 16];
+    for (si, &cout) in widths.iter().enumerate() {
+        for bi in 0..3 {
+            let stride = if si > 0 && bi == 0 { 2 } else { 1 };
+            let name = format!("s{}b{}", si + 1, bi + 1);
+            ops.push(Box::new(res_block(&name, shape, cout, stride)?));
+            ops.push(Box::new(Relu::new(&format!("{name}_relu"))));
+            shape = [shape[0] / stride, shape[1] / stride, cout];
+        }
+    }
+    ops.push(Box::new(AvgPool2d::new("gap", [8, 8, 64], 8)));
+    ops.push(Box::new(Dense::new("fc", 64, classes)));
+    ModelGraph::from_ops("native-resnet20", "resnet", &[32, 32, 3], classes, 8, 16, 2, ops)
+}
+
+/// One pre-head ResNet basic block: conv-gn-relu-conv-gn plus an
+/// identity or 1x1-projection skip (the graph adds the post-add ReLU).
+fn res_block(name: &str, in_shape: [usize; 3], cout: usize, stride: usize) -> Result<Residual> {
+    let [h, w, cin] = in_shape;
+    let (oh, ow) = (h / stride, w / stride);
+    let body: Vec<Box<dyn LayerOp>> = vec![
+        Box::new(Conv2d::new("c1", in_shape, cout, 3, stride, 1)),
+        Box::new(GroupNorm::new("gn1", [oh, ow, cout], 4)),
+        Box::new(Relu::new("relu")),
+        Box::new(Conv2d::new("c2", [oh, ow, cout], cout, 3, 1, 1)),
+        Box::new(GroupNorm::new("gn2", [oh, ow, cout], 4)),
+    ];
+    let proj = if stride != 1 || cin != cout {
+        Some(Conv2d::new("proj", in_shape, cout, 1, stride, 0))
+    } else {
+        None
+    };
+    Residual::new(name, &[h, w, cin], body, proj)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::native::DEFAULT_HIDDEN;
+    use super::*;
+
+    #[test]
+    fn registry_knows_every_preset_model() {
+        for m in ["mlp", "femnist_cnn", "cifar_cnn100", "resnet20"] {
+            assert!(is_known(m), "{m} missing from registry");
+            let kind = default_dataset(m).unwrap();
+            let g = build(m, kind).unwrap();
+            g.manifest().validate().unwrap();
+        }
+        assert!(!is_known("vgg16"));
+        assert!(default_dataset("vgg16").is_none());
+    }
+
+    #[test]
+    fn unknown_model_errors_loudly() {
+        let err = build("resnet999", DatasetKind::Cifar10).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unknown model"), "{msg}");
+        assert!(msg.contains("resnet20"), "should list known models: {msg}");
+    }
+
+    #[test]
+    fn geometry_mismatches_are_rejected() {
+        assert!(build("femnist_cnn", DatasetKind::Toy).is_err());
+        assert!(build("resnet20", DatasetKind::Femnist).is_err());
+        assert!(build("cifar_cnn100", DatasetKind::Cifar10).is_ok(), "any 32x32x3 dataset works");
+    }
+
+    #[test]
+    fn femnist_cnn_manifest() {
+        let g = femnist_cnn(DatasetKind::Femnist).unwrap();
+        let m = g.manifest();
+        assert_eq!(m.model, "native-femnist-cnn");
+        assert_eq!(m.input_shape, vec![28, 28, 1]);
+        assert_eq!(m.num_classes, 62);
+        assert_eq!(m.groups.len(), 4); // conv1 conv2 fc1 fc2
+        assert_eq!(m.params[0].shape, vec![9, 8]);
+    }
+
+    #[test]
+    fn resnet20_manifest_has_real_layers() {
+        let g = resnet20(DatasetKind::Cifar10).unwrap();
+        let m = g.manifest();
+        assert_eq!(m.model, "native-resnet20");
+        // stem + stem_gn + 9 residual blocks + fc
+        assert_eq!(m.groups.len(), 12);
+        assert!(m.num_tensors() >= 20, "only {} tensors", m.num_tensors());
+        // stage-transition blocks carry projection tensors
+        assert!(m.params.iter().any(|p| p.name == "s2b1.proj.w"));
+        assert!(m.params.iter().any(|p| p.name == "s3b1.gn2.b"));
+        // heterogeneous group dims — the signal layer-wise scheduling needs
+        let dims: std::collections::BTreeSet<usize> = m.groups.iter().map(|g| g.dim).collect();
+        assert!(dims.len() >= 5, "group dims too uniform: {dims:?}");
+        // classes follow the dataset
+        let g100 = resnet20(DatasetKind::Cifar100).unwrap();
+        assert_eq!(g100.manifest().num_classes, 100);
+    }
+
+    #[test]
+    fn mlp_matches_historical_layout() {
+        let g = mlp(&[64], &DEFAULT_HIDDEN, 10, DEFAULT_BATCH, DEFAULT_EVAL_BATCH, DEFAULT_CHUNK_K);
+        let m = g.manifest();
+        assert_eq!(m.model, "native-mlp");
+        assert_eq!(m.groups.len(), 3);
+        assert_eq!(m.params[0].name, "fc1.w");
+        assert_eq!(m.params[5].name, "fc3.b");
+        assert_eq!(m.num_params, 64 * 128 + 128 + 128 * 64 + 64 + 64 * 10 + 10);
+    }
+
+    #[test]
+    fn mlp_manifest_matches_synthetic_mlp() {
+        // Pin the graph-derived MLP manifest to the historical
+        // `Manifest::synthetic_mlp` layout reference so the two can never
+        // silently drift.
+        use crate::runtime::manifest::Manifest;
+        let g = mlp(&[32, 32, 3], &DEFAULT_HIDDEN, 10, 8, 32, 2);
+        let reference = Manifest::synthetic_mlp(&[32, 32, 3], &DEFAULT_HIDDEN, 10, 8, 32, 2);
+        let m = g.manifest();
+        assert_eq!(m.num_params, reference.num_params);
+        assert_eq!(m.input_shape, reference.input_shape);
+        assert_eq!(m.params.len(), reference.params.len());
+        for (a, b) in m.params.iter().zip(&reference.params) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.shape, b.shape);
+            assert_eq!(a.group, b.group);
+        }
+        for (a, b) in m.groups.iter().zip(&reference.groups) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.params, b.params);
+            assert_eq!(a.dim, b.dim);
+        }
+    }
+}
