@@ -33,7 +33,7 @@ fn main() -> anyhow::Result<()> {
 
     let groups = coord.manifest().groups.clone();
     println!("=== Algorithm 2 adjustments over training ===");
-    for (i, adj) in coord.schedule.adjustments.iter().enumerate() {
+    for (i, adj) in coord.schedule().adjustments.iter().enumerate() {
         let relaxed: Vec<&str> = (0..groups.len())
             .filter(|&g| adj.intervals[g] > 6)
             .map(|g| groups[g].name.as_str())
@@ -63,7 +63,7 @@ fn main() -> anyhow::Result<()> {
 
     // The paper's Figure-2 observation: the relaxed parameter share should
     // be large (output-side layers dominate), i.e. crossover height << 0.5.
-    let adj = coord.schedule.adjustments.first().unwrap();
+    let adj = coord.schedule().adjustments.first().unwrap();
     let cross = adj
         .delta_curve
         .iter()

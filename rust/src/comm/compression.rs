@@ -126,23 +126,52 @@ impl Compressor for TopK {
     }
 }
 
+/// A parsed compressor specification.  `Spec` separates *what* transform a
+/// spec names from the seeded `Compressor` instance that applies it, so the
+/// federation protocol can re-instantiate the same transform with a fresh,
+/// message-derived RNG stream per uplink (transport-invariant compression:
+/// the lossy values do not depend on which process compresses, or in which
+/// order).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Spec {
+    Dense,
+    QBits { bits: u32 },
+    TopK { ratio: f64 },
+}
+
+impl Spec {
+    /// Parse "dense", "qN" (N in 1..=16), "topP" (percent in (0, 100]).
+    pub fn parse(spec: &str) -> Option<Spec> {
+        if spec == "dense" || spec.is_empty() {
+            return Some(Spec::Dense);
+        }
+        if let Some(bits) = spec.strip_prefix('q').and_then(|s| s.parse::<u32>().ok()) {
+            if (1..=16).contains(&bits) {
+                return Some(Spec::QBits { bits });
+            }
+            return None;
+        }
+        if let Some(pct) = spec.strip_prefix("top").and_then(|s| s.parse::<f64>().ok()) {
+            if pct > 0.0 && pct <= 100.0 {
+                return Some(Spec::TopK { ratio: pct / 100.0 });
+            }
+        }
+        None
+    }
+
+    /// Instantiate the compressor with the given RNG seed.
+    pub fn build(&self, seed: u64) -> Box<dyn Compressor> {
+        match *self {
+            Spec::Dense => Box::new(Dense),
+            Spec::QBits { bits } => Box::new(Quantizer::new(bits, seed)),
+            Spec::TopK { ratio } => Box::new(TopK::new(ratio)),
+        }
+    }
+}
+
 /// Parse a compressor spec: "dense", "q4", "q8", "top1", "top10" (percent).
 pub fn parse(spec: &str, seed: u64) -> Option<Box<dyn Compressor>> {
-    if spec == "dense" || spec.is_empty() {
-        return Some(Box::new(Dense));
-    }
-    if let Some(bits) = spec.strip_prefix('q').and_then(|s| s.parse::<u32>().ok()) {
-        if (1..=16).contains(&bits) {
-            return Some(Box::new(Quantizer::new(bits, seed)));
-        }
-        return None;
-    }
-    if let Some(pct) = spec.strip_prefix("top").and_then(|s| s.parse::<f64>().ok()) {
-        if pct > 0.0 && pct <= 100.0 {
-            return Some(Box::new(TopK::new(pct / 100.0)));
-        }
-    }
-    None
+    Spec::parse(spec).map(|s| s.build(seed))
 }
 
 #[cfg(test)]

@@ -78,7 +78,7 @@ impl EngineKind {
 }
 
 /// Full specification of one training run.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct RunConfig {
     /// Compute backend (native is hermetic; pjrt reads `model_dir`).
     pub engine: EngineKind,
@@ -86,6 +86,13 @@ pub struct RunConfig {
     /// (`runtime::cluster`): 1 = serial, 0 = auto (leave two cores for the
     /// runtime), N > 1 = fixed.  Results are bit-identical for every value.
     pub threads: usize,
+    /// Worker *processes* for the federation protocol's multi-process
+    /// transport: 0 (default) runs the in-proc transport (one process, one
+    /// participant owning every client); N > 0 spawns N `fedlama worker`
+    /// subprocesses and shards the client fleet across them over stdio
+    /// pipes.  Results are bit-identical for every value.  Composes with
+    /// `threads` (each worker fans its shard across that many threads).
+    pub workers: usize,
     /// Model architecture by name.  The native engine resolves it through
     /// the `runtime::zoo` registry (mlp | femnist_cnn | cifar_cnn100 |
     /// resnet20); unknown names are a validation error, never a silent
@@ -141,9 +148,25 @@ impl RunConfig {
             );
         }
         anyhow::ensure!(
-            crate::comm::parse_compressor(&self.compressor, 0).is_some(),
+            crate::comm::Spec::parse(&self.compressor).is_some(),
             "unknown compressor {:?} (dense|qN|topP)",
             self.compressor
+        );
+        if self.backend == AggBackend::Xla {
+            anyhow::ensure!(
+                self.compressor == "dense",
+                "backend=xla forces the fused aggregation kernel, which the compressed \
+                 uplink path bypasses — use backend=auto with --compress"
+            );
+        }
+        // The training loop is blocked by the base interval gap; a non-
+        // multiple would silently drop the tail iterations.
+        anyhow::ensure!(
+            self.iterations % self.policy.base_interval() == 0,
+            "iterations ({}) must be a multiple of the base interval gap ({}) — the block \
+             loop would silently drop the tail iterations",
+            self.iterations,
+            self.policy.base_interval()
         );
         anyhow::ensure!(
             self.iterations % self.policy.round_len() == 0,
@@ -151,6 +174,19 @@ impl RunConfig {
             self.iterations,
             self.policy.round_len()
         );
+        if self.workers > 0 {
+            anyhow::ensure!(
+                matches!(self.algorithm, Algorithm::Sgd | Algorithm::Prox { .. }),
+                "--workers requires sgd or fedprox: {} reads client state on the server at \
+                 round boundaries, which the multi-process transport does not ship",
+                self.algorithm.name()
+            );
+            anyhow::ensure!(
+                self.engine == EngineKind::Native,
+                "--workers requires the native engine (worker processes rebuild their \
+                 compute backend from the wire config; PJRT artifacts are not shipped)"
+            );
+        }
         if self.engine == EngineKind::Native {
             anyhow::ensure!(
                 crate::runtime::zoo::is_known(&self.model),
@@ -192,6 +228,7 @@ impl Default for RunConfig {
         RunConfig {
             engine: EngineKind::Native,
             threads: 1,
+            workers: 0,
             model: "mlp".to_string(),
             model_dir: PathBuf::from("artifacts/mlp"),
             dataset: DatasetKind::Toy,
@@ -251,6 +288,47 @@ mod tests {
     }
 
     #[test]
+    fn iterations_must_align_to_base_interval_gap() {
+        // 100 is not a multiple of tau = 6: the block loop would silently
+        // drop the 4 tail iterations, so validation must reject it and the
+        // error must name the gap.
+        let cfg = RunConfig { policy: Policy::fedlama(6, 4), iterations: 100, ..Default::default() };
+        let err = cfg.validate().unwrap_err();
+        assert!(format!("{err:#}").contains("base interval gap"), "{err:#}");
+        // 102 = 17 * 6 is gap-aligned but not round-aligned (round = 24):
+        // the round-length check still fires.
+        let cfg = RunConfig { policy: Policy::fedlama(6, 4), iterations: 102, ..Default::default() };
+        let err = cfg.validate().unwrap_err();
+        assert!(format!("{err:#}").contains("round length"), "{err:#}");
+        // FullSync: gap == round length, one aligned check covers both.
+        let cfg = RunConfig { policy: Policy::fedavg(7), iterations: 120, ..Default::default() };
+        assert!(cfg.validate().is_err());
+        let cfg = RunConfig { policy: Policy::fedavg(6), iterations: 120, ..Default::default() };
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn multiprocess_transport_constraints() {
+        // workers > 0 composes with sgd and fedprox only
+        let cfg = RunConfig { workers: 2, ..Default::default() };
+        cfg.validate().unwrap();
+        let cfg = RunConfig {
+            workers: 2,
+            algorithm: Algorithm::Prox { mu: 0.01 },
+            ..Default::default()
+        };
+        cfg.validate().unwrap();
+        for algo in [Algorithm::Scaffold, Algorithm::Nova] {
+            let cfg = RunConfig { workers: 2, algorithm: algo, ..Default::default() };
+            let err = cfg.validate().unwrap_err();
+            assert!(format!("{err:#}").contains("--workers"), "{err:#}");
+        }
+        // and requires the native engine
+        let cfg = RunConfig { workers: 2, engine: EngineKind::Pjrt, ..Default::default() };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
     fn tags() {
         assert_eq!(RunConfig::default().tag(), "fedavg(6)");
         let c = RunConfig { policy: Policy::fedlama(6, 4), ..Default::default() };
@@ -287,6 +365,26 @@ mod tests {
         let cfg = RunConfig { threads: 0, ..Default::default() };
         cfg.validate().unwrap();
         let cfg = RunConfig { threads: 64, ..Default::default() };
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn xla_agg_backend_rejects_compressed_uplink() {
+        // the compressed path bypasses the fused kernel entirely, so
+        // forcing backend=xla alongside it must fail loudly
+        let cfg = RunConfig {
+            engine: EngineKind::Pjrt,
+            backend: AggBackend::Xla,
+            compressor: "q8".into(),
+            ..Default::default()
+        };
+        let err = cfg.validate().unwrap_err();
+        assert!(format!("{err:#}").contains("fused aggregation"), "{err:#}");
+        let cfg = RunConfig {
+            engine: EngineKind::Pjrt,
+            backend: AggBackend::Xla,
+            ..Default::default()
+        };
         cfg.validate().unwrap();
     }
 

@@ -1,56 +1,56 @@
-//! The federated training coordinator: Algorithm 1 end-to-end.
+//! The federated training coordinator: a thin driver over the federation
+//! protocol (Algorithm 1 end-to-end).
 //!
-//! One `Coordinator` owns a compute backend (a native layer-graph model
-//! from `runtime::zoo` by default, PJRT behind `--features pjrt`), the
-//! simulated client fleet, the layer-wise
-//! aggregation schedule, and the communication ledger, and runs the
-//! paper's training loop:
+//! Since the protocol redesign, the coordinator no longer fuses protocol
+//! logic, client state, compute dispatch and I/O into one struct.  It
+//! composes:
 //!
-//!   for k = 1..K:
-//!     every active client takes one local SGD step        (L2 compute)
-//!     for every group with k mod tau_l == 0:
-//!       aggregate layer l across clients + measure d_l    (L1 kernel)
-//!     if k mod phi*tau' == 0:
-//!       adjust intervals (Algorithm 2), resample clients  (L3, this file)
+//!   - `protocol::CoordinatorCore` — the pure server state machine
+//!     (schedule, ledger, sampler, global params); emits
+//!     `RoundAssignment`s, consumes losses + `LayerUpdate`s, emits
+//!     `SyncDecision`s.
+//!   - a `protocol::Transport` — `InProcTransport` (one participant owning
+//!     every client, direct calls; the default) or `ProcessTransport`
+//!     (`cfg.workers > 0`: N `fedlama worker` subprocesses over stdio,
+//!     clients sharded round-robin).
+//!   - a `ComputeBackend` — used here only for evaluation and the
+//!     manifest; local training runs inside participants.
 //!
-//! The loop is blocked by base-interval gaps so local work can use the
-//! fused `train_chunk` path (K steps per call) — all sync points are
-//! multiples of tau' by construction.  Within a block the active clients
-//! are independent, and `runtime::cluster` fans them across `cfg.threads`
-//! workers when the backend is `Sync`; results are bit-identical to the
-//! serial order for every thread count.
+//! The training loop (per block of `gap = tau'` iterations):
+//!
+//!   assignment -> participants train their active shards (L2 compute,
+//!   fanned across `cfg.threads` workers) -> layer updates for due groups
+//!   -> core aggregates in active order, observes d_l, charges Eq. 9
+//!   (L1) -> decisions broadcast -> Algorithm 2 at round boundaries (L3).
+//!
+//! Every transport is bit-identical to every other (and to the historical
+//! monolithic coordinator) because all cross-client reductions happen in
+//! the core, ordered by the active list — see `tests/determinism.rs` and
+//! `tests/process_transport.rs`.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::aggregation::{AggBackend, AggScratch, Schedule};
+use crate::aggregation::{AggBackend, Schedule};
 use crate::clients::{ClientSampler, ClientState};
 use crate::comm::CommLedger;
-use crate::config::{Algorithm, EngineKind, PartitionKind, RunConfig};
-use crate::data::{
-    dirichlet_partition, femnist_partition, iid_partition, ClientData, Generator, Partition,
+use crate::config::{Algorithm, EngineKind, RunConfig};
+use crate::data::{Generator, Partition};
+use crate::metrics::RunMetrics;
+use crate::protocol::{
+    BlockOutcome, CoordinatorCore, InProcTransport, Participant, ProcessTransport, Transport,
 };
-use crate::metrics::{CurvePoint, RunMetrics};
-use crate::runtime::{cluster, zoo, ComputeBackend, GroupInfo, HostTensor, Manifest};
-use crate::util::rng::Rng;
+use crate::runtime::{zoo, ComputeBackend, HostTensor, Manifest};
 
 pub struct Coordinator {
     pub cfg: RunConfig,
-    backend: Box<dyn ComputeBackend>,
-    pub gen: Generator,
-    pub partition: Partition,
-    pub schedule: Schedule,
-    pub ledger: CommLedger,
-    pub sampler: ClientSampler,
-    pub clients: Vec<ClientState>,
-    pub global: Vec<HostTensor>,
-    /// SCAFFOLD server control variate.
-    server_control: Option<Vec<HostTensor>>,
-    /// Uplink update compressor ("dense" = no-op).
-    compressor: Box<dyn crate::comm::Compressor>,
-    compress_enabled: bool,
-    scratch: AggScratch,
+    backend: Arc<dyn ComputeBackend>,
+    core: CoordinatorCore,
+    /// The in-proc participant (owns every client) when `cfg.workers == 0`;
+    /// multi-process runs keep client state inside worker processes.
+    participant: Option<Participant>,
     val_x: Vec<f32>,
     val_y: Vec<i32>,
 }
@@ -71,6 +71,7 @@ impl Coordinator {
     /// Build a coordinator around an explicit compute backend.
     pub fn with_backend(cfg: RunConfig, backend: Box<dyn ComputeBackend>) -> Result<Coordinator> {
         cfg.validate()?;
+        let backend: Arc<dyn ComputeBackend> = Arc::from(backend);
         {
             let manifest = backend.manifest();
             anyhow::ensure!(
@@ -88,42 +89,26 @@ impl Coordinator {
                 cfg.dataset.num_classes()
             );
         }
-        let gen = Generator::new(cfg.dataset, cfg.seed);
-        let mut prng = Rng::new(cfg.seed).fork(0x9A27);
-        let partition = build_partition(&cfg, &mut prng);
-        let dims: Vec<usize> = backend.manifest().groups.iter().map(|g| g.dim).collect();
-        let names: Vec<(String, usize)> =
-            backend.manifest().groups.iter().map(|g| (g.name.clone(), g.dim)).collect();
-        let schedule = Schedule::new(cfg.policy.clone(), dims);
-        let ledger = CommLedger::new(&names);
-        let sampler = ClientSampler::new(cfg.n_clients, cfg.active_ratio, cfg.seed);
         let global = backend.init_params(cfg.seed as u32)?;
-        let clients = (0..cfg.n_clients)
-            .map(|i| ClientState::new(i, global.clone(), cfg.seed))
-            .collect();
+        let core = CoordinatorCore::new(&cfg, backend.manifest().groups.clone(), global.clone());
+        let participant = if cfg.workers == 0 {
+            // share the core's init/partition instead of re-deriving them
+            Some(Participant::with_state(
+                &cfg,
+                backend.clone(),
+                0,
+                (0..cfg.n_clients).collect(),
+                global,
+                core.partition.clone(),
+            )?)
+        } else {
+            None
+        };
+        let gen = Generator::new(cfg.dataset, cfg.seed);
         let eval_b = backend.manifest().eval_batch_size;
         let n_val = (cfg.eval_examples / eval_b).max(1) * eval_b;
         let (val_x, val_y) = gen.validation_set(n_val);
-        let compressor = crate::comm::parse_compressor(&cfg.compressor, cfg.seed)
-            .ok_or_else(|| anyhow::anyhow!("unknown compressor {:?}", cfg.compressor))?;
-        let compress_enabled = cfg.compressor != "dense";
-        Ok(Coordinator {
-            cfg,
-            backend,
-            gen,
-            partition,
-            schedule,
-            ledger,
-            sampler,
-            clients,
-            global,
-            server_control: None,
-            compressor,
-            compress_enabled,
-            scratch: AggScratch::default(),
-            val_x,
-            val_y,
-        })
+        Ok(Coordinator { cfg, backend, core, participant, val_x, val_y })
     }
 
     /// Build around a PJRT `ModelRuntime` (compat wrapper).
@@ -145,6 +130,37 @@ impl Coordinator {
         self.backend.as_ref()
     }
 
+    /// The protocol core's live schedule (intervals, adjustments).
+    pub fn schedule(&self) -> &Schedule {
+        &self.core.schedule
+    }
+
+    /// The Eq. 9 communication ledger.
+    pub fn ledger(&self) -> &CommLedger {
+        &self.core.ledger
+    }
+
+    /// The participation sampler.
+    pub fn sampler(&self) -> &ClientSampler {
+        &self.core.sampler
+    }
+
+    /// The client data partition.
+    pub fn partition(&self) -> &Partition {
+        &self.core.partition
+    }
+
+    /// The authoritative global model.
+    pub fn global(&self) -> &[HostTensor] {
+        &self.core.global
+    }
+
+    /// The client fleet — in-proc runs only (multi-process runs keep
+    /// client state inside the worker processes; this is then empty).
+    pub fn clients(&self) -> &[ClientState] {
+        self.participant.as_ref().map(|p| p.clients()).unwrap_or(&[])
+    }
+
     /// Worker threads the local-training fan-out will actually use: 1 when
     /// the backend is thread-confined (PJRT), otherwise the configured
     /// count with 0 resolving to auto.
@@ -161,397 +177,161 @@ impl Coordinator {
 
     /// Learning rate at a given round (linear warmup, as in the paper).
     pub fn lr_at(&self, round: usize) -> f32 {
-        if self.cfg.warmup_rounds == 0 || round >= self.cfg.warmup_rounds {
-            self.cfg.lr
-        } else {
-            self.cfg.lr * (round + 1) as f32 / self.cfg.warmup_rounds as f32
-        }
+        self.core.lr_at(round)
     }
 
     /// Run the full training loop; returns the metrics record.
     pub fn run(&mut self) -> Result<RunMetrics> {
         let t0 = Instant::now();
-        let round_len = self.cfg.policy.round_len();
-        let gap = self.cfg.policy.base_interval();
-        let total_rounds = self.cfg.iterations / round_len;
-        let mut metrics = RunMetrics { tag: self.cfg.tag(), ..Default::default() };
-
-        // round 0 setup
-        let mut active = self.sampler.sample();
-        let mut weights = self.partition.active_weights(&active);
-        self.begin_round(&active);
-
-        let mut round = 0usize;
-        let mut round_loss_sum = 0.0f64;
-        let mut round_loss_n = 0usize;
-
-        let blocks = self.cfg.iterations / gap;
-        for blk in 1..=blocks {
-            let k = blk * gap;
-            let lr = self.lr_at(round);
-
-            // --- local training: active clients advance `gap` steps, fanned
-            // across the cluster's worker threads (order-preserving).
-            let losses = self.run_local_block(&active, gap, lr)?;
-            for loss in losses {
-                if loss.is_finite() {
-                    round_loss_sum += loss;
-                    round_loss_n += 1;
+        let remote_secs;
+        let drive_result = if self.cfg.workers == 0 {
+            let mut p = self.participant.take().context("coordinator already consumed")?;
+            let mut transport = InProcTransport::new(&mut p);
+            let r = drive(&self.cfg, &mut self.core, &mut transport, &|global| {
+                evaluate_global(self.backend.as_ref(), global, &self.val_x, &self.val_y)
+            });
+            remote_secs = transport.remote_compute_secs();
+            drop(transport);
+            self.participant = Some(p);
+            r
+        } else {
+            let exe = crate::protocol::worker_exe()?;
+            let mut transport = ProcessTransport::spawn(&exe, &self.cfg, self.cfg.workers)?;
+            let r = drive(&self.cfg, &mut self.core, &mut transport, &|global| {
+                evaluate_global(self.backend.as_ref(), global, &self.val_x, &self.val_y)
+            });
+            remote_secs = transport.remote_compute_secs();
+            match r {
+                // graceful: Shutdown frames + wait for clean exits
+                Ok(()) => transport.shutdown(),
+                // error path: a worker may be wedged mid-frame — let Drop
+                // kill the children instead of waiting on them
+                err => {
+                    drop(transport);
+                    err
                 }
             }
+        };
+        drive_result?;
 
-            // --- layer-wise aggregation at due groups
-            if self.cfg.algorithm == Algorithm::Nova {
-                // FedNova replaces plain averaging at the (full-sync) boundary.
-                if self.schedule.is_round_boundary(k) {
-                    self.nova_aggregate(&active, &weights)?;
-                }
-            } else {
-                if self.cfg.algorithm == Algorithm::Scaffold && self.schedule.is_round_boundary(k) {
-                    // control update must read pre-aggregation client params
-                    self.scaffold_update_controls(&active, round_len, lr)?;
-                }
-                let due = self.schedule.due_groups(k);
-                if !due.is_empty() {
-                    self.ledger.record_round();
-                    for g in due {
-                        let (disc, uplink) = self.sync_group(g, &active, &weights)?;
-                        self.schedule.observe(g, disc);
-                        self.ledger.record_sync_bytes(g, active.len(), uplink);
-                    }
-                }
-            }
-
-            // --- Algorithm 2 at round boundaries
-            self.schedule.maybe_adjust(k);
-
-            if k % round_len == 0 {
-                round += 1;
-                let train_loss =
-                    if round_loss_n > 0 { round_loss_sum / round_loss_n as f64 } else { 0.0 };
-                round_loss_sum = 0.0;
-                round_loss_n = 0;
-
-                let do_eval = (self.cfg.eval_every_rounds > 0
-                    && round % self.cfg.eval_every_rounds == 0)
-                    || round == total_rounds;
-                let (val_acc, val_loss) = if do_eval {
-                    let (a, l) = self.evaluate()?;
-                    (Some(a), Some(l))
-                } else {
-                    (None, None)
-                };
-                metrics.curve.push(CurvePoint {
-                    iteration: k,
-                    round,
-                    train_loss,
-                    val_acc,
-                    val_loss,
-                    comm_cost: self.ledger.total_cost(),
-                });
-                if self.cfg.verbose {
-                    let acc =
-                        val_acc.map(|a| format!(" acc={:.2}%", 100.0 * a)).unwrap_or_default();
-                    eprintln!(
-                        "[{}] round {round}/{total_rounds} k={k} loss={train_loss:.4}{acc} comm={}",
-                        metrics.tag,
-                        self.ledger.total_cost()
-                    );
-                }
-
-                if round < total_rounds {
-                    // partial participation: resample every phi*tau' iters
-                    active = self.sampler.sample();
-                    weights = self.partition.active_weights(&active);
-                    self.begin_round(&active);
-                }
-            }
-        }
-
+        let mut metrics = self.core.metrics();
         let (acc, loss) = self.evaluate()?;
         metrics.final_acc = acc;
         metrics.final_loss = loss;
-        metrics.record_ledger(&self.ledger);
         metrics.wall_secs = t0.elapsed().as_secs_f64();
-        metrics.runtime_secs = self.backend.stats_total_secs();
+        metrics.runtime_secs = self.backend.stats_total_secs() + remote_secs;
         Ok(metrics)
     }
 
-    /// Round-start bookkeeping: newly active clients download the global
-    /// model; algorithm-specific state snapshots.
-    fn begin_round(&mut self, active: &[usize]) {
-        let hetero = self.cfg.hetero_local_steps;
-        let round_len = self.cfg.policy.round_len();
-        let mean_n = self.partition.total as f64 / self.cfg.n_clients as f64;
-        for &ci in active {
-            let need_ref = matches!(self.cfg.algorithm, Algorithm::Prox { .. } | Algorithm::Nova);
-            let frac = self.partition.clients[ci].total as f64 / mean_n;
-            let c = &mut self.clients[ci];
-            c.pull(&self.global);
-            c.steps_in_round = 0;
-            c.local_budget = if hetero {
-                ((round_len as f64 * frac).round() as usize).clamp(1, round_len)
-            } else {
-                usize::MAX
-            };
-            if need_ref {
-                c.snapshot_round_start();
-            }
-            if self.cfg.algorithm == Algorithm::Scaffold && c.control.is_none() {
-                c.control =
-                    Some(self.global.iter().map(|t| HostTensor::zeros(&t.shape)).collect());
-            }
-        }
-        if self.cfg.algorithm == Algorithm::Scaffold && self.server_control.is_none() {
-            self.server_control =
-                Some(self.global.iter().map(|t| HostTensor::zeros(&t.shape)).collect());
-        }
+    /// Evaluate the global model on the held-out validation set.  Takes
+    /// `&self`: evaluation is read-only over the core's global params and
+    /// the backend's per-call scratch, so it never demands exclusive
+    /// access to the coordinator.
+    pub fn evaluate(&self) -> Result<(f64, f64)> {
+        evaluate_global(self.backend.as_ref(), &self.core.global, &self.val_x, &self.val_y)
     }
+}
 
-    /// Advance every active client `gap` local steps via the cluster
-    /// runtime.  Clients are temporarily moved out of the fleet so the
-    /// workers get disjoint `&mut` access; they are restored afterwards.
-    /// Returns per-client mean losses in `active` order (NaN = budget
-    /// exhausted).
-    fn run_local_block(&mut self, active: &[usize], gap: usize, lr: f32) -> Result<Vec<f64>> {
-        let mut moved: Vec<ClientState> = active
-            .iter()
-            .map(|&ci| std::mem::replace(&mut self.clients[ci], ClientState::placeholder()))
-            .collect();
-        let parts: Vec<&ClientData> =
-            active.iter().map(|&ci| &self.partition.clients[ci]).collect();
-        let ctx = cluster::StepCtx {
-            gen: &self.gen,
-            parts: &parts,
-            algorithm: self.cfg.algorithm,
-            server_control: self.server_control.as_deref(),
-            gap,
-            lr,
-            use_chunk: self.cfg.use_chunk,
-        };
-        let threads = self.effective_threads();
-        let result = match self.backend.as_parallel() {
-            Some(par) if threads > 1 => cluster::advance_parallel(par, &ctx, &mut moved, threads),
-            _ => cluster::advance_serial(self.backend.as_ref(), &ctx, &mut moved),
-        };
-        for (&ci, c) in active.iter().zip(moved) {
-            self.clients[ci] = c;
-        }
-        result
+/// Read-only evaluation of `global` on a validation set.
+fn evaluate_global(
+    backend: &dyn ComputeBackend,
+    global: &[HostTensor],
+    val_x: &[f32],
+    val_y: &[i32],
+) -> Result<(f64, f64)> {
+    let b = backend.manifest().eval_batch_size;
+    let d: usize = backend.manifest().input_shape.iter().product();
+    let n = val_y.len();
+    let mut correct = 0.0f64;
+    let mut loss = 0.0f64;
+    for s in (0..n).step_by(b) {
+        let xs = &val_x[s * d..(s + b) * d];
+        let ys = &val_y[s..s + b];
+        let (c, l) = backend.eval_step(global, xs, ys)?;
+        correct += c as f64;
+        loss += l as f64;
     }
+    Ok((correct / n as f64, loss / n as f64))
+}
 
-    /// Aggregate one group across the active clients (fused L1 kernel when
-    /// the backend provides one, native fallback otherwise), write the
-    /// result into the global model and broadcast to the active clients.
-    /// Returns the group discrepancy sum_i w_i ||u - x_i||^2 and the
-    /// per-client uplink byte count (compressed wire size when a compressor
-    /// is configured).
-    fn sync_group(&mut self, g: usize, active: &[usize], weights: &[f32]) -> Result<(f64, usize)> {
-        let group = self.backend.manifest().groups[g].clone();
-        let m = active.len();
-        // Backend choice: on the CPU PJRT each kernel call pays a fixed
-        // ~60-100us literal/dispatch overhead while the native path runs at
-        // memory bandwidth (micro-agg bench), so Auto resolves to native
-        // here.  `Xla` forces the fused Pallas artifact — the path a TPU
-        // deployment would take.
-        let use_fused = match self.cfg.backend {
-            AggBackend::Native | AggBackend::Auto => false,
-            AggBackend::Xla => self.backend.has_fused_agg(group.dim, m),
-        };
-        if self.cfg.backend == AggBackend::Xla && !use_fused {
-            anyhow::bail!(
-                "backend=xla but no fused agg kernel for dim={} m={m}; re-run `make artifacts` \
-                 with --agg-m including {m}",
-                group.dim
-            );
-        }
-        if self.compress_enabled {
-            // compression path: clients upload lossy-compressed tensors
-            return self.sync_group_compressed(&group, active, weights);
-        }
-        let disc = if use_fused {
-            self.sync_group_fused(&group, active, weights)?
+/// The protocol driver: pump assignments through the transport, feed
+/// results to the core, dispatch its decisions, and let `eval` answer the
+/// core's evaluation requests.  Purely mechanical — every decision lives
+/// in `CoordinatorCore`, every FLOP of model compute in the participants
+/// (or, for the two server-side-state baselines, the in-proc participant).
+fn drive(
+    cfg: &RunConfig,
+    core: &mut CoordinatorCore,
+    transport: &mut dyn Transport,
+    eval: &dyn Fn(&[HostTensor]) -> Result<(f64, f64)>,
+) -> Result<()> {
+    let round_len = cfg.policy.round_len();
+    let tag = cfg.tag();
+    while let Some(assignment) = core.begin_block() {
+        let result = transport.run_block(&assignment)?;
+        core.record_losses(&result.losses);
+
+        let boundary = core.schedule.is_round_boundary(assignment.k);
+        if cfg.algorithm == Algorithm::Nova && boundary {
+            // FedNova replaces plain averaging at the (full-sync) boundary;
+            // it reduces over raw client deltas, so it needs the in-proc
+            // participant (validation keeps it off multi-process runs).
+            let p = transport.in_proc().context("fednova requires the in-proc transport")?;
+            let new_global = p.nova_aggregate(&assignment.active)?;
+            core.adopt_full_model(new_global);
         } else {
-            self.sync_group_native(&group, active, weights)?
-        };
-        Ok((disc, group.dim * 4))
-    }
+            if cfg.algorithm == Algorithm::Scaffold && boundary {
+                // control update must read pre-aggregation client params
+                let p =
+                    transport.in_proc().context("scaffold requires the in-proc transport")?;
+                p.scaffold_update_controls(&assignment.active, round_len, assignment.lr)?;
+            }
+            // Backend choice for the weighted average: on CPU the native
+            // path runs at memory bandwidth, so Auto resolves to native;
+            // `--backend xla` forces the fused Pallas kernel (the TPU
+            // deployment path) through the injected hook.
+            let decisions = if cfg.backend == AggBackend::Xla && cfg.compressor == "dense" {
+                let backend = transport
+                    .in_proc()
+                    .context("backend=xla requires the in-proc transport")?
+                    .backend();
+                let mut fused = |stack: &[f32], w: &[f32], dim: usize| {
+                    backend.fused_agg(stack, w, dim)?.with_context(|| {
+                        format!(
+                            "backend=xla but no fused agg kernel for dim={dim} m={}; re-run \
+                             `make artifacts` with --agg-m including {}",
+                            w.len(),
+                            w.len()
+                        )
+                    })
+                };
+                core.apply_updates(&assignment, &result.updates, Some(&mut fused))?
+            } else {
+                core.apply_updates(&assignment, &result.updates, None)?
+            };
+            for d in &decisions {
+                transport.broadcast_decision(d, &assignment.active)?;
+            }
+        }
 
-    /// Compression-composed sync (paper §2/§7 future work): each active
-    /// client's group tensor is lossy-compressed before aggregation; the
-    /// server averages the decoded uploads.  Returns (discrepancy,
-    /// per-client uplink bytes).
-    fn sync_group_compressed(
-        &mut self,
-        group: &GroupInfo,
-        active: &[usize],
-        weights: &[f32],
-    ) -> Result<(f64, usize)> {
-        let mut disc = 0.0f64;
-        let mut uplink = 0usize;
-        let m = active.len();
-        for &t in &group.params {
-            let n = self.global[t].data.len();
-            // decode buffer: m rows of the lossy uploads
-            let mut decoded = vec![0.0f32; m * n];
-            for (row, &ci) in active.iter().enumerate() {
-                let dst = &mut decoded[row * n..(row + 1) * n];
-                dst.copy_from_slice(&self.clients[ci].params[t].data);
-                uplink += self.compressor.compress(dst);
-            }
-            let rows: Vec<&[f32]> = (0..m).map(|r| &decoded[r * n..(r + 1) * n]).collect();
-            disc += crate::aggregation::aggregate_native(&rows, weights, &mut self.global[t].data);
-            for &ci in active {
-                self.clients[ci].params[t].data.copy_from_slice(&self.global[t].data);
+        if let BlockOutcome::RoundComplete { round, total_rounds, train_loss, eval_due } =
+            core.end_block(assignment.k)
+        {
+            let evaled = if eval_due { Some(eval(&core.global)?) } else { None };
+            core.complete_round(assignment.k, train_loss, evaled);
+            if cfg.verbose {
+                let acc = evaled
+                    .map(|(a, _)| format!(" acc={:.2}%", 100.0 * a))
+                    .unwrap_or_default();
+                eprintln!(
+                    "[{tag}] round {round}/{total_rounds} k={} loss={train_loss:.4}{acc} comm={}",
+                    assignment.k,
+                    core.ledger.total_cost()
+                );
             }
         }
-        Ok((disc, uplink / m.max(1)))
     }
-
-    fn sync_group_native(
-        &mut self,
-        group: &GroupInfo,
-        active: &[usize],
-        weights: &[f32],
-    ) -> Result<f64> {
-        let mut disc = 0.0f64;
-        for &t in &group.params {
-            {
-                let rows: Vec<&[f32]> =
-                    active.iter().map(|&ci| self.clients[ci].params[t].data.as_slice()).collect();
-                disc +=
-                    crate::aggregation::aggregate_native(&rows, weights, &mut self.global[t].data);
-            }
-            for &ci in active {
-                self.clients[ci].params[t].data.copy_from_slice(&self.global[t].data);
-            }
-        }
-        Ok(disc)
-    }
-
-    fn sync_group_fused(
-        &mut self,
-        group: &GroupInfo,
-        active: &[usize],
-        weights: &[f32],
-    ) -> Result<f64> {
-        let dim = group.dim;
-        self.scratch.stack.resize(active.len() * dim, 0.0);
-        for (row, &ci) in active.iter().enumerate() {
-            let mut off = row * dim;
-            for &t in &group.params {
-                let src = &self.clients[ci].params[t].data;
-                self.scratch.stack[off..off + src.len()].copy_from_slice(src);
-                off += src.len();
-            }
-        }
-        let (u, disc) = self
-            .backend
-            .fused_agg(&self.scratch.stack, weights, dim)?
-            .context("fused agg kernel vanished")?;
-        // scatter u back into the global tensors + broadcast
-        let mut off = 0;
-        for &t in &group.params {
-            let dst_len = self.global[t].data.len();
-            self.global[t].data.copy_from_slice(&u[off..off + dst_len]);
-            off += dst_len;
-            for &ci in active {
-                self.clients[ci].params[t].data.copy_from_slice(&self.global[t].data);
-            }
-        }
-        Ok(disc as f64)
-    }
-
-    /// FedNova: normalized averaging of client deltas with heterogeneous
-    /// local step counts a_i (Wang et al. 2020).
-    fn nova_aggregate(&mut self, active: &[usize], weights: &[f32]) -> Result<f64> {
-        let tau_eff: f64 = active
-            .iter()
-            .zip(weights)
-            .map(|(&ci, &w)| w as f64 * self.clients[ci].steps_in_round as f64)
-            .sum();
-        // global <- global + tau_eff * sum_i w_i (x_i - x_start)/a_i
-        for t in 0..self.global.len() {
-            let len = self.global[t].data.len();
-            let mut delta = vec![0.0f64; len];
-            for (&ci, &w) in active.iter().zip(weights) {
-                let a_i = self.clients[ci].steps_in_round.max(1) as f64;
-                let start = self.clients[ci]
-                    .round_start
-                    .as_ref()
-                    .context("FedNova requires round_start")?;
-                let x = &self.clients[ci].params[t].data;
-                let s = &start[t].data;
-                for j in 0..len {
-                    delta[j] += w as f64 * (x[j] - s[j]) as f64 / a_i;
-                }
-            }
-            let gdata = &mut self.global[t].data;
-            for j in 0..len {
-                gdata[j] += (tau_eff * delta[j]) as f32;
-            }
-        }
-        for &ci in active {
-            let global = std::mem::take(&mut self.global);
-            self.clients[ci].pull(&global);
-            self.global = global;
-        }
-        // full-model sync: account every group
-        self.ledger.record_round();
-        let n_groups = self.backend.manifest().groups.len();
-        for g in 0..n_groups {
-            self.ledger.record_sync(g, active.len());
-        }
-        Ok(0.0)
-    }
-
-    /// SCAFFOLD option-II control update (before aggregation):
-    /// c_i+ = c_i - c + (x_start - x_i) / (a_i * lr);  c += sum dc_i / N.
-    fn scaffold_update_controls(
-        &mut self,
-        active: &[usize],
-        round_len: usize,
-        lr: f32,
-    ) -> Result<()> {
-        let n = self.cfg.n_clients as f32;
-        let server = self.server_control.as_mut().context("server control")?;
-        for &ci in active {
-            let a_i = self.clients[ci].steps_in_round.max(1).min(round_len) as f32;
-            let scale = 1.0 / (a_i * lr);
-            let client = &mut self.clients[ci];
-            let control = client.control.as_mut().context("client control")?;
-            for t in 0..control.len() {
-                let x = &client.params[t].data;
-                let g = &self.global[t].data; // x_start == global at round start
-                let c_t = &mut control[t].data;
-                let s_t = &mut server[t].data;
-                for j in 0..c_t.len() {
-                    let c_new = c_t[j] - s_t[j] + scale * (g[j] - x[j]);
-                    let dc = c_new - c_t[j];
-                    c_t[j] = c_new;
-                    s_t[j] += dc / n;
-                }
-            }
-        }
-        Ok(())
-    }
-
-    /// Evaluate the global model on the held-out validation set.
-    pub fn evaluate(&mut self) -> Result<(f64, f64)> {
-        let b = self.backend.manifest().eval_batch_size;
-        let d = self.gen.input_dim;
-        let n = self.val_y.len();
-        let mut correct = 0.0f64;
-        let mut loss = 0.0f64;
-        for s in (0..n).step_by(b) {
-            let xs = &self.val_x[s * d..(s + b) * d];
-            let ys = &self.val_y[s..s + b];
-            let (c, l) = self.backend.eval_step(&self.global, xs, ys)?;
-            correct += c as f64;
-            loss += l as f64;
-        }
-        Ok((correct / n as f64, loss / n as f64))
-    }
+    Ok(())
 }
 
 #[cfg(feature = "pjrt")]
@@ -569,33 +349,16 @@ fn load_pjrt_backend(_cfg: &RunConfig) -> Result<Box<dyn ComputeBackend>> {
     )
 }
 
-fn build_partition(cfg: &RunConfig, rng: &mut Rng) -> Partition {
-    let classes = cfg.dataset.num_classes();
-    match cfg.partition {
-        PartitionKind::Iid => iid_partition(cfg.n_clients, classes, cfg.samples),
-        PartitionKind::Dirichlet { alpha } => {
-            dirichlet_partition(cfg.n_clients, classes, cfg.samples, alpha, rng)
-        }
-        PartitionKind::Writers => femnist_partition(
-            cfg.n_clients,
-            classes,
-            cfg.dataset.num_writers().max(cfg.n_clients),
-            cfg.samples,
-            rng,
-        ),
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::DatasetKind;
+    use crate::data::{partition_for, DatasetKind};
+    use crate::config::PartitionKind;
 
     #[test]
     fn partition_builder_kinds() {
-        let mut rng = Rng::new(1);
         let cfg = RunConfig { n_clients: 4, samples: 100, ..Default::default() };
-        let p = build_partition(&cfg, &mut rng);
+        let p = partition_for(&cfg);
         assert_eq!(p.clients.len(), 4);
         assert_eq!(p.total, 400);
         let cfg = RunConfig {
@@ -604,7 +367,7 @@ mod tests {
             samples: 50,
             ..Default::default()
         };
-        let p = build_partition(&cfg, &mut rng);
+        let p = partition_for(&cfg);
         assert_eq!(p.clients.len(), 4);
         let cfg = RunConfig {
             partition: PartitionKind::Writers,
@@ -613,7 +376,7 @@ mod tests {
             samples: 64,
             ..Default::default()
         };
-        let p = build_partition(&cfg, &mut rng);
+        let p = partition_for(&cfg);
         assert!(p.clients.iter().all(|c| !c.writers.is_empty()));
     }
 
@@ -622,8 +385,8 @@ mod tests {
         let cfg = RunConfig { n_clients: 2, ..Default::default() };
         let coord = Coordinator::new(cfg).unwrap();
         assert_eq!(coord.manifest().model, "native-mlp");
-        assert_eq!(coord.clients.len(), 2);
-        assert_eq!(coord.global.len(), coord.manifest().num_tensors());
+        assert_eq!(coord.clients().len(), 2);
+        assert_eq!(coord.global().len(), coord.manifest().num_tensors());
     }
 
     #[test]
@@ -639,6 +402,16 @@ mod tests {
         // unknown names error instead of degrading to the MLP
         let cfg = RunConfig { model: "alexnet".into(), ..Default::default() };
         assert!(Coordinator::new(cfg).is_err());
+    }
+
+    #[test]
+    fn evaluate_needs_only_a_shared_reference() {
+        let cfg = RunConfig { n_clients: 2, eval_examples: 128, ..Default::default() };
+        let coord = Coordinator::new(cfg).unwrap();
+        // no &mut in sight: two concurrent-style calls on &self agree
+        let a = coord.evaluate().unwrap();
+        let b = coord.evaluate().unwrap();
+        assert_eq!(a, b, "read-only evaluation must be reproducible");
     }
 
     #[cfg(not(feature = "pjrt"))]

@@ -8,3 +8,29 @@ pub mod synthetic;
 pub use batches::BatchSource;
 pub use partition::{dirichlet_partition, femnist_partition, iid_partition, ClientData, Partition};
 pub use synthetic::{DatasetKind, Generator};
+
+use crate::config::{PartitionKind, RunConfig};
+use crate::util::rng::Rng;
+
+/// Build the run's client data partition from its config, on a fixed RNG
+/// stream derived from `cfg.seed`.  Every federation role (coordinator
+/// core, in-proc participant, worker processes) calls this with the same
+/// config and therefore reconstructs the *identical* partition — the
+/// distribution is never shipped over the wire.
+pub fn partition_for(cfg: &RunConfig) -> Partition {
+    let mut rng = Rng::new(cfg.seed).fork(0x9A27);
+    let classes = cfg.dataset.num_classes();
+    match cfg.partition {
+        PartitionKind::Iid => iid_partition(cfg.n_clients, classes, cfg.samples),
+        PartitionKind::Dirichlet { alpha } => {
+            dirichlet_partition(cfg.n_clients, classes, cfg.samples, alpha, &mut rng)
+        }
+        PartitionKind::Writers => femnist_partition(
+            cfg.n_clients,
+            classes,
+            cfg.dataset.num_writers().max(cfg.n_clients),
+            cfg.samples,
+            &mut rng,
+        ),
+    }
+}

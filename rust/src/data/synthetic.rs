@@ -34,6 +34,16 @@ impl DatasetKind {
             _ => None,
         }
     }
+    /// Canonical name; `parse(name())` is the identity (used by the
+    /// federation protocol's config wire schema).
+    pub fn name(&self) -> &'static str {
+        match self {
+            DatasetKind::Cifar10 => "cifar10",
+            DatasetKind::Cifar100 => "cifar100",
+            DatasetKind::Femnist => "femnist",
+            DatasetKind::Toy => "toy",
+        }
+    }
     pub fn input_shape(&self) -> Vec<usize> {
         match self {
             DatasetKind::Cifar10 | DatasetKind::Cifar100 => vec![32, 32, 3],

@@ -3,8 +3,14 @@
 //! backend (default) and an optional JAX/Pallas AOT compute stack behind
 //! `--features pjrt`.
 //!
-//! See rust/DESIGN.md for the architecture (backend trait, cluster
-//! threading model, artifact-vs-native execution paths).
+//! The federation loop is a message protocol (`protocol`): a pure
+//! `CoordinatorCore` exchanges typed, wire-encodable messages with
+//! `Participant`s over a `Transport` — in-proc by default, `--workers N`
+//! subprocesses for multi-process runs, bit-identical either way.
+//!
+//! See rust/DESIGN.md for the architecture (protocol roles and wire
+//! format, backend trait, cluster threading model, artifact-vs-native
+//! execution paths).
 
 pub mod aggregation;
 pub mod clients;
@@ -13,10 +19,12 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod metrics;
+pub mod protocol;
 pub mod runtime;
 pub mod util;
 
 pub use config::{Algorithm, EngineKind, PartitionKind, RunConfig};
 pub use coordinator::Coordinator;
+pub use protocol::{CoordinatorCore, Participant, Transport};
 pub use runtime::{ComputeBackend, NativeBackend};
 pub mod reports;

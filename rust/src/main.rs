@@ -6,6 +6,8 @@
 //!   figure   regenerate a paper figure (1..6)
 //!   inspect  print a model's artifact manifest summary
 //!   list     list available experiment presets
+//!   worker   federation-protocol participant over stdin/stdout (spawned
+//!            by `train --workers N`; not for interactive use)
 //!
 //! Examples:
 //!   fedlama train --model resnet20 --dataset cifar10 --policy fedlama \
@@ -35,6 +37,7 @@ fn main() {
         "figure" => run_figure(&args),
         "inspect" => run_inspect(&args),
         "list" => run_list(),
+        "worker" => run_worker(),
         _ => {
             print_help();
             Ok(())
@@ -49,21 +52,23 @@ fn main() {
 fn print_help() {
     println!(
         "fedlama — FedLAMA (AAAI'23) reproduction\n\n\
-         USAGE: fedlama <train|repro|figure|inspect|list> [--flags]\n\n\
+         USAGE: fedlama <train|repro|figure|inspect|list|worker> [--flags]\n\n\
          train   --model mlp|femnist_cnn|cifar_cnn100|resnet20 --dataset D\n\
                  [--policy fedavg|fedlama|fedlama-acc]\n\
                  [--tau 6] [--phi 2] [--clients 16] [--active-ratio 1.0]\n\
                  [--partition iid|dirichlet|writers] [--alpha 0.1] [--samples 512]\n\
                  [--lr 0.1] [--warmup 4] [--iters 960] [--eval-every 4]\n\
                  [--algo sgd|fedprox|scaffold|fednova] [--mu 0.01] [--hetero]\n\
-                 [--engine native|pjrt] [--threads 1 (0=auto)]\n\
+                 [--engine native|pjrt] [--threads 1 (0=auto)] [--workers 0]\n\
                  [--backend auto|native|xla] [--no-chunk] [--seed 1]\n\
                  [--out run.json] [--curve curve.csv] [--verbose]\n\
          repro   --table table1..table11|baselines|all [--scale smoke|default|full]\n\
                  [--repeats 1] [--out-dir reports] [--verbose]\n\
          figure  --id 1..6 [--scale ...] [--out-dir reports]\n\
          inspect --model M [--dataset D]   (native zoo manifest when no artifacts)\n\
-         list"
+         list\n\
+         worker  (internal: federation-protocol participant on stdin/stdout,\n\
+                  spawned by train --workers N)"
     );
 }
 
@@ -97,6 +102,7 @@ fn cfg_from_args(args: &Args) -> Result<RunConfig> {
     Ok(RunConfig {
         engine,
         threads: args.usize_or("threads", 1),
+        workers: args.usize_or("workers", 0),
         model_dir: artifacts_root().join(&model),
         model,
         dataset,
@@ -120,15 +126,24 @@ fn cfg_from_args(args: &Args) -> Result<RunConfig> {
     })
 }
 
+/// Serve the federation protocol on stdin/stdout.  stdout carries frames
+/// exclusively — all diagnostics go to stderr.
+fn run_worker() -> Result<()> {
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    fedlama::protocol::worker::run(stdin.lock(), stdout.lock())
+}
+
 fn run_train(args: &Args) -> Result<()> {
     let cfg = cfg_from_args(args)?;
     let tag = cfg.tag();
     let engine = cfg.engine.name();
     eprintln!(
-        "running {tag} on {:?} ({} clients, engine={engine}, threads={})",
+        "running {tag} on {:?} ({} clients, engine={engine}, threads={}, workers={})",
         cfg.dataset,
         cfg.n_clients,
-        if cfg.threads == 0 { "auto".to_string() } else { cfg.threads.to_string() }
+        if cfg.threads == 0 { "auto".to_string() } else { cfg.threads.to_string() },
+        if cfg.workers == 0 { "in-proc".to_string() } else { cfg.workers.to_string() }
     );
     let mut coord = Coordinator::new(cfg)?;
     let threads = coord.effective_threads();

@@ -1,0 +1,538 @@
+//! The pure coordinator state machine.
+//!
+//! `CoordinatorCore` owns everything Algorithm 1 needs on the *server*
+//! side — the layer-wise `Schedule`, the Eq. 9 `CommLedger`, the
+//! participation `ClientSampler`, the global model, and the round/loss
+//! bookkeeping — and nothing else.  It consumes protocol events
+//! (block losses, layer updates) and emits protocol commands
+//! (`RoundAssignment`s, `SyncDecision`s).  It performs **no model
+//! compute and no I/O**: local training happens in participants, and
+//! evaluation is injected by the driver (`Coordinator::run`), so the same
+//! core drives the in-proc transport, the multi-process transport, and —
+//! because every input/output is a serializable message — any future
+//! network transport, with bit-identical results.
+//!
+//! The only numeric kernel the core runs is the server's own weighted
+//! aggregation (`aggregation::aggregate_native`), which *is* the
+//! protocol's decision function: it produces u_l and the discrepancy d_l
+//! that Algorithm 2 feeds on.  Call order matches the historical
+//! single-process coordinator exactly (tensors within a group, groups
+//! within a block, clients in active order), which is what keeps the
+//! refactor bit-identical to the seed implementation.
+
+use anyhow::{Context, Result};
+
+use crate::aggregation::Schedule;
+use crate::clients::ClientSampler;
+use crate::comm::CommLedger;
+use crate::config::{Algorithm, RunConfig};
+use crate::data::{partition_for, Partition};
+use crate::metrics::{CurvePoint, RunMetrics};
+use crate::runtime::{GroupInfo, HostTensor};
+
+use super::messages::{LayerUpdate, RoundAssignment, SyncDecision};
+
+/// Optional fused-aggregation hook: (stacked rows [m, dim], weights, dim)
+/// -> (u, discrepancy).  The driver wires this to the backend's Pallas
+/// kernel when `--backend xla` forces it; the core itself stays
+/// compute-agnostic.
+pub type FusedAgg<'a> = dyn FnMut(&[f32], &[f32], usize) -> Result<(Vec<f32>, f32)> + 'a;
+
+/// What `end_block` tells the driver about the block that just finished.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BlockOutcome {
+    /// More blocks remain in the current round.
+    MidRound,
+    /// The block closed a round; the driver may need to evaluate before
+    /// `complete_round` records the curve point.
+    RoundComplete { round: usize, total_rounds: usize, train_loss: f64, eval_due: bool },
+}
+
+pub struct CoordinatorCore {
+    cfg: RunConfig,
+    pub schedule: Schedule,
+    pub ledger: CommLedger,
+    pub sampler: ClientSampler,
+    pub partition: Partition,
+    /// The authoritative global model.
+    pub global: Vec<HostTensor>,
+    /// Learning-curve points recorded at round boundaries.
+    pub curve: Vec<CurvePoint>,
+    groups: Vec<GroupInfo>,
+    active: Vec<usize>,
+    weights: Vec<f32>,
+    block: usize,
+    blocks: usize,
+    gap: usize,
+    round_len: usize,
+    round: usize,
+    total_rounds: usize,
+    round_loss_sum: f64,
+    round_loss_n: usize,
+    pending_new_round: bool,
+    stack_scratch: Vec<f32>,
+}
+
+impl CoordinatorCore {
+    /// `groups` is the manifest's aggregation layout; `global` the
+    /// initialized model.  `cfg` must already be validated.
+    pub fn new(cfg: &RunConfig, groups: Vec<GroupInfo>, global: Vec<HostTensor>) -> Self {
+        let gap = cfg.policy.base_interval();
+        let round_len = cfg.policy.round_len();
+        let dims: Vec<usize> = groups.iter().map(|g| g.dim).collect();
+        let names: Vec<(String, usize)> =
+            groups.iter().map(|g| (g.name.clone(), g.dim)).collect();
+        CoordinatorCore {
+            schedule: Schedule::new(cfg.policy.clone(), dims),
+            ledger: CommLedger::new(&names),
+            sampler: ClientSampler::new(cfg.n_clients, cfg.active_ratio, cfg.seed),
+            partition: partition_for(cfg),
+            global,
+            curve: Vec::new(),
+            groups,
+            active: Vec::new(),
+            weights: Vec::new(),
+            block: 0,
+            blocks: cfg.iterations / gap,
+            gap,
+            round_len,
+            round: 0,
+            total_rounds: cfg.iterations / round_len,
+            round_loss_sum: 0.0,
+            round_loss_n: 0,
+            pending_new_round: true,
+            stack_scratch: Vec::new(),
+            cfg: cfg.clone(),
+        }
+    }
+
+    /// Active clients of the current round (sorted ids).
+    pub fn active(&self) -> &[usize] {
+        &self.active
+    }
+
+    /// Aggregation weights parallel to `active()`.
+    pub fn weights(&self) -> &[f32] {
+        &self.weights
+    }
+
+    pub fn total_rounds(&self) -> usize {
+        self.total_rounds
+    }
+
+    /// Learning rate at a given round (linear warmup, as in the paper).
+    pub fn lr_at(&self, round: usize) -> f32 {
+        if self.cfg.warmup_rounds == 0 || round >= self.cfg.warmup_rounds {
+            self.cfg.lr
+        } else {
+            self.cfg.lr * (round + 1) as f32 / self.cfg.warmup_rounds as f32
+        }
+    }
+
+    /// Start the next training block: samples a fresh active set at round
+    /// boundaries and emits the assignment.  `None` once all blocks ran.
+    pub fn begin_block(&mut self) -> Option<RoundAssignment> {
+        if self.block >= self.blocks {
+            return None;
+        }
+        if self.pending_new_round {
+            self.active = self.sampler.sample();
+            self.weights = self.partition.active_weights(&self.active);
+        }
+        let new_round = std::mem::take(&mut self.pending_new_round);
+        self.block += 1;
+        let k = self.block * self.gap;
+        let due_groups = match self.cfg.algorithm {
+            // FedNova replaces group-wise averaging with a full-model
+            // normalized delta at round boundaries; no layer uplinks.
+            Algorithm::Nova => Vec::new(),
+            _ => self.schedule.due_groups(k),
+        };
+        Some(RoundAssignment {
+            k,
+            round: self.round,
+            gap: self.gap,
+            lr: self.lr_at(self.round),
+            new_round,
+            active: self.active.clone(),
+            due_groups,
+        })
+    }
+
+    /// Absorb the block's per-client mean losses (active order; NaN =
+    /// budget-exhausted client, skipped like the historical loop).
+    pub fn record_losses(&mut self, losses: &[f64]) {
+        for &loss in losses {
+            if loss.is_finite() {
+                self.round_loss_sum += loss;
+                self.round_loss_n += 1;
+            }
+        }
+    }
+
+    /// Aggregate the block's layer updates: for every due group, order the
+    /// client rows by the active list, average them into the global model,
+    /// observe the discrepancy for Algorithm 2, charge the ledger, and
+    /// emit one `SyncDecision` per group.  `fused` (when given, and when
+    /// the payloads are dense) routes the weighted average through an
+    /// external fused kernel instead of `aggregate_native`.
+    pub fn apply_updates(
+        &mut self,
+        a: &RoundAssignment,
+        updates: &[LayerUpdate],
+        mut fused: Option<&mut FusedAgg<'_>>,
+    ) -> Result<Vec<SyncDecision>> {
+        if a.due_groups.is_empty() {
+            anyhow::ensure!(
+                updates.is_empty(),
+                "got {} layer updates but no group was due at k={}",
+                updates.len(),
+                a.k
+            );
+            return Ok(Vec::new());
+        }
+        let m = a.active.len();
+        // Every update must belong to a due group: each due group consumes
+        // exactly m updates below, so a count mismatch means some frame
+        // carried a non-due group (or a duplicate) — reject it rather than
+        // silently dropping it.
+        anyhow::ensure!(
+            updates.len() == a.due_groups.len() * m,
+            "expected {} layer updates ({} due groups x {m} active clients) at k={}, got {}",
+            a.due_groups.len() * m,
+            a.due_groups.len(),
+            a.k,
+            updates.len()
+        );
+        self.ledger.record_round();
+        let mut decisions = Vec::with_capacity(a.due_groups.len());
+        for &g in &a.due_groups {
+            let group = &self.groups[g];
+            // Collect this group's updates in active order — arrival order
+            // (worker interleaving) must not influence the result.
+            let mut per_client: Vec<Option<&LayerUpdate>> = vec![None; m];
+            for u in updates.iter().filter(|u| u.group == g) {
+                let slot = a
+                    .active
+                    .iter()
+                    .position(|&ci| ci == u.client)
+                    .with_context(|| format!("update from inactive client {}", u.client))?;
+                anyhow::ensure!(
+                    per_client[slot].is_none(),
+                    "duplicate update for group {g} client {}",
+                    u.client
+                );
+                anyhow::ensure!(u.k == a.k, "update k={} for block k={}", u.k, a.k);
+                anyhow::ensure!(
+                    u.tensors.len() == group.params.len(),
+                    "group {g} expects {} tensors, got {}",
+                    group.params.len(),
+                    u.tensors.len()
+                );
+                per_client[slot] = Some(u);
+            }
+            let per_client: Vec<&LayerUpdate> = per_client
+                .into_iter()
+                .enumerate()
+                .map(|(i, u)| {
+                    u.with_context(|| {
+                        format!("missing update for group {g} from active client {}", a.active[i])
+                    })
+                })
+                .collect::<Result<_>>()?;
+
+            let uplink_total: usize = per_client
+                .iter()
+                .flat_map(|u| u.tensors.iter())
+                .map(|p| p.nominal_bytes())
+                .sum();
+
+            let all_dense =
+                per_client.iter().all(|u| u.tensors.iter().all(|p| p.as_dense().is_some()));
+            let disc = match fused.as_mut() {
+                Some(f) if all_dense => self.aggregate_group_fused(g, &per_client, f)?,
+                _ => self.aggregate_group_native(g, &per_client)?,
+            };
+
+            self.schedule.observe(g, disc);
+            self.ledger.record_sync_bytes(g, m, uplink_total / m.max(1));
+            let group = &self.groups[g];
+            decisions.push(SyncDecision {
+                k: a.k,
+                group: g,
+                new_interval: self.schedule.intervals[g],
+                new_params: group.params.iter().map(|&t| self.global[t].data.clone()).collect(),
+            });
+        }
+        Ok(decisions)
+    }
+
+    /// Tensor-by-tensor weighted average in manifest order — the exact
+    /// accumulation order of the historical in-proc path.
+    fn aggregate_group_native(&mut self, g: usize, per_client: &[&LayerUpdate]) -> Result<f64> {
+        let group = self.groups[g].clone();
+        let mut disc = 0.0f64;
+        for (ti, &t) in group.params.iter().enumerate() {
+            let want = self.global[t].data.len();
+            // decode lossy payloads once; borrow dense ones in place
+            let owned: Vec<Option<Vec<f32>>> = per_client
+                .iter()
+                .map(|u| match u.tensors[ti].as_dense() {
+                    Some(_) => Ok(None),
+                    None => u.tensors[ti].decode().map(Some),
+                })
+                .collect::<Result<_>>()?;
+            let rows: Vec<&[f32]> = per_client
+                .iter()
+                .zip(&owned)
+                .map(|(u, o)| o.as_deref().unwrap_or_else(|| u.tensors[ti].as_dense().unwrap()))
+                .collect();
+            for (row, u) in rows.iter().zip(per_client) {
+                anyhow::ensure!(
+                    row.len() == want,
+                    "group {g} tensor {ti}: client {} sent {} values, expected {want}",
+                    u.client,
+                    row.len()
+                );
+            }
+            disc += crate::aggregation::aggregate_native(
+                &rows,
+                &self.weights,
+                &mut self.global[t].data,
+            );
+        }
+        Ok(disc)
+    }
+
+    /// Stack the group's rows [m, dim] and run the injected fused kernel
+    /// (the Pallas L1 path), then scatter u back into the global tensors.
+    fn aggregate_group_fused(
+        &mut self,
+        g: usize,
+        per_client: &[&LayerUpdate],
+        fused: &mut FusedAgg<'_>,
+    ) -> Result<f64> {
+        let group = self.groups[g].clone();
+        let dim = group.dim;
+        let m = per_client.len();
+        self.stack_scratch.resize(m * dim, 0.0);
+        for (row, u) in per_client.iter().enumerate() {
+            let mut off = row * dim;
+            for (ti, _) in group.params.iter().enumerate() {
+                let src = u.tensors[ti].as_dense().context("fused path requires dense rows")?;
+                self.stack_scratch[off..off + src.len()].copy_from_slice(src);
+                off += src.len();
+            }
+        }
+        let (u, disc) = fused(&self.stack_scratch, &self.weights, dim)?;
+        let mut off = 0;
+        for &t in &group.params {
+            let len = self.global[t].data.len();
+            self.global[t].data.copy_from_slice(&u[off..off + len]);
+            off += len;
+        }
+        Ok(disc as f64)
+    }
+
+    /// FedNova: adopt a participant-computed full-model sync and charge
+    /// the ledger for a whole-model aggregation (every group).
+    pub fn adopt_full_model(&mut self, new_global: Vec<HostTensor>) {
+        self.global = new_global;
+        self.ledger.record_round();
+        for g in 0..self.groups.len() {
+            self.ledger.record_sync(g, self.active.len());
+        }
+    }
+
+    /// Close the block: run Algorithm 2 at boundaries and report whether a
+    /// round completed (and whether it wants an evaluation).
+    pub fn end_block(&mut self, k: usize) -> BlockOutcome {
+        self.schedule.maybe_adjust(k);
+        if k % self.round_len != 0 {
+            return BlockOutcome::MidRound;
+        }
+        self.round += 1;
+        let train_loss = if self.round_loss_n > 0 {
+            self.round_loss_sum / self.round_loss_n as f64
+        } else {
+            0.0
+        };
+        self.round_loss_sum = 0.0;
+        self.round_loss_n = 0;
+        let eval_due = (self.cfg.eval_every_rounds > 0
+            && self.round % self.cfg.eval_every_rounds == 0)
+            || self.round == self.total_rounds;
+        BlockOutcome::RoundComplete {
+            round: self.round,
+            total_rounds: self.total_rounds,
+            train_loss,
+            eval_due,
+        }
+    }
+
+    /// Record the round's curve point (with the driver's evaluation result,
+    /// if one was due) and queue a resample for the next block.
+    pub fn complete_round(&mut self, k: usize, train_loss: f64, eval: Option<(f64, f64)>) {
+        self.curve.push(CurvePoint {
+            iteration: k,
+            round: self.round,
+            train_loss,
+            val_acc: eval.map(|(a, _)| a),
+            val_loss: eval.map(|(_, l)| l),
+            comm_cost: self.ledger.total_cost(),
+        });
+        if self.round < self.total_rounds {
+            self.pending_new_round = true;
+        }
+    }
+
+    /// Snapshot the run's metrics (curve + ledger totals); the driver adds
+    /// the final evaluation and wall/runtime seconds.
+    pub fn metrics(&self) -> RunMetrics {
+        let mut m = RunMetrics {
+            tag: self.cfg.tag(),
+            curve: self.curve.clone(),
+            ..Default::default()
+        };
+        m.record_ledger(&self.ledger);
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aggregation::Policy;
+    use crate::protocol::messages::Payload;
+
+    fn tiny_core(n_clients: usize, policy: Policy, iterations: usize) -> CoordinatorCore {
+        let cfg = RunConfig {
+            n_clients,
+            policy,
+            iterations,
+            samples: 32,
+            warmup_rounds: 0,
+            ..RunConfig::default()
+        };
+        cfg.validate().unwrap();
+        let groups = vec![
+            GroupInfo { name: "g0".into(), dim: 3, params: vec![0] },
+            GroupInfo { name: "g1".into(), dim: 2, params: vec![1] },
+        ];
+        let global = vec![
+            HostTensor::from_vec(&[3], vec![0.0; 3]),
+            HostTensor::from_vec(&[2], vec![0.0; 2]),
+        ];
+        CoordinatorCore::new(&cfg, groups, global)
+    }
+
+    fn dense_update(k: usize, group: usize, client: usize, vals: Vec<Vec<f32>>) -> LayerUpdate {
+        LayerUpdate { k, group, client, tensors: vals.into_iter().map(Payload::Dense).collect() }
+    }
+
+    #[test]
+    fn assignment_flow_covers_all_blocks_and_rounds() {
+        let mut core = tiny_core(4, Policy::fedavg(6), 24);
+        let mut ks = Vec::new();
+        while let Some(a) = core.begin_block() {
+            ks.push(a.k);
+            assert_eq!(a.gap, 6);
+            assert_eq!(a.active, vec![0, 1, 2, 3]);
+            assert!(a.new_round, "fedavg(6): every block is a round");
+            assert_eq!(a.due_groups, vec![0, 1]);
+            core.record_losses(&[1.0; 4]);
+            let ups = vec![
+                dense_update(a.k, 0, 0, vec![vec![1.0, 2.0, 3.0]]),
+                dense_update(a.k, 0, 1, vec![vec![1.0, 2.0, 3.0]]),
+                dense_update(a.k, 0, 2, vec![vec![1.0, 2.0, 3.0]]),
+                dense_update(a.k, 0, 3, vec![vec![1.0, 2.0, 3.0]]),
+                dense_update(a.k, 1, 0, vec![vec![5.0, 5.0]]),
+                dense_update(a.k, 1, 1, vec![vec![5.0, 5.0]]),
+                dense_update(a.k, 1, 2, vec![vec![5.0, 5.0]]),
+                dense_update(a.k, 1, 3, vec![vec![5.0, 5.0]]),
+            ];
+            let decisions = core.apply_updates(&a, &ups, None).unwrap();
+            assert_eq!(decisions.len(), 2);
+            assert_eq!(decisions[0].new_params[0], vec![1.0, 2.0, 3.0]);
+            match core.end_block(a.k) {
+                BlockOutcome::RoundComplete { round, train_loss, .. } => {
+                    assert!((train_loss - 1.0).abs() < 1e-12);
+                    core.complete_round(a.k, train_loss, None);
+                    assert_eq!(round, ks.len());
+                }
+                BlockOutcome::MidRound => panic!("fedavg block must close a round"),
+            }
+        }
+        assert_eq!(ks, vec![6, 12, 18, 24]);
+        assert!(core.begin_block().is_none());
+        // identical rows -> zero discrepancy -> global adopted the rows
+        assert_eq!(core.global[0].data, vec![1.0, 2.0, 3.0]);
+        // ledger: 4 rounds x both groups, dense bytes
+        assert_eq!(core.ledger.rounds, 4);
+        assert_eq!(core.ledger.total_cost(), 4 * (3 + 2));
+        assert_eq!(core.curve.len(), 4);
+    }
+
+    #[test]
+    fn apply_updates_rejects_protocol_violations() {
+        let mut core = tiny_core(2, Policy::fedavg(6), 12);
+        let a = core.begin_block().unwrap();
+        // short one update: the count guard fires
+        let ups = vec![
+            dense_update(a.k, 0, 0, vec![vec![0.0; 3]]),
+            dense_update(a.k, 1, 0, vec![vec![0.0; 2]]),
+            dense_update(a.k, 1, 1, vec![vec![0.0; 2]]),
+        ];
+        let err = core.apply_updates(&a, &ups, None).unwrap_err();
+        assert!(format!("{err:#}").contains("expected 4 layer updates"), "{err:#}");
+        // right count, but one frame names a non-due group — so a due
+        // group is short a client
+        let ups = vec![
+            dense_update(a.k, 0, 0, vec![vec![0.0; 3]]),
+            dense_update(a.k, 0, 1, vec![vec![0.0; 3]]),
+            dense_update(a.k, 1, 0, vec![vec![0.0; 2]]),
+            dense_update(a.k, 7, 0, vec![vec![0.0; 2]]),
+        ];
+        let err = core.apply_updates(&a, &ups, None).unwrap_err();
+        assert!(format!("{err:#}").contains("missing update"), "{err:#}");
+        // wrong tensor length
+        let ups = vec![
+            dense_update(a.k, 0, 0, vec![vec![0.0; 3]]),
+            dense_update(a.k, 0, 1, vec![vec![0.0; 4]]),
+            dense_update(a.k, 1, 0, vec![vec![0.0; 2]]),
+            dense_update(a.k, 1, 1, vec![vec![0.0; 2]]),
+        ];
+        assert!(core.apply_updates(&a, &ups, None).is_err());
+        // inactive client
+        let ups = vec![
+            dense_update(a.k, 0, 0, vec![vec![0.0; 3]]),
+            dense_update(a.k, 0, 7, vec![vec![0.0; 3]]),
+            dense_update(a.k, 1, 0, vec![vec![0.0; 2]]),
+            dense_update(a.k, 1, 1, vec![vec![0.0; 2]]),
+        ];
+        let err = core.apply_updates(&a, &ups, None).unwrap_err();
+        assert!(format!("{err:#}").contains("inactive client"), "{err:#}");
+    }
+
+    #[test]
+    fn fedlama_assignments_follow_the_schedule() {
+        let mut core = tiny_core(2, Policy::fedlama(6, 2), 24);
+        let a1 = core.begin_block().unwrap();
+        assert!(a1.new_round);
+        assert_eq!(a1.k, 6);
+        assert_eq!(a1.due_groups, vec![0, 1]);
+        // feed zero-loss, identical updates; mid-round block follows
+        core.record_losses(&[0.0, 0.0]);
+        let ups: Vec<LayerUpdate> = vec![
+            dense_update(6, 0, 0, vec![vec![0.0; 3]]),
+            dense_update(6, 0, 1, vec![vec![0.0; 3]]),
+            dense_update(6, 1, 0, vec![vec![0.0; 2]]),
+            dense_update(6, 1, 1, vec![vec![0.0; 2]]),
+        ];
+        core.apply_updates(&a1, &ups, None).unwrap();
+        assert_eq!(core.end_block(6), BlockOutcome::MidRound);
+        let a2 = core.begin_block().unwrap();
+        assert!(!a2.new_round, "mid-round block must not resample");
+        assert_eq!(a2.k, 12);
+    }
+}

@@ -1,0 +1,774 @@
+//! Typed federation-protocol messages and their wire schemas.
+//!
+//! The protocol has two roles.  The **coordinator** owns Algorithm 1's
+//! server state (schedule, ledger, sampler, global params) and never runs
+//! model compute; **participants** own client shards and a compute backend
+//! and never make scheduling decisions.  One training block exchanges:
+//!
+//! ```text
+//!   coordinator                                participant(s)
+//!        | -- RoundAssignment {k, active, lr, gap, due} -->
+//!        |                       (train shard ∩ active for gap steps)
+//!        | <-- LayerUpdate {k, group, client, tensors} -- (per due group/client)
+//!        | <-- BlockDone {losses, compute_secs} --------
+//!        |  (aggregate rows per group, observe d_l, charge Eq. 9 ledger)
+//!        | -- SyncDecision {k, group, new_params, new_interval} -->
+//! ```
+//!
+//! plus a session handshake (`Configure` -> `Hello`), liveness
+//! (`Heartbeat`), and `Shutdown`.
+//!
+//! `LayerUpdate` tensors travel as [`Payload`]s: dense f32, q-bit
+//! quantized, or top-k sparse — mirroring `comm::compression`.  The lossy
+//! *values* a payload decodes to are exactly (bit-for-bit) the values the
+//! compressor produced on the participant, so aggregation is independent
+//! of which transport carried the update.  The `nominal_bytes` of a
+//! payload is the byte count the simulation ledger charges (the
+//! compressor's idealized encoded size); the wire framing itself is
+//! faithful but not maximally bit-packed, and is never what Eq. 9 reports.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::aggregation::Policy;
+use crate::comm::{Compressor, Quantizer, Spec, TopK};
+use crate::config::{Algorithm, EngineKind, PartitionKind, RunConfig};
+use crate::data::DatasetKind;
+
+use super::wire::{self, Dec, Enc};
+
+// ---------------------------------------------------------------------------
+// Payload: one tensor on the wire
+// ---------------------------------------------------------------------------
+
+/// A flattened tensor in one of the protocol's encodings.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Payload {
+    /// Raw f32 values.
+    Dense(Vec<f32>),
+    /// QSGD-style per-chunk uniform quantization: sign + `bits`-bit level
+    /// per value, one f32 scale per `chunk` values.  Decodes to exactly the
+    /// lossy values `comm::Quantizer` produced.
+    QBits { bits: u8, chunk: u32, n: u32, scales: Vec<f32>, levels: Vec<u16>, signs: Vec<u8> },
+    /// Top-k sparsification: kept (index, value) pairs, zeros elsewhere.
+    /// `nominal` preserves the compressor's reported encoded size (which
+    /// counts kept *slots*, including exact zeros the scan retained).
+    TopK { n: u32, nominal: u32, indices: Vec<u32>, values: Vec<f32> },
+}
+
+impl Payload {
+    /// Element count of the decoded tensor.
+    pub fn len(&self) -> usize {
+        match self {
+            Payload::Dense(v) => v.len(),
+            Payload::QBits { n, .. } => *n as usize,
+            Payload::TopK { n, .. } => *n as usize,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The idealized encoded size in bytes — what the Eq. 9 byte ledger
+    /// charges per uplink.  Matches `comm::compression`'s accounting:
+    /// dense 4B/value; q-bit `bits` bits/value + one f32 scale per chunk;
+    /// top-k 8B per kept slot.
+    pub fn nominal_bytes(&self) -> usize {
+        match self {
+            Payload::Dense(v) => 4 * v.len(),
+            Payload::QBits { bits, chunk, n, .. } => {
+                let n = *n as usize;
+                (n * *bits as usize).div_ceil(8) + n.div_ceil(*chunk as usize) * 4
+            }
+            Payload::TopK { nominal, .. } => *nominal as usize,
+        }
+    }
+
+    /// Borrow the values directly when the payload is dense.
+    pub fn as_dense(&self) -> Option<&[f32]> {
+        match self {
+            Payload::Dense(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Decode to dense f32 values.  For lossy encodings this reconstructs
+    /// bit-for-bit the values the participant-side compressor produced.
+    pub fn decode(&self) -> Result<Vec<f32>> {
+        match self {
+            Payload::Dense(v) => Ok(v.clone()),
+            Payload::QBits { bits, chunk, n, scales, levels, signs } => {
+                let n = *n as usize;
+                let chunk = (*chunk as usize).max(1);
+                ensure!(levels.len() == n, "qbits level count {} != n {n}", levels.len());
+                ensure!(
+                    scales.len() == n.div_ceil(chunk),
+                    "qbits scale count {} != {}",
+                    scales.len(),
+                    n.div_ceil(chunk)
+                );
+                ensure!(signs.len() == n.div_ceil(8), "qbits sign bitmap length");
+                ensure!((1..=16).contains(bits), "qbits bits {bits} out of range");
+                let denom = ((1u32 << *bits) - 1) as f32;
+                let mut out = vec![0.0f32; n];
+                for (i, o) in out.iter_mut().enumerate() {
+                    let max = scales[i / chunk];
+                    // exact mirror of Quantizer: v = sign * q / levels * max,
+                    // with negation applied last (exact in IEEE-754).
+                    let v = levels[i] as f32 / denom * max;
+                    let negative = ((signs[i / 8] >> (i % 8)) & 1) == 1;
+                    *o = if negative { -v } else { v };
+                }
+                Ok(out)
+            }
+            Payload::TopK { n, indices, values, .. } => {
+                ensure!(indices.len() == values.len(), "topk index/value length mismatch");
+                let n = *n as usize;
+                let mut out = vec![0.0f32; n];
+                for (&i, &v) in indices.iter().zip(values) {
+                    ensure!((i as usize) < n, "topk index {i} out of range {n}");
+                    out[i as usize] = v;
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    /// Re-encode the lossy output of `comm::Quantizer` (per-chunk scale
+    /// recovered from the data itself — the chunk maximum survives
+    /// quantization exactly).
+    pub fn qbits_from(lossy: &[f32], bits: u32, chunk: usize) -> Payload {
+        let denom = ((1u32 << bits) - 1) as f32;
+        let n = lossy.len();
+        let mut scales = Vec::with_capacity(n.div_ceil(chunk.max(1)));
+        let mut levels = vec![0u16; n];
+        let mut signs = vec![0u8; n.div_ceil(8)];
+        for (c, vals) in lossy.chunks(chunk.max(1)).enumerate() {
+            let max = vals.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+            scales.push(max);
+            for (j, &v) in vals.iter().enumerate() {
+                let i = c * chunk.max(1) + j;
+                if v.is_sign_negative() {
+                    signs[i / 8] |= 1 << (i % 8);
+                }
+                if max > 0.0 {
+                    // |v| = q/denom*max exactly, so the ratio recovers q to
+                    // well under half a level for bits <= 16.
+                    levels[i] = (v.abs() / max * denom).round() as u16;
+                }
+            }
+        }
+        Payload::QBits { bits: bits as u8, chunk: chunk as u32, n: n as u32, scales, levels, signs }
+    }
+
+    /// Re-encode the lossy output of `comm::TopK` (nonzero scatter), with
+    /// the compressor's reported encoded size preserved for the ledger.
+    pub fn topk_from(lossy: &[f32], nominal: usize) -> Payload {
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        for (i, &v) in lossy.iter().enumerate() {
+            if v != 0.0 {
+                indices.push(i as u32);
+                values.push(v);
+            }
+        }
+        Payload::TopK { n: lossy.len() as u32, nominal: nominal as u32, indices, values }
+    }
+
+    fn encode(&self, e: &mut Enc) {
+        match self {
+            Payload::Dense(v) => {
+                e.u8(0);
+                e.f32s(v);
+            }
+            Payload::QBits { bits, chunk, n, scales, levels, signs } => {
+                e.u8(1);
+                e.u8(*bits);
+                e.u32(*chunk);
+                e.u32(*n);
+                e.f32s(scales);
+                e.u16s(levels);
+                e.bytes(signs);
+            }
+            Payload::TopK { n, nominal, indices, values } => {
+                e.u8(2);
+                e.u32(*n);
+                e.u32(*nominal);
+                e.u32s(indices);
+                e.f32s(values);
+            }
+        }
+    }
+
+    fn decode_wire(d: &mut Dec<'_>) -> Result<Payload> {
+        Ok(match d.u8()? {
+            0 => Payload::Dense(d.f32s()?),
+            1 => Payload::QBits {
+                bits: d.u8()?,
+                chunk: d.u32()?,
+                n: d.u32()?,
+                scales: d.f32s()?,
+                levels: d.u16s()?,
+                signs: d.bytes()?,
+            },
+            2 => Payload::TopK {
+                n: d.u32()?,
+                nominal: d.u32()?,
+                indices: d.u32s()?,
+                values: d.f32s()?,
+            },
+            t => bail!("unknown payload tag {t}"),
+        })
+    }
+}
+
+/// Deterministic per-message compression stream: mixes (seed, k, group,
+/// client) so the lossy transform of one uplink depends only on *what* is
+/// being sent, never on which process sends it or in which order —
+/// the property that makes compressed runs transport-invariant.
+pub fn update_stream_seed(seed: u64, k: usize, group: usize, client: usize) -> u64 {
+    let mut z = seed
+        ^ (k as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ (group as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9)
+        ^ (client as u64).wrapping_mul(0x94D0_49BB_1331_11EB);
+    // splitmix64 finalizer
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Compress one tensor according to `spec` on the message-derived stream
+/// and wrap the result as a wire payload.  `data` is transformed in place
+/// to the lossy values (the participant keeps training on its own exact
+/// params; this buffer is the copy being "sent").
+pub fn encode_tensor(spec: Spec, stream_seed: u64, data: &mut [f32]) -> Payload {
+    match spec {
+        Spec::Dense => Payload::Dense(data.to_vec()),
+        Spec::QBits { bits } => {
+            let mut q = Quantizer::new(bits, stream_seed);
+            q.compress(data);
+            Payload::qbits_from(data, bits, q.chunk)
+        }
+        Spec::TopK { ratio } => {
+            let mut t = TopK::new(ratio);
+            let nominal = t.compress(data);
+            Payload::topk_from(data, nominal)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Message structs
+// ---------------------------------------------------------------------------
+
+/// Worker -> coordinator: join handshake after `Configure`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Hello {
+    pub version: u8,
+    pub worker_id: usize,
+    pub shard_len: usize,
+}
+
+/// Liveness probe; the receiver echoes the nonce back.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Heartbeat {
+    pub nonce: u64,
+}
+
+/// Coordinator -> worker: session setup.  Carries the run config subset a
+/// participant needs to deterministically rebuild its backend, data
+/// partition, and client shard — heavy state (datasets, partitions) is
+/// reconstructed from the seed, never shipped.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Configure {
+    pub worker_id: usize,
+    pub n_workers: usize,
+    pub shard: Vec<usize>,
+    pub cfg: RunConfig,
+}
+
+/// Coordinator -> participants: one training block.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoundAssignment {
+    /// Iteration index at the *end* of this block (1-based, Algorithm 1's k).
+    pub k: usize,
+    /// Round this block belongs to (0-based while in flight).
+    pub round: usize,
+    /// Local iterations to advance (the base interval gap).
+    pub gap: usize,
+    /// Learning rate for the block (warmup-adjusted).
+    pub lr: f32,
+    /// True when this block starts a round: participants re-pull the
+    /// global model into newly active clients and reset budgets.
+    pub new_round: bool,
+    /// Active client ids this round (sorted, global numbering).
+    pub active: Vec<usize>,
+    /// Groups due for aggregation at k; participants upload these.
+    pub due_groups: Vec<usize>,
+}
+
+/// Participant -> coordinator: one client's tensors for one due group.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerUpdate {
+    pub k: usize,
+    pub group: usize,
+    pub client: usize,
+    /// One payload per tensor of the group, in manifest `params` order.
+    pub tensors: Vec<Payload>,
+}
+
+/// Participant -> coordinator: end of its part of a block.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockDone {
+    pub worker_id: usize,
+    pub k: usize,
+    /// (client id, mean local loss) for the shard's active clients, in
+    /// active order.  NaN = heterogeneous budget exhausted (as in-proc).
+    pub losses: Vec<(usize, f64)>,
+    /// Cumulative compute seconds inside the worker's backend (for the
+    /// runtime utilization report).
+    pub compute_secs: f64,
+}
+
+/// Coordinator -> participants: aggregated layer + next interval.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SyncDecision {
+    pub k: usize,
+    pub group: usize,
+    /// The group's re-adjusted interval tau_l (informational for
+    /// participants; due groups always arrive via assignments).
+    pub new_interval: usize,
+    /// Aggregated tensors u_l, dense, in manifest `params` order.
+    pub new_params: Vec<Vec<f32>>,
+}
+
+/// Every protocol message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    Hello(Hello),
+    Configure(Configure),
+    Heartbeat(Heartbeat),
+    Assignment(RoundAssignment),
+    Update(LayerUpdate),
+    Done(BlockDone),
+    Decision(SyncDecision),
+    Shutdown,
+}
+
+const KIND_HELLO: u8 = 1;
+const KIND_CONFIGURE: u8 = 2;
+const KIND_HEARTBEAT: u8 = 3;
+const KIND_ASSIGNMENT: u8 = 4;
+const KIND_UPDATE: u8 = 5;
+const KIND_DONE: u8 = 6;
+const KIND_DECISION: u8 = 7;
+const KIND_SHUTDOWN: u8 = 8;
+
+impl Message {
+    pub fn kind(&self) -> u8 {
+        match self {
+            Message::Hello(_) => KIND_HELLO,
+            Message::Configure(_) => KIND_CONFIGURE,
+            Message::Heartbeat(_) => KIND_HEARTBEAT,
+            Message::Assignment(_) => KIND_ASSIGNMENT,
+            Message::Update(_) => KIND_UPDATE,
+            Message::Done(_) => KIND_DONE,
+            Message::Decision(_) => KIND_DECISION,
+            Message::Shutdown => KIND_SHUTDOWN,
+        }
+    }
+
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            Message::Hello(_) => "Hello",
+            Message::Configure(_) => "Configure",
+            Message::Heartbeat(_) => "Heartbeat",
+            Message::Assignment(_) => "RoundAssignment",
+            Message::Update(_) => "LayerUpdate",
+            Message::Done(_) => "BlockDone",
+            Message::Decision(_) => "SyncDecision",
+            Message::Shutdown => "Shutdown",
+        }
+    }
+
+    /// Encode to a complete wire frame.
+    pub fn to_frame(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        match self {
+            Message::Hello(h) => {
+                e.u8(h.version);
+                e.usize(h.worker_id);
+                e.usize(h.shard_len);
+            }
+            Message::Configure(c) => {
+                e.usize(c.worker_id);
+                e.usize(c.n_workers);
+                e.usizes(&c.shard);
+                encode_cfg(&mut e, &c.cfg);
+            }
+            Message::Heartbeat(h) => e.u64(h.nonce),
+            Message::Assignment(a) => {
+                e.usize(a.k);
+                e.usize(a.round);
+                e.usize(a.gap);
+                e.f32(a.lr);
+                e.bool(a.new_round);
+                e.usizes(&a.active);
+                e.usizes(&a.due_groups);
+            }
+            Message::Update(u) => {
+                e.usize(u.k);
+                e.usize(u.group);
+                e.usize(u.client);
+                e.u32(u.tensors.len() as u32);
+                for p in &u.tensors {
+                    p.encode(&mut e);
+                }
+            }
+            Message::Done(d) => {
+                e.usize(d.worker_id);
+                e.usize(d.k);
+                e.u32(d.losses.len() as u32);
+                for &(c, l) in &d.losses {
+                    e.usize(c);
+                    e.f64(l);
+                }
+                e.f64(d.compute_secs);
+            }
+            Message::Decision(d) => {
+                e.usize(d.k);
+                e.usize(d.group);
+                e.usize(d.new_interval);
+                e.u32(d.new_params.len() as u32);
+                for t in &d.new_params {
+                    e.f32s(t);
+                }
+            }
+            Message::Shutdown => {}
+        }
+        wire::frame(self.kind(), &e.buf)
+    }
+
+    /// Decode from a frame body with the given kind tag.
+    pub fn from_body(kind: u8, body: &[u8]) -> Result<Message> {
+        let mut d = Dec::new(body);
+        let msg = match kind {
+            KIND_HELLO => Message::Hello(Hello {
+                version: d.u8()?,
+                worker_id: d.usize()?,
+                shard_len: d.usize()?,
+            }),
+            KIND_CONFIGURE => Message::Configure(Configure {
+                worker_id: d.usize()?,
+                n_workers: d.usize()?,
+                shard: d.usizes()?,
+                cfg: decode_cfg(&mut d)?,
+            }),
+            KIND_HEARTBEAT => Message::Heartbeat(Heartbeat { nonce: d.u64()? }),
+            KIND_ASSIGNMENT => Message::Assignment(RoundAssignment {
+                k: d.usize()?,
+                round: d.usize()?,
+                gap: d.usize()?,
+                lr: d.f32()?,
+                new_round: d.bool()?,
+                active: d.usizes()?,
+                due_groups: d.usizes()?,
+            }),
+            KIND_UPDATE => {
+                let k = d.usize()?;
+                let group = d.usize()?;
+                let client = d.usize()?;
+                let nt = d.u32()? as usize;
+                ensure!(nt <= 4096, "implausible tensor count {nt}");
+                let tensors =
+                    (0..nt).map(|_| Payload::decode_wire(&mut d)).collect::<Result<_>>()?;
+                Message::Update(LayerUpdate { k, group, client, tensors })
+            }
+            KIND_DONE => {
+                let worker_id = d.usize()?;
+                let k = d.usize()?;
+                let nl = d.u32()? as usize;
+                let losses = (0..nl)
+                    .map(|_| -> Result<(usize, f64)> { Ok((d.usize()?, d.f64()?)) })
+                    .collect::<Result<Vec<_>>>()?;
+                let compute_secs = d.f64()?;
+                Message::Done(BlockDone { worker_id, k, losses, compute_secs })
+            }
+            KIND_DECISION => {
+                let k = d.usize()?;
+                let group = d.usize()?;
+                let new_interval = d.usize()?;
+                let nt = d.u32()? as usize;
+                ensure!(nt <= 4096, "implausible tensor count {nt}");
+                let new_params = (0..nt).map(|_| d.f32s()).collect::<Result<_>>()?;
+                Message::Decision(SyncDecision { k, group, new_interval, new_params })
+            }
+            KIND_SHUTDOWN => Message::Shutdown,
+            t => bail!("unknown message kind {t}"),
+        };
+        d.finish()?;
+        Ok(msg)
+    }
+
+    /// Decode one message from the head of a byte buffer; returns
+    /// (message, bytes consumed).
+    pub fn decode(buf: &[u8]) -> Result<(Message, usize)> {
+        let (kind, body, used) = wire::deframe(buf)?;
+        Ok((Message::from_body(kind, body)?, used))
+    }
+
+    /// Write this message as one frame (no flush).
+    pub fn write_to<W: std::io::Write>(&self, w: &mut W) -> Result<()> {
+        use anyhow::Context;
+        w.write_all(&self.to_frame()).with_context(|| format!("sending {}", self.kind_name()))
+    }
+
+    /// Read one message from a stream.
+    pub fn read_from<R: std::io::Read>(r: &mut R) -> Result<Message> {
+        let (kind, body) = wire::read_frame(r)?;
+        Message::from_body(kind, &body)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RunConfig wire schema (the worker-relevant subset)
+// ---------------------------------------------------------------------------
+
+fn encode_cfg(e: &mut Enc, cfg: &RunConfig) {
+    e.str(&cfg.model);
+    e.str(cfg.dataset.name());
+    match cfg.algorithm {
+        Algorithm::Sgd => {
+            e.u8(0);
+            e.f32(0.0);
+        }
+        Algorithm::Prox { mu } => {
+            e.u8(1);
+            e.f32(mu);
+        }
+        Algorithm::Scaffold => {
+            e.u8(2);
+            e.f32(0.0);
+        }
+        Algorithm::Nova => {
+            e.u8(3);
+            e.f32(0.0);
+        }
+    }
+    match &cfg.policy {
+        Policy::FullSync { interval } => {
+            e.u8(0);
+            e.usize(*interval);
+            e.usize(0);
+            e.bool(false);
+        }
+        Policy::FedLama { tau, phi, accelerate } => {
+            e.u8(1);
+            e.usize(*tau);
+            e.usize(*phi);
+            e.bool(*accelerate);
+        }
+    }
+    match cfg.partition {
+        PartitionKind::Iid => {
+            e.u8(0);
+            e.f64(0.0);
+        }
+        PartitionKind::Dirichlet { alpha } => {
+            e.u8(1);
+            e.f64(alpha);
+        }
+        PartitionKind::Writers => {
+            e.u8(2);
+            e.f64(0.0);
+        }
+    }
+    e.usize(cfg.n_clients);
+    e.f64(cfg.active_ratio);
+    e.usize(cfg.samples);
+    e.f32(cfg.lr);
+    e.usize(cfg.warmup_rounds);
+    e.usize(cfg.iterations);
+    e.u64(cfg.seed);
+    e.usize(cfg.threads);
+    e.bool(cfg.use_chunk);
+    e.bool(cfg.hetero_local_steps);
+    e.str(&cfg.compressor);
+}
+
+fn decode_cfg(d: &mut Dec<'_>) -> Result<RunConfig> {
+    let model = d.str()?;
+    let dataset_name = d.str()?;
+    let dataset = DatasetKind::parse(&dataset_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset_name:?} on the wire"))?;
+    let algo_tag = d.u8()?;
+    let mu = d.f32()?;
+    let algorithm = match algo_tag {
+        0 => Algorithm::Sgd,
+        1 => Algorithm::Prox { mu },
+        2 => Algorithm::Scaffold,
+        3 => Algorithm::Nova,
+        t => bail!("unknown algorithm tag {t}"),
+    };
+    let pol_tag = d.u8()?;
+    let (a, b, acc) = (d.usize()?, d.usize()?, d.bool()?);
+    let policy = match pol_tag {
+        0 => Policy::FullSync { interval: a },
+        1 => Policy::FedLama { tau: a, phi: b, accelerate: acc },
+        t => bail!("unknown policy tag {t}"),
+    };
+    let part_tag = d.u8()?;
+    let alpha = d.f64()?;
+    let partition = match part_tag {
+        0 => PartitionKind::Iid,
+        1 => PartitionKind::Dirichlet { alpha },
+        2 => PartitionKind::Writers,
+        t => bail!("unknown partition tag {t}"),
+    };
+    Ok(RunConfig {
+        engine: EngineKind::Native,
+        workers: 0,
+        model,
+        dataset,
+        algorithm,
+        policy,
+        partition,
+        n_clients: d.usize()?,
+        active_ratio: d.f64()?,
+        samples: d.usize()?,
+        lr: d.f32()?,
+        warmup_rounds: d.usize()?,
+        iterations: d.usize()?,
+        seed: d.u64()?,
+        threads: d.usize()?,
+        use_chunk: d.bool()?,
+        hetero_local_steps: d.bool()?,
+        compressor: d.str()?,
+        ..RunConfig::default()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randvec(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn qbits_payload_is_exact_reencoding_of_quantizer_output() {
+        for bits in [1u32, 4, 8, 16] {
+            let mut data = randvec(3000, 42 + bits as u64);
+            let mut q = Quantizer::new(bits, 7);
+            let nominal = q.compress(&mut data);
+            let p = Payload::qbits_from(&data, bits, q.chunk);
+            let decoded = p.decode().unwrap();
+            for (i, (&a, &b)) in data.iter().zip(&decoded).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "bits={bits} idx={i}: {a} vs {b}");
+            }
+            assert_eq!(p.nominal_bytes(), nominal, "nominal accounting drifted (bits={bits})");
+            assert_eq!(p.nominal_bytes(), q.encoded_bytes(3000));
+        }
+    }
+
+    #[test]
+    fn qbits_zero_and_negative_zero_round_trip() {
+        // quantizer maps -x toward -0.0 for tiny x; the sign bit must survive
+        let data = vec![0.0f32, -0.0, 1.0, -1.0, 0.5, -0.5, 0.0, 0.0, 0.0];
+        let mut lossy = data.clone();
+        let mut q = Quantizer::new(4, 3);
+        q.compress(&mut lossy);
+        let p = Payload::qbits_from(&lossy, 4, q.chunk);
+        let decoded = p.decode().unwrap();
+        for (&a, &b) in lossy.iter().zip(&decoded) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn topk_payload_round_trips_and_keeps_nominal() {
+        let mut data = randvec(500, 5);
+        let mut t = TopK::new(0.05);
+        let nominal = t.compress(&mut data);
+        let p = Payload::topk_from(&data, nominal);
+        assert_eq!(p.decode().unwrap(), data);
+        assert_eq!(p.nominal_bytes(), nominal);
+    }
+
+    #[test]
+    fn dense_nominal_matches_ledger_unit() {
+        let p = Payload::Dense(vec![0.0; 128]);
+        assert_eq!(p.nominal_bytes(), 512);
+        assert_eq!(p.len(), 128);
+    }
+
+    #[test]
+    fn update_stream_seed_separates_messages() {
+        let mut seen = std::collections::BTreeSet::new();
+        for k in [6usize, 12, 18] {
+            for g in 0..4 {
+                for c in 0..8 {
+                    seen.insert(update_stream_seed(1, k, g, c));
+                }
+            }
+        }
+        assert_eq!(seen.len(), 3 * 4 * 8, "stream seeds must be distinct");
+        // and deterministic
+        assert_eq!(update_stream_seed(9, 6, 1, 2), update_stream_seed(9, 6, 1, 2));
+    }
+
+    #[test]
+    fn config_survives_the_wire() {
+        let cfg = RunConfig {
+            model: "femnist_cnn".into(),
+            dataset: DatasetKind::Femnist,
+            algorithm: Algorithm::Prox { mu: 0.05 },
+            policy: Policy::fedlama(10, 4),
+            partition: PartitionKind::Dirichlet { alpha: 0.3 },
+            n_clients: 24,
+            active_ratio: 0.25,
+            samples: 128,
+            lr: 0.06,
+            warmup_rounds: 3,
+            iterations: 240,
+            seed: 99,
+            threads: 4,
+            use_chunk: false,
+            hetero_local_steps: true,
+            compressor: "q8".into(),
+            ..RunConfig::default()
+        };
+        let msg = Message::Configure(Configure {
+            worker_id: 1,
+            n_workers: 3,
+            shard: vec![1, 4, 7],
+            cfg: cfg.clone(),
+        });
+        let (decoded, used) = Message::decode(&msg.to_frame()).unwrap();
+        assert_eq!(used, msg.to_frame().len());
+        let Message::Configure(c) = decoded else { panic!("wrong kind") };
+        assert_eq!(c.worker_id, 1);
+        assert_eq!(c.n_workers, 3);
+        assert_eq!(c.shard, vec![1, 4, 7]);
+        // the worker-relevant subset matches field by field
+        assert_eq!(c.cfg.model, cfg.model);
+        assert_eq!(c.cfg.dataset, cfg.dataset);
+        assert_eq!(c.cfg.algorithm, cfg.algorithm);
+        assert_eq!(c.cfg.policy, cfg.policy);
+        assert_eq!(c.cfg.partition, cfg.partition);
+        assert_eq!(c.cfg.n_clients, cfg.n_clients);
+        assert_eq!(c.cfg.active_ratio, cfg.active_ratio);
+        assert_eq!(c.cfg.samples, cfg.samples);
+        assert_eq!(c.cfg.lr, cfg.lr);
+        assert_eq!(c.cfg.warmup_rounds, cfg.warmup_rounds);
+        assert_eq!(c.cfg.iterations, cfg.iterations);
+        assert_eq!(c.cfg.seed, cfg.seed);
+        assert_eq!(c.cfg.threads, cfg.threads);
+        assert_eq!(c.cfg.use_chunk, cfg.use_chunk);
+        assert_eq!(c.cfg.hetero_local_steps, cfg.hetero_local_steps);
+        assert_eq!(c.cfg.compressor, cfg.compressor);
+    }
+}

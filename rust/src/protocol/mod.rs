@@ -1,0 +1,48 @@
+//! The federation protocol: Algorithm 1/2 as a message-passing API.
+//!
+//! The paper's training loop is, at heart, a protocol: clients push layer
+//! updates on per-layer intervals, the server replies with aggregated
+//! layers and adjusted intervals.  This subsystem makes that protocol
+//! explicit and serializable so the federation can span processes (and,
+//! eventually, machines) without touching the numerics:
+//!
+//!   - [`messages`] — the typed message set (`RoundAssignment`,
+//!     `LayerUpdate` with dense / q-bit / top-k payloads, `SyncDecision`,
+//!     join/heartbeat/shutdown) and their wire schemas.
+//!   - [`wire`] — the versioned, length-prefixed, CRC-checked codec
+//!     (hand-rolled little-endian, no serde).
+//!   - [`core`] — [`CoordinatorCore`], the pure server state machine
+//!     (schedule, ledger, sampler, global params; zero model compute,
+//!     zero I/O).
+//!   - [`participant`] — [`Participant`], the compute-owning client-shard
+//!     role (backend, client states, local global replica).
+//!   - [`transport`] — the [`Transport`] seam plus the in-proc
+//!     implementation (the rewritten single-process path).
+//!   - [`process`] — [`ProcessTransport`]: N `fedlama worker`
+//!     subprocesses over stdio pipes.
+//!   - [`worker`] — the worker subcommand's serve loop.
+//!
+//! Determinism is the design constraint throughout: client RNG streams
+//! are keyed by global client id, compression streams by (seed, k, group,
+//! client), shards rebuild their data partition from the seed, and the
+//! core orders every cross-client reduction by the active list — so
+//! in-proc, 2-worker, and N-worker runs are bit-identical (asserted by
+//! `tests/process_transport.rs`).
+
+pub mod core;
+pub mod messages;
+pub mod participant;
+pub mod process;
+pub mod transport;
+pub mod wire;
+pub mod worker;
+
+pub use self::core::{BlockOutcome, CoordinatorCore};
+pub use messages::{
+    BlockDone, Configure, Heartbeat, Hello, LayerUpdate, Message, Payload, RoundAssignment,
+    SyncDecision,
+};
+pub use participant::Participant;
+pub use process::{worker_exe, ProcessTransport};
+pub use transport::{BlockResult, InProcTransport, Transport};
+pub use wire::WIRE_VERSION;

@@ -1,0 +1,355 @@
+//! The participant: a compute-owning shard of the client fleet.
+//!
+//! A `Participant` is the xaynet-style worker role: it owns a
+//! `ComputeBackend`, its shard of `ClientState`s, the (deterministically
+//! reconstructed) data partition and generator, and a local replica of the
+//! global model that every `SyncDecision` keeps current.  It answers
+//! `RoundAssignment`s by advancing its active clients `gap` local steps
+//! (fanned across `runtime::cluster` worker threads) and emitting one
+//! `LayerUpdate` per due group per active client; it never sees the
+//! schedule, the ledger, or other participants' clients.
+//!
+//! The in-proc transport wraps a single participant owning every client;
+//! the multi-process transport runs one per `fedlama worker` subprocess.
+//! Either way the numeric stream is identical: client RNGs are keyed by
+//! global client id, compression by (seed, k, group, client), and all
+//! cross-client reductions happen on the coordinator.
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::clients::ClientState;
+use crate::comm::Spec;
+use crate::config::{Algorithm, RunConfig};
+use crate::data::{partition_for, ClientData, Generator, Partition};
+use crate::runtime::{cluster, ComputeBackend, HostTensor};
+
+use super::messages::{
+    encode_tensor, update_stream_seed, LayerUpdate, RoundAssignment, SyncDecision,
+};
+
+pub struct Participant {
+    pub worker_id: usize,
+    cfg: RunConfig,
+    backend: Arc<dyn ComputeBackend>,
+    gen: Generator,
+    pub partition: Partition,
+    /// Global client ids this participant owns (sorted).
+    shard: Vec<usize>,
+    in_shard: Vec<bool>,
+    /// Full-fleet indexing; non-shard slots hold placeholders.
+    clients: Vec<ClientState>,
+    /// Local replica of the global model (kept current by decisions).
+    pub global: Vec<HostTensor>,
+    /// SCAFFOLD server control variate (in-proc transport only).
+    server_control: Option<Vec<HostTensor>>,
+    compressor: Spec,
+    compress_enabled: bool,
+}
+
+impl Participant {
+    /// Build a participant owning `shard` (global client ids).  The
+    /// partition, generator, initial global model, and client RNG streams
+    /// are all derived from `cfg` — identical across every process that
+    /// constructs from the same config.
+    pub fn new(
+        cfg: &RunConfig,
+        backend: Arc<dyn ComputeBackend>,
+        worker_id: usize,
+        shard: Vec<usize>,
+    ) -> Result<Participant> {
+        let global = backend.init_params(cfg.seed as u32)?;
+        let partition = partition_for(cfg);
+        Self::with_state(cfg, backend, worker_id, shard, global, partition)
+    }
+
+    /// Like [`Participant::new`] but adopting an already-built initial
+    /// global model and partition (the in-proc coordinator shares the ones
+    /// it constructed for the core instead of deriving them twice).  Both
+    /// MUST equal what `new` would derive from `cfg`.
+    pub fn with_state(
+        cfg: &RunConfig,
+        backend: Arc<dyn ComputeBackend>,
+        worker_id: usize,
+        shard: Vec<usize>,
+        global: Vec<HostTensor>,
+        partition: Partition,
+    ) -> Result<Participant> {
+        let compressor = Spec::parse(&cfg.compressor)
+            .ok_or_else(|| anyhow::anyhow!("unknown compressor {:?}", cfg.compressor))?;
+        let mut in_shard = vec![false; cfg.n_clients];
+        for &ci in &shard {
+            anyhow::ensure!(ci < cfg.n_clients, "shard client {ci} >= n_clients");
+            in_shard[ci] = true;
+        }
+        let clients = (0..cfg.n_clients)
+            .map(|i| {
+                if in_shard[i] {
+                    ClientState::new(i, global.clone(), cfg.seed)
+                } else {
+                    ClientState::placeholder()
+                }
+            })
+            .collect();
+        Ok(Participant {
+            worker_id,
+            gen: Generator::new(cfg.dataset, cfg.seed),
+            partition,
+            shard,
+            in_shard,
+            clients,
+            global,
+            server_control: None,
+            compressor,
+            compress_enabled: cfg.compressor != "dense",
+            backend,
+            cfg: cfg.clone(),
+        })
+    }
+
+    pub fn shard(&self) -> &[usize] {
+        &self.shard
+    }
+
+    pub fn clients(&self) -> &[ClientState] {
+        &self.clients
+    }
+
+    pub fn backend(&self) -> &dyn ComputeBackend {
+        self.backend.as_ref()
+    }
+
+    /// Cumulative compute seconds inside this participant's backend.
+    pub fn compute_secs(&self) -> f64 {
+        self.backend.stats_total_secs()
+    }
+
+    /// Worker threads the local-training fan-out will use (see
+    /// `Coordinator::effective_threads`).
+    pub fn effective_threads(&self) -> usize {
+        if self.backend.as_parallel().is_none() {
+            return 1;
+        }
+        if self.cfg.threads == 0 {
+            crate::util::pool::default_threads()
+        } else {
+            self.cfg.threads
+        }
+    }
+
+    /// The shard's members of an active set, in active order.
+    fn mine(&self, active: &[usize]) -> Vec<usize> {
+        active.iter().copied().filter(|&ci| self.in_shard[ci]).collect()
+    }
+
+    /// Handle one training block: returns ((client, mean loss) pairs in
+    /// active order, layer updates for every due group x owned active
+    /// client).
+    pub fn handle_assignment(
+        &mut self,
+        a: &RoundAssignment,
+    ) -> Result<(Vec<(usize, f64)>, Vec<LayerUpdate>)> {
+        let mine = self.mine(&a.active);
+        if a.new_round {
+            self.begin_round(&mine);
+        }
+        let losses = self.run_local_block(&mine, a.gap, a.lr)?;
+        let mut updates = Vec::with_capacity(a.due_groups.len() * mine.len());
+        for &g in &a.due_groups {
+            for &ci in &mine {
+                updates.push(self.encode_update(a.k, g, ci));
+            }
+        }
+        Ok((mine.iter().copied().zip(losses).collect(), updates))
+    }
+
+    /// Apply an aggregation decision: refresh the global replica and
+    /// broadcast the new group params into the owned active clients.
+    pub fn apply_decision(&mut self, d: &SyncDecision, active: &[usize]) -> Result<()> {
+        let groups = &self.backend.manifest().groups;
+        anyhow::ensure!(d.group < groups.len(), "decision for unknown group {}", d.group);
+        let group = groups[d.group].clone();
+        anyhow::ensure!(
+            d.new_params.len() == group.params.len(),
+            "decision for group {} carries {} tensors, expected {}",
+            d.group,
+            d.new_params.len(),
+            group.params.len()
+        );
+        for (ti, &t) in group.params.iter().enumerate() {
+            anyhow::ensure!(
+                d.new_params[ti].len() == self.global[t].data.len(),
+                "decision tensor {ti} length {} != {}",
+                d.new_params[ti].len(),
+                self.global[t].data.len()
+            );
+            self.global[t].data.copy_from_slice(&d.new_params[ti]);
+            for &ci in active {
+                if self.in_shard[ci] {
+                    self.clients[ci].params[t].data.copy_from_slice(&d.new_params[ti]);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Round-start bookkeeping for the owned active clients: download the
+    /// global replica, reset budgets, take algorithm-specific snapshots.
+    fn begin_round(&mut self, mine: &[usize]) {
+        let hetero = self.cfg.hetero_local_steps;
+        let round_len = self.cfg.policy.round_len();
+        let mean_n = self.partition.total as f64 / self.cfg.n_clients as f64;
+        for &ci in mine {
+            let need_ref = matches!(self.cfg.algorithm, Algorithm::Prox { .. } | Algorithm::Nova);
+            let frac = self.partition.clients[ci].total as f64 / mean_n;
+            let c = &mut self.clients[ci];
+            c.pull(&self.global);
+            c.steps_in_round = 0;
+            c.local_budget = if hetero {
+                ((round_len as f64 * frac).round() as usize).clamp(1, round_len)
+            } else {
+                usize::MAX
+            };
+            if need_ref {
+                c.snapshot_round_start();
+            }
+            if self.cfg.algorithm == Algorithm::Scaffold && c.control.is_none() {
+                c.control =
+                    Some(self.global.iter().map(|t| HostTensor::zeros(&t.shape)).collect());
+            }
+        }
+        if self.cfg.algorithm == Algorithm::Scaffold && self.server_control.is_none() {
+            self.server_control =
+                Some(self.global.iter().map(|t| HostTensor::zeros(&t.shape)).collect());
+        }
+    }
+
+    /// Advance the owned active clients `gap` local steps via the cluster
+    /// runtime (clients temporarily moved out for disjoint `&mut` access).
+    /// Returns per-client mean losses in `mine` order (NaN = budget
+    /// exhausted).
+    fn run_local_block(&mut self, mine: &[usize], gap: usize, lr: f32) -> Result<Vec<f64>> {
+        let mut moved: Vec<ClientState> = mine
+            .iter()
+            .map(|&ci| std::mem::replace(&mut self.clients[ci], ClientState::placeholder()))
+            .collect();
+        let parts: Vec<&ClientData> =
+            mine.iter().map(|&ci| &self.partition.clients[ci]).collect();
+        let ctx = cluster::StepCtx {
+            gen: &self.gen,
+            parts: &parts,
+            algorithm: self.cfg.algorithm,
+            server_control: self.server_control.as_deref(),
+            gap,
+            lr,
+            use_chunk: self.cfg.use_chunk,
+        };
+        let result =
+            cluster::advance(self.backend.as_ref(), &ctx, &mut moved, self.effective_threads());
+        for (&ci, c) in mine.iter().zip(moved) {
+            self.clients[ci] = c;
+        }
+        result
+    }
+
+    /// Produce one client's uplink for one group: copy its group tensors,
+    /// apply the configured lossy transform on the message-derived RNG
+    /// stream, and wrap as payloads.
+    fn encode_update(&self, k: usize, g: usize, ci: usize) -> LayerUpdate {
+        let group = &self.backend.manifest().groups[g];
+        let tensors = group
+            .params
+            .iter()
+            .enumerate()
+            .map(|(ti, &t)| {
+                let mut buf = self.clients[ci].params[t].data.clone();
+                if self.compress_enabled {
+                    // one stream per (message, tensor): transport-invariant
+                    // and uncorrelated across the group's tensors
+                    let seed = self.cfg.seed ^ (ti as u64).wrapping_mul(0xD6E8_FEB8_6659_FD93);
+                    let stream = update_stream_seed(seed, k, g, ci);
+                    encode_tensor(self.compressor, stream, &mut buf)
+                } else {
+                    super::messages::Payload::Dense(buf)
+                }
+            })
+            .collect();
+        LayerUpdate { k, group: g, client: ci, tensors }
+    }
+
+    // -----------------------------------------------------------------------
+    // Server-side-state baselines (in-proc transport only): these read or
+    // reduce across client states, which the wire protocol does not ship.
+    // -----------------------------------------------------------------------
+
+    /// FedNova normalized averaging (Wang et al. 2020) over the owned
+    /// clients — requires owning *all* active clients.  Mutates the global
+    /// replica and pulls it into the active clients; returns the new
+    /// global for the coordinator core to adopt.
+    pub fn nova_aggregate(&mut self, active: &[usize]) -> Result<Vec<HostTensor>> {
+        let weights = self.partition.active_weights(active);
+        let tau_eff: f64 = active
+            .iter()
+            .zip(&weights)
+            .map(|(&ci, &w)| w as f64 * self.clients[ci].steps_in_round as f64)
+            .sum();
+        for t in 0..self.global.len() {
+            let len = self.global[t].data.len();
+            let mut delta = vec![0.0f64; len];
+            for (&ci, &w) in active.iter().zip(&weights) {
+                let a_i = self.clients[ci].steps_in_round.max(1) as f64;
+                let start = self.clients[ci]
+                    .round_start
+                    .as_ref()
+                    .context("FedNova requires round_start")?;
+                let x = &self.clients[ci].params[t].data;
+                let s = &start[t].data;
+                for j in 0..len {
+                    delta[j] += w as f64 * (x[j] - s[j]) as f64 / a_i;
+                }
+            }
+            let gdata = &mut self.global[t].data;
+            for j in 0..len {
+                gdata[j] += (tau_eff * delta[j]) as f32;
+            }
+        }
+        for &ci in active {
+            let global = std::mem::take(&mut self.global);
+            self.clients[ci].pull(&global);
+            self.global = global;
+        }
+        Ok(self.global.clone())
+    }
+
+    /// SCAFFOLD option-II control update (before aggregation):
+    /// c_i+ = c_i - c + (x_start - x_i) / (a_i * lr);  c += sum dc_i / N.
+    pub fn scaffold_update_controls(
+        &mut self,
+        active: &[usize],
+        round_len: usize,
+        lr: f32,
+    ) -> Result<()> {
+        let n = self.cfg.n_clients as f32;
+        let server = self.server_control.as_mut().context("server control")?;
+        for &ci in active {
+            let a_i = self.clients[ci].steps_in_round.max(1).min(round_len) as f32;
+            let scale = 1.0 / (a_i * lr);
+            let client = &mut self.clients[ci];
+            let control = client.control.as_mut().context("client control")?;
+            for t in 0..control.len() {
+                let x = &client.params[t].data;
+                let g = &self.global[t].data; // x_start == global at round start
+                let c_t = &mut control[t].data;
+                let s_t = &mut server[t].data;
+                for j in 0..c_t.len() {
+                    let c_new = c_t[j] - s_t[j] + scale * (g[j] - x[j]);
+                    let dc = c_new - c_t[j];
+                    c_t[j] = c_new;
+                    s_t[j] += dc / n;
+                }
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,208 @@
+//! Multi-process transport: `fedlama worker` subprocesses over stdio.
+//!
+//! The coordinator spawns N copies of its own executable with the `worker`
+//! subcommand, shards the client fleet round-robin across them, and drives
+//! the protocol over each child's stdin/stdout with the length-prefixed
+//! wire codec.  stderr passes through for diagnostics.
+//!
+//! Session lifecycle per worker:
+//!
+//! ```text
+//!   spawn -> Configure{worker_id, shard, cfg} -> Hello{version, shard_len}
+//!         -> Heartbeat ping/echo (liveness + codec smoke)
+//!         -> per block: Assignment -> (Update* Done) -> Decision*
+//!         -> Shutdown -> wait(exit 0)
+//! ```
+//!
+//! Pipes are FIFO, so a worker always applies block k's decisions before
+//! it sees block k+1's assignment — no extra barrier needed.  Frames are
+//! written eagerly and flushed before every read.
+
+use std::io::{BufReader, BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::RunConfig;
+
+use super::messages::{Configure, Heartbeat, Message, RoundAssignment, SyncDecision};
+use super::transport::{merge_losses, BlockResult, Transport};
+use super::wire::WIRE_VERSION;
+
+/// Resolve the executable to spawn workers from: `FEDLAMA_WORKER_EXE`
+/// when set (tests point it at the built binary), else this process's
+/// own image.
+///
+/// The current-exe fallback assumes the running image understands the
+/// `worker` subcommand (true for the `fedlama` CLI).  Any other host
+/// binary that enables `workers > 0` must set `FEDLAMA_WORKER_EXE` to a
+/// fedlama binary: a spawned image that doesn't speak the protocol fails
+/// the `Hello` handshake (bad magic on its first stdout bytes, or EOF
+/// when it exits) — only a long-running, stdout-silent image would make
+/// the handshake block.
+pub fn worker_exe() -> Result<PathBuf> {
+    if let Some(p) = std::env::var_os("FEDLAMA_WORKER_EXE") {
+        return Ok(PathBuf::from(p));
+    }
+    std::env::current_exe().context("resolving current executable for worker spawn")
+}
+
+struct Worker {
+    id: usize,
+    child: Child,
+    tx: BufWriter<ChildStdin>,
+    rx: BufReader<ChildStdout>,
+    compute_secs: f64,
+}
+
+impl Worker {
+    fn send(&mut self, msg: &Message) -> Result<()> {
+        msg.write_to(&mut self.tx).with_context(|| format!("to worker {}", self.id))
+    }
+    fn flush(&mut self) -> Result<()> {
+        self.tx.flush().with_context(|| format!("flushing pipe to worker {}", self.id))
+    }
+    fn recv(&mut self) -> Result<Message> {
+        Message::read_from(&mut self.rx).with_context(|| format!("from worker {}", self.id))
+    }
+}
+
+pub struct ProcessTransport {
+    workers: Vec<Worker>,
+}
+
+impl ProcessTransport {
+    /// Spawn `n` workers from `exe`, shard `cfg.n_clients` clients
+    /// round-robin, and complete the join handshake with each.
+    pub fn spawn(exe: &Path, cfg: &RunConfig, n: usize) -> Result<ProcessTransport> {
+        anyhow::ensure!(n > 0, "ProcessTransport needs at least one worker");
+        let mut workers = Vec::with_capacity(n);
+        for w in 0..n {
+            let shard: Vec<usize> = (0..cfg.n_clients).filter(|c| c % n == w).collect();
+            let mut child = Command::new(exe)
+                .arg("worker")
+                .stdin(Stdio::piped())
+                .stdout(Stdio::piped())
+                .stderr(Stdio::inherit())
+                .spawn()
+                .with_context(|| format!("spawning worker {w} from {}", exe.display()))?;
+            let tx = BufWriter::new(child.stdin.take().context("worker stdin")?);
+            let rx = BufReader::new(child.stdout.take().context("worker stdout")?);
+            let mut worker = Worker { id: w, child, tx, rx, compute_secs: 0.0 };
+            let shard_len = shard.len();
+            worker.send(&Message::Configure(Configure {
+                worker_id: w,
+                n_workers: n,
+                shard,
+                cfg: cfg.clone(),
+            }))?;
+            worker.flush()?;
+            match worker.recv()? {
+                Message::Hello(h) => {
+                    anyhow::ensure!(
+                        h.version == WIRE_VERSION,
+                        "worker {w} speaks protocol v{}, coordinator v{WIRE_VERSION}",
+                        h.version
+                    );
+                    anyhow::ensure!(h.worker_id == w, "worker id mismatch: {}", h.worker_id);
+                    anyhow::ensure!(
+                        h.shard_len == shard_len,
+                        "worker {w} claims {} clients, assigned {shard_len}",
+                        h.shard_len
+                    );
+                }
+                other => bail!("worker {w}: expected Hello, got {}", other.kind_name()),
+            }
+            // liveness ping: exercises both pipe directions before training
+            let nonce = 0xFED_1A0A ^ w as u64;
+            worker.send(&Message::Heartbeat(Heartbeat { nonce }))?;
+            worker.flush()?;
+            match worker.recv()? {
+                Message::Heartbeat(h) if h.nonce == nonce => {}
+                other => bail!("worker {w}: bad heartbeat echo ({})", other.kind_name()),
+            }
+            workers.push(worker);
+        }
+        Ok(ProcessTransport { workers })
+    }
+}
+
+impl Transport for ProcessTransport {
+    fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn run_block(&mut self, a: &RoundAssignment) -> Result<BlockResult> {
+        let msg = Message::Assignment(a.clone());
+        for w in &mut self.workers {
+            w.send(&msg)?;
+            w.flush()?;
+        }
+        let mut pairs = Vec::with_capacity(a.active.len());
+        let mut updates = Vec::new();
+        for w in &mut self.workers {
+            loop {
+                match w.recv()? {
+                    Message::Update(u) => updates.push(u),
+                    Message::Done(d) => {
+                        anyhow::ensure!(
+                            d.k == a.k,
+                            "worker {} finished block k={}, expected k={}",
+                            w.id,
+                            d.k,
+                            a.k
+                        );
+                        pairs.extend(d.losses);
+                        w.compute_secs = d.compute_secs;
+                        break;
+                    }
+                    other => bail!("worker {}: unexpected {} mid-block", w.id, other.kind_name()),
+                }
+            }
+        }
+        Ok(BlockResult { losses: merge_losses(&a.active, &pairs)?, updates })
+    }
+
+    fn broadcast_decision(&mut self, d: &SyncDecision, _active: &[usize]) -> Result<()> {
+        // serialize once, fan the bytes out — decisions carry whole dense
+        // groups, so per-worker re-encoding would be the expensive part
+        let frame = Message::Decision(d.clone()).to_frame();
+        for w in &mut self.workers {
+            w.tx
+                .write_all(&frame)
+                .with_context(|| format!("sending SyncDecision to worker {}", w.id))?;
+            w.flush()?;
+        }
+        Ok(())
+    }
+
+    fn remote_compute_secs(&self) -> f64 {
+        self.workers.iter().map(|w| w.compute_secs).sum()
+    }
+
+    fn shutdown(&mut self) -> Result<()> {
+        for w in &mut self.workers {
+            // best effort: the worker may already have exited on error
+            let _ = w.send(&Message::Shutdown);
+            let _ = w.flush();
+        }
+        for w in &mut self.workers {
+            let status = w.child.wait().with_context(|| format!("waiting for worker {}", w.id))?;
+            anyhow::ensure!(status.success(), "worker {} exited with {status}", w.id);
+        }
+        Ok(())
+    }
+}
+
+impl Drop for ProcessTransport {
+    fn drop(&mut self) {
+        // if shutdown() was not reached (error path), don't leave orphans
+        for w in &mut self.workers {
+            if matches!(w.child.try_wait(), Ok(None)) {
+                let _ = w.child.kill();
+                let _ = w.child.wait();
+            }
+        }
+    }
+}

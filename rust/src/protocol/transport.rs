@@ -1,0 +1,132 @@
+//! The transport seam between the coordinator core and its participants.
+//!
+//! A `Transport` delivers `RoundAssignment`s to every participant, gathers
+//! their block results (losses + layer updates), and broadcasts
+//! `SyncDecision`s back.  Two implementations:
+//!
+//!   - [`InProcTransport`] — a direct method-call wrapper around one
+//!     `Participant` owning the whole fleet.  No serialization; this is
+//!     the rewritten single-process path and reproduces the historical
+//!     coordinator bit-for-bit.
+//!   - [`super::process::ProcessTransport`] — N `fedlama worker`
+//!     subprocesses over stdio pipes speaking the length-prefixed wire
+//!     codec, each owning a client shard.
+//!
+//! Determinism contract: whatever the transport, `run_block` returns
+//! losses in *active order* and the full update set for every due group;
+//! the core then orders rows by the active list, so worker interleaving
+//! can never leak into the numerics.
+
+use anyhow::{Context, Result};
+
+use super::messages::{LayerUpdate, RoundAssignment, SyncDecision};
+use super::participant::Participant;
+
+/// Merged result of one training block across all participants.
+pub struct BlockResult {
+    /// Per-client mean losses in `assignment.active` order.
+    pub losses: Vec<f64>,
+    /// Every `LayerUpdate` for the block's due groups (any order; the
+    /// core re-orders by the active list).
+    pub updates: Vec<LayerUpdate>,
+}
+
+/// Merge (client, loss) pairs from participants into active order,
+/// erroring on missing or duplicate clients.
+pub fn merge_losses(active: &[usize], pairs: &[(usize, f64)]) -> Result<Vec<f64>> {
+    let mut by_client: Vec<Option<f64>> = vec![None; active.len()];
+    for &(ci, loss) in pairs {
+        let slot = active
+            .iter()
+            .position(|&a| a == ci)
+            .with_context(|| format!("loss reported for inactive client {ci}"))?;
+        anyhow::ensure!(by_client[slot].is_none(), "duplicate loss for client {ci}");
+        by_client[slot] = Some(loss);
+    }
+    by_client
+        .into_iter()
+        .enumerate()
+        .map(|(i, l)| l.with_context(|| format!("no loss reported for client {}", active[i])))
+        .collect()
+}
+
+pub trait Transport {
+    /// Number of participant endpoints behind this transport.
+    fn workers(&self) -> usize;
+
+    /// Deliver the assignment, run the block on every participant, and
+    /// return the merged result.
+    fn run_block(&mut self, a: &RoundAssignment) -> Result<BlockResult>;
+
+    /// Broadcast an aggregation decision to every participant.
+    /// `active` is the assignment's active set (the broadcast targets).
+    fn broadcast_decision(&mut self, d: &SyncDecision, active: &[usize]) -> Result<()>;
+
+    /// Compute seconds accumulated inside remote participants (0 when the
+    /// participant shares the driver's backend, as in-proc does).
+    fn remote_compute_secs(&self) -> f64 {
+        0.0
+    }
+
+    /// Direct access to the single in-proc participant, when this
+    /// transport has one.  Server-side-state baselines (SCAFFOLD,
+    /// FedNova) require it; config validation keeps them off multi-process
+    /// runs.
+    fn in_proc(&mut self) -> Option<&mut Participant> {
+        None
+    }
+
+    /// Tear the session down (terminate workers, close pipes).
+    fn shutdown(&mut self) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Single-process transport: one participant, called directly.
+pub struct InProcTransport<'a> {
+    participant: &'a mut Participant,
+}
+
+impl<'a> InProcTransport<'a> {
+    pub fn new(participant: &'a mut Participant) -> InProcTransport<'a> {
+        InProcTransport { participant }
+    }
+}
+
+impl Transport for InProcTransport<'_> {
+    fn workers(&self) -> usize {
+        1
+    }
+
+    fn run_block(&mut self, a: &RoundAssignment) -> Result<BlockResult> {
+        let (pairs, updates) = self.participant.handle_assignment(a)?;
+        Ok(BlockResult { losses: merge_losses(&a.active, &pairs)?, updates })
+    }
+
+    fn broadcast_decision(&mut self, d: &SyncDecision, active: &[usize]) -> Result<()> {
+        self.participant.apply_decision(d, active)
+    }
+
+    fn in_proc(&mut self) -> Option<&mut Participant> {
+        Some(&mut *self.participant)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_losses_orders_and_validates() {
+        let active = [2usize, 5, 9];
+        let pairs = [(9usize, 3.0), (2, 1.0), (5, 2.0)];
+        assert_eq!(merge_losses(&active, &pairs).unwrap(), vec![1.0, 2.0, 3.0]);
+        // NaN losses survive the merge (budget-exhausted clients)
+        let pairs = [(2usize, f64::NAN), (5, 2.0), (9, 3.0)];
+        assert!(merge_losses(&active, &pairs).unwrap()[0].is_nan());
+        // missing / duplicate / inactive all rejected
+        assert!(merge_losses(&active, &[(2, 1.0), (5, 2.0)]).is_err());
+        assert!(merge_losses(&active, &[(2, 1.0), (2, 1.5), (5, 2.0), (9, 3.0)]).is_err());
+        assert!(merge_losses(&active, &[(1, 1.0), (5, 2.0), (9, 3.0)]).is_err());
+    }
+}

@@ -1,0 +1,394 @@
+//! Versioned, length-prefixed wire codec for the federation protocol.
+//!
+//! Hand-rolled little-endian framing in the spirit of the repo's other
+//! binary formats — no serde, no derive macros, every byte accounted for:
+//!
+//! ```text
+//!   frame := magic(2) version(1) kind(1) len(4, LE) body(len) crc32(4, LE)
+//! ```
+//!
+//! `len` counts body bytes only; the CRC-32 (IEEE) covers the body, so a
+//! flipped bit anywhere in the payload is rejected, and a truncated stream
+//! fails the length/`read_exact` checks.  The version byte gates protocol
+//! evolution: a coordinator and a worker from different builds refuse to
+//! talk rather than mis-decode.
+//!
+//! Primitives (`Enc`/`Dec`) are deliberately dumb: fixed-width LE integers,
+//! IEEE-754 bit-pattern floats (NaN losses survive the trip), and
+//! u32-length-prefixed sequences.  Everything higher-level (message
+//! schemas) lives in `protocol::messages`.
+
+use std::io::{Read, Write};
+use std::sync::OnceLock;
+
+use anyhow::{bail, ensure, Context, Result};
+
+/// Protocol wire version; bump on any frame or schema change.
+pub const WIRE_VERSION: u8 = 1;
+
+/// Frame magic: distinguishes protocol traffic from stray stdout bytes.
+pub const MAGIC: [u8; 2] = [0xF7, 0x1A];
+
+/// Upper bound on a single frame body; rejects absurd lengths from
+/// corrupted headers before any allocation happens.
+pub const MAX_FRAME: usize = 1 << 30;
+
+const HEADER_LEN: usize = 8; // magic(2) + version(1) + kind(1) + len(4)
+
+/// CRC-32 (IEEE 802.3, reflected) over `data`.
+pub fn crc32(data: &[u8]) -> u32 {
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, slot) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *slot = c;
+        }
+        t
+    });
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+// ---------------------------------------------------------------------------
+// Encoder
+// ---------------------------------------------------------------------------
+
+/// Append-only body encoder.
+#[derive(Default)]
+pub struct Enc {
+    pub buf: Vec<u8>,
+}
+
+impl Enc {
+    pub fn new() -> Enc {
+        Enc::default()
+    }
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    pub fn bool(&mut self, v: bool) {
+        self.buf.push(v as u8);
+    }
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+    pub fn bytes(&mut self, b: &[u8]) {
+        self.u32(b.len() as u32);
+        self.buf.extend_from_slice(b);
+    }
+    pub fn f32s(&mut self, v: &[f32]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    pub fn u16s(&mut self, v: &[u16]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    pub fn u32s(&mut self, v: &[u32]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    pub fn usizes(&mut self, v: &[usize]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.u64(x as u64);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Decoder
+// ---------------------------------------------------------------------------
+
+/// Bounds-checked body decoder; every `take_*` errors on overrun instead of
+/// panicking, so corrupt frames surface as `Err`, never UB or aborts.
+pub struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    pub fn new(buf: &'a [u8]) -> Dec<'a> {
+        Dec { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.remaining() >= n, "frame underrun: need {n} bytes, have {}", self.remaining());
+        let whole: &'a [u8] = self.buf;
+        let s = &whole[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    pub fn bool(&mut self) -> Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            v => bail!("bad bool byte {v}"),
+        }
+    }
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    pub fn usize(&mut self) -> Result<usize> {
+        let v = self.u64()?;
+        ensure!(v <= usize::MAX as u64, "usize overflow {v}");
+        Ok(v as usize)
+    }
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Sequence length prefix, sanity-bounded by the bytes actually left so
+    /// a corrupt length cannot trigger a huge allocation.
+    fn seq_len(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.u32()? as usize;
+        ensure!(
+            n.saturating_mul(elem_bytes) <= self.remaining(),
+            "sequence length {n} exceeds frame ({} bytes left)",
+            self.remaining()
+        );
+        Ok(n)
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.seq_len(1)?;
+        Ok(std::str::from_utf8(self.take(n)?).context("bad utf-8 string")?.to_string())
+    }
+    pub fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.seq_len(1)?;
+        Ok(self.take(n)?.to_vec())
+    }
+    pub fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.seq_len(4)?;
+        let raw = self.take(n * 4)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+    pub fn u16s(&mut self) -> Result<Vec<u16>> {
+        let n = self.seq_len(2)?;
+        let raw = self.take(n * 2)?;
+        Ok(raw.chunks_exact(2).map(|c| u16::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+    pub fn u32s(&mut self) -> Result<Vec<u32>> {
+        let n = self.seq_len(4)?;
+        let raw = self.take(n * 4)?;
+        Ok(raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+    pub fn usizes(&mut self) -> Result<Vec<usize>> {
+        let n = self.seq_len(8)?;
+        (0..n).map(|_| self.usize()).collect()
+    }
+
+    pub fn finish(self) -> Result<()> {
+        ensure!(self.remaining() == 0, "{} trailing bytes after message body", self.remaining());
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Framing
+// ---------------------------------------------------------------------------
+
+/// Wrap an encoded body into a full frame.
+pub fn frame(kind: u8, body: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + body.len() + 4);
+    out.extend_from_slice(&MAGIC);
+    out.push(WIRE_VERSION);
+    out.push(kind);
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.extend_from_slice(body);
+    out.extend_from_slice(&crc32(body).to_le_bytes());
+    out
+}
+
+/// Parse one frame from the head of `buf`; returns (kind, body, consumed).
+/// Errors on truncation, bad magic/version, oversized length, or CRC
+/// mismatch — a corrupt frame is never partially accepted.
+pub fn deframe(buf: &[u8]) -> Result<(u8, &[u8], usize)> {
+    ensure!(buf.len() >= HEADER_LEN, "truncated frame header ({} bytes)", buf.len());
+    ensure!(buf[0..2] == MAGIC, "bad frame magic {:02x}{:02x}", buf[0], buf[1]);
+    ensure!(
+        buf[2] == WIRE_VERSION,
+        "protocol version mismatch: peer speaks v{}, this build v{WIRE_VERSION}",
+        buf[2]
+    );
+    let kind = buf[3];
+    let len = u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize;
+    ensure!(len <= MAX_FRAME, "frame length {len} exceeds cap");
+    let total = HEADER_LEN + len + 4;
+    ensure!(buf.len() >= total, "truncated frame: header claims {len}B body, have {}", buf.len());
+    let body = &buf[HEADER_LEN..HEADER_LEN + len];
+    let want = u32::from_le_bytes(buf[HEADER_LEN + len..total].try_into().unwrap());
+    let got = crc32(body);
+    ensure!(want == got, "frame checksum mismatch: {want:08x} != {got:08x}");
+    Ok((kind, body, total))
+}
+
+/// Write one frame to a stream (does not flush; callers batch + flush).
+pub fn write_frame<W: Write>(w: &mut W, kind: u8, body: &[u8]) -> Result<()> {
+    w.write_all(&frame(kind, body)).context("writing protocol frame")
+}
+
+/// Read one full frame from a stream; returns (kind, body).
+pub fn read_frame<R: Read>(r: &mut R) -> Result<(u8, Vec<u8>)> {
+    let mut header = [0u8; HEADER_LEN];
+    r.read_exact(&mut header).context("reading protocol frame header")?;
+    ensure!(header[0..2] == MAGIC, "bad frame magic {:02x}{:02x}", header[0], header[1]);
+    ensure!(
+        header[2] == WIRE_VERSION,
+        "protocol version mismatch: peer speaks v{}, this build v{WIRE_VERSION}",
+        header[2]
+    );
+    let kind = header[3];
+    let len = u32::from_le_bytes(header[4..8].try_into().unwrap()) as usize;
+    ensure!(len <= MAX_FRAME, "frame length {len} exceeds cap");
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).context("reading protocol frame body")?;
+    let mut crc = [0u8; 4];
+    r.read_exact(&mut crc).context("reading protocol frame checksum")?;
+    let want = u32::from_le_bytes(crc);
+    let got = crc32(&body);
+    ensure!(want == got, "frame checksum mismatch: {want:08x} != {got:08x}");
+    Ok((kind, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vector() {
+        // the classic check value for "123456789"
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn primitives_round_trip() {
+        let mut e = Enc::new();
+        e.u8(7);
+        e.bool(true);
+        e.u32(0xDEAD_BEEF);
+        e.u64(u64::MAX);
+        e.usize(42);
+        e.f32(-0.0);
+        e.f64(f64::NAN);
+        e.str("fedlama");
+        e.f32s(&[1.5, -2.5]);
+        e.u16s(&[9, 65535]);
+        e.u32s(&[3]);
+        e.usizes(&[1, 2, 3]);
+        let mut d = Dec::new(&e.buf);
+        assert_eq!(d.u8().unwrap(), 7);
+        assert!(d.bool().unwrap());
+        assert_eq!(d.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(d.u64().unwrap(), u64::MAX);
+        assert_eq!(d.usize().unwrap(), 42);
+        assert_eq!(d.f32().unwrap().to_bits(), (-0.0f32).to_bits());
+        assert!(d.f64().unwrap().is_nan());
+        assert_eq!(d.str().unwrap(), "fedlama");
+        assert_eq!(d.f32s().unwrap(), vec![1.5, -2.5]);
+        assert_eq!(d.u16s().unwrap(), vec![9, 65535]);
+        assert_eq!(d.u32s().unwrap(), vec![3]);
+        assert_eq!(d.usizes().unwrap(), vec![1, 2, 3]);
+        d.finish().unwrap();
+    }
+
+    #[test]
+    fn decoder_rejects_overrun_and_trailing() {
+        let mut d = Dec::new(&[1, 2]);
+        assert!(d.u32().is_err());
+        let mut e = Enc::new();
+        e.u32(5); // claims 5 elements but provides none
+        assert!(Dec::new(&e.buf).f32s().is_err());
+        let d = Dec::new(&[0]);
+        assert!(d.finish().is_err());
+    }
+
+    #[test]
+    fn frame_round_trip_and_rejection() {
+        let body = b"hello protocol".to_vec();
+        let f = frame(4, &body);
+        let (kind, got, used) = deframe(&f).unwrap();
+        assert_eq!((kind, got, used), (4u8, body.as_slice(), f.len()));
+
+        // truncation at every prefix length fails
+        for cut in 0..f.len() {
+            assert!(deframe(&f[..cut]).is_err(), "accepted truncated frame at {cut}");
+        }
+        // any single flipped byte fails (magic, version, kind->crc, body, crc)
+        for i in 0..f.len() {
+            let mut bad = f.clone();
+            bad[i] ^= 0x01;
+            let r = deframe(&bad);
+            if i == 3 {
+                // kind byte is not covered by the crc; deframe accepts it and
+                // the message layer rejects the unknown kind instead.
+                assert!(r.is_ok());
+            } else {
+                assert!(r.is_err(), "accepted corrupt frame at byte {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn stream_io_round_trip() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 2, b"abc").unwrap();
+        write_frame(&mut buf, 9, b"").unwrap();
+        let mut cur = std::io::Cursor::new(buf);
+        assert_eq!(read_frame(&mut cur).unwrap(), (2, b"abc".to_vec()));
+        assert_eq!(read_frame(&mut cur).unwrap(), (9, Vec::new()));
+        assert!(read_frame(&mut cur).is_err(), "eof must error");
+    }
+
+    #[test]
+    fn version_mismatch_rejected() {
+        let mut f = frame(1, b"x");
+        f[2] = WIRE_VERSION + 1;
+        let err = format!("{:#}", deframe(&f).unwrap_err());
+        assert!(err.contains("version mismatch"), "{err}");
+    }
+}

@@ -1,0 +1,168 @@
+//! The `fedlama worker` subprocess: a participant speaking the wire
+//! protocol over stdin/stdout.
+//!
+//! The worker is almost stateless between messages: everything heavy
+//! (backend, partition, client shard) is rebuilt deterministically from
+//! the `Configure` frame, and the only cross-message state is the current
+//! assignment's active set (decisions broadcast after a block apply to
+//! that set).  Anything unexpected — codec error, protocol violation,
+//! compute failure — surfaces as a non-zero exit that the coordinator's
+//! `shutdown()` turns into a run error.
+
+use std::io::{Read, Write};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::EngineKind;
+use crate::runtime::{zoo, ComputeBackend};
+
+use super::messages::{BlockDone, Hello, Message};
+use super::participant::Participant;
+use super::wire::WIRE_VERSION;
+
+/// Serve one coordinator session over the given streams; returns when a
+/// `Shutdown` frame arrives.
+pub fn run<R: Read, W: Write>(mut rx: R, mut tx: W) -> Result<()> {
+    let conf = match Message::read_from(&mut rx).context("reading Configure")? {
+        Message::Configure(c) => c,
+        other => bail!("expected Configure, got {}", other.kind_name()),
+    };
+    let cfg = conf.cfg;
+    cfg.validate().context("worker received invalid config")?;
+    anyhow::ensure!(
+        cfg.engine == EngineKind::Native,
+        "worker processes support the native engine only"
+    );
+    let backend: Arc<dyn ComputeBackend> = Arc::new(
+        zoo::build(&cfg.model, cfg.dataset).context("building worker compute backend")?,
+    );
+    let mut p = Participant::new(&cfg, backend, conf.worker_id, conf.shard)?;
+    Message::Hello(Hello {
+        version: WIRE_VERSION,
+        worker_id: p.worker_id,
+        shard_len: p.shard().len(),
+    })
+    .write_to(&mut tx)?;
+    tx.flush().context("flushing Hello")?;
+
+    let mut last_active: Vec<usize> = Vec::new();
+    loop {
+        match Message::read_from(&mut rx)? {
+            Message::Assignment(a) => {
+                let (losses, updates) = p.handle_assignment(&a)?;
+                for u in updates {
+                    Message::Update(u).write_to(&mut tx)?;
+                }
+                Message::Done(BlockDone {
+                    worker_id: p.worker_id,
+                    k: a.k,
+                    losses,
+                    compute_secs: p.compute_secs(),
+                })
+                .write_to(&mut tx)?;
+                tx.flush().context("flushing block result")?;
+                last_active = a.active;
+            }
+            Message::Decision(d) => p.apply_decision(&d, &last_active)?,
+            Message::Heartbeat(h) => {
+                Message::Heartbeat(h).write_to(&mut tx)?;
+                tx.flush().context("flushing heartbeat echo")?;
+            }
+            Message::Shutdown => return Ok(()),
+            other => bail!("unexpected {} in worker loop", other.kind_name()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RunConfig;
+    use crate::protocol::messages::{Configure, Heartbeat};
+
+    /// Drive a worker loop fully in-memory: Configure -> Hello, heartbeat
+    /// echo, one assignment -> updates + done, decision, shutdown.
+    #[test]
+    fn worker_loop_speaks_the_protocol_in_memory() {
+        let cfg = RunConfig {
+            n_clients: 3,
+            samples: 32,
+            iterations: 12,
+            policy: crate::aggregation::Policy::fedavg(6),
+            warmup_rounds: 0,
+            ..RunConfig::default()
+        };
+        cfg.validate().unwrap();
+        let mut inbox: Vec<u8> = Vec::new();
+        let push = |inbox: &mut Vec<u8>, m: &Message| inbox.extend_from_slice(&m.to_frame());
+        push(
+            &mut inbox,
+            &Message::Configure(Configure {
+                worker_id: 0,
+                n_workers: 1,
+                shard: vec![0, 1, 2],
+                cfg: cfg.clone(),
+            }),
+        );
+        push(&mut inbox, &Message::Heartbeat(Heartbeat { nonce: 77 }));
+        let assignment = super::super::messages::RoundAssignment {
+            k: 6,
+            round: 0,
+            gap: 6,
+            lr: 0.1,
+            new_round: true,
+            active: vec![0, 1, 2],
+            due_groups: vec![0],
+        };
+        push(&mut inbox, &Message::Assignment(assignment));
+        push(&mut inbox, &Message::Shutdown);
+
+        let mut out: Vec<u8> = Vec::new();
+        run(std::io::Cursor::new(inbox), &mut out).unwrap();
+
+        // replies: Hello, Heartbeat echo, 3 Updates (group 0 x clients), Done
+        let mut cur = std::io::Cursor::new(out);
+        let Message::Hello(h) = Message::read_from(&mut cur).unwrap() else { panic!("hello") };
+        assert_eq!((h.version, h.worker_id, h.shard_len), (WIRE_VERSION, 0, 3));
+        let Message::Heartbeat(hb) = Message::read_from(&mut cur).unwrap() else {
+            panic!("heartbeat")
+        };
+        assert_eq!(hb.nonce, 77);
+        let mut updates = 0;
+        loop {
+            match Message::read_from(&mut cur).unwrap() {
+                Message::Update(u) => {
+                    assert_eq!(u.k, 6);
+                    assert_eq!(u.group, 0);
+                    updates += 1;
+                }
+                Message::Done(d) => {
+                    assert_eq!(d.k, 6);
+                    assert_eq!(d.losses.len(), 3);
+                    assert!(d.losses.iter().all(|(_, l)| l.is_finite()));
+                    break;
+                }
+                other => panic!("unexpected {}", other.kind_name()),
+            }
+        }
+        assert_eq!(updates, 3);
+    }
+
+    #[test]
+    fn worker_rejects_garbage_config() {
+        let bad = RunConfig { iterations: 0, ..RunConfig::default() };
+        let mut inbox = Vec::new();
+        inbox.extend_from_slice(
+            &Message::Configure(Configure {
+                worker_id: 0,
+                n_workers: 1,
+                shard: vec![0],
+                cfg: bad,
+            })
+            .to_frame(),
+        );
+        let mut out = Vec::new();
+        assert!(run(std::io::Cursor::new(inbox), &mut out).is_err());
+    }
+}

@@ -84,7 +84,7 @@ pub fn render_table(exp: &Experiment, results: &[RowResult]) -> Table {
 /// Figure 1: the delta_l / (1 - lambda_l) curves from the *first* interval
 /// adjustment of a FedLAMA run.  Returns CSV: l, delta_l, one_minus_lambda_l.
 pub fn figure1_csv(coord: &Coordinator) -> Option<String> {
-    let adj = coord.schedule.adjustments.first()?;
+    let adj = coord.schedule().adjustments.first()?;
     let mut s = String::from("l,delta_l,one_minus_lambda_l\n");
     for (i, (d, c)) in adj.delta_curve.iter().zip(&adj.comm_curve).enumerate() {
         s.push_str(&format!("{},{:.6},{:.6}\n", i + 1, d, c));
@@ -133,7 +133,7 @@ pub fn curves_csv(results: &[(&str, &RunMetrics)]) -> String {
 
 /// ASCII rendering of Figure 1 (two curves against prefix length).
 pub fn figure1_ascii(coord: &Coordinator, width: usize, height: usize) -> Option<String> {
-    let adj = coord.schedule.adjustments.first()?;
+    let adj = coord.schedule().adjustments.first()?;
     let n = adj.delta_curve.len();
     if n == 0 {
         return None;

@@ -38,6 +38,21 @@ pub struct StepCtx<'a> {
     pub use_chunk: bool,
 }
 
+/// Dispatch a block to the right execution path: parallel fan-out when the
+/// backend is `Sync` and more than one thread is requested, serial
+/// otherwise.  Results are bit-identical either way.
+pub fn advance(
+    backend: &dyn ComputeBackend,
+    ctx: &StepCtx<'_>,
+    clients: &mut [ClientState],
+    threads: usize,
+) -> Result<Vec<f64>> {
+    match backend.as_parallel() {
+        Some(par) if threads > 1 => advance_parallel(par, ctx, clients, threads),
+        _ => advance_serial(backend, ctx, clients),
+    }
+}
+
 /// Advance every client on the coordinator thread, in order.
 pub fn advance_serial(
     backend: &dyn ComputeBackend,

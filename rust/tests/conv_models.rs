@@ -84,12 +84,12 @@ fn resnet20_trains_end_to_end_with_real_layers() {
     assert!(metrics.final_loss.is_finite(), "loss {}", metrics.final_loss);
     // per-layer discrepancy was observed for every real layer at the
     // full-sync boundaries
-    assert_eq!(coord.schedule.last_unit_disc.len(), n_groups);
-    assert!(coord.schedule.last_unit_disc.iter().all(|d| d.is_finite()));
+    assert_eq!(coord.schedule().last_unit_disc.len(), n_groups);
+    assert!(coord.schedule().last_unit_disc.iter().all(|d| d.is_finite()));
     assert!(
-        coord.schedule.last_unit_disc.iter().any(|&d| d > 0.0),
+        coord.schedule().last_unit_disc.iter().any(|&d| d > 0.0),
         "clients trained but no layer diverged: {:?}",
-        coord.schedule.last_unit_disc
+        coord.schedule().last_unit_disc
     );
     // and the ledger reports each layer separately
     assert_eq!(metrics.per_group.len(), n_groups);

@@ -51,10 +51,10 @@ fn assert_threads_bit_identical(cfg: RunConfig, threads: usize, what: &str) {
     let (serial, m1) = run_with_threads(&cfg, 1);
     let (parallel, mn) = run_with_threads(&cfg, threads);
     assert_metrics_identical(&m1, &mn, what);
-    for (gt, (a, b)) in serial.global.iter().zip(&parallel.global).enumerate() {
+    for (gt, (a, b)) in serial.global().iter().zip(parallel.global()).enumerate() {
         assert_eq!(a.data, b.data, "{what}: global tensor {gt} diverged at threads={threads}");
     }
-    for (a, b) in serial.clients.iter().zip(&parallel.clients) {
+    for (a, b) in serial.clients().iter().zip(parallel.clients()) {
         assert_eq!(a.steps_in_round, b.steps_in_round, "{what}: client step counts");
         for (ta, tb) in a.params.iter().zip(&b.params) {
             assert_eq!(ta.data, tb.data, "{what}: client {} params diverged", a.id);

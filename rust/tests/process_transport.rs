@@ -1,0 +1,147 @@
+//! Multi-process transport determinism: a training run sharded across N
+//! `fedlama worker` subprocesses must be **bit-identical** to the in-proc
+//! single-process run — same final accuracy, same loss curve, same Eq. 9
+//! ledger totals — because every numeric stream is keyed by *what* is
+//! computed (client id, message identity), never by *where*:
+//!
+//!   - client RNGs derive from the global client id,
+//!   - workers rebuild the data partition and model init from the seed,
+//!   - the coordinator core orders every cross-client reduction by the
+//!     active list, and
+//!   - compression streams derive from (seed, k, group, client).
+//!
+//! These tests spawn real subprocesses of the `fedlama` binary (cargo
+//! exposes its path to integration tests via `CARGO_BIN_EXE_fedlama`).
+
+use fedlama::aggregation::Policy;
+use fedlama::config::{Algorithm, PartitionKind, RunConfig};
+use fedlama::coordinator::Coordinator;
+use fedlama::data::DatasetKind;
+use fedlama::metrics::RunMetrics;
+
+/// Point worker spawns at the fedlama binary (the test harness itself is
+/// not the CLI, so `current_exe` would be wrong here).  Set exactly once:
+/// tests run on parallel threads and the environment is process-global.
+fn use_test_binary() {
+    static INIT: std::sync::Once = std::sync::Once::new();
+    INIT.call_once(|| std::env::set_var("FEDLAMA_WORKER_EXE", env!("CARGO_BIN_EXE_fedlama")));
+}
+
+fn base_cfg() -> RunConfig {
+    RunConfig {
+        dataset: DatasetKind::Toy,
+        n_clients: 6,
+        samples: 64,
+        lr: 0.05,
+        warmup_rounds: 2,
+        iterations: 48,
+        policy: Policy::fedlama(6, 2),
+        eval_every_rounds: 2,
+        eval_examples: 256,
+        seed: 23,
+        ..Default::default()
+    }
+}
+
+fn run_with_workers(cfg: &RunConfig, workers: usize) -> (Coordinator, RunMetrics) {
+    let cfg = RunConfig { workers, ..cfg.clone() };
+    let mut coord = Coordinator::new(cfg).unwrap();
+    let metrics = coord.run().unwrap();
+    (coord, metrics)
+}
+
+/// Everything except wall-clock fields must match exactly.
+fn assert_metrics_identical(a: &RunMetrics, b: &RunMetrics, what: &str) {
+    assert_eq!(a.tag, b.tag, "{what}: tag");
+    assert_eq!(a.curve, b.curve, "{what}: learning curve");
+    assert_eq!(a.final_acc, b.final_acc, "{what}: final_acc");
+    assert_eq!(a.final_loss, b.final_loss, "{what}: final_loss");
+    assert_eq!(a.total_comm_cost, b.total_comm_cost, "{what}: Eq.9 comm cost");
+    assert_eq!(a.total_syncs, b.total_syncs, "{what}: syncs");
+    assert_eq!(a.total_bytes, b.total_bytes, "{what}: bytes");
+    assert_eq!(a.per_group, b.per_group, "{what}: per-group ledger");
+}
+
+fn assert_workers_bit_identical(cfg: RunConfig, workers: usize, what: &str) {
+    use_test_binary();
+    let (inproc, m0) = run_with_workers(&cfg, 0);
+    let (multi, mn) = run_with_workers(&cfg, workers);
+    assert_metrics_identical(&m0, &mn, what);
+    for (gt, (a, b)) in inproc.global().iter().zip(multi.global()).enumerate() {
+        assert_eq!(
+            a.data, b.data,
+            "{what}: global tensor {gt} diverged with {workers} workers"
+        );
+    }
+}
+
+#[test]
+fn two_workers_bit_identical_fedlama() {
+    assert_workers_bit_identical(base_cfg(), 2, "sgd/fedlama(6,2)/workers=2");
+}
+
+#[test]
+fn three_workers_partial_participation_bit_identical() {
+    // 3 shards over 6 clients with only half active per round exercises
+    // shard/active intersection bookkeeping; worker count need not divide
+    // anything.
+    let cfg = RunConfig {
+        active_ratio: 0.5,
+        partition: PartitionKind::Dirichlet { alpha: 0.3 },
+        ..base_cfg()
+    };
+    assert_workers_bit_identical(cfg, 3, "sgd/partial/workers=3");
+    // more workers than clients: surplus workers own empty shards
+    let cfg = RunConfig { n_clients: 3, iterations: 24, ..base_cfg() };
+    assert_workers_bit_identical(cfg, 5, "sgd/workers>clients");
+}
+
+#[test]
+fn compressed_uplink_is_transport_invariant() {
+    // q-bit quantization draws from a stochastic-rounding RNG; streams are
+    // keyed per (seed, k, group, client), so the multi-process run must
+    // reproduce the in-proc lossy values bit-for-bit.
+    let cfg = RunConfig { compressor: "q8".into(), ..base_cfg() };
+    assert_workers_bit_identical(cfg, 2, "q8/workers=2");
+    let cfg = RunConfig { compressor: "top10".into(), ..base_cfg() };
+    assert_workers_bit_identical(cfg, 2, "top10/workers=2");
+}
+
+#[test]
+fn fedprox_hetero_bit_identical() {
+    let cfg = RunConfig {
+        algorithm: Algorithm::Prox { mu: 0.01 },
+        policy: Policy::fedavg(6),
+        hetero_local_steps: true,
+        partition: PartitionKind::Dirichlet { alpha: 0.3 },
+        iterations: 24,
+        ..base_cfg()
+    };
+    assert_workers_bit_identical(cfg, 2, "fedprox/hetero/workers=2");
+}
+
+#[test]
+fn worker_threads_compose_with_process_sharding() {
+    // threads > 1 inside each worker process must stay bit-identical too
+    // (the per-client fan-out is order-preserving at both levels).
+    use_test_binary();
+    let cfg = base_cfg();
+    let (_, reference) = run_with_workers(&cfg, 0);
+    let threaded = RunConfig { threads: 4, ..cfg };
+    let (_, m) = run_with_workers(&threaded, 2);
+    assert_metrics_identical(&reference, &m, "workers=2 x threads=4");
+}
+
+#[test]
+fn scaffold_and_nova_refuse_multiprocess() {
+    for algo in [Algorithm::Scaffold, Algorithm::Nova] {
+        let cfg = RunConfig {
+            algorithm: algo,
+            policy: Policy::fedavg(6),
+            workers: 2,
+            iterations: 24,
+            ..base_cfg()
+        };
+        assert!(Coordinator::new(cfg).is_err(), "{} must reject --workers", algo.name());
+    }
+}

@@ -1,0 +1,323 @@
+//! Property tests for the federation-protocol wire codec (`protocol::wire`
+//! + `protocol::messages`), under the in-house `util::prop` harness:
+//!
+//!   - encode -> decode identity for every message kind, including
+//!     `LayerUpdate` payloads in dense, q-bit, and top-k encodings;
+//!   - truncated frames are rejected at every probed cut;
+//!   - corrupted frames are rejected (magic/version/length guarded by the
+//!     header checks, the body by CRC-32 — which catches *every* burst
+//!     error shorter than 32 bits, so a single flipped byte can never
+//!     slip through);
+//!   - the lossy payload re-encodings reproduce the compressor's output
+//!     bit-for-bit and preserve its nominal (ledger) byte accounting.
+
+use fedlama::aggregation::Policy;
+use fedlama::comm::{Compressor, Quantizer, Spec, TopK};
+use fedlama::config::{Algorithm, PartitionKind, RunConfig};
+use fedlama::data::DatasetKind;
+use fedlama::protocol::messages::{encode_tensor, update_stream_seed};
+use fedlama::protocol::{
+    BlockDone, Configure, Heartbeat, Hello, LayerUpdate, Message, Payload, RoundAssignment,
+    SyncDecision,
+};
+use fedlama::util::prop::{forall, Strategy};
+use fedlama::util::rng::Rng;
+
+fn rand_f32s(rng: &mut Rng, max_len: usize) -> Vec<f32> {
+    let n = 1 + rng.below(max_len);
+    (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+}
+
+fn rand_payload(rng: &mut Rng) -> Payload {
+    let mut data = rand_f32s(rng, 160);
+    match rng.below(3) {
+        0 => Payload::Dense(data),
+        1 => {
+            let bits = 1 + rng.below(16) as u32;
+            let mut q = Quantizer::new(bits, rng.next_u64());
+            q.compress(&mut data);
+            Payload::qbits_from(&data, bits, q.chunk)
+        }
+        _ => {
+            let mut t = TopK::new(0.01 + rng.range_f64(0.0, 0.99));
+            let nominal = t.compress(&mut data);
+            Payload::topk_from(&data, nominal)
+        }
+    }
+}
+
+fn rand_cfg(rng: &mut Rng) -> RunConfig {
+    let dataset = match rng.below(4) {
+        0 => DatasetKind::Toy,
+        1 => DatasetKind::Cifar10,
+        2 => DatasetKind::Cifar100,
+        _ => DatasetKind::Femnist,
+    };
+    let algorithm = match rng.below(4) {
+        0 => Algorithm::Sgd,
+        1 => Algorithm::Prox { mu: rng.f32() },
+        2 => Algorithm::Scaffold,
+        _ => Algorithm::Nova,
+    };
+    let policy = if rng.below(2) == 0 {
+        Policy::fedavg(1 + rng.below(12))
+    } else {
+        Policy::FedLama { tau: 1 + rng.below(12), phi: 1 + rng.below(4), accelerate: rng.below(2) == 0 }
+    };
+    let partition = match rng.below(3) {
+        0 => PartitionKind::Iid,
+        1 => PartitionKind::Dirichlet { alpha: rng.range_f64(0.01, 5.0) },
+        _ => PartitionKind::Writers,
+    };
+    let compressor = ["dense", "q4", "q8", "top10"][rng.below(4)].to_string();
+    RunConfig {
+        model: ["mlp", "femnist_cnn", "resnet20"][rng.below(3)].to_string(),
+        dataset,
+        algorithm,
+        policy,
+        partition,
+        n_clients: 1 + rng.below(64),
+        active_ratio: rng.range_f64(0.05, 1.0),
+        samples: 1 + rng.below(1024),
+        lr: rng.f32() + 0.001,
+        warmup_rounds: rng.below(8),
+        iterations: 1 + rng.below(2048),
+        seed: rng.next_u64(),
+        threads: rng.below(16),
+        use_chunk: rng.below(2) == 0,
+        hetero_local_steps: rng.below(2) == 0,
+        compressor,
+        ..RunConfig::default()
+    }
+}
+
+fn rand_ids(rng: &mut Rng, max: usize) -> Vec<usize> {
+    (0..rng.below(max)).map(|_| rng.below(1024)).collect()
+}
+
+/// Uniform generator over every message kind.
+struct MsgStrategy;
+
+impl Strategy for MsgStrategy {
+    type Value = Message;
+    fn generate(&self, rng: &mut Rng) -> Message {
+        match rng.below(8) {
+            0 => Message::Hello(Hello {
+                version: rng.below(255) as u8,
+                worker_id: rng.below(64),
+                shard_len: rng.below(1024),
+            }),
+            1 => Message::Configure(Configure {
+                worker_id: rng.below(8),
+                n_workers: 1 + rng.below(8),
+                shard: rand_ids(rng, 32),
+                cfg: rand_cfg(rng),
+            }),
+            2 => Message::Heartbeat(Heartbeat { nonce: rng.next_u64() }),
+            3 => Message::Assignment(RoundAssignment {
+                k: rng.below(100_000),
+                round: rng.below(1000),
+                gap: 1 + rng.below(24),
+                lr: rng.f32(),
+                new_round: rng.below(2) == 0,
+                active: rand_ids(rng, 32),
+                due_groups: rand_ids(rng, 16),
+            }),
+            4 => Message::Update(LayerUpdate {
+                k: rng.below(100_000),
+                group: rng.below(64),
+                client: rng.below(1024),
+                tensors: (0..1 + rng.below(3)).map(|_| rand_payload(rng)).collect(),
+            }),
+            5 => Message::Done(BlockDone {
+                worker_id: rng.below(8),
+                k: rng.below(100_000),
+                losses: (0..rng.below(16))
+                    .map(|_| {
+                        let loss =
+                            if rng.below(8) == 0 { f64::NAN } else { rng.range_f64(-10.0, 10.0) };
+                        (rng.below(1024), loss)
+                    })
+                    .collect(),
+                compute_secs: rng.range_f64(0.0, 1e6),
+            }),
+            6 => Message::Decision(SyncDecision {
+                k: rng.below(100_000),
+                group: rng.below(64),
+                new_interval: 1 + rng.below(64),
+                new_params: (0..1 + rng.below(3)).map(|_| rand_f32s(rng, 120)).collect(),
+            }),
+            _ => Message::Shutdown,
+        }
+    }
+}
+
+/// Structural equality that treats NaN == NaN (losses may legitimately be
+/// NaN; `PartialEq` on f64 would reject the round-trip).
+fn msg_eq(a: &Message, b: &Message) -> bool {
+    match (a, b) {
+        (Message::Done(x), Message::Done(y)) => {
+            x.worker_id == y.worker_id
+                && x.k == y.k
+                && x.compute_secs.to_bits() == y.compute_secs.to_bits()
+                && x.losses.len() == y.losses.len()
+                && x.losses
+                    .iter()
+                    .zip(&y.losses)
+                    .all(|((ca, la), (cb, lb))| ca == cb && la.to_bits() == lb.to_bits())
+        }
+        _ => a == b,
+    }
+}
+
+#[test]
+fn every_message_kind_round_trips() {
+    forall(0xC0DEC, 300, &MsgStrategy, |msg| {
+        let frame = msg.to_frame();
+        let (decoded, used) =
+            Message::decode(&frame).map_err(|e| format!("decode failed: {e:#}"))?;
+        if used != frame.len() {
+            return Err(format!("consumed {used} of {} bytes", frame.len()));
+        }
+        if !msg_eq(&decoded, msg) {
+            return Err(format!("round-trip mismatch: {decoded:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn truncated_frames_are_rejected() {
+    forall(0x7A11, 150, &MsgStrategy, |msg| {
+        let frame = msg.to_frame();
+        // probe the header, the body boundary, and interior cuts
+        let cuts =
+            [0, 1, 4, 7, 8, frame.len() / 3, frame.len() / 2, frame.len() - 1];
+        for &cut in cuts.iter().filter(|&&c| c < frame.len()) {
+            if Message::decode(&frame[..cut]).is_ok() {
+                return Err(format!("accepted a frame truncated to {cut} bytes"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn corrupted_frames_are_rejected() {
+    forall(0xBAD_F00D, 150, &MsgStrategy, |msg| {
+        let frame = msg.to_frame();
+        // magic, version: header validation must fire
+        for i in [0usize, 1, 2] {
+            let mut bad = frame.clone();
+            bad[i] ^= 0x5A;
+            if Message::decode(&bad).is_ok() {
+                return Err(format!("accepted corrupt header byte {i}"));
+            }
+        }
+        // length field: setting a high bit always overshoots the buffer
+        let mut bad = frame.clone();
+        bad[7] ^= 0x01; // += 2^24 bytes
+        if Message::decode(&bad).is_ok() {
+            return Err("accepted corrupt length field".into());
+        }
+        // body + trailing crc: every single-byte flip is a burst < 32 bits,
+        // which CRC-32 is guaranteed to catch
+        let body_len = frame.len() - 12;
+        let probes = [0usize, body_len / 2, body_len.saturating_sub(1), body_len, body_len + 3];
+        for &off in probes.iter().filter(|&&o| o < body_len + 4) {
+            let mut bad = frame.clone();
+            bad[8 + off] ^= 0x10;
+            if Message::decode(&bad).is_ok() {
+                return Err(format!("accepted corrupt body byte {off}"));
+            }
+        }
+        // kind byte is outside the crc: a flip must at minimum never decode
+        // back to the original message
+        let mut bad = frame.clone();
+        bad[3] ^= 0x01;
+        if let Ok((m, _)) = Message::decode(&bad) {
+            if msg_eq(&m, msg) {
+                return Err("kind flip decoded to the original message".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Strategy for payload-encoding inputs: (spec, values, stream seed).
+struct TensorStrategy;
+
+impl Strategy for TensorStrategy {
+    type Value = (String, Vec<f32>, u64);
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        let spec = match rng.below(6) {
+            0 => "dense".to_string(),
+            1 => "q1".to_string(),
+            2 => "q4".to_string(),
+            3 => "q8".to_string(),
+            4 => "q16".to_string(),
+            _ => format!("top{}", 1 + rng.below(100)),
+        };
+        // lengths straddling the quantizer chunk size (1024)
+        let n = 1 + rng.below(2500);
+        let mut vals: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+        // sprinkle exact zeros and sign edge cases
+        for v in vals.iter_mut() {
+            match rng.below(16) {
+                0 => *v = 0.0,
+                1 => *v = -0.0,
+                _ => {}
+            }
+        }
+        (spec, vals, rng.next_u64())
+    }
+}
+
+#[test]
+fn payload_encodings_reproduce_the_compressor_bit_for_bit() {
+    forall(0x9E7, 120, &TensorStrategy, |(spec_s, vals, seed)| {
+        let spec = Spec::parse(spec_s).ok_or(format!("bad spec {spec_s}"))?;
+        // reference: what the compressor alone would produce
+        let mut reference = vals.clone();
+        let nominal = spec.build(*seed).compress(&mut reference);
+        // protocol path: compress + wire-encode + frame + decode
+        let mut buf = vals.clone();
+        let payload = encode_tensor(spec, *seed, &mut buf);
+        if payload.nominal_bytes() != nominal {
+            return Err(format!(
+                "{spec_s}: nominal {} != compressor {nominal}",
+                payload.nominal_bytes()
+            ));
+        }
+        let msg = Message::Update(LayerUpdate { k: 6, group: 0, client: 1, tensors: vec![payload] });
+        let (decoded, _) = Message::decode(&msg.to_frame()).map_err(|e| format!("{e:#}"))?;
+        let Message::Update(u) = decoded else { return Err("wrong kind".into()) };
+        let out = u.tensors[0].decode().map_err(|e| format!("{e:#}"))?;
+        if out.len() != reference.len() {
+            return Err(format!("{spec_s}: length {} != {}", out.len(), reference.len()));
+        }
+        for (i, (a, b)) in reference.iter().zip(&out).enumerate() {
+            if a.to_bits() != b.to_bits() {
+                return Err(format!("{spec_s}: bit mismatch at {i}: {a} vs {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn update_stream_seeds_are_message_unique_not_order_dependent() {
+    // the same (seed, k, group, client) always yields the same stream, so
+    // compression is independent of which worker sends the update...
+    assert_eq!(update_stream_seed(7, 12, 3, 5), update_stream_seed(7, 12, 3, 5));
+    // ...and distinct messages get distinct streams
+    let mut seen = std::collections::BTreeSet::new();
+    for k in (6..=60).step_by(6) {
+        for g in 0..8 {
+            for c in 0..16 {
+                seen.insert(update_stream_seed(7, k, g, c));
+            }
+        }
+    }
+    assert_eq!(seen.len(), 10 * 8 * 16);
+}
