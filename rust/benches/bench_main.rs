@@ -1,10 +1,12 @@
 //! Benchmark harness (`cargo bench`), custom — no criterion offline.
 //!
 //! Sections, all hermetic (native backend, no artifacts):
-//!   1. Microbenches: the native aggregation hot path across layer sizes
-//!      and client counts; per-op dense vs conv2d forward/backward at the
-//!      zoo's preset shapes (the SIMD-work baseline); the scratch-buffer
-//!      reuse delta; per-model train-step / train-chunk / eval latency.
+//!   1. Microbenches: the SIMD matmul kernels vs forced-scalar (the same
+//!      measurement `fedlama bench` records into BENCH_kernels.json); the
+//!      native aggregation hot path across layer sizes and client counts;
+//!      per-op dense vs conv2d forward/backward at the zoo's preset
+//!      shapes; the scratch-buffer reuse delta; per-model train-step /
+//!      train-chunk / eval latency.
 //!   2. Cluster scaling: one federated round at threads = 1, 2, 4, 8 —
 //!      the `runtime::cluster` fan-out speedup (results are bit-identical
 //!      across thread counts; only wall time changes).
@@ -42,6 +44,9 @@ fn main() -> anyhow::Result<()> {
     let run = |name: &str| filter.is_empty() || name.contains(&filter);
 
     let t0 = Instant::now();
+    if run("micro-kernel") {
+        bench_kernels()?;
+    }
     if run("micro-agg") {
         bench_aggregation()?;
     }
@@ -64,6 +69,30 @@ fn main() -> anyhow::Result<()> {
         bench_figures()?;
     }
     eprintln!("\ntotal bench time: {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+/// Section 1: the SIMD matmul kernels vs forced-scalar — the exact
+/// measurement `fedlama bench` persists into BENCH_kernels.json, rendered
+/// as a table here.
+fn bench_kernels() -> anyhow::Result<()> {
+    println!("\n### micro-kernel: SIMD matmul dispatch vs scalar (see BENCH_kernels.json)\n");
+    let doc = fedlama::bench::kernels_doc(false);
+    let isa = doc.req("isa")?.as_str().unwrap_or("?").to_string();
+    let mut t = Table::new(
+        &format!("matmul kernels, dispatch = {isa} (bit-identical to scalar)"),
+        &["kernel", "shape", "GFLOP/s", "scalar GFLOP/s", "speedup"],
+    );
+    for k in doc.req("kernels")?.as_arr().unwrap_or(&[]) {
+        t.row(vec![
+            k.get("kernel").and_then(|v| v.as_str()).unwrap_or("?").to_string(),
+            k.get("shape").and_then(|v| v.as_str()).unwrap_or("?").to_string(),
+            format!("{:.2}", k.get("gflops").and_then(|v| v.as_f64()).unwrap_or(0.0)),
+            format!("{:.2}", k.get("scalar_gflops").and_then(|v| v.as_f64()).unwrap_or(0.0)),
+            format!("{:.2}x", k.get("speedup_vs_scalar").and_then(|v| v.as_f64()).unwrap_or(0.0)),
+        ]);
+    }
+    println!("{}", t.render());
     Ok(())
 }
 

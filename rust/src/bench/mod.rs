@@ -1,0 +1,287 @@
+//! Kernel / op / end-to-end microbenches behind `fedlama bench`.
+//!
+//! Produces the machine-readable perf artifact `BENCH_kernels.json`
+//! (repo root by default): per-shape GFLOP/s and ns/iter for every matmul
+//! kernel on both the detected SIMD path and the forced-scalar path
+//! (`speedup_vs_scalar` is the headline number), plus op-level
+//! forward/backward latency, end-to-end native train-step latency, and
+//! the persistent pool's dispatch overhead.  `--quick` shrinks the rep
+//! budget for CI smoke runs; the measured numbers stay comparable across
+//! runs of the same machine but are *not* normalized across machines —
+//! always read the `isa` field next to the numbers.
+//!
+//! The same entry point backs the `micro-kernel` section of the
+//! `cargo bench` harness, so the CLI artifact and the bench table can
+//! never drift apart.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::data::DatasetKind;
+use crate::runtime::ops::matmul::{matmul_acc_with, matmul_at_acc_with, matmul_bt_with};
+use crate::runtime::ops::{Conv2d, Dense, LayerOp, Scratch};
+use crate::runtime::simd::{self, Isa};
+use crate::runtime::{zoo, ComputeBackend};
+use crate::util::json::Json;
+use crate::util::pool;
+use crate::util::rng::Rng;
+
+pub struct BenchOpts {
+    /// Shrink rep budgets (CI smoke).
+    pub quick: bool,
+    /// Worker threads for the pool section; 0 = auto.
+    pub threads: usize,
+}
+
+/// The bench shapes: the Dense layers of the zoo presets and the im2col
+/// matmul shapes of the conv stem / stage-1 / stage-2 layers (batch 8).
+/// (label, m, k, n) with `c[m,n] += a[m,k] b[k,n]`.
+const SHAPES: &[(&str, usize, usize, usize)] = &[
+    ("dense_784x64_b8", 8, 784, 64),
+    ("dense_3072x128_b8", 8, 3072, 128),
+    ("conv_stem_3x3x3_16_im2col_b8", 8 * 32 * 32, 27, 16),
+    ("conv_s1_3x3x16_16_im2col_b8", 8 * 32 * 32, 144, 16),
+    ("conv_s2_3x3x16_32_im2col_b8", 8 * 16 * 16, 144, 32),
+];
+
+/// Run every section and assemble the artifact document.
+pub fn run(opts: &BenchOpts) -> Result<Json> {
+    let isa = simd::active_isa();
+    let threads = if opts.threads == 0 { pool::default_threads() } else { opts.threads };
+    let kernels = bench_kernels(opts.quick, isa);
+    let ops = bench_ops(opts.quick)?;
+    let end_to_end = bench_end_to_end(opts.quick)?;
+    let pool_section = bench_pool(threads);
+    Ok(Json::obj(vec![
+        ("schema", Json::num(1)),
+        ("generated_by", Json::str("fedlama bench")),
+        ("measured", Json::Bool(true)),
+        ("quick", Json::Bool(opts.quick)),
+        ("isa", Json::str(isa.name())),
+        ("lane_width", Json::num(isa.lane_width() as f64)),
+        ("kernels", kernels),
+        ("ops", ops),
+        ("end_to_end", end_to_end),
+        ("pool", pool_section),
+    ]))
+}
+
+/// Just the kernel section plus its dispatch metadata — the `cargo
+/// bench` harness renders this without re-measuring the op / end-to-end
+/// / pool sections it already benches itself.
+pub fn kernels_doc(quick: bool) -> Json {
+    let isa = simd::active_isa();
+    Json::obj(vec![
+        ("isa", Json::str(isa.name())),
+        ("kernels", bench_kernels(quick, isa)),
+    ])
+}
+
+/// Best-of-`reps` wall time of `f`, in nanoseconds.
+fn time_ns<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        f();
+        let ns = t0.elapsed().as_secs_f64() * 1e9;
+        if ns < best {
+            best = ns;
+        }
+    }
+    best
+}
+
+fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+}
+
+fn kernel_entry(
+    kernel: &str,
+    shape: &str,
+    (m, k, n): (usize, usize, usize),
+    isa: Isa,
+    simd_ns: f64,
+    scalar_ns: f64,
+    flops: f64,
+) -> Json {
+    Json::obj(vec![
+        ("kernel", Json::str(kernel)),
+        ("shape", Json::str(shape)),
+        ("m", Json::num(m as f64)),
+        ("k", Json::num(k as f64)),
+        ("n", Json::num(n as f64)),
+        ("dispatch", Json::str(isa.name())),
+        ("ns_per_iter", Json::num(simd_ns)),
+        // flops / ns == GFLOP/s
+        ("gflops", Json::num(flops / simd_ns.max(1.0))),
+        ("scalar_ns_per_iter", Json::num(scalar_ns)),
+        ("scalar_gflops", Json::num(flops / scalar_ns.max(1.0))),
+        ("speedup_vs_scalar", Json::num(scalar_ns / simd_ns.max(1.0))),
+    ])
+}
+
+fn bench_kernels(quick: bool, isa: Isa) -> Json {
+    let budget = if quick { 6.0e6 } else { 4.0e7 };
+    let mut rng = Rng::new(11);
+    let mut out = Vec::new();
+    for &(label, m, k, n) in SHAPES {
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let dy = randv(&mut rng, m * n);
+        let flops = 2.0 * (m * k * n) as f64;
+        let reps = ((budget / flops) as usize).clamp(3, 200);
+
+        let mut c = vec![0.0f32; m * n];
+        let t_simd = time_ns(reps, || matmul_acc_with(isa, &a, &b, &mut c, m, k, n));
+        let t_scalar =
+            time_ns(reps, || matmul_acc_with(Isa::Scalar, &a, &b, &mut c, m, k, n));
+        std::hint::black_box(&c);
+        out.push(kernel_entry("matmul_acc", label, (m, k, n), isa, t_simd, t_scalar, flops));
+
+        let mut gw = vec![0.0f32; k * n];
+        let t_simd = time_ns(reps, || matmul_at_acc_with(isa, &a, &dy, &mut gw, m, k, n));
+        let t_scalar =
+            time_ns(reps, || matmul_at_acc_with(Isa::Scalar, &a, &dy, &mut gw, m, k, n));
+        std::hint::black_box(&gw);
+        out.push(kernel_entry("matmul_at_acc", label, (m, k, n), isa, t_simd, t_scalar, flops));
+
+        let mut dx = vec![0.0f32; m * k];
+        let t_simd = time_ns(reps, || matmul_bt_with(isa, &dy, &b, &mut dx, m, n, k));
+        let t_scalar =
+            time_ns(reps, || matmul_bt_with(Isa::Scalar, &dy, &b, &mut dx, m, n, k));
+        std::hint::black_box(&dx);
+        out.push(kernel_entry("matmul_bt", label, (m, k, n), isa, t_simd, t_scalar, flops));
+    }
+    Json::Arr(out)
+}
+
+fn bench_ops(quick: bool) -> Result<Json> {
+    let b = 8usize;
+    let reps = if quick { 3 } else { 10 };
+    type OpCase = (&'static str, Box<dyn LayerOp>, Vec<usize>);
+    let cases: Vec<OpCase> = vec![
+        ("dense_3072_128", Box::new(Dense::new("d", 3072, 128)), vec![3072]),
+        (
+            "conv3x3_16_16_at32",
+            Box::new(Conv2d::new("c", [32, 32, 16], 16, 3, 1, 1)),
+            vec![32, 32, 16],
+        ),
+    ];
+    let mut out = Vec::new();
+    for (label, op, in_shape) in cases {
+        let in_dim: usize = in_shape.iter().product();
+        let out_shape = op.out_shape(&in_shape)?;
+        let out_dim: usize = out_shape.iter().product();
+        let root = Rng::new(3);
+        let ps: Vec<crate::runtime::HostTensor> = op
+            .params()
+            .iter()
+            .enumerate()
+            .map(|(i, spec)| {
+                let mut r = root.fork(i as u64);
+                spec.init.materialize(&spec.shape, &mut r)
+            })
+            .collect();
+        let n_params: usize = ps.iter().map(|p| p.data.len()).sum();
+        let mut rng = Rng::new(4);
+        let x = randv(&mut rng, b * in_dim);
+        let dy = randv(&mut rng, b * out_dim);
+        let mut y = vec![0.0f32; b * out_dim];
+        let mut dx = vec![0.0f32; b * in_dim];
+        let mut grads: Vec<crate::runtime::HostTensor> =
+            ps.iter().map(|p| crate::runtime::HostTensor::zeros(&p.shape)).collect();
+        let mut s = Scratch::default();
+        op.forward(&ps, &x, &mut y, b, &mut s); // warm the scratch pool
+        let fwd_ns = time_ns(reps, || op.forward(&ps, &x, &mut y, b, &mut s));
+        let bwd_ns =
+            time_ns(reps, || op.backward(&ps, &x, &y, &dy, &mut dx, &mut grads, b, &mut s));
+        let cout = *out_shape.last().unwrap();
+        let bias_len = ps.last().map(|p| p.data.len()).unwrap_or(0);
+        let flops = 2.0 * (b * out_dim / cout) as f64 * (n_params - bias_len) as f64;
+        out.push(Json::obj(vec![
+            ("op", Json::str(label)),
+            ("params", Json::num(n_params as f64)),
+            ("fwd_ms", Json::num(fwd_ns / 1e6)),
+            ("bwd_ms", Json::num(bwd_ns / 1e6)),
+            ("fwd_gflops", Json::num(flops / fwd_ns.max(1.0))),
+        ]));
+    }
+    Ok(Json::Arr(out))
+}
+
+fn bench_end_to_end(quick: bool) -> Result<Json> {
+    let reps = if quick { 3 } else { 10 };
+    let rt = zoo::build("femnist_cnn", DatasetKind::Femnist)?;
+    let mut params = rt.init_params(0)?;
+    let b = rt.manifest().batch_size;
+    let d: usize = rt.manifest().input_shape.iter().product();
+    let classes = rt.manifest().num_classes;
+    let mut rng = Rng::new(1);
+    let x = randv(&mut rng, b * d);
+    let y: Vec<i32> = (0..b).map(|i| (i % classes) as i32).collect();
+    rt.train_step(&mut params, &x, &y, 0.05)?; // warmup
+    let mut err = None;
+    let step_ns = time_ns(reps, || {
+        if let Err(e) = rt.train_step(&mut params, &x, &y, 0.05) {
+            err = Some(e);
+        }
+    });
+    if let Some(e) = err {
+        return Err(e);
+    }
+    Ok(Json::arr([Json::obj(vec![
+        ("name", Json::str("femnist_cnn_train_step_b8")),
+        ("ms_per_step", Json::num(step_ns / 1e6)),
+    ])]))
+}
+
+fn bench_pool(threads: usize) -> Json {
+    // 100 small fan-outs measure per-call dispatch overhead of the
+    // persistent pool (the win over per-call thread spawning).
+    let calls = 100usize;
+    let mut items: Vec<u64> = (0..256).collect();
+    let t0 = Instant::now();
+    for _ in 0..calls {
+        let out = pool::par_map_mut(&mut items, threads, |i, v| {
+            *v = v.wrapping_add(i as u64);
+            *v
+        });
+        std::hint::black_box(out.len());
+    }
+    let total_ms = t0.elapsed().as_secs_f64() * 1e3;
+    Json::obj(vec![
+        ("threads", Json::num(threads as f64)),
+        ("calls", Json::num(calls as f64)),
+        ("ms_per_call", Json::num(total_ms / calls as f64)),
+        ("workers_spawned_total", Json::num(pool::workers_spawned_total() as f64)),
+        ("pool_size", Json::num(pool::pool_size() as f64)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_bench_produces_a_complete_parseable_doc() {
+        let doc = run(&BenchOpts { quick: true, threads: 2 }).unwrap();
+        let text = doc.to_string_pretty();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed.get("schema").unwrap().as_usize(), Some(1));
+        assert_eq!(parsed.get("measured").unwrap().as_bool(), Some(true));
+        let isa = parsed.get("isa").unwrap().as_str().unwrap();
+        assert!(["avx2", "sse2", "scalar"].contains(&isa));
+        let kernels = parsed.get("kernels").unwrap().as_arr().unwrap();
+        // 3 kernels x all shapes, every entry on the active dispatch path
+        assert_eq!(kernels.len(), 3 * SHAPES.len());
+        for k in kernels {
+            assert_eq!(k.get("dispatch").unwrap().as_str(), Some(isa));
+            assert!(k.get("ns_per_iter").unwrap().as_f64().unwrap() > 0.0);
+            assert!(k.get("speedup_vs_scalar").unwrap().as_f64().unwrap() > 0.0);
+        }
+        assert!(!parsed.get("ops").unwrap().as_arr().unwrap().is_empty());
+        assert!(!parsed.get("end_to_end").unwrap().as_arr().unwrap().is_empty());
+        assert!(parsed.get("pool").unwrap().get("ms_per_call").is_some());
+    }
+}

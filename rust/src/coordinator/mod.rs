@@ -183,11 +183,12 @@ impl Coordinator {
     /// Run the full training loop; returns the metrics record.
     pub fn run(&mut self) -> Result<RunMetrics> {
         let t0 = Instant::now();
+        let batch = self.backend.manifest().batch_size;
         let remote_secs;
         let drive_result = if self.cfg.workers == 0 {
             let mut p = self.participant.take().context("coordinator already consumed")?;
             let mut transport = InProcTransport::new(&mut p);
-            let r = drive(&self.cfg, &mut self.core, &mut transport, &|global| {
+            let r = drive(&self.cfg, &mut self.core, &mut transport, batch, &|global| {
                 evaluate_global(self.backend.as_ref(), global, &self.val_x, &self.val_y)
             });
             remote_secs = transport.remote_compute_secs();
@@ -197,13 +198,13 @@ impl Coordinator {
         } else {
             let exe = crate::protocol::worker_exe()?;
             let mut transport = ProcessTransport::spawn(&exe, &self.cfg, self.cfg.workers)?;
-            let r = drive(&self.cfg, &mut self.core, &mut transport, &|global| {
+            let r = drive(&self.cfg, &mut self.core, &mut transport, batch, &|global| {
                 evaluate_global(self.backend.as_ref(), global, &self.val_x, &self.val_y)
             });
             remote_secs = transport.remote_compute_secs();
             match r {
                 // graceful: Shutdown frames + wait for clean exits
-                Ok(()) => transport.shutdown(),
+                Ok(stats) => transport.shutdown().map(|()| stats),
                 // error path: a worker may be wedged mid-frame — let Drop
                 // kill the children instead of waiting on them
                 err => {
@@ -212,7 +213,7 @@ impl Coordinator {
                 }
             }
         };
-        drive_result?;
+        let stats = drive_result?;
 
         let mut metrics = self.core.metrics();
         let (acc, loss) = self.evaluate()?;
@@ -220,6 +221,13 @@ impl Coordinator {
         metrics.final_loss = loss;
         metrics.wall_secs = t0.elapsed().as_secs_f64();
         metrics.runtime_secs = self.backend.stats_total_secs() + remote_secs;
+        metrics.train_samples = stats.train_samples;
+        // denominator is the summed (eval-excluded) round wall time, so
+        // the throughput number is invariant to --eval-every cadence
+        let train_wall: f64 = stats.round_wall_secs.iter().sum();
+        metrics.samples_per_sec =
+            if train_wall > 0.0 { stats.train_samples as f64 / train_wall } else { 0.0 };
+        metrics.round_wall_secs = stats.round_wall_secs;
         Ok(metrics)
     }
 
@@ -254,6 +262,20 @@ fn evaluate_global(
     Ok((correct / n as f64, loss / n as f64))
 }
 
+/// Throughput bookkeeping the driver hands back to `Coordinator::run`.
+struct DriveStats {
+    /// *Assigned* training examples: block steps (`gap`) x batch size,
+    /// counted for clients whose block loss was finite.  Clients that
+    /// trained zero steps report NaN and are excluded, but a
+    /// `--hetero` client whose budget runs out *mid-block* still counts
+    /// the full block — so this is an upper bound under heterogeneous
+    /// budgets (exact step counts live in the participants and are not
+    /// part of the block result messages).
+    train_samples: u64,
+    /// Wall seconds per completed round, evaluation excluded.
+    round_wall_secs: Vec<f64>,
+}
+
 /// The protocol driver: pump assignments through the transport, feed
 /// results to the core, dispatch its decisions, and let `eval` answer the
 /// core's evaluation requests.  Purely mechanical — every decision lives
@@ -263,13 +285,18 @@ fn drive(
     cfg: &RunConfig,
     core: &mut CoordinatorCore,
     transport: &mut dyn Transport,
+    batch_size: usize,
     eval: &dyn Fn(&[HostTensor]) -> Result<(f64, f64)>,
-) -> Result<()> {
+) -> Result<DriveStats> {
     let round_len = cfg.policy.round_len();
     let tag = cfg.tag();
+    let mut stats = DriveStats { train_samples: 0, round_wall_secs: Vec::new() };
+    let mut round_t0 = Instant::now();
     while let Some(assignment) = core.begin_block() {
         let result = transport.run_block(&assignment)?;
         core.record_losses(&result.losses);
+        let trained = result.losses.iter().filter(|l| l.is_finite()).count();
+        stats.train_samples += (trained * assignment.gap * batch_size) as u64;
 
         let boundary = core.schedule.is_round_boundary(assignment.k);
         if cfg.algorithm == Algorithm::Nova && boundary {
@@ -317,6 +344,9 @@ fn drive(
         if let BlockOutcome::RoundComplete { round, total_rounds, train_loss, eval_due } =
             core.end_block(assignment.k)
         {
+            // round wall time closes before evaluation so eval cadence
+            // cannot skew the p50/p95 the CLI reports
+            stats.round_wall_secs.push(round_t0.elapsed().as_secs_f64());
             let evaled = if eval_due { Some(eval(&core.global)?) } else { None };
             core.complete_round(assignment.k, train_loss, evaled);
             if cfg.verbose {
@@ -329,9 +359,10 @@ fn drive(
                     core.ledger.total_cost()
                 );
             }
+            round_t0 = Instant::now();
         }
     }
-    Ok(())
+    Ok(stats)
 }
 
 #[cfg(feature = "pjrt")]

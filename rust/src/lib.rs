@@ -13,6 +13,7 @@
 //! execution paths).
 
 pub mod aggregation;
+pub mod bench;
 pub mod clients;
 pub mod comm;
 pub mod config;

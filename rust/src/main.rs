@@ -4,6 +4,7 @@
 //!   train    one federated training run (all knobs exposed)
 //!   repro    regenerate a paper table (table1..table11, baselines, all)
 //!   figure   regenerate a paper figure (1..6)
+//!   bench    kernel/op/end-to-end microbenches -> BENCH_kernels.json
 //!   inspect  print a model's artifact manifest summary
 //!   list     list available experiment presets
 //!   worker   federation-protocol participant over stdin/stdout (spawned
@@ -35,6 +36,7 @@ fn main() {
         "train" => run_train(&args),
         "repro" => run_repro(&args),
         "figure" => run_figure(&args),
+        "bench" => run_bench(&args),
         "inspect" => run_inspect(&args),
         "list" => run_list(),
         "worker" => run_worker(),
@@ -65,6 +67,10 @@ fn print_help() {
          repro   --table table1..table11|baselines|all [--scale smoke|default|full]\n\
                  [--repeats 1] [--out-dir reports] [--verbose]\n\
          figure  --id 1..6 [--scale ...] [--out-dir reports]\n\
+         bench   [--quick] [--threads 0] [--out BENCH_kernels.json]\n\
+                 (SIMD matmul kernels vs scalar, per-op latency, e2e step,\n\
+                  persistent-pool overhead; FEDLAMA_SIMD=scalar|sse2|avx2\n\
+                  forces a narrower dispatch path)\n\
          inspect --model M [--dataset D]   (native zoo manifest when no artifacts)\n\
          list\n\
          worker  (internal: federation-protocol participant on stdin/stdout,\n\
@@ -159,6 +165,15 @@ fn run_train(args: &Args) -> Result<()> {
         metrics.wall_secs,
         (100.0 * metrics.runtime_secs / budget).min(100.0),
     );
+    println!(
+        "throughput: {:.0} assigned samples/s ({} examples); round wall p50 {:.1} ms, \
+         p95 {:.1} ms over {} rounds",
+        metrics.samples_per_sec,
+        metrics.train_samples,
+        metrics.round_wall_ms_pct(50.0),
+        metrics.round_wall_ms_pct(95.0),
+        metrics.round_wall_secs.len(),
+    );
     if let Some(out) = args.get("out") {
         reports::write_report(std::path::Path::new(out), &metrics.to_json().to_string_pretty())?;
         eprintln!("wrote {out}");
@@ -167,6 +182,36 @@ fn run_train(args: &Args) -> Result<()> {
         reports::write_report(std::path::Path::new(curve), &metrics.curve_csv())?;
         eprintln!("wrote {curve}");
     }
+    Ok(())
+}
+
+/// Run the kernel/op/end-to-end microbenches and write the JSON perf
+/// artifact (BENCH_kernels.json at the repo root by default — the
+/// committed baseline the perf trajectory is tracked against).
+fn run_bench(args: &Args) -> Result<()> {
+    let opts = fedlama::bench::BenchOpts {
+        quick: args.bool_or("quick", false),
+        threads: args.usize_or("threads", 0),
+    };
+    let out = args.str_or("out", "BENCH_kernels.json");
+    eprintln!(
+        "benching kernels (quick={}, simd={}) ...",
+        opts.quick,
+        fedlama::runtime::simd::active_isa().name()
+    );
+    let doc = fedlama::bench::run(&opts)?;
+    for k in doc.req("kernels")?.as_arr().unwrap_or(&[]) {
+        println!(
+            "{:14} {:30} {:>7} {:>9.2} GFLOP/s  {:>6.2}x vs scalar",
+            k.get("kernel").and_then(|v| v.as_str()).unwrap_or("?"),
+            k.get("shape").and_then(|v| v.as_str()).unwrap_or("?"),
+            k.get("dispatch").and_then(|v| v.as_str()).unwrap_or("?"),
+            k.get("gflops").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            k.get("speedup_vs_scalar").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        );
+    }
+    reports::write_report(std::path::Path::new(&out), &doc.to_string_pretty())?;
+    eprintln!("wrote {out}");
     Ok(())
 }
 

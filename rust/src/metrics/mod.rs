@@ -34,9 +34,30 @@ pub struct RunMetrics {
     pub per_group: Vec<(String, usize, u64, u64)>,
     /// Coordinator overhead: wall time not spent inside PJRT executables.
     pub runtime_secs: f64,
+    /// Local-training examples *assigned* (block steps x batch size,
+    /// counted for clients that reported a finite block loss).  Exact
+    /// under homogeneous budgets; an upper bound under `--hetero`, where
+    /// a client's budget can run out mid-block.
+    pub train_samples: u64,
+    /// Training throughput: `train_samples` over the summed
+    /// (eval-excluded) round wall time, so the number is invariant to
+    /// `--eval-every` cadence (assigned samples — see `train_samples`
+    /// for the hetero caveat).
+    pub samples_per_sec: f64,
+    /// Wall seconds per completed round, evaluation excluded — feed
+    /// `util::stats::percentile` for the p50/p95 the CLI prints.
+    pub round_wall_secs: Vec<f64>,
 }
 
 impl RunMetrics {
+    /// Round wall-time percentile in milliseconds (0 when no rounds ran).
+    pub fn round_wall_ms_pct(&self, p: f64) -> f64 {
+        if self.round_wall_secs.is_empty() {
+            return 0.0;
+        }
+        1e3 * crate::util::stats::percentile(&self.round_wall_secs, p)
+    }
+
     pub fn record_ledger(&mut self, ledger: &CommLedger) {
         self.total_comm_cost = ledger.total_cost();
         self.total_syncs = ledger.total_syncs();
@@ -82,6 +103,16 @@ impl RunMetrics {
             ("total_comm_cost", Json::num(self.total_comm_cost as f64)),
             ("total_syncs", Json::num(self.total_syncs as f64)),
             ("total_bytes", Json::num(self.total_bytes as f64)),
+            (
+                "throughput",
+                Json::obj(vec![
+                    ("train_samples", Json::num(self.train_samples as f64)),
+                    ("samples_per_sec", Json::num(self.samples_per_sec)),
+                    ("round_wall_ms_p50", Json::num(self.round_wall_ms_pct(50.0))),
+                    ("round_wall_ms_p95", Json::num(self.round_wall_ms_pct(95.0))),
+                    ("rounds_timed", Json::num(self.round_wall_secs.len() as f64)),
+                ]),
+            ),
             (
                 "per_group",
                 Json::arr(self.per_group.iter().map(|(n, d, s, c)| {
@@ -150,5 +181,24 @@ mod tests {
         let parsed = Json::parse(&j.to_string()).unwrap();
         assert_eq!(parsed.get("tag").unwrap().as_str(), Some("fedlama(6,4)"));
         assert_eq!(parsed.get("curve").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn throughput_percentiles_and_json() {
+        let m = RunMetrics {
+            train_samples: 4096,
+            samples_per_sec: 1024.0,
+            round_wall_secs: (1..=100).map(|i| i as f64 * 1e-3).collect(),
+            ..Default::default()
+        };
+        // nearest-rank on 1..=100 ms: p50 -> index 50 -> 51 ms, p95 -> 95 ms
+        assert!((m.round_wall_ms_pct(50.0) - 51.0).abs() < 1e-9);
+        assert!((m.round_wall_ms_pct(95.0) - 95.0).abs() < 1e-9);
+        let t = m.to_json();
+        let tp = t.get("throughput").unwrap();
+        assert_eq!(tp.get("train_samples").unwrap().as_usize(), Some(4096));
+        assert_eq!(tp.get("rounds_timed").unwrap().as_usize(), Some(100));
+        // no rounds -> percentiles report 0 instead of panicking
+        assert_eq!(RunMetrics::default().round_wall_ms_pct(95.0), 0.0);
     }
 }

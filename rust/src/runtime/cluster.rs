@@ -5,10 +5,12 @@
 //! embarrassingly parallel across the active clients: each client owns its
 //! parameters and its private data-sampling RNG stream, and only reads the
 //! shared backend / generator / partition state.  `advance_parallel` fans
-//! the active set across `util::pool::par_map_mut` worker threads; because
-//! every per-client computation is self-contained and f32 accumulation
-//! order inside a client never changes, `threads = N` is **bit-identical**
-//! to `threads = 1` (asserted by `tests/determinism.rs`).
+//! the active set across `util::pool::par_map_mut`, which since the
+//! persistent-pool rewrite reuses long-lived parked workers instead of
+//! spawning threads per block; because chunking stays static, every
+//! per-client computation is self-contained, and f32 accumulation order
+//! inside a client never changes, `threads = N` is **bit-identical** to
+//! `threads = 1` (asserted by `tests/determinism.rs`).
 //!
 //! The PJRT engine is `Rc`-based and `!Sync`, so it cannot take this path;
 //! the coordinator falls back to `advance_serial` whenever

@@ -13,6 +13,7 @@ pub mod graph;
 pub mod manifest;
 pub mod native;
 pub mod ops;
+pub mod simd;
 pub mod tensor;
 pub mod zoo;
 

@@ -1,18 +1,51 @@
-//! The blocked matmul kernels shared by `Dense` and `Conv2d` (im2col).
+//! The blocked matmul kernels shared by `Dense` and `Conv2d` (im2col),
+//! vectorized through `runtime::simd` with a single runtime dispatch
+//! point (AVX2 → SSE2 → unrolled scalar).
 //!
 //! All three kernels fix the f32 accumulation order per output element —
 //! `matmul_acc` tiles the k dimension for cache locality, but within one
 //! output element the additions still happen in strictly increasing k
-//! order, so tiling is bit-identical to the untiled triple loop.  Zero
-//! multiplicands are skipped where that is value-preserving (x + 0·w = x),
-//! which turns post-ReLU sparsity into real savings.
+//! order, so tiling is bit-identical to the untiled triple loop.  The
+//! SIMD paths vectorize **across independent output elements** (the n
+//! dimension for `matmul_acc`/`matmul_at_acc`; a k-panel of output
+//! columns for `matmul_bt`) with one IEEE mul + add per step and no FMA,
+//! so every dispatch path produces bit-identical results on every machine
+//! and thread count — asserted shape-by-shape in `tests/simd_kernels.rs`.
+//!
+//! Zero multiplicands are skipped where that is value-preserving
+//! (x + 0·w = x), which turns post-ReLU sparsity into real savings.  The
+//! zero test is hoisted to one per-row-tile scan, so the dense fast path
+//! runs without a per-k-element branch.
+
+use crate::runtime::simd::{self, Isa};
+use std::cell::RefCell;
 
 /// k-dimension tile: big enough to amortize loop overhead, small enough
 /// that the touched B rows stay cache-resident between row passes.
 const KC: usize = 256;
 
-/// `c[m,n] += a[m,k] · b[k,n]` (all row-major).
+thread_local! {
+    /// Per-thread scratch for `matmul_bt`'s packed B column-panels (the
+    /// buffer is fully rewritten per panel before any read, so reuse
+    /// cannot change results).
+    static BT_PANEL: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// `c[m,n] += a[m,k] · b[k,n]` (all row-major), on the detected path.
 pub fn matmul_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    matmul_acc_with(simd::active_isa(), a, b, c, m, k, n)
+}
+
+/// `matmul_acc` on an explicit dispatch path (benches and oracle tests).
+pub fn matmul_acc_with(
+    isa: Isa,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
@@ -21,13 +54,18 @@ pub fn matmul_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: us
         for i in 0..m {
             let arow = &a[i * k + k0..i * k + k1];
             let crow = &mut c[i * n..(i + 1) * n];
-            for (dk, &av) in arow.iter().enumerate() {
-                if av == 0.0 {
-                    continue;
+            if arow.iter().any(|&v| v == 0.0) {
+                // sparse row-tile: keep the value-preserving skip
+                for (dk, &av) in arow.iter().enumerate() {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    simd::axpy(isa, crow, av, &b[(k0 + dk) * n..(k0 + dk + 1) * n]);
                 }
-                let brow = &b[(k0 + dk) * n..(k0 + dk + 1) * n];
-                for (cv, &bv) in crow.iter_mut().zip(brow) {
-                    *cv += av * bv;
+            } else {
+                // dense row-tile: branch-free accumulation
+                for (dk, &av) in arow.iter().enumerate() {
+                    simd::axpy(isa, crow, av, &b[(k0 + dk) * n..(k0 + dk + 1) * n]);
                 }
             }
         }
@@ -38,19 +76,35 @@ pub fn matmul_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: us
 /// kernel.  Per gw element the accumulation runs over m in increasing
 /// order.
 pub fn matmul_at_acc(a: &[f32], dy: &[f32], gw: &mut [f32], m: usize, k: usize, n: usize) {
+    matmul_at_acc_with(simd::active_isa(), a, dy, gw, m, k, n)
+}
+
+/// `matmul_at_acc` on an explicit dispatch path.
+pub fn matmul_at_acc_with(
+    isa: Isa,
+    a: &[f32],
+    dy: &[f32],
+    gw: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(dy.len(), m * n);
     debug_assert_eq!(gw.len(), k * n);
     for i in 0..m {
         let arow = &a[i * k..(i + 1) * k];
         let dyrow = &dy[i * n..(i + 1) * n];
-        for (l, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
+        if arow.iter().any(|&v| v == 0.0) {
+            for (l, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                simd::axpy(isa, &mut gw[l * n..(l + 1) * n], av, dyrow);
             }
-            let grow = &mut gw[l * n..(l + 1) * n];
-            for (g, &dv) in grow.iter_mut().zip(dyrow) {
-                *g += av * dv;
+        } else {
+            for (l, &av) in arow.iter().enumerate() {
+                simd::axpy(isa, &mut gw[l * n..(l + 1) * n], av, dyrow);
             }
         }
     }
@@ -60,19 +114,54 @@ pub fn matmul_at_acc(a: &[f32], dy: &[f32], gw: &mut [f32], m: usize, k: usize, 
 /// kernel.  Fully writes `dx`; per element the dot product runs over n in
 /// increasing order.
 pub fn matmul_bt(dy: &[f32], b: &[f32], dx: &mut [f32], m: usize, n: usize, k: usize) {
+    matmul_bt_with(simd::active_isa(), dy, b, dx, m, n, k)
+}
+
+/// `matmul_bt` on an explicit dispatch path.
+///
+/// The wide paths pack B into column-panels of `lane_width` rows —
+/// `packed[j*w + t] = b[(l0+t)*n + j]` — so lane t accumulates output
+/// element `dx[i, l0+t]` over j in increasing order, exactly the scalar
+/// reduction order per element.
+pub fn matmul_bt_with(
+    isa: Isa,
+    dy: &[f32],
+    b: &[f32],
+    dx: &mut [f32],
+    m: usize,
+    n: usize,
+    k: usize,
+) {
     debug_assert_eq!(dy.len(), m * n);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(dx.len(), m * k);
+    let w = isa.lane_width();
+    let k_panels = if w > 1 { k - k % w } else { 0 };
+    if k_panels > 0 {
+        BT_PANEL.with(|p| {
+            let mut packed = p.borrow_mut();
+            packed.resize(n * w, 0.0);
+            let mut l0 = 0;
+            while l0 < k_panels {
+                for t in 0..w {
+                    let brow = &b[(l0 + t) * n..(l0 + t + 1) * n];
+                    for (j, &bv) in brow.iter().enumerate() {
+                        packed[j * w + t] = bv;
+                    }
+                }
+                for i in 0..m {
+                    let dyrow = &dy[i * n..(i + 1) * n];
+                    simd::dot_panel(isa, dyrow, &packed[..], &mut dx[i * k + l0..i * k + l0 + w]);
+                }
+                l0 += w;
+            }
+        });
+    }
+    // remainder columns (and the whole matrix on the scalar path)
     for i in 0..m {
         let dyrow = &dy[i * n..(i + 1) * n];
-        let dxrow = &mut dx[i * k..(i + 1) * k];
-        for (l, xv) in dxrow.iter_mut().enumerate() {
-            let brow = &b[l * n..(l + 1) * n];
-            let mut acc = 0.0f32;
-            for (&dv, &bv) in dyrow.iter().zip(brow) {
-                acc += dv * bv;
-            }
-            *xv = acc;
+        for l in k_panels..k {
+            dx[i * k + l] = simd::scalar::dot(dyrow, &b[l * n..(l + 1) * n]);
         }
     }
 }
@@ -80,6 +169,7 @@ pub fn matmul_bt(dy: &[f32], b: &[f32], dx: &mut [f32], m: usize, n: usize, k: u
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::simd::supported_isas;
     use crate::util::rng::Rng;
 
     fn naive_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
@@ -103,16 +193,19 @@ mod tests {
     #[test]
     fn tiled_matmul_is_bit_identical_to_naive() {
         // k = 600 spans three KC tiles; results must match the untiled
-        // loop exactly, not approximately.
+        // loop exactly, not approximately — on every dispatch path.
         let (m, k, n) = (3, 600, 5);
         let mut rng = Rng::new(1);
         let a = randv(&mut rng, m * k);
         let b = randv(&mut rng, k * n);
-        let mut c1 = randv(&mut rng, m * n);
-        let mut c2 = c1.clone();
-        matmul_acc(&a, &b, &mut c1, m, k, n);
-        naive_acc(&a, &b, &mut c2, m, k, n);
-        assert_eq!(c1, c2);
+        let c0 = randv(&mut rng, m * n);
+        let mut want = c0.clone();
+        naive_acc(&a, &b, &mut want, m, k, n);
+        for isa in supported_isas() {
+            let mut c = c0.clone();
+            matmul_acc_with(isa, &a, &b, &mut c, m, k, n);
+            assert_eq!(c, want, "matmul_acc diverged on {}", isa.name());
+        }
     }
 
     #[test]
@@ -153,5 +246,54 @@ mod tests {
         matmul_acc(&a, &b, &mut c1, m, k, n);
         naive_acc(&a, &b, &mut c2, m, k, n);
         assert_eq!(c1, c2);
+    }
+
+    #[test]
+    fn mixed_sparse_and_dense_rows_agree_on_every_path() {
+        // Row 0 fully dense (hits the branch-free fast path), row 1 with
+        // scattered zeros (hits the skip path), row 2 all-zero: the
+        // hoisted per-row-tile sparsity check must not change a bit.
+        let (m, k, n) = (3, 40, 13);
+        let mut rng = Rng::new(4);
+        let mut a = randv(&mut rng, m * k);
+        for l in 0..k {
+            if l % 3 == 0 {
+                a[k + l] = 0.0; // row 1: every third element zero
+            }
+            a[2 * k + l] = 0.0; // row 2: all zero
+        }
+        let b = randv(&mut rng, k * n);
+        let dy = randv(&mut rng, m * n);
+        let c0 = randv(&mut rng, m * n);
+
+        let mut c_want = c0.clone();
+        naive_acc(&a, &b, &mut c_want, m, k, n);
+        let mut gw_want = vec![0.0f32; k * n];
+        matmul_at_acc_with(Isa::Scalar, &a, &dy, &mut gw_want, m, k, n);
+        for isa in supported_isas() {
+            let mut c = c0.clone();
+            matmul_acc_with(isa, &a, &b, &mut c, m, k, n);
+            assert_eq!(c, c_want, "matmul_acc sparse/dense diverged on {}", isa.name());
+            let mut gw = vec![0.0f32; k * n];
+            matmul_at_acc_with(isa, &a, &dy, &mut gw, m, k, n);
+            assert_eq!(gw, gw_want, "matmul_at_acc sparse/dense diverged on {}", isa.name());
+        }
+    }
+
+    #[test]
+    fn bt_panel_path_is_bit_identical_to_scalar() {
+        // k values around the 8- and 4-lane panel boundaries, incl. m=1.
+        let mut rng = Rng::new(5);
+        for &(m, n, k) in &[(1usize, 5usize, 8usize), (3, 7, 9), (2, 16, 12), (4, 1, 17)] {
+            let dy = randv(&mut rng, m * n);
+            let b = randv(&mut rng, k * n);
+            let mut want = vec![0.0f32; m * k];
+            matmul_bt_with(Isa::Scalar, &dy, &b, &mut want, m, n, k);
+            for isa in supported_isas() {
+                let mut dx = vec![-3.0f32; m * k];
+                matmul_bt_with(isa, &dy, &b, &mut dx, m, n, k);
+                assert_eq!(dx, want, "matmul_bt diverged on {} (m={m} n={n} k={k})", isa.name());
+            }
+        }
     }
 }

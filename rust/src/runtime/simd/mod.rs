@@ -1,0 +1,214 @@
+//! Portable wide-lane f32 kernels behind a single dispatch point.
+//!
+//! The matmul hot path (`runtime::ops::matmul`) is built from two lane
+//! primitives — `axpy` (dst += a·src, vectorized across the output-column
+//! dimension) and `dot_panel` (a column-panel dot whose lanes each own one
+//! output element) — implemented three times:
+//!
+//!   AVX2 (8 lanes) → SSE2 (4 lanes) → unrolled scalar (always available)
+//!
+//! and selected once per process by runtime feature detection
+//! (`active_isa`), so one binary runs the widest path the machine
+//! supports.  `FEDLAMA_SIMD=scalar|sse2|avx2` forces a (supported)
+//! narrower path — useful for A/B benchmarks and CI.
+//!
+//! **Numerics contract** (what keeps `threads = N` and every transport
+//! bit-identical on the SIMD path): each output element is produced by the
+//! same sequence of IEEE-754 f32 operations in the same order on every
+//! path — one multiply + one add per accumulation step, never an FMA, with
+//! lanes only ever spanning *independent* output elements.  The wide
+//! kernels are therefore bit-identical to the scalar ones, which are in
+//! turn the historical kernels restructured.  See rust/DESIGN.md
+//! ("Performance") and the oracle tests in `tests/simd_kernels.rs`.
+
+pub mod scalar;
+#[cfg(target_arch = "x86_64")]
+pub mod x86;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// The instruction-set ladder. Ordering is "wider first".
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Isa {
+    /// 8 f32 lanes (x86-64 AVX2).
+    Avx2,
+    /// 4 f32 lanes (x86-64 SSE2 — baseline on every x86-64).
+    Sse2,
+    /// 1 "lane": the unrolled scalar fallback, available everywhere.
+    Scalar,
+}
+
+impl Isa {
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Avx2 => "avx2",
+            Isa::Sse2 => "sse2",
+            Isa::Scalar => "scalar",
+        }
+    }
+
+    /// f32 elements per vector register on this path.
+    pub fn lane_width(self) -> usize {
+        match self {
+            Isa::Avx2 => 8,
+            Isa::Sse2 => 4,
+            Isa::Scalar => 1,
+        }
+    }
+
+    fn code(self) -> u8 {
+        match self {
+            Isa::Scalar => 1,
+            Isa::Sse2 => 2,
+            Isa::Avx2 => 3,
+        }
+    }
+}
+
+/// Cached dispatch decision: 0 = undecided, otherwise `Isa::code`.
+static ACTIVE: AtomicU8 = AtomicU8::new(0);
+
+/// The widest path the running CPU supports.
+pub fn best_supported() -> Isa {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::is_x86_feature_detected!("avx2") {
+            return Isa::Avx2;
+        }
+        if std::is_x86_feature_detected!("sse2") {
+            return Isa::Sse2;
+        }
+    }
+    Isa::Scalar
+}
+
+/// Every path the running CPU supports (scalar first, then widening) —
+/// the iteration set for bit-identity tests and A/B benches.
+pub fn supported_isas() -> Vec<Isa> {
+    let mut out = vec![Isa::Scalar];
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::is_x86_feature_detected!("sse2") {
+            out.push(Isa::Sse2);
+        }
+        if std::is_x86_feature_detected!("avx2") {
+            out.push(Isa::Avx2);
+        }
+    }
+    out
+}
+
+fn detect() -> Isa {
+    let best = best_supported();
+    // Env override can only *narrow* the dispatch: an unsupported or
+    // unknown request silently falls back to the detected best, so a
+    // stale FEDLAMA_SIMD can never select an illegal instruction.
+    match std::env::var("FEDLAMA_SIMD").ok().as_deref() {
+        Some("scalar") => Isa::Scalar,
+        Some("sse2") if best != Isa::Scalar => Isa::Sse2,
+        Some("avx2") if best == Isa::Avx2 => Isa::Avx2,
+        _ => best,
+    }
+}
+
+/// The process-wide dispatch decision (detected once, then cached).
+pub fn active_isa() -> Isa {
+    match ACTIVE.load(Ordering::Relaxed) {
+        1 => Isa::Scalar,
+        2 => Isa::Sse2,
+        3 => Isa::Avx2,
+        _ => {
+            let isa = detect();
+            ACTIVE.store(isa.code(), Ordering::Relaxed);
+            isa
+        }
+    }
+}
+
+/// `dst[j] += a * src[j]` on the given path.  Lanes span independent
+/// elements j, so every path is bit-identical.
+pub fn axpy(isa: Isa, dst: &mut [f32], a: f32, src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    match isa {
+        // SAFETY: Isa::Avx2 / Isa::Sse2 are only produced by runtime
+        // feature detection (or by tests iterating `supported_isas`).
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { x86::axpy_avx2(dst, a, src) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Sse2 => unsafe { x86::axpy_sse2(dst, a, src) },
+        _ => scalar::axpy(dst, a, src),
+    }
+}
+
+/// Panel dot on the given path: `out[t] = Σ_j dy[j] * packed[j*w + t]`
+/// with `w = out.len() = isa.lane_width()`.  Each lane element reduces
+/// over j in increasing order (mul + add, no FMA), so lane t is bitwise
+/// the scalar dot of `dy` with packed column t.
+pub fn dot_panel(isa: Isa, dy: &[f32], packed: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(out.len(), isa.lane_width());
+    debug_assert_eq!(packed.len(), dy.len() * isa.lane_width());
+    match isa {
+        // SAFETY: detection-gated as in `axpy`.
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { x86::dot_panel8_avx2(dy, packed, out) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Sse2 => unsafe { x86::dot_panel4_sse2(dy, packed, out) },
+        _ => scalar::dot_panel(dy, packed, out),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn ladder_metadata() {
+        assert_eq!(Isa::Avx2.lane_width(), 8);
+        assert_eq!(Isa::Sse2.lane_width(), 4);
+        assert_eq!(Isa::Scalar.lane_width(), 1);
+        assert_eq!(Isa::Scalar.name(), "scalar");
+        let isas = supported_isas();
+        assert_eq!(isas[0], Isa::Scalar);
+        assert!(isas.contains(&active_isa()));
+        // the cached decision is stable
+        assert_eq!(active_isa(), active_isa());
+    }
+
+    #[test]
+    fn axpy_paths_are_bit_identical_across_remainders() {
+        let mut rng = Rng::new(9);
+        for n in [0usize, 1, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 33, 100] {
+            let src = randv(&mut rng, n);
+            let base = randv(&mut rng, n);
+            let mut want = base.clone();
+            scalar::axpy(&mut want, -0.75, &src);
+            for isa in supported_isas() {
+                let mut got = base.clone();
+                axpy(isa, &mut got, -0.75, &src);
+                assert_eq!(got, want, "axpy diverged on {} at n={n}", isa.name());
+            }
+        }
+    }
+
+    #[test]
+    fn dot_panel_paths_match_scalar_oracle() {
+        let mut rng = Rng::new(10);
+        for n in [0usize, 1, 2, 7, 8, 63, 64, 65] {
+            let dy = randv(&mut rng, n);
+            for isa in supported_isas() {
+                let w = isa.lane_width();
+                let packed = randv(&mut rng, n * w);
+                let mut want = vec![0.0f32; w];
+                scalar::dot_panel(&dy, &packed, &mut want);
+                let mut got = vec![7.0f32; w]; // stale values must be overwritten
+                dot_panel(isa, &dy, &packed, &mut got);
+                assert_eq!(got, want, "dot_panel diverged on {} at n={n}", isa.name());
+            }
+        }
+    }
+}

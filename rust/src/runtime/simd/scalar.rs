@@ -1,0 +1,87 @@
+//! Always-available scalar lane kernels (unrolled).
+//!
+//! These are the reference implementations the wide-lane paths must match
+//! **bitwise**: every element is produced by exactly one IEEE-754 f32
+//! multiply followed by one add (never a fused multiply-add), in the same
+//! order as the historical kernels.  The 4x unroll only restructures the
+//! loop — element j is still `dst[j] + a * src[j]`, so unrolling cannot
+//! change a single bit.
+
+/// `dst[j] += a * src[j]` for every j (one mul + one add per element).
+pub fn axpy(dst: &mut [f32], a: f32, src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    let n = dst.len();
+    let n4 = n - n % 4;
+    let mut j = 0;
+    while j < n4 {
+        dst[j] += a * src[j];
+        dst[j + 1] += a * src[j + 1];
+        dst[j + 2] += a * src[j + 2];
+        dst[j + 3] += a * src[j + 3];
+        j += 4;
+    }
+    while j < n {
+        dst[j] += a * src[j];
+        j += 1;
+    }
+}
+
+/// Plain dot product, accumulated in increasing index order.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    for (&x, &y) in a.iter().zip(b) {
+        acc += x * y;
+    }
+    acc
+}
+
+/// Generic-width panel dot: `out[t] = Σ_j dy[j] * packed[j * w + t]` with
+/// `w = out.len()`, each lane element accumulated in increasing j order.
+/// This is the oracle the fixed-width SIMD panel kernels are tested
+/// against.
+pub fn dot_panel(dy: &[f32], packed: &[f32], out: &mut [f32]) {
+    let w = out.len();
+    debug_assert_eq!(packed.len(), dy.len() * w);
+    out.fill(0.0);
+    for (j, &d) in dy.iter().enumerate() {
+        let row = &packed[j * w..(j + 1) * w];
+        for (o, &p) in out.iter_mut().zip(row) {
+            *o += d * p;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_matches_plain_loop_on_all_remainders() {
+        for n in 0..17 {
+            let src: Vec<f32> = (0..n).map(|i| 0.25 * i as f32 - 1.0).collect();
+            let mut d1: Vec<f32> = (0..n).map(|i| i as f32).collect();
+            let mut d2 = d1.clone();
+            axpy(&mut d1, 1.5, &src);
+            for (d, &s) in d2.iter_mut().zip(&src) {
+                *d += 1.5 * s;
+            }
+            assert_eq!(d1, d2, "n={n}");
+        }
+    }
+
+    #[test]
+    fn dot_and_panel_agree() {
+        let dy = [1.0f32, -2.0, 0.5, 3.0];
+        let b = [2.0f32, 0.25, -1.0, 4.0];
+        // w = 1 panel is exactly the dot product
+        let packed: Vec<f32> = b.to_vec();
+        let mut out = [0.0f32];
+        dot_panel(&dy, &packed, &mut out);
+        assert_eq!(out[0], dot(&dy, &b));
+        // empty reduction is 0.0 and still fully writes out
+        let mut out = [7.0f32, 7.0];
+        dot_panel(&[], &[], &mut out);
+        assert_eq!(out, [0.0, 0.0]);
+    }
+}

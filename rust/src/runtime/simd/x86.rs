@@ -1,0 +1,98 @@
+//! x86-64 wide-lane kernels (AVX2: 8 f32 lanes, SSE2: 4 f32 lanes).
+//!
+//! Numerics contract: every kernel uses **separate** vector multiply and
+//! add instructions (`mulps`/`addps` families, never FMA), so each lane
+//! element sees exactly the IEEE-754 f32 mul + add sequence of the scalar
+//! reference in `super::scalar` — the wide paths are bit-identical to the
+//! scalar ones on every input, not approximately equal.  Rust never
+//! contracts scalar `a * b + c` into an FMA either, so the contract holds
+//! in both directions.
+//!
+//! All loads/stores are unaligned (`loadu`/`storeu`): callers pass
+//! arbitrary `Vec<f32>` slices.
+
+#![cfg(target_arch = "x86_64")]
+
+use std::arch::x86_64::*;
+
+/// `dst[j] += a * src[j]` — AVX2 (8 lanes), scalar tail for `len % 8`.
+///
+/// # Safety
+/// The caller must have verified that the running CPU supports AVX2
+/// (`Isa::Avx2` is only ever produced by runtime feature detection).
+#[target_feature(enable = "avx2")]
+pub unsafe fn axpy_avx2(dst: &mut [f32], a: f32, src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    let n = dst.len();
+    let va = _mm256_set1_ps(a);
+    let mut j = 0;
+    while j + 8 <= n {
+        let s = _mm256_loadu_ps(src.as_ptr().add(j));
+        let d = _mm256_loadu_ps(dst.as_ptr().add(j));
+        _mm256_storeu_ps(dst.as_mut_ptr().add(j), _mm256_add_ps(d, _mm256_mul_ps(va, s)));
+        j += 8;
+    }
+    while j < n {
+        dst[j] += a * src[j];
+        j += 1;
+    }
+}
+
+/// `dst[j] += a * src[j]` — SSE2 (4 lanes), scalar tail for `len % 4`.
+///
+/// # Safety
+/// The caller must have verified that the running CPU supports SSE2
+/// (always true on x86-64, but `Isa::Sse2` is still detection-gated).
+#[target_feature(enable = "sse2")]
+pub unsafe fn axpy_sse2(dst: &mut [f32], a: f32, src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    let n = dst.len();
+    let va = _mm_set1_ps(a);
+    let mut j = 0;
+    while j + 4 <= n {
+        let s = _mm_loadu_ps(src.as_ptr().add(j));
+        let d = _mm_loadu_ps(dst.as_ptr().add(j));
+        _mm_storeu_ps(dst.as_mut_ptr().add(j), _mm_add_ps(d, _mm_mul_ps(va, s)));
+        j += 4;
+    }
+    while j < n {
+        dst[j] += a * src[j];
+        j += 1;
+    }
+}
+
+/// 8-lane panel dot: `out[t] = Σ_j dy[j] * packed[j * 8 + t]`, each lane
+/// element accumulated in increasing j order with mul + add (no FMA) —
+/// bit-identical to `scalar::dot_panel` with `w = 8`.
+///
+/// # Safety
+/// Requires AVX2 (detection-gated); `out.len() == 8` and
+/// `packed.len() == dy.len() * 8` (debug-asserted).
+#[target_feature(enable = "avx2")]
+pub unsafe fn dot_panel8_avx2(dy: &[f32], packed: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(out.len(), 8);
+    debug_assert_eq!(packed.len(), dy.len() * 8);
+    let mut acc = _mm256_setzero_ps();
+    for (j, &d) in dy.iter().enumerate() {
+        let row = _mm256_loadu_ps(packed.as_ptr().add(j * 8));
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(d), row));
+    }
+    _mm256_storeu_ps(out.as_mut_ptr(), acc);
+}
+
+/// 4-lane panel dot, the SSE2 counterpart of `dot_panel8_avx2`.
+///
+/// # Safety
+/// Requires SSE2 (detection-gated); `out.len() == 4` and
+/// `packed.len() == dy.len() * 4` (debug-asserted).
+#[target_feature(enable = "sse2")]
+pub unsafe fn dot_panel4_sse2(dy: &[f32], packed: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(out.len(), 4);
+    debug_assert_eq!(packed.len(), dy.len() * 4);
+    let mut acc = _mm_setzero_ps();
+    for (j, &d) in dy.iter().enumerate() {
+        let row = _mm_loadu_ps(packed.as_ptr().add(j * 4));
+        acc = _mm_add_ps(acc, _mm_mul_ps(_mm_set1_ps(d), row));
+    }
+    _mm_storeu_ps(out.as_mut_ptr(), acc);
+}

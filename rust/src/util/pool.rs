@@ -1,10 +1,233 @@
-//! Scoped parallel-map over clients.
+//! Deterministic parallel-map over a **persistent** worker pool.
 //!
-//! Substrate: no rayon/tokio offline, so client fan-out uses
-//! `std::thread::scope` with a work-stealing-free static chunking that is
-//! deterministic (each worker owns a fixed index stride).  The PJRT CPU
-//! client is itself multi-threaded for large ops, so the pool is for
-//! overlapping many small per-client executions.
+//! Substrate: no rayon/tokio offline.  Historically every `par_map*` call
+//! spawned fresh `std::thread::scope` threads; at federated scale (one
+//! fan-out per training block) thread creation became measurable, so the
+//! workers are now long-lived: spawned lazily on first use, parked on a
+//! condvar between calls, and reused by every subsequent fan-out
+//! (`runtime::cluster`, per-block parallelism, benches).
+//!
+//! Determinism is unchanged: work is split into the same contiguous
+//! per-call chunks as before (static chunking keyed by the `threads`
+//! argument, no work stealing), each chunk writes its own disjoint output
+//! slots, and the caller blocks until every chunk finished — so which
+//! worker runs which chunk (and how many workers exist) can never
+//! influence results.  `threads <= 1` still runs inline.
+//!
+//! Lifecycle: the pool is a lazy global; `shutdown()` parks it cleanly
+//! (signals, wakes, joins) and the next parallel call respawns it.  A
+//! panicking task is contained on the worker (the worker survives for the
+//! next call) and re-raised on the caller **after** every sibling chunk
+//! finished, so borrowed inputs never outlive the call.
+
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Upper bound on pool size: oversubscribing beyond this only adds
+/// scheduler pressure (chunk counts are not capped — excess chunks queue).
+const MAX_WORKERS: usize = 64;
+
+struct PoolState {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    work_cv: Condvar,
+}
+
+struct Pool {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+static POOL: Mutex<Option<Pool>> = Mutex::new(None);
+/// Cumulative workers ever spawned (reuse observability; see tests).
+static SPAWNED_TOTAL: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// True on pool worker threads.  A fan-out issued from *inside* a
+    /// pool task must not wait on the same fixed-size pool (all workers
+    /// could be blocked on outer chunks — a deadlock the historical
+    /// per-call `thread::scope` never had), so nested `run_tasks` calls
+    /// on worker threads run their chunks inline instead.
+    static IS_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    IS_POOL_WORKER.with(|f| f.set(true));
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if let Some(j) = st.jobs.pop_front() {
+                    break j;
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        // Jobs are wrapped by `run_tasks` and never unwind; `job()` is
+        // still the only uncontained call site, so keep it last.
+        job();
+    }
+}
+
+/// Queue `jobs` on the global pool, growing it to at least `want` workers
+/// (capped).  Spawns lazily: a process that never fans out never spawns.
+fn submit(jobs: Vec<Job>, want: usize) {
+    let mut guard = POOL.lock().unwrap();
+    let pool = guard.get_or_insert_with(|| Pool {
+        shared: Arc::new(Shared {
+            state: Mutex::new(PoolState { jobs: VecDeque::new(), shutdown: false }),
+            work_cv: Condvar::new(),
+        }),
+        handles: Vec::new(),
+    });
+    let want = want.clamp(1, MAX_WORKERS);
+    while pool.handles.len() < want {
+        let shared = Arc::clone(&pool.shared);
+        let handle = std::thread::Builder::new()
+            .name(format!("fedlama-pool-{}", pool.handles.len()))
+            .spawn(move || worker_loop(shared))
+            .expect("failed to spawn pool worker");
+        pool.handles.push(handle);
+        SPAWNED_TOTAL.fetch_add(1, Ordering::Relaxed);
+    }
+    {
+        let mut st = pool.shared.state.lock().unwrap();
+        st.jobs.extend(jobs);
+    }
+    pool.shared.work_cv.notify_all();
+}
+
+/// Cumulative number of worker threads ever spawned by this process —
+/// stable across repeated `par_map*` calls once the pool is warm.
+pub fn workers_spawned_total() -> usize {
+    SPAWNED_TOTAL.load(Ordering::Relaxed)
+}
+
+/// Live worker count (0 when the pool is not running).
+pub fn pool_size() -> usize {
+    POOL.lock().unwrap().as_ref().map(|p| p.handles.len()).unwrap_or(0)
+}
+
+/// Shut the pool down cleanly: signal, wake, join.  Queued jobs finish
+/// first.  The next parallel call transparently respawns the pool, so
+/// this is safe to call at any quiescent point (process exit, tests).
+pub fn shutdown() {
+    let pool = POOL.lock().unwrap().take();
+    if let Some(mut pool) = pool {
+        {
+            let mut st = pool.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        pool.shared.work_cv.notify_all();
+        for h in pool.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Counts completed sibling tasks so the caller can block until its
+/// borrows are released by every worker.
+struct Latch {
+    remaining: Mutex<usize>,
+    done_cv: Condvar,
+}
+
+impl Latch {
+    fn new(n: usize) -> Latch {
+        Latch { remaining: Mutex::new(n), done_cv: Condvar::new() }
+    }
+    fn count_down(&self) {
+        let mut g = self.remaining.lock().unwrap();
+        *g -= 1;
+        if *g == 0 {
+            self.done_cv.notify_all();
+        }
+    }
+    fn wait(&self) {
+        let mut g = self.remaining.lock().unwrap();
+        while *g > 0 {
+            g = self.done_cv.wait(g).unwrap();
+        }
+    }
+}
+
+/// Run `tasks` to completion: the first on the calling thread, the rest
+/// on the persistent pool.  Returns only after **every** task finished
+/// (even when one panicked — the panic is re-raised here afterwards), so
+/// tasks may borrow from the caller's frame.
+///
+/// Safe to call from within a pool task: nested calls on worker threads
+/// execute their chunks inline, in order (bit-identical — chunks are
+/// disjoint and chunk order equals serial order), instead of deadlocking
+/// the fixed-size pool.
+pub fn run_tasks(tasks: Vec<Box<dyn FnOnce() + Send + '_>>) {
+    let n = tasks.len();
+    if n == 0 {
+        return;
+    }
+    if IS_POOL_WORKER.with(|f| f.get()) {
+        // Nested fan-out on a worker: no remote borrows outstanding, so
+        // running (and unwinding) inline is safe.
+        for t in tasks {
+            t();
+        }
+        return;
+    }
+    let mut iter = tasks.into_iter();
+    let local = iter.next().expect("n >= 1");
+    if n == 1 {
+        // No remote borrows outstanding: run (and unwind) directly.
+        local();
+        return;
+    }
+    let latch = Arc::new(Latch::new(n - 1));
+    let panicked = Arc::new(AtomicBool::new(false));
+    let mut remote: Vec<Job> = Vec::with_capacity(n - 1);
+    for t in iter {
+        // SAFETY: `run_tasks` does not return (or unwind) before the
+        // latch has counted every remote task down, so the non-'static
+        // borrows captured by `t` strictly outlive its execution.
+        let t = unsafe { erase_lifetime(t) };
+        let latch = Arc::clone(&latch);
+        let panicked = Arc::clone(&panicked);
+        remote.push(Box::new(move || {
+            if catch_unwind(AssertUnwindSafe(t)).is_err() {
+                panicked.store(true, Ordering::SeqCst);
+            }
+            latch.count_down();
+        }));
+    }
+    submit(remote, n - 1);
+    let local_ok = catch_unwind(AssertUnwindSafe(local)).is_ok();
+    latch.wait();
+    if !local_ok || panicked.load(Ordering::SeqCst) {
+        panic!("pool task panicked");
+    }
+}
+
+/// Pretend a scoped task is `'static` so it can cross into the persistent
+/// pool's queue.
+///
+/// # Safety
+/// The caller must not return (or unwind) before the task has finished
+/// executing — `run_tasks` guarantees this with its completion latch.
+unsafe fn erase_lifetime<'a>(
+    t: Box<dyn FnOnce() + Send + 'a>,
+) -> Box<dyn FnOnce() + Send + 'static> {
+    std::mem::transmute::<Box<dyn FnOnce() + Send + 'a>, Box<dyn FnOnce() + Send + 'static>>(t)
+}
 
 /// Parallel map `f(i)` for `i in 0..n`, preserving output order.
 /// `threads == 0 or 1` runs inline (deterministic and allocation-free).
@@ -21,17 +244,20 @@ where
         return (0..n).map(f).collect();
     }
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
-    let chunks = split_mut_indexed(&mut out, threads);
-    std::thread::scope(|s| {
-        for (offset, chunk) in chunks {
-            let f = &f;
-            s.spawn(move || {
-                for (j, slot) in chunk.iter_mut().enumerate() {
-                    *slot = Some(f(offset + j));
-                }
-            });
-        }
-    });
+    {
+        let f = &f;
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = split_mut_indexed(&mut out, threads)
+            .into_iter()
+            .map(|(offset, chunk)| {
+                Box::new(move || {
+                    for (j, slot) in chunk.iter_mut().enumerate() {
+                        *slot = Some(f(offset + j));
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        run_tasks(tasks);
+    }
     out.into_iter().map(|v| v.expect("par_map worker panicked")).collect()
 }
 
@@ -57,18 +283,25 @@ where
         return items.iter_mut().enumerate().map(|(i, it)| f(i, it)).collect();
     }
     let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
-    let item_chunks = split_mut_indexed(items, threads);
-    let out_chunks = split_mut_indexed(&mut out, threads);
-    std::thread::scope(|s| {
-        for ((offset, ichunk), (_, ochunk)) in item_chunks.into_iter().zip(out_chunks) {
-            let f = &f;
-            s.spawn(move || {
-                for (j, (item, slot)) in ichunk.iter_mut().zip(ochunk.iter_mut()).enumerate() {
-                    *slot = Some(f(offset + j, item));
-                }
-            });
-        }
-    });
+    {
+        let f = &f;
+        let item_chunks = split_mut_indexed(items, threads);
+        let out_chunks = split_mut_indexed(&mut out, threads);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = item_chunks
+            .into_iter()
+            .zip(out_chunks)
+            .map(|((offset, ichunk), (_, ochunk))| {
+                Box::new(move || {
+                    for (j, (item, slot)) in
+                        ichunk.iter_mut().zip(ochunk.iter_mut()).enumerate()
+                    {
+                        *slot = Some(f(offset + j, item));
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        run_tasks(tasks);
+    }
     out.into_iter().map(|v| v.expect("par_map_mut worker panicked")).collect()
 }
 
@@ -152,5 +385,30 @@ mod tests {
         assert_eq!(out.len(), 23);
         let mut empty: Vec<u8> = Vec::new();
         assert!(par_map_mut(&mut empty, 4, |i, _| i).is_empty());
+    }
+
+    #[test]
+    fn nested_par_map_runs_inline_instead_of_deadlocking() {
+        // outer chunk on a worker thread fans out again: the nested call
+        // must run inline (same results, no deadlock)
+        let out = par_map(4, 2, |i| par_map(3, 2, move |j| i * 10 + j));
+        let want: Vec<Vec<usize>> =
+            (0..4).map(|i| (0..3).map(|j| i * 10 + j).collect()).collect();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn panicking_task_is_contained_and_reraised() {
+        let hit = std::panic::catch_unwind(|| {
+            par_map(8, 4, |i| {
+                if i == 5 {
+                    panic!("boom");
+                }
+                i
+            })
+        });
+        assert!(hit.is_err(), "panic must propagate to the caller");
+        // the pool survives a panicking task
+        assert_eq!(par_map(6, 3, |i| i + 1), vec![1, 2, 3, 4, 5, 6]);
     }
 }

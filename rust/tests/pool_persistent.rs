@@ -1,0 +1,62 @@
+//! Integration tests for the persistent worker pool (`util::pool`).
+//!
+//! The contract: `par_map{,_mut}` over the pool matches the serial
+//! (`threads = 1`) path exactly — same outputs in the same order, same
+//! item mutations — and the pool is actually persistent: repeated calls
+//! reuse parked workers instead of spawning threads per call.
+//!
+//! Everything lives in one `#[test]` on purpose: the spawn-count
+//! assertions read process-global pool state, which concurrent tests
+//! would race on.
+
+use fedlama::util::pool;
+
+#[test]
+fn pool_matches_serial_and_survives_repeated_calls() {
+    // A spread of chunk widths first — this also grows the pool to its
+    // high-water mark so the reuse assertion below is race-free.
+    for threads in [2usize, 3, 8, 16] {
+        let out = pool::par_map(57, threads, |i| i as u64 * i as u64 + 1);
+        let want: Vec<u64> = (0..57).map(|i| i as u64 * i as u64 + 1).collect();
+        assert_eq!(out, want, "threads={threads}");
+    }
+    let spawned_after_warmup = pool::workers_spawned_total();
+    assert!(spawned_after_warmup >= 1, "parallel calls must have started the pool");
+
+    // 100 reuse calls: serial vs pooled must agree bit-for-bit.
+    for call in 0..100u64 {
+        let n = 1 + (call as usize * 7) % 41; // vary sizes incl. n < threads
+        let mk = || -> Vec<u64> { (0..n as u64).map(|i| i * 3 + call).collect() };
+
+        let mut serial_items = mk();
+        let serial_out = pool::par_map_mut(&mut serial_items, 1, |i, v| {
+            *v = v.wrapping_mul(2) + 1;
+            *v ^ i as u64
+        });
+
+        let mut pooled_items = mk();
+        let pooled_out = pool::par_map_mut(&mut pooled_items, 4, |i, v| {
+            *v = v.wrapping_mul(2) + 1;
+            *v ^ i as u64
+        });
+
+        assert_eq!(pooled_out, serial_out, "outputs diverged at call {call}");
+        assert_eq!(pooled_items, serial_items, "mutations diverged at call {call}");
+    }
+
+    // Persistence: the 100 threads=4 calls above ride the workers the
+    // warmup already spawned (chunk 0 runs on the caller thread).
+    assert_eq!(
+        pool::workers_spawned_total(),
+        spawned_after_warmup,
+        "steady-state calls must not spawn new workers"
+    );
+    assert!(pool::pool_size() >= 1);
+
+    // Clean shutdown parks everything; the next call respawns.
+    pool::shutdown();
+    assert_eq!(pool::pool_size(), 0);
+    let out = pool::par_map(8, 2, |i| i + 10);
+    assert_eq!(out, (10..18).collect::<Vec<_>>());
+    assert!(pool::workers_spawned_total() > spawned_after_warmup, "respawn after shutdown");
+}

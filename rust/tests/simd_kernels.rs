@@ -1,0 +1,125 @@
+//! Bit-identity oracle tests for the `runtime::simd` matmul paths.
+//!
+//! The contract under test: every dispatch path (AVX2 / SSE2 / scalar)
+//! produces **bitwise identical** results for `matmul_acc`,
+//! `matmul_at_acc`, and `matmul_bt` on every shape — including remainder
+//! lanes (`n % lane_width != 0`), single-row batches (`m = 1`), k
+//! spanning multiple KC tiles, and mixed sparse/dense rows.  These run in
+//! CI twice: with default flags and with `RUSTFLAGS=-Ctarget-cpu=native`.
+
+use fedlama::runtime::ops::matmul::{matmul_acc_with, matmul_at_acc_with, matmul_bt_with};
+use fedlama::runtime::simd::{self, Isa};
+use fedlama::util::prop::{forall, Pair, UsizeIn};
+use fedlama::util::rng::Rng;
+
+/// Deterministic inputs for a shape: ~25% of a's entries are zeroed so
+/// both the sparse-skip and the dense fast path get exercised.
+fn inputs(m: usize, k: usize, n: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let mut a: Vec<f32> = (0..m * k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    for v in a.iter_mut() {
+        if rng.below(4) == 0 {
+            *v = 0.0;
+        }
+    }
+    let b: Vec<f32> = (0..k * n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let dy: Vec<f32> = (0..m * n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let c0: Vec<f32> = (0..m * n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    (a, b, dy, c0)
+}
+
+/// Compare every supported path against the scalar reference, bitwise.
+fn check_shape(m: usize, k: usize, n: usize, seed: u64) -> Result<(), String> {
+    let (a, b, dy, c0) = inputs(m, k, n, seed);
+
+    let mut c_want = c0.clone();
+    matmul_acc_with(Isa::Scalar, &a, &b, &mut c_want, m, k, n);
+    let mut gw_want = vec![0.0f32; k * n];
+    matmul_at_acc_with(Isa::Scalar, &a, &dy, &mut gw_want, m, k, n);
+    let mut dx_want = vec![0.0f32; m * k];
+    matmul_bt_with(Isa::Scalar, &dy, &b, &mut dx_want, m, n, k);
+
+    for isa in simd::supported_isas() {
+        let mut c = c0.clone();
+        matmul_acc_with(isa, &a, &b, &mut c, m, k, n);
+        if c != c_want {
+            return Err(format!("matmul_acc diverged on {} (m={m} k={k} n={n})", isa.name()));
+        }
+        let mut gw = vec![0.0f32; k * n];
+        matmul_at_acc_with(isa, &a, &dy, &mut gw, m, k, n);
+        if gw != gw_want {
+            return Err(format!("matmul_at_acc diverged on {} (m={m} k={k} n={n})", isa.name()));
+        }
+        // stale dx contents must be fully overwritten on every path
+        let mut dx = vec![-7.5f32; m * k];
+        matmul_bt_with(isa, &dy, &b, &mut dx, m, n, k);
+        if dx != dx_want {
+            return Err(format!("matmul_bt diverged on {} (m={m} k={k} n={n})", isa.name()));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn random_shapes_are_bit_identical_across_paths() {
+    // n up to 19 covers every AVX2/SSE2 remainder class; k up to 70
+    // covers every bt panel remainder; m = 1 occurs with p ~ 1/6.
+    let mk = Pair(UsizeIn { lo: 1, hi: 6 }, UsizeIn { lo: 1, hi: 70 });
+    let shapes = Pair(mk, UsizeIn { lo: 1, hi: 19 });
+    forall(42, 60, &shapes, |&((m, k), n)| check_shape(m, k, n, (m * 1000 + k * 10 + n) as u64));
+}
+
+#[test]
+fn kc_tile_spanning_and_edge_shapes() {
+    // (m, k, n): k = 513/600 spans 2-3 KC=256 tiles; m = 1 single-row;
+    // n = 1/3/5 below and between lane widths; n = 8/16 exact lanes.
+    for &(m, k, n) in &[
+        (1usize, 513usize, 9usize),
+        (1, 600, 3),
+        (2, 600, 5),
+        (3, 256, 8),
+        (4, 257, 16),
+        (5, 512, 1),
+        (1, 1, 1),
+        (8, 32, 64),
+    ] {
+        check_shape(m, k, n, 7 + k as u64).unwrap();
+    }
+}
+
+#[test]
+fn all_zero_and_all_dense_rows_are_bit_identical() {
+    // fully dense a (no skip anywhere) and fully zero a (skip everything)
+    let (m, k, n) = (3, 300, 10);
+    let mut rng = Rng::new(5);
+    let dense: Vec<f32> = (0..m * k).map(|_| rng.normal_f32(0.5, 1.0) + 2.0).collect();
+    let zeros = vec![0.0f32; m * k];
+    let b: Vec<f32> = (0..k * n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    for a in [&dense, &zeros] {
+        let c0: Vec<f32> = (0..m * n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut want = c0.clone();
+        matmul_acc_with(Isa::Scalar, a, &b, &mut want, m, k, n);
+        for isa in simd::supported_isas() {
+            let mut c = c0.clone();
+            matmul_acc_with(isa, a, &b, &mut c, m, k, n);
+            assert_eq!(c, want, "diverged on {}", isa.name());
+        }
+    }
+    // the all-zero input leaves c untouched (the value-preserving skip)
+    let c0: Vec<f32> = (0..m * n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let mut c = c0.clone();
+    matmul_acc_with(fedlama::runtime::simd::active_isa(), &zeros, &b, &mut c, m, k, n);
+    assert_eq!(c, c0);
+}
+
+#[test]
+fn dispatch_reports_a_supported_isa() {
+    let isa = simd::active_isa();
+    assert!(simd::supported_isas().contains(&isa));
+    // On x86-64, SSE2 is architecturally guaranteed: the ladder must
+    // never fall through to scalar unless forced via FEDLAMA_SIMD.
+    #[cfg(target_arch = "x86_64")]
+    if std::env::var("FEDLAMA_SIMD").is_err() {
+        assert_ne!(isa, Isa::Scalar, "x86-64 must dispatch a wide path");
+    }
+}
