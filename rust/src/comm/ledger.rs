@@ -19,9 +19,32 @@ pub struct GroupComm {
     pub bytes: u64,
 }
 
+/// Per-participant (shard) traffic counters.  Clients map to shards
+/// round-robin (client c -> shard c mod n), so these are identical for
+/// every transport with the same shard count — the stdio `--workers N`
+/// run and an N-participant TCP run charge the same tables.  Bytes are
+/// *nominal* (the compressor's idealized encoded size uplink, dense f32
+/// downlink), like the rest of the ledger — never the frame overhead of
+/// whichever wire carried them.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ParticipantComm {
+    /// Shard id (worker / TCP participant index).
+    pub shard: usize,
+    /// `LayerUpdate` messages received from this shard.
+    pub updates: u64,
+    /// Nominal uplink bytes from this shard (sum of payload encoded sizes;
+    /// exact per update, unlike the per-group column's per-client mean).
+    pub uplink_bytes: u64,
+    /// Nominal downlink bytes to this shard (dense group params per owned
+    /// active client per sync decision).
+    pub downlink_bytes: u64,
+}
+
 #[derive(Debug, Clone, Default)]
 pub struct CommLedger {
     pub groups: Vec<GroupComm>,
+    /// Per-shard uplink/downlink counters (one entry when in-proc).
+    pub participants: Vec<ParticipantComm>,
     /// Number of synchronization *rounds* (iterations at which >= 1 group
     /// synced) — the latency-bearing events.
     pub rounds: u64,
@@ -32,13 +55,62 @@ pub struct CommLedger {
 
 impl CommLedger {
     pub fn new(groups: &[(String, usize)]) -> CommLedger {
+        Self::with_shards(groups, 1)
+    }
+
+    /// Like [`CommLedger::new`] with `n_shards` per-participant slots
+    /// (`n_shards = workers.max(1)` — in-proc runs are one shard).
+    pub fn with_shards(groups: &[(String, usize)], n_shards: usize) -> CommLedger {
         CommLedger {
             groups: groups
                 .iter()
                 .map(|(name, dim)| GroupComm { name: name.clone(), dim: *dim, ..Default::default() })
                 .collect(),
+            participants: (0..n_shards.max(1))
+                .map(|shard| ParticipantComm { shard, ..Default::default() })
+                .collect(),
             ..Default::default()
         }
+    }
+
+    /// The shard owning a global client id (round-robin, every transport).
+    /// 0 for a ledger without participant slots (`Default`-constructed).
+    pub fn shard_of(&self, client: usize) -> usize {
+        client % self.participants.len().max(1)
+    }
+
+    /// Charge one uplink update from `client`: `bytes` nominal encoded
+    /// payload bytes.  No-op when the ledger has no participant slots
+    /// (`Default`-constructed — group counters still work).
+    pub fn record_uplink(&mut self, client: usize, bytes: usize) {
+        if self.participants.is_empty() {
+            return;
+        }
+        let s = self.shard_of(client);
+        self.participants[s].updates += 1;
+        self.participants[s].uplink_bytes += bytes as u64;
+    }
+
+    /// Charge one downlink broadcast to `client`: `bytes` nominal dense
+    /// bytes of the decided group.
+    pub fn record_downlink(&mut self, client: usize, bytes: usize) {
+        if self.participants.is_empty() {
+            return;
+        }
+        let s = self.shard_of(client);
+        self.participants[s].downlink_bytes += bytes as u64;
+    }
+
+    /// Charge raw per-participant bytes without counting an update message
+    /// (FedNova's full-model reduction moves deltas without `LayerUpdate`
+    /// uplinks).
+    pub fn record_participant_bytes(&mut self, client: usize, up: usize, down: usize) {
+        if self.participants.is_empty() {
+            return;
+        }
+        let s = self.shard_of(client);
+        self.participants[s].uplink_bytes += up as u64;
+        self.participants[s].downlink_bytes += down as u64;
     }
 
     /// Record one aggregation of group `g` across `m_active` clients.
@@ -213,6 +285,36 @@ mod tests {
         assert_eq!(dense.total_bytes(), ((40_000 + 40_000) * m) as u64);
         assert_eq!(q8.total_bytes(), ((10_040 + 40_000) * m) as u64);
         assert!(q8.total_bytes() < dense.total_bytes());
+    }
+
+    #[test]
+    fn per_participant_counters_fold_round_robin() {
+        let mut l = CommLedger::with_shards(
+            &[("conv1".to_string(), 100), ("fc".to_string(), 1000)],
+            3,
+        );
+        assert_eq!(l.participants.len(), 3);
+        // clients 0..5 upload group 0 (100 nominal B each); shard = c % 3
+        for c in 0..5 {
+            l.record_uplink(c, 100);
+        }
+        // every client gets the dense fc group (4000 B) pushed down
+        for c in 0..5 {
+            l.record_downlink(c, 4000);
+        }
+        assert_eq!(l.participants[0].updates, 2); // clients 0, 3
+        assert_eq!(l.participants[1].updates, 2); // clients 1, 4
+        assert_eq!(l.participants[2].updates, 1); // client 2
+        assert_eq!(l.participants[0].uplink_bytes, 200);
+        assert_eq!(l.participants[2].uplink_bytes, 100);
+        assert_eq!(l.participants[0].downlink_bytes, 8000);
+        assert_eq!(l.participants[2].downlink_bytes, 4000);
+        assert_eq!(l.shard_of(7), 1);
+        // the default ctor is the single-shard (in-proc) case
+        let mut one = CommLedger::new(&[("g".to_string(), 10)]);
+        one.record_uplink(9, 40);
+        assert_eq!(one.participants.len(), 1);
+        assert_eq!(one.participants[0].updates, 1);
     }
 
     #[test]

@@ -175,17 +175,7 @@ impl RunConfig {
             self.policy.round_len()
         );
         if self.workers > 0 {
-            anyhow::ensure!(
-                matches!(self.algorithm, Algorithm::Sgd | Algorithm::Prox { .. }),
-                "--workers requires sgd or fedprox: {} reads client state on the server at \
-                 round boundaries, which the multi-process transport does not ship",
-                self.algorithm.name()
-            );
-            anyhow::ensure!(
-                self.engine == EngineKind::Native,
-                "--workers requires the native engine (worker processes rebuild their \
-                 compute backend from the wire config; PJRT artifacts are not shipped)"
-            );
+            self.validate_sharded("--workers")?;
         }
         if self.engine == EngineKind::Native {
             anyhow::ensure!(
@@ -202,6 +192,27 @@ impl RunConfig {
                  native engine does not provide (use --engine pjrt or backend=auto)"
             );
         }
+        Ok(())
+    }
+
+    /// Constraints every *sharded* transport shares — `--workers`
+    /// subprocesses and TCP participants alike: server-side-state
+    /// baselines (SCAFFOLD, FedNova) read raw client state the wire
+    /// protocol does not ship, and only the native engine can rebuild its
+    /// compute backend from the `Configure` frame (PJRT artifacts are not
+    /// shipped).  `transport` names the flag for the error message.
+    pub fn validate_sharded(&self, transport: &str) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            matches!(self.algorithm, Algorithm::Sgd | Algorithm::Prox { .. }),
+            "{transport} requires sgd or fedprox: {} reads client state on the server at \
+             round boundaries, which sharded transports do not ship",
+            self.algorithm.name()
+        );
+        anyhow::ensure!(
+            self.engine == EngineKind::Native,
+            "{transport} requires the native engine (participants rebuild their \
+             compute backend from the wire config; PJRT artifacts are not shipped)"
+        );
         Ok(())
     }
 

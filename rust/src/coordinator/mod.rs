@@ -182,39 +182,47 @@ impl Coordinator {
 
     /// Run the full training loop; returns the metrics record.
     pub fn run(&mut self) -> Result<RunMetrics> {
-        let t0 = Instant::now();
-        let batch = self.backend.manifest().batch_size;
-        let remote_secs;
-        let drive_result = if self.cfg.workers == 0 {
+        if self.cfg.workers == 0 {
+            let t0 = Instant::now();
+            let batch = self.backend.manifest().batch_size;
             let mut p = self.participant.take().context("coordinator already consumed")?;
             let mut transport = InProcTransport::new(&mut p);
             let r = drive(&self.cfg, &mut self.core, &mut transport, batch, &|global| {
                 evaluate_global(self.backend.as_ref(), global, &self.val_x, &self.val_y)
             });
-            remote_secs = transport.remote_compute_secs();
+            let remote_secs = transport.remote_compute_secs();
             drop(transport);
             self.participant = Some(p);
-            r
+            self.finish(r?, remote_secs, t0)
         } else {
             let exe = crate::protocol::worker_exe()?;
             let mut transport = ProcessTransport::spawn(&exe, &self.cfg, self.cfg.workers)?;
-            let r = drive(&self.cfg, &mut self.core, &mut transport, batch, &|global| {
-                evaluate_global(self.backend.as_ref(), global, &self.val_x, &self.val_y)
-            });
-            remote_secs = transport.remote_compute_secs();
-            match r {
-                // graceful: Shutdown frames + wait for clean exits
-                Ok(stats) => transport.shutdown().map(|()| stats),
-                // error path: a worker may be wedged mid-frame — let Drop
-                // kill the children instead of waiting on them
-                err => {
-                    drop(transport);
-                    err
-                }
-            }
-        };
-        let stats = drive_result?;
+            // on error run_with_transport skips the graceful shutdown — a
+            // worker may be wedged mid-frame — and the drop here kills the
+            // children instead of waiting on them
+            self.run_with_transport(&mut transport)
+        }
+    }
 
+    /// Drive the training loop over an externally built transport (TCP
+    /// participants via `protocol::tcp`, custom transports in tests).  On
+    /// success the transport is shut down gracefully; on error it is left
+    /// for the caller to drop (`ProcessTransport` kills its children in
+    /// `Drop`, `TcpTransport` closes its sockets).
+    pub fn run_with_transport(&mut self, transport: &mut dyn Transport) -> Result<RunMetrics> {
+        let t0 = Instant::now();
+        let batch = self.backend.manifest().batch_size;
+        let r = drive(&self.cfg, &mut self.core, &mut *transport, batch, &|global| {
+            evaluate_global(self.backend.as_ref(), global, &self.val_x, &self.val_y)
+        });
+        let remote_secs = transport.remote_compute_secs();
+        let stats = r?;
+        transport.shutdown()?;
+        self.finish(stats, remote_secs, t0)
+    }
+
+    /// Final-metrics assembly shared by every transport path.
+    fn finish(&mut self, stats: DriveStats, remote_secs: f64, t0: Instant) -> Result<RunMetrics> {
         let mut metrics = self.core.metrics();
         let (acc, loss) = self.evaluate()?;
         metrics.final_acc = acc;

@@ -2,6 +2,9 @@
 //!
 //! Subcommands:
 //!   train    one federated training run (all knobs exposed)
+//!   serve    TCP federation coordinator: bind, wait for N participants,
+//!            then train (bit-identical to `train --workers N`)
+//!   join     TCP federation participant: dial a serve coordinator
 //!   repro    regenerate a paper table (table1..table11, baselines, all)
 //!   figure   regenerate a paper figure (1..6)
 //!   bench    kernel/op/end-to-end microbenches -> BENCH_kernels.json
@@ -17,6 +20,7 @@
 //!   fedlama figure --id 1
 
 use std::path::PathBuf;
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
@@ -34,6 +38,8 @@ fn main() {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let code = match cmd {
         "train" => run_train(&args),
+        "serve" => run_serve(&args),
+        "join" => run_join(&args),
         "repro" => run_repro(&args),
         "figure" => run_figure(&args),
         "bench" => run_bench(&args),
@@ -54,7 +60,7 @@ fn main() {
 fn print_help() {
     println!(
         "fedlama — FedLAMA (AAAI'23) reproduction\n\n\
-         USAGE: fedlama <train|repro|figure|inspect|list|worker> [--flags]\n\n\
+         USAGE: fedlama <train|serve|join|repro|figure|inspect|list|worker> [--flags]\n\n\
          train   --model mlp|femnist_cnn|cifar_cnn100|resnet20 --dataset D\n\
                  [--policy fedavg|fedlama|fedlama-acc]\n\
                  [--tau 6] [--phi 2] [--clients 16] [--active-ratio 1.0]\n\
@@ -64,6 +70,14 @@ fn print_help() {
                  [--engine native|pjrt] [--threads 1 (0=auto)] [--workers 0]\n\
                  [--backend auto|native|xla] [--no-chunk] [--seed 1]\n\
                  [--out run.json] [--curve curve.csv] [--verbose]\n\
+         serve   --bind HOST:PORT --expect N + every train flag\n\
+                 [--join-timeout 120] [--io-timeout 600] [--heartbeat-secs 2]\n\
+                 (TCP coordinator: waits for N `fedlama join` participants,\n\
+                  then runs the training loop over the sockets; metrics are\n\
+                  bit-identical to `train --workers N`)\n\
+         join    --connect HOST:PORT [--retry-secs 30] [--io-timeout 600]\n\
+                 (TCP participant: dials a `fedlama serve` coordinator and\n\
+                  serves one training session)\n\
          repro   --table table1..table11|baselines|all [--scale smoke|default|full]\n\
                  [--repeats 1] [--out-dir reports] [--verbose]\n\
          figure  --id 1..6 [--scale ...] [--out-dir reports]\n\
@@ -154,7 +168,79 @@ fn run_train(args: &Args) -> Result<()> {
     let mut coord = Coordinator::new(cfg)?;
     let threads = coord.effective_threads();
     let metrics = coord.run()?;
-    println!("{}", reports::summary_line(&tag, &metrics));
+    report_run(args, &tag, engine, threads, &metrics)
+}
+
+/// Serve the federation over TCP: bind, wait for `--expect N` participants
+/// to join, then run the standard training loop over the sockets.  Takes
+/// every `train` flag; the JSON metrics (wall-clock excluded) are
+/// bit-identical to `train --workers N` with the same flags.
+fn run_serve(args: &Args) -> Result<()> {
+    let expect = args.usize_or("expect", 0);
+    anyhow::ensure!(expect > 0, "serve needs --expect N (the participant count)");
+    let bind = args.str_or("bind", "127.0.0.1:7070");
+    let mut cfg = cfg_from_args(args)?;
+    // workers = participant count: shard map, validation, and the
+    // per-participant ledger all match the stdio --workers run exactly.
+    // Check the sharded-transport constraints under the serve name first,
+    // so a scaffold/pjrt misconfiguration blames `fedlama serve`, not a
+    // --workers flag the user never passed.
+    anyhow::ensure!(
+        cfg.workers == 0 || cfg.workers == expect,
+        "--workers {} conflicts with --expect {expect}: serve shards over the TCP \
+         participants, one per shard (drop --workers or make them equal)",
+        cfg.workers
+    );
+    cfg.workers = expect;
+    cfg.validate_sharded("fedlama serve")?;
+    let opts = fedlama::protocol::TcpOpts {
+        join_timeout: Duration::from_secs(args.u64_or("join-timeout", 120)),
+        io_timeout: Duration::from_secs(args.u64_or("io-timeout", 600)),
+        heartbeat_every: Duration::from_secs(args.u64_or("heartbeat-secs", 2)),
+    };
+    let tag = cfg.tag();
+    let engine = cfg.engine.name();
+    let mut coord = Coordinator::new(cfg)?;
+    let threads = coord.effective_threads();
+    let server = fedlama::protocol::TcpServer::bind(&bind)?;
+    eprintln!(
+        "serving {tag} on {} — waiting up to {}s for {expect} participant(s) \
+         (`fedlama join --connect <this address>`)",
+        server.local_addr()?,
+        opts.join_timeout.as_secs()
+    );
+    let mut transport = server.accept_participants(&coord.cfg, expect, &opts)?;
+    for (shard, addr) in transport.peer_addrs() {
+        eprintln!("  shard {shard} <- {addr}");
+    }
+    let metrics = coord.run_with_transport(&mut transport)?;
+    report_run(args, &tag, engine, threads, &metrics)
+}
+
+/// Join a TCP coordinator as a participant and serve one training session.
+fn run_join(args: &Args) -> Result<()> {
+    let addr = args.get("connect").context("join needs --connect HOST:PORT")?;
+    let opts = fedlama::protocol::JoinOpts {
+        connect_retry: Duration::from_secs(args.u64_or("retry-secs", 30)),
+        io_timeout: Duration::from_secs(args.u64_or("io-timeout", 600)),
+    };
+    eprintln!("joining coordinator at {addr} ...");
+    let shard = fedlama::protocol::tcp::join(addr, &opts)?;
+    eprintln!("session complete (served shard {shard})");
+    Ok(())
+}
+
+/// Post-run reporting shared by `train` and `serve`: summary + runtime +
+/// throughput lines, per-participant traffic when sharded, and the
+/// `--out`/`--curve` report files.
+fn report_run(
+    args: &Args,
+    tag: &str,
+    engine: &str,
+    threads: usize,
+    metrics: &fedlama::metrics::RunMetrics,
+) -> Result<()> {
+    println!("{}", reports::summary_line(tag, metrics));
     // runtime_secs sums per-worker compute time, so normalize utilization by
     // the worker count — with threads > 1 it can legitimately exceed wall.
     let budget = metrics.wall_secs.max(1e-9) * threads as f64;
@@ -174,6 +260,9 @@ fn run_train(args: &Args) -> Result<()> {
         metrics.round_wall_ms_pct(95.0),
         metrics.round_wall_secs.len(),
     );
+    if let Some(table) = reports::participants_summary(metrics) {
+        print!("{table}");
+    }
     if let Some(out) = args.get("out") {
         reports::write_report(std::path::Path::new(out), &metrics.to_json().to_string_pretty())?;
         eprintln!("wrote {out}");

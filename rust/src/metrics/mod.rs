@@ -32,6 +32,11 @@ pub struct RunMetrics {
     pub total_bytes: u64,
     /// Per-group (name, dim, syncs, cost) — Figures 2/3.
     pub per_group: Vec<(String, usize, u64, u64)>,
+    /// Per-participant (shard, updates, uplink_bytes, downlink_bytes) —
+    /// nominal Eq.9-style bytes folded by round-robin shard.  Identical
+    /// across transports with the same shard count (in-proc runs have one
+    /// shard, so compare it only between runs sharing a worker count).
+    pub per_participant: Vec<(usize, u64, u64, u64)>,
     /// Coordinator overhead: wall time not spent inside PJRT executables.
     pub runtime_secs: f64,
     /// Local-training examples *assigned* (block steps x batch size,
@@ -66,6 +71,11 @@ impl RunMetrics {
             .per_group()
             .into_iter()
             .map(|(n, d, s, c)| (n.to_string(), d, s, c))
+            .collect();
+        self.per_participant = ledger
+            .participants
+            .iter()
+            .map(|p| (p.shard, p.updates, p.uplink_bytes, p.downlink_bytes))
             .collect();
     }
 
@@ -125,6 +135,17 @@ impl RunMetrics {
                 })),
             ),
             (
+                "per_participant",
+                Json::arr(self.per_participant.iter().map(|(s, u, up, down)| {
+                    Json::obj(vec![
+                        ("shard", Json::num(*s as f64)),
+                        ("updates", Json::num(*u as f64)),
+                        ("uplink_bytes", Json::num(*up as f64)),
+                        ("downlink_bytes", Json::num(*down as f64)),
+                    ])
+                })),
+            ),
+            (
                 "curve",
                 Json::arr(self.curve.iter().map(|p| {
                     Json::obj(vec![
@@ -174,6 +195,7 @@ mod tests {
             val_loss: None,
             comm_cost: 2468,
         });
+        m.per_participant = vec![(0, 8, 4096, 2048), (1, 8, 4096, 2048)];
         let csv = m.curve_csv();
         assert!(csv.contains("24,1,2.300000,0.4100,2.1000,1234"));
         assert!(csv.lines().count() == 3);
@@ -181,6 +203,11 @@ mod tests {
         let parsed = Json::parse(&j.to_string()).unwrap();
         assert_eq!(parsed.get("tag").unwrap().as_str(), Some("fedlama(6,4)"));
         assert_eq!(parsed.get("curve").unwrap().as_arr().unwrap().len(), 2);
+        let pp = parsed.get("per_participant").unwrap().as_arr().unwrap();
+        assert_eq!(pp.len(), 2);
+        assert_eq!(pp[1].get("shard").unwrap().as_usize(), Some(1));
+        assert_eq!(pp[1].get("uplink_bytes").unwrap().as_usize(), Some(4096));
+        assert_eq!(pp[1].get("downlink_bytes").unwrap().as_usize(), Some(2048));
     }
 
     #[test]

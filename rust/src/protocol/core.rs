@@ -30,7 +30,8 @@ use crate::data::{partition_for, Partition};
 use crate::metrics::{CurvePoint, RunMetrics};
 use crate::runtime::{GroupInfo, HostTensor};
 
-use super::messages::{LayerUpdate, RoundAssignment, SyncDecision};
+use super::messages::{LayerUpdate, Message, RoundAssignment, SyncDecision};
+use super::wire::WIRE_VERSION;
 
 /// Optional fused-aggregation hook: (stacked rows [m, dim], weights, dim)
 /// -> (u, discrepancy).  The driver wires this to the backend's Pallas
@@ -46,6 +47,111 @@ pub enum BlockOutcome {
     /// The block closed a round; the driver may need to evaluate before
     /// `complete_round` records the curve point.
     RoundComplete { round: usize, total_rounds: usize, train_loss: f64, eval_due: bool },
+}
+
+/// Where one remote peer stands in the join handshake.
+///
+/// The socket join flow (participant connects *to* the coordinator, so the
+/// participant speaks first — the stdio transport's flow reversed):
+///
+/// ```text
+///   AwaitJoin  --Hello{version}-------------------> send Configure
+///   AwaitReady --Hello{version, shard_id, len}----> Ready
+///   Ready      --Heartbeat{nonce}-----------------> (echo of our ping)
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JoinPhase {
+    /// Waiting for the peer's version Hello (its first frame after
+    /// connecting; shard fields are zero — it has no assignment yet).
+    AwaitJoin,
+    /// Configure sent; waiting for the readiness Hello that confirms the
+    /// assigned shard (the peer builds its backend in between, which can
+    /// be slow — the transport heartbeats other peers meanwhile).
+    AwaitReady,
+    /// Handshake complete; the peer participates in the block loop.
+    Ready,
+}
+
+/// What the transport must do after feeding a message to [`JoinHandshake`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JoinAction {
+    /// Send this peer its `Configure` (shard assignment + run config).
+    SendConfigure,
+    /// The peer just became ready.
+    Ready,
+    /// The peer echoed a liveness ping with this nonce.
+    Pong(u64),
+}
+
+/// Pure per-peer state machine for the socket join handshake.  Owns no
+/// I/O: the transport reads frames, feeds them here, and performs the
+/// returned [`JoinAction`].  Violations (wrong message for the phase,
+/// version or shard mismatch) are errors the transport turns into a
+/// connection drop.
+pub struct JoinHandshake {
+    shard_id: usize,
+    shard_len: usize,
+    phase: JoinPhase,
+}
+
+impl JoinHandshake {
+    /// Track the handshake for the peer that will own shard `shard_id`
+    /// with `shard_len` clients.
+    pub fn new(shard_id: usize, shard_len: usize) -> JoinHandshake {
+        JoinHandshake { shard_id, shard_len, phase: JoinPhase::AwaitJoin }
+    }
+
+    pub fn phase(&self) -> JoinPhase {
+        self.phase
+    }
+
+    pub fn is_ready(&self) -> bool {
+        self.phase == JoinPhase::Ready
+    }
+
+    /// Feed one incoming message; returns the transport's next action or
+    /// a protocol violation.
+    pub fn on_message(&mut self, m: &Message) -> Result<JoinAction> {
+        match (self.phase, m) {
+            (JoinPhase::AwaitJoin, Message::Hello(h)) => {
+                anyhow::ensure!(
+                    h.version == WIRE_VERSION,
+                    "participant speaks protocol v{}, coordinator v{WIRE_VERSION}",
+                    h.version
+                );
+                self.phase = JoinPhase::AwaitReady;
+                Ok(JoinAction::SendConfigure)
+            }
+            (JoinPhase::AwaitReady, Message::Hello(h)) => {
+                anyhow::ensure!(
+                    h.version == WIRE_VERSION,
+                    "participant speaks protocol v{}, coordinator v{WIRE_VERSION}",
+                    h.version
+                );
+                anyhow::ensure!(
+                    h.worker_id == self.shard_id,
+                    "participant confirmed shard {}, assigned {}",
+                    h.worker_id,
+                    self.shard_id
+                );
+                anyhow::ensure!(
+                    h.shard_len == self.shard_len,
+                    "participant claims {} clients, shard {} holds {}",
+                    h.shard_len,
+                    self.shard_id,
+                    self.shard_len
+                );
+                self.phase = JoinPhase::Ready;
+                Ok(JoinAction::Ready)
+            }
+            (JoinPhase::Ready, Message::Heartbeat(h)) => Ok(JoinAction::Pong(h.nonce)),
+            (phase, other) => anyhow::bail!(
+                "unexpected {} from shard {} during join handshake ({phase:?})",
+                other.kind_name(),
+                self.shard_id
+            ),
+        }
+    }
 }
 
 pub struct CoordinatorCore {
@@ -84,7 +190,10 @@ impl CoordinatorCore {
             groups.iter().map(|g| (g.name.clone(), g.dim)).collect();
         CoordinatorCore {
             schedule: Schedule::new(cfg.policy.clone(), dims),
-            ledger: CommLedger::new(&names),
+            // per-participant counters fold by round-robin shard: one slot
+            // in-proc, `workers` slots for the process/TCP transports —
+            // identical tables for every transport with the same count
+            ledger: CommLedger::with_shards(&names, cfg.workers.max(1)),
             sampler: ClientSampler::new(cfg.n_clients, cfg.active_ratio, cfg.seed),
             partition: partition_for(cfg),
             global,
@@ -241,11 +350,14 @@ impl CoordinatorCore {
                 })
                 .collect::<Result<_>>()?;
 
-            let uplink_total: usize = per_client
-                .iter()
-                .flat_map(|u| u.tensors.iter())
-                .map(|p| p.nominal_bytes())
-                .sum();
+            // one pass: per-update nominal size feeds both the group total
+            // and the per-participant fold
+            let mut uplink_total = 0usize;
+            for u in &per_client {
+                let nominal: usize = u.tensors.iter().map(|p| p.nominal_bytes()).sum();
+                uplink_total += nominal;
+                self.ledger.record_uplink(u.client, nominal);
+            }
 
             let all_dense =
                 per_client.iter().all(|u| u.tensors.iter().all(|p| p.as_dense().is_some()));
@@ -256,6 +368,11 @@ impl CoordinatorCore {
 
             self.schedule.observe(g, disc);
             self.ledger.record_sync_bytes(g, m, uplink_total / m.max(1));
+            // dense group params broadcast to every active client
+            let dense_down = self.groups[g].dim * 4;
+            for &c in &a.active {
+                self.ledger.record_downlink(c, dense_down);
+            }
             let group = &self.groups[g];
             decisions.push(SyncDecision {
                 k: a.k,
@@ -341,6 +458,10 @@ impl CoordinatorCore {
         self.ledger.record_round();
         for g in 0..self.groups.len() {
             self.ledger.record_sync(g, self.active.len());
+            let dense = self.groups[g].dim * 4;
+            for &c in &self.active {
+                self.ledger.record_participant_bytes(c, dense, dense);
+            }
         }
     }
 
@@ -403,7 +524,7 @@ impl CoordinatorCore {
 mod tests {
     use super::*;
     use crate::aggregation::Policy;
-    use crate::protocol::messages::Payload;
+    use crate::protocol::messages::{Heartbeat, Hello, Payload};
 
     fn tiny_core(n_clients: usize, policy: Policy, iterations: usize) -> CoordinatorCore {
         let cfg = RunConfig {
@@ -512,6 +633,94 @@ mod tests {
         ];
         let err = core.apply_updates(&a, &ups, None).unwrap_err();
         assert!(format!("{err:#}").contains("inactive client"), "{err:#}");
+    }
+
+    #[test]
+    fn join_handshake_walks_the_phases() {
+        let hello = |id: usize, len: usize| {
+            Message::Hello(Hello {
+                version: crate::protocol::WIRE_VERSION,
+                worker_id: id,
+                shard_len: len,
+            })
+        };
+        let mut h = JoinHandshake::new(1, 3);
+        assert_eq!(h.phase(), JoinPhase::AwaitJoin);
+        // join Hello carries sentinels (the peer has no assignment yet)
+        assert_eq!(h.on_message(&hello(0, 0)).unwrap(), JoinAction::SendConfigure);
+        assert_eq!(h.phase(), JoinPhase::AwaitReady);
+        assert_eq!(h.on_message(&hello(1, 3)).unwrap(), JoinAction::Ready);
+        assert!(h.is_ready());
+        // liveness echoes pass through with their nonce
+        assert_eq!(
+            h.on_message(&Message::Heartbeat(Heartbeat { nonce: 42 })).unwrap(),
+            JoinAction::Pong(42)
+        );
+    }
+
+    #[test]
+    fn join_handshake_rejects_violations() {
+        let hello = |v: u8, id: usize, len: usize| {
+            Message::Hello(Hello { version: v, worker_id: id, shard_len: len })
+        };
+        // version skew rejected at first contact
+        let mut h = JoinHandshake::new(0, 2);
+        let err = h.on_message(&hello(crate::protocol::WIRE_VERSION + 1, 0, 0)).unwrap_err();
+        assert!(format!("{err:#}").contains("protocol v"), "{err:#}");
+        // wrong first message for the phase
+        let mut h = JoinHandshake::new(0, 2);
+        let err = h.on_message(&Message::Shutdown).unwrap_err();
+        assert!(format!("{err:#}").contains("handshake"), "{err:#}");
+        // readiness Hello must confirm the assigned shard exactly
+        let mut h = JoinHandshake::new(2, 4);
+        h.on_message(&hello(crate::protocol::WIRE_VERSION, 0, 0)).unwrap();
+        let err = h.on_message(&hello(crate::protocol::WIRE_VERSION, 1, 4)).unwrap_err();
+        assert!(format!("{err:#}").contains("shard"), "{err:#}");
+        let mut h = JoinHandshake::new(2, 4);
+        h.on_message(&hello(crate::protocol::WIRE_VERSION, 0, 0)).unwrap();
+        let err = h.on_message(&hello(crate::protocol::WIRE_VERSION, 2, 3)).unwrap_err();
+        assert!(format!("{err:#}").contains("claims"), "{err:#}");
+    }
+
+    #[test]
+    fn apply_updates_folds_per_participant_counters() {
+        let cfg = RunConfig {
+            n_clients: 2,
+            workers: 2,
+            policy: Policy::fedavg(6),
+            iterations: 12,
+            samples: 32,
+            warmup_rounds: 0,
+            ..RunConfig::default()
+        };
+        cfg.validate().unwrap();
+        let groups = vec![
+            GroupInfo { name: "g0".into(), dim: 3, params: vec![0] },
+            GroupInfo { name: "g1".into(), dim: 2, params: vec![1] },
+        ];
+        let global = vec![
+            HostTensor::from_vec(&[3], vec![0.0; 3]),
+            HostTensor::from_vec(&[2], vec![0.0; 2]),
+        ];
+        let mut core = CoordinatorCore::new(&cfg, groups, global);
+        assert_eq!(core.ledger.participants.len(), 2);
+        let a = core.begin_block().unwrap();
+        let ups = vec![
+            dense_update(a.k, 0, 0, vec![vec![0.0; 3]]),
+            dense_update(a.k, 0, 1, vec![vec![0.0; 3]]),
+            dense_update(a.k, 1, 0, vec![vec![0.0; 2]]),
+            dense_update(a.k, 1, 1, vec![vec![0.0; 2]]),
+        ];
+        core.apply_updates(&a, &ups, None).unwrap();
+        // client c -> shard c % 2; uplink: g0 12 B + g1 8 B dense each;
+        // downlink: both groups' dense params to both active clients
+        for s in 0..2 {
+            let p = &core.ledger.participants[s];
+            assert_eq!(p.shard, s);
+            assert_eq!(p.updates, 2);
+            assert_eq!(p.uplink_bytes, 12 + 8);
+            assert_eq!(p.downlink_bytes, 12 + 8);
+        }
     }
 
     #[test]

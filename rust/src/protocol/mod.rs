@@ -20,6 +20,9 @@
 //!     implementation (the rewritten single-process path).
 //!   - [`process`] — [`ProcessTransport`]: N `fedlama worker`
 //!     subprocesses over stdio pipes.
+//!   - [`tcp`] — [`TcpTransport`]: N `fedlama join` participants over TCP
+//!     sockets (the multi-machine path) behind a `fedlama serve`
+//!     coordinator, plus the participant-side [`tcp::join`] session.
 //!   - [`worker`] — the worker subcommand's serve loop.
 //!
 //! Determinism is the design constraint throughout: client RNG streams
@@ -33,16 +36,18 @@ pub mod core;
 pub mod messages;
 pub mod participant;
 pub mod process;
+pub mod tcp;
 pub mod transport;
 pub mod wire;
 pub mod worker;
 
-pub use self::core::{BlockOutcome, CoordinatorCore};
+pub use self::core::{BlockOutcome, CoordinatorCore, JoinAction, JoinHandshake, JoinPhase};
 pub use messages::{
     BlockDone, Configure, Heartbeat, Hello, LayerUpdate, Message, Payload, RoundAssignment,
     SyncDecision,
 };
 pub use participant::Participant;
 pub use process::{worker_exe, ProcessTransport};
-pub use transport::{BlockResult, InProcTransport, Transport};
+pub use tcp::{JoinOpts, TcpOpts, TcpServer, TcpTransport};
+pub use transport::{shard_clients, BlockResult, InProcTransport, Transport};
 pub use wire::WIRE_VERSION;

@@ -27,7 +27,7 @@ use anyhow::{bail, Context, Result};
 use crate::config::RunConfig;
 
 use super::messages::{Configure, Heartbeat, Message, RoundAssignment, SyncDecision};
-use super::transport::{merge_losses, BlockResult, Transport};
+use super::transport::{merge_losses, shard_clients, BlockResult, Transport};
 use super::wire::WIRE_VERSION;
 
 /// Resolve the executable to spawn workers from: `FEDLAMA_WORKER_EXE`
@@ -79,7 +79,7 @@ impl ProcessTransport {
         anyhow::ensure!(n > 0, "ProcessTransport needs at least one worker");
         let mut workers = Vec::with_capacity(n);
         for w in 0..n {
-            let shard: Vec<usize> = (0..cfg.n_clients).filter(|c| c % n == w).collect();
+            let shard = shard_clients(cfg.n_clients, n, w);
             let mut child = Command::new(exe)
                 .arg("worker")
                 .stdin(Stdio::piped())

@@ -1,0 +1,492 @@
+//! TCP transport: multi-machine federation over real sockets.
+//!
+//! The same length-prefixed CRC-32 frames the stdio transport writes to
+//! pipes, served on `std::net::TcpListener`/`TcpStream` — the first
+//! configuration that can federate across machines.  Roles:
+//!
+//!   - **coordinator** (`fedlama serve --bind ADDR --expect N`):
+//!     [`TcpServer::bind`] + [`TcpServer::accept_participants`] produce a
+//!     [`TcpTransport`] once N participants completed the join handshake;
+//!     `Coordinator::run_with_transport` then drives the ordinary block
+//!     loop over it.
+//!   - **participant** (`fedlama join --connect ADDR`): [`join`] dials the
+//!     coordinator (with connect retries — it may not be up yet), runs the
+//!     handshake, rebuilds its `Participant` from the `Configure` frame,
+//!     and enters the same serve loop as the stdio worker.
+//!
+//! Join handshake (participant speaks first — the stdio flow reversed,
+//! because over TCP the participant initiates the connection; the pure
+//! state machine lives in [`super::core::JoinHandshake`]):
+//!
+//! ```text
+//!   participant                               coordinator
+//!     connect ------------------------------->  accept (shard = join order)
+//!     Hello{version, 0, 0} ------------------>  version gate
+//!     <-- Configure{shard_id, n, shard, cfg} -
+//!     (rebuild backend/partition: slow is OK)   heartbeats ready peers
+//!     Hello{version, shard_id, shard_len} --->  ready
+//!     <-- Heartbeat ping / echo -------------   liveness smoke, then train
+//! ```
+//!
+//! Shards are assigned round-robin over client ids (client c -> shard
+//! c mod N) exactly like `--workers N`, so an N-participant TCP run is
+//! bit-identical to the N-worker stdio run — including the per-participant
+//! ledger tables.  Receive paths use [`super::wire::StreamDecoder`]: a
+//! socket read that ends mid-frame is [`super::wire::FrameStatus::Truncated`],
+//! so the bytes are kept and the read continues — never treated as a
+//! protocol error.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::RunConfig;
+
+use super::core::{JoinAction, JoinHandshake};
+use super::messages::{Configure, Heartbeat, Hello, Message, RoundAssignment, SyncDecision};
+use super::transport::{merge_losses, shard_clients, BlockResult, Transport};
+use super::wire::{StreamDecoder, WIRE_VERSION};
+
+/// Timeout knobs for the coordinator side.
+#[derive(Debug, Clone)]
+pub struct TcpOpts {
+    /// Window for all `--expect` participants to complete the join
+    /// handshake.
+    pub join_timeout: Duration,
+    /// Per-read timeout once training runs (covers a full local-training
+    /// block on the slowest participant, so it is generous).
+    pub io_timeout: Duration,
+    /// Liveness-ping cadence toward ready peers while slower ones are
+    /// still joining.
+    pub heartbeat_every: Duration,
+}
+
+impl Default for TcpOpts {
+    fn default() -> TcpOpts {
+        TcpOpts {
+            join_timeout: Duration::from_secs(120),
+            io_timeout: Duration::from_secs(600),
+            heartbeat_every: Duration::from_secs(2),
+        }
+    }
+}
+
+/// Options for the participant side ([`join`]).
+#[derive(Debug, Clone)]
+pub struct JoinOpts {
+    /// Keep retrying the initial connect for this long (the coordinator
+    /// may not be listening yet when the participant starts).
+    pub connect_retry: Duration,
+    /// Read timeout while waiting for the next coordinator frame (covers
+    /// the coordinator waiting on the slowest *other* participant).
+    pub io_timeout: Duration,
+}
+
+impl Default for JoinOpts {
+    fn default() -> JoinOpts {
+        JoinOpts { connect_retry: Duration::from_secs(30), io_timeout: Duration::from_secs(600) }
+    }
+}
+
+/// One connected participant on the coordinator side.
+struct Peer {
+    shard: usize,
+    /// Global client ids this shard owns (`transport::shard_clients` —
+    /// the same map as `--workers`).
+    shard_clients: Vec<usize>,
+    stream: TcpStream,
+    addr: SocketAddr,
+    decoder: StreamDecoder,
+    handshake: JoinHandshake,
+    /// Outstanding liveness-ping nonce, if any.
+    pending_ping: Option<u64>,
+    pings_sent: u64,
+    compute_secs: f64,
+}
+
+impl Peer {
+    fn describe(&self) -> String {
+        format!("participant shard {} ({})", self.shard, self.addr)
+    }
+
+    /// Blocking receive of one message (the socket must be in blocking
+    /// mode with a read timeout).  A read that ends mid-frame keeps the
+    /// bytes buffered and reads on — only corruption, timeout, or EOF
+    /// fail.
+    fn recv(&mut self) -> Result<Message> {
+        loop {
+            if let Some(m) =
+                self.decoder.poll_message().with_context(|| format!("from {}", self.describe()))?
+            {
+                return Ok(m);
+            }
+            let mut buf = [0u8; 64 * 1024];
+            match self.stream.read(&mut buf) {
+                Ok(0) => bail!("{} closed the connection mid-session", self.describe()),
+                Ok(n) => self.decoder.extend(&buf[..n]),
+                Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                    bail!("timed out waiting for a frame from {}", self.describe())
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => {
+                    return Err(e).with_context(|| format!("reading from {}", self.describe()))
+                }
+            }
+        }
+    }
+
+    fn send(&mut self, msg: &Message) -> Result<()> {
+        msg.write_to(&mut self.stream).with_context(|| format!("to {}", self.describe()))
+    }
+}
+
+/// A bound listener, split from the accept phase so callers can report
+/// the actual bound address (`--bind 127.0.0.1:0` picks a free port).
+pub struct TcpServer {
+    listener: TcpListener,
+}
+
+impl TcpServer {
+    pub fn bind(addr: &str) -> Result<TcpServer> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding coordinator on {addr}"))?;
+        Ok(TcpServer { listener })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        self.listener.local_addr().context("reading bound address")
+    }
+
+    /// Accept and handshake exactly `n` participants, then return the
+    /// ready transport.  Shard ids go in join order; slow joins are
+    /// tolerated up to `opts.join_timeout`, with liveness pings keeping
+    /// already-ready peers verified while stragglers connect and build
+    /// their backends.
+    pub fn accept_participants(
+        &self,
+        cfg: &RunConfig,
+        n: usize,
+        opts: &TcpOpts,
+    ) -> Result<TcpTransport> {
+        anyhow::ensure!(n > 0, "the TCP transport needs at least one participant");
+        cfg.validate_sharded("the tcp transport")?;
+        anyhow::ensure!(
+            cfg.workers == n,
+            "serve config has workers={} but expects {n} participants; they must match so \
+             the shard map and per-participant ledger equal the stdio --workers run",
+            cfg.workers
+        );
+        self.listener.set_nonblocking(true).context("non-blocking listener")?;
+        let deadline = Instant::now() + opts.join_timeout;
+        let mut peers: Vec<Peer> = Vec::with_capacity(n);
+        let mut last_beat = Instant::now();
+        loop {
+            let ready = peers.iter().filter(|p| p.handshake.is_ready()).count();
+            let unconfirmed = peers.iter().any(|p| p.pending_ping.is_some());
+            if ready == n && !unconfirmed {
+                break;
+            }
+            if Instant::now() >= deadline {
+                let pinging = peers.iter().filter(|p| p.pending_ping.is_some()).count();
+                bail!(
+                    "join window ({:?}) expired with {ready}/{n} participants ready \
+                     ({} connected, {pinging} with an unanswered liveness ping)",
+                    opts.join_timeout,
+                    peers.len()
+                );
+            }
+            // accept new connections (shard id = join order)
+            match self.listener.accept() {
+                Ok((stream, addr)) => {
+                    if peers.len() == n {
+                        // fleet is full: refuse politely by closing
+                        let _ = stream.shutdown(Shutdown::Both);
+                    } else {
+                        let shard = peers.len();
+                        let owned = shard_clients(cfg.n_clients, n, shard);
+                        stream.set_nodelay(true).context("setting TCP_NODELAY")?;
+                        stream.set_nonblocking(true).context("non-blocking peer socket")?;
+                        peers.push(Peer {
+                            shard,
+                            handshake: JoinHandshake::new(shard, owned.len()),
+                            shard_clients: owned,
+                            stream,
+                            addr,
+                            decoder: StreamDecoder::new(),
+                            pending_ping: None,
+                            pings_sent: 0,
+                            compute_secs: 0.0,
+                        });
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {}
+                Err(e) => return Err(e).context("accepting participant connection"),
+            }
+            // pump every peer's receive buffer and drive its handshake
+            for peer in &mut peers {
+                pump_join_peer(peer, cfg, n, deadline)?;
+            }
+            // ping ready peers while stragglers join: verifies both socket
+            // directions stay live through an arbitrarily long join window
+            if last_beat.elapsed() >= opts.heartbeat_every {
+                last_beat = Instant::now();
+                for peer in &mut peers {
+                    if peer.handshake.is_ready() && peer.pending_ping.is_none() {
+                        let nonce = 0xFED_1A0A ^ ((peer.shard as u64) << 32) ^ peer.pings_sent;
+                        peer.pings_sent += 1;
+                        peer.pending_ping = Some(nonce);
+                        let frame = Message::Heartbeat(Heartbeat { nonce }).to_frame();
+                        write_all_nb(peer, &frame, deadline, "liveness ping")?;
+                    }
+                }
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // switch to blocking I/O with the training-time budget (zero =
+        // unlimited, matching `join`; the write timeout keeps a wedged
+        // participant that stops draining its socket from hanging the
+        // coordinator inside a decision broadcast), then one final
+        // synchronous ping/echo per peer (both directions verified
+        // immediately before the first assignment)
+        let io_timeout = if opts.io_timeout.is_zero() { None } else { Some(opts.io_timeout) };
+        for peer in &mut peers {
+            peer.stream.set_nonblocking(false).context("blocking peer socket")?;
+            peer.stream.set_read_timeout(io_timeout).context("setting peer read timeout")?;
+            peer.stream.set_write_timeout(io_timeout).context("setting peer write timeout")?;
+            let nonce = 0xFED_7EA1 ^ peer.shard as u64;
+            peer.send(&Message::Heartbeat(Heartbeat { nonce }))?;
+            match peer.recv()? {
+                Message::Heartbeat(h) if h.nonce == nonce => {}
+                other => bail!("{}: bad heartbeat echo ({})", peer.describe(), other.kind_name()),
+            }
+        }
+        Ok(TcpTransport { peers })
+    }
+}
+
+/// Drain one peer's socket during the join phase (non-blocking) and feed
+/// complete frames to its handshake state machine.
+fn pump_join_peer(peer: &mut Peer, cfg: &RunConfig, n: usize, deadline: Instant) -> Result<()> {
+    loop {
+        let mut buf = [0u8; 64 * 1024];
+        match peer.stream.read(&mut buf) {
+            Ok(0) => bail!("{} disconnected during the join handshake", peer.describe()),
+            Ok(nread) => peer.decoder.extend(&buf[..nread]),
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e).with_context(|| format!("reading from {}", peer.describe())),
+        }
+        // a partial frame stays buffered (Truncated, not an error): the
+        // next pump continues where this read left off
+        while let Some(msg) =
+            peer.decoder.poll_message().with_context(|| format!("from {}", peer.describe()))?
+        {
+            match peer.handshake.on_message(&msg)? {
+                JoinAction::SendConfigure => {
+                    let conf = Message::Configure(Configure {
+                        worker_id: peer.shard,
+                        n_workers: n,
+                        shard: peer.shard_clients.clone(),
+                        cfg: cfg.clone(),
+                    });
+                    let frame = conf.to_frame();
+                    write_all_nb(peer, &frame, deadline, "Configure")?;
+                }
+                JoinAction::Ready => {}
+                JoinAction::Pong(nonce) => {
+                    anyhow::ensure!(
+                        peer.pending_ping == Some(nonce),
+                        "{}: heartbeat echo nonce {nonce:#x} does not match the ping",
+                        peer.describe()
+                    );
+                    peer.pending_ping = None;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// `write_all` on a non-blocking socket: retry `WouldBlock` with a small
+/// sleep until `deadline`.
+fn write_all_nb(peer: &mut Peer, bytes: &[u8], deadline: Instant, what: &str) -> Result<()> {
+    let mut off = 0;
+    while off < bytes.len() {
+        match peer.stream.write(&bytes[off..]) {
+            Ok(0) => bail!("{} closed the connection while receiving {what}", peer.describe()),
+            Ok(n) => off += n,
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::Interrupted => {
+                anyhow::ensure!(
+                    Instant::now() < deadline,
+                    "timed out sending {what} to {}",
+                    peer.describe()
+                );
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => {
+                return Err(e).with_context(|| format!("sending {what} to {}", peer.describe()))
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Coordinator-side TCP transport over `n` handshaken participants.
+/// Message flow per block is identical to `ProcessTransport`; TCP is a
+/// FIFO byte stream exactly like a pipe, so block k's decisions always
+/// precede block k+1's assignment without extra synchronization.
+pub struct TcpTransport {
+    peers: Vec<Peer>,
+}
+
+impl TcpTransport {
+    /// Convenience: bind + accept in one call (tests; `serve` binds first
+    /// to print the address).
+    pub fn serve(addr: &str, cfg: &RunConfig, n: usize, opts: &TcpOpts) -> Result<TcpTransport> {
+        TcpServer::bind(addr)?.accept_participants(cfg, n, opts)
+    }
+
+    /// The peers' shard -> remote address map (diagnostics).
+    pub fn peer_addrs(&self) -> Vec<(usize, SocketAddr)> {
+        self.peers.iter().map(|p| (p.shard, p.addr)).collect()
+    }
+}
+
+impl Transport for TcpTransport {
+    fn workers(&self) -> usize {
+        self.peers.len()
+    }
+
+    fn run_block(&mut self, a: &RoundAssignment) -> Result<BlockResult> {
+        // serialize once, fan the same bytes to every participant
+        let frame = Message::Assignment(a.clone()).to_frame();
+        for peer in &mut self.peers {
+            peer.stream
+                .write_all(&frame)
+                .with_context(|| format!("sending assignment to {}", peer.describe()))?;
+        }
+        let mut pairs = Vec::with_capacity(a.active.len());
+        let mut updates = Vec::new();
+        for peer in &mut self.peers {
+            loop {
+                match peer.recv().with_context(|| {
+                    format!("mid-block (k={}) result from participant shard {}", a.k, peer.shard)
+                })? {
+                    Message::Update(u) => updates.push(u),
+                    Message::Done(d) => {
+                        anyhow::ensure!(
+                            d.k == a.k,
+                            "{} finished block k={}, expected k={}",
+                            peer.describe(),
+                            d.k,
+                            a.k
+                        );
+                        pairs.extend(d.losses);
+                        peer.compute_secs = d.compute_secs;
+                        break;
+                    }
+                    other => {
+                        bail!("{}: unexpected {} mid-block", peer.describe(), other.kind_name());
+                    }
+                }
+            }
+        }
+        Ok(BlockResult { losses: merge_losses(&a.active, &pairs)?, updates })
+    }
+
+    fn broadcast_decision(&mut self, d: &SyncDecision, _active: &[usize]) -> Result<()> {
+        let frame = Message::Decision(d.clone()).to_frame();
+        for peer in &mut self.peers {
+            peer.stream
+                .write_all(&frame)
+                .with_context(|| format!("sending SyncDecision to {}", peer.describe()))?;
+        }
+        Ok(())
+    }
+
+    fn remote_compute_secs(&self) -> f64 {
+        self.peers.iter().map(|p| p.compute_secs).sum()
+    }
+
+    fn shutdown(&mut self) -> Result<()> {
+        for peer in &mut self.peers {
+            // best effort: the participant may already have exited on error
+            let _ = peer.send(&Message::Shutdown);
+        }
+        for peer in &mut self.peers {
+            // a clean participant closes its end after Shutdown; do not
+            // fail a completed run over a slow close
+            let _ = peer.stream.set_read_timeout(Some(Duration::from_secs(5)));
+            let mut buf = [0u8; 256];
+            let _ = peer.stream.read(&mut buf);
+            let _ = peer.stream.shutdown(Shutdown::Both);
+        }
+        Ok(())
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        // error path: close sockets so remote participants fail fast
+        // instead of blocking on a dead coordinator
+        for peer in &mut self.peers {
+            let _ = peer.stream.shutdown(Shutdown::Both);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Participant side
+// ---------------------------------------------------------------------------
+
+/// Dial `addr` until it accepts or the retry window closes.
+fn connect_with_retry(addr: &str, window: Duration) -> Result<TcpStream> {
+    let deadline = Instant::now() + window;
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(e).with_context(|| format!("connecting to coordinator at {addr}"));
+                }
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    }
+}
+
+/// Join a coordinator as a TCP participant and serve one full training
+/// session; returns the shard id this participant owned.  The
+/// `Participant` (backend, client shard, partition) is rebuilt from the
+/// coordinator's `Configure` frame exactly like a stdio worker.
+pub fn join(addr: &str, opts: &JoinOpts) -> Result<usize> {
+    let stream = connect_with_retry(addr, opts.connect_retry)?;
+    stream.set_nodelay(true).context("setting TCP_NODELAY")?;
+    if !opts.io_timeout.is_zero() {
+        stream.set_read_timeout(Some(opts.io_timeout)).context("setting read timeout")?;
+        stream.set_write_timeout(Some(opts.io_timeout)).context("setting write timeout")?;
+    }
+    let mut rx = stream.try_clone().context("cloning socket for reads")?;
+    let mut tx = stream;
+    // 1. announce: version-only Hello (no shard assigned yet)
+    Message::Hello(Hello { version: WIRE_VERSION, worker_id: 0, shard_len: 0 }).write_to(&mut tx)?;
+    // 2. the coordinator assigns a shard + ships the run config
+    let conf = match Message::read_from(&mut rx).context("reading Configure")? {
+        Message::Configure(c) => c,
+        other => bail!("expected Configure from the coordinator, got {}", other.kind_name()),
+    };
+    let mut p = super::worker::build_participant(conf)?;
+    // 3. confirm readiness (backend built, shard adopted)
+    Message::Hello(Hello {
+        version: WIRE_VERSION,
+        worker_id: p.worker_id,
+        shard_len: p.shard().len(),
+    })
+    .write_to(&mut tx)?;
+    // 4. the stdio worker's block loop, verbatim (echoes heartbeats, so
+    //    the coordinator's slow-join pings keep this session verified)
+    super::worker::serve_loop(&mut p, rx, tx)?;
+    Ok(p.worker_id)
+}

@@ -22,6 +22,16 @@ use anyhow::{Context, Result};
 use super::messages::{LayerUpdate, RoundAssignment, SyncDecision};
 use super::participant::Participant;
 
+/// Round-robin shard map shared by every sharded transport (stdio
+/// workers, TCP participants) and by `CommLedger::shard_of`'s inverse:
+/// the global client ids shard `shard` of `n` owns.  This single
+/// definition is load-bearing for the bit-identity guarantee — an
+/// N-participant TCP run equals the N-worker stdio run only because both
+/// draw the same map.
+pub fn shard_clients(n_clients: usize, n: usize, shard: usize) -> Vec<usize> {
+    (0..n_clients).filter(|c| c % n == shard).collect()
+}
+
 /// Merged result of one training block across all participants.
 pub struct BlockResult {
     /// Per-client mean losses in `assignment.active` order.

@@ -243,11 +243,33 @@ pub fn frame(kind: u8, body: &[u8]) -> Vec<u8> {
     out
 }
 
-/// Parse one frame from the head of `buf`; returns (kind, body, consumed).
-/// Errors on truncation, bad magic/version, oversized length, or CRC
-/// mismatch — a corrupt frame is never partially accepted.
-pub fn deframe(buf: &[u8]) -> Result<(u8, &[u8], usize)> {
-    ensure!(buf.len() >= HEADER_LEN, "truncated frame header ({} bytes)", buf.len());
+/// Outcome of decoding the head of a byte buffer.
+///
+/// Truncation is a *variant*, not an error: a socket read can legitimately
+/// deliver half a frame, and the caller must keep the bytes and read more.
+/// Only genuine corruption (bad magic/version, oversized length, CRC
+/// mismatch) is an `Err` from [`try_deframe`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameStatus<'a> {
+    /// One complete, CRC-verified frame at the head of the buffer.
+    Ready { kind: u8, body: &'a [u8], consumed: usize },
+    /// The buffer ends before the frame does: `need` total bytes must be
+    /// available before decoding can be retried (a lower bound when even
+    /// the header is incomplete).
+    Truncated { need: usize },
+}
+
+/// Parse the head of `buf` without treating truncation as corruption:
+/// returns `Ok(Truncated { need })` when the header or the header-claimed
+/// body extends past the buffer, `Ok(Ready { .. })` on a complete verified
+/// frame, and `Err` only for corruption (bad magic/version, length over
+/// the cap, CRC mismatch).  Socket transports call this on a growing
+/// receive buffer so a partial frame keeps reading instead of dropping
+/// the connection.
+pub fn try_deframe(buf: &[u8]) -> Result<FrameStatus<'_>> {
+    if buf.len() < HEADER_LEN {
+        return Ok(FrameStatus::Truncated { need: HEADER_LEN });
+    }
     ensure!(buf[0..2] == MAGIC, "bad frame magic {:02x}{:02x}", buf[0], buf[1]);
     ensure!(
         buf[2] == WIRE_VERSION,
@@ -258,12 +280,122 @@ pub fn deframe(buf: &[u8]) -> Result<(u8, &[u8], usize)> {
     let len = u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize;
     ensure!(len <= MAX_FRAME, "frame length {len} exceeds cap");
     let total = HEADER_LEN + len + 4;
-    ensure!(buf.len() >= total, "truncated frame: header claims {len}B body, have {}", buf.len());
+    if buf.len() < total {
+        return Ok(FrameStatus::Truncated { need: total });
+    }
     let body = &buf[HEADER_LEN..HEADER_LEN + len];
     let want = u32::from_le_bytes(buf[HEADER_LEN + len..total].try_into().unwrap());
     let got = crc32(body);
     ensure!(want == got, "frame checksum mismatch: {want:08x} != {got:08x}");
-    Ok((kind, body, total))
+    Ok(FrameStatus::Ready { kind, body, consumed: total })
+}
+
+/// Total byte extent of the frame at the head of `buf`, when the header
+/// is well-formed (magic/version readable, length within cap) and the
+/// buffer holds the whole frame.  The CRC is deliberately NOT checked:
+/// this is how [`StreamDecoder`] skips past a CRC-corrupt frame while
+/// staying aligned on the next frame boundary — one parser for the
+/// layout, shared with [`try_deframe`]'s constants.
+fn complete_frame_extent(buf: &[u8]) -> Option<usize> {
+    if buf.len() < HEADER_LEN || buf[0..2] != MAGIC || buf[2] != WIRE_VERSION {
+        return None;
+    }
+    let len = u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize;
+    // cap check first: on 32-bit targets a hostile length near u32::MAX
+    // would overflow the extent sum below
+    if len > MAX_FRAME {
+        return None;
+    }
+    let total = HEADER_LEN + len + 4;
+    (buf.len() >= total).then_some(total)
+}
+
+/// Parse one frame from the head of `buf`; returns (kind, body, consumed).
+/// Errors on truncation, bad magic/version, oversized length, or CRC
+/// mismatch — a corrupt frame is never partially accepted.  Callers that
+/// must distinguish an incomplete frame from a corrupt one (socket receive
+/// buffers) use [`try_deframe`] instead.
+pub fn deframe(buf: &[u8]) -> Result<(u8, &[u8], usize)> {
+    match try_deframe(buf)? {
+        FrameStatus::Ready { kind, body, consumed } => Ok((kind, body, consumed)),
+        FrameStatus::Truncated { need } => {
+            bail!("truncated frame: need {need} bytes, have {}", buf.len())
+        }
+    }
+}
+
+/// Incremental frame decoder over a growing receive buffer.
+///
+/// Socket transports feed raw `read()` chunks via [`StreamDecoder::extend`]
+/// and pop complete frames via [`StreamDecoder::poll`]:
+///
+///   - `Ok(Some((kind, body)))` — one complete, CRC-verified frame;
+///   - `Ok(None)` — the buffered bytes end mid-frame
+///     ([`FrameStatus::Truncated`]): keep the bytes, read more;
+///   - `Err` — corruption.  A CRC-mismatched frame whose *length* was
+///     readable is skipped in full before the error returns, so one
+///     corrupt frame is rejected without poisoning the stream — the next
+///     `poll` resumes at the following frame boundary.  Lost framing (bad
+///     magic/version/length) cannot be resynchronized; the connection
+///     must drop.
+#[derive(Default)]
+pub struct StreamDecoder {
+    buf: Vec<u8>,
+    start: usize,
+}
+
+impl StreamDecoder {
+    pub fn new() -> StreamDecoder {
+        StreamDecoder::default()
+    }
+
+    /// Append freshly read bytes to the receive buffer.
+    pub fn extend(&mut self, bytes: &[u8]) {
+        // drop consumed prefix before growing; keeps the buffer bounded by
+        // one frame plus one read chunk in the steady state
+        if self.start > 0 {
+            self.buf.drain(..self.start);
+            self.start = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes buffered but not yet consumed by a decoded frame.
+    pub fn pending(&self) -> usize {
+        self.buf.len() - self.start
+    }
+
+    /// Try to pop one complete frame from the buffer.
+    pub fn poll(&mut self) -> Result<Option<(u8, Vec<u8>)>> {
+        let head = &self.buf[self.start..];
+        match try_deframe(head) {
+            Ok(FrameStatus::Ready { kind, body, consumed }) => {
+                let out = body.to_vec();
+                self.start += consumed;
+                Ok(Some((kind, out)))
+            }
+            Ok(FrameStatus::Truncated { .. }) => Ok(None),
+            Err(e) => {
+                // CRC mismatch: the header (and thus the frame extent) was
+                // valid, so skip exactly this frame and leave the stream
+                // aligned on the next one.  Header-level corruption leaves
+                // `start` where it is — framing is lost and the caller
+                // must drop the connection.
+                if let Some(total) = complete_frame_extent(head) {
+                    self.start += total;
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Try to pop one complete [`super::messages::Message`].
+    pub fn poll_message(&mut self) -> Result<Option<super::messages::Message>> {
+        match self.poll()? {
+            Some((kind, body)) => Ok(Some(super::messages::Message::from_body(kind, &body)?)),
+            None => Ok(None),
+        }
+    }
 }
 
 /// Write one frame to a stream (does not flush; callers batch + flush).
@@ -390,5 +522,84 @@ mod tests {
         f[2] = WIRE_VERSION + 1;
         let err = format!("{:#}", deframe(&f).unwrap_err());
         assert!(err.contains("version mismatch"), "{err}");
+    }
+
+    #[test]
+    fn try_deframe_distinguishes_truncation_from_corruption() {
+        let f = frame(4, b"hello protocol");
+        // every strict prefix is Truncated, never an Err — and `need` is
+        // a usable lower bound on the bytes required
+        for cut in 0..f.len() {
+            match try_deframe(&f[..cut]).unwrap() {
+                FrameStatus::Truncated { need } => {
+                    assert!(need > cut, "need {need} at cut {cut}");
+                    assert!(need <= f.len());
+                }
+                FrameStatus::Ready { .. } => panic!("prefix of {cut} bytes decoded"),
+            }
+        }
+        match try_deframe(&f).unwrap() {
+            FrameStatus::Ready { kind, body, consumed } => {
+                assert_eq!((kind, body, consumed), (4u8, b"hello protocol".as_slice(), f.len()));
+            }
+            other => panic!("{other:?}"),
+        }
+        // corruption is still an Err, not Truncated
+        let mut bad = f.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x01; // CRC byte
+        assert!(try_deframe(&bad).is_err());
+        let mut bad = f;
+        bad[0] ^= 0x01; // magic
+        assert!(try_deframe(&bad).is_err());
+    }
+
+    #[test]
+    fn stream_decoder_reassembles_partial_frames() {
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&frame(2, b"first"));
+        bytes.extend_from_slice(&frame(3, b"second frame body"));
+        let mut dec = StreamDecoder::new();
+        let mut got = Vec::new();
+        // drip-feed one byte at a time: poll never errors, yields exactly
+        // the two frames in order
+        for &b in &bytes {
+            dec.extend(&[b]);
+            while let Some(f) = dec.poll().unwrap() {
+                got.push(f);
+            }
+        }
+        assert_eq!(
+            got,
+            vec![(2u8, b"first".to_vec()), (3u8, b"second frame body".to_vec())]
+        );
+        assert_eq!(dec.pending(), 0);
+    }
+
+    #[test]
+    fn stream_decoder_skips_corrupt_crc_without_poisoning() {
+        let mut corrupt = frame(2, b"damaged-in-flight");
+        let blen = corrupt.len();
+        corrupt[blen - 6] ^= 0x40; // flip a body bit -> CRC mismatch
+        let good = frame(5, b"still fine");
+        let mut dec = StreamDecoder::new();
+        dec.extend(&corrupt);
+        dec.extend(&good);
+        let err = format!("{:#}", dec.poll().unwrap_err());
+        assert!(err.contains("checksum mismatch"), "{err}");
+        // the corrupt frame was consumed in full; the stream is intact
+        assert_eq!(dec.poll().unwrap(), Some((5u8, b"still fine".to_vec())));
+        assert_eq!(dec.poll().unwrap(), None);
+    }
+
+    #[test]
+    fn stream_decoder_header_corruption_is_fatal() {
+        let mut f = frame(2, b"x");
+        f[0] ^= 0xFF; // magic gone -> framing lost, no resync possible
+        let mut dec = StreamDecoder::new();
+        dec.extend(&f);
+        assert!(dec.poll().is_err());
+        // still an error on retry: the decoder did not silently skip bytes
+        assert!(dec.poll().is_err());
     }
 }

@@ -17,17 +17,14 @@ use anyhow::{bail, Context, Result};
 use crate::config::EngineKind;
 use crate::runtime::{zoo, ComputeBackend};
 
-use super::messages::{BlockDone, Hello, Message};
+use super::messages::{BlockDone, Configure, Hello, Message};
 use super::participant::Participant;
 use super::wire::WIRE_VERSION;
 
-/// Serve one coordinator session over the given streams; returns when a
-/// `Shutdown` frame arrives.
-pub fn run<R: Read, W: Write>(mut rx: R, mut tx: W) -> Result<()> {
-    let conf = match Message::read_from(&mut rx).context("reading Configure")? {
-        Message::Configure(c) => c,
-        other => bail!("expected Configure, got {}", other.kind_name()),
-    };
+/// Build a participant from a `Configure` frame: validate the shipped
+/// config and construct the compute backend.  Shared by the stdio worker
+/// and the TCP `join` participant.
+pub fn build_participant(conf: Configure) -> Result<Participant> {
     let cfg = conf.cfg;
     cfg.validate().context("worker received invalid config")?;
     anyhow::ensure!(
@@ -37,15 +34,14 @@ pub fn run<R: Read, W: Write>(mut rx: R, mut tx: W) -> Result<()> {
     let backend: Arc<dyn ComputeBackend> = Arc::new(
         zoo::build(&cfg.model, cfg.dataset).context("building worker compute backend")?,
     );
-    let mut p = Participant::new(&cfg, backend, conf.worker_id, conf.shard)?;
-    Message::Hello(Hello {
-        version: WIRE_VERSION,
-        worker_id: p.worker_id,
-        shard_len: p.shard().len(),
-    })
-    .write_to(&mut tx)?;
-    tx.flush().context("flushing Hello")?;
+    Participant::new(&cfg, backend, conf.worker_id, conf.shard)
+}
 
+/// The participant's block loop over arbitrary streams: Assignment ->
+/// Update* + Done, Decision, Heartbeat echo, until a `Shutdown` frame
+/// arrives.  Transport-agnostic — the stdio worker hands it pipe halves,
+/// the TCP `join` participant hands it socket halves.
+pub fn serve_loop<R: Read, W: Write>(p: &mut Participant, mut rx: R, mut tx: W) -> Result<()> {
     let mut last_active: Vec<usize> = Vec::new();
     loop {
         match Message::read_from(&mut rx)? {
@@ -73,6 +69,24 @@ pub fn run<R: Read, W: Write>(mut rx: R, mut tx: W) -> Result<()> {
             other => bail!("unexpected {} in worker loop", other.kind_name()),
         }
     }
+}
+
+/// Serve one coordinator session over the given streams; returns when a
+/// `Shutdown` frame arrives.
+pub fn run<R: Read, W: Write>(mut rx: R, mut tx: W) -> Result<()> {
+    let conf = match Message::read_from(&mut rx).context("reading Configure")? {
+        Message::Configure(c) => c,
+        other => bail!("expected Configure, got {}", other.kind_name()),
+    };
+    let mut p = build_participant(conf)?;
+    Message::Hello(Hello {
+        version: WIRE_VERSION,
+        worker_id: p.worker_id,
+        shard_len: p.shard().len(),
+    })
+    .write_to(&mut tx)?;
+    tx.flush().context("flushing Hello")?;
+    serve_loop(&mut p, rx, tx)
 }
 
 #[cfg(test)]

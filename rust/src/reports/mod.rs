@@ -181,6 +181,23 @@ pub fn summary_line(label: &str, m: &RunMetrics) -> String {
     )
 }
 
+/// Per-participant traffic table for sharded runs (stdio workers or TCP
+/// participants): nominal Eq.9-style bytes folded by round-robin shard.
+/// `None` for in-proc runs — a single-shard table carries nothing beyond
+/// the ledger totals.
+pub fn participants_summary(m: &RunMetrics) -> Option<String> {
+    if m.per_participant.len() <= 1 {
+        return None;
+    }
+    let mut s = String::from("participants (nominal Eq.9-style bytes, shard = client mod n):\n");
+    for (shard, updates, up, down) in &m.per_participant {
+        s.push_str(&format!(
+            "  shard {shard}: {updates:>5} layer updates  {up:>12} B up  {down:>12} B down\n"
+        ));
+    }
+    Some(s)
+}
+
 /// Comm-efficiency comparison used in several reports: FedLAMA vs the two
 /// FedAvg reference points the paper anchors on.
 pub fn tradeoff_note(
@@ -260,6 +277,19 @@ mod tests {
         assert!(note.contains("-1.00pp"), "{note}");
         assert!(note.contains("+9.00pp"), "{note}");
         assert!(summary_line("t", &short).contains("90.00%"));
+    }
+
+    #[test]
+    fn participants_summary_renders_only_when_sharded() {
+        let mut m = fake_metrics("fedlama");
+        m.per_participant = vec![(0, 12, 4096, 2048)];
+        assert!(participants_summary(&m).is_none(), "single shard: nothing beyond totals");
+        m.per_participant = vec![(0, 12, 4096, 2048), (1, 12, 4096, 2048)];
+        let s = participants_summary(&m).unwrap();
+        assert!(s.contains("shard 0"), "{s}");
+        assert!(s.contains("shard 1"), "{s}");
+        assert!(s.contains("4096"), "{s}");
+        assert_eq!(s.lines().count(), 3);
     }
 
     #[test]

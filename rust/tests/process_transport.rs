@@ -73,6 +73,17 @@ fn assert_workers_bit_identical(cfg: RunConfig, workers: usize, what: &str) {
             "{what}: global tensor {gt} diverged with {workers} workers"
         );
     }
+    // the per-participant ledger has one slot per shard; its totals are
+    // invariant to the shard count (the fold just partitions the traffic)
+    assert_eq!(m0.per_participant.len(), 1, "{what}: in-proc is one shard");
+    assert_eq!(mn.per_participant.len(), workers, "{what}: one slot per worker");
+    let (_, u0, up0, down0) = m0.per_participant[0];
+    let un: u64 = mn.per_participant.iter().map(|p| p.1).sum();
+    let upn: u64 = mn.per_participant.iter().map(|p| p.2).sum();
+    let downn: u64 = mn.per_participant.iter().map(|p| p.3).sum();
+    assert_eq!(un, u0, "{what}: per-participant update total");
+    assert_eq!(upn, up0, "{what}: per-participant uplink total");
+    assert_eq!(downn, down0, "{what}: per-participant downlink total");
 }
 
 #[test]

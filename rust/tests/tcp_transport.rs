@@ -1,0 +1,260 @@
+//! TCP transport: loopback handshake, failure surfacing, and the
+//! acceptance bar — an N-participant TCP run over localhost must be
+//! **bit-identical** to the in-proc run (and therefore to the stdio
+//! `--workers N` run, which `tests/process_transport.rs` pins to the same
+//! reference), including compressed uplinks.
+//!
+//! Participants here run as in-process threads calling
+//! `protocol::tcp::join` — the exact code path `fedlama join` executes —
+//! so the suite needs no subprocesses and no free fixed ports (everything
+//! binds 127.0.0.1:0).
+
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::thread;
+use std::time::Duration;
+
+use fedlama::aggregation::Policy;
+use fedlama::config::RunConfig;
+use fedlama::coordinator::Coordinator;
+use fedlama::data::DatasetKind;
+use fedlama::metrics::RunMetrics;
+use fedlama::protocol::tcp::{self, JoinOpts, TcpOpts, TcpServer};
+use fedlama::protocol::wire::StreamDecoder;
+use fedlama::protocol::{Heartbeat, Hello, Message, WIRE_VERSION};
+
+fn base_cfg() -> RunConfig {
+    RunConfig {
+        dataset: DatasetKind::Toy,
+        n_clients: 6,
+        samples: 64,
+        lr: 0.05,
+        warmup_rounds: 2,
+        iterations: 24,
+        policy: Policy::fedlama(6, 2),
+        eval_every_rounds: 2,
+        eval_examples: 256,
+        seed: 23,
+        ..Default::default()
+    }
+}
+
+fn fast_opts() -> TcpOpts {
+    TcpOpts {
+        join_timeout: Duration::from_secs(60),
+        io_timeout: Duration::from_secs(60),
+        heartbeat_every: Duration::from_millis(50),
+    }
+}
+
+fn join_opts() -> JoinOpts {
+    JoinOpts { connect_retry: Duration::from_secs(10), io_timeout: Duration::from_secs(60) }
+}
+
+/// Run `cfg` over a real localhost TCP federation with `n` participant
+/// threads; returns the coordinator (for global-tensor access) + metrics.
+fn run_tcp(cfg: &RunConfig, n: usize) -> (Coordinator, RunMetrics) {
+    let server = TcpServer::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let joins: Vec<_> = (0..n)
+        .map(|_| {
+            let a = addr.clone();
+            thread::spawn(move || tcp::join(&a, &join_opts()).unwrap())
+        })
+        .collect();
+    let cfg = RunConfig { workers: n, ..cfg.clone() };
+    let mut coord = Coordinator::new(cfg).unwrap();
+    let mut transport = server.accept_participants(&coord.cfg, n, &fast_opts()).unwrap();
+    let metrics = coord.run_with_transport(&mut transport).unwrap();
+    let mut shards: Vec<usize> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+    shards.sort_unstable();
+    assert_eq!(shards, (0..n).collect::<Vec<_>>(), "every shard served exactly once");
+    (coord, metrics)
+}
+
+fn run_inproc(cfg: &RunConfig) -> (Coordinator, RunMetrics) {
+    let cfg = RunConfig { workers: 0, ..cfg.clone() };
+    let mut coord = Coordinator::new(cfg).unwrap();
+    let metrics = coord.run().unwrap();
+    (coord, metrics)
+}
+
+/// Everything except wall-clock (and the shard-count-dependent
+/// per-participant table) must match exactly.
+fn assert_metrics_identical(a: &RunMetrics, b: &RunMetrics, what: &str) {
+    assert_eq!(a.tag, b.tag, "{what}: tag");
+    assert_eq!(a.curve, b.curve, "{what}: learning curve");
+    assert_eq!(a.final_acc, b.final_acc, "{what}: final_acc");
+    assert_eq!(a.final_loss, b.final_loss, "{what}: final_loss");
+    assert_eq!(a.total_comm_cost, b.total_comm_cost, "{what}: Eq.9 comm cost");
+    assert_eq!(a.total_syncs, b.total_syncs, "{what}: syncs");
+    assert_eq!(a.total_bytes, b.total_bytes, "{what}: bytes");
+    assert_eq!(a.per_group, b.per_group, "{what}: per-group ledger");
+}
+
+/// A hand-rolled protocol peer: completes the join handshake, echoes
+/// heartbeats, and either exits cleanly on Shutdown or drops the
+/// connection on the first RoundAssignment.  Returns its assigned shard.
+fn raw_peer(addr: SocketAddr, drop_on_assignment: bool) -> thread::JoinHandle<usize> {
+    thread::spawn(move || {
+        let mut s = TcpStream::connect(addr).unwrap();
+        let hello = |id: usize, len: usize| {
+            Message::Hello(Hello { version: WIRE_VERSION, worker_id: id, shard_len: len })
+        };
+        hello(0, 0).write_to(&mut s).unwrap();
+        let conf = match Message::read_from(&mut s).unwrap() {
+            Message::Configure(c) => c,
+            other => panic!("expected Configure, got {}", other.kind_name()),
+        };
+        hello(conf.worker_id, conf.shard.len()).write_to(&mut s).unwrap();
+        loop {
+            match Message::read_from(&mut s) {
+                Ok(Message::Heartbeat(h)) => {
+                    Message::Heartbeat(h).write_to(&mut s).unwrap();
+                }
+                Ok(Message::Assignment(_)) if drop_on_assignment => return conf.worker_id,
+                Ok(Message::Shutdown) | Err(_) => return conf.worker_id,
+                Ok(other) => panic!("unexpected {} in raw peer", other.kind_name()),
+            }
+        }
+    })
+}
+
+#[test]
+fn loopback_handshake_tolerates_slow_joins() {
+    let cfg = RunConfig { workers: 2, ..base_cfg() };
+    let server = TcpServer::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap();
+    let p0 = raw_peer(addr, false);
+    // second joiner is deliberately slow: the join window tolerates it
+    // while heartbeating the first peer (which thread wins shard 0 is up
+    // to the scheduler — only the shard *set* is deterministic)
+    let p1 = thread::spawn(move || {
+        thread::sleep(Duration::from_millis(300));
+        raw_peer(addr, false).join().unwrap()
+    });
+    let mut transport = server.accept_participants(&cfg, 2, &fast_opts()).unwrap();
+    use fedlama::protocol::Transport;
+    assert_eq!(transport.workers(), 2);
+    let addrs = transport.peer_addrs();
+    // shard ids go 0..n in join order, whatever order the threads won
+    assert_eq!(addrs.iter().map(|(s, _)| *s).collect::<Vec<_>>(), vec![0, 1]);
+    transport.shutdown().unwrap();
+    // both raw peers completed the handshake and saw the shutdown, and
+    // together they covered both shards exactly once
+    let mut shards = vec![p0.join().unwrap(), p1.join().unwrap()];
+    shards.sort_unstable();
+    assert_eq!(shards, vec![0, 1]);
+}
+
+#[test]
+fn join_window_expiry_names_the_shortfall() {
+    let cfg = RunConfig { workers: 3, ..base_cfg() };
+    let server = TcpServer::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap();
+    let opts = TcpOpts { join_timeout: Duration::from_millis(400), ..fast_opts() };
+    // one of three shows up; the window must close with a clear count
+    let p0 = raw_peer(addr, false);
+    let err = server.accept_participants(&cfg, 3, &opts).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("join window"), "{msg}");
+    assert!(msg.contains("1/3"), "{msg}");
+    drop(server);
+    p0.join().unwrap();
+}
+
+#[test]
+fn participant_drop_mid_round_names_the_shard() {
+    let cfg = RunConfig { workers: 1, ..base_cfg() };
+    let server = TcpServer::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap();
+    let peer = raw_peer(addr, true);
+    let mut coord = Coordinator::new(cfg).unwrap();
+    let mut transport = server.accept_participants(&coord.cfg, 1, &fast_opts()).unwrap();
+    let err = coord.run_with_transport(&mut transport).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("shard 0"), "error must name the dropped shard: {msg}");
+    assert!(msg.contains("closed the connection"), "{msg}");
+    drop(transport);
+    assert_eq!(peer.join().unwrap(), 0);
+}
+
+#[test]
+fn corrupt_crc_frame_rejected_without_poisoning_the_stream() {
+    // a real socket pair: one corrupt frame, then a valid frame written in
+    // two halves (forcing the decoder through its Truncated state)
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let writer = thread::spawn(move || {
+        let mut s = TcpStream::connect(addr).unwrap();
+        let mut corrupt = Message::Heartbeat(Heartbeat { nonce: 7 }).to_frame();
+        let n = corrupt.len();
+        corrupt[n - 6] ^= 0x10; // flip a body bit -> CRC mismatch
+        s.write_all(&corrupt).unwrap();
+        let good = Message::Heartbeat(Heartbeat { nonce: 8 }).to_frame();
+        s.write_all(&good[..5]).unwrap();
+        s.flush().unwrap();
+        thread::sleep(Duration::from_millis(100));
+        s.write_all(&good[5..]).unwrap();
+    });
+    let (mut conn, _) = listener.accept().unwrap();
+    let mut dec = StreamDecoder::new();
+    let mut corrupt_errors = 0;
+    let survivor = loop {
+        match dec.poll_message() {
+            Ok(Some(m)) => break m,
+            Ok(None) => {
+                use std::io::Read;
+                let mut buf = [0u8; 4096];
+                let n = conn.read(&mut buf).unwrap();
+                assert!(n > 0, "writer closed before the good frame arrived");
+                dec.extend(&buf[..n]);
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                assert!(msg.contains("checksum mismatch"), "{msg}");
+                corrupt_errors += 1;
+            }
+        }
+    };
+    assert_eq!(corrupt_errors, 1, "exactly one corrupt frame was rejected");
+    match survivor {
+        Message::Heartbeat(h) => assert_eq!(h.nonce, 8, "the frame after the corrupt one"),
+        other => panic!("unexpected {}", other.kind_name()),
+    }
+    writer.join().unwrap();
+}
+
+#[test]
+fn three_participants_bit_identical_to_inproc() {
+    let cfg = base_cfg();
+    let (inproc, m0) = run_inproc(&cfg);
+    let (over_tcp, m3) = run_tcp(&cfg, 3);
+    assert_metrics_identical(&m0, &m3, "fedlama(6,2)/tcp=3");
+    for (gt, (a, b)) in inproc.global().iter().zip(over_tcp.global()).enumerate() {
+        assert_eq!(a.data, b.data, "global tensor {gt} diverged over TCP");
+    }
+    // the per-participant ledger has one slot per shard, round-robin fold
+    assert_eq!(m0.per_participant.len(), 1);
+    assert_eq!(m3.per_participant.len(), 3);
+    let up3: u64 = m3.per_participant.iter().map(|p| p.2).sum();
+    assert_eq!(up3, m0.per_participant[0].2, "uplink bytes total");
+    let down3: u64 = m3.per_participant.iter().map(|p| p.3).sum();
+    assert_eq!(down3, m0.per_participant[0].3, "downlink bytes total");
+    let updates3: u64 = m3.per_participant.iter().map(|p| p.1).sum();
+    assert_eq!(updates3, m0.per_participant[0].1, "update count total");
+}
+
+#[test]
+fn compressed_uplink_bit_identical_over_tcp() {
+    // q8 draws from per-(seed, k, group, client) streams, so the lossy
+    // values must not depend on which socket carried them
+    let cfg = RunConfig { compressor: "q8".into(), ..base_cfg() };
+    let (_, m0) = run_inproc(&cfg);
+    let (_, m3) = run_tcp(&cfg, 3);
+    assert_metrics_identical(&m0, &m3, "q8/tcp=3");
+    let cfg = RunConfig { compressor: "top10".into(), ..base_cfg() };
+    let (_, m0) = run_inproc(&cfg);
+    let (_, m2) = run_tcp(&cfg, 2);
+    assert_metrics_identical(&m0, &m2, "top10/tcp=2");
+}

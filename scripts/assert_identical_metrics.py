@@ -1,0 +1,72 @@
+#!/usr/bin/env python3
+"""Assert two fedlama run-metrics JSON files are bit-identical.
+
+Used by the multiprocess-smoke and tcp-smoke CI jobs (one shared script
+instead of per-job heredocs).  Compares every transport-invariant key;
+wall-clock and throughput fields are never compared (they depend on the
+machine, not the math).
+
+--ignore KEY[,KEY...] skips keys whose *shape* legitimately differs
+between the two runs.  The only expected use is `per_participant` when
+the shard counts differ: an in-proc run folds all traffic into one shard,
+while an N-worker/N-participant run has N slots.  Runs with equal shard
+counts (e.g. stdio `--workers 3` vs a 3-participant TCP run) must match
+on per_participant too, so do not ignore it there.
+"""
+
+import argparse
+import json
+import sys
+
+# Transport-invariant keys of the fedlama run report, in emit order.
+KEYS = [
+    "tag",
+    "final_acc",
+    "final_loss",
+    "total_comm_cost",
+    "total_syncs",
+    "total_bytes",
+    "per_group",
+    "per_participant",
+    "curve",
+]
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("a", help="first run report (reference)")
+    ap.add_argument("b", help="second run report")
+    ap.add_argument(
+        "--ignore",
+        default="",
+        metavar="KEY[,KEY...]",
+        help="keys to skip (only for shape-mismatched comparisons)",
+    )
+    args = ap.parse_args()
+
+    ignore = {k for k in args.ignore.split(",") if k}
+    unknown = ignore - set(KEYS)
+    if unknown:
+        sys.exit(f"--ignore names unknown keys: {sorted(unknown)} (known: {KEYS})")
+
+    with open(args.a) as f:
+        a = json.load(f)
+    with open(args.b) as f:
+        b = json.load(f)
+
+    checked = []
+    for key in KEYS:
+        if key in ignore:
+            continue
+        for name, doc in ((args.a, a), (args.b, b)):
+            if key not in doc:
+                sys.exit(f"{name}: missing key {key!r}")
+        if a[key] != b[key]:
+            sys.exit(f"MISMATCH {key}:\n  {args.a}: {a[key]!r}\n  {args.b}: {b[key]!r}")
+        checked.append(key)
+
+    print(f"{args.a} == {args.b} on: {', '.join(checked)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+#!/usr/bin/env bash
+# Run one fedlama TCP federation on localhost: a `serve` coordinator plus
+# N `join` participants, waiting for every process to exit cleanly.
+#
+# Usage: tcp_smoke_run.sh PORT PARTICIPANTS OUT_JSON [extra train flags...]
+#
+# The run flags come from $SMOKE_FLAGS (the single copy lives in the env
+# block of .github/workflows/ci.yml, whose in-proc and --workers reference
+# runs expand the same variable before diffing OUT_JSON against theirs
+# with scripts/assert_identical_metrics.py); the fallback below mirrors it
+# for local use outside CI.
+set -euo pipefail
+
+port=$1
+n=$2
+out=$3
+shift 3
+bin=./target/release/fedlama
+
+flags=${SMOKE_FLAGS:-"--dataset toy --clients 8 --samples 128 --policy fedlama \
+  --tau 6 --phi 2 --iters 96 --eval-every 2 --lr 0.05 --seed 7"}
+
+# shellcheck disable=SC2086  # $flags is a flag list, word-splitting intended
+"$bin" serve --bind "127.0.0.1:$port" --expect "$n" $flags \
+  --join-timeout 120 --out "$out" "$@" &
+serve=$!
+
+pids=()
+# serve failing (bind clash, join-window expiry) exits the script via
+# set -e: reap the joiners so they don't keep retrying into the CI log
+trap 'kill "$serve" "${pids[@]:-}" 2>/dev/null || true' EXIT
+for _ in $(seq "$n"); do
+  "$bin" join --connect "127.0.0.1:$port" --retry-secs 60 &
+  pids+=("$!")
+done
+
+wait "$serve"
+for p in "${pids[@]}"; do
+  wait "$p"
+done
