@@ -38,6 +38,12 @@ pub struct ParticipantComm {
     /// Nominal downlink bytes to this shard (dense group params per owned
     /// active client per sync decision).
     pub downlink_bytes: u64,
+    /// Mid-run departures of this shard (disconnect, timeout, Abort).
+    pub departures: u64,
+    /// Times a fresh connection claimed this shard after a departure.
+    pub rejoins: u64,
+    /// Blocks committed by quorum while this shard was absent.
+    pub missed_blocks: u64,
 }
 
 #[derive(Debug, Clone, Default)]
@@ -111,6 +117,27 @@ impl CommLedger {
         let s = self.shard_of(client);
         self.participants[s].uplink_bytes += up as u64;
         self.participants[s].downlink_bytes += down as u64;
+    }
+
+    /// Note a mid-run departure of shard `s` (elastic membership).
+    pub fn record_departure(&mut self, s: usize) {
+        if let Some(p) = self.participants.get_mut(s) {
+            p.departures += 1;
+        }
+    }
+
+    /// Note a fresh connection claiming vacant shard `s`.
+    pub fn record_rejoin(&mut self, s: usize) {
+        if let Some(p) = self.participants.get_mut(s) {
+            p.rejoins += 1;
+        }
+    }
+
+    /// Note a block committed by quorum while shard `s` was absent.
+    pub fn record_missed_block(&mut self, s: usize) {
+        if let Some(p) = self.participants.get_mut(s) {
+            p.missed_blocks += 1;
+        }
     }
 
     /// Record one aggregation of group `g` across `m_active` clients.
@@ -315,6 +342,21 @@ mod tests {
         one.record_uplink(9, 40);
         assert_eq!(one.participants.len(), 1);
         assert_eq!(one.participants[0].updates, 1);
+    }
+
+    #[test]
+    fn membership_counters_track_departures_and_rejoins() {
+        let mut l = CommLedger::with_shards(&[("g".to_string(), 10)], 3);
+        l.record_departure(1);
+        l.record_missed_block(1);
+        l.record_missed_block(1);
+        l.record_rejoin(1);
+        assert_eq!(l.participants[1].departures, 1);
+        assert_eq!(l.participants[1].rejoins, 1);
+        assert_eq!(l.participants[1].missed_blocks, 2);
+        assert_eq!(l.participants[0].departures, 0);
+        // out-of-range shards are ignored, not a panic
+        l.record_departure(9);
     }
 
     #[test]

@@ -93,6 +93,15 @@ pub struct RunConfig {
     /// pipes.  Results are bit-identical for every value.  Composes with
     /// `threads` (each worker fans its shard across that many threads).
     pub workers: usize,
+    /// Minimum shards whose updates a block must gather before it commits
+    /// (TCP transport only).  0 (default) means the full roster: every
+    /// block waits for all `workers` shards and any disconnect is fatal —
+    /// today's bit-identical behavior.  With 0 < quorum < workers, peers
+    /// that drop mid-run are marked departed, the block commits over the
+    /// surviving shards (folded in shard order, so the result does not
+    /// depend on arrival timing), and vacated shards can be re-claimed by
+    /// rejoining participants at the next round boundary.
+    pub quorum: usize,
     /// Model architecture by name.  The native engine resolves it through
     /// the `runtime::zoo` registry (mlp | femnist_cnn | cifar_cnn100 |
     /// resnet20); unknown names are a validation error, never a silent
@@ -177,6 +186,18 @@ impl RunConfig {
         if self.workers > 0 {
             self.validate_sharded("--workers")?;
         }
+        if self.quorum > 0 {
+            anyhow::ensure!(
+                self.workers > 0,
+                "--quorum only applies to sharded transports (serve/--workers)"
+            );
+            anyhow::ensure!(
+                self.quorum <= self.workers,
+                "--quorum {} exceeds the roster of {} participants",
+                self.quorum,
+                self.workers
+            );
+        }
         if self.engine == EngineKind::Native {
             anyhow::ensure!(
                 crate::runtime::zoo::is_known(&self.model),
@@ -240,6 +261,7 @@ impl Default for RunConfig {
             engine: EngineKind::Native,
             threads: 1,
             workers: 0,
+            quorum: 0,
             model: "mlp".to_string(),
             model_dir: PathBuf::from("artifacts/mlp"),
             dataset: DatasetKind::Toy,
@@ -337,6 +359,21 @@ mod tests {
         // and requires the native engine
         let cfg = RunConfig { workers: 2, engine: EngineKind::Pjrt, ..Default::default() };
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn quorum_bounds() {
+        // quorum without a sharded transport is meaningless
+        let cfg = RunConfig { quorum: 1, ..Default::default() };
+        assert!(cfg.validate().is_err());
+        // quorum larger than the roster can never be met
+        let cfg = RunConfig { workers: 2, quorum: 3, ..Default::default() };
+        let err = cfg.validate().unwrap_err();
+        assert!(format!("{err:#}").contains("roster"), "{err:#}");
+        for q in [0, 1, 2] {
+            let cfg = RunConfig { workers: 2, quorum: q, ..Default::default() };
+            cfg.validate().unwrap();
+        }
     }
 
     #[test]

@@ -301,7 +301,22 @@ fn drive(
     let mut stats = DriveStats { train_samples: 0, round_wall_secs: Vec::new() };
     let mut round_t0 = Instant::now();
     while let Some(assignment) = core.begin_block() {
+        // elastic membership: round boundaries are the only admission
+        // points — a rejoiner claims a vacant shard, replays the catch-up
+        // decision snapshot replica-only, and works from this round on
+        if assignment.new_round && transport.has_pending_members() {
+            let catchup = core.catchup_decisions();
+            for shard in transport.admit_ready_peers(&catchup)? {
+                core.note_rejoin(shard);
+            }
+        }
         let result = transport.run_block(&assignment)?;
+        for &shard in &result.departed {
+            core.note_departure(shard);
+        }
+        for &shard in &result.missed {
+            core.note_missed_block(shard);
+        }
         core.record_losses(&result.losses);
         let trained = result.losses.iter().filter(|l| l.is_finite()).count();
         stats.train_samples += (trained * assignment.gap * batch_size) as u64;
@@ -340,9 +355,14 @@ fn drive(
                         )
                     })
                 };
-                core.apply_updates(&assignment, &result.updates, Some(&mut fused))?
+                core.apply_updates_quorum(
+                    &assignment,
+                    &result.updates,
+                    &result.absent,
+                    Some(&mut fused),
+                )?
             } else {
-                core.apply_updates(&assignment, &result.updates, None)?
+                core.apply_updates_quorum(&assignment, &result.updates, &result.absent, None)?
             };
             for d in &decisions {
                 transport.broadcast_decision(d, &assignment.active)?;

@@ -71,11 +71,15 @@ fn print_help() {
                  [--backend auto|native|xla] [--no-chunk] [--seed 1]\n\
                  [--out run.json] [--curve curve.csv] [--verbose]\n\
          serve   --bind HOST:PORT --expect N + every train flag\n\
+                 [--quorum Q (default N: strict full roster)]\n\
                  [--join-timeout 120] [--io-timeout 600] [--heartbeat-secs 2]\n\
                  (TCP coordinator: waits for N `fedlama join` participants,\n\
                   then runs the training loop over the sockets; metrics are\n\
-                  bit-identical to `train --workers N`)\n\
+                  bit-identical to `train --workers N`.  With --quorum Q < N\n\
+                  each block commits once Q shards report; departed shards\n\
+                  go vacant and fresh joins re-claim them at the next round)\n\
          join    --connect HOST:PORT [--retry-secs 30] [--io-timeout 600]\n\
+                 [--depart-after B (leave cleanly after B blocks; chaos test)]\n\
                  (TCP participant: dials a `fedlama serve` coordinator and\n\
                   serves one training session)\n\
          repro   --table table1..table11|baselines|all [--scale smoke|default|full]\n\
@@ -123,6 +127,7 @@ fn cfg_from_args(args: &Args) -> Result<RunConfig> {
         engine,
         threads: args.usize_or("threads", 1),
         workers: args.usize_or("workers", 0),
+        quorum: args.usize_or("quorum", 0),
         model_dir: artifacts_root().join(&model),
         model,
         dataset,
@@ -220,9 +225,11 @@ fn run_serve(args: &Args) -> Result<()> {
 /// Join a TCP coordinator as a participant and serve one training session.
 fn run_join(args: &Args) -> Result<()> {
     let addr = args.get("connect").context("join needs --connect HOST:PORT")?;
+    let depart_after = args.usize_or("depart-after", 0);
     let opts = fedlama::protocol::JoinOpts {
         connect_retry: Duration::from_secs(args.u64_or("retry-secs", 30)),
         io_timeout: Duration::from_secs(args.u64_or("io-timeout", 600)),
+        depart_after_blocks: (depart_after > 0).then_some(depart_after),
     };
     eprintln!("joining coordinator at {addr} ...");
     let shard = fedlama::protocol::tcp::join(addr, &opts)?;

@@ -3,7 +3,7 @@
 
 pub mod tables;
 
-use crate::comm::CommLedger;
+use crate::comm::{CommLedger, ParticipantComm};
 use crate::util::json::Json;
 
 /// One point on the learning curve (recorded at round boundaries).
@@ -32,11 +32,11 @@ pub struct RunMetrics {
     pub total_bytes: u64,
     /// Per-group (name, dim, syncs, cost) — Figures 2/3.
     pub per_group: Vec<(String, usize, u64, u64)>,
-    /// Per-participant (shard, updates, uplink_bytes, downlink_bytes) —
-    /// nominal Eq.9-style bytes folded by round-robin shard.  Identical
+    /// Per-participant counters (updates, nominal Eq.9-style bytes,
+    /// elastic-membership events) folded by round-robin shard.  Identical
     /// across transports with the same shard count (in-proc runs have one
     /// shard, so compare it only between runs sharing a worker count).
-    pub per_participant: Vec<(usize, u64, u64, u64)>,
+    pub per_participant: Vec<ParticipantComm>,
     /// Coordinator overhead: wall time not spent inside PJRT executables.
     pub runtime_secs: f64,
     /// Local-training examples *assigned* (block steps x batch size,
@@ -72,11 +72,7 @@ impl RunMetrics {
             .into_iter()
             .map(|(n, d, s, c)| (n.to_string(), d, s, c))
             .collect();
-        self.per_participant = ledger
-            .participants
-            .iter()
-            .map(|p| (p.shard, p.updates, p.uplink_bytes, p.downlink_bytes))
-            .collect();
+        self.per_participant = ledger.participants.clone();
     }
 
     /// Paper-style "Comm. cost" percentage vs a baseline run.
@@ -136,12 +132,15 @@ impl RunMetrics {
             ),
             (
                 "per_participant",
-                Json::arr(self.per_participant.iter().map(|(s, u, up, down)| {
+                Json::arr(self.per_participant.iter().map(|p| {
                     Json::obj(vec![
-                        ("shard", Json::num(*s as f64)),
-                        ("updates", Json::num(*u as f64)),
-                        ("uplink_bytes", Json::num(*up as f64)),
-                        ("downlink_bytes", Json::num(*down as f64)),
+                        ("shard", Json::num(p.shard as f64)),
+                        ("updates", Json::num(p.updates as f64)),
+                        ("uplink_bytes", Json::num(p.uplink_bytes as f64)),
+                        ("downlink_bytes", Json::num(p.downlink_bytes as f64)),
+                        ("departures", Json::num(p.departures as f64)),
+                        ("rejoins", Json::num(p.rejoins as f64)),
+                        ("missed_blocks", Json::num(p.missed_blocks as f64)),
                     ])
                 })),
             ),
@@ -195,7 +194,15 @@ mod tests {
             val_loss: None,
             comm_cost: 2468,
         });
-        m.per_participant = vec![(0, 8, 4096, 2048), (1, 8, 4096, 2048)];
+        m.per_participant = (0..2)
+            .map(|shard| ParticipantComm {
+                shard,
+                updates: 8,
+                uplink_bytes: 4096,
+                downlink_bytes: 2048,
+                ..Default::default()
+            })
+            .collect();
         let csv = m.curve_csv();
         assert!(csv.contains("24,1,2.300000,0.4100,2.1000,1234"));
         assert!(csv.lines().count() == 3);

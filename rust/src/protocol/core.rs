@@ -109,6 +109,11 @@ impl JoinHandshake {
         self.phase == JoinPhase::Ready
     }
 
+    /// The shard this handshake was opened for.
+    pub fn shard(&self) -> usize {
+        self.shard_id
+    }
+
     /// Feed one incoming message; returns the transport's next action or
     /// a protocol violation.
     pub fn on_message(&mut self, m: &Message) -> Result<JoinAction> {
@@ -151,6 +156,98 @@ impl JoinHandshake {
                 self.shard_id
             ),
         }
+    }
+}
+
+/// Lifecycle of one peer across the whole run — the membership layer on
+/// top of [`JoinHandshake`]:
+///
+/// ```text
+///   Joining --handshake done--> Ready --admitted at a round
+///                                       boundary--> Working
+///   Working --disconnect / timeout / Abort--> Departed
+///   Departed --(a fresh connection claims the vacant shard; a new
+///               PeerSession starts at Joining)
+/// ```
+///
+/// `Ready` peers are parked until the next `new_round` assignment: a shard
+/// can only (re)enter between rounds, because mid-round client state
+/// cannot be reconstructed from the wire protocol.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PeerPhase {
+    /// Connected, walking the join handshake.
+    Joining,
+    /// Handshake complete; waiting for the next round boundary.
+    Ready,
+    /// Admitted to the block loop; receives assignments and decisions.
+    Working,
+    /// Gone (disconnect, I/O timeout, or explicit Abort); its shard is
+    /// vacant and may be claimed by a later connection.
+    Departed,
+}
+
+/// Per-peer session state machine: a [`JoinHandshake`] plus the
+/// Working/Departed membership phases the elastic transport tracks for
+/// the lifetime of the connection.  Pure — no I/O.
+pub struct PeerSession {
+    handshake: JoinHandshake,
+    phase: PeerPhase,
+}
+
+impl PeerSession {
+    /// Open a session for a peer claiming shard `shard_id` (`shard_len`
+    /// clients).
+    pub fn new(shard_id: usize, shard_len: usize) -> PeerSession {
+        let handshake = JoinHandshake::new(shard_id, shard_len);
+        PeerSession { handshake, phase: PeerPhase::Joining }
+    }
+
+    pub fn phase(&self) -> PeerPhase {
+        self.phase
+    }
+
+    pub fn shard(&self) -> usize {
+        self.handshake.shard()
+    }
+
+    pub fn is_working(&self) -> bool {
+        self.phase == PeerPhase::Working
+    }
+
+    /// Feed one incoming message while Joining; delegates to the
+    /// handshake and flips to Ready when it completes.  Heartbeat echoes
+    /// keep flowing through after that.
+    pub fn on_message(&mut self, m: &Message) -> Result<JoinAction> {
+        anyhow::ensure!(
+            self.phase == PeerPhase::Joining || self.phase == PeerPhase::Ready,
+            "shard {} got a handshake message in phase {:?}",
+            self.shard(),
+            self.phase
+        );
+        let action = self.handshake.on_message(m)?;
+        if action == JoinAction::Ready {
+            self.phase = PeerPhase::Ready;
+        }
+        Ok(action)
+    }
+
+    /// Admit a Ready peer into the block loop (round boundaries only —
+    /// the transport enforces *when*, this enforces *from where*).
+    pub fn promote(&mut self) -> Result<()> {
+        anyhow::ensure!(
+            self.phase == PeerPhase::Ready,
+            "shard {} promoted from {:?}, expected Ready",
+            self.shard(),
+            self.phase
+        );
+        self.phase = PeerPhase::Working;
+        Ok(())
+    }
+
+    /// Mark the peer gone.  Idempotent — a socket error and a timeout may
+    /// both report the same departure.
+    pub fn depart(&mut self) {
+        self.phase = PeerPhase::Departed;
     }
 }
 
@@ -289,6 +386,23 @@ impl CoordinatorCore {
         &mut self,
         a: &RoundAssignment,
         updates: &[LayerUpdate],
+        fused: Option<&mut FusedAgg<'_>>,
+    ) -> Result<Vec<SyncDecision>> {
+        self.apply_updates_quorum(a, updates, &[], fused)
+    }
+
+    /// Quorum-mode variant of [`apply_updates`](Self::apply_updates):
+    /// `absent` names active clients whose shard departed mid-block and
+    /// sent nothing.  Survivors are the active list minus `absent`, kept
+    /// in active order, and their weights are renormalized over the
+    /// surviving subset — so the result depends only on *which* set
+    /// survived, never on arrival order.  With `absent` empty this is
+    /// byte-identical to the full-roster path.
+    pub fn apply_updates_quorum(
+        &mut self,
+        a: &RoundAssignment,
+        updates: &[LayerUpdate],
+        absent: &[usize],
         mut fused: Option<&mut FusedAgg<'_>>,
     ) -> Result<Vec<SyncDecision>> {
         if a.due_groups.is_empty() {
@@ -300,29 +414,39 @@ impl CoordinatorCore {
             );
             return Ok(Vec::new());
         }
-        let m = a.active.len();
+        let survivors: Vec<usize> =
+            a.active.iter().copied().filter(|c| !absent.contains(c)).collect();
+        let m = survivors.len();
+        anyhow::ensure!(m > 0, "no surviving clients to aggregate at k={}", a.k);
         // Every update must belong to a due group: each due group consumes
         // exactly m updates below, so a count mismatch means some frame
         // carried a non-due group (or a duplicate) — reject it rather than
         // silently dropping it.
         anyhow::ensure!(
             updates.len() == a.due_groups.len() * m,
-            "expected {} layer updates ({} due groups x {m} active clients) at k={}, got {}",
+            "expected {} layer updates ({} due groups x {m} reporting clients) at k={}, got {}",
             a.due_groups.len() * m,
             a.due_groups.len(),
             a.k,
             updates.len()
         );
+        // Full roster reuses the round's cached weights bit-for-bit; a
+        // partial commit renormalizes over the survivors.
+        let weights = if absent.is_empty() {
+            self.weights.clone()
+        } else {
+            self.partition.active_weights(&survivors)
+        };
         self.ledger.record_round();
         let mut decisions = Vec::with_capacity(a.due_groups.len());
         for &g in &a.due_groups {
             let group = &self.groups[g];
-            // Collect this group's updates in active order — arrival order
-            // (worker interleaving) must not influence the result.
+            // Collect this group's updates in survivor (active) order —
+            // arrival order (worker interleaving) must not influence the
+            // result.
             let mut per_client: Vec<Option<&LayerUpdate>> = vec![None; m];
             for u in updates.iter().filter(|u| u.group == g) {
-                let slot = a
-                    .active
+                let slot = survivors
                     .iter()
                     .position(|&ci| ci == u.client)
                     .with_context(|| format!("update from inactive client {}", u.client))?;
@@ -345,7 +469,7 @@ impl CoordinatorCore {
                 .enumerate()
                 .map(|(i, u)| {
                     u.with_context(|| {
-                        format!("missing update for group {g} from active client {}", a.active[i])
+                        format!("missing update for group {g} from active client {}", survivors[i])
                     })
                 })
                 .collect::<Result<_>>()?;
@@ -362,15 +486,15 @@ impl CoordinatorCore {
             let all_dense =
                 per_client.iter().all(|u| u.tensors.iter().all(|p| p.as_dense().is_some()));
             let disc = match fused.as_mut() {
-                Some(f) if all_dense => self.aggregate_group_fused(g, &per_client, f)?,
-                _ => self.aggregate_group_native(g, &per_client)?,
+                Some(f) if all_dense => self.aggregate_group_fused(g, &per_client, &weights, f)?,
+                _ => self.aggregate_group_native(g, &per_client, &weights)?,
             };
 
             self.schedule.observe(g, disc);
             self.ledger.record_sync_bytes(g, m, uplink_total / m.max(1));
-            // dense group params broadcast to every active client
+            // dense group params broadcast to every surviving client
             let dense_down = self.groups[g].dim * 4;
-            for &c in &a.active {
+            for &c in &survivors {
                 self.ledger.record_downlink(c, dense_down);
             }
             let group = &self.groups[g];
@@ -385,8 +509,14 @@ impl CoordinatorCore {
     }
 
     /// Tensor-by-tensor weighted average in manifest order — the exact
-    /// accumulation order of the historical in-proc path.
-    fn aggregate_group_native(&mut self, g: usize, per_client: &[&LayerUpdate]) -> Result<f64> {
+    /// accumulation order of the historical in-proc path.  `weights` is
+    /// parallel to `per_client` (the survivor subset under quorum).
+    fn aggregate_group_native(
+        &mut self,
+        g: usize,
+        per_client: &[&LayerUpdate],
+        weights: &[f32],
+    ) -> Result<f64> {
         let group = self.groups[g].clone();
         let mut disc = 0.0f64;
         for (ti, &t) in group.params.iter().enumerate() {
@@ -412,11 +542,8 @@ impl CoordinatorCore {
                     row.len()
                 );
             }
-            disc += crate::aggregation::aggregate_native(
-                &rows,
-                &self.weights,
-                &mut self.global[t].data,
-            );
+            disc +=
+                crate::aggregation::aggregate_native(&rows, weights, &mut self.global[t].data);
         }
         Ok(disc)
     }
@@ -427,6 +554,7 @@ impl CoordinatorCore {
         &mut self,
         g: usize,
         per_client: &[&LayerUpdate],
+        weights: &[f32],
         fused: &mut FusedAgg<'_>,
     ) -> Result<f64> {
         let group = self.groups[g].clone();
@@ -441,7 +569,7 @@ impl CoordinatorCore {
                 off += src.len();
             }
         }
-        let (u, disc) = fused(&self.stack_scratch, &self.weights, dim)?;
+        let (u, disc) = fused(&self.stack_scratch, weights, dim)?;
         let mut off = 0;
         for &t in &group.params {
             let len = self.global[t].data.len();
@@ -505,6 +633,43 @@ impl CoordinatorCore {
         if self.round < self.total_rounds {
             self.pending_new_round = true;
         }
+    }
+
+    /// One `SyncDecision` per group carrying the *current* global params
+    /// and live interval — the catch-up bundle a rejoining peer applies
+    /// before its first assignment.  The peer has no active clients yet,
+    /// so applying these is replica-only; its first `new_round`
+    /// assignment then pulls the refreshed replica into every owned
+    /// client, exactly like a worker that was present all along.
+    pub fn catchup_decisions(&self) -> Vec<SyncDecision> {
+        let k = self.block * self.gap;
+        (0..self.groups.len())
+            .map(|g| SyncDecision {
+                k,
+                group: g,
+                new_interval: self.schedule.intervals[g],
+                new_params: self.groups[g]
+                    .params
+                    .iter()
+                    .map(|&t| self.global[t].data.clone())
+                    .collect(),
+            })
+            .collect()
+    }
+
+    /// Ledger note: shard `s` departed mid-run.
+    pub fn note_departure(&mut self, s: usize) {
+        self.ledger.record_departure(s);
+    }
+
+    /// Ledger note: a fresh connection claimed vacant shard `s`.
+    pub fn note_rejoin(&mut self, s: usize) {
+        self.ledger.record_rejoin(s);
+    }
+
+    /// Ledger note: shard `s` missed a committed block (quorum mode).
+    pub fn note_missed_block(&mut self, s: usize) {
+        self.ledger.record_missed_block(s);
     }
 
     /// Snapshot the run's metrics (curve + ledger totals); the driver adds
@@ -721,6 +886,90 @@ mod tests {
             assert_eq!(p.uplink_bytes, 12 + 8);
             assert_eq!(p.downlink_bytes, 12 + 8);
         }
+    }
+
+    #[test]
+    fn peer_session_walks_join_ready_working_departed() {
+        let hello = |id: usize, len: usize| {
+            Message::Hello(Hello {
+                version: crate::protocol::WIRE_VERSION,
+                worker_id: id,
+                shard_len: len,
+            })
+        };
+        let mut s = PeerSession::new(2, 3);
+        assert_eq!(s.phase(), PeerPhase::Joining);
+        assert_eq!(s.shard(), 2);
+        // promotion is only legal from Ready
+        assert!(s.promote().is_err());
+        assert_eq!(s.on_message(&hello(0, 0)).unwrap(), JoinAction::SendConfigure);
+        assert_eq!(s.phase(), PeerPhase::Joining);
+        assert_eq!(s.on_message(&hello(2, 3)).unwrap(), JoinAction::Ready);
+        assert_eq!(s.phase(), PeerPhase::Ready);
+        // Ready peers still echo liveness pings while parked
+        assert_eq!(
+            s.on_message(&Message::Heartbeat(Heartbeat { nonce: 7 })).unwrap(),
+            JoinAction::Pong(7)
+        );
+        s.promote().unwrap();
+        assert!(s.is_working());
+        // Working peers' frames belong to the block loop, not the pump
+        assert!(s.on_message(&hello(2, 3)).is_err());
+        s.depart();
+        assert_eq!(s.phase(), PeerPhase::Departed);
+        s.depart(); // idempotent
+        assert_eq!(s.phase(), PeerPhase::Departed);
+        assert!(s.promote().is_err());
+    }
+
+    #[test]
+    fn quorum_aggregation_renormalizes_over_survivors() {
+        let mut core = tiny_core(3, Policy::fedavg(6), 12);
+        let a = core.begin_block().unwrap();
+        assert_eq!(a.active, vec![0, 1, 2]);
+        // client 1's shard departed: only clients 0 and 2 report
+        let ups = vec![
+            dense_update(a.k, 0, 0, vec![vec![1.0, 2.0, 3.0]]),
+            dense_update(a.k, 0, 2, vec![vec![3.0, 4.0, 5.0]]),
+            dense_update(a.k, 1, 0, vec![vec![10.0, 10.0]]),
+            dense_update(a.k, 1, 2, vec![vec![20.0, 20.0]]),
+        ];
+        let decisions = core.apply_updates_quorum(&a, &ups, &[1], None).unwrap();
+        assert_eq!(decisions.len(), 2);
+        // uniform partition: survivor weights renormalize to 1/2 each
+        assert_eq!(core.global[0].data, vec![2.0, 3.0, 4.0]);
+        assert_eq!(core.global[1].data, vec![15.0, 15.0]);
+        // an update from the absent client is a protocol violation
+        let bad = vec![
+            dense_update(a.k, 0, 0, vec![vec![0.0; 3]]),
+            dense_update(a.k, 0, 1, vec![vec![0.0; 3]]),
+            dense_update(a.k, 1, 0, vec![vec![0.0; 2]]),
+            dense_update(a.k, 1, 1, vec![vec![0.0; 2]]),
+        ];
+        let err = core.apply_updates_quorum(&a, &bad, &[1], None).unwrap_err();
+        assert!(format!("{err:#}").contains("inactive client"), "{err:#}");
+        // every shard gone is fatal, not a silent no-op commit
+        let err = core.apply_updates_quorum(&a, &[], &[0, 1, 2], None).unwrap_err();
+        assert!(format!("{err:#}").contains("no surviving clients"), "{err:#}");
+    }
+
+    #[test]
+    fn catchup_decisions_snapshot_the_live_schedule_and_params() {
+        let mut core = tiny_core(2, Policy::fedavg(6), 12);
+        let a = core.begin_block().unwrap();
+        let ups = vec![
+            dense_update(a.k, 0, 0, vec![vec![1.0, 2.0, 3.0]]),
+            dense_update(a.k, 0, 1, vec![vec![1.0, 2.0, 3.0]]),
+            dense_update(a.k, 1, 0, vec![vec![5.0, 5.0]]),
+            dense_update(a.k, 1, 1, vec![vec![5.0, 5.0]]),
+        ];
+        core.apply_updates(&a, &ups, None).unwrap();
+        let catchup = core.catchup_decisions();
+        assert_eq!(catchup.len(), 2);
+        assert_eq!(catchup[0].k, a.k);
+        assert_eq!(catchup[0].new_params[0], vec![1.0, 2.0, 3.0]);
+        assert_eq!(catchup[1].new_params[0], vec![5.0, 5.0]);
+        assert_eq!(catchup[0].new_interval, core.schedule.intervals[0]);
     }
 
     #[test]

@@ -175,29 +175,30 @@ impl Payload {
         Payload::TopK { n: lossy.len() as u32, nominal: nominal as u32, indices, values }
     }
 
-    fn encode(&self, e: &mut Enc) {
+    fn encode(&self, e: &mut Enc) -> Result<()> {
         match self {
             Payload::Dense(v) => {
                 e.u8(0);
-                e.f32s(v);
+                e.f32s(v)?;
             }
             Payload::QBits { bits, chunk, n, scales, levels, signs } => {
                 e.u8(1);
                 e.u8(*bits);
                 e.u32(*chunk);
                 e.u32(*n);
-                e.f32s(scales);
-                e.u16s(levels);
-                e.bytes(signs);
+                e.f32s(scales)?;
+                e.u16s(levels)?;
+                e.bytes(signs)?;
             }
             Payload::TopK { n, nominal, indices, values } => {
                 e.u8(2);
                 e.u32(*n);
                 e.u32(*nominal);
-                e.u32s(indices);
-                e.f32s(values);
+                e.u32s(indices)?;
+                e.f32s(values)?;
             }
         }
+        Ok(())
     }
 
     fn decode_wire(d: &mut Dec<'_>) -> Result<Payload> {
@@ -342,6 +343,18 @@ pub struct SyncDecision {
     pub new_params: Vec<Vec<f32>>,
 }
 
+/// Participant -> coordinator: the participant cannot continue (failed to
+/// build its model/shard from the wire config, local fault).  Carries the
+/// human-readable reason so `serve` can report *why* a joiner vanished
+/// instead of a bare join-window expiry.  New in kind 9; the frame layout
+/// is unchanged so the version byte stays at 1 — older builds reject the
+/// unknown kind cleanly.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Abort {
+    pub worker_id: usize,
+    pub reason: String,
+}
+
 /// Every protocol message.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Message {
@@ -353,6 +366,7 @@ pub enum Message {
     Done(BlockDone),
     Decision(SyncDecision),
     Shutdown,
+    Abort(Abort),
 }
 
 const KIND_HELLO: u8 = 1;
@@ -363,6 +377,7 @@ const KIND_UPDATE: u8 = 5;
 const KIND_DONE: u8 = 6;
 const KIND_DECISION: u8 = 7;
 const KIND_SHUTDOWN: u8 = 8;
+const KIND_ABORT: u8 = 9;
 
 impl Message {
     pub fn kind(&self) -> u8 {
@@ -375,6 +390,7 @@ impl Message {
             Message::Done(_) => KIND_DONE,
             Message::Decision(_) => KIND_DECISION,
             Message::Shutdown => KIND_SHUTDOWN,
+            Message::Abort(_) => KIND_ABORT,
         }
     }
 
@@ -388,11 +404,13 @@ impl Message {
             Message::Done(_) => "BlockDone",
             Message::Decision(_) => "SyncDecision",
             Message::Shutdown => "Shutdown",
+            Message::Abort(_) => "Abort",
         }
     }
 
-    /// Encode to a complete wire frame.
-    pub fn to_frame(&self) -> Vec<u8> {
+    /// Encode to a complete wire frame.  Errors if any sequence overflows
+    /// its u32 length prefix or the body exceeds the frame cap.
+    pub fn to_frame(&self) -> Result<Vec<u8>> {
         let mut e = Enc::new();
         match self {
             Message::Hello(h) => {
@@ -403,8 +421,8 @@ impl Message {
             Message::Configure(c) => {
                 e.usize(c.worker_id);
                 e.usize(c.n_workers);
-                e.usizes(&c.shard);
-                encode_cfg(&mut e, &c.cfg);
+                e.usizes(&c.shard)?;
+                encode_cfg(&mut e, &c.cfg)?;
             }
             Message::Heartbeat(h) => e.u64(h.nonce),
             Message::Assignment(a) => {
@@ -413,8 +431,8 @@ impl Message {
                 e.usize(a.gap);
                 e.f32(a.lr);
                 e.bool(a.new_round);
-                e.usizes(&a.active);
-                e.usizes(&a.due_groups);
+                e.usizes(&a.active)?;
+                e.usizes(&a.due_groups)?;
             }
             Message::Update(u) => {
                 e.usize(u.k);
@@ -422,7 +440,7 @@ impl Message {
                 e.usize(u.client);
                 e.u32(u.tensors.len() as u32);
                 for p in &u.tensors {
-                    p.encode(&mut e);
+                    p.encode(&mut e)?;
                 }
             }
             Message::Done(d) => {
@@ -441,10 +459,14 @@ impl Message {
                 e.usize(d.new_interval);
                 e.u32(d.new_params.len() as u32);
                 for t in &d.new_params {
-                    e.f32s(t);
+                    e.f32s(t)?;
                 }
             }
             Message::Shutdown => {}
+            Message::Abort(a) => {
+                e.usize(a.worker_id);
+                e.str(&a.reason)?;
+            }
         }
         wire::frame(self.kind(), &e.buf)
     }
@@ -504,6 +526,7 @@ impl Message {
                 Message::Decision(SyncDecision { k, group, new_interval, new_params })
             }
             KIND_SHUTDOWN => Message::Shutdown,
+            KIND_ABORT => Message::Abort(Abort { worker_id: d.usize()?, reason: d.str()? }),
             t => bail!("unknown message kind {t}"),
         };
         d.finish()?;
@@ -520,7 +543,7 @@ impl Message {
     /// Write this message as one frame (no flush).
     pub fn write_to<W: std::io::Write>(&self, w: &mut W) -> Result<()> {
         use anyhow::Context;
-        w.write_all(&self.to_frame()).with_context(|| format!("sending {}", self.kind_name()))
+        w.write_all(&self.to_frame()?).with_context(|| format!("sending {}", self.kind_name()))
     }
 
     /// Read one message from a stream.
@@ -534,9 +557,9 @@ impl Message {
 // RunConfig wire schema (the worker-relevant subset)
 // ---------------------------------------------------------------------------
 
-fn encode_cfg(e: &mut Enc, cfg: &RunConfig) {
-    e.str(&cfg.model);
-    e.str(cfg.dataset.name());
+fn encode_cfg(e: &mut Enc, cfg: &RunConfig) -> Result<()> {
+    e.str(&cfg.model)?;
+    e.str(cfg.dataset.name())?;
     match cfg.algorithm {
         Algorithm::Sgd => {
             e.u8(0);
@@ -593,7 +616,8 @@ fn encode_cfg(e: &mut Enc, cfg: &RunConfig) {
     e.usize(cfg.threads);
     e.bool(cfg.use_chunk);
     e.bool(cfg.hetero_local_steps);
-    e.str(&cfg.compressor);
+    e.str(&cfg.compressor)?;
+    Ok(())
 }
 
 fn decode_cfg(d: &mut Dec<'_>) -> Result<RunConfig> {
@@ -747,8 +771,8 @@ mod tests {
             shard: vec![1, 4, 7],
             cfg: cfg.clone(),
         });
-        let (decoded, used) = Message::decode(&msg.to_frame()).unwrap();
-        assert_eq!(used, msg.to_frame().len());
+        let (decoded, used) = Message::decode(&msg.to_frame().unwrap()).unwrap();
+        assert_eq!(used, msg.to_frame().unwrap().len());
         let Message::Configure(c) = decoded else { panic!("wrong kind") };
         assert_eq!(c.worker_id, 1);
         assert_eq!(c.n_workers, 3);
@@ -770,5 +794,20 @@ mod tests {
         assert_eq!(c.cfg.use_chunk, cfg.use_chunk);
         assert_eq!(c.cfg.hetero_local_steps, cfg.hetero_local_steps);
         assert_eq!(c.cfg.compressor, cfg.compressor);
+    }
+
+    #[test]
+    fn abort_round_trips_with_reason() {
+        let msg = Message::Abort(Abort {
+            worker_id: 2,
+            reason: "worker received invalid config: unknown model \"nope\"".into(),
+        });
+        assert_eq!(msg.kind(), 9, "Abort rides the first free kind; version byte stays 1");
+        let frame = msg.to_frame().unwrap();
+        let (decoded, used) = Message::decode(&frame).unwrap();
+        assert_eq!(used, frame.len());
+        let Message::Abort(a) = decoded else { panic!("wrong kind") };
+        assert_eq!(a.worker_id, 2);
+        assert!(a.reason.contains("unknown model"), "{}", a.reason);
     }
 }

@@ -41,9 +41,11 @@ pub mod transport;
 pub mod wire;
 pub mod worker;
 
-pub use self::core::{BlockOutcome, CoordinatorCore, JoinAction, JoinHandshake, JoinPhase};
+pub use self::core::{
+    BlockOutcome, CoordinatorCore, JoinAction, JoinHandshake, JoinPhase, PeerPhase, PeerSession,
+};
 pub use messages::{
-    BlockDone, Configure, Heartbeat, Hello, LayerUpdate, Message, Payload, RoundAssignment,
+    Abort, BlockDone, Configure, Heartbeat, Hello, LayerUpdate, Message, Payload, RoundAssignment,
     SyncDecision,
 };
 pub use participant::Participant;

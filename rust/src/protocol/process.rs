@@ -161,13 +161,13 @@ impl Transport for ProcessTransport {
                 }
             }
         }
-        Ok(BlockResult { losses: merge_losses(&a.active, &pairs)?, updates })
+        Ok(BlockResult::full(merge_losses(&a.active, &pairs)?, updates))
     }
 
     fn broadcast_decision(&mut self, d: &SyncDecision, _active: &[usize]) -> Result<()> {
         // serialize once, fan the bytes out — decisions carry whole dense
         // groups, so per-worker re-encoding would be the expensive part
-        let frame = Message::Decision(d.clone()).to_frame();
+        let frame = Message::Decision(d.clone()).to_frame()?;
         for w in &mut self.workers {
             w.tx
                 .write_all(&frame)

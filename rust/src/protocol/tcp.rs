@@ -1,4 +1,5 @@
-//! TCP transport: multi-machine federation over real sockets.
+//! TCP transport: multi-machine federation over real sockets, with
+//! elastic membership.
 //!
 //! The same length-prefixed CRC-32 frames the stdio transport writes to
 //! pipes, served on `std::net::TcpListener`/`TcpStream` — the first
@@ -16,7 +17,7 @@
 //!
 //! Join handshake (participant speaks first — the stdio flow reversed,
 //! because over TCP the participant initiates the connection; the pure
-//! state machine lives in [`super::core::JoinHandshake`]):
+//! state machine lives in [`super::core::PeerSession`]):
 //!
 //! ```text
 //!   participant                               coordinator
@@ -35,7 +36,30 @@
 //! socket read that ends mid-frame is [`super::wire::FrameStatus::Truncated`],
 //! so the bytes are kept and the read continues — never treated as a
 //! protocol error.
+//!
+//! **Elastic membership.**  The roster is a fixed set of N *shards*, but
+//! the connections behind them may come and go:
+//!
+//!   - The listener stays open for the whole run.  Connections beyond the
+//!     current roster are parked (they block on their `Configure`) until a
+//!     shard is vacant.
+//!   - A peer that disconnects, times out, or sends [`Message::Abort`]
+//!     mid-run is marked [`super::core::PeerPhase::Departed`] and its
+//!     shard returns to the vacant pool; with `--quorum Q < N` the run
+//!     continues as long as Q shards still report each block.
+//!   - At the next round boundary the driver calls
+//!     [`Transport::admit_ready_peers`]: parked connections claim vacant
+//!     shards, walk the ordinary join handshake, receive a catch-up
+//!     decision snapshot (replica-only — no active clients yet), and are
+//!     promoted into the block loop.
+//!
+//! Admission happens only between rounds because mid-round client state
+//! cannot be reconstructed from the wire protocol; the core renormalizes
+//! aggregation weights over surviving clients, so commits stay
+//! deterministic regardless of *when* within the join window each peer
+//! connected.
 
+use std::collections::VecDeque;
 use std::io::{ErrorKind, Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::time::{Duration, Instant};
@@ -44,19 +68,22 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::RunConfig;
 
-use super::core::{JoinAction, JoinHandshake};
-use super::messages::{Configure, Heartbeat, Hello, Message, RoundAssignment, SyncDecision};
-use super::transport::{merge_losses, shard_clients, BlockResult, Transport};
+use super::core::{JoinAction, PeerPhase, PeerSession};
+use super::messages::{
+    Abort, BlockDone, Configure, Heartbeat, Hello, Message, RoundAssignment, SyncDecision,
+};
+use super::transport::{merge_losses_absent, shard_clients, BlockResult, Transport};
 use super::wire::{StreamDecoder, WIRE_VERSION};
 
 /// Timeout knobs for the coordinator side.
 #[derive(Debug, Clone)]
 pub struct TcpOpts {
     /// Window for all `--expect` participants to complete the join
-    /// handshake.
+    /// handshake (also the per-boundary window for rejoin admission).
     pub join_timeout: Duration,
-    /// Per-read timeout once training runs (covers a full local-training
-    /// block on the slowest participant, so it is generous).
+    /// Per-block timeout once training runs (covers a full local-training
+    /// block on the slowest participant, so it is generous).  Zero means
+    /// unlimited.
     pub io_timeout: Duration,
     /// Liveness-ping cadence toward ready peers while slower ones are
     /// still joining.
@@ -82,11 +109,19 @@ pub struct JoinOpts {
     /// Read timeout while waiting for the next coordinator frame (covers
     /// the coordinator waiting on the slowest *other* participant).
     pub io_timeout: Duration,
+    /// Leave cleanly after serving this many assignments instead of
+    /// waiting for `Shutdown` — the chaos-test lever for a participant
+    /// that departs at a deterministic block boundary.
+    pub depart_after_blocks: Option<usize>,
 }
 
 impl Default for JoinOpts {
     fn default() -> JoinOpts {
-        JoinOpts { connect_retry: Duration::from_secs(30), io_timeout: Duration::from_secs(600) }
+        JoinOpts {
+            connect_retry: Duration::from_secs(30),
+            io_timeout: Duration::from_secs(600),
+            depart_after_blocks: None,
+        }
     }
 }
 
@@ -99,23 +134,35 @@ struct Peer {
     stream: TcpStream,
     addr: SocketAddr,
     decoder: StreamDecoder,
-    handshake: JoinHandshake,
+    session: PeerSession,
     /// Outstanding liveness-ping nonce, if any.
     pending_ping: Option<u64>,
     pings_sent: u64,
-    compute_secs: f64,
 }
 
 impl Peer {
+    fn new(shard: usize, shard_clients: Vec<usize>, stream: TcpStream, addr: SocketAddr) -> Peer {
+        let shard_len = shard_clients.len();
+        Peer {
+            shard,
+            shard_clients,
+            stream,
+            addr,
+            decoder: StreamDecoder::new(),
+            session: PeerSession::new(shard, shard_len),
+            pending_ping: None,
+            pings_sent: 0,
+        }
+    }
+
     fn describe(&self) -> String {
         format!("participant shard {} ({})", self.shard, self.addr)
     }
 
-    /// Blocking receive of one message (the socket must be in blocking
-    /// mode with a read timeout).  A read that ends mid-frame keeps the
-    /// bytes buffered and reads on — only corruption, timeout, or EOF
-    /// fail.
-    fn recv(&mut self) -> Result<Message> {
+    /// Receive one message on the (non-blocking) socket, polling until
+    /// `deadline`.  A read that ends mid-frame keeps the bytes buffered
+    /// and reads on — only corruption, timeout, or EOF fail.
+    fn recv_deadline(&mut self, deadline: Instant) -> Result<Message> {
         loop {
             if let Some(m) =
                 self.decoder.poll_message().with_context(|| format!("from {}", self.describe()))?
@@ -127,7 +174,12 @@ impl Peer {
                 Ok(0) => bail!("{} closed the connection mid-session", self.describe()),
                 Ok(n) => self.decoder.extend(&buf[..n]),
                 Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
-                    bail!("timed out waiting for a frame from {}", self.describe())
+                    anyhow::ensure!(
+                        Instant::now() < deadline,
+                        "timed out waiting for a frame from {}",
+                        self.describe()
+                    );
+                    std::thread::sleep(Duration::from_millis(1));
                 }
                 Err(e) if e.kind() == ErrorKind::Interrupted => {}
                 Err(e) => {
@@ -137,8 +189,25 @@ impl Peer {
         }
     }
 
-    fn send(&mut self, msg: &Message) -> Result<()> {
-        msg.write_to(&mut self.stream).with_context(|| format!("to {}", self.describe()))
+    /// Best-effort read until the peer closes its end or `window` passes
+    /// (shutdown drain — never fails).
+    fn drain_until_close(&mut self, window: Duration) {
+        let deadline = Instant::now() + window;
+        let mut buf = [0u8; 256];
+        loop {
+            match self.stream.read(&mut buf) {
+                Ok(0) => return,
+                Ok(_) => {}
+                Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                    if Instant::now() >= deadline {
+                        return;
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => return,
+            }
+        }
     }
 }
 
@@ -159,11 +228,16 @@ impl TcpServer {
         self.listener.local_addr().context("reading bound address")
     }
 
-    /// Accept and handshake exactly `n` participants, then return the
-    /// ready transport.  Shard ids go in join order; slow joins are
-    /// tolerated up to `opts.join_timeout`, with liveness pings keeping
-    /// already-ready peers verified while stragglers connect and build
-    /// their backends.
+    /// Accept and handshake `n` participants, then return the ready
+    /// transport.  Shard ids go in join order; slow joins are tolerated up
+    /// to `opts.join_timeout`, with liveness pings keeping already-ready
+    /// peers verified while stragglers connect and build their backends.
+    ///
+    /// A peer that disconnects mid-handshake is evicted and its shard
+    /// returns to the vacant pool — later connections (including extras
+    /// parked beyond the roster) can claim it within the window.  A peer
+    /// that sends [`Message::Abort`] (its backend build failed) fails the
+    /// serve with that reason.
     pub fn accept_participants(
         &self,
         cfg: &RunConfig,
@@ -180,110 +254,160 @@ impl TcpServer {
         );
         self.listener.set_nonblocking(true).context("non-blocking listener")?;
         let deadline = Instant::now() + opts.join_timeout;
-        let mut peers: Vec<Peer> = Vec::with_capacity(n);
+        let mut slots: Vec<Option<Peer>> = (0..n).map(|_| None).collect();
+        let mut waiting: VecDeque<(TcpStream, SocketAddr)> = VecDeque::new();
         let mut last_beat = Instant::now();
         loop {
-            let ready = peers.iter().filter(|p| p.handshake.is_ready()).count();
-            let unconfirmed = peers.iter().any(|p| p.pending_ping.is_some());
+            // seat parked connections in vacant shards (join order, and —
+            // after an eviction — reclaim order)
+            attach_waiting(&mut slots, &mut waiting, cfg, n);
+            let ready = slots
+                .iter()
+                .flatten()
+                .filter(|p| p.session.phase() == PeerPhase::Ready)
+                .count();
+            let unconfirmed = slots.iter().flatten().any(|p| p.pending_ping.is_some());
             if ready == n && !unconfirmed {
                 break;
             }
             if Instant::now() >= deadline {
-                let pinging = peers.iter().filter(|p| p.pending_ping.is_some()).count();
+                let connected = slots.iter().flatten().count() + waiting.len();
+                let pinging =
+                    slots.iter().flatten().filter(|p| p.pending_ping.is_some()).count();
                 bail!(
                     "join window ({:?}) expired with {ready}/{n} participants ready \
-                     ({} connected, {pinging} with an unanswered liveness ping)",
+                     ({connected} connected, {pinging} with an unanswered liveness ping)",
                     opts.join_timeout,
-                    peers.len()
                 );
             }
-            // accept new connections (shard id = join order)
+            // accept new connections into the parking queue
             match self.listener.accept() {
                 Ok((stream, addr)) => {
-                    if peers.len() == n {
-                        // fleet is full: refuse politely by closing
-                        let _ = stream.shutdown(Shutdown::Both);
-                    } else {
-                        let shard = peers.len();
-                        let owned = shard_clients(cfg.n_clients, n, shard);
-                        stream.set_nodelay(true).context("setting TCP_NODELAY")?;
-                        stream.set_nonblocking(true).context("non-blocking peer socket")?;
-                        peers.push(Peer {
-                            shard,
-                            handshake: JoinHandshake::new(shard, owned.len()),
-                            shard_clients: owned,
-                            stream,
-                            addr,
-                            decoder: StreamDecoder::new(),
-                            pending_ping: None,
-                            pings_sent: 0,
-                            compute_secs: 0.0,
-                        });
-                    }
+                    stream.set_nodelay(true).context("setting TCP_NODELAY")?;
+                    stream.set_nonblocking(true).context("non-blocking peer socket")?;
+                    waiting.push_back((stream, addr));
                 }
                 Err(e) if e.kind() == ErrorKind::WouldBlock => {}
                 Err(e) => return Err(e).context("accepting participant connection"),
             }
-            // pump every peer's receive buffer and drive its handshake
-            for peer in &mut peers {
-                pump_join_peer(peer, cfg, n, deadline)?;
+            // pump every seated peer's receive buffer and drive its join
+            for s in 0..n {
+                if slots[s].is_none() {
+                    continue;
+                }
+                match pump_join_peer(slots[s].as_mut().unwrap(), cfg, n, deadline) {
+                    Ok(JoinPump::Alive) => {}
+                    Ok(JoinPump::Disconnected) => {
+                        // the satellite-2 fix: evict, vacate the shard,
+                        // keep accepting until the window closes
+                        let peer = slots[s].take().unwrap();
+                        let _ = peer.stream.shutdown(Shutdown::Both);
+                        eprintln!(
+                            "[serve] {} disconnected during the join handshake; \
+                             shard {s} returns to the vacant pool",
+                            peer.describe()
+                        );
+                    }
+                    Ok(JoinPump::Aborted(reason)) => {
+                        let peer = slots[s].take().unwrap();
+                        bail!("{} aborted during join: {reason}", peer.describe());
+                    }
+                    Err(e) => return Err(e),
+                }
             }
             // ping ready peers while stragglers join: verifies both socket
             // directions stay live through an arbitrarily long join window
             if last_beat.elapsed() >= opts.heartbeat_every {
                 last_beat = Instant::now();
-                for peer in &mut peers {
-                    if peer.handshake.is_ready() && peer.pending_ping.is_none() {
+                for peer in slots.iter_mut().flatten() {
+                    if peer.session.phase() == PeerPhase::Ready && peer.pending_ping.is_none() {
                         let nonce = 0xFED_1A0A ^ ((peer.shard as u64) << 32) ^ peer.pings_sent;
                         peer.pings_sent += 1;
                         peer.pending_ping = Some(nonce);
-                        let frame = Message::Heartbeat(Heartbeat { nonce }).to_frame();
+                        let frame = Message::Heartbeat(Heartbeat { nonce }).to_frame()?;
                         write_all_nb(peer, &frame, deadline, "liveness ping")?;
                     }
                 }
             }
             std::thread::sleep(Duration::from_millis(5));
         }
-        // switch to blocking I/O with the training-time budget (zero =
-        // unlimited, matching `join`; the write timeout keeps a wedged
-        // participant that stops draining its socket from hanging the
-        // coordinator inside a decision broadcast), then one final
-        // synchronous ping/echo per peer (both directions verified
-        // immediately before the first assignment)
-        let io_timeout = if opts.io_timeout.is_zero() { None } else { Some(opts.io_timeout) };
-        for peer in &mut peers {
-            peer.stream.set_nonblocking(false).context("blocking peer socket")?;
-            peer.stream.set_read_timeout(io_timeout).context("setting peer read timeout")?;
-            peer.stream.set_write_timeout(io_timeout).context("setting peer write timeout")?;
+        // one final synchronous ping/echo per peer (both directions
+        // verified immediately before the first assignment), then promote
+        // everyone into the block loop
+        let sync_deadline = deadline_after(opts.io_timeout);
+        for peer in slots.iter_mut().flatten() {
             let nonce = 0xFED_7EA1 ^ peer.shard as u64;
-            peer.send(&Message::Heartbeat(Heartbeat { nonce }))?;
-            match peer.recv()? {
+            let frame = Message::Heartbeat(Heartbeat { nonce }).to_frame()?;
+            write_all_nb(peer, &frame, sync_deadline, "final sync ping")?;
+            match peer.recv_deadline(sync_deadline)? {
                 Message::Heartbeat(h) if h.nonce == nonce => {}
                 other => bail!("{}: bad heartbeat echo ({})", peer.describe(), other.kind_name()),
             }
+            peer.session.promote()?;
         }
-        Ok(TcpTransport { peers })
+        Ok(TcpTransport {
+            listener: self
+                .listener
+                .try_clone()
+                .context("retaining the listener for mid-run joins")?,
+            cfg: cfg.clone(),
+            n,
+            opts: opts.clone(),
+            slots,
+            waiting,
+            reasons: vec![None; n],
+            fresh_departures: Vec::new(),
+            compute_secs: vec![0.0; n],
+        })
     }
 }
 
-/// Drain one peer's socket during the join phase (non-blocking) and feed
-/// complete frames to its handshake state machine.
-fn pump_join_peer(peer: &mut Peer, cfg: &RunConfig, n: usize, deadline: Instant) -> Result<()> {
-    loop {
-        let mut buf = [0u8; 64 * 1024];
-        match peer.stream.read(&mut buf) {
-            Ok(0) => bail!("{} disconnected during the join handshake", peer.describe()),
-            Ok(nread) => peer.decoder.extend(&buf[..nread]),
-            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
-            Err(e) if e.kind() == ErrorKind::Interrupted => {}
-            Err(e) => return Err(e).with_context(|| format!("reading from {}", peer.describe())),
+/// Seat parked connections in vacant shards.
+fn attach_waiting(
+    slots: &mut [Option<Peer>],
+    waiting: &mut VecDeque<(TcpStream, SocketAddr)>,
+    cfg: &RunConfig,
+    n: usize,
+) {
+    for s in 0..n {
+        if slots[s].is_some() {
+            continue;
         }
+        let Some((stream, addr)) = waiting.pop_front() else { break };
+        slots[s] = Some(Peer::new(s, shard_clients(cfg.n_clients, n, s), stream, addr));
+    }
+}
+
+/// What one non-blocking pump of a joining peer's socket produced.
+enum JoinPump {
+    /// Socket drained (or would block); handshake may have advanced.
+    Alive,
+    /// The peer closed its end (EOF).
+    Disconnected,
+    /// The peer sent `Abort{reason}` — its participant build failed.
+    Aborted(String),
+}
+
+/// Drain one joining peer's socket (non-blocking) and feed complete
+/// frames to its session state machine.  Protocol violations and codec
+/// corruption are hard errors; disconnects and aborts are returned for
+/// the caller to translate (evict vs fail).
+fn pump_join_peer(
+    peer: &mut Peer,
+    cfg: &RunConfig,
+    n: usize,
+    deadline: Instant,
+) -> Result<JoinPump> {
+    loop {
         // a partial frame stays buffered (Truncated, not an error): the
         // next pump continues where this read left off
         while let Some(msg) =
             peer.decoder.poll_message().with_context(|| format!("from {}", peer.describe()))?
         {
-            match peer.handshake.on_message(&msg)? {
+            if let Message::Abort(a) = &msg {
+                return Ok(JoinPump::Aborted(a.reason.clone()));
+            }
+            match peer.session.on_message(&msg)? {
                 JoinAction::SendConfigure => {
                     let conf = Message::Configure(Configure {
                         worker_id: peer.shard,
@@ -291,7 +415,7 @@ fn pump_join_peer(peer: &mut Peer, cfg: &RunConfig, n: usize, deadline: Instant)
                         shard: peer.shard_clients.clone(),
                         cfg: cfg.clone(),
                     });
-                    let frame = conf.to_frame();
+                    let frame = conf.to_frame()?;
                     write_all_nb(peer, &frame, deadline, "Configure")?;
                 }
                 JoinAction::Ready => {}
@@ -305,8 +429,58 @@ fn pump_join_peer(peer: &mut Peer, cfg: &RunConfig, n: usize, deadline: Instant)
                 }
             }
         }
+        let mut buf = [0u8; 64 * 1024];
+        match peer.stream.read(&mut buf) {
+            Ok(0) => return Ok(JoinPump::Disconnected),
+            Ok(nread) => peer.decoder.extend(&buf[..nread]),
+            Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(JoinPump::Alive),
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e).with_context(|| format!("reading from {}", peer.describe())),
+        }
     }
-    Ok(())
+}
+
+/// Drain one working peer's socket (non-blocking) during a block; returns
+/// the peer's `BlockDone` once it arrives.  Stray heartbeat echoes are
+/// ignored; EOF, an `Abort`, or any other frame is an error the caller
+/// turns into a departure.
+fn pump_block_peer(
+    peer: &mut Peer,
+    a: &RoundAssignment,
+    updates: &mut Vec<super::messages::LayerUpdate>,
+) -> Result<Option<BlockDone>> {
+    loop {
+        while let Some(msg) =
+            peer.decoder.poll_message().with_context(|| format!("from {}", peer.describe()))?
+        {
+            match msg {
+                Message::Update(u) => updates.push(u),
+                Message::Done(d) => {
+                    anyhow::ensure!(
+                        d.k == a.k,
+                        "{} finished block k={}, expected k={}",
+                        peer.describe(),
+                        d.k,
+                        a.k
+                    );
+                    return Ok(Some(d));
+                }
+                Message::Heartbeat(_) => {}
+                Message::Abort(ab) => bail!("{} aborted: {}", peer.describe(), ab.reason),
+                other => {
+                    bail!("{}: unexpected {} mid-block", peer.describe(), other.kind_name())
+                }
+            }
+        }
+        let mut buf = [0u8; 64 * 1024];
+        match peer.stream.read(&mut buf) {
+            Ok(0) => bail!("{} closed the connection mid-session", peer.describe()),
+            Ok(nread) => peer.decoder.extend(&buf[..nread]),
+            Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(None),
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e).with_context(|| format!("reading from {}", peer.describe())),
+        }
+    }
 }
 
 /// `write_all` on a non-blocking socket: retry `WouldBlock` with a small
@@ -333,12 +507,37 @@ fn write_all_nb(peer: &mut Peer, bytes: &[u8], deadline: Instant, what: &str) ->
     Ok(())
 }
 
-/// Coordinator-side TCP transport over `n` handshaken participants.
-/// Message flow per block is identical to `ProcessTransport`; TCP is a
-/// FIFO byte stream exactly like a pipe, so block k's decisions always
-/// precede block k+1's assignment without extra synchronization.
+/// Absolute deadline `window` from now; zero means effectively unlimited.
+fn deadline_after(window: Duration) -> Instant {
+    if window.is_zero() {
+        Instant::now() + Duration::from_secs(100 * 365 * 24 * 3600)
+    } else {
+        Instant::now() + window
+    }
+}
+
+/// Coordinator-side TCP transport over a fixed roster of `n` shards with
+/// elastic connections behind them.  Message flow per block is identical
+/// to `ProcessTransport`; TCP is a FIFO byte stream exactly like a pipe,
+/// so block k's decisions always precede block k+1's assignment without
+/// extra synchronization.
 pub struct TcpTransport {
-    peers: Vec<Peer>,
+    /// The serve listener, kept open for the whole run so departed shards
+    /// can be re-claimed by fresh connections.
+    listener: TcpListener,
+    cfg: RunConfig,
+    n: usize,
+    opts: TcpOpts,
+    /// shard id -> its live connection (None = vacant).
+    slots: Vec<Option<Peer>>,
+    /// Accepted connections not yet seated in a shard.
+    waiting: VecDeque<(TcpStream, SocketAddr)>,
+    /// Last departure reason per shard (for quorum-failure reports).
+    reasons: Vec<Option<String>>,
+    /// Shards that departed since the last committed block.
+    fresh_departures: Vec<usize>,
+    /// Last reported compute seconds per shard (survives departures).
+    compute_secs: Vec<f64>,
 }
 
 impl TcpTransport {
@@ -348,79 +547,290 @@ impl TcpTransport {
         TcpServer::bind(addr)?.accept_participants(cfg, n, opts)
     }
 
-    /// The peers' shard -> remote address map (diagnostics).
+    /// The live peers' shard -> remote address map (diagnostics).
     pub fn peer_addrs(&self) -> Vec<(usize, SocketAddr)> {
-        self.peers.iter().map(|p| (p.shard, p.addr)).collect()
+        self.slots.iter().flatten().map(|p| (p.shard, p.addr)).collect()
+    }
+
+    /// Drain the listener's accept queue into the parking lot.
+    fn accept_waiting(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, addr)) => {
+                    if stream.set_nodelay(true).is_err() || stream.set_nonblocking(true).is_err() {
+                        let _ = stream.shutdown(Shutdown::Both);
+                        continue;
+                    }
+                    self.waiting.push_back((stream, addr));
+                }
+                Err(_) => break,
+            }
+        }
+    }
+
+    /// Mark shard `s` departed: close its connection, vacate the slot,
+    /// remember why (quorum-failure reports name it), and queue the
+    /// departure for the next committed block's result.
+    fn depart_slot(&mut self, s: usize, reason: String) {
+        if let Some(mut peer) = self.slots[s].take() {
+            peer.session.depart();
+            let _ = peer.stream.shutdown(Shutdown::Both);
+            eprintln!("[serve] {reason}; shard {s} is now vacant");
+            self.reasons[s] = Some(reason);
+            self.fresh_departures.push(s);
+        }
+    }
+
+    /// Drop a rejoin candidate that failed its handshake (quiet — it was
+    /// never part of the roster, so nothing departed).
+    fn evict_candidate(&mut self, s: usize, why: &str) {
+        if let Some(peer) = self.slots[s].take() {
+            eprintln!(
+                "[serve] rejoin candidate for shard {s} ({}) {why}; the shard stays vacant",
+                peer.addr
+            );
+            let _ = peer.stream.shutdown(Shutdown::Both);
+        }
     }
 }
 
 impl Transport for TcpTransport {
     fn workers(&self) -> usize {
-        self.peers.len()
+        self.n
     }
 
     fn run_block(&mut self, a: &RoundAssignment) -> Result<BlockResult> {
-        // serialize once, fan the same bytes to every participant
-        let frame = Message::Assignment(a.clone()).to_frame();
-        for peer in &mut self.peers {
-            peer.stream
-                .write_all(&frame)
-                .with_context(|| format!("sending assignment to {}", peer.describe()))?;
-        }
-        let mut pairs = Vec::with_capacity(a.active.len());
-        let mut updates = Vec::new();
-        for peer in &mut self.peers {
-            loop {
-                match peer.recv().with_context(|| {
-                    format!("mid-block (k={}) result from participant shard {}", a.k, peer.shard)
-                })? {
-                    Message::Update(u) => updates.push(u),
-                    Message::Done(d) => {
-                        anyhow::ensure!(
-                            d.k == a.k,
-                            "{} finished block k={}, expected k={}",
-                            peer.describe(),
-                            d.k,
-                            a.k
-                        );
-                        pairs.extend(d.losses);
-                        peer.compute_secs = d.compute_secs;
-                        break;
-                    }
-                    other => {
-                        bail!("{}: unexpected {} mid-block", peer.describe(), other.kind_name());
-                    }
+        // serialize once, fan the same bytes to every live participant
+        let frame = Message::Assignment(a.clone()).to_frame()?;
+        let deadline = deadline_after(self.opts.io_timeout);
+        for s in 0..self.n {
+            if self.slots[s].is_some() {
+                if let Err(e) =
+                    write_all_nb(self.slots[s].as_mut().unwrap(), &frame, deadline, "assignment")
+                {
+                    self.depart_slot(s, format!("{e:#}"));
                 }
             }
         }
-        Ok(BlockResult { losses: merge_losses(&a.active, &pairs)?, updates })
+        // gather: poll every live shard until it reports Done, departs,
+        // or the block deadline expires
+        let mut done = vec![false; self.n];
+        let mut per_shard_updates: Vec<Vec<super::messages::LayerUpdate>> =
+            (0..self.n).map(|_| Vec::new()).collect();
+        let mut pairs: Vec<(usize, f64)> = Vec::with_capacity(a.active.len());
+        loop {
+            for s in 0..self.n {
+                if done[s] || self.slots[s].is_none() {
+                    continue;
+                }
+                match pump_block_peer(
+                    self.slots[s].as_mut().unwrap(),
+                    a,
+                    &mut per_shard_updates[s],
+                ) {
+                    Ok(Some(d)) => {
+                        done[s] = true;
+                        pairs.extend(d.losses);
+                        self.compute_secs[s] = d.compute_secs;
+                    }
+                    Ok(None) => {}
+                    Err(e) => self.depart_slot(s, format!("{e:#}")),
+                }
+            }
+            if (0..self.n).all(|s| done[s] || self.slots[s].is_none()) {
+                break;
+            }
+            if Instant::now() >= deadline {
+                for s in 0..self.n {
+                    if !done[s] {
+                        if let Some(p) = &self.slots[s] {
+                            let reason = format!(
+                                "timed out waiting for block k={} from {}",
+                                a.k,
+                                p.describe()
+                            );
+                            self.depart_slot(s, reason);
+                        }
+                    }
+                }
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // quorum gate: commit iff enough shards reported.  quorum == 0
+        // means the full roster — the strict pre-elastic behavior.
+        let q = if self.cfg.quorum == 0 { self.n } else { self.cfg.quorum };
+        let reporters = done.iter().filter(|&&d| d).count();
+        if reporters < q {
+            let detail: Vec<String> = (0..self.n)
+                .filter(|&s| !done[s])
+                .map(|s| {
+                    self.reasons[s]
+                        .clone()
+                        .unwrap_or_else(|| format!("shard {s} has no connection"))
+                })
+                .collect();
+            bail!(
+                "block k={} has {reporters}/{} shards reporting, below quorum {q}: {}",
+                a.k,
+                self.n,
+                detail.join("; ")
+            );
+        }
+        // fold updates in shard order (not arrival order) so the commit
+        // is byte-identical however the survivors' replies interleaved;
+        // a shard that died mid-block may have sent a partial update set —
+        // only shards that reached Done contribute
+        let updates: Vec<super::messages::LayerUpdate> = per_shard_updates
+            .into_iter()
+            .enumerate()
+            .filter(|(s, _)| done[*s])
+            .flat_map(|(_, u)| u)
+            .collect();
+        let absent: Vec<usize> =
+            a.active.iter().copied().filter(|&c| !done[c % self.n]).collect();
+        let missed: Vec<usize> = (0..self.n).filter(|&s| !done[s]).collect();
+        let departed = std::mem::take(&mut self.fresh_departures);
+        Ok(BlockResult {
+            losses: merge_losses_absent(&a.active, &pairs, &absent)?,
+            updates,
+            absent,
+            missed,
+            departed,
+        })
     }
 
     fn broadcast_decision(&mut self, d: &SyncDecision, _active: &[usize]) -> Result<()> {
-        let frame = Message::Decision(d.clone()).to_frame();
-        for peer in &mut self.peers {
-            peer.stream
-                .write_all(&frame)
-                .with_context(|| format!("sending SyncDecision to {}", peer.describe()))?;
+        let frame = Message::Decision(d.clone()).to_frame()?;
+        let deadline = deadline_after(self.opts.io_timeout);
+        for s in 0..self.n {
+            if self.slots[s].is_some() {
+                if let Err(e) =
+                    write_all_nb(self.slots[s].as_mut().unwrap(), &frame, deadline, "SyncDecision")
+                {
+                    // a peer lost here is a departure, not a run error:
+                    // the next block's quorum gate decides whether the
+                    // run can continue without it
+                    self.depart_slot(s, format!("{e:#}"));
+                }
+            }
         }
         Ok(())
     }
 
     fn remote_compute_secs(&self) -> f64 {
-        self.peers.iter().map(|p| p.compute_secs).sum()
+        self.compute_secs.iter().sum()
+    }
+
+    fn has_pending_members(&mut self) -> bool {
+        self.accept_waiting();
+        !self.waiting.is_empty() && self.slots.iter().any(|s| s.is_none())
+    }
+
+    fn admit_ready_peers(&mut self, catchup: &[SyncDecision]) -> Result<Vec<usize>> {
+        self.accept_waiting();
+        // seat parked connections in vacant shards
+        let mut attached: Vec<usize> = Vec::new();
+        for s in 0..self.n {
+            if self.slots[s].is_none() {
+                let Some((stream, addr)) = self.waiting.pop_front() else { break };
+                let owned = shard_clients(self.cfg.n_clients, self.n, s);
+                self.slots[s] = Some(Peer::new(s, owned, stream, addr));
+                attached.push(s);
+            }
+        }
+        if attached.is_empty() {
+            return Ok(Vec::new());
+        }
+        // walk the candidates through the ordinary join handshake
+        let deadline = Instant::now() + self.opts.join_timeout;
+        loop {
+            for &s in &attached {
+                if self.slots[s].as_ref().map(|p| p.session.phase()) != Some(PeerPhase::Joining) {
+                    continue;
+                }
+                let outcome = {
+                    let TcpTransport { slots, cfg, n, .. } = &mut *self;
+                    pump_join_peer(slots[s].as_mut().unwrap(), cfg, *n, deadline)
+                };
+                match outcome {
+                    Ok(JoinPump::Alive) => {}
+                    Ok(JoinPump::Disconnected) => {
+                        self.evict_candidate(s, "disconnected during the join handshake")
+                    }
+                    Ok(JoinPump::Aborted(r)) => {
+                        self.evict_candidate(s, &format!("aborted during join: {r}"))
+                    }
+                    Err(e) => self.evict_candidate(s, &format!("{e:#}")),
+                }
+            }
+            let joining = attached.iter().any(|&s| {
+                self.slots[s].as_ref().map(|p| p.session.phase()) == Some(PeerPhase::Joining)
+            });
+            if !joining {
+                break;
+            }
+            if Instant::now() >= deadline {
+                for &s in &attached {
+                    if self.slots[s].as_ref().map(|p| p.session.phase())
+                        == Some(PeerPhase::Joining)
+                    {
+                        self.evict_candidate(
+                            s,
+                            "did not finish the join handshake before the admission window closed",
+                        );
+                    }
+                }
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // ship each Ready candidate the catch-up decision snapshot
+        // (applied replica-only — it has no active clients yet), then
+        // promote it into the block loop
+        let mut frames: Vec<Vec<u8>> = Vec::with_capacity(catchup.len());
+        for d in catchup {
+            frames.push(Message::Decision(d.clone()).to_frame()?);
+        }
+        let io_deadline = deadline_after(self.opts.io_timeout);
+        let mut admitted = Vec::new();
+        for &s in &attached {
+            if self.slots[s].as_ref().map(|p| p.session.phase()) != Some(PeerPhase::Ready) {
+                continue;
+            }
+            let res: Result<()> = {
+                let peer = self.slots[s].as_mut().unwrap();
+                frames
+                    .iter()
+                    .try_for_each(|f| write_all_nb(peer, f, io_deadline, "catch-up SyncDecision"))
+                    .and_then(|()| peer.session.promote())
+            };
+            match res {
+                Ok(()) => {
+                    eprintln!(
+                        "[serve] {} rejoined the run as shard {s}",
+                        self.slots[s].as_ref().unwrap().addr
+                    );
+                    self.reasons[s] = None;
+                    admitted.push(s);
+                }
+                Err(e) => self.evict_candidate(s, &format!("{e:#}")),
+            }
+        }
+        Ok(admitted)
     }
 
     fn shutdown(&mut self) -> Result<()> {
-        for peer in &mut self.peers {
+        let frame = Message::Shutdown.to_frame()?;
+        let deadline = Instant::now() + Duration::from_secs(5);
+        for peer in self.slots.iter_mut().flatten() {
             // best effort: the participant may already have exited on error
-            let _ = peer.send(&Message::Shutdown);
+            let _ = write_all_nb(peer, &frame, deadline, "Shutdown");
         }
-        for peer in &mut self.peers {
+        for peer in self.slots.iter_mut().flatten() {
             // a clean participant closes its end after Shutdown; do not
             // fail a completed run over a slow close
-            let _ = peer.stream.set_read_timeout(Some(Duration::from_secs(5)));
-            let mut buf = [0u8; 256];
-            let _ = peer.stream.read(&mut buf);
+            peer.drain_until_close(Duration::from_secs(5));
             let _ = peer.stream.shutdown(Shutdown::Both);
         }
         Ok(())
@@ -431,8 +841,11 @@ impl Drop for TcpTransport {
     fn drop(&mut self) {
         // error path: close sockets so remote participants fail fast
         // instead of blocking on a dead coordinator
-        for peer in &mut self.peers {
+        for peer in self.slots.iter_mut().flatten() {
             let _ = peer.stream.shutdown(Shutdown::Both);
+        }
+        for (stream, _) in self.waiting.drain(..) {
+            let _ = stream.shutdown(Shutdown::Both);
         }
     }
 }
@@ -460,7 +873,10 @@ fn connect_with_retry(addr: &str, window: Duration) -> Result<TcpStream> {
 /// Join a coordinator as a TCP participant and serve one full training
 /// session; returns the shard id this participant owned.  The
 /// `Participant` (backend, client shard, partition) is rebuilt from the
-/// coordinator's `Configure` frame exactly like a stdio worker.
+/// coordinator's `Configure` frame exactly like a stdio worker.  If that
+/// rebuild fails, an `Abort` frame carries the reason back to the
+/// coordinator before this function returns the error — the serve side
+/// reports it instead of timing out in silence.
 pub fn join(addr: &str, opts: &JoinOpts) -> Result<usize> {
     let stream = connect_with_retry(addr, opts.connect_retry)?;
     stream.set_nodelay(true).context("setting TCP_NODELAY")?;
@@ -477,7 +893,18 @@ pub fn join(addr: &str, opts: &JoinOpts) -> Result<usize> {
         Message::Configure(c) => c,
         other => bail!("expected Configure from the coordinator, got {}", other.kind_name()),
     };
-    let mut p = super::worker::build_participant(conf)?;
+    let worker_id = conf.worker_id;
+    let mut p = match super::worker::build_participant(conf) {
+        Ok(p) => p,
+        Err(e) => {
+            let abort = Message::Abort(Abort { worker_id, reason: format!("{e:#}") });
+            if let Ok(frame) = abort.to_frame() {
+                let _ = tx.write_all(&frame);
+                let _ = tx.flush();
+            }
+            return Err(e);
+        }
+    };
     // 3. confirm readiness (backend built, shard adopted)
     Message::Hello(Hello {
         version: WIRE_VERSION,
@@ -487,6 +914,6 @@ pub fn join(addr: &str, opts: &JoinOpts) -> Result<usize> {
     .write_to(&mut tx)?;
     // 4. the stdio worker's block loop, verbatim (echoes heartbeats, so
     //    the coordinator's slow-join pings keep this session verified)
-    super::worker::serve_loop(&mut p, rx, tx)?;
+    super::worker::serve_loop_with_limit(&mut p, rx, tx, opts.depart_after_blocks)?;
     Ok(p.worker_id)
 }

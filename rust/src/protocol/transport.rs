@@ -34,16 +34,50 @@ pub fn shard_clients(n_clients: usize, n: usize, shard: usize) -> Vec<usize> {
 
 /// Merged result of one training block across all participants.
 pub struct BlockResult {
-    /// Per-client mean losses in `assignment.active` order.
+    /// Per-client mean losses in `assignment.active` order (NaN for
+    /// active clients whose shard was absent — the core skips NaN).
     pub losses: Vec<f64>,
     /// Every `LayerUpdate` for the block's due groups (any order; the
     /// core re-orders by the active list).
     pub updates: Vec<LayerUpdate>,
+    /// Active clients whose shard sent nothing this block (quorum mode;
+    /// empty on a full-roster commit).
+    pub absent: Vec<usize>,
+    /// Shards absent for this block's commit (vacant or departed).
+    pub missed: Vec<usize>,
+    /// Shards that departed *during* this block (subset of `missed`).
+    pub departed: Vec<usize>,
+}
+
+impl BlockResult {
+    /// A full-roster result — every shard reported (the only case the
+    /// in-proc and stdio transports produce).
+    pub fn full(losses: Vec<f64>, updates: Vec<LayerUpdate>) -> BlockResult {
+        BlockResult {
+            losses,
+            updates,
+            absent: Vec::new(),
+            missed: Vec::new(),
+            departed: Vec::new(),
+        }
+    }
 }
 
 /// Merge (client, loss) pairs from participants into active order,
 /// erroring on missing or duplicate clients.
 pub fn merge_losses(active: &[usize], pairs: &[(usize, f64)]) -> Result<Vec<f64>> {
+    merge_losses_absent(active, pairs, &[])
+}
+
+/// Like [`merge_losses`] but tolerating `absent` clients (quorum mode):
+/// their slot reports NaN, which `record_losses` skips like a
+/// budget-exhausted client.  Clients outside `active` and duplicates are
+/// still errors, and so is a *present* client with no loss.
+pub fn merge_losses_absent(
+    active: &[usize],
+    pairs: &[(usize, f64)],
+    absent: &[usize],
+) -> Result<Vec<f64>> {
     let mut by_client: Vec<Option<f64>> = vec![None; active.len()];
     for &(ci, loss) in pairs {
         let slot = active
@@ -56,7 +90,17 @@ pub fn merge_losses(active: &[usize], pairs: &[(usize, f64)]) -> Result<Vec<f64>
     by_client
         .into_iter()
         .enumerate()
-        .map(|(i, l)| l.with_context(|| format!("no loss reported for client {}", active[i])))
+        .map(|(i, l)| {
+            if absent.contains(&active[i]) {
+                anyhow::ensure!(
+                    l.is_none(),
+                    "absent client {} reported a loss anyway",
+                    active[i]
+                );
+                return Ok(f64::NAN);
+            }
+            l.with_context(|| format!("no loss reported for client {}", active[i]))
+        })
         .collect()
 }
 
@@ -86,6 +130,21 @@ pub trait Transport {
         None
     }
 
+    /// Whether any connection is parked waiting for a vacant shard
+    /// (elastic transports only; `&mut` so the transport can drain its
+    /// accept queue while answering).
+    fn has_pending_members(&mut self) -> bool {
+        false
+    }
+
+    /// Admit parked Ready peers into the block loop — called by the
+    /// driver at round boundaries only.  `catchup` is the core's current
+    /// per-group decision snapshot, applied replica-only by the rejoiner
+    /// before its first assignment.  Returns the admitted shard ids.
+    fn admit_ready_peers(&mut self, _catchup: &[SyncDecision]) -> Result<Vec<usize>> {
+        Ok(Vec::new())
+    }
+
     /// Tear the session down (terminate workers, close pipes).
     fn shutdown(&mut self) -> Result<()> {
         Ok(())
@@ -110,7 +169,7 @@ impl Transport for InProcTransport<'_> {
 
     fn run_block(&mut self, a: &RoundAssignment) -> Result<BlockResult> {
         let (pairs, updates) = self.participant.handle_assignment(a)?;
-        Ok(BlockResult { losses: merge_losses(&a.active, &pairs)?, updates })
+        Ok(BlockResult::full(merge_losses(&a.active, &pairs)?, updates))
     }
 
     fn broadcast_decision(&mut self, d: &SyncDecision, active: &[usize]) -> Result<()> {
@@ -138,5 +197,20 @@ mod tests {
         assert!(merge_losses(&active, &[(2, 1.0), (5, 2.0)]).is_err());
         assert!(merge_losses(&active, &[(2, 1.0), (2, 1.5), (5, 2.0), (9, 3.0)]).is_err());
         assert!(merge_losses(&active, &[(1, 1.0), (5, 2.0), (9, 3.0)]).is_err());
+    }
+
+    #[test]
+    fn merge_losses_absent_fills_nan_slots() {
+        let active = [2usize, 5, 9];
+        // client 5's shard departed: its slot becomes NaN
+        let merged = merge_losses_absent(&active, &[(2, 1.0), (9, 3.0)], &[5]).unwrap();
+        assert_eq!(merged[0], 1.0);
+        assert!(merged[1].is_nan());
+        assert_eq!(merged[2], 3.0);
+        // a loss from a supposedly absent client is a protocol violation
+        let err = merge_losses_absent(&active, &[(2, 1.0), (5, 2.0), (9, 3.0)], &[5]);
+        assert!(err.is_err());
+        // present clients still must report
+        assert!(merge_losses_absent(&active, &[(2, 1.0)], &[5]).is_err());
     }
 }

@@ -91,37 +91,52 @@ impl Enc {
     pub fn f64(&mut self, v: f64) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
-    pub fn str(&mut self, s: &str) {
-        self.u32(s.len() as u32);
+    /// Sequence length prefix: a length that does not fit the u32 prefix
+    /// would silently truncate and poison the stream, so it is an encode
+    /// error instead (mirrors the decode-side `seq_len` bound).
+    fn seq_len(&mut self, n: usize) -> Result<()> {
+        ensure!(n <= u32::MAX as usize, "sequence length {n} exceeds the u32 wire prefix");
+        self.u32(n as u32);
+        Ok(())
+    }
+
+    pub fn str(&mut self, s: &str) -> Result<()> {
+        self.seq_len(s.len())?;
         self.buf.extend_from_slice(s.as_bytes());
+        Ok(())
     }
-    pub fn bytes(&mut self, b: &[u8]) {
-        self.u32(b.len() as u32);
+    pub fn bytes(&mut self, b: &[u8]) -> Result<()> {
+        self.seq_len(b.len())?;
         self.buf.extend_from_slice(b);
+        Ok(())
     }
-    pub fn f32s(&mut self, v: &[f32]) {
-        self.u32(v.len() as u32);
+    pub fn f32s(&mut self, v: &[f32]) -> Result<()> {
+        self.seq_len(v.len())?;
         for &x in v {
             self.buf.extend_from_slice(&x.to_le_bytes());
         }
+        Ok(())
     }
-    pub fn u16s(&mut self, v: &[u16]) {
-        self.u32(v.len() as u32);
+    pub fn u16s(&mut self, v: &[u16]) -> Result<()> {
+        self.seq_len(v.len())?;
         for &x in v {
             self.buf.extend_from_slice(&x.to_le_bytes());
         }
+        Ok(())
     }
-    pub fn u32s(&mut self, v: &[u32]) {
-        self.u32(v.len() as u32);
+    pub fn u32s(&mut self, v: &[u32]) -> Result<()> {
+        self.seq_len(v.len())?;
         for &x in v {
             self.buf.extend_from_slice(&x.to_le_bytes());
         }
+        Ok(())
     }
-    pub fn usizes(&mut self, v: &[usize]) {
-        self.u32(v.len() as u32);
+    pub fn usizes(&mut self, v: &[usize]) -> Result<()> {
+        self.seq_len(v.len())?;
         for &x in v {
             self.u64(x as u64);
         }
+        Ok(())
     }
 }
 
@@ -231,8 +246,11 @@ impl<'a> Dec<'a> {
 // Framing
 // ---------------------------------------------------------------------------
 
-/// Wrap an encoded body into a full frame.
-pub fn frame(kind: u8, body: &[u8]) -> Vec<u8> {
+/// Wrap an encoded body into a full frame.  Bodies over [`MAX_FRAME`]
+/// are rejected at encode time — the decode side would refuse them
+/// anyway, so emitting one could only poison the stream.
+pub fn frame(kind: u8, body: &[u8]) -> Result<Vec<u8>> {
+    ensure!(body.len() <= MAX_FRAME, "frame body {} bytes exceeds cap {MAX_FRAME}", body.len());
     let mut out = Vec::with_capacity(HEADER_LEN + body.len() + 4);
     out.extend_from_slice(&MAGIC);
     out.push(WIRE_VERSION);
@@ -240,7 +258,7 @@ pub fn frame(kind: u8, body: &[u8]) -> Vec<u8> {
     out.extend_from_slice(&(body.len() as u32).to_le_bytes());
     out.extend_from_slice(body);
     out.extend_from_slice(&crc32(body).to_le_bytes());
-    out
+    Ok(out)
 }
 
 /// Outcome of decoding the head of a byte buffer.
@@ -400,7 +418,7 @@ impl StreamDecoder {
 
 /// Write one frame to a stream (does not flush; callers batch + flush).
 pub fn write_frame<W: Write>(w: &mut W, kind: u8, body: &[u8]) -> Result<()> {
-    w.write_all(&frame(kind, body)).context("writing protocol frame")
+    w.write_all(&frame(kind, body)?).context("writing protocol frame")
 }
 
 /// Read one full frame from a stream; returns (kind, body).
@@ -447,11 +465,11 @@ mod tests {
         e.usize(42);
         e.f32(-0.0);
         e.f64(f64::NAN);
-        e.str("fedlama");
-        e.f32s(&[1.5, -2.5]);
-        e.u16s(&[9, 65535]);
-        e.u32s(&[3]);
-        e.usizes(&[1, 2, 3]);
+        e.str("fedlama").unwrap();
+        e.f32s(&[1.5, -2.5]).unwrap();
+        e.u16s(&[9, 65535]).unwrap();
+        e.u32s(&[3]).unwrap();
+        e.usizes(&[1, 2, 3]).unwrap();
         let mut d = Dec::new(&e.buf);
         assert_eq!(d.u8().unwrap(), 7);
         assert!(d.bool().unwrap());
@@ -482,7 +500,7 @@ mod tests {
     #[test]
     fn frame_round_trip_and_rejection() {
         let body = b"hello protocol".to_vec();
-        let f = frame(4, &body);
+        let f = frame(4, &body).unwrap();
         let (kind, got, used) = deframe(&f).unwrap();
         assert_eq!((kind, got, used), (4u8, body.as_slice(), f.len()));
 
@@ -518,7 +536,7 @@ mod tests {
 
     #[test]
     fn version_mismatch_rejected() {
-        let mut f = frame(1, b"x");
+        let mut f = frame(1, b"x").unwrap();
         f[2] = WIRE_VERSION + 1;
         let err = format!("{:#}", deframe(&f).unwrap_err());
         assert!(err.contains("version mismatch"), "{err}");
@@ -526,7 +544,7 @@ mod tests {
 
     #[test]
     fn try_deframe_distinguishes_truncation_from_corruption() {
-        let f = frame(4, b"hello protocol");
+        let f = frame(4, b"hello protocol").unwrap();
         // every strict prefix is Truncated, never an Err — and `need` is
         // a usable lower bound on the bytes required
         for cut in 0..f.len() {
@@ -557,8 +575,8 @@ mod tests {
     #[test]
     fn stream_decoder_reassembles_partial_frames() {
         let mut bytes = Vec::new();
-        bytes.extend_from_slice(&frame(2, b"first"));
-        bytes.extend_from_slice(&frame(3, b"second frame body"));
+        bytes.extend_from_slice(&frame(2, b"first").unwrap());
+        bytes.extend_from_slice(&frame(3, b"second frame body").unwrap());
         let mut dec = StreamDecoder::new();
         let mut got = Vec::new();
         // drip-feed one byte at a time: poll never errors, yields exactly
@@ -578,10 +596,10 @@ mod tests {
 
     #[test]
     fn stream_decoder_skips_corrupt_crc_without_poisoning() {
-        let mut corrupt = frame(2, b"damaged-in-flight");
+        let mut corrupt = frame(2, b"damaged-in-flight").unwrap();
         let blen = corrupt.len();
         corrupt[blen - 6] ^= 0x40; // flip a body bit -> CRC mismatch
-        let good = frame(5, b"still fine");
+        let good = frame(5, b"still fine").unwrap();
         let mut dec = StreamDecoder::new();
         dec.extend(&corrupt);
         dec.extend(&good);
@@ -593,8 +611,45 @@ mod tests {
     }
 
     #[test]
+    fn frame_rejects_body_over_cap_at_encode_time() {
+        // the decode side refuses frames over MAX_FRAME; emitting one would
+        // only poison the stream, so encode must refuse too
+        let body = vec![0u8; MAX_FRAME + 1];
+        let err = format!("{:#}", frame(1, &body).unwrap_err());
+        assert!(err.contains("exceeds cap"), "{err}");
+        let mut sink = Vec::new();
+        assert!(write_frame(&mut sink, 1, &body).is_err());
+        assert!(sink.is_empty(), "nothing may hit the stream on encode failure");
+    }
+
+    #[test]
+    fn stream_decoder_skips_two_back_to_back_corrupt_frames() {
+        // regression: each corrupt frame must advance the cursor by its own
+        // full extent, so consecutive damaged frames cannot desynchronize
+        // the stream or shadow the valid frame behind them
+        let mut bad1 = frame(2, b"first damaged frame").unwrap();
+        let n1 = bad1.len();
+        bad1[n1 - 6] ^= 0x20;
+        let mut bad2 = frame(3, b"second damaged, different length").unwrap();
+        let n2 = bad2.len();
+        bad2[n2 - 5] ^= 0x04;
+        let good = frame(5, b"survivor").unwrap();
+        let mut dec = StreamDecoder::new();
+        dec.extend(&bad1);
+        dec.extend(&bad2);
+        dec.extend(&good);
+        for _ in 0..2 {
+            let err = format!("{:#}", dec.poll().unwrap_err());
+            assert!(err.contains("checksum mismatch"), "{err}");
+        }
+        assert_eq!(dec.poll().unwrap(), Some((5u8, b"survivor".to_vec())));
+        assert_eq!(dec.poll().unwrap(), None);
+        assert_eq!(dec.pending(), 0);
+    }
+
+    #[test]
     fn stream_decoder_header_corruption_is_fatal() {
-        let mut f = frame(2, b"x");
+        let mut f = frame(2, b"x").unwrap();
         f[0] ^= 0xFF; // magic gone -> framing lost, no resync possible
         let mut dec = StreamDecoder::new();
         dec.extend(&f);

@@ -41,8 +41,22 @@ pub fn build_participant(conf: Configure) -> Result<Participant> {
 /// Update* + Done, Decision, Heartbeat echo, until a `Shutdown` frame
 /// arrives.  Transport-agnostic — the stdio worker hands it pipe halves,
 /// the TCP `join` participant hands it socket halves.
-pub fn serve_loop<R: Read, W: Write>(p: &mut Participant, mut rx: R, mut tx: W) -> Result<()> {
+pub fn serve_loop<R: Read, W: Write>(p: &mut Participant, rx: R, tx: W) -> Result<()> {
+    serve_loop_with_limit(p, rx, tx, None)
+}
+
+/// [`serve_loop`] with an optional departure knob: after serving
+/// `depart_after` assignments the loop returns `Ok` without waiting for
+/// `Shutdown`, closing the connection cleanly — the chaos-test lever for
+/// a participant that leaves mid-run at a deterministic block boundary.
+pub fn serve_loop_with_limit<R: Read, W: Write>(
+    p: &mut Participant,
+    mut rx: R,
+    mut tx: W,
+    depart_after: Option<usize>,
+) -> Result<()> {
     let mut last_active: Vec<usize> = Vec::new();
+    let mut served = 0usize;
     loop {
         match Message::read_from(&mut rx)? {
             Message::Assignment(a) => {
@@ -59,6 +73,10 @@ pub fn serve_loop<R: Read, W: Write>(p: &mut Participant, mut rx: R, mut tx: W) 
                 .write_to(&mut tx)?;
                 tx.flush().context("flushing block result")?;
                 last_active = a.active;
+                served += 1;
+                if depart_after.is_some_and(|n| served >= n) {
+                    return Ok(());
+                }
             }
             Message::Decision(d) => p.apply_decision(&d, &last_active)?,
             Message::Heartbeat(h) => {
@@ -109,7 +127,8 @@ mod tests {
         };
         cfg.validate().unwrap();
         let mut inbox: Vec<u8> = Vec::new();
-        let push = |inbox: &mut Vec<u8>, m: &Message| inbox.extend_from_slice(&m.to_frame());
+        let push =
+            |inbox: &mut Vec<u8>, m: &Message| inbox.extend_from_slice(&m.to_frame().unwrap());
         push(
             &mut inbox,
             &Message::Configure(Configure {
@@ -174,7 +193,8 @@ mod tests {
                 shard: vec![0],
                 cfg: bad,
             })
-            .to_frame(),
+            .to_frame()
+            .unwrap(),
         );
         let mut out = Vec::new();
         assert!(run(std::io::Cursor::new(inbox), &mut out).is_err());

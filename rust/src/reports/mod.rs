@@ -190,10 +190,19 @@ pub fn participants_summary(m: &RunMetrics) -> Option<String> {
         return None;
     }
     let mut s = String::from("participants (nominal Eq.9-style bytes, shard = client mod n):\n");
-    for (shard, updates, up, down) in &m.per_participant {
+    for p in &m.per_participant {
         s.push_str(&format!(
-            "  shard {shard}: {updates:>5} layer updates  {up:>12} B up  {down:>12} B down\n"
+            "  shard {}: {:>5} layer updates  {:>12} B up  {:>12} B down",
+            p.shard, p.updates, p.uplink_bytes, p.downlink_bytes
         ));
+        // membership events only appear on elastic (quorum) runs
+        if p.departures + p.rejoins + p.missed_blocks > 0 {
+            s.push_str(&format!(
+                "  [departed x{}, rejoined x{}, missed {} blocks]",
+                p.departures, p.rejoins, p.missed_blocks
+            ));
+        }
+        s.push('\n');
     }
     Some(s)
 }
@@ -281,15 +290,29 @@ mod tests {
 
     #[test]
     fn participants_summary_renders_only_when_sharded() {
+        let shard_row = |shard| crate::comm::ParticipantComm {
+            shard,
+            updates: 12,
+            uplink_bytes: 4096,
+            downlink_bytes: 2048,
+            ..Default::default()
+        };
         let mut m = fake_metrics("fedlama");
-        m.per_participant = vec![(0, 12, 4096, 2048)];
+        m.per_participant = vec![shard_row(0)];
         assert!(participants_summary(&m).is_none(), "single shard: nothing beyond totals");
-        m.per_participant = vec![(0, 12, 4096, 2048), (1, 12, 4096, 2048)];
+        m.per_participant = vec![shard_row(0), shard_row(1)];
         let s = participants_summary(&m).unwrap();
         assert!(s.contains("shard 0"), "{s}");
         assert!(s.contains("shard 1"), "{s}");
         assert!(s.contains("4096"), "{s}");
+        assert!(!s.contains("departed"), "steady roster hides membership: {s}");
         assert_eq!(s.lines().count(), 3);
+        // a shard that dropped and came back is called out
+        m.per_participant[1].departures = 1;
+        m.per_participant[1].rejoins = 1;
+        m.per_participant[1].missed_blocks = 2;
+        let s = participants_summary(&m).unwrap();
+        assert!(s.contains("departed x1, rejoined x1, missed 2 blocks"), "{s}");
     }
 
     #[test]

@@ -17,7 +17,7 @@ use fedlama::config::{Algorithm, PartitionKind, RunConfig};
 use fedlama::data::DatasetKind;
 use fedlama::protocol::messages::{encode_tensor, update_stream_seed};
 use fedlama::protocol::{
-    BlockDone, Configure, Heartbeat, Hello, LayerUpdate, Message, Payload, RoundAssignment,
+    Abort, BlockDone, Configure, Heartbeat, Hello, LayerUpdate, Message, Payload, RoundAssignment,
     SyncDecision,
 };
 use fedlama::util::prop::{forall, Strategy};
@@ -101,7 +101,7 @@ struct MsgStrategy;
 impl Strategy for MsgStrategy {
     type Value = Message;
     fn generate(&self, rng: &mut Rng) -> Message {
-        match rng.below(8) {
+        match rng.below(9) {
             0 => Message::Hello(Hello {
                 version: rng.below(255) as u8,
                 worker_id: rng.below(64),
@@ -147,6 +147,10 @@ impl Strategy for MsgStrategy {
                 new_interval: 1 + rng.below(64),
                 new_params: (0..1 + rng.below(3)).map(|_| rand_f32s(rng, 120)).collect(),
             }),
+            7 => Message::Abort(Abort {
+                worker_id: rng.below(64),
+                reason: "x".repeat(rng.below(96)),
+            }),
             _ => Message::Shutdown,
         }
     }
@@ -173,7 +177,7 @@ fn msg_eq(a: &Message, b: &Message) -> bool {
 #[test]
 fn every_message_kind_round_trips() {
     forall(0xC0DEC, 300, &MsgStrategy, |msg| {
-        let frame = msg.to_frame();
+        let frame = msg.to_frame().map_err(|e| format!("encode failed: {e:#}"))?;
         let (decoded, used) =
             Message::decode(&frame).map_err(|e| format!("decode failed: {e:#}"))?;
         if used != frame.len() {
@@ -189,7 +193,7 @@ fn every_message_kind_round_trips() {
 #[test]
 fn truncated_frames_are_rejected() {
     forall(0x7A11, 150, &MsgStrategy, |msg| {
-        let frame = msg.to_frame();
+        let frame = msg.to_frame().map_err(|e| format!("encode failed: {e:#}"))?;
         // probe the header, the body boundary, and interior cuts
         let cuts =
             [0, 1, 4, 7, 8, frame.len() / 3, frame.len() / 2, frame.len() - 1];
@@ -205,7 +209,7 @@ fn truncated_frames_are_rejected() {
 #[test]
 fn corrupted_frames_are_rejected() {
     forall(0xBAD_F00D, 150, &MsgStrategy, |msg| {
-        let frame = msg.to_frame();
+        let frame = msg.to_frame().map_err(|e| format!("encode failed: {e:#}"))?;
         // magic, version: header validation must fire
         for i in [0usize, 1, 2] {
             let mut bad = frame.clone();
@@ -290,7 +294,8 @@ fn payload_encodings_reproduce_the_compressor_bit_for_bit() {
             ));
         }
         let msg = Message::Update(LayerUpdate { k: 6, group: 0, client: 1, tensors: vec![payload] });
-        let (decoded, _) = Message::decode(&msg.to_frame()).map_err(|e| format!("{e:#}"))?;
+        let frame = msg.to_frame().map_err(|e| format!("{e:#}"))?;
+        let (decoded, _) = Message::decode(&frame).map_err(|e| format!("{e:#}"))?;
         let Message::Update(u) = decoded else { return Err("wrong kind".into()) };
         let out = u.tensors[0].decode().map_err(|e| format!("{e:#}"))?;
         if out.len() != reference.len() {

@@ -48,7 +48,25 @@ fn fast_opts() -> TcpOpts {
 }
 
 fn join_opts() -> JoinOpts {
-    JoinOpts { connect_retry: Duration::from_secs(10), io_timeout: Duration::from_secs(60) }
+    JoinOpts {
+        connect_retry: Duration::from_secs(10),
+        io_timeout: Duration::from_secs(60),
+        depart_after_blocks: None,
+    }
+}
+
+/// `tcp::join` from a thread after `delay`, optionally departing cleanly
+/// after `depart_after` served blocks; returns the shard served.
+fn spawn_join(
+    addr: String,
+    delay: Duration,
+    depart_after: Option<usize>,
+) -> thread::JoinHandle<usize> {
+    thread::spawn(move || {
+        thread::sleep(delay);
+        let opts = JoinOpts { depart_after_blocks: depart_after, ..join_opts() };
+        tcp::join(&addr, &opts).unwrap()
+    })
 }
 
 /// Run `cfg` over a real localhost TCP federation with `n` participant
@@ -187,11 +205,11 @@ fn corrupt_crc_frame_rejected_without_poisoning_the_stream() {
     let addr = listener.local_addr().unwrap();
     let writer = thread::spawn(move || {
         let mut s = TcpStream::connect(addr).unwrap();
-        let mut corrupt = Message::Heartbeat(Heartbeat { nonce: 7 }).to_frame();
+        let mut corrupt = Message::Heartbeat(Heartbeat { nonce: 7 }).to_frame().unwrap();
         let n = corrupt.len();
         corrupt[n - 6] ^= 0x10; // flip a body bit -> CRC mismatch
         s.write_all(&corrupt).unwrap();
-        let good = Message::Heartbeat(Heartbeat { nonce: 8 }).to_frame();
+        let good = Message::Heartbeat(Heartbeat { nonce: 8 }).to_frame().unwrap();
         s.write_all(&good[..5]).unwrap();
         s.flush().unwrap();
         thread::sleep(Duration::from_millis(100));
@@ -237,12 +255,88 @@ fn three_participants_bit_identical_to_inproc() {
     // the per-participant ledger has one slot per shard, round-robin fold
     assert_eq!(m0.per_participant.len(), 1);
     assert_eq!(m3.per_participant.len(), 3);
-    let up3: u64 = m3.per_participant.iter().map(|p| p.2).sum();
-    assert_eq!(up3, m0.per_participant[0].2, "uplink bytes total");
-    let down3: u64 = m3.per_participant.iter().map(|p| p.3).sum();
-    assert_eq!(down3, m0.per_participant[0].3, "downlink bytes total");
-    let updates3: u64 = m3.per_participant.iter().map(|p| p.1).sum();
-    assert_eq!(updates3, m0.per_participant[0].1, "update count total");
+    let up3: u64 = m3.per_participant.iter().map(|p| p.uplink_bytes).sum();
+    assert_eq!(up3, m0.per_participant[0].uplink_bytes, "uplink bytes total");
+    let down3: u64 = m3.per_participant.iter().map(|p| p.downlink_bytes).sum();
+    assert_eq!(down3, m0.per_participant[0].downlink_bytes, "downlink bytes total");
+    let updates3: u64 = m3.per_participant.iter().map(|p| p.updates).sum();
+    assert_eq!(updates3, m0.per_participant[0].updates, "update count total");
+}
+
+/// One `--quorum 2` run over 3 participants: two healthy joins (the
+/// second `stagger` later) plus a late third that departs cleanly after
+/// serving the first block.  Blocks 2..4 commit on the 2-shard quorum.
+fn run_quorum_with_stagger(stagger: Duration) -> RunMetrics {
+    let cfg = RunConfig { workers: 3, quorum: 2, ..base_cfg() };
+    let server = TcpServer::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let h0 = spawn_join(addr.clone(), Duration::ZERO, None);
+    let h1 = spawn_join(addr.clone(), stagger, None);
+    // joins last -> owns shard 2 (clients {2, 5}) in both runs
+    let quitter = spawn_join(addr.clone(), Duration::from_millis(400), Some(1));
+    let mut coord = Coordinator::new(cfg).unwrap();
+    let mut transport = server.accept_participants(&coord.cfg, 3, &fast_opts()).unwrap();
+    let metrics = coord.run_with_transport(&mut transport).unwrap();
+    let mut healthy = vec![h0.join().unwrap(), h1.join().unwrap()];
+    healthy.sort_unstable();
+    assert_eq!(healthy, vec![0, 1], "healthy peers hold shards 0 and 1");
+    assert_eq!(quitter.join().unwrap(), 2, "the late joiner owns shard 2");
+    metrics
+}
+
+#[test]
+fn quorum_commit_survives_departure_bit_identically() {
+    // arrival timing must not leak into the numerics: the reduction folds
+    // survivor updates in shard order, not reply order
+    let m_a = run_quorum_with_stagger(Duration::ZERO);
+    let m_b = run_quorum_with_stagger(Duration::from_millis(150));
+    assert_metrics_identical(&m_a, &m_b, "quorum=2 with a block-1 departure");
+    for (a, b) in m_a.per_participant.iter().zip(&m_b.per_participant) {
+        assert_eq!(
+            (a.departures, a.rejoins, a.missed_blocks),
+            (b.departures, b.rejoins, b.missed_blocks),
+            "membership accounting must match across arrival timings"
+        );
+    }
+    let p2 = &m_a.per_participant[2];
+    assert_eq!(p2.departures, 1, "shard 2 departed once");
+    assert_eq!(p2.rejoins, 0);
+    assert_eq!(p2.missed_blocks, 3, "shard 2 missed blocks 2..4");
+    assert!(
+        p2.uplink_bytes < m_a.per_participant[0].uplink_bytes,
+        "the departed shard uploaded less than a full-run shard"
+    );
+}
+
+#[test]
+fn rejoin_reclaims_the_vacated_shard_at_a_round_boundary() {
+    // 2 shards, quorum 1, 4 blocks in 2 rounds.  The quitter leaves after
+    // block 1; block 2 commits 1/2; the spare (parked in the accept queue
+    // since before the run) claims the vacant shard at block 3's round
+    // boundary and serves rounds 2's blocks.
+    let cfg = RunConfig { workers: 2, quorum: 1, ..base_cfg() };
+    let server = TcpServer::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let stayer = spawn_join(addr.clone(), Duration::ZERO, None);
+    let quitter = spawn_join(addr.clone(), Duration::from_millis(50), Some(1));
+    let mut coord = Coordinator::new(cfg).unwrap();
+    let mut transport = server.accept_participants(&coord.cfg, 2, &fast_opts()).unwrap();
+    // connect the spare while the fleet is still full, *before* training
+    // starts: it parks until a shard goes vacant
+    let spare = spawn_join(addr.clone(), Duration::ZERO, None);
+    thread::sleep(Duration::from_millis(300));
+    let metrics = coord.run_with_transport(&mut transport).unwrap();
+    let stayer_shard = stayer.join().unwrap();
+    let quit_shard = quitter.join().unwrap();
+    let spare_shard = spare.join().unwrap();
+    assert_ne!(stayer_shard, quit_shard);
+    assert_eq!(spare_shard, quit_shard, "the spare re-claims the vacated shard");
+    let p = &metrics.per_participant[quit_shard];
+    assert_eq!(p.departures, 1, "shard {quit_shard} departed once");
+    assert_eq!(p.rejoins, 1, "shard {quit_shard} was re-claimed");
+    assert_eq!(p.missed_blocks, 1, "only block 2 ran without it");
+    let q = &metrics.per_participant[stayer_shard];
+    assert_eq!((q.departures, q.rejoins, q.missed_blocks), (0, 0, 0));
 }
 
 #[test]

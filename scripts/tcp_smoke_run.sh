@@ -8,7 +8,13 @@
 # block of .github/workflows/ci.yml, whose in-proc and --workers reference
 # runs expand the same variable before diffing OUT_JSON against theirs
 # with scripts/assert_identical_metrics.py); the fallback below mirrors it
-# for local use outside CI.
+# for local use outside CI.  Extra flags go to `serve` only — participants
+# receive the run config over the wire.
+#
+# Chaos knob: CHAOS_KILL_ONE_AFTER=SECS sends SIGKILL to the last joiner
+# that many seconds into the run.  Its non-zero exit is then expected and
+# tolerated; pass `--quorum Q < N` in the extra flags so the serve side
+# survives the departure.
 set -euo pipefail
 
 port=$1
@@ -34,7 +40,22 @@ for _ in $(seq "$n"); do
   pids+=("$!")
 done
 
+victim=""
+if [[ -n "${CHAOS_KILL_ONE_AFTER:-}" ]]; then
+  victim=${pids[$((n - 1))]}
+  (
+    sleep "$CHAOS_KILL_ONE_AFTER"
+    echo "[chaos] SIGKILL joiner pid $victim" >&2
+    kill -9 "$victim" 2>/dev/null || true
+  ) &
+fi
+
 wait "$serve"
 for p in "${pids[@]}"; do
-  wait "$p"
+  if [[ "$p" == "$victim" ]]; then
+    # the SIGKILLed joiner exits 137 by design
+    wait "$p" || true
+  else
+    wait "$p"
+  fi
 done
