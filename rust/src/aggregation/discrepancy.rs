@@ -6,6 +6,8 @@
 //! slices — no [m, d] stacking copy — which also makes it the performance
 //! baseline the Pallas path is compared against in EXPERIMENTS.md §Perf.
 
+use crate::runtime::simd::{self, Isa};
+
 /// Weighted average of client rows into `u` (u must be zeroed or will be
 /// overwritten), followed by the weighted squared-distance reduction.
 ///
@@ -13,6 +15,14 @@
 /// (renormalized) aggregation weight.  Returns the discrepancy
 /// sum_i w_i ||u - x_i||^2 (paper Eq. 2 numerator).
 pub fn aggregate_native(rows: &[&[f32]], weights: &[f32], u: &mut [f32]) -> f64 {
+    aggregate_native_with(simd::active_isa(), rows, weights, u)
+}
+
+/// [`aggregate_native`] pinned to an explicit SIMD dispatch path.  The
+/// weighted sum runs on the `runtime::simd` ladder (lanes span independent
+/// coordinates j; one mul + one add per accumulation, never FMA), so every
+/// path is bit-identical — see `tests/simd_quant.rs`.
+pub fn aggregate_native_with(isa: Isa, rows: &[&[f32]], weights: &[f32], u: &mut [f32]) -> f64 {
     assert_eq!(rows.len(), weights.len());
     assert!(!rows.is_empty());
     let d = u.len();
@@ -25,9 +35,7 @@ pub fn aggregate_native(rows: &[&[f32]], weights: &[f32], u: &mut [f32]) -> f64 
         if w == 0.0 {
             continue;
         }
-        for (uj, &xj) in u.iter_mut().zip(row.iter()) {
-            *uj += w * xj;
-        }
+        simd::axpy(isa, u, w, row);
     }
     // pass 2: disc = sum_i w_i ||u - x_i||^2 (f64 accumulate for stability)
     let mut disc = 0.0f64;

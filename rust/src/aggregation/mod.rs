@@ -7,6 +7,6 @@ pub mod interval;
 pub mod policy;
 
 pub use backend::{aggregate_group, AggBackend, AggScratch};
-pub use discrepancy::{aggregate_native, unit_discrepancy};
+pub use discrepancy::{aggregate_native, aggregate_native_with, unit_discrepancy};
 pub use interval::{adjust_intervals, adjust_intervals_accelerate, Adjustment};
 pub use policy::{Policy, Schedule};

@@ -4,11 +4,13 @@
 //! (repo root by default): per-shape GFLOP/s and ns/iter for every matmul
 //! kernel on both the detected SIMD path and the forced-scalar path
 //! (`speedup_vs_scalar` is the headline number), plus op-level
-//! forward/backward latency, end-to-end native train-step latency, and
-//! the persistent pool's dispatch overhead.  `--quick` shrinks the rep
-//! budget for CI smoke runs; the measured numbers stay comparable across
-//! runs of the same machine but are *not* normalized across machines —
-//! always read the `isa` field next to the numbers.
+//! forward/backward latency, end-to-end native train-step latency,
+//! the persistent pool's dispatch overhead, and the wire `transport`
+//! section (encode/decode throughput + peak staging, monolithic vs
+//! streamed per-layer framing).  `--quick` shrinks the rep budget for CI
+//! smoke runs; the measured numbers stay comparable across runs of the
+//! same machine but are *not* normalized across machines — always read
+//! the `isa` field next to the numbers.
 //!
 //! The same entry point backs the `micro-kernel` section of the
 //! `cargo bench` harness, so the CLI artifact and the bench table can
@@ -53,6 +55,7 @@ pub fn run(opts: &BenchOpts) -> Result<Json> {
     let ops = bench_ops(opts.quick)?;
     let end_to_end = bench_end_to_end(opts.quick)?;
     let pool_section = bench_pool(threads);
+    let transport = bench_transport(opts.quick)?;
     Ok(Json::obj(vec![
         ("schema", Json::num(1)),
         ("generated_by", Json::str("fedlama bench")),
@@ -64,6 +67,7 @@ pub fn run(opts: &BenchOpts) -> Result<Json> {
         ("ops", ops),
         ("end_to_end", end_to_end),
         ("pool", pool_section),
+        ("transport", transport),
     ]))
 }
 
@@ -236,6 +240,123 @@ fn bench_end_to_end(quick: bool) -> Result<Json> {
     ])]))
 }
 
+/// The wire `transport` section: encode/decode throughput, frame rate,
+/// and peak *owned staging* bytes for a model-sync worst case — one dense
+/// `LayerUpdate` per parameter group — on both wire paths:
+///
+///   - `monolithic`: one frame per message (the historical v1 shape;
+///     still decodable, so it is benchable from the same binary) — the
+///     whole message is copied into a frame buffer, so peak staging is
+///     the largest *message*.
+///   - `streamed`: per-layer frames with scatter-gather encode — tensor
+///     storage is borrowed, so peak staging is the framing plus the
+///     largest tensor's non-borrowed bytes.
+///
+/// Decode timing drives `MessageStream` over the produced bytes, which
+/// exercises deframe + CRC + reassembly exactly as the transports do.
+fn bench_transport(quick: bool) -> Result<Json> {
+    use crate::protocol::messages::{
+        streamed_frame_count, streamed_staging_bytes, LayerUpdate, Message, MessageStream, Payload,
+    };
+    let reps = if quick { 2 } else { 8 };
+    let mut out = Vec::new();
+    for &(model, dataset) in &[("mlp", DatasetKind::Toy), ("resnet20", DatasetKind::Cifar10)] {
+        let rt = zoo::build(model, dataset)?;
+        let params = rt.init_params(0)?;
+        let msgs: Vec<Message> = rt
+            .manifest()
+            .groups
+            .iter()
+            .enumerate()
+            .map(|(g, info)| {
+                Message::Update(LayerUpdate {
+                    k: 1,
+                    group: g,
+                    client: 0,
+                    tensors: info
+                        .params
+                        .iter()
+                        .map(|&pi| Payload::Dense(params[pi].data.clone()))
+                        .collect(),
+                })
+            })
+            .collect();
+
+        // -- monolithic: one frame per message
+        let mut mono_peak = 0usize;
+        for m in &msgs {
+            mono_peak = mono_peak.max(m.to_frame()?.len());
+        }
+        let mut sink: Vec<u8> = Vec::new();
+        let enc_ns = time_ns(reps, || {
+            sink.clear();
+            for m in &msgs {
+                m.write_to(&mut sink).unwrap();
+            }
+        });
+        let bytes = sink.len();
+        let dec_ns = time_ns(reps, || {
+            let mut ms = MessageStream::new();
+            ms.extend(&sink);
+            let mut got = 0usize;
+            while ms.poll().unwrap().is_some() {
+                got += 1;
+            }
+            assert_eq!(got, msgs.len());
+        });
+        out.push(transport_entry(model, "monolithic", msgs.len(), bytes, mono_peak, enc_ns, dec_ns));
+
+        // -- streamed: per-layer frames, zero-copy encode
+        let mut s_peak = 0usize;
+        for m in &msgs {
+            s_peak = s_peak.max(streamed_staging_bytes(m)?);
+        }
+        let frames: usize = msgs.iter().map(streamed_frame_count).sum();
+        let s_enc_ns = time_ns(reps, || {
+            sink.clear();
+            for m in &msgs {
+                m.write_streamed(&mut sink).unwrap();
+            }
+        });
+        let s_bytes = sink.len();
+        let s_dec_ns = time_ns(reps, || {
+            let mut ms = MessageStream::new();
+            ms.extend(&sink);
+            let mut got = 0usize;
+            while ms.poll().unwrap().is_some() {
+                got += 1;
+            }
+            assert_eq!(got, msgs.len());
+        });
+        out.push(transport_entry(model, "streamed", frames, s_bytes, s_peak, s_enc_ns, s_dec_ns));
+    }
+    Ok(Json::Arr(out))
+}
+
+fn transport_entry(
+    model: &str,
+    path: &str,
+    frames: usize,
+    bytes: usize,
+    peak_staging: usize,
+    enc_ns: f64,
+    dec_ns: f64,
+) -> Json {
+    // bytes / ns == GB/s; x 1000 = MB/s keeps quick-run numbers readable
+    let mb = |ns: f64| 1e3 * bytes as f64 / ns.max(1.0);
+    Json::obj(vec![
+        ("model", Json::str(model)),
+        ("path", Json::str(path)),
+        ("frames", Json::num(frames as f64)),
+        ("bytes", Json::num(bytes as f64)),
+        ("peak_staging_bytes", Json::num(peak_staging as f64)),
+        ("encode_mb_per_s", Json::num(mb(enc_ns))),
+        ("decode_mb_per_s", Json::num(mb(dec_ns))),
+        ("encode_frames_per_s", Json::num(1e9 * frames as f64 / enc_ns.max(1.0))),
+        ("decode_frames_per_s", Json::num(1e9 * frames as f64 / dec_ns.max(1.0))),
+    ])
+}
+
 fn bench_pool(threads: usize) -> Json {
     // 100 small fan-outs measure per-call dispatch overhead of the
     // persistent pool (the win over per-call thread spawning).
@@ -283,5 +404,36 @@ mod tests {
         assert!(!parsed.get("ops").unwrap().as_arr().unwrap().is_empty());
         assert!(!parsed.get("end_to_end").unwrap().as_arr().unwrap().is_empty());
         assert!(parsed.get("pool").unwrap().get("ms_per_call").is_some());
+        // transport: both models x both wire paths, and the tentpole claim —
+        // streamed peak staging is bounded by the largest layer frame, so it
+        // must undercut the monolithic peak (the largest whole message)
+        let transport = parsed.get("transport").unwrap().as_arr().unwrap();
+        assert_eq!(transport.len(), 4);
+        for model in ["mlp", "resnet20"] {
+            let peak = |path: &str| {
+                transport
+                    .iter()
+                    .find(|e| {
+                        e.get("model").unwrap().as_str() == Some(model)
+                            && e.get("path").unwrap().as_str() == Some(path)
+                    })
+                    .unwrap()
+                    .get("peak_staging_bytes")
+                    .unwrap()
+                    .as_f64()
+                    .unwrap()
+            };
+            assert!(
+                peak("streamed") < peak("monolithic"),
+                "{model}: streamed peak {} !< monolithic peak {}",
+                peak("streamed"),
+                peak("monolithic")
+            );
+        }
+        for e in transport {
+            assert!(e.get("encode_mb_per_s").unwrap().as_f64().unwrap() > 0.0);
+            assert!(e.get("decode_mb_per_s").unwrap().as_f64().unwrap() > 0.0);
+            assert!(e.get("frames").unwrap().as_f64().unwrap() >= 1.0);
+        }
     }
 }

@@ -15,6 +15,7 @@
 //! encoded size, so experiments measure the accuracy/traffic trade-off of
 //! FedLAMA x compression.
 
+use crate::runtime::simd::{self, Isa};
 use crate::util::rng::Rng;
 
 /// A lossy update compressor: returns the decoded (lossy) values in place
@@ -38,16 +39,31 @@ impl Compressor for Dense {
 
 /// QSGD-style stochastic uniform quantization to `bits` bits per value,
 /// one f32 scale per `chunk` values.
+///
+/// The two scale maps (|v|/max·levels forward, q/levels·max back) run on
+/// the `runtime::simd` ladder; only the stochastic-rounding draw stays
+/// scalar, because the RNG stream is consumed strictly in element order
+/// and that order is part of the determinism contract.  Every dispatch
+/// path is bit-identical (per-element op sequence unchanged — see
+/// `tests/simd_quant.rs`).
 pub struct Quantizer {
     pub bits: u32,
     pub chunk: usize,
     rng: Rng,
+    isa: Isa,
+    scratch: Vec<f32>,
 }
 
 impl Quantizer {
     pub fn new(bits: u32, seed: u64) -> Quantizer {
+        Quantizer::with_isa(bits, seed, simd::active_isa())
+    }
+
+    /// [`Quantizer::new`] pinned to an explicit dispatch path (oracle
+    /// tests / A-B benches).
+    pub fn with_isa(bits: u32, seed: u64, isa: Isa) -> Quantizer {
         assert!((1..=16).contains(&bits), "bits in 1..=16");
-        Quantizer { bits, chunk: 1024, rng: Rng::new(seed).fork(0xC0_DE) }
+        Quantizer { bits, chunk: 1024, rng: Rng::new(seed).fork(0xC0_DE), isa, scratch: Vec::new() }
     }
 
     /// Encoded size: bits per value + one f32 scale per chunk.
@@ -61,18 +77,25 @@ impl Quantizer {
 impl Compressor for Quantizer {
     fn compress(&mut self, data: &mut [f32]) -> usize {
         let levels = ((1u32 << self.bits) - 1) as f32;
-        for chunk in data.chunks_mut(self.chunk) {
-            let max = chunk.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        let Quantizer { chunk, rng, isa, scratch, .. } = self;
+        scratch.resize(*chunk, 0.0);
+        for chunk_vals in data.chunks_mut(*chunk) {
+            let max = chunk_vals.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
             if max == 0.0 {
-                continue;
+                continue; // no RNG draws: zero chunks are skipped on every path
             }
-            for v in chunk.iter_mut() {
-                let t = v.abs() / max * levels; // in [0, levels]
-                let lo = t.floor();
-                // stochastic rounding: unbiased estimator
-                let q = if self.rng.f32() < t - lo { lo + 1.0 } else { lo };
-                *v = v.signum() * q / levels * max;
+            // forward map |v| / max * levels (in [0, levels]), vectorized
+            let t = &mut scratch[..chunk_vals.len()];
+            simd::abs_div_mul(*isa, t, chunk_vals, max, levels);
+            // stochastic rounding: unbiased estimator.  Scalar on purpose —
+            // one rng.f32() per element, in element order.
+            for (v, &ti) in chunk_vals.iter_mut().zip(t.iter()) {
+                let lo = ti.floor();
+                let q = if rng.f32() < ti - lo { lo + 1.0 } else { lo };
+                *v = v.signum() * q;
             }
+            // scale back: (signum * q) / levels * max, vectorized
+            simd::div_mul(*isa, chunk_vals, levels, max);
         }
         self.encoded_bytes(data.len())
     }

@@ -87,8 +87,9 @@ fn print_help() {
          figure  --id 1..6 [--scale ...] [--out-dir reports]\n\
          bench   [--quick] [--threads 0] [--out BENCH_kernels.json]\n\
                  (SIMD matmul kernels vs scalar, per-op latency, e2e step,\n\
-                  persistent-pool overhead; FEDLAMA_SIMD=scalar|sse2|avx2\n\
-                  forces a narrower dispatch path)\n\
+                  persistent-pool overhead, wire transport throughput —\n\
+                  monolithic vs streamed per-layer framing;\n\
+                  FEDLAMA_SIMD=scalar|sse2|avx2 forces a narrower path)\n\
          inspect --model M [--dataset D]   (native zoo manifest when no artifacts)\n\
          list\n\
          worker  (internal: federation-protocol participant on stdin/stdout,\n\
@@ -304,6 +305,16 @@ fn run_bench(args: &Args) -> Result<()> {
             k.get("dispatch").and_then(|v| v.as_str()).unwrap_or("?"),
             k.get("gflops").and_then(|v| v.as_f64()).unwrap_or(0.0),
             k.get("speedup_vs_scalar").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        );
+    }
+    for t in doc.req("transport")?.as_arr().unwrap_or(&[]) {
+        println!(
+            "transport {:>8} {:>10}: {:>9.1} MB/s enc  {:>9.1} MB/s dec  peak staging {:>9} B",
+            t.get("model").and_then(|v| v.as_str()).unwrap_or("?"),
+            t.get("path").and_then(|v| v.as_str()).unwrap_or("?"),
+            t.get("encode_mb_per_s").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            t.get("decode_mb_per_s").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            t.get("peak_staging_bytes").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
         );
     }
     reports::write_report(std::path::Path::new(&out), &doc.to_string_pretty())?;

@@ -88,6 +88,14 @@ pub enum JoinAction {
 /// returned [`JoinAction`].  Violations (wrong message for the phase,
 /// version or shard mismatch) are errors the transport turns into a
 /// connection drop.
+///
+/// The `Hello` version gate is deliberately *exact* equality even though
+/// the frame layer accepts `MIN_WIRE_VERSION..=WIRE_VERSION`: the frame
+/// range is what lets a decoder recognize older frames at all (so the
+/// mismatch error here can be decoded and reported instead of looking
+/// like corruption), while federation itself requires same-build peers —
+/// bit-identical numerics across transports is the contract, and that is
+/// only audited per build.
 pub struct JoinHandshake {
     shard_id: usize,
     shard_len: usize,

@@ -26,6 +26,36 @@
 //! payload is the byte count the simulation ledger charges (the
 //! compressor's idealized encoded size); the wire framing itself is
 //! faithful but not maximally bit-packed, and is never what Eq. 9 reports.
+//!
+//! # Streamed per-layer framing (wire v2)
+//!
+//! The bulk messages have two wire representations.  The *monolithic*
+//! frames (`Update` kind 5, `Decision` kind 7) carry a whole message in
+//! one frame and remain fully supported — they are the v1 compatibility
+//! shim.  The *streamed* representation splits a message into a `Begin`
+//! frame (metadata + tensor count) followed by one frame per tensor
+//! (`seq` + payload), so peak encode staging and first-byte latency
+//! scale with one *layer*, not the whole update:
+//!
+//! ```text
+//!   UpdateBegin   {k, group, client, n_tensors}        kind 10
+//!   UpdateTensor  {seq, payload}      x n_tensors      kind 11
+//!   DecisionBegin {k, group, new_interval, n_tensors}  kind 12
+//!   DecisionTensor{seq, f32s}         x n_tensors      kind 13
+//! ```
+//!
+//! [`Message::write_streamed`] emits tensor frames through
+//! `wire::write_frame_gather`, borrowing tensor storage (zero-copy on
+//! little-endian) with the CRC computed incrementally.  [`Assembler`]
+//! reassembles the sequence on the receive side — [`Heartbeat`] frames
+//! pass through mid-assembly (liveness never waits on a large update),
+//! any other interleaved kind is an error — and [`MessageStream`] pairs
+//! it with `wire::StreamDecoder` for non-blocking socket receive paths.
+//! Reassembly is per-connection, so a corrupt tensor frame fails exactly
+//! one peer's stream; and because the coordinator still stages complete
+//! `LayerUpdate` rows before the commit fold, fold order stays
+//! shard-then-layer, never arrival order — streamed runs are
+//! bit-identical to monolithic ones on every transport.
 
 use anyhow::{bail, ensure, Result};
 
@@ -33,8 +63,9 @@ use crate::aggregation::Policy;
 use crate::comm::{Compressor, Quantizer, Spec, TopK};
 use crate::config::{Algorithm, EngineKind, PartitionKind, RunConfig};
 use crate::data::DatasetKind;
+use crate::runtime::simd::{self, Isa};
 
-use super::wire::{self, Dec, Enc};
+use super::wire::{self, Dec, Enc, Gather, StreamDecoder};
 
 // ---------------------------------------------------------------------------
 // Payload: one tensor on the wire
@@ -95,6 +126,13 @@ impl Payload {
     /// Decode to dense f32 values.  For lossy encodings this reconstructs
     /// bit-for-bit the values the participant-side compressor produced.
     pub fn decode(&self) -> Result<Vec<f32>> {
+        self.decode_with_isa(simd::active_isa())
+    }
+
+    /// [`Payload::decode`] with an explicit dispatch path.  Every `isa`
+    /// produces bit-identical output (oracle-tested in
+    /// `tests/simd_quant.rs`); benches and tests use this to pin a path.
+    pub fn decode_with_isa(&self, isa: Isa) -> Result<Vec<f32>> {
         match self {
             Payload::Dense(v) => Ok(v.clone()),
             Payload::QBits { bits, chunk, n, scales, levels, signs } => {
@@ -111,13 +149,23 @@ impl Payload {
                 ensure!((1..=16).contains(bits), "qbits bits {bits} out of range");
                 let denom = ((1u32 << *bits) - 1) as f32;
                 let mut out = vec![0.0f32; n];
-                for (i, o) in out.iter_mut().enumerate() {
-                    let max = scales[i / chunk];
-                    // exact mirror of Quantizer: v = sign * q / levels * max,
-                    // with negation applied last (exact in IEEE-754).
-                    let v = levels[i] as f32 / denom * max;
-                    let negative = ((signs[i / 8] >> (i % 8)) & 1) == 1;
-                    *o = if negative { -v } else { v };
+                for (ci, ochunk) in out.chunks_mut(chunk).enumerate() {
+                    let max = scales[ci];
+                    let base = ci * chunk;
+                    for (j, o) in ochunk.iter_mut().enumerate() {
+                        *o = levels[base + j] as f32;
+                    }
+                    // exact mirror of Quantizer: v = sign * q / levels * max.
+                    // q/denom*max is the same two IEEE ops per element on
+                    // every dispatch path, so results stay bit-identical...
+                    simd::div_mul(isa, ochunk, denom, max);
+                    // ...and the negation is applied last (exact in IEEE-754)
+                    for (j, o) in ochunk.iter_mut().enumerate() {
+                        let i = base + j;
+                        if ((signs[i / 8] >> (i % 8)) & 1) == 1 {
+                            *o = -*o;
+                        }
+                    }
                 }
                 Ok(out)
             }
@@ -196,6 +244,36 @@ impl Payload {
                 e.u32(*nominal);
                 e.u32s(indices)?;
                 e.f32s(values)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Scatter-gather twin of [`Payload::encode`]: identical wire bytes,
+    /// but the bulk sequences (values, scales, levels, signs, indices)
+    /// are *borrowed* into the gather instead of copied, so encoding a
+    /// tensor stages only its tags and length prefixes.
+    fn encode_gather<'a>(&'a self, g: &mut Gather<'a>) -> Result<()> {
+        match self {
+            Payload::Dense(v) => {
+                g.u8(0);
+                g.f32s(v)?;
+            }
+            Payload::QBits { bits, chunk, n, scales, levels, signs } => {
+                g.u8(1);
+                g.u8(*bits);
+                g.u32(*chunk);
+                g.u32(*n);
+                g.f32s(scales)?;
+                g.u16s(levels)?;
+                g.bytes(signs)?;
+            }
+            Payload::TopK { n, nominal, indices, values } => {
+                g.u8(2);
+                g.u32(*n);
+                g.u32(*nominal);
+                g.u32s(indices)?;
+                g.f32s(values)?;
             }
         }
         Ok(())
@@ -346,9 +424,9 @@ pub struct SyncDecision {
 /// Participant -> coordinator: the participant cannot continue (failed to
 /// build its model/shard from the wire config, local fault).  Carries the
 /// human-readable reason so `serve` can report *why* a joiner vanished
-/// instead of a bare join-window expiry.  New in kind 9; the frame layout
-/// is unchanged so the version byte stays at 1 — older builds reject the
-/// unknown kind cleanly.
+/// instead of a bare join-window expiry.  Added as kind 9 while the wire
+/// version was still 1 — the frame layout never changed, older builds
+/// reject the unknown kind cleanly.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Abort {
     pub worker_id: usize,
@@ -378,6 +456,17 @@ const KIND_DONE: u8 = 6;
 const KIND_DECISION: u8 = 7;
 const KIND_SHUTDOWN: u8 = 8;
 const KIND_ABORT: u8 = 9;
+// streamed per-layer framing (wire v2): a Begin frame announcing the
+// tensor count, then one frame per tensor carrying its 0-based sequence
+// number.  Kinds 5/7 above remain the monolithic compatibility shim.
+const KIND_UPDATE_BEGIN: u8 = 10;
+const KIND_UPDATE_TENSOR: u8 = 11;
+const KIND_DECISION_BEGIN: u8 = 12;
+const KIND_DECISION_TENSOR: u8 = 13;
+
+/// Sanity cap on per-message tensor counts (resnet20 has ~80; a corrupt
+/// count must not drive a huge allocation).
+const MAX_TENSORS: usize = 4096;
 
 impl Message {
     pub fn kind(&self) -> u8 {
@@ -501,7 +590,7 @@ impl Message {
                 let group = d.usize()?;
                 let client = d.usize()?;
                 let nt = d.u32()? as usize;
-                ensure!(nt <= 4096, "implausible tensor count {nt}");
+                ensure!(nt <= MAX_TENSORS, "implausible tensor count {nt}");
                 let tensors =
                     (0..nt).map(|_| Payload::decode_wire(&mut d)).collect::<Result<_>>()?;
                 Message::Update(LayerUpdate { k, group, client, tensors })
@@ -521,7 +610,7 @@ impl Message {
                 let group = d.usize()?;
                 let new_interval = d.usize()?;
                 let nt = d.u32()? as usize;
-                ensure!(nt <= 4096, "implausible tensor count {nt}");
+                ensure!(nt <= MAX_TENSORS, "implausible tensor count {nt}");
                 let new_params = (0..nt).map(|_| d.f32s()).collect::<Result<_>>()?;
                 Message::Decision(SyncDecision { k, group, new_interval, new_params })
             }
@@ -550,6 +639,301 @@ impl Message {
     pub fn read_from<R: std::io::Read>(r: &mut R) -> Result<Message> {
         let (kind, body) = wire::read_frame(r)?;
         Message::from_body(kind, &body)
+    }
+
+    /// Write this message in the streamed per-layer representation (no
+    /// flush).  `Update` and `Decision` go out as a `Begin` frame plus one
+    /// frame per tensor — the tensor frames through the scatter-gather
+    /// writer, so tensor storage is borrowed, never copied into a frame
+    /// buffer, and the CRC is computed incrementally as the slices are
+    /// written.  Every other kind is a single frame, identical to
+    /// [`Message::write_to`].
+    pub fn write_streamed<W: std::io::Write>(&self, w: &mut W) -> Result<()> {
+        use anyhow::Context;
+        match self {
+            Message::Update(u) => {
+                ensure!(
+                    u.tensors.len() <= MAX_TENSORS,
+                    "LayerUpdate tensor count {} exceeds cap {MAX_TENSORS}",
+                    u.tensors.len()
+                );
+                let mut e = Enc::new();
+                e.usize(u.k);
+                e.usize(u.group);
+                e.usize(u.client);
+                e.u32(u.tensors.len() as u32);
+                wire::write_frame(w, KIND_UPDATE_BEGIN, &e.buf)
+                    .context("sending UpdateBegin")?;
+                for (seq, p) in u.tensors.iter().enumerate() {
+                    let mut g = Gather::new();
+                    g.u32(seq as u32);
+                    p.encode_gather(&mut g)?;
+                    wire::write_frame_gather(w, KIND_UPDATE_TENSOR, &g)
+                        .with_context(|| format!("sending UpdateTensor {seq}"))?;
+                }
+                Ok(())
+            }
+            Message::Decision(d) => {
+                let mut scratch = Vec::new();
+                for idx in 0..decision_frame_count(d) {
+                    // encode_decision_frame writes the tensor frames
+                    // gather-style straight into `scratch`; reused across
+                    // frames, so staging stays one frame deep
+                    encode_decision_frame(d, idx, &mut scratch)?;
+                    w.write_all(&scratch).context("sending streamed SyncDecision")?;
+                }
+                Ok(())
+            }
+            other => other.write_to(w),
+        }
+    }
+
+    /// Read one *logical* message from a blocking stream, reassembling
+    /// streamed per-layer sequences.  The assembler is caller-owned so a
+    /// partial update survives across calls on the same connection —
+    /// interleaved `Heartbeat` frames return immediately without
+    /// disturbing it.
+    pub fn read_streamed<R: std::io::Read>(r: &mut R, asm: &mut Assembler) -> Result<Message> {
+        loop {
+            let (kind, body) = wire::read_frame(r)?;
+            if let Some(m) = asm.accept(kind, &body)? {
+                return Ok(m);
+            }
+        }
+    }
+}
+
+/// Frames in the streamed representation of a `SyncDecision`: one
+/// `DecisionBegin` plus one `DecisionTensor` per group tensor.
+pub fn decision_frame_count(d: &SyncDecision) -> usize {
+    1 + d.new_params.len()
+}
+
+/// Encode frame `idx` (0 = `DecisionBegin`, `i+1` = tensor `i`) of `d`'s
+/// streamed representation into `out` (cleared first).
+///
+/// Broadcast paths fan decisions out frame-at-a-time: each frame is
+/// encoded once here and written to every live peer before the next is
+/// built, so a decision broadcast stages at most one *layer* frame at a
+/// time — never the whole decision, let alone the whole model — while
+/// per-peer FIFO order is preserved.
+pub fn encode_decision_frame(d: &SyncDecision, idx: usize, out: &mut Vec<u8>) -> Result<()> {
+    out.clear();
+    if idx == 0 {
+        ensure!(
+            d.new_params.len() <= MAX_TENSORS,
+            "SyncDecision tensor count {} exceeds cap {MAX_TENSORS}",
+            d.new_params.len()
+        );
+        let mut e = Enc::new();
+        e.usize(d.k);
+        e.usize(d.group);
+        e.usize(d.new_interval);
+        e.u32(d.new_params.len() as u32);
+        wire::write_frame(out, KIND_DECISION_BEGIN, &e.buf)
+    } else {
+        let seq = idx - 1;
+        let mut g = Gather::new();
+        g.u32(seq as u32);
+        g.f32s(&d.new_params[seq])?;
+        wire::write_frame_gather(out, KIND_DECISION_TENSOR, &g)
+    }
+}
+
+/// Frames [`Message::write_streamed`] emits for `m`.
+pub fn streamed_frame_count(m: &Message) -> usize {
+    match m {
+        Message::Update(u) => 1 + u.tensors.len(),
+        Message::Decision(d) => decision_frame_count(d),
+        _ => 1,
+    }
+}
+
+/// Peak *owned staging* bytes any single frame of `m`'s streamed encoding
+/// needs: full frame size for `Begin`/non-bulk frames (they go through the
+/// copying path), but only `Gather::staging_bytes` + header + CRC for
+/// tensor frames, whose payload storage is borrowed.  This is the
+/// transport bench's streamed peak-staging metric.
+pub fn streamed_staging_bytes(m: &Message) -> Result<usize> {
+    const FRAMING: usize = wire::HEADER_LEN + 4; // header + trailing crc
+    match m {
+        Message::Update(u) => {
+            // Begin body: k + group + client (u64 each) + count (u32)
+            let mut peak = FRAMING + 8 + 8 + 8 + 4;
+            for (seq, p) in u.tensors.iter().enumerate() {
+                let mut g = Gather::new();
+                g.u32(seq as u32);
+                p.encode_gather(&mut g)?;
+                peak = peak.max(FRAMING + g.staging_bytes());
+            }
+            Ok(peak)
+        }
+        Message::Decision(d) => {
+            let mut peak = FRAMING + 8 + 8 + 8 + 4;
+            for (seq, t) in d.new_params.iter().enumerate() {
+                let mut g = Gather::new();
+                g.u32(seq as u32);
+                g.f32s(t)?;
+                peak = peak.max(FRAMING + g.staging_bytes());
+            }
+            Ok(peak)
+        }
+        other => Ok(other.to_frame()?.len()),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Streamed reassembly
+// ---------------------------------------------------------------------------
+
+/// Reassembles streamed per-layer frame sequences into whole [`Message`]s.
+///
+/// One assembler per connection: feed every decoded `(kind, body)` frame
+/// to [`Assembler::accept`], which returns `Some(message)` when a frame
+/// completes a message.  Monolithic kinds decode as themselves (the
+/// compatibility shim), `Heartbeat` passes through even mid-assembly, and
+/// protocol violations — a tensor frame without its `Begin`, an
+/// out-of-order sequence number, any other kind interleaved into an open
+/// sequence — are errors, which the transports treat like any other
+/// corrupt traffic on that connection: the peer departs, nobody else's
+/// stream is touched.
+#[derive(Default)]
+pub struct Assembler {
+    upd: Option<(LayerUpdate, usize)>,
+    dec: Option<(SyncDecision, usize)>,
+}
+
+impl Assembler {
+    pub fn new() -> Assembler {
+        Assembler::default()
+    }
+
+    /// No streamed sequence is currently open.
+    pub fn idle(&self) -> bool {
+        self.upd.is_none() && self.dec.is_none()
+    }
+
+    /// Feed one frame; returns a message when one completes.
+    pub fn accept(&mut self, kind: u8, body: &[u8]) -> Result<Option<Message>> {
+        match kind {
+            KIND_UPDATE_BEGIN => {
+                ensure!(self.idle(), "UpdateBegin while another streamed message is open");
+                let mut d = Dec::new(body);
+                let k = d.usize()?;
+                let group = d.usize()?;
+                let client = d.usize()?;
+                let nt = d.u32()? as usize;
+                ensure!(nt <= MAX_TENSORS, "implausible tensor count {nt}");
+                d.finish()?;
+                let u = LayerUpdate { k, group, client, tensors: Vec::with_capacity(nt) };
+                if nt == 0 {
+                    return Ok(Some(Message::Update(u)));
+                }
+                self.upd = Some((u, nt));
+                Ok(None)
+            }
+            KIND_UPDATE_TENSOR => {
+                let Some((u, nt)) = self.upd.as_mut() else {
+                    bail!("UpdateTensor without an open UpdateBegin")
+                };
+                let mut d = Dec::new(body);
+                let seq = d.u32()? as usize;
+                ensure!(
+                    seq == u.tensors.len(),
+                    "UpdateTensor out of order: seq {seq}, expected {}",
+                    u.tensors.len()
+                );
+                u.tensors.push(Payload::decode_wire(&mut d)?);
+                d.finish()?;
+                if u.tensors.len() == *nt {
+                    let (u, _) = self.upd.take().expect("just matched");
+                    return Ok(Some(Message::Update(u)));
+                }
+                Ok(None)
+            }
+            KIND_DECISION_BEGIN => {
+                ensure!(self.idle(), "DecisionBegin while another streamed message is open");
+                let mut d = Dec::new(body);
+                let k = d.usize()?;
+                let group = d.usize()?;
+                let new_interval = d.usize()?;
+                let nt = d.u32()? as usize;
+                ensure!(nt <= MAX_TENSORS, "implausible tensor count {nt}");
+                d.finish()?;
+                let dec = SyncDecision { k, group, new_interval, new_params: Vec::with_capacity(nt) };
+                if nt == 0 {
+                    return Ok(Some(Message::Decision(dec)));
+                }
+                self.dec = Some((dec, nt));
+                Ok(None)
+            }
+            KIND_DECISION_TENSOR => {
+                let Some((dc, nt)) = self.dec.as_mut() else {
+                    bail!("DecisionTensor without an open DecisionBegin")
+                };
+                let mut d = Dec::new(body);
+                let seq = d.u32()? as usize;
+                ensure!(
+                    seq == dc.new_params.len(),
+                    "DecisionTensor out of order: seq {seq}, expected {}",
+                    dc.new_params.len()
+                );
+                dc.new_params.push(d.f32s()?);
+                d.finish()?;
+                if dc.new_params.len() == *nt {
+                    let (dc, _) = self.dec.take().expect("just matched");
+                    return Ok(Some(Message::Decision(dc)));
+                }
+                Ok(None)
+            }
+            // liveness must never wait behind a large streamed message
+            KIND_HEARTBEAT => Ok(Some(Message::from_body(kind, body)?)),
+            _ => {
+                ensure!(
+                    self.idle(),
+                    "frame kind {kind} interleaved into an open streamed message"
+                );
+                Ok(Some(Message::from_body(kind, body)?))
+            }
+        }
+    }
+}
+
+/// [`StreamDecoder`] + [`Assembler`]: the non-blocking receive path.
+/// Socket transports feed raw read chunks via [`MessageStream::extend`]
+/// and poll whole logical messages — exactly the old `poll_message`
+/// contract, now spanning streamed per-layer sequences.
+#[derive(Default)]
+pub struct MessageStream {
+    dec: StreamDecoder,
+    asm: Assembler,
+}
+
+impl MessageStream {
+    pub fn new() -> MessageStream {
+        MessageStream::default()
+    }
+
+    /// Append freshly read bytes.
+    pub fn extend(&mut self, bytes: &[u8]) {
+        self.dec.extend(bytes);
+    }
+
+    /// Bytes buffered but not yet consumed by a decoded frame.
+    pub fn pending(&self) -> usize {
+        self.dec.pending()
+    }
+
+    /// Try to pop one complete logical message.  `Ok(None)` = need more
+    /// bytes (possibly mid-sequence); `Err` = corruption or a streamed
+    /// protocol violation on this connection.
+    pub fn poll(&mut self) -> Result<Option<Message>> {
+        while let Some((kind, body)) = self.dec.poll()? {
+            if let Some(m) = self.asm.accept(kind, &body)? {
+                return Ok(Some(m));
+            }
+        }
+        Ok(None)
     }
 }
 
@@ -796,13 +1180,133 @@ mod tests {
         assert_eq!(c.cfg.compressor, cfg.compressor);
     }
 
+    fn sample_update() -> LayerUpdate {
+        let mut lossy = randvec(300, 11);
+        let mut q = Quantizer::new(8, 5);
+        q.compress(&mut lossy);
+        LayerUpdate {
+            k: 12,
+            group: 3,
+            client: 7,
+            tensors: vec![
+                Payload::Dense(randvec(257, 1)),
+                Payload::qbits_from(&lossy, 8, q.chunk),
+                Payload::topk_from(&[0.0, 3.5, 0.0, -1.25], 16),
+            ],
+        }
+    }
+
+    #[test]
+    fn streamed_update_round_trips_through_the_assembler() {
+        let u = sample_update();
+        let mut bytes = Vec::new();
+        Message::Update(u.clone()).write_streamed(&mut bytes).unwrap();
+        let mut cur = std::io::Cursor::new(&bytes);
+        let mut asm = Assembler::new();
+        let got = Message::read_streamed(&mut cur, &mut asm).unwrap();
+        assert_eq!(got, Message::Update(u));
+        assert!(asm.idle());
+        assert_eq!(cur.position() as usize, bytes.len(), "no trailing frames");
+    }
+
+    #[test]
+    fn streamed_decision_round_trips_and_matches_frame_helpers() {
+        let d = SyncDecision {
+            k: 6,
+            group: 1,
+            new_interval: 12,
+            new_params: vec![randvec(100, 2), randvec(3, 3), Vec::new()],
+        };
+        let mut via_stream = Vec::new();
+        Message::Decision(d.clone()).write_streamed(&mut via_stream).unwrap();
+        // the broadcast helpers emit the exact same byte sequence
+        let mut via_frames = Vec::new();
+        let mut scratch = Vec::new();
+        for idx in 0..decision_frame_count(&d) {
+            encode_decision_frame(&d, idx, &mut scratch).unwrap();
+            via_frames.extend_from_slice(&scratch);
+        }
+        assert_eq!(via_stream, via_frames);
+        let mut cur = std::io::Cursor::new(&via_stream);
+        let mut asm = Assembler::new();
+        let got = Message::read_streamed(&mut cur, &mut asm).unwrap();
+        assert_eq!(got, Message::Decision(d));
+    }
+
+    #[test]
+    fn streamed_and_monolithic_decode_to_the_same_message() {
+        let u = sample_update();
+        let mut stream = MessageStream::new();
+        // monolithic kind 5 (the v1 shim), then the streamed sequence,
+        // with a heartbeat interleaved mid-assembly
+        stream.extend(&Message::Update(u.clone()).to_frame().unwrap());
+        let mut streamed = Vec::new();
+        Message::Update(u.clone()).write_streamed(&mut streamed).unwrap();
+        // splice a heartbeat between the Begin frame and the tensors
+        let (kind, body, begin_len) = wire::deframe(&streamed).unwrap();
+        assert_eq!(kind, KIND_UPDATE_BEGIN);
+        assert!(!body.is_empty());
+        stream.extend(&streamed[..begin_len]);
+        stream.extend(&Message::Heartbeat(Heartbeat { nonce: 99 }).to_frame().unwrap());
+        stream.extend(&streamed[begin_len..]);
+        assert_eq!(stream.poll().unwrap(), Some(Message::Update(u.clone())));
+        assert_eq!(
+            stream.poll().unwrap(),
+            Some(Message::Heartbeat(Heartbeat { nonce: 99 })),
+            "liveness passes through mid-assembly"
+        );
+        assert_eq!(stream.poll().unwrap(), Some(Message::Update(u)));
+        assert_eq!(stream.poll().unwrap(), None);
+    }
+
+    #[test]
+    fn assembler_rejects_protocol_violations() {
+        let u = sample_update();
+        let mut streamed = Vec::new();
+        Message::Update(u.clone()).write_streamed(&mut streamed).unwrap();
+        let (_, begin_body, begin_len) = wire::deframe(&streamed).unwrap();
+        let (_, t0_body, _) = wire::deframe(&streamed[begin_len..]).unwrap();
+
+        // tensor without its Begin
+        let mut asm = Assembler::new();
+        assert!(asm.accept(KIND_UPDATE_TENSOR, t0_body).is_err());
+
+        // Begin while a sequence is open
+        let mut asm = Assembler::new();
+        assert!(asm.accept(KIND_UPDATE_BEGIN, begin_body).unwrap().is_none());
+        assert!(asm.accept(KIND_UPDATE_BEGIN, begin_body).is_err());
+
+        // out-of-order sequence number (tensor 0 delivered twice)
+        let mut asm = Assembler::new();
+        assert!(asm.accept(KIND_UPDATE_BEGIN, begin_body).unwrap().is_none());
+        assert!(asm.accept(KIND_UPDATE_TENSOR, t0_body).unwrap().is_none());
+        let err = format!("{:#}", asm.accept(KIND_UPDATE_TENSOR, t0_body).unwrap_err());
+        assert!(err.contains("out of order"), "{err}");
+
+        // a non-heartbeat kind interleaved into an open sequence
+        let mut asm = Assembler::new();
+        assert!(asm.accept(KIND_UPDATE_BEGIN, begin_body).unwrap().is_none());
+        assert!(asm.accept(KIND_SHUTDOWN, &[]).is_err());
+    }
+
+    #[test]
+    fn streamed_staging_is_bounded_by_one_layer_not_the_message() {
+        let u = sample_update();
+        let msg = Message::Update(u);
+        let mono = msg.to_frame().unwrap().len();
+        let peak = streamed_staging_bytes(&msg).unwrap();
+        assert!(peak < mono, "streamed staging {peak} must undercut monolithic {mono}");
+        let n_frames = streamed_frame_count(&msg);
+        assert_eq!(n_frames, 4, "Begin + 3 tensors");
+    }
+
     #[test]
     fn abort_round_trips_with_reason() {
         let msg = Message::Abort(Abort {
             worker_id: 2,
             reason: "worker received invalid config: unknown model \"nope\"".into(),
         });
-        assert_eq!(msg.kind(), 9, "Abort rides the first free kind; version byte stays 1");
+        assert_eq!(msg.kind(), 9, "Abort keeps its historical kind tag");
         let frame = msg.to_frame().unwrap();
         let (decoded, used) = Message::decode(&frame).unwrap();
         assert_eq!(used, frame.len());

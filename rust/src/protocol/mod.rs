@@ -8,9 +8,14 @@
 //!
 //!   - [`messages`] — the typed message set (`RoundAssignment`,
 //!     `LayerUpdate` with dense / q-bit / top-k payloads, `SyncDecision`,
-//!     join/heartbeat/shutdown) and their wire schemas.
+//!     join/heartbeat/shutdown) and their wire schemas, including the
+//!     streamed per-layer framing (`Begin` + one frame per tensor,
+//!     reassembled by [`messages::Assembler`] / [`messages::MessageStream`])
+//!     that the bulk messages travel as since wire v2.
 //!   - [`wire`] — the versioned, length-prefixed, CRC-checked codec
-//!     (hand-rolled little-endian, no serde).
+//!     (hand-rolled little-endian, no serde), with a scatter-gather
+//!     zero-copy encode path (`Gather` / `write_frame_gather`) and an
+//!     incremental `Crc32`.
 //!   - [`core`] — [`CoordinatorCore`], the pure server state machine
 //!     (schedule, ledger, sampler, global params; zero model compute,
 //!     zero I/O).
@@ -45,8 +50,8 @@ pub use self::core::{
     BlockOutcome, CoordinatorCore, JoinAction, JoinHandshake, JoinPhase, PeerPhase, PeerSession,
 };
 pub use messages::{
-    Abort, BlockDone, Configure, Heartbeat, Hello, LayerUpdate, Message, Payload, RoundAssignment,
-    SyncDecision,
+    Abort, Assembler, BlockDone, Configure, Heartbeat, Hello, LayerUpdate, Message, MessageStream,
+    Payload, RoundAssignment, SyncDecision,
 };
 pub use participant::Participant;
 pub use process::{worker_exe, ProcessTransport};

@@ -26,7 +26,10 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::RunConfig;
 
-use super::messages::{Configure, Heartbeat, Message, RoundAssignment, SyncDecision};
+use super::messages::{
+    decision_frame_count, encode_decision_frame, Assembler, Configure, Heartbeat, Message,
+    RoundAssignment, SyncDecision,
+};
 use super::transport::{merge_losses, shard_clients, BlockResult, Transport};
 use super::wire::WIRE_VERSION;
 
@@ -53,6 +56,10 @@ struct Worker {
     child: Child,
     tx: BufWriter<ChildStdin>,
     rx: BufReader<ChildStdout>,
+    /// Reassembles the worker's streamed per-layer update frames; held
+    /// across `recv` calls so a partially received streamed message
+    /// survives interleaved heartbeats.
+    asm: Assembler,
     compute_secs: f64,
 }
 
@@ -64,7 +71,8 @@ impl Worker {
         self.tx.flush().with_context(|| format!("flushing pipe to worker {}", self.id))
     }
     fn recv(&mut self) -> Result<Message> {
-        Message::read_from(&mut self.rx).with_context(|| format!("from worker {}", self.id))
+        Message::read_streamed(&mut self.rx, &mut self.asm)
+            .with_context(|| format!("from worker {}", self.id))
     }
 }
 
@@ -89,7 +97,8 @@ impl ProcessTransport {
                 .with_context(|| format!("spawning worker {w} from {}", exe.display()))?;
             let tx = BufWriter::new(child.stdin.take().context("worker stdin")?);
             let rx = BufReader::new(child.stdout.take().context("worker stdout")?);
-            let mut worker = Worker { id: w, child, tx, rx, compute_secs: 0.0 };
+            let mut worker =
+                Worker { id: w, child, tx, rx, asm: Assembler::new(), compute_secs: 0.0 };
             let shard_len = shard.len();
             worker.send(&Message::Configure(Configure {
                 worker_id: w,
@@ -165,13 +174,21 @@ impl Transport for ProcessTransport {
     }
 
     fn broadcast_decision(&mut self, d: &SyncDecision, _active: &[usize]) -> Result<()> {
-        // serialize once, fan the bytes out — decisions carry whole dense
-        // groups, so per-worker re-encoding would be the expensive part
-        let frame = Message::Decision(d.clone()).to_frame()?;
+        // frame-at-a-time fan-out: each per-layer frame is encoded once
+        // and written to every worker before the next layer is staged, so
+        // peak staging is one layer, not the whole decision.  Pipes are
+        // FIFO per worker, so each worker still sees the frames in
+        // sequence order.
+        let mut frame = Vec::new();
+        for idx in 0..decision_frame_count(d) {
+            encode_decision_frame(d, idx, &mut frame)?;
+            for w in &mut self.workers {
+                w.tx
+                    .write_all(&frame)
+                    .with_context(|| format!("sending SyncDecision to worker {}", w.id))?;
+            }
+        }
         for w in &mut self.workers {
-            w.tx
-                .write_all(&frame)
-                .with_context(|| format!("sending SyncDecision to worker {}", w.id))?;
             w.flush()?;
         }
         Ok(())

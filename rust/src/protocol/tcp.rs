@@ -32,10 +32,15 @@
 //! Shards are assigned round-robin over client ids (client c -> shard
 //! c mod N) exactly like `--workers N`, so an N-participant TCP run is
 //! bit-identical to the N-worker stdio run — including the per-participant
-//! ledger tables.  Receive paths use [`super::wire::StreamDecoder`]: a
-//! socket read that ends mid-frame is [`super::wire::FrameStatus::Truncated`],
-//! so the bytes are kept and the read continues — never treated as a
-//! protocol error.
+//! ledger tables.  Receive paths use [`super::messages::MessageStream`]
+//! (a [`super::wire::StreamDecoder`] plus the per-layer frame
+//! [`super::messages::Assembler`]): a socket read that ends mid-frame is
+//! [`super::wire::FrameStatus::Truncated`], so the bytes are kept and the
+//! read continues — never treated as a protocol error.  Bulk downlink
+//! (`SyncDecision`) is fanned out frame-at-a-time: each per-layer frame is
+//! encoded once into a reusable buffer and written to every live peer
+//! before the next layer is staged, bounding peak staging by the largest
+//! layer instead of the whole model.
 //!
 //! **Elastic membership.**  The roster is a fixed set of N *shards*, but
 //! the connections behind them may come and go:
@@ -70,10 +75,11 @@ use crate::config::RunConfig;
 
 use super::core::{JoinAction, PeerPhase, PeerSession};
 use super::messages::{
-    Abort, BlockDone, Configure, Heartbeat, Hello, Message, RoundAssignment, SyncDecision,
+    decision_frame_count, encode_decision_frame, Abort, BlockDone, Configure, Heartbeat, Hello,
+    Message, MessageStream, RoundAssignment, SyncDecision,
 };
 use super::transport::{merge_losses_absent, shard_clients, BlockResult, Transport};
-use super::wire::{StreamDecoder, WIRE_VERSION};
+use super::wire::WIRE_VERSION;
 
 /// Timeout knobs for the coordinator side.
 #[derive(Debug, Clone)]
@@ -133,7 +139,9 @@ struct Peer {
     shard_clients: Vec<usize>,
     stream: TcpStream,
     addr: SocketAddr,
-    decoder: StreamDecoder,
+    /// Frame decoder + per-layer frame assembler: survives partial reads
+    /// *and* partially received streamed messages across pumps.
+    decoder: MessageStream,
     session: PeerSession,
     /// Outstanding liveness-ping nonce, if any.
     pending_ping: Option<u64>,
@@ -148,7 +156,7 @@ impl Peer {
             shard_clients,
             stream,
             addr,
-            decoder: StreamDecoder::new(),
+            decoder: MessageStream::new(),
             session: PeerSession::new(shard, shard_len),
             pending_ping: None,
             pings_sent: 0,
@@ -165,7 +173,7 @@ impl Peer {
     fn recv_deadline(&mut self, deadline: Instant) -> Result<Message> {
         loop {
             if let Some(m) =
-                self.decoder.poll_message().with_context(|| format!("from {}", self.describe()))?
+                self.decoder.poll().with_context(|| format!("from {}", self.describe()))?
             {
                 return Ok(m);
             }
@@ -402,7 +410,7 @@ fn pump_join_peer(
         // a partial frame stays buffered (Truncated, not an error): the
         // next pump continues where this read left off
         while let Some(msg) =
-            peer.decoder.poll_message().with_context(|| format!("from {}", peer.describe()))?
+            peer.decoder.poll().with_context(|| format!("from {}", peer.describe()))?
         {
             if let Message::Abort(a) = &msg {
                 return Ok(JoinPump::Aborted(a.reason.clone()));
@@ -451,7 +459,7 @@ fn pump_block_peer(
 ) -> Result<Option<BlockDone>> {
     loop {
         while let Some(msg) =
-            peer.decoder.poll_message().with_context(|| format!("from {}", peer.describe()))?
+            peer.decoder.poll().with_context(|| format!("from {}", peer.describe()))?
         {
             match msg {
                 Message::Update(u) => updates.push(u),
@@ -701,17 +709,28 @@ impl Transport for TcpTransport {
     }
 
     fn broadcast_decision(&mut self, d: &SyncDecision, _active: &[usize]) -> Result<()> {
-        let frame = Message::Decision(d.clone()).to_frame()?;
+        // frame-at-a-time fan-out: encode each per-layer frame once into a
+        // reusable buffer and write it to every live peer before staging
+        // the next layer — peak staging is one layer, not the whole model.
+        // Every peer still sees the frames in sequence order (the sockets
+        // are FIFO), so the byte stream per peer is unchanged.
         let deadline = deadline_after(self.opts.io_timeout);
-        for s in 0..self.n {
-            if self.slots[s].is_some() {
-                if let Err(e) =
-                    write_all_nb(self.slots[s].as_mut().unwrap(), &frame, deadline, "SyncDecision")
-                {
-                    // a peer lost here is a departure, not a run error:
-                    // the next block's quorum gate decides whether the
-                    // run can continue without it
-                    self.depart_slot(s, format!("{e:#}"));
+        let mut frame = Vec::new();
+        for idx in 0..decision_frame_count(d) {
+            encode_decision_frame(d, idx, &mut frame)?;
+            for s in 0..self.n {
+                if self.slots[s].is_some() {
+                    if let Err(e) = write_all_nb(
+                        self.slots[s].as_mut().unwrap(),
+                        &frame,
+                        deadline,
+                        "SyncDecision",
+                    ) {
+                        // a peer lost here is a departure, not a run error:
+                        // the next block's quorum gate decides whether the
+                        // run can continue without it
+                        self.depart_slot(s, format!("{e:#}"));
+                    }
                 }
             }
         }
@@ -787,22 +806,27 @@ impl Transport for TcpTransport {
         }
         // ship each Ready candidate the catch-up decision snapshot
         // (applied replica-only — it has no active clients yet), then
-        // promote it into the block loop
-        let mut frames: Vec<Vec<u8>> = Vec::with_capacity(catchup.len());
-        for d in catchup {
-            frames.push(Message::Decision(d.clone()).to_frame()?);
-        }
+        // promote it into the block loop.  Frame-at-a-time through one
+        // reusable buffer, like broadcast_decision: rejoin is rare, so
+        // re-encoding per candidate is cheap, and peak staging stays
+        // bounded by one layer even for a deep catch-up history.
         let io_deadline = deadline_after(self.opts.io_timeout);
         let mut admitted = Vec::new();
+        let mut frame = Vec::new();
         for &s in &attached {
             if self.slots[s].as_ref().map(|p| p.session.phase()) != Some(PeerPhase::Ready) {
                 continue;
             }
             let res: Result<()> = {
                 let peer = self.slots[s].as_mut().unwrap();
-                frames
+                catchup
                     .iter()
-                    .try_for_each(|f| write_all_nb(peer, f, io_deadline, "catch-up SyncDecision"))
+                    .try_for_each(|d| {
+                        (0..decision_frame_count(d)).try_for_each(|idx| {
+                            encode_decision_frame(d, idx, &mut frame)?;
+                            write_all_nb(peer, &frame, io_deadline, "catch-up SyncDecision")
+                        })
+                    })
                     .and_then(|()| peer.session.promote())
             };
             match res {

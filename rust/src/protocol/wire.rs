@@ -10,21 +10,42 @@
 //! `len` counts body bytes only; the CRC-32 (IEEE) covers the body, so a
 //! flipped bit anywhere in the payload is rejected, and a truncated stream
 //! fails the length/`read_exact` checks.  The version byte gates protocol
-//! evolution: a coordinator and a worker from different builds refuse to
-//! talk rather than mis-decode.
+//! evolution: frames carry the writer's version and the decoder accepts
+//! the whole supported range `MIN_WIRE_VERSION..=WIRE_VERSION` (the frame
+//! *layout* has never changed — bumps add kinds), while the `Hello`
+//! handshake still pins peers to exact equality so a coordinator and a
+//! worker from different builds refuse to talk rather than mis-decode.
 //!
 //! Primitives (`Enc`/`Dec`) are deliberately dumb: fixed-width LE integers,
 //! IEEE-754 bit-pattern floats (NaN losses survive the trip), and
 //! u32-length-prefixed sequences.  Everything higher-level (message
 //! schemas) lives in `protocol::messages`.
+//!
+//! Two encode paths share the layout: [`frame`]/[`write_frame`] copy an
+//! `Enc` body into one staging buffer (fine for small control messages),
+//! and [`write_frame_gather`] emits a [`Gather`] — a scatter-gather body
+//! that *borrows* bulk slices (tensor storage) and owns only the small
+//! interleaved fields — via `write_vectored`, with the CRC computed
+//! incrementally ([`Crc32`]) as the parts are walked.  Both produce
+//! byte-identical frames; gather just never materializes the body.
 
-use std::io::{Read, Write};
+use std::io::{IoSlice, Read, Write};
 use std::sync::OnceLock;
 
 use anyhow::{bail, ensure, Context, Result};
 
 /// Protocol wire version; bump on any frame or schema change.
-pub const WIRE_VERSION: u8 = 1;
+///
+/// v1 -> v2: streamed per-layer framing (`UpdateBegin`/`UpdateTensor`,
+/// `DecisionBegin`/`DecisionTensor` kinds).  The frame layout is
+/// unchanged; v1 frames (including the monolithic `Update`/`Decision`
+/// kinds, which remain decodable) are still accepted — see
+/// [`MIN_WIRE_VERSION`].
+pub const WIRE_VERSION: u8 = 2;
+
+/// Oldest frame version this build still decodes.  Kept at 1 because the
+/// v2 bump only *added* kinds: every v1 frame is also a valid v2 frame.
+pub const MIN_WIRE_VERSION: u8 = 1;
 
 /// Frame magic: distinguishes protocol traffic from stray stdout bytes.
 pub const MAGIC: [u8; 2] = [0xF7, 0x1A];
@@ -33,12 +54,18 @@ pub const MAGIC: [u8; 2] = [0xF7, 0x1A];
 /// corrupted headers before any allocation happens.
 pub const MAX_FRAME: usize = 1 << 30;
 
-const HEADER_LEN: usize = 8; // magic(2) + version(1) + kind(1) + len(4)
+/// Total frame bytes around a body: magic(2) + version(1) + kind(1) +
+/// len(4) before it, crc32(4) after.
+pub const HEADER_LEN: usize = 8;
 
-/// CRC-32 (IEEE 802.3, reflected) over `data`.
-pub fn crc32(data: &[u8]) -> u32 {
+/// Is `v` a frame version this build decodes?
+fn version_ok(v: u8) -> bool {
+    (MIN_WIRE_VERSION..=WIRE_VERSION).contains(&v)
+}
+
+fn crc_table() -> &'static [u32; 256] {
     static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
-    let table = TABLE.get_or_init(|| {
+    TABLE.get_or_init(|| {
         let mut t = [0u32; 256];
         for (i, slot) in t.iter_mut().enumerate() {
             let mut c = i as u32;
@@ -48,12 +75,42 @@ pub fn crc32(data: &[u8]) -> u32 {
             *slot = c;
         }
         t
-    });
-    let mut c = 0xFFFF_FFFFu32;
-    for &b in data {
-        c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    })
+}
+
+/// Incremental CRC-32 (IEEE 802.3, reflected): feed slices in wire order,
+/// [`Crc32::finish`] yields the same value [`crc32`] computes over their
+/// concatenation.  This is what lets the gather encoder checksum borrowed
+/// tensor slices as they are written instead of staging the body first.
+pub struct Crc32 {
+    state: u32,
+}
+
+impl Crc32 {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Crc32 {
+        Crc32 { state: 0xFFFF_FFFF }
     }
-    !c
+
+    pub fn update(&mut self, data: &[u8]) {
+        let table = crc_table();
+        let mut c = self.state;
+        for &b in data {
+            c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+        }
+        self.state = c;
+    }
+
+    pub fn finish(self) -> u32 {
+        !self.state
+    }
+}
+
+/// CRC-32 (IEEE 802.3, reflected) over `data`.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = Crc32::new();
+    c.update(data);
+    c.finish()
 }
 
 // ---------------------------------------------------------------------------
@@ -261,6 +318,245 @@ pub fn frame(kind: u8, body: &[u8]) -> Result<Vec<u8>> {
     Ok(out)
 }
 
+// ---------------------------------------------------------------------------
+// Scatter-gather encoding
+// ---------------------------------------------------------------------------
+
+enum GatherPart<'a> {
+    /// Small interleaved fields (tags, lengths, counts), staged locally.
+    Owned(Vec<u8>),
+    /// Bulk payload bytes borrowed straight from caller storage.
+    Borrowed(&'a [u8]),
+}
+
+impl GatherPart<'_> {
+    fn bytes(&self) -> &[u8] {
+        match self {
+            GatherPart::Owned(v) => v,
+            GatherPart::Borrowed(s) => s,
+        }
+    }
+}
+
+/// Scatter-gather body builder: the zero-copy sibling of [`Enc`].
+///
+/// Small fields append to an owned staging tail; the `*s` sequence
+/// methods write their u32 length prefix to the tail and then *borrow*
+/// the element storage (on little-endian targets the in-memory bytes ARE
+/// the wire bytes, so no copy happens — big-endian targets fall back to
+/// an owned byteswapped copy).  The part list preserves wire order, so a
+/// gather body is byte-identical to the `Enc` encoding of the same
+/// fields; [`write_frame_gather`] emits it without ever materializing
+/// the body, and [`Gather::staging_bytes`] reports how few bytes were
+/// actually staged (the transport bench's peak-staging metric).
+#[derive(Default)]
+pub struct Gather<'a> {
+    parts: Vec<GatherPart<'a>>,
+    total: usize,
+    owned: usize,
+}
+
+impl<'a> Gather<'a> {
+    pub fn new() -> Gather<'a> {
+        Gather::default()
+    }
+
+    /// Total body bytes across all parts.
+    pub fn len(&self) -> usize {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Bytes held in owned staging (everything except borrowed payload
+    /// slices) — the memory the encode path actually allocates.
+    pub fn staging_bytes(&self) -> usize {
+        self.owned
+    }
+
+    fn push_owned(&mut self, bytes: &[u8]) {
+        self.total += bytes.len();
+        self.owned += bytes.len();
+        if let Some(GatherPart::Owned(tail)) = self.parts.last_mut() {
+            tail.extend_from_slice(bytes);
+        } else {
+            self.parts.push(GatherPart::Owned(bytes.to_vec()));
+        }
+    }
+
+    fn push_borrowed(&mut self, bytes: &'a [u8]) {
+        if bytes.is_empty() {
+            return;
+        }
+        self.total += bytes.len();
+        self.parts.push(GatherPart::Borrowed(bytes));
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.push_owned(&[v]);
+    }
+    pub fn bool(&mut self, v: bool) {
+        self.push_owned(&[v as u8]);
+    }
+    pub fn u32(&mut self, v: u32) {
+        self.push_owned(&v.to_le_bytes());
+    }
+    pub fn u64(&mut self, v: u64) {
+        self.push_owned(&v.to_le_bytes());
+    }
+    pub fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+    pub fn f32(&mut self, v: f32) {
+        self.push_owned(&v.to_le_bytes());
+    }
+
+    /// Sequence length prefix; same u32 bound as [`Enc::seq_len`].
+    fn seq_len(&mut self, n: usize) -> Result<()> {
+        ensure!(n <= u32::MAX as usize, "sequence length {n} exceeds the u32 wire prefix");
+        self.u32(n as u32);
+        Ok(())
+    }
+
+    pub fn bytes(&mut self, b: &'a [u8]) -> Result<()> {
+        self.seq_len(b.len())?;
+        self.push_borrowed(b);
+        Ok(())
+    }
+
+    pub fn f32s(&mut self, v: &'a [f32]) -> Result<()> {
+        self.seq_len(v.len())?;
+        #[cfg(target_endian = "little")]
+        {
+            // SAFETY: f32 has no padding and alignment 4 >= 1; reinterpreting
+            // the slice as bytes is always valid, and on LE the in-memory
+            // layout equals the `to_le_bytes` wire encoding.
+            let bytes =
+                unsafe { std::slice::from_raw_parts(v.as_ptr().cast::<u8>(), v.len() * 4) };
+            self.push_borrowed(bytes);
+        }
+        #[cfg(not(target_endian = "little"))]
+        for &x in v {
+            self.push_owned(&x.to_le_bytes());
+        }
+        Ok(())
+    }
+
+    pub fn u16s(&mut self, v: &'a [u16]) -> Result<()> {
+        self.seq_len(v.len())?;
+        #[cfg(target_endian = "little")]
+        {
+            // SAFETY: as in `f32s` — no padding, byte alignment is weaker,
+            // and LE in-memory layout equals the wire encoding.
+            let bytes =
+                unsafe { std::slice::from_raw_parts(v.as_ptr().cast::<u8>(), v.len() * 2) };
+            self.push_borrowed(bytes);
+        }
+        #[cfg(not(target_endian = "little"))]
+        for &x in v {
+            self.push_owned(&x.to_le_bytes());
+        }
+        Ok(())
+    }
+
+    pub fn u32s(&mut self, v: &'a [u32]) -> Result<()> {
+        self.seq_len(v.len())?;
+        #[cfg(target_endian = "little")]
+        {
+            // SAFETY: as in `f32s`.
+            let bytes =
+                unsafe { std::slice::from_raw_parts(v.as_ptr().cast::<u8>(), v.len() * 4) };
+            self.push_borrowed(bytes);
+        }
+        #[cfg(not(target_endian = "little"))]
+        for &x in v {
+            self.push_owned(&x.to_le_bytes());
+        }
+        Ok(())
+    }
+}
+
+/// Write every byte of `slices`, in order, through `write_vectored`.
+///
+/// Handles short writes by re-slicing: `(idx, off)` track the first
+/// not-yet-flushed slice and the bytes of it already written, and the
+/// IoSlice list is rebuilt from there each iteration (manual advance —
+/// `IoSlice::advance_slices` is newer than our MSRV).  A `Write` impl
+/// that ignores vectoring (the default forwards to `write` with the
+/// first slice) still terminates: every pass writes at least one byte
+/// or errors.
+fn write_vectored_all<W: Write>(w: &mut W, slices: &[&[u8]]) -> std::io::Result<()> {
+    let mut idx = 0;
+    let mut off = 0;
+    let mut iov: Vec<IoSlice<'_>> = Vec::with_capacity(slices.len());
+    while idx < slices.len() {
+        if off == slices[idx].len() {
+            // skip empty slices (and fully flushed heads)
+            idx += 1;
+            off = 0;
+            continue;
+        }
+        iov.clear();
+        iov.push(IoSlice::new(&slices[idx][off..]));
+        for s in &slices[idx + 1..] {
+            if !s.is_empty() {
+                iov.push(IoSlice::new(s));
+            }
+        }
+        let mut n = match w.write_vectored(&iov) {
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::WriteZero,
+                    "stream accepted 0 bytes mid-frame",
+                ))
+            }
+            Ok(n) => n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        };
+        while n > 0 {
+            let rem = slices[idx].len() - off;
+            if n >= rem {
+                n -= rem;
+                idx += 1;
+                off = 0;
+            } else {
+                off += n;
+                n = 0;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Emit one frame whose body is a [`Gather`], without materializing the
+/// body: header and CRC are computed up front (the CRC incrementally,
+/// part by part), then header + borrowed/owned parts + CRC go out in one
+/// `write_vectored` pass.  Byte-identical to
+/// `write_frame(w, kind, &flattened_body)`.
+pub fn write_frame_gather<W: Write>(w: &mut W, kind: u8, g: &Gather<'_>) -> Result<()> {
+    ensure!(g.len() <= MAX_FRAME, "frame body {} bytes exceeds cap {MAX_FRAME}", g.len());
+    let mut header = [0u8; HEADER_LEN];
+    header[0..2].copy_from_slice(&MAGIC);
+    header[2] = WIRE_VERSION;
+    header[3] = kind;
+    header[4..8].copy_from_slice(&(g.len() as u32).to_le_bytes());
+    let mut crc = Crc32::new();
+    for p in &g.parts {
+        crc.update(p.bytes());
+    }
+    let crc_bytes = crc.finish().to_le_bytes();
+    let mut slices: Vec<&[u8]> = Vec::with_capacity(g.parts.len() + 2);
+    slices.push(&header);
+    for p in &g.parts {
+        slices.push(p.bytes());
+    }
+    slices.push(&crc_bytes);
+    write_vectored_all(w, &slices).context("writing protocol frame")
+}
+
 /// Outcome of decoding the head of a byte buffer.
 ///
 /// Truncation is a *variant*, not an error: a socket read can legitimately
@@ -290,8 +586,8 @@ pub fn try_deframe(buf: &[u8]) -> Result<FrameStatus<'_>> {
     }
     ensure!(buf[0..2] == MAGIC, "bad frame magic {:02x}{:02x}", buf[0], buf[1]);
     ensure!(
-        buf[2] == WIRE_VERSION,
-        "protocol version mismatch: peer speaks v{}, this build v{WIRE_VERSION}",
+        version_ok(buf[2]),
+        "protocol version mismatch: peer speaks v{}, this build accepts v{MIN_WIRE_VERSION}..=v{WIRE_VERSION}",
         buf[2]
     );
     let kind = buf[3];
@@ -315,7 +611,7 @@ pub fn try_deframe(buf: &[u8]) -> Result<FrameStatus<'_>> {
 /// staying aligned on the next frame boundary — one parser for the
 /// layout, shared with [`try_deframe`]'s constants.
 fn complete_frame_extent(buf: &[u8]) -> Option<usize> {
-    if buf.len() < HEADER_LEN || buf[0..2] != MAGIC || buf[2] != WIRE_VERSION {
+    if buf.len() < HEADER_LEN || buf[0..2] != MAGIC || !version_ok(buf[2]) {
         return None;
     }
     let len = u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize;
@@ -427,8 +723,8 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<(u8, Vec<u8>)> {
     r.read_exact(&mut header).context("reading protocol frame header")?;
     ensure!(header[0..2] == MAGIC, "bad frame magic {:02x}{:02x}", header[0], header[1]);
     ensure!(
-        header[2] == WIRE_VERSION,
-        "protocol version mismatch: peer speaks v{}, this build v{WIRE_VERSION}",
+        version_ok(header[2]),
+        "protocol version mismatch: peer speaks v{}, this build accepts v{MIN_WIRE_VERSION}..=v{WIRE_VERSION}",
         header[2]
     );
     let kind = header[3];
@@ -453,6 +749,121 @@ mod tests {
         // the classic check value for "123456789"
         assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
         assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn incremental_crc_matches_one_shot_at_every_split() {
+        let data = b"123456789 incremental crc over arbitrary splits";
+        let want = crc32(data);
+        for cut in 0..=data.len() {
+            let mut c = Crc32::new();
+            c.update(&data[..cut]);
+            c.update(&data[cut..]);
+            assert_eq!(c.finish(), want, "split at {cut}");
+        }
+        // byte-at-a-time too
+        let mut c = Crc32::new();
+        for b in data {
+            c.update(std::slice::from_ref(b));
+        }
+        assert_eq!(c.finish(), want);
+    }
+
+    #[test]
+    fn v1_frames_still_accepted() {
+        // the v2 bump only added kinds; a v1 frame (same layout, version
+        // byte 1 — not covered by the CRC) must decode on every path
+        let mut f = frame(4, b"legacy peer").unwrap();
+        f[2] = MIN_WIRE_VERSION;
+        let (kind, body, _) = deframe(&f).unwrap();
+        assert_eq!((kind, body), (4u8, b"legacy peer".as_slice()));
+        let mut cur = std::io::Cursor::new(f.clone());
+        assert_eq!(read_frame(&mut cur).unwrap(), (4, b"legacy peer".to_vec()));
+        let mut dec = StreamDecoder::new();
+        dec.extend(&f);
+        assert_eq!(dec.poll().unwrap(), Some((4u8, b"legacy peer".to_vec())));
+        // below the supported range is still a reject
+        let mut old = frame(4, b"x").unwrap();
+        old[2] = MIN_WIRE_VERSION - 1;
+        assert!(deframe(&old).is_err());
+    }
+
+    /// A hostile `Write` impl: accepts at most `max` bytes per call and
+    /// (via the default `write_vectored`) only ever sees the first
+    /// non-empty slice — the worst case for the gather writer's manual
+    /// slice advance.
+    struct TrickleWriter {
+        out: Vec<u8>,
+        max: usize,
+    }
+
+    impl Write for TrickleWriter {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            let n = buf.len().min(self.max);
+            self.out.extend_from_slice(&buf[..n]);
+            Ok(n)
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    fn sample_gather(vals: &[f32], idx: &[u32]) -> (Gather<'_>, Vec<u8>) {
+        let mut g = Gather::new();
+        g.u8(7);
+        g.bool(true);
+        g.u32(0xDEAD_BEEF);
+        g.usize(42);
+        g.f32(-0.0);
+        g.f32s(vals).unwrap();
+        g.u32s(idx).unwrap();
+        g.u16s(&[]).unwrap();
+        g.bytes(b"tail").unwrap();
+        let mut e = Enc::new();
+        e.u8(7);
+        e.bool(true);
+        e.u32(0xDEAD_BEEF);
+        e.usize(42);
+        e.f32(-0.0);
+        e.f32s(vals).unwrap();
+        e.u32s(idx).unwrap();
+        e.u16s(&[]).unwrap();
+        e.bytes(b"tail").unwrap();
+        (g, e.buf)
+    }
+
+    #[test]
+    fn gather_frame_is_byte_identical_to_enc_frame() {
+        let vals = [1.5f32, -2.25, f32::NAN, 0.0, -0.0];
+        let idx = [0u32, 9, u32::MAX];
+        let (g, body) = sample_gather(&vals, &idx);
+        assert_eq!(g.len(), body.len());
+        let want = frame(11, &body).unwrap();
+        let mut sink = Vec::new();
+        write_frame_gather(&mut sink, 11, &g).unwrap();
+        assert_eq!(sink, want, "gather and Enc paths must produce identical frames");
+        // the bulk slices were borrowed, not staged: owned bytes are just
+        // the small fields + length prefixes (and the tiny `bytes` tail)
+        assert!(
+            g.staging_bytes() < body.len(),
+            "staging {} must be below body {}",
+            g.staging_bytes(),
+            body.len()
+        );
+        assert!(g.staging_bytes() >= 1 + 1 + 4 + 8 + 4 + 4 * 4);
+    }
+
+    #[test]
+    fn gather_frame_survives_trickled_short_writes() {
+        let vals: Vec<f32> = (0..100).map(|i| i as f32 * 0.5 - 7.0).collect();
+        let idx = [3u32, 1, 4, 1, 5];
+        let (g, body) = sample_gather(&vals, &idx);
+        let want = frame(5, &body).unwrap();
+        for max in [1usize, 2, 3, 7, 64] {
+            let mut w = TrickleWriter { out: Vec::new(), max };
+            write_frame_gather(&mut w, 5, &g).unwrap();
+            assert_eq!(w.out, want, "short-write max {max}");
+        }
     }
 
     #[test]

@@ -17,7 +17,7 @@ use anyhow::{bail, Context, Result};
 use crate::config::EngineKind;
 use crate::runtime::{zoo, ComputeBackend};
 
-use super::messages::{BlockDone, Configure, Hello, Message};
+use super::messages::{Assembler, BlockDone, Configure, Hello, Message};
 use super::participant::Participant;
 use super::wire::WIRE_VERSION;
 
@@ -57,12 +57,17 @@ pub fn serve_loop_with_limit<R: Read, W: Write>(
 ) -> Result<()> {
     let mut last_active: Vec<usize> = Vec::new();
     let mut served = 0usize;
+    // held across reads: a streamed Decision's per-layer frames may be
+    // interleaved with heartbeats, and the partial must survive
+    let mut asm = Assembler::new();
     loop {
-        match Message::read_from(&mut rx)? {
+        match Message::read_streamed(&mut rx, &mut asm)? {
             Message::Assignment(a) => {
                 let (losses, updates) = p.handle_assignment(&a)?;
                 for u in updates {
-                    Message::Update(u).write_to(&mut tx)?;
+                    // streamed per-layer frames: encode borrows the tensor
+                    // payloads (zero copy) and peak staging stays one layer
+                    Message::Update(u).write_streamed(&mut tx)?;
                 }
                 Message::Done(BlockDone {
                     worker_id: p.worker_id,
@@ -154,17 +159,18 @@ mod tests {
         let mut out: Vec<u8> = Vec::new();
         run(std::io::Cursor::new(inbox), &mut out).unwrap();
 
-        // replies: Hello, Heartbeat echo, 3 Updates (group 0 x clients), Done
+        // replies: Hello, Heartbeat echo, 3 Updates (group 0 x clients,
+        // streamed as per-layer frames), Done
         let mut cur = std::io::Cursor::new(out);
-        let Message::Hello(h) = Message::read_from(&mut cur).unwrap() else { panic!("hello") };
+        let mut asm = Assembler::new();
+        let mut next = || Message::read_streamed(&mut cur, &mut asm).unwrap();
+        let Message::Hello(h) = next() else { panic!("hello") };
         assert_eq!((h.version, h.worker_id, h.shard_len), (WIRE_VERSION, 0, 3));
-        let Message::Heartbeat(hb) = Message::read_from(&mut cur).unwrap() else {
-            panic!("heartbeat")
-        };
+        let Message::Heartbeat(hb) = next() else { panic!("heartbeat") };
         assert_eq!(hb.nonce, 77);
         let mut updates = 0;
         loop {
-            match Message::read_from(&mut cur).unwrap() {
+            match next() {
                 Message::Update(u) => {
                     assert_eq!(u.k, 6);
                     assert_eq!(u.group, 0);

@@ -140,6 +140,36 @@ pub fn axpy(isa: Isa, dst: &mut [f32], a: f32, src: &[f32]) {
     }
 }
 
+/// `dst[i] = src[i].abs() / div * mul` on the given path — the
+/// quantizer's forward map.  Lanes span independent elements and the
+/// per-element op sequence (sign-bit clear, one divide, one multiply) is
+/// identical everywhere, so every path is bit-identical.
+pub fn abs_div_mul(isa: Isa, dst: &mut [f32], src: &[f32], div: f32, mul: f32) {
+    debug_assert_eq!(dst.len(), src.len());
+    match isa {
+        // SAFETY: detection-gated as in `axpy`.
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { x86::abs_div_mul_avx2(dst, src, div, mul) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Sse2 => unsafe { x86::abs_div_mul_sse2(dst, src, div, mul) },
+        _ => scalar::abs_div_mul(dst, src, div, mul),
+    }
+}
+
+/// `dst[i] = dst[i] / div * mul` in place on the given path — the
+/// (de)quantizer's scale map.  Same bit-identity argument as
+/// [`abs_div_mul`].
+pub fn div_mul(isa: Isa, dst: &mut [f32], div: f32, mul: f32) {
+    match isa {
+        // SAFETY: detection-gated as in `axpy`.
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { x86::div_mul_avx2(dst, div, mul) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Sse2 => unsafe { x86::div_mul_sse2(dst, div, mul) },
+        _ => scalar::div_mul(dst, div, mul),
+    }
+}
+
 /// Panel dot on the given path: `out[t] = Σ_j dy[j] * packed[j*w + t]`
 /// with `w = out.len() = isa.lane_width()`.  Each lane element reduces
 /// over j in increasing order (mul + add, no FMA), so lane t is bitwise

@@ -26,6 +26,26 @@ pub fn axpy(dst: &mut [f32], a: f32, src: &[f32]) {
     }
 }
 
+/// `dst[i] = src[i].abs() / div * mul` — the quantizer's forward map
+/// (|v| / chunk_max * levels).  `abs` clears the sign bit; the divide and
+/// multiply are single correctly-rounded IEEE-754 ops, so every dispatch
+/// path produces identical bits.
+pub fn abs_div_mul(dst: &mut [f32], src: &[f32], div: f32, mul: f32) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = s.abs() / div * mul;
+    }
+}
+
+/// `dst[i] = dst[i] / div * mul` in place — the (de)quantizer's scale map
+/// (level / levels * chunk_max).  Same bit-identity argument as
+/// [`abs_div_mul`].
+pub fn div_mul(dst: &mut [f32], div: f32, mul: f32) {
+    for d in dst.iter_mut() {
+        *d = *d / div * mul;
+    }
+}
+
 /// Plain dot product, accumulated in increasing index order.
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());

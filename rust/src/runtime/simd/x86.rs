@@ -61,6 +61,98 @@ pub unsafe fn axpy_sse2(dst: &mut [f32], a: f32, src: &[f32]) {
     }
 }
 
+/// `dst[i] = src[i].abs() / div * mul` — AVX2, scalar tail for `len % 8`.
+/// `abs` is a sign-bit mask; `divps`/`mulps` are correctly-rounded IEEE
+/// ops, so the result is bit-identical to `scalar::abs_div_mul`.
+///
+/// # Safety
+/// Requires AVX2 (detection-gated, as in `axpy_avx2`).
+#[target_feature(enable = "avx2")]
+pub unsafe fn abs_div_mul_avx2(dst: &mut [f32], src: &[f32], div: f32, mul: f32) {
+    debug_assert_eq!(dst.len(), src.len());
+    let n = dst.len();
+    let mask = _mm256_castsi256_ps(_mm256_set1_epi32(0x7FFF_FFFF));
+    let vd = _mm256_set1_ps(div);
+    let vm = _mm256_set1_ps(mul);
+    let mut j = 0;
+    while j + 8 <= n {
+        let s = _mm256_loadu_ps(src.as_ptr().add(j));
+        let t = _mm256_mul_ps(_mm256_div_ps(_mm256_and_ps(s, mask), vd), vm);
+        _mm256_storeu_ps(dst.as_mut_ptr().add(j), t);
+        j += 8;
+    }
+    while j < n {
+        dst[j] = src[j].abs() / div * mul;
+        j += 1;
+    }
+}
+
+/// `dst[i] = src[i].abs() / div * mul` — SSE2, scalar tail for `len % 4`.
+///
+/// # Safety
+/// Requires SSE2 (detection-gated, as in `axpy_sse2`).
+#[target_feature(enable = "sse2")]
+pub unsafe fn abs_div_mul_sse2(dst: &mut [f32], src: &[f32], div: f32, mul: f32) {
+    debug_assert_eq!(dst.len(), src.len());
+    let n = dst.len();
+    let mask = _mm_castsi128_ps(_mm_set1_epi32(0x7FFF_FFFF));
+    let vd = _mm_set1_ps(div);
+    let vm = _mm_set1_ps(mul);
+    let mut j = 0;
+    while j + 4 <= n {
+        let s = _mm_loadu_ps(src.as_ptr().add(j));
+        let t = _mm_mul_ps(_mm_div_ps(_mm_and_ps(s, mask), vd), vm);
+        _mm_storeu_ps(dst.as_mut_ptr().add(j), t);
+        j += 4;
+    }
+    while j < n {
+        dst[j] = src[j].abs() / div * mul;
+        j += 1;
+    }
+}
+
+/// `dst[i] = dst[i] / div * mul` in place — AVX2, scalar tail.
+///
+/// # Safety
+/// Requires AVX2 (detection-gated).
+#[target_feature(enable = "avx2")]
+pub unsafe fn div_mul_avx2(dst: &mut [f32], div: f32, mul: f32) {
+    let n = dst.len();
+    let vd = _mm256_set1_ps(div);
+    let vm = _mm256_set1_ps(mul);
+    let mut j = 0;
+    while j + 8 <= n {
+        let d = _mm256_loadu_ps(dst.as_ptr().add(j));
+        _mm256_storeu_ps(dst.as_mut_ptr().add(j), _mm256_mul_ps(_mm256_div_ps(d, vd), vm));
+        j += 8;
+    }
+    while j < n {
+        dst[j] = dst[j] / div * mul;
+        j += 1;
+    }
+}
+
+/// `dst[i] = dst[i] / div * mul` in place — SSE2, scalar tail.
+///
+/// # Safety
+/// Requires SSE2 (detection-gated).
+#[target_feature(enable = "sse2")]
+pub unsafe fn div_mul_sse2(dst: &mut [f32], div: f32, mul: f32) {
+    let n = dst.len();
+    let vd = _mm_set1_ps(div);
+    let vm = _mm_set1_ps(mul);
+    let mut j = 0;
+    while j + 4 <= n {
+        let d = _mm_loadu_ps(dst.as_ptr().add(j));
+        _mm_storeu_ps(dst.as_mut_ptr().add(j), _mm_mul_ps(_mm_div_ps(d, vd), vm));
+        j += 4;
+    }
+    while j < n {
+        dst[j] = dst[j] / div * mul;
+        j += 1;
+    }
+}
+
 /// 8-lane panel dot: `out[t] = Σ_j dy[j] * packed[j * 8 + t]`, each lane
 /// element accumulated in increasing j order with mul + add (no FMA) —
 /// bit-identical to `scalar::dot_panel` with `w = 8`.

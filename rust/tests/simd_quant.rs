@@ -1,0 +1,125 @@
+//! Bit-identity oracle tests for the SIMD quantize / dequantize /
+//! aggregation primitives added alongside the matmul ladder.
+//!
+//! The contract: every dispatch path (AVX2 / SSE2 / scalar) produces
+//! **bitwise identical** results for `abs_div_mul`, `div_mul`, the
+//! `Quantizer` compress pipeline (including its RNG draw order), QBits
+//! payload decode, and the aggregation weighted-sum — on every length,
+//! including remainder lanes.  Determinism of the federation across
+//! transports and `--workers N` rests on these holding exactly.
+
+use fedlama::aggregation::aggregate_native_with;
+use fedlama::comm::compression::{Compressor, Quantizer};
+use fedlama::protocol::Payload;
+use fedlama::runtime::simd::{self, Isa};
+use fedlama::util::prop::{forall, Pair, UsizeIn};
+use fedlama::util::rng::Rng;
+
+fn randvec(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.normal_f32(0.0, 1.5)).collect()
+}
+
+#[test]
+fn abs_div_mul_paths_are_bit_identical_across_remainders() {
+    for n in [0usize, 1, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 33, 100, 1023] {
+        let src = randvec(n, n as u64);
+        let mut want = vec![0.0f32; n];
+        simd::abs_div_mul(Isa::Scalar, &mut want, &src, 1.7, 255.0);
+        for isa in simd::supported_isas() {
+            let mut got = vec![-9.0f32; n]; // stale values must be overwritten
+            simd::abs_div_mul(isa, &mut got, &src, 1.7, 255.0);
+            assert_eq!(got, want, "abs_div_mul diverged on {} at n={n}", isa.name());
+        }
+    }
+}
+
+#[test]
+fn div_mul_paths_are_bit_identical_across_remainders() {
+    for n in [0usize, 1, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 33, 100, 1023] {
+        let base = randvec(n, 1000 + n as u64);
+        let mut want = base.clone();
+        simd::div_mul(Isa::Scalar, &mut want, 255.0, 0.83);
+        for isa in simd::supported_isas() {
+            let mut got = base.clone();
+            simd::div_mul(isa, &mut got, 255.0, 0.83);
+            assert_eq!(got, want, "div_mul diverged on {} at n={n}", isa.name());
+        }
+    }
+}
+
+/// The full compress pipeline is bit-identical across paths: same lossy
+/// values AND the same RNG stream consumption (same seed -> same draws on
+/// every path, with zero-max chunks drawing nothing).
+#[test]
+fn quantizer_compress_is_bit_identical_across_paths() {
+    let lens = Pair(UsizeIn { lo: 1, hi: 2600 }, UsizeIn { lo: 1, hi: 12 });
+    forall(17, 40, &lens, |&(n, bits)| {
+        let mut data = randvec(n, (n * 31 + bits) as u64);
+        // zero out a whole chunk when long enough: the skip path must
+        // consume no RNG draws on any dispatch path
+        if n > 2048 {
+            data[1024..2048].fill(0.0);
+        }
+        let mut want = data.clone();
+        let bytes_want = Quantizer::with_isa(bits as u32, 99, Isa::Scalar).compress(&mut want);
+        for isa in simd::supported_isas() {
+            let mut got = data.clone();
+            let bytes = Quantizer::with_isa(bits as u32, 99, isa).compress(&mut got);
+            if got != want || bytes != bytes_want {
+                return Err(format!(
+                    "compress diverged on {} (n={n}, bits={bits})",
+                    isa.name()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn qbits_decode_is_bit_identical_across_paths() {
+    for n in [1usize, 7, 64, 1023, 1024, 1025, 3000] {
+        let mut lossy = randvec(n, 7 + n as u64);
+        Quantizer::with_isa(8, 5, Isa::Scalar).compress(&mut lossy);
+        let p = Payload::qbits_from(&lossy, 8, 1024);
+        let want = p.decode_with_isa(Isa::Scalar).unwrap();
+        // decode reconstructs the compressor's lossy values exactly...
+        assert_eq!(want, lossy, "decode must reproduce the lossy values at n={n}");
+        // ...on every dispatch path
+        for isa in simd::supported_isas() {
+            let got = p.decode_with_isa(isa).unwrap();
+            assert_eq!(got, want, "QBits decode diverged on {} at n={n}", isa.name());
+        }
+    }
+}
+
+#[test]
+fn aggregation_weighted_sum_is_bit_identical_across_paths() {
+    let shapes = Pair(UsizeIn { lo: 1, hi: 9 }, UsizeIn { lo: 1, hi: 130 });
+    forall(23, 40, &shapes, |&(m, d)| {
+        let rows_data: Vec<Vec<f32>> =
+            (0..m).map(|i| randvec(d, (m * 1000 + d * 10 + i) as u64)).collect();
+        let rows: Vec<&[f32]> = rows_data.iter().map(|r| r.as_slice()).collect();
+        let mut rng = Rng::new((m + d) as u64);
+        let mut w: Vec<f32> = (0..m).map(|_| rng.f32()).collect();
+        if m > 2 {
+            w[1] = 0.0; // the zero-weight skip must match on every path
+        }
+        let mut u_want = vec![0.0f32; d];
+        let disc_want = aggregate_native_with(Isa::Scalar, &rows, &w, &mut u_want);
+        for isa in simd::supported_isas() {
+            let mut u = vec![7.0f32; d];
+            let disc = aggregate_native_with(isa, &rows, &w, &mut u);
+            if u != u_want {
+                return Err(format!("aggregate u diverged on {} (m={m}, d={d})", isa.name()));
+            }
+            // the f64 discrepancy pass runs on identical u, rows, weights
+            // -> identical bits
+            if disc.to_bits() != disc_want.to_bits() {
+                return Err(format!("discrepancy diverged on {} (m={m}, d={d})", isa.name()));
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,189 @@
+//! Integration tests for the streamed per-layer wire framing (wire v2).
+//!
+//! Covers the properties the transports rely on:
+//!
+//!   - round-trips survive arbitrary read chunking (`MessageStream` is a
+//!     push decoder — partial frames and partial *sequences* both buffer),
+//!   - a truncated byte stream never errors and never fabricates a
+//!     message from an incomplete per-layer sequence,
+//!   - a corrupt mid-update layer frame fails *that* peer's stream without
+//!     poisoning another peer's independently decoded stream (each
+//!     connection owns its decoder + assembler),
+//!   - heartbeats pass through an open per-layer sequence; any other kind
+//!     interleaved into one is a protocol violation.
+
+use fedlama::comm::compression::{Compressor, Quantizer};
+use fedlama::protocol::messages::streamed_frame_count;
+use fedlama::protocol::{Heartbeat, LayerUpdate, Message, MessageStream, Payload, SyncDecision};
+use fedlama::util::prop::{forall, Pair, UsizeIn};
+use fedlama::util::rng::Rng;
+
+fn randvec(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+}
+
+/// A mixed-payload update — dense + q8 + top-k tensors, so every payload
+/// encoding crosses the scatter-gather path.
+fn sample_update(seed: u64, n: usize) -> Message {
+    let dense = randvec(n, seed);
+    let mut lossy = randvec(n.max(8), seed ^ 1);
+    Quantizer::new(8, seed ^ 2).compress(&mut lossy);
+    let mut sparse = randvec(n.max(8), seed ^ 3);
+    for (i, v) in sparse.iter_mut().enumerate() {
+        if i % 3 != 0 {
+            *v = 0.0;
+        }
+    }
+    let nominal = sparse.len().div_ceil(3);
+    Message::Update(LayerUpdate {
+        k: 4,
+        group: 1,
+        client: (seed % 7) as usize,
+        tensors: vec![
+            Payload::Dense(dense),
+            Payload::qbits_from(&lossy, 8, 1024),
+            Payload::topk_from(&sparse, nominal),
+        ],
+    })
+}
+
+fn streamed_bytes(msgs: &[Message]) -> Vec<u8> {
+    let mut out = Vec::new();
+    for m in msgs {
+        m.write_streamed(&mut out).unwrap();
+    }
+    out
+}
+
+fn drain(ms: &mut MessageStream) -> Vec<Message> {
+    let mut got = Vec::new();
+    while let Some(m) = ms.poll().unwrap() {
+        got.push(m);
+    }
+    got
+}
+
+/// (offset, total length) of every frame in `buf`, from the wire layout:
+/// 8-byte header `[magic2 version kind len4]`, body, 4-byte CRC.
+fn frame_extents(buf: &[u8]) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut at = 0usize;
+    while at < buf.len() {
+        let len = u32::from_le_bytes(buf[at + 4..at + 8].try_into().unwrap()) as usize;
+        out.push((at, 8 + len + 4));
+        at += 8 + len + 4;
+    }
+    assert_eq!(at, buf.len(), "frame extents must tile the buffer exactly");
+    out
+}
+
+#[test]
+fn streamed_messages_round_trip_under_arbitrary_chunking() {
+    forall(11, 25, &Pair(UsizeIn { lo: 1, hi: 300 }, UsizeIn { lo: 1, hi: 97 }), |&(n, step)| {
+        let msgs = vec![
+            sample_update(n as u64, n),
+            Message::Decision(SyncDecision {
+                k: 4,
+                group: 1,
+                new_interval: 6,
+                // includes an empty tensor: zero-length frames must work
+                new_params: vec![randvec(n, 5), Vec::new(), randvec(7, 6)],
+            }),
+            Message::Heartbeat(Heartbeat { nonce: n as u64 }),
+        ];
+        let bytes = streamed_bytes(&msgs);
+        let mut ms = MessageStream::new();
+        let mut got = Vec::new();
+        for chunk in bytes.chunks(step) {
+            ms.extend(chunk);
+            got.extend(drain(&mut ms));
+        }
+        if got == msgs {
+            Ok(())
+        } else {
+            Err(format!("decoded {} messages, sent {}", got.len(), msgs.len()))
+        }
+    });
+}
+
+#[test]
+fn truncation_at_every_cut_never_errors_or_fabricates() {
+    let msgs = vec![sample_update(9, 64)];
+    let bytes = streamed_bytes(&msgs);
+    assert_eq!(streamed_frame_count(&msgs[0]), 4); // Begin + 3 tensors
+    for cut in 0..bytes.len() {
+        let mut ms = MessageStream::new();
+        ms.extend(&bytes[..cut]);
+        // a strict prefix is missing at least one byte of the last layer
+        // frame, so the update must not complete — and must not error
+        assert!(
+            drain(&mut ms).is_empty(),
+            "cut {cut}: produced a message from a strict prefix"
+        );
+        // the remainder completes exactly the original message
+        ms.extend(&bytes[cut..]);
+        assert_eq!(drain(&mut ms), msgs, "cut {cut}");
+    }
+}
+
+#[test]
+fn corrupt_tensor_frame_fails_one_peer_without_poisoning_another() {
+    // two shards, each with its own connection and therefore its own
+    // MessageStream: a corrupt mid-update layer frame on peer B departs B
+    // (its stream errors) while peer A's in-flight update is untouched
+    let good = sample_update(21, 128);
+    let bytes_a = streamed_bytes(std::slice::from_ref(&good));
+    let mut bytes_b = streamed_bytes(&[sample_update(22, 128)]);
+
+    let frames = frame_extents(&bytes_b);
+    assert_eq!(frames.len(), 4);
+    // flip one byte inside the *body* of the second tensor frame
+    let (start, total) = frames[2];
+    assert!(total > 8 + 6 + 4);
+    bytes_b[start + 8 + 5] ^= 0xFF;
+
+    let mut ms_a = MessageStream::new();
+    let mut ms_b = MessageStream::new();
+    // interleave the connections: half of A, all of B, the rest of A
+    let half = bytes_a.len() / 2;
+    ms_a.extend(&bytes_a[..half]);
+    assert!(drain(&mut ms_a).is_empty());
+    ms_b.extend(&bytes_b);
+    assert!(ms_b.poll().is_err(), "corrupt layer frame must error peer B");
+    ms_a.extend(&bytes_a[half..]);
+    assert_eq!(drain(&mut ms_a), vec![good], "peer A must complete unaffected");
+}
+
+#[test]
+fn heartbeat_spliced_mid_update_is_delivered_first() {
+    let upd = sample_update(31, 40);
+    let all = streamed_bytes(std::slice::from_ref(&upd));
+    let (_, len0) = frame_extents(&all)[0];
+    let hb = Message::Heartbeat(Heartbeat { nonce: 0xBEEF }).to_frame().unwrap();
+    // splice the heartbeat between the Begin frame and the first tensor
+    let mut bytes = Vec::with_capacity(all.len() + hb.len());
+    bytes.extend_from_slice(&all[..len0]);
+    bytes.extend_from_slice(&hb);
+    bytes.extend_from_slice(&all[len0..]);
+    let mut ms = MessageStream::new();
+    ms.extend(&bytes);
+    assert_eq!(
+        drain(&mut ms),
+        vec![Message::Heartbeat(Heartbeat { nonce: 0xBEEF }), upd],
+        "the heartbeat passes through; the update completes after it"
+    );
+}
+
+#[test]
+fn non_heartbeat_interleaved_into_an_open_update_is_rejected() {
+    let upd = sample_update(33, 16);
+    let all = streamed_bytes(std::slice::from_ref(&upd));
+    let (_, len0) = frame_extents(&all)[0];
+    let mut bytes = all[..len0].to_vec();
+    bytes.extend_from_slice(&Message::Shutdown.to_frame().unwrap());
+    let mut ms = MessageStream::new();
+    ms.extend(&bytes);
+    let err = ms.poll().unwrap_err();
+    assert!(format!("{err:#}").contains("interleaved"), "{err:#}");
+}

@@ -1,0 +1,82 @@
+#!/usr/bin/env python3
+"""Assert a measured `fedlama bench` artifact's transport section holds
+the streamed-framing claims.
+
+Used by the bench-smoke CI job on the `--quick` artifact.  Checks:
+
+  - the doc is measured (not the committed skeleton),
+  - the transport section covers both bench models (mlp, resnet20) on
+    both wire paths (monolithic, streamed),
+  - every throughput / size metric is a positive number,
+  - the tentpole claim: for each model, the streamed path's peak staging
+    bytes undercut the monolithic path's (peak staging is bounded by the
+    largest *layer* frame, not the largest whole message — for resnet20
+    that is the difference between one conv layer and the full model).
+"""
+
+import json
+import sys
+
+MODELS = ("mlp", "resnet20")
+PATHS = ("monolithic", "streamed")
+METRICS = (
+    "frames",
+    "bytes",
+    "peak_staging_bytes",
+    "encode_mb_per_s",
+    "decode_mb_per_s",
+    "encode_frames_per_s",
+    "decode_frames_per_s",
+)
+
+
+def fail(msg):
+    print(f"FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main():
+    if len(sys.argv) != 2:
+        fail(f"usage: {sys.argv[0]} BENCH_artifact.json")
+    with open(sys.argv[1]) as f:
+        doc = json.load(f)
+
+    if doc.get("measured") is not True:
+        fail("artifact is not measured (is this the committed skeleton?)")
+
+    entries = doc.get("transport")
+    if not isinstance(entries, list):
+        fail("no transport section in the artifact")
+
+    by_key = {}
+    for e in entries:
+        by_key[(e.get("model"), e.get("path"))] = e
+
+    for model in MODELS:
+        for path in PATHS:
+            e = by_key.get((model, path))
+            if e is None:
+                fail(f"transport entry missing for model={model} path={path}")
+            for m in METRICS:
+                v = e.get(m)
+                if not isinstance(v, (int, float)) or v <= 0:
+                    fail(f"{model}/{path}: {m} = {v!r} (want a positive number)")
+
+    for model in MODELS:
+        streamed = by_key[(model, "streamed")]["peak_staging_bytes"]
+        mono = by_key[(model, "monolithic")]["peak_staging_bytes"]
+        if not streamed < mono:
+            fail(
+                f"{model}: streamed peak staging {streamed} B is not below "
+                f"the monolithic baseline {mono} B"
+            )
+        print(
+            f"OK {model}: streamed peak staging {int(streamed)} B < "
+            f"monolithic {int(mono)} B ({mono / streamed:.1f}x smaller)"
+        )
+
+    print("transport bench assertions passed")
+
+
+if __name__ == "__main__":
+    main()
