@@ -29,11 +29,20 @@ use crate::util::json::Json;
 use crate::util::pool;
 use crate::util::rng::Rng;
 
+#[derive(Default)]
 pub struct BenchOpts {
     /// Shrink rep budgets (CI smoke).
     pub quick: bool,
     /// Worker threads for the pool section; 0 = auto.
     pub threads: usize,
+    /// Add the `scale` section: registry roster rounds at million-client
+    /// scale with spill-to-disk state and O(sampled) round memory.
+    pub scale: bool,
+    /// Roster size for `--scale`; 0 = default (1M, or 10k with --quick).
+    pub registered: usize,
+    /// Clients sampled per round for `--scale`; 0 = default (1000, or
+    /// 100 with --quick).
+    pub sampled: usize,
 }
 
 /// The bench shapes: the Dense layers of the zoo presets and the im2col
@@ -56,7 +65,7 @@ pub fn run(opts: &BenchOpts) -> Result<Json> {
     let end_to_end = bench_end_to_end(opts.quick)?;
     let pool_section = bench_pool(threads);
     let transport = bench_transport(opts.quick)?;
-    Ok(Json::obj(vec![
+    let mut doc = vec![
         ("schema", Json::num(1)),
         ("generated_by", Json::str("fedlama bench")),
         ("measured", Json::Bool(true)),
@@ -68,7 +77,11 @@ pub fn run(opts: &BenchOpts) -> Result<Json> {
         ("end_to_end", end_to_end),
         ("pool", pool_section),
         ("transport", transport),
-    ]))
+    ];
+    if opts.scale {
+        doc.push(("scale", bench_scale(opts)?));
+    }
+    Ok(Json::obj(doc))
 }
 
 /// Just the kernel section plus its dispatch metadata — the `cargo
@@ -357,6 +370,91 @@ fn transport_entry(
     ])
 }
 
+/// Peak resident set size of this process so far (VmHWM from
+/// `/proc/self/status`), in bytes.  `None` off Linux.
+fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    let kb: u64 = line.split_whitespace().nth(1)?.parse().ok()?;
+    Some(kb * 1024)
+}
+
+/// The `scale` section: the client-registry roster at coordinator scale.
+/// Registers `registered` clients behind a spill-to-disk [`FileStore`],
+/// then drives sampling rounds of `sampled` active clients each — every
+/// sampled client gets its participation and Eq.9 byte counters written
+/// through the store seam, and a slice of them spill SCAFFOLD-style
+/// control blobs.  Reports rounds/s plus the process peak RSS against an
+/// O(sampled)-shaped bound: a flat harness allowance plus a per-touched-
+/// entry budget, never a function of `registered`.  An implementation
+/// that materialized the roster would scale RSS with `registered` and
+/// blow the bound at the million-client default.
+///
+/// [`FileStore`]: crate::registry::store::FileStore
+fn bench_scale(opts: &BenchOpts) -> Result<Json> {
+    use crate::registry::sampler::RegistrySampler;
+    use crate::registry::store::FileStore;
+    use crate::registry::ClientRegistry;
+    use crate::runtime::HostTensor;
+
+    let registered = match opts.registered {
+        0 if opts.quick => 10_000,
+        0 => 1_000_000,
+        n => n,
+    };
+    let sampled = match opts.sampled {
+        0 if opts.quick => 100,
+        0 => 1_000,
+        k => k,
+    };
+    anyhow::ensure!(
+        (1..=registered).contains(&sampled),
+        "bench --scale: --sampled {sampled} outside [1, {registered}] (--registered)"
+    );
+    let rounds = if opts.quick { 25 } else { 100 };
+
+    let dir = std::env::temp_dir().join(format!("fedlama_scale_{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+    let log = dir.join("registry.log");
+    let _ = std::fs::remove_file(&log);
+    let store = FileStore::open(&log)?;
+    let mut reg = ClientRegistry::new(registered, 1, Box::new(store));
+    let mut sampler = RegistrySampler::new(registered, sampled, 1);
+    let control = vec![HostTensor { shape: vec![32], data: vec![0.5f32; 32] }];
+
+    let t0 = Instant::now();
+    for round in 0..rounds {
+        let active = sampler.sample();
+        for (slot, &id) in active.iter().enumerate() {
+            reg.note_seen(id, round, 64 + id % 512)?;
+            reg.note_bytes(id, 1_024, 4_096)?;
+            if slot % 64 == 0 {
+                reg.put_control(id, &control)?;
+            }
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64().max(1e-9);
+
+    let touched = reg.touched();
+    let spilled = reg.spilled_controls();
+    let log_bytes = std::fs::metadata(&log).map(|m| m.len()).unwrap_or(0);
+    let _ = std::fs::remove_file(&log);
+    let peak = peak_rss_bytes().unwrap_or(0);
+    let bound = (128u64 << 20) + (touched + spilled) as u64 * 512;
+    Ok(Json::obj(vec![
+        ("registered", Json::num(registered as f64)),
+        ("sampled", Json::num(sampled as f64)),
+        ("rounds", Json::num(rounds as f64)),
+        ("rounds_per_sec", Json::num(rounds as f64 / secs)),
+        ("touched_clients", Json::num(touched as f64)),
+        ("spilled_controls", Json::num(spilled as f64)),
+        ("spill_log_bytes", Json::num(log_bytes as f64)),
+        ("peak_rss_bytes", Json::num(peak as f64)),
+        ("rss_bound_bytes", Json::num(bound as f64)),
+        ("rss_within_bound", Json::Bool(peak > 0 && peak <= bound)),
+    ]))
+}
+
 fn bench_pool(threads: usize) -> Json {
     // 100 small fan-outs measure per-call dispatch overhead of the
     // persistent pool (the win over per-call thread spawning).
@@ -386,7 +484,7 @@ mod tests {
 
     #[test]
     fn quick_bench_produces_a_complete_parseable_doc() {
-        let doc = run(&BenchOpts { quick: true, threads: 2 }).unwrap();
+        let doc = run(&BenchOpts { quick: true, threads: 2, ..Default::default() }).unwrap();
         let text = doc.to_string_pretty();
         let parsed = Json::parse(&text).unwrap();
         assert_eq!(parsed.get("schema").unwrap().as_usize(), Some(1));
@@ -435,5 +533,38 @@ mod tests {
             assert!(e.get("decode_mb_per_s").unwrap().as_f64().unwrap() > 0.0);
             assert!(e.get("frames").unwrap().as_f64().unwrap() >= 1.0);
         }
+        // without --scale the section is absent — the committed artifact
+        // only grows it when explicitly requested
+        assert!(parsed.get("scale").is_none());
+    }
+
+    #[test]
+    fn scale_bench_reports_bounded_o_of_sampled_rss() {
+        let opts = BenchOpts {
+            quick: true,
+            threads: 2,
+            scale: true,
+            registered: 5_000,
+            sampled: 64,
+        };
+        let s = bench_scale(&opts).unwrap();
+        let parsed = Json::parse(&s.to_string()).unwrap();
+        assert_eq!(parsed.get("registered").unwrap().as_usize(), Some(5_000));
+        assert_eq!(parsed.get("sampled").unwrap().as_usize(), Some(64));
+        assert!(parsed.get("rounds_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        // every round touches 64 clients; across 25 rounds some repeat, so
+        // the resident set is bounded by sampled x rounds and well below
+        // the registered roster
+        let touched = parsed.get("touched_clients").unwrap().as_usize().unwrap();
+        assert!(touched >= 64 && touched <= 64 * 25, "touched={touched}");
+        assert!(parsed.get("spilled_controls").unwrap().as_usize().unwrap() >= 1);
+        assert!(parsed.get("spill_log_bytes").unwrap().as_f64().unwrap() > 0.0);
+        // on Linux VmHWM must resolve and sit inside the O(sampled) bound
+        if peak_rss_bytes().is_some() {
+            assert_eq!(parsed.get("rss_within_bound").unwrap().as_bool(), Some(true));
+        }
+        // oversampling the roster is refused loudly
+        let bad = BenchOpts { scale: true, registered: 10, sampled: 11, ..Default::default() };
+        assert!(bench_scale(&bad).is_err());
     }
 }

@@ -2,7 +2,14 @@
 //! iterations), a fresh subset of clients becomes active (paper §6,
 //! "randomly chosen 25% of the clients participate ... at every phi*tau'
 //! iterations").
+//!
+//! Since the registry subsystem landed, the draw itself is the streaming
+//! O(sampled) Fisher–Yates from `registry::sampler` — bit-identical to
+//! the eager `Rng::choose_k` it replaced (same rng draws, same indices),
+//! so every existing run reproduces exactly while the coordinator no
+//! longer materializes the roster to sample it.
 
+use crate::registry::sampler::{sample_stream, SAMPLER_STREAM};
 use crate::util::rng::Rng;
 
 #[derive(Debug, Clone)]
@@ -18,7 +25,7 @@ impl ClientSampler {
         assert!(n_clients > 0);
         assert!(active_ratio > 0.0 && active_ratio <= 1.0, "active_ratio in (0,1]");
         let n_active = ((n_clients as f64 * active_ratio).round() as usize).clamp(1, n_clients);
-        ClientSampler { n_clients, n_active, rng: Rng::new(seed).fork(0x5A_3317) }
+        ClientSampler { n_clients, n_active, rng: Rng::new(seed).fork(SAMPLER_STREAM) }
     }
 
     /// Sample the active set for the next round (sorted, distinct).
@@ -26,9 +33,19 @@ impl ClientSampler {
         if self.n_active == self.n_clients {
             return (0..self.n_clients).collect();
         }
-        let mut ids = self.rng.choose_k(self.n_clients, self.n_active);
+        let mut ids = sample_stream(&mut self.rng, self.n_clients, self.n_active);
         ids.sort_unstable();
         ids
+    }
+
+    /// Rng snapshot for checkpointing.
+    pub fn rng_state(&self) -> ([u64; 4], Option<f64>) {
+        self.rng.state()
+    }
+
+    /// Restore the rng from a checkpoint snapshot.
+    pub fn restore_rng(&mut self, s: [u64; 4], spare: Option<f64>) {
+        self.rng = Rng::from_state(s, spare);
     }
 }
 

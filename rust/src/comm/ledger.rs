@@ -6,6 +6,12 @@
 //! aggregation of layer l moves dim*4 bytes up + dim*4 bytes down per
 //! active client) and an alpha-beta latency estimate.
 
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::protocol::wire::{Dec, Enc};
+
 /// Per aggregation-unit counters.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct GroupComm {
@@ -46,11 +52,33 @@ pub struct ParticipantComm {
     pub missed_blocks: u64,
 }
 
+/// Per registered-client traffic counters, keyed by global client id.
+///
+/// Shards are a *transport* artifact: the same client folds into
+/// different `ParticipantComm` slots depending on the worker count, and
+/// a shard slot survives its occupant departing.  These counters instead
+/// follow the client itself — across sampling gaps, departures, and
+/// rejoins — which is the granularity Eq. 9 actually charges and the one
+/// the registry persists.  Only *sampled* clients ever get an entry, so
+/// the map stays O(participating), never O(registered).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ClientComm {
+    /// `LayerUpdate` messages received from this client.
+    pub updates: u64,
+    /// Nominal uplink bytes (payload encoded sizes, exact per update).
+    pub uplink_bytes: u64,
+    /// Nominal downlink bytes (dense group params per sync decision).
+    pub downlink_bytes: u64,
+}
+
 #[derive(Debug, Clone, Default)]
 pub struct CommLedger {
     pub groups: Vec<GroupComm>,
     /// Per-shard uplink/downlink counters (one entry when in-proc).
     pub participants: Vec<ParticipantComm>,
+    /// Per registered-client counters keyed by global client id; entries
+    /// appear on first participation.
+    pub clients: BTreeMap<usize, ClientComm>,
     /// Number of synchronization *rounds* (iterations at which >= 1 group
     /// synced) — the latency-bearing events.
     pub rounds: u64,
@@ -95,6 +123,9 @@ impl CommLedger {
         let s = self.shard_of(client);
         self.participants[s].updates += 1;
         self.participants[s].uplink_bytes += bytes as u64;
+        let c = self.clients.entry(client).or_default();
+        c.updates += 1;
+        c.uplink_bytes += bytes as u64;
     }
 
     /// Charge one downlink broadcast to `client`: `bytes` nominal dense
@@ -105,6 +136,7 @@ impl CommLedger {
         }
         let s = self.shard_of(client);
         self.participants[s].downlink_bytes += bytes as u64;
+        self.clients.entry(client).or_default().downlink_bytes += bytes as u64;
     }
 
     /// Charge raw per-participant bytes without counting an update message
@@ -117,6 +149,9 @@ impl CommLedger {
         let s = self.shard_of(client);
         self.participants[s].uplink_bytes += up as u64;
         self.participants[s].downlink_bytes += down as u64;
+        let c = self.clients.entry(client).or_default();
+        c.uplink_bytes += up as u64;
+        c.downlink_bytes += down as u64;
     }
 
     /// Note a mid-run departure of shard `s` (elastic membership).
@@ -197,6 +232,88 @@ impl CommLedger {
     /// Per-group sync counts: (name, dim, syncs, cost) — Figures 2 and 3.
     pub fn per_group(&self) -> Vec<(&str, usize, u64, u64)> {
         self.groups.iter().map(|g| (g.name.as_str(), g.dim, g.syncs, g.cost)).collect()
+    }
+
+    /// Serialize the full ledger for a coordinator checkpoint.
+    pub fn encode(&self, e: &mut Enc) -> Result<()> {
+        e.u32(self.groups.len() as u32);
+        for g in &self.groups {
+            e.str(&g.name)?;
+            e.usize(g.dim);
+            e.u64(g.syncs);
+            e.u64(g.cost);
+            e.u64(g.bytes);
+        }
+        e.u32(self.participants.len() as u32);
+        for p in &self.participants {
+            e.usize(p.shard);
+            e.u64(p.updates);
+            e.u64(p.uplink_bytes);
+            e.u64(p.downlink_bytes);
+            e.u64(p.departures);
+            e.u64(p.rejoins);
+            e.u64(p.missed_blocks);
+        }
+        e.u32(self.clients.len() as u32);
+        for (id, c) in &self.clients {
+            e.usize(*id);
+            e.u64(c.updates);
+            e.u64(c.uplink_bytes);
+            e.u64(c.downlink_bytes);
+        }
+        e.u64(self.rounds);
+        e.u64(self.latency_alpha_events);
+        e.u64(self.latency_beta_bytes);
+        Ok(())
+    }
+
+    /// Inverse of [`CommLedger::encode`].
+    pub fn decode(d: &mut Dec) -> Result<CommLedger> {
+        let n_groups = d.u32()? as usize;
+        let mut groups = Vec::with_capacity(n_groups);
+        for _ in 0..n_groups {
+            groups.push(GroupComm {
+                name: d.str()?,
+                dim: d.usize()?,
+                syncs: d.u64()?,
+                cost: d.u64()?,
+                bytes: d.u64()?,
+            });
+        }
+        let n_parts = d.u32()? as usize;
+        let mut participants = Vec::with_capacity(n_parts);
+        for _ in 0..n_parts {
+            participants.push(ParticipantComm {
+                shard: d.usize()?,
+                updates: d.u64()?,
+                uplink_bytes: d.u64()?,
+                downlink_bytes: d.u64()?,
+                departures: d.u64()?,
+                rejoins: d.u64()?,
+                missed_blocks: d.u64()?,
+            });
+        }
+        let n_clients = d.u32()? as usize;
+        let mut clients = BTreeMap::new();
+        for _ in 0..n_clients {
+            let id = d.usize()?;
+            clients.insert(
+                id,
+                ClientComm {
+                    updates: d.u64()?,
+                    uplink_bytes: d.u64()?,
+                    downlink_bytes: d.u64()?,
+                },
+            );
+        }
+        Ok(CommLedger {
+            groups,
+            participants,
+            clients,
+            rounds: d.u64()?,
+            latency_alpha_events: d.u64()?,
+            latency_beta_bytes: d.u64()?,
+        })
     }
 }
 
@@ -357,6 +474,61 @@ mod tests {
         assert_eq!(l.participants[0].departures, 0);
         // out-of-range shards are ignored, not a panic
         l.record_departure(9);
+    }
+
+    /// Per-client counters are keyed by the registered client id, so they
+    /// accumulate across shard remappings (worker-count changes fold the
+    /// same client into different shards; the client row must not care).
+    #[test]
+    fn per_client_counters_survive_shard_remapping() {
+        let groups = [("g".to_string(), 100)];
+        let mut l = CommLedger::with_shards(&groups, 3);
+        l.record_uplink(7, 100);
+        l.record_downlink(7, 400);
+        // simulate resuming the same run with a different shard count:
+        // carry the clients map over, as the checkpoint does
+        let mut l2 = CommLedger::with_shards(&groups, 5);
+        l2.clients = l.clients.clone();
+        l2.record_uplink(7, 100);
+        l2.record_participant_bytes(7, 8, 16);
+        let c = &l2.clients[&7];
+        assert_eq!(c.updates, 2);
+        assert_eq!(c.uplink_bytes, 208);
+        assert_eq!(c.downlink_bytes, 416);
+        // shard rows differ across the two ledgers; the client row is one
+        assert_eq!(l.shard_of(7), 1);
+        assert_eq!(l2.shard_of(7), 2);
+        // only sampled clients get entries — the map is O(participating)
+        assert_eq!(l2.clients.len(), 1);
+    }
+
+    #[test]
+    fn ledger_encode_decode_round_trips() {
+        let mut l = CommLedger::with_shards(
+            &[("conv1".to_string(), 100), ("fc".to_string(), 1000)],
+            2,
+        );
+        l.record_round();
+        l.record_sync(0, 3);
+        l.record_sync_bytes(1, 3, 1040);
+        l.record_uplink(4, 100);
+        l.record_uplink(5, 1040);
+        l.record_downlink(4, 4000);
+        l.record_participant_bytes(9, 7, 11);
+        l.record_departure(1);
+        l.record_rejoin(1);
+        l.record_missed_block(0);
+        let mut e = crate::protocol::wire::Enc::new();
+        l.encode(&mut e).unwrap();
+        let mut d = crate::protocol::wire::Dec::new(&e.buf);
+        let back = CommLedger::decode(&mut d).unwrap();
+        assert_eq!(d.remaining(), 0);
+        assert_eq!(back.groups, l.groups);
+        assert_eq!(back.participants, l.participants);
+        assert_eq!(back.clients, l.clients);
+        assert_eq!(back.rounds, l.rounds);
+        assert_eq!(back.latency_alpha_events, l.latency_alpha_events);
+        assert_eq!(back.latency_beta_bytes, l.latency_beta_bytes);
     }
 
     #[test]

@@ -5,4 +5,4 @@ pub mod compression;
 pub mod ledger;
 
 pub use compression::{parse as parse_compressor, Compressor, Dense, Quantizer, Spec, TopK};
-pub use ledger::{CommLedger, GroupComm, ParticipantComm};
+pub use ledger::{ClientComm, CommLedger, GroupComm, ParticipantComm};

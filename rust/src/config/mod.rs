@@ -137,6 +137,23 @@ pub struct RunConfig {
     /// schedule — the paper's stated future work (§2, §7).
     pub compressor: String,
     pub verbose: bool,
+    /// Snapshot coordinator state into this directory at every round
+    /// boundary (`registry::checkpoint` format).  `None` disables
+    /// checkpointing.  Sgd/Prox only: the other baselines keep cross-round
+    /// client state the snapshot does not capture.
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Restart from the checkpoint in `checkpoint_dir` instead of round 0.
+    pub resume: bool,
+    /// Internal: blocks already completed before this (resumed) run
+    /// started.  Set by the coordinator when restoring a checkpoint and
+    /// shipped to participants in the `Configure` frame so they fast-
+    /// forward their client rng streams; 0 for a fresh run.  Not a CLI
+    /// flag.
+    pub resume_blocks: usize,
+    /// Internal testing knob: halt the run after this many completed
+    /// rounds (0 = run to the configured end).  Used by checkpoint/resume
+    /// tests to simulate an interruption at a round boundary.
+    pub halt_after_rounds: usize,
 }
 
 impl RunConfig {
@@ -147,6 +164,26 @@ impl RunConfig {
         anyhow::ensure!(
             self.active_ratio > 0.0 && self.active_ratio <= 1.0,
             "active_ratio in (0,1]"
+        );
+        // The sampled-per-round count the sampler will derive.  Reject a
+        // degenerate draw *here*, loudly, instead of letting the sampler
+        // clamp it mid-run: k == 0 means the ratio rounds to no clients at
+        // this roster size, and k > roster can only come from a float edge
+        // case — both are config mistakes the user should see.
+        let k = (self.n_clients as f64 * self.active_ratio).round() as usize;
+        anyhow::ensure!(
+            k >= 1,
+            "active_ratio {} samples zero of {} registered clients per round — raise the \
+             ratio (>= {:.6}) or shrink the roster",
+            self.active_ratio,
+            self.n_clients,
+            0.5 / self.n_clients.max(1) as f64
+        );
+        anyhow::ensure!(
+            k <= self.n_clients,
+            "active_ratio {} samples {k} clients, more than the registered roster of {}",
+            self.active_ratio,
+            self.n_clients
         );
         anyhow::ensure!(self.samples > 0, "samples must be > 0");
         if matches!(self.algorithm, Algorithm::Scaffold | Algorithm::Nova) {
@@ -186,6 +223,18 @@ impl RunConfig {
         if self.workers > 0 {
             self.validate_sharded("--workers")?;
         }
+        if self.checkpoint_dir.is_some() || self.resume_blocks > 0 {
+            anyhow::ensure!(
+                matches!(self.algorithm, Algorithm::Sgd | Algorithm::Prox { .. }),
+                "--checkpoint-dir requires sgd or fedprox: {} keeps cross-round client \
+                 state the round-boundary snapshot does not capture",
+                self.algorithm.name()
+            );
+        }
+        anyhow::ensure!(
+            !self.resume || self.checkpoint_dir.is_some(),
+            "--resume needs --checkpoint-dir to know where the snapshot lives"
+        );
         if self.quorum > 0 {
             anyhow::ensure!(
                 self.workers > 0,
@@ -282,6 +331,10 @@ impl Default for RunConfig {
             hetero_local_steps: false,
             compressor: "dense".to_string(),
             verbose: false,
+            checkpoint_dir: None,
+            resume: false,
+            resume_blocks: 0,
+            halt_after_rounds: 0,
         }
     }
 }
@@ -451,6 +504,47 @@ mod tests {
             model: "anything".into(),
             ..Default::default()
         };
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn degenerate_sampling_errors_at_config_time() {
+        // 1000 clients at 0.0004 rounds to k = 0: must fail loudly here,
+        // not clamp silently inside the sampler mid-run
+        let cfg = RunConfig { n_clients: 1000, active_ratio: 0.0004, ..Default::default() };
+        let err = cfg.validate().unwrap_err();
+        assert!(format!("{err:#}").contains("zero of 1000 registered"), "{err:#}");
+        // the smallest ratio that rounds to 1 is fine
+        let cfg = RunConfig { n_clients: 1000, active_ratio: 0.001, ..Default::default() };
+        cfg.validate().unwrap();
+        // ratio > 1 is already rejected by the range check
+        let cfg = RunConfig { n_clients: 10, active_ratio: 1.5, ..Default::default() };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn checkpoint_flags_validate() {
+        let dir = Some(PathBuf::from("/tmp/ckpt"));
+        let cfg = RunConfig { checkpoint_dir: dir.clone(), ..Default::default() };
+        cfg.validate().unwrap();
+        let cfg = RunConfig {
+            checkpoint_dir: dir.clone(),
+            algorithm: Algorithm::Prox { mu: 0.01 },
+            ..Default::default()
+        };
+        cfg.validate().unwrap();
+        // server-side-state baselines cannot checkpoint at round boundaries
+        let cfg = RunConfig {
+            checkpoint_dir: dir.clone(),
+            algorithm: Algorithm::Scaffold,
+            ..Default::default()
+        };
+        let err = cfg.validate().unwrap_err();
+        assert!(format!("{err:#}").contains("checkpoint-dir"), "{err:#}");
+        // resume without a checkpoint dir has nowhere to read from
+        let cfg = RunConfig { resume: true, ..Default::default() };
+        assert!(cfg.validate().is_err());
+        let cfg = RunConfig { resume: true, checkpoint_dir: dir, ..Default::default() };
         cfg.validate().unwrap();
     }
 

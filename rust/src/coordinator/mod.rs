@@ -68,8 +68,15 @@ impl Coordinator {
         Self::with_backend(cfg, backend)
     }
 
-    /// Build a coordinator around an explicit compute backend.
-    pub fn with_backend(cfg: RunConfig, backend: Box<dyn ComputeBackend>) -> Result<Coordinator> {
+    /// Build a coordinator around an explicit compute backend.  With
+    /// `cfg.resume` this restores the round-boundary checkpoint from
+    /// `cfg.checkpoint_dir` before any participant is built, so the whole
+    /// stack (core counters, sampler rng, participant client rngs) starts
+    /// from the snapshot.
+    pub fn with_backend(
+        mut cfg: RunConfig,
+        backend: Box<dyn ComputeBackend>,
+    ) -> Result<Coordinator> {
         cfg.validate()?;
         let backend: Arc<dyn ComputeBackend> = Arc::from(backend);
         {
@@ -90,7 +97,18 @@ impl Coordinator {
             );
         }
         let global = backend.init_params(cfg.seed as u32)?;
-        let core = CoordinatorCore::new(&cfg, backend.manifest().groups.clone(), global.clone());
+        let mut core =
+            CoordinatorCore::new(&cfg, backend.manifest().groups.clone(), global.clone());
+        if cfg.resume {
+            let dir = cfg.checkpoint_dir.clone().context("--resume requires --checkpoint-dir")?;
+            let body = crate::registry::checkpoint::read(&dir)
+                .with_context(|| format!("--resume: reading checkpoint in {}", dir.display()))?;
+            core.restore_checkpoint(&body)?;
+            // participants (in-proc below, workers via the Configure frame,
+            // TCP joiners via run_serve) fast-forward past exactly the
+            // committed blocks
+            cfg.resume_blocks = core.completed_blocks();
+        }
         let participant = if cfg.workers == 0 {
             // share the core's init/partition instead of re-deriving them
             Some(Participant::with_state(
@@ -299,6 +317,16 @@ fn drive(
     let round_len = cfg.policy.round_len();
     let tag = cfg.tag();
     let mut stats = DriveStats { train_samples: 0, round_wall_secs: Vec::new() };
+    if cfg.resume_blocks > 0 {
+        // resumed run: every participant was rebuilt from init params and
+        // fast-forwarded its rng streams, but its global replica predates
+        // the checkpoint — refresh it replica-only (no active clients)
+        // before the first block, exactly like a rejoining peer catches up
+        for d in core.catchup_decisions() {
+            transport.broadcast_decision(&d, &[])?;
+        }
+    }
+    let mut rounds_done = 0usize;
     let mut round_t0 = Instant::now();
     while let Some(assignment) = core.begin_block() {
         // elastic membership: round boundaries are the only admission
@@ -328,7 +356,7 @@ fn drive(
             // participant (validation keeps it off multi-process runs).
             let p = transport.in_proc().context("fednova requires the in-proc transport")?;
             let new_global = p.nova_aggregate(&assignment.active)?;
-            core.adopt_full_model(new_global);
+            core.adopt_full_model(new_global)?;
         } else {
             if cfg.algorithm == Algorithm::Scaffold && boundary {
                 // control update must read pre-aggregation client params
@@ -377,6 +405,12 @@ fn drive(
             stats.round_wall_secs.push(round_t0.elapsed().as_secs_f64());
             let evaled = if eval_due { Some(eval(&core.global)?) } else { None };
             core.complete_round(assignment.k, train_loss, evaled);
+            if let Some(dir) = &cfg.checkpoint_dir {
+                let body = core.encode_checkpoint()?;
+                crate::registry::checkpoint::write_atomic(dir, &body)
+                    .with_context(|| format!("writing checkpoint to {}", dir.display()))?;
+            }
+            rounds_done += 1;
             if cfg.verbose {
                 let acc = evaled
                     .map(|(a, _)| format!(" acc={:.2}%", 100.0 * a))
@@ -388,6 +422,11 @@ fn drive(
                 );
             }
             round_t0 = Instant::now();
+            // testing knob for checkpoint/resume: stop after N rounds
+            // completed *in this process*, as an interrupted run would
+            if cfg.halt_after_rounds > 0 && rounds_done >= cfg.halt_after_rounds {
+                break;
+            }
         }
     }
     Ok(stats)

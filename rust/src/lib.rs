@@ -21,6 +21,7 @@ pub mod coordinator;
 pub mod data;
 pub mod metrics;
 pub mod protocol;
+pub mod registry;
 pub mod runtime;
 pub mod util;
 

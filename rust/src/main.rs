@@ -70,6 +70,11 @@ fn print_help() {
                  [--engine native|pjrt] [--threads 1 (0=auto)] [--workers 0]\n\
                  [--backend auto|native|xla] [--no-chunk] [--seed 1]\n\
                  [--out run.json] [--curve curve.csv] [--verbose]\n\
+                 [--checkpoint-dir D (snapshot state at each round boundary;\n\
+                  sgd/fedprox only)] [--resume (restart from D's snapshot;\n\
+                  metrics bit-identical to the uninterrupted run)]\n\
+                 [--halt-after-rounds R (stop early after R completed rounds;\n\
+                  pairs with --checkpoint-dir to stage an interrupted run)]\n\
          serve   --bind HOST:PORT --expect N + every train flag\n\
                  [--quorum Q (default N: strict full roster)]\n\
                  [--join-timeout 120] [--io-timeout 600] [--heartbeat-secs 2]\n\
@@ -86,9 +91,13 @@ fn print_help() {
                  [--repeats 1] [--out-dir reports] [--verbose]\n\
          figure  --id 1..6 [--scale ...] [--out-dir reports]\n\
          bench   [--quick] [--threads 0] [--out BENCH_kernels.json]\n\
+                 [--scale [--registered 1000000] [--sampled 1000]]\n\
                  (SIMD matmul kernels vs scalar, per-op latency, e2e step,\n\
                   persistent-pool overhead, wire transport throughput —\n\
                   monolithic vs streamed per-layer framing;\n\
+                  --scale adds the registry roster bench: N registered\n\
+                  clients with spill-to-disk state, k sampled per round in\n\
+                  O(k) memory, reporting rounds/s + coordinator peak RSS;\n\
                   FEDLAMA_SIMD=scalar|sse2|avx2 forces a narrower path)\n\
          inspect --model M [--dataset D]   (native zoo manifest when no artifacts)\n\
          list\n\
@@ -149,6 +158,10 @@ fn cfg_from_args(args: &Args) -> Result<RunConfig> {
         hetero_local_steps: args.bool_or("hetero", false),
         compressor: args.str_or("compress", "dense"),
         verbose: args.bool_or("verbose", false),
+        checkpoint_dir: args.get("checkpoint-dir").map(PathBuf::from),
+        resume: args.bool_or("resume", false),
+        resume_blocks: 0,
+        halt_after_rounds: args.usize_or("halt-after-rounds", 0),
     })
 }
 
@@ -289,6 +302,9 @@ fn run_bench(args: &Args) -> Result<()> {
     let opts = fedlama::bench::BenchOpts {
         quick: args.bool_or("quick", false),
         threads: args.usize_or("threads", 0),
+        scale: args.has("scale"),
+        registered: args.usize_or("registered", 0),
+        sampled: args.usize_or("sampled", 0),
     };
     let out = args.str_or("out", "BENCH_kernels.json");
     eprintln!(
@@ -315,6 +331,19 @@ fn run_bench(args: &Args) -> Result<()> {
             t.get("encode_mb_per_s").and_then(|v| v.as_f64()).unwrap_or(0.0),
             t.get("decode_mb_per_s").and_then(|v| v.as_f64()).unwrap_or(0.0),
             t.get("peak_staging_bytes").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
+        );
+    }
+    if let Some(s) = doc.get("scale") {
+        println!(
+            "scale: {} registered / {} sampled x {} rounds: {:>7.1} rounds/s, \
+             peak RSS {:.1} MiB (bound {:.1} MiB), spill log {} B",
+            s.get("registered").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
+            s.get("sampled").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
+            s.get("rounds").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
+            s.get("rounds_per_sec").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            s.get("peak_rss_bytes").and_then(|v| v.as_f64()).unwrap_or(0.0) / (1024.0 * 1024.0),
+            s.get("rss_bound_bytes").and_then(|v| v.as_f64()).unwrap_or(0.0) / (1024.0 * 1024.0),
+            s.get("spill_log_bytes").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
         );
     }
     reports::write_report(std::path::Path::new(&out), &doc.to_string_pretty())?;

@@ -3,7 +3,7 @@
 
 pub mod tables;
 
-use crate::comm::{CommLedger, ParticipantComm};
+use crate::comm::{ClientComm, CommLedger, ParticipantComm};
 use crate::util::json::Json;
 
 /// One point on the learning curve (recorded at round boundaries).
@@ -37,6 +37,10 @@ pub struct RunMetrics {
     /// across transports with the same shard count (in-proc runs have one
     /// shard, so compare it only between runs sharing a worker count).
     pub per_participant: Vec<ParticipantComm>,
+    /// Per registered-client counters keyed by global client id — the
+    /// shard-independent view (one row per client that ever participated;
+    /// survives sampling gaps and worker-count changes across a resume).
+    pub per_client: Vec<(usize, ClientComm)>,
     /// Coordinator overhead: wall time not spent inside PJRT executables.
     pub runtime_secs: f64,
     /// Local-training examples *assigned* (block steps x batch size,
@@ -73,6 +77,7 @@ impl RunMetrics {
             .map(|(n, d, s, c)| (n.to_string(), d, s, c))
             .collect();
         self.per_participant = ledger.participants.clone();
+        self.per_client = ledger.clients.iter().map(|(id, c)| (*id, c.clone())).collect();
     }
 
     /// Paper-style "Comm. cost" percentage vs a baseline run.
@@ -145,6 +150,17 @@ impl RunMetrics {
                 })),
             ),
             (
+                "per_client",
+                Json::arr(self.per_client.iter().map(|(id, c)| {
+                    Json::obj(vec![
+                        ("client", Json::num(*id as f64)),
+                        ("updates", Json::num(c.updates as f64)),
+                        ("uplink_bytes", Json::num(c.uplink_bytes as f64)),
+                        ("downlink_bytes", Json::num(c.downlink_bytes as f64)),
+                    ])
+                })),
+            ),
+            (
                 "curve",
                 Json::arr(self.curve.iter().map(|p| {
                     Json::obj(vec![
@@ -203,6 +219,10 @@ mod tests {
                 ..Default::default()
             })
             .collect();
+        m.per_client = vec![
+            (3, ClientComm { updates: 5, uplink_bytes: 100, downlink_bytes: 200 }),
+            (9, ClientComm { updates: 2, uplink_bytes: 40, downlink_bytes: 80 }),
+        ];
         let csv = m.curve_csv();
         assert!(csv.contains("24,1,2.300000,0.4100,2.1000,1234"));
         assert!(csv.lines().count() == 3);
@@ -215,6 +235,11 @@ mod tests {
         assert_eq!(pp[1].get("shard").unwrap().as_usize(), Some(1));
         assert_eq!(pp[1].get("uplink_bytes").unwrap().as_usize(), Some(4096));
         assert_eq!(pp[1].get("downlink_bytes").unwrap().as_usize(), Some(2048));
+        let pc = parsed.get("per_client").unwrap().as_arr().unwrap();
+        assert_eq!(pc.len(), 2);
+        assert_eq!(pc[0].get("client").unwrap().as_usize(), Some(3));
+        assert_eq!(pc[0].get("updates").unwrap().as_usize(), Some(5));
+        assert_eq!(pc[1].get("downlink_bytes").unwrap().as_usize(), Some(80));
     }
 
     #[test]

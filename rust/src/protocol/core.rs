@@ -28,10 +28,11 @@ use crate::comm::CommLedger;
 use crate::config::{Algorithm, RunConfig};
 use crate::data::{partition_for, Partition};
 use crate::metrics::{CurvePoint, RunMetrics};
+use crate::registry::ClientRegistry;
 use crate::runtime::{GroupInfo, HostTensor};
 
-use super::messages::{LayerUpdate, Message, RoundAssignment, SyncDecision};
-use super::wire::WIRE_VERSION;
+use super::messages::{cfg_wire_bytes, LayerUpdate, Message, RoundAssignment, SyncDecision};
+use super::wire::{Dec, Enc, WIRE_VERSION};
 
 /// Optional fused-aggregation hook: (stacked rows [m, dim], weights, dim)
 /// -> (u, discrepancy).  The driver wires this to the backend's Pallas
@@ -265,6 +266,9 @@ pub struct CoordinatorCore {
     pub ledger: CommLedger,
     pub sampler: ClientSampler,
     pub partition: Partition,
+    /// The persistent client roster: per-client participation and byte
+    /// state behind the registry store seam (in-memory by default).
+    pub registry: ClientRegistry,
     /// The authoritative global model.
     pub global: Vec<HostTensor>,
     /// Learning-curve points recorded at round boundaries.
@@ -301,6 +305,7 @@ impl CoordinatorCore {
             ledger: CommLedger::with_shards(&names, cfg.workers.max(1)),
             sampler: ClientSampler::new(cfg.n_clients, cfg.active_ratio, cfg.seed),
             partition: partition_for(cfg),
+            registry: ClientRegistry::in_memory(cfg.n_clients, cfg.seed),
             global,
             curve: Vec::new(),
             groups,
@@ -446,6 +451,10 @@ impl CoordinatorCore {
             self.partition.active_weights(&survivors)
         };
         self.ledger.record_round();
+        // roster accounting accumulators (registry writes go through the
+        // store seam once per survivor, after the group loop)
+        let mut reg_uplink = vec![0u64; m];
+        let mut reg_downlink = 0u64;
         let mut decisions = Vec::with_capacity(a.due_groups.len());
         for &g in &a.due_groups {
             let group = &self.groups[g];
@@ -485,9 +494,10 @@ impl CoordinatorCore {
             // one pass: per-update nominal size feeds both the group total
             // and the per-participant fold
             let mut uplink_total = 0usize;
-            for u in &per_client {
+            for (slot, u) in per_client.iter().enumerate() {
                 let nominal: usize = u.tensors.iter().map(|p| p.nominal_bytes()).sum();
                 uplink_total += nominal;
+                reg_uplink[slot] += nominal as u64;
                 self.ledger.record_uplink(u.client, nominal);
             }
 
@@ -502,6 +512,7 @@ impl CoordinatorCore {
             self.ledger.record_sync_bytes(g, m, uplink_total / m.max(1));
             // dense group params broadcast to every surviving client
             let dense_down = self.groups[g].dim * 4;
+            reg_downlink += dense_down as u64;
             for &c in &survivors {
                 self.ledger.record_downlink(c, dense_down);
             }
@@ -512,6 +523,13 @@ impl CoordinatorCore {
                 new_interval: self.schedule.intervals[g],
                 new_params: group.params.iter().map(|&t| self.global[t].data.clone()).collect(),
             });
+        }
+        // registry touch: once per surviving client per committed block,
+        // so the resident roster stays O(participating)
+        for (slot, &c) in survivors.iter().enumerate() {
+            let data_size = self.partition.clients[c].total;
+            self.registry.note_seen(c, a.round, data_size)?;
+            self.registry.note_bytes(c, reg_uplink[slot], reg_downlink)?;
         }
         Ok(decisions)
     }
@@ -589,16 +607,25 @@ impl CoordinatorCore {
 
     /// FedNova: adopt a participant-computed full-model sync and charge
     /// the ledger for a whole-model aggregation (every group).
-    pub fn adopt_full_model(&mut self, new_global: Vec<HostTensor>) {
+    pub fn adopt_full_model(&mut self, new_global: Vec<HostTensor>) -> Result<()> {
         self.global = new_global;
         self.ledger.record_round();
+        let mut dense_total = 0u64;
         for g in 0..self.groups.len() {
             self.ledger.record_sync(g, self.active.len());
             let dense = self.groups[g].dim * 4;
+            dense_total += dense as u64;
             for &c in &self.active {
                 self.ledger.record_participant_bytes(c, dense, dense);
             }
         }
+        for i in 0..self.active.len() {
+            let c = self.active[i];
+            let data_size = self.partition.clients[c].total;
+            self.registry.note_seen(c, self.round, data_size)?;
+            self.registry.note_bytes(c, dense_total, dense_total)?;
+        }
+        Ok(())
     }
 
     /// Close the block: run Algorithm 2 at boundaries and report whether a
@@ -678,6 +705,156 @@ impl CoordinatorCore {
     /// Ledger note: shard `s` missed a committed block (quorum mode).
     pub fn note_missed_block(&mut self, s: usize) {
         self.ledger.record_missed_block(s);
+    }
+
+    /// Blocks already committed — a resumed run's participants must
+    /// fast-forward their client rng streams past exactly this many.
+    pub fn completed_blocks(&self) -> usize {
+        self.block
+    }
+
+    /// Serialize the full coordinator state for a round-boundary
+    /// checkpoint: config fingerprint, progress counters, global model,
+    /// live schedule, sampler rng, ledger, learning curve, and registry.
+    /// Everything a restart needs to continue bit-identically — per-round
+    /// wall times and schedule adjustment diagnostics are deliberately
+    /// not included (they describe the dead process, not the run).
+    pub fn encode_checkpoint(&mut self) -> Result<Vec<u8>> {
+        let mut e = Enc::new();
+        e.bytes(&cfg_wire_bytes(&self.cfg)?)?;
+        e.usize(self.cfg.workers);
+        e.usize(self.block);
+        e.usize(self.round);
+        e.bool(self.pending_new_round);
+        e.f64(self.round_loss_sum);
+        e.usize(self.round_loss_n);
+        e.u32(self.global.len() as u32);
+        for t in &self.global {
+            e.usizes(&t.shape)?;
+            e.f32s(&t.data)?;
+        }
+        e.usizes(&self.schedule.intervals)?;
+        e.u32(self.schedule.last_unit_disc.len() as u32);
+        for &x in &self.schedule.last_unit_disc {
+            e.f64(x);
+        }
+        let (s, spare) = self.sampler.rng_state();
+        for &w in &s {
+            e.u64(w);
+        }
+        e.bool(spare.is_some());
+        e.f64(spare.unwrap_or(0.0));
+        self.ledger.encode(&mut e)?;
+        e.u32(self.curve.len() as u32);
+        for p in &self.curve {
+            e.usize(p.iteration);
+            e.usize(p.round);
+            e.f64(p.train_loss);
+            e.bool(p.val_acc.is_some());
+            e.f64(p.val_acc.unwrap_or(0.0));
+            e.bool(p.val_loss.is_some());
+            e.f64(p.val_loss.unwrap_or(0.0));
+            e.u64(p.comm_cost);
+        }
+        self.registry.encode_state(&mut e)?;
+        Ok(e.buf)
+    }
+
+    /// Restore a [`encode_checkpoint`](Self::encode_checkpoint) snapshot
+    /// into a freshly constructed core for the *same* config.  Loud
+    /// errors on any mismatch — resuming under a different run
+    /// configuration would silently diverge, so the fingerprint gate is
+    /// exact.
+    pub fn restore_checkpoint(&mut self, body: &[u8]) -> Result<()> {
+        let mut d = Dec::new(body);
+        let fp = d.bytes()?;
+        anyhow::ensure!(
+            fp == cfg_wire_bytes(&self.cfg)?,
+            "checkpoint was written by a different run configuration; \
+             resume must repeat the original run flags"
+        );
+        let workers = d.usize()?;
+        anyhow::ensure!(
+            workers == self.cfg.workers,
+            "checkpoint was written with --workers {workers}, this run has {}",
+            self.cfg.workers
+        );
+        self.block = d.usize()?;
+        self.round = d.usize()?;
+        self.pending_new_round = d.bool()?;
+        self.round_loss_sum = d.f64()?;
+        self.round_loss_n = d.usize()?;
+        let n_tensors = d.u32()? as usize;
+        anyhow::ensure!(
+            n_tensors == self.global.len(),
+            "checkpoint holds {n_tensors} global tensors, model has {}",
+            self.global.len()
+        );
+        for (ti, t) in self.global.iter_mut().enumerate() {
+            let shape = d.usizes()?;
+            let data = d.f32s()?;
+            anyhow::ensure!(
+                shape == t.shape && data.len() == t.data.len(),
+                "checkpoint tensor {ti} shape {shape:?} != model shape {:?}",
+                t.shape
+            );
+            t.data = data;
+        }
+        let intervals = d.usizes()?;
+        anyhow::ensure!(
+            intervals.len() == self.groups.len(),
+            "checkpoint holds {} interval entries, model has {} groups",
+            intervals.len(),
+            self.groups.len()
+        );
+        self.schedule.intervals = intervals;
+        let n_disc = d.u32()? as usize;
+        anyhow::ensure!(
+            n_disc == self.schedule.last_unit_disc.len(),
+            "checkpoint discrepancy table length mismatch"
+        );
+        let mut disc = Vec::with_capacity(n_disc);
+        for _ in 0..n_disc {
+            disc.push(d.f64()?);
+        }
+        self.schedule.last_unit_disc = disc;
+        let mut s = [0u64; 4];
+        for w in &mut s {
+            *w = d.u64()?;
+        }
+        let has_spare = d.bool()?;
+        let spare = d.f64()?;
+        self.sampler.restore_rng(s, if has_spare { Some(spare) } else { None });
+        let ledger = CommLedger::decode(&mut d)?;
+        anyhow::ensure!(
+            ledger.groups.len() == self.groups.len()
+                && ledger.participants.len() == self.cfg.workers.max(1),
+            "checkpoint ledger shape mismatch"
+        );
+        self.ledger = ledger;
+        let n_points = d.u32()? as usize;
+        let mut curve = Vec::with_capacity(n_points);
+        for _ in 0..n_points {
+            let iteration = d.usize()?;
+            let round = d.usize()?;
+            let train_loss = d.f64()?;
+            let has_acc = d.bool()?;
+            let acc = d.f64()?;
+            let has_loss = d.bool()?;
+            let loss = d.f64()?;
+            curve.push(CurvePoint {
+                iteration,
+                round,
+                train_loss,
+                val_acc: has_acc.then_some(acc),
+                val_loss: has_loss.then_some(loss),
+                comm_cost: d.u64()?,
+            });
+        }
+        self.curve = curve;
+        self.registry.decode_state(&mut d)?;
+        d.finish()?;
+        Ok(())
     }
 
     /// Snapshot the run's metrics (curve + ledger totals); the driver adds
@@ -978,6 +1155,88 @@ mod tests {
         assert_eq!(catchup[0].new_params[0], vec![1.0, 2.0, 3.0]);
         assert_eq!(catchup[1].new_params[0], vec![5.0, 5.0]);
         assert_eq!(catchup[0].new_interval, core.schedule.intervals[0]);
+    }
+
+    #[test]
+    fn registry_follows_participation_across_sampling_gaps() {
+        let mut core = tiny_core(4, Policy::fedavg(6), 12);
+        let a = core.begin_block().unwrap();
+        let ups = vec![
+            dense_update(a.k, 0, 0, vec![vec![0.0; 3]]),
+            dense_update(a.k, 0, 1, vec![vec![0.0; 3]]),
+            dense_update(a.k, 0, 2, vec![vec![0.0; 3]]),
+            dense_update(a.k, 0, 3, vec![vec![0.0; 3]]),
+            dense_update(a.k, 1, 0, vec![vec![0.0; 2]]),
+            dense_update(a.k, 1, 1, vec![vec![0.0; 2]]),
+            dense_update(a.k, 1, 2, vec![vec![0.0; 2]]),
+            dense_update(a.k, 1, 3, vec![vec![0.0; 2]]),
+        ];
+        core.apply_updates(&a, &ups, None).unwrap();
+        assert_eq!(core.registry.touched(), 4);
+        let rec = core.registry.record(2).unwrap();
+        assert_eq!(rec.last_seen_round, Some(0));
+        assert_eq!(rec.updates, 1);
+        // uplink: dense g0 (12 B) + g1 (8 B); downlink mirrors both groups
+        assert_eq!(rec.uplink_bytes, 20);
+        assert_eq!(rec.downlink_bytes, 20);
+        assert_eq!(rec.data_size, core.partition.clients[2].total);
+        // registry rows agree with the ledger's per-client fold
+        assert_eq!(core.ledger.clients[&2].uplink_bytes, 20);
+        assert_eq!(core.ledger.clients[&2].downlink_bytes, 20);
+    }
+
+    #[test]
+    fn checkpoint_round_trips_into_a_fresh_core() {
+        let run_round = |core: &mut CoordinatorCore| {
+            let a = core.begin_block().unwrap();
+            core.record_losses(&[1.0; 4]);
+            let mut ups = Vec::new();
+            for g in 0..2 {
+                for c in 0..4 {
+                    let dim = if g == 0 { 3 } else { 2 };
+                    ups.push(dense_update(a.k, g, c, vec![vec![0.5; dim]]));
+                }
+            }
+            core.apply_updates(&a, &ups, None).unwrap();
+            match core.end_block(a.k) {
+                BlockOutcome::RoundComplete { train_loss, .. } => {
+                    core.complete_round(a.k, train_loss, Some((0.5, 1.0)));
+                }
+                BlockOutcome::MidRound => panic!("fedavg block closes a round"),
+            }
+            a
+        };
+        let mut core = tiny_core(4, Policy::fedavg(6), 24);
+        run_round(&mut core);
+        run_round(&mut core);
+        let body = core.encode_checkpoint().unwrap();
+
+        let mut restored = tiny_core(4, Policy::fedavg(6), 24);
+        restored.restore_checkpoint(&body).unwrap();
+        assert_eq!(restored.completed_blocks(), 2);
+        assert_eq!(restored.curve, core.curve);
+        assert_eq!(restored.global[0].data, core.global[0].data);
+        assert_eq!(restored.ledger.total_cost(), core.ledger.total_cost());
+        assert_eq!(restored.ledger.clients, core.ledger.clients);
+        assert_eq!(
+            restored.registry.record(1).unwrap(),
+            core.registry.record(1).unwrap()
+        );
+        // both cores continue identically: same sampler stream, same
+        // assignment, same aggregation result
+        let a1 = run_round(&mut core);
+        let a2 = run_round(&mut restored);
+        assert_eq!(a1, a2);
+        assert_eq!(restored.curve, core.curve);
+        assert_eq!(restored.global[1].data, core.global[1].data);
+
+        // a core built from a different config refuses the snapshot
+        let mut wrong = tiny_core(8, Policy::fedavg(6), 24);
+        let err = wrong.restore_checkpoint(&body).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("different run configuration"),
+            "{err:#}"
+        );
     }
 
     #[test]

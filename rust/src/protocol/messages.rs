@@ -1001,7 +1001,23 @@ fn encode_cfg(e: &mut Enc, cfg: &RunConfig) -> Result<()> {
     e.bool(cfg.use_chunk);
     e.bool(cfg.hetero_local_steps);
     e.str(&cfg.compressor)?;
+    // appended for checkpoint/resume: blocks already completed before this
+    // run started, so participants fast-forward their client rng streams
+    e.usize(cfg.resume_blocks);
     Ok(())
+}
+
+/// The wire bytes of a config, with `resume_blocks` forced to zero: a
+/// resumed run carries a different resume offset but must still match the
+/// checkpoint's fingerprint, so the offset is excluded from it.  (The
+/// coordinator-only `workers` count is excluded by the wire schema itself
+/// and is checkpointed separately.)
+pub fn cfg_wire_bytes(cfg: &RunConfig) -> Result<Vec<u8>> {
+    let mut flat = cfg.clone();
+    flat.resume_blocks = 0;
+    let mut e = Enc::new();
+    encode_cfg(&mut e, &flat)?;
+    Ok(e.buf)
 }
 
 fn decode_cfg(d: &mut Dec<'_>) -> Result<RunConfig> {
@@ -1052,6 +1068,7 @@ fn decode_cfg(d: &mut Dec<'_>) -> Result<RunConfig> {
         use_chunk: d.bool()?,
         hetero_local_steps: d.bool()?,
         compressor: d.str()?,
+        resume_blocks: d.usize()?,
         ..RunConfig::default()
     })
 }
@@ -1147,6 +1164,7 @@ mod tests {
             use_chunk: false,
             hetero_local_steps: true,
             compressor: "q8".into(),
+            resume_blocks: 17,
             ..RunConfig::default()
         };
         let msg = Message::Configure(Configure {
@@ -1178,6 +1196,7 @@ mod tests {
         assert_eq!(c.cfg.use_chunk, cfg.use_chunk);
         assert_eq!(c.cfg.hetero_local_steps, cfg.hetero_local_steps);
         assert_eq!(c.cfg.compressor, cfg.compressor);
+        assert_eq!(c.cfg.resume_blocks, cfg.resume_blocks);
     }
 
     fn sample_update() -> LayerUpdate {

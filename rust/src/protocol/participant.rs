@@ -92,7 +92,7 @@ impl Participant {
                 }
             })
             .collect();
-        Ok(Participant {
+        let mut p = Participant {
             worker_id,
             gen: Generator::new(cfg.dataset, cfg.seed),
             partition,
@@ -105,7 +105,67 @@ impl Participant {
             compress_enabled: cfg.compressor != "dense",
             backend,
             cfg: cfg.clone(),
-        })
+        };
+        if p.cfg.resume_blocks > 0 {
+            let blocks = p.cfg.resume_blocks;
+            p.fast_forward(blocks)?;
+        }
+        Ok(p)
+    }
+
+    /// Checkpoint resume: advance the owned clients' data-rng streams past
+    /// `blocks` already-committed training blocks without any model
+    /// compute.  Replays exactly the draws `run_local_block` made in the
+    /// interrupted run — per-round active sets (from a sampler replica
+    /// seeded like the coordinator's), per-round budgets, and every
+    /// per-example class/writer/feature draw — so each client rng (and its
+    /// Box–Muller spare) lands bit-identically where the dead process left
+    /// it.  Parameters are not touched: the caller refreshes the replica
+    /// from the checkpointed global via catch-up decisions.  O(replayed
+    /// examples) time, O(one example) extra memory.
+    fn fast_forward(&mut self, blocks: usize) -> Result<()> {
+        let b = self.backend.manifest().batch_size;
+        let d: usize = self.backend.manifest().input_shape.iter().product();
+        let gap = self.cfg.policy.base_interval();
+        let round_len = self.cfg.policy.round_len();
+        let blocks_per_round = (round_len / gap).max(1);
+        let hetero = self.cfg.hetero_local_steps;
+        let mean_n = self.partition.total as f64 / self.cfg.n_clients as f64;
+        let mut sampler = crate::clients::ClientSampler::new(
+            self.cfg.n_clients,
+            self.cfg.active_ratio,
+            self.cfg.seed,
+        );
+        let mut xbuf = vec![0.0f32; d];
+        let mut mine: Vec<usize> = Vec::new();
+        for blk in 0..blocks {
+            if blk % blocks_per_round == 0 {
+                let active = sampler.sample();
+                mine = self.mine(&active);
+                for &ci in &mine {
+                    let frac = self.partition.clients[ci].total as f64 / mean_n;
+                    let c = &mut self.clients[ci];
+                    c.steps_in_round = 0;
+                    c.local_budget = if hetero {
+                        ((round_len as f64 * frac).round() as usize).clamp(1, round_len)
+                    } else {
+                        usize::MAX
+                    };
+                }
+            }
+            for &ci in &mine {
+                let data = &self.partition.clients[ci];
+                let c = &mut self.clients[ci];
+                let steps = gap.min(c.local_budget.saturating_sub(c.steps_in_round));
+                for _ in 0..steps * b {
+                    let class = data.sample_class(&mut c.rng);
+                    let writer = data.sample_writer(&mut c.rng);
+                    self.gen.gen_example(class, writer, &mut c.rng, &mut xbuf);
+                }
+                c.steps_in_round += steps;
+            }
+        }
+        Ok(())
     }
 
     pub fn shard(&self) -> &[usize] {

@@ -1,0 +1,125 @@
+//! Checkpoint file format and atomic write/read helpers.
+//!
+//! A checkpoint is one file, `fedlama.ckpt`, inside the directory passed
+//! to `--checkpoint-dir`:
+//!
+//! ```text
+//!   file := magic("FLCK") version(u32 LE) len(u64 LE) body(len) crc32(u32 LE)
+//! ```
+//!
+//! The body is an opaque `protocol::wire::Enc` blob produced by
+//! `CoordinatorCore::encode_checkpoint` (config fingerprint, round
+//! cursor, global tensors, schedule intervals, ledger, sampler rng,
+//! registry state).  The CRC covers the body, so a torn or bit-flipped
+//! snapshot is rejected at `--resume` instead of silently corrupting the
+//! run.  Writes go to a `.tmp` sibling first and `rename` into place —
+//! on the same filesystem that is atomic, so a crash mid-snapshot leaves
+//! the previous checkpoint intact.
+
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::protocol::wire::crc32;
+
+pub const CHECKPOINT_FILE: &str = "fedlama.ckpt";
+pub const CHECKPOINT_MAGIC: [u8; 4] = *b"FLCK";
+pub const CHECKPOINT_VERSION: u32 = 1;
+
+/// The checkpoint path inside a `--checkpoint-dir`.
+pub fn path_in(dir: &Path) -> PathBuf {
+    dir.join(CHECKPOINT_FILE)
+}
+
+/// Does `dir` hold a checkpoint file (readable or not)?
+pub fn exists(dir: &Path) -> bool {
+    path_in(dir).is_file()
+}
+
+/// Atomically replace the checkpoint in `dir` with `body`.
+pub fn write_atomic(dir: &Path, body: &[u8]) -> Result<()> {
+    fs::create_dir_all(dir)
+        .with_context(|| format!("create checkpoint dir {}", dir.display()))?;
+    let tmp = dir.join(format!("{CHECKPOINT_FILE}.tmp"));
+    {
+        let mut f = fs::File::create(&tmp)
+            .with_context(|| format!("create checkpoint tmp {}", tmp.display()))?;
+        f.write_all(&CHECKPOINT_MAGIC)?;
+        f.write_all(&CHECKPOINT_VERSION.to_le_bytes())?;
+        f.write_all(&(body.len() as u64).to_le_bytes())?;
+        f.write_all(body)?;
+        f.write_all(&crc32(body).to_le_bytes())?;
+        f.sync_all().with_context(|| format!("sync checkpoint tmp {}", tmp.display()))?;
+    }
+    fs::rename(&tmp, path_in(dir))
+        .with_context(|| format!("publish checkpoint into {}", dir.display()))?;
+    Ok(())
+}
+
+/// Read and verify the checkpoint body from `dir`.
+pub fn read(dir: &Path) -> Result<Vec<u8>> {
+    let path = path_in(dir);
+    let bytes =
+        fs::read(&path).with_context(|| format!("read checkpoint {}", path.display()))?;
+    ensure!(bytes.len() >= 16, "checkpoint too short ({} bytes)", bytes.len());
+    ensure!(bytes[0..4] == CHECKPOINT_MAGIC, "not a fedlama checkpoint (bad magic)");
+    let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    if version != CHECKPOINT_VERSION {
+        bail!("checkpoint version {version} unsupported (this build writes {CHECKPOINT_VERSION})");
+    }
+    let len = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+    ensure!(
+        bytes.len() == 16 + len + 4,
+        "checkpoint truncated: header promises {len} body bytes, file holds {}",
+        bytes.len().saturating_sub(20)
+    );
+    let body = &bytes[16..16 + len];
+    let want = u32::from_le_bytes(bytes[16 + len..].try_into().unwrap());
+    ensure!(crc32(body) == want, "checkpoint CRC mismatch — snapshot is corrupt");
+    Ok(body.to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("fedlama_ckpt_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn write_read_round_trip() {
+        let dir = tmpdir("rt");
+        assert!(!exists(&dir));
+        write_atomic(&dir, b"round 3 state").unwrap();
+        assert!(exists(&dir));
+        assert_eq!(read(&dir).unwrap(), b"round 3 state");
+        // overwrite is atomic-replace, latest wins
+        write_atomic(&dir, b"round 4 state").unwrap();
+        assert_eq!(read(&dir).unwrap(), b"round 4 state");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corruption_is_rejected() {
+        let dir = tmpdir("bad");
+        write_atomic(&dir, b"precious bytes").unwrap();
+        let path = path_in(&dir);
+        let mut bytes = fs::read(&path).unwrap();
+        let mid = 16 + 4;
+        bytes[mid] ^= 0x40; // flip a body bit
+        fs::write(&path, &bytes).unwrap();
+        let err = read(&dir).unwrap_err().to_string();
+        assert!(err.contains("CRC"), "want CRC error, got: {err}");
+        // truncation is also refused
+        write_atomic(&dir, b"precious bytes").unwrap();
+        let bytes = fs::read(&path).unwrap();
+        fs::write(&path, &bytes[..bytes.len() - 3]).unwrap();
+        assert!(read(&dir).is_err());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+}

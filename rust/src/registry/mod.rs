@@ -1,0 +1,359 @@
+//! Client registry subsystem: a persistent million-client roster behind
+//! a store seam.
+//!
+//! The seed coordinator materializes every client each round, so memory
+//! and scheduling are O(total clients) — the opposite of the paper's
+//! scalability premise.  This module inverts that: clients are
+//! *registered*, not resident.  A [`ClientRegistry`] records per-client
+//! state (data size, partition seed, last-seen round, cumulative bytes,
+//! and SCAFFOLD control variates) in a [`store::StateStore`] —
+//! in-memory or spilled to an append-only log on disk — while
+//! [`sampler::RegistrySampler`] draws the k active clients per round in
+//! O(k) memory via a streaming Fisher–Yates that is bit-identical to the
+//! seed sampler.  The split mirrors xaynet's `state_machine`/`storage`
+//! layering: coordinator logic never touches bytes-at-rest directly, so
+//! the process can restart mid-run ([`checkpoint`]).
+//!
+//! Records are **lazily defaulted**: a client that has never been
+//! touched costs zero store entries — its record derives
+//! deterministically from `(id, run seed)` on first read.  Only clients
+//! that have actually participated are written back, which is what keeps
+//! coordinator memory O(sampled) with a million registered.
+
+pub mod checkpoint;
+pub mod sampler;
+pub mod store;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::protocol::wire::{Dec, Enc};
+use crate::runtime::HostTensor;
+use store::{MemStore, StateStore};
+
+/// Sentinel for "never seen" in the wire encoding of `last_seen_round`.
+const NEVER: u64 = u64::MAX;
+
+/// Per-client roster entry.  `data_size` is the client's local example
+/// count (0 until its first participation reports one); `partition_seed`
+/// is the deterministic per-client stream seed the data partition forks
+/// from; the byte counters accumulate across rounds, surviving sampling
+/// gaps and rejoin.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ClientRecord {
+    pub data_size: usize,
+    pub partition_seed: u64,
+    pub last_seen_round: Option<usize>,
+    pub updates: u64,
+    pub uplink_bytes: u64,
+    pub downlink_bytes: u64,
+}
+
+impl ClientRecord {
+    /// The record every client implicitly has before its first write:
+    /// derived from `(id, seed)` alone, so an untouched client costs no
+    /// store entry and any two coordinators derive the same roster.
+    pub fn derived(id: usize, seed: u64) -> ClientRecord {
+        ClientRecord {
+            data_size: 0,
+            partition_seed: seed ^ (id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            last_seen_round: None,
+            updates: 0,
+            uplink_bytes: 0,
+            downlink_bytes: 0,
+        }
+    }
+
+    pub fn encode(&self) -> Result<Vec<u8>> {
+        let mut e = Enc::new();
+        e.usize(self.data_size);
+        e.u64(self.partition_seed);
+        e.u64(self.last_seen_round.map_or(NEVER, |r| r as u64));
+        e.u64(self.updates);
+        e.u64(self.uplink_bytes);
+        e.u64(self.downlink_bytes);
+        Ok(e.buf)
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<ClientRecord> {
+        let mut d = Dec::new(bytes);
+        let rec = ClientRecord {
+            data_size: d.usize()?,
+            partition_seed: d.u64()?,
+            last_seen_round: match d.u64()? {
+                NEVER => None,
+                r => Some(r as usize),
+            },
+            updates: d.u64()?,
+            uplink_bytes: d.u64()?,
+            downlink_bytes: d.u64()?,
+        };
+        d.finish()?;
+        Ok(rec)
+    }
+}
+
+/// Encode a control-variate tensor list (SCAFFOLD per-client state) as a
+/// store blob.  Bit-exact: f32 payloads travel as IEEE bit patterns.
+pub fn encode_tensors(tensors: &[HostTensor]) -> Result<Vec<u8>> {
+    let mut e = Enc::new();
+    e.u32(tensors.len() as u32);
+    for t in tensors {
+        e.usizes(&t.shape)?;
+        e.f32s(&t.data)?;
+    }
+    Ok(e.buf)
+}
+
+/// Decode a [`encode_tensors`] blob.
+pub fn decode_tensors(bytes: &[u8]) -> Result<Vec<HostTensor>> {
+    let mut d = Dec::new(bytes);
+    let n = d.u32()? as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let shape = d.usizes()?;
+        let data = d.f32s()?;
+        ensure!(
+            shape.iter().product::<usize>() == data.len(),
+            "control tensor shape/data mismatch"
+        );
+        out.push(HostTensor { shape, data });
+    }
+    d.finish()?;
+    Ok(out)
+}
+
+/// The persistent roster.  Holds only the roster *size* and the store
+/// handle in memory; per-client state lives behind the seam.
+pub struct ClientRegistry {
+    n_registered: usize,
+    seed: u64,
+    store: Box<dyn StateStore>,
+}
+
+fn rec_key(id: usize) -> u64 {
+    (id as u64) << 1
+}
+
+fn ctl_key(id: usize) -> u64 {
+    ((id as u64) << 1) | 1
+}
+
+impl ClientRegistry {
+    pub fn new(n_registered: usize, seed: u64, store: Box<dyn StateStore>) -> ClientRegistry {
+        assert!(n_registered > 0, "empty roster");
+        ClientRegistry { n_registered, seed, store }
+    }
+
+    /// In-memory roster — the default for ordinary runs.
+    pub fn in_memory(n_registered: usize, seed: u64) -> ClientRegistry {
+        ClientRegistry::new(n_registered, seed, Box::new(MemStore::new()))
+    }
+
+    /// Registered roster size.
+    pub fn len(&self) -> usize {
+        self.n_registered
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n_registered == 0
+    }
+
+    /// Clients with at least one written record — the resident set, which
+    /// stays O(sampled x rounds), not O(registered).
+    pub fn touched(&self) -> usize {
+        self.store.keys().iter().filter(|k| *k % 2 == 0).count()
+    }
+
+    /// Clients with a spilled control-variate blob.
+    pub fn spilled_controls(&self) -> usize {
+        self.store.keys().iter().filter(|k| *k % 2 == 1).count()
+    }
+
+    fn check_id(&self, id: usize) -> Result<()> {
+        ensure!(id < self.n_registered, "client {id} outside roster of {}", self.n_registered);
+        Ok(())
+    }
+
+    /// The client's record — stored if ever written, derived otherwise.
+    pub fn record(&mut self, id: usize) -> Result<ClientRecord> {
+        self.check_id(id)?;
+        match self.store.get(rec_key(id))? {
+            Some(bytes) => ClientRecord::decode(&bytes)
+                .with_context(|| format!("corrupt registry record for client {id}")),
+            None => Ok(ClientRecord::derived(id, self.seed)),
+        }
+    }
+
+    fn write(&mut self, id: usize, rec: &ClientRecord) -> Result<()> {
+        self.store.put(rec_key(id), &rec.encode()?)
+    }
+
+    /// Mark a client as having participated in `round` with `data_size`
+    /// local examples, bumping its update counter.
+    pub fn note_seen(&mut self, id: usize, round: usize, data_size: usize) -> Result<()> {
+        let mut rec = self.record(id)?;
+        rec.last_seen_round = Some(round);
+        if data_size > 0 {
+            rec.data_size = data_size;
+        }
+        rec.updates += 1;
+        self.write(id, &rec)
+    }
+
+    /// Accumulate wire bytes attributed to a client (Eq.9 accounting at
+    /// registry granularity).
+    pub fn note_bytes(&mut self, id: usize, uplink: u64, downlink: u64) -> Result<()> {
+        let mut rec = self.record(id)?;
+        rec.uplink_bytes += uplink;
+        rec.downlink_bytes += downlink;
+        self.write(id, &rec)
+    }
+
+    /// Spill a client's SCAFFOLD control variates through the seam.
+    pub fn put_control(&mut self, id: usize, tensors: &[HostTensor]) -> Result<()> {
+        self.check_id(id)?;
+        self.store.put(ctl_key(id), &encode_tensors(tensors)?)
+    }
+
+    /// Load a client's spilled control variates, if any.
+    pub fn control(&mut self, id: usize) -> Result<Option<Vec<HostTensor>>> {
+        self.check_id(id)?;
+        match self.store.get(ctl_key(id))? {
+            Some(bytes) => Ok(Some(decode_tensors(&bytes)?)),
+            None => Ok(None),
+        }
+    }
+
+    /// Serialize every touched entry (records and control blobs) into a
+    /// checkpoint body.  Keys ascend, so the bytes are deterministic.
+    pub fn encode_state(&mut self, e: &mut Enc) -> Result<()> {
+        e.usize(self.n_registered);
+        e.u64(self.seed);
+        let keys = self.store.keys();
+        e.u32(keys.len() as u32);
+        for k in keys {
+            let blob = self.store.get(k)?.expect("listed key must resolve");
+            e.u64(k);
+            e.bytes(&blob)?;
+        }
+        Ok(())
+    }
+
+    /// Restore touched entries from a checkpoint body into this registry's
+    /// store (which may be a different backend than the one that wrote
+    /// the snapshot — the seam makes them interchangeable).
+    pub fn decode_state(&mut self, d: &mut Dec) -> Result<()> {
+        let n_registered = d.usize()?;
+        let seed = d.u64()?;
+        ensure!(
+            n_registered == self.n_registered && seed == self.seed,
+            "checkpoint registry shape mismatch: snapshot {n_registered} clients seed {seed}, \
+             run has {} clients seed {}",
+            self.n_registered,
+            self.seed
+        );
+        let n = d.u32()? as usize;
+        for _ in 0..n {
+            let k = d.u64()?;
+            let blob = d.bytes()?;
+            self.store.put(k, &blob)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn untouched_clients_derive_and_cost_nothing() {
+        let mut reg = ClientRegistry::in_memory(1_000_000, 42);
+        let a = reg.record(0).unwrap();
+        let b = reg.record(999_999).unwrap();
+        assert_ne!(a.partition_seed, b.partition_seed);
+        assert_eq!(a.last_seen_round, None);
+        assert_eq!(reg.touched(), 0, "reads must not materialize records");
+        // same (id, seed) derives the same record in a fresh registry
+        let mut other = ClientRegistry::in_memory(1_000_000, 42);
+        assert_eq!(other.record(0).unwrap(), a);
+    }
+
+    #[test]
+    fn participation_and_bytes_accumulate_across_rounds() {
+        let mut reg = ClientRegistry::in_memory(100, 7);
+        reg.note_seen(3, 0, 250).unwrap();
+        reg.note_bytes(3, 1000, 4000).unwrap();
+        reg.note_seen(3, 5, 250).unwrap(); // rejoin after a sampling gap
+        reg.note_bytes(3, 1000, 4000).unwrap();
+        let rec = reg.record(3).unwrap();
+        assert_eq!(rec.last_seen_round, Some(5));
+        assert_eq!(rec.updates, 2);
+        assert_eq!(rec.uplink_bytes, 2000);
+        assert_eq!(rec.downlink_bytes, 8000);
+        assert_eq!(rec.data_size, 250);
+        assert_eq!(reg.touched(), 1);
+    }
+
+    #[test]
+    fn record_wire_round_trip_is_exact() {
+        let rec = ClientRecord {
+            data_size: 123,
+            partition_seed: 0xDEAD_BEEF,
+            last_seen_round: Some(17),
+            updates: 9,
+            uplink_bytes: u64::MAX - 1,
+            downlink_bytes: 0,
+        };
+        assert_eq!(ClientRecord::decode(&rec.encode().unwrap()).unwrap(), rec);
+        let never = ClientRecord::derived(5, 1);
+        assert_eq!(ClientRecord::decode(&never.encode().unwrap()).unwrap(), never);
+    }
+
+    #[test]
+    fn control_variates_spill_and_load_bit_identically() {
+        let mut reg = ClientRegistry::in_memory(10, 3);
+        let tensors = vec![
+            HostTensor { shape: vec![2, 3], data: vec![1.5, -0.0, f32::MIN_POSITIVE, 3.25, -7.0, 0.1] },
+            HostTensor { shape: vec![4], data: vec![f32::NAN, 1.0, -1.0, 2.0f32.powi(-120)] },
+        ];
+        reg.put_control(4, &tensors).unwrap();
+        let got = reg.control(4).unwrap().unwrap();
+        assert_eq!(got.len(), 2);
+        for (g, w) in got.iter().zip(&tensors) {
+            assert_eq!(g.shape, w.shape);
+            let gb: Vec<u32> = g.data.iter().map(|x| x.to_bits()).collect();
+            let wb: Vec<u32> = w.data.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(gb, wb, "bit-exact including NaN and -0.0");
+        }
+        assert_eq!(reg.control(5).unwrap(), None);
+        assert_eq!(reg.spilled_controls(), 1);
+        assert_eq!(reg.touched(), 0, "control blobs are not roster records");
+    }
+
+    #[test]
+    fn state_round_trips_through_checkpoint_encoding() {
+        let mut reg = ClientRegistry::in_memory(50, 9);
+        reg.note_seen(1, 0, 10).unwrap();
+        reg.note_bytes(1, 5, 6).unwrap();
+        reg.note_seen(30, 2, 20).unwrap();
+        reg.put_control(30, &[HostTensor { shape: vec![2], data: vec![0.5, -0.5] }]).unwrap();
+
+        let mut e = Enc::new();
+        reg.encode_state(&mut e).unwrap();
+
+        let mut restored = ClientRegistry::in_memory(50, 9);
+        let mut d = Dec::new(&e.buf);
+        restored.decode_state(&mut d).unwrap();
+        d.finish().unwrap();
+        assert_eq!(restored.record(1).unwrap(), reg.record(1).unwrap());
+        assert_eq!(restored.record(30).unwrap(), reg.record(30).unwrap());
+        assert_eq!(restored.control(30).unwrap(), reg.control(30).unwrap());
+        assert_eq!(restored.touched(), 2);
+
+        // shape mismatch is refused loudly
+        let mut wrong = ClientRegistry::in_memory(51, 9);
+        let mut d = Dec::new(&e.buf);
+        assert!(wrong.decode_state(&mut d).is_err());
+    }
+}

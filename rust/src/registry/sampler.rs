@@ -1,0 +1,183 @@
+//! Streaming round sampling over a registered roster.
+//!
+//! The seed sampler (`clients::ClientSampler`) draws k active clients
+//! with `Rng::choose_k`, a partial Fisher–Yates over a materialized
+//! `Vec` of all n client ids — O(n) memory per draw, which is exactly
+//! what a million-client roster cannot afford.  [`sample_stream`] runs
+//! the *same* algorithm against a sparse map of displaced positions
+//! instead of the dense vector: it consumes the identical `Rng::below`
+//! draws in the identical order and returns the identical indices, but
+//! touches at most k map entries, so per-round sampling memory is
+//! O(sampled) regardless of roster size.
+//!
+//! Why the simulation is exact: `choose_k` swaps position `i` with
+//! `j = i + below(n - i)` for `i in 0..k` and returns positions `0..k`.
+//! Since `j >= i` always, a position below the current `i` is never read
+//! again once written — so the value at any position `p` is either its
+//! initial identity `p` or whatever the last swap displaced into it, and
+//! a map recording only displacements reproduces every read the dense
+//! vector would serve.
+//!
+//! [`RegistrySampler`] wraps the streaming draw with the *same* rng
+//! stream derivation as the seed sampler (`fork(0x5A_3317)` off the run
+//! seed), the same k-equals-n identity fast path (zero rng draws), and
+//! the same sorted output — which is what makes a registry-backed run
+//! with registered == sampled bit-identical to the seed across every
+//! transport.  Its rng state is exposed for checkpointing so a resumed
+//! run re-draws the exact active sets an uninterrupted run would.
+
+use std::collections::HashMap;
+
+use crate::util::rng::Rng;
+
+/// Stream identifier for the round sampler — must match
+/// `clients::ClientSampler` so both paths draw the same sequence.
+pub const SAMPLER_STREAM: u64 = 0x5A_3317;
+
+/// Draw `k` distinct indices from `[0, n)` consuming exactly the same
+/// rng draws as `Rng::choose_k(n, k)` and returning the same indices in
+/// the same order, in O(k) memory.
+pub fn sample_stream(rng: &mut Rng, n: usize, k: usize) -> Vec<usize> {
+    assert!(k <= n, "cannot sample {k} of {n}");
+    // displaced[p] = value a prior swap moved into position p
+    let mut displaced: HashMap<usize, usize> = HashMap::with_capacity(k * 2);
+    let mut out = Vec::with_capacity(k);
+    for i in 0..k {
+        let j = i + rng.below(n - i);
+        let vj = displaced.get(&j).copied().unwrap_or(j);
+        let vi = displaced.get(&i).copied().unwrap_or(i);
+        out.push(vj);
+        displaced.insert(j, vi);
+    }
+    out
+}
+
+/// Round sampler over a registered roster: draws the active set for each
+/// round directly from registry *size*, never materializing the roster.
+pub struct RegistrySampler {
+    /// Total registered clients (the roster size).
+    pub n_registered: usize,
+    /// Clients sampled per round.
+    pub n_active: usize,
+    rng: Rng,
+}
+
+impl RegistrySampler {
+    /// `n_active` must already be validated against the roster
+    /// (`RunConfig::validate` errors loudly on k == 0 or k > registered);
+    /// the assertions here are the last line of defense for direct use.
+    pub fn new(n_registered: usize, n_active: usize, seed: u64) -> RegistrySampler {
+        assert!(n_registered > 0, "empty roster");
+        assert!(
+            n_active >= 1 && n_active <= n_registered,
+            "sampled {n_active} outside [1, {n_registered}]"
+        );
+        RegistrySampler { n_registered, n_active, rng: Rng::new(seed).fork(SAMPLER_STREAM) }
+    }
+
+    /// Active client ids for the next round, ascending.  Full
+    /// participation is the identity and consumes no rng draws — the
+    /// seed sampler's fast path, preserved for bit-identity.
+    pub fn sample(&mut self) -> Vec<usize> {
+        if self.n_active == self.n_registered {
+            return (0..self.n_registered).collect();
+        }
+        let mut ids = sample_stream(&mut self.rng, self.n_registered, self.n_active);
+        ids.sort_unstable();
+        ids
+    }
+
+    /// Rng snapshot for checkpointing.
+    pub fn rng_state(&self) -> ([u64; 4], Option<f64>) {
+        self.rng.state()
+    }
+
+    /// Restore the rng from a checkpoint snapshot.
+    pub fn restore_rng(&mut self, s: [u64; 4], spare: Option<f64>) {
+        self.rng = Rng::from_state(s, spare);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The acceptance-critical property: the streaming draw is an exact
+    /// simulation of the eager `choose_k` — same draws, same output —
+    /// across sizes, fractions, seeds, and consecutive rounds sharing
+    /// one rng stream.
+    #[test]
+    fn stream_matches_eager_choose_k_exactly() {
+        for seed in 0..20u64 {
+            for &(n, k) in &[(1usize, 1usize), (5, 2), (64, 1), (64, 63), (100, 10), (1000, 7)] {
+                let mut eager = Rng::new(seed).fork(SAMPLER_STREAM);
+                let mut stream = Rng::new(seed).fork(SAMPLER_STREAM);
+                for round in 0..5 {
+                    let want = eager.choose_k(n, k);
+                    let got = sample_stream(&mut stream, n, k);
+                    assert_eq!(got, want, "n={n} k={k} seed={seed} round={round}");
+                    // and the rng streams stay in lockstep after the draw
+                    assert_eq!(eager.next_u64(), stream.next_u64());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stream_memory_is_o_of_k() {
+        // 10M roster, 100 sampled: would be a 80MB Vec on the eager path;
+        // here only the displacement map exists.  Completing instantly is
+        // the test.
+        let mut rng = Rng::new(3).fork(SAMPLER_STREAM);
+        let ids = sample_stream(&mut rng, 10_000_000, 100);
+        assert_eq!(ids.len(), 100);
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 100, "indices must be distinct");
+        assert!(sorted.iter().all(|&i| i < 10_000_000));
+    }
+
+    #[test]
+    fn registry_sampler_is_deterministic_per_seed_and_round() {
+        let mut a = RegistrySampler::new(10_000, 50, 42);
+        let mut b = RegistrySampler::new(10_000, 50, 42);
+        let mut other = RegistrySampler::new(10_000, 50, 43);
+        let mut prev: Option<Vec<usize>> = None;
+        for _ in 0..8 {
+            let sa = a.sample();
+            let sb = b.sample();
+            assert_eq!(sa, sb, "same (seed, round) must agree");
+            assert!(sa.windows(2).all(|w| w[0] < w[1]), "sorted distinct");
+            if let Some(p) = prev {
+                assert_ne!(p, sa, "rounds advance the stream");
+            }
+            prev = Some(sa);
+        }
+        assert_ne!(a.sample(), other.sample(), "different seeds diverge");
+    }
+
+    #[test]
+    fn full_participation_is_identity_without_draws() {
+        let mut s = RegistrySampler::new(12, 12, 7);
+        assert_eq!(s.sample(), (0..12).collect::<Vec<_>>());
+        // no draws happened: the stream equals a fresh fork
+        let mut fresh = Rng::new(7).fork(SAMPLER_STREAM);
+        let (state, _) = s.rng_state();
+        let (want, _) = fresh.state();
+        assert_eq!(state, want);
+        let _ = fresh.next_u64();
+    }
+
+    #[test]
+    fn rng_state_round_trips_through_checkpoint() {
+        let mut live = RegistrySampler::new(500, 20, 11);
+        let _ = live.sample();
+        let (s, spare) = live.rng_state();
+        let mut resumed = RegistrySampler::new(500, 20, 11);
+        resumed.restore_rng(s, spare);
+        for _ in 0..4 {
+            assert_eq!(live.sample(), resumed.sample());
+        }
+    }
+}

@@ -1,0 +1,238 @@
+//! The store seam: a key/value blob store the registry spills per-client
+//! state through.
+//!
+//! Two implementations share one trait so the coordinator can hold a
+//! million-client roster without caring where the bytes live:
+//!
+//!   - [`MemStore`] — a `BTreeMap`; the default for tests and small runs.
+//!   - [`FileStore`] — an append-only log on disk with an in-memory
+//!     offset index.  Writes append `[key u64][len u32][value]` records;
+//!     reads seek straight to the latest offset for a key
+//!     (latest-write-wins).  Reopening rescans the log to rebuild the
+//!     index, ignoring a torn tail from an interrupted write, which is
+//!     what makes the registry survive a coordinator restart.
+//!
+//! Values are opaque byte blobs; the registry layers its record and
+//! control-variate encodings (`protocol::wire::Enc`/`Dec`) on top.  Keys
+//! are namespaced by the registry (client id shifted left, low bit
+//! selecting record vs control blob), so one store holds both kinds.
+
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// Blob store seam.  `get`/`put` take `&mut self` because the file-backed
+/// implementation seeks; the in-memory one simply ignores the mutability.
+pub trait StateStore: Send {
+    fn put(&mut self, key: u64, value: &[u8]) -> Result<()>;
+    fn get(&mut self, key: u64) -> Result<Option<Vec<u8>>>;
+    fn contains(&self, key: u64) -> bool;
+    /// Number of distinct keys ever written (latest-write-wins).
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Distinct keys in ascending order — checkpoint serialization walks
+    /// these so snapshots are byte-deterministic regardless of write order.
+    fn keys(&self) -> Vec<u64>;
+}
+
+/// In-memory store: the trivial implementation of the seam.
+#[derive(Default)]
+pub struct MemStore {
+    map: BTreeMap<u64, Vec<u8>>,
+}
+
+impl MemStore {
+    pub fn new() -> MemStore {
+        MemStore::default()
+    }
+}
+
+impl StateStore for MemStore {
+    fn put(&mut self, key: u64, value: &[u8]) -> Result<()> {
+        self.map.insert(key, value.to_vec());
+        Ok(())
+    }
+
+    fn get(&mut self, key: u64) -> Result<Option<Vec<u8>>> {
+        Ok(self.map.get(&key).cloned())
+    }
+
+    fn contains(&self, key: u64) -> bool {
+        self.map.contains_key(&key)
+    }
+
+    fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    fn keys(&self) -> Vec<u64> {
+        self.map.keys().copied().collect()
+    }
+}
+
+/// Record header bytes preceding each value: key(8) + len(4).
+const REC_HEADER: u64 = 12;
+
+/// Append-only log store.  The index maps each key to the offset and
+/// length of its *latest* value in the log; stale versions stay on disk
+/// until the file is rewritten (compaction is not needed for the
+/// registry's write pattern — a few counters per sampled client per
+/// round).
+pub struct FileStore {
+    file: File,
+    path: PathBuf,
+    index: BTreeMap<u64, (u64, u32)>,
+    end: u64,
+}
+
+impl FileStore {
+    /// Open (or create) the log at `path` and rebuild the offset index by
+    /// scanning it.  A torn tail — a record whose header or value extends
+    /// past the physical end, left by an interrupted write — is ignored
+    /// and overwritten by the next append.
+    pub fn open(path: &Path) -> Result<FileStore> {
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .open(path)
+            .with_context(|| format!("open state store log {}", path.display()))?;
+        let len = file.metadata()?.len();
+        let mut index = BTreeMap::new();
+        let mut pos = 0u64;
+        let mut header = [0u8; REC_HEADER as usize];
+        file.seek(SeekFrom::Start(0))?;
+        while pos + REC_HEADER <= len {
+            file.read_exact(&mut header)?;
+            let key = u64::from_le_bytes(header[0..8].try_into().unwrap());
+            let vlen = u32::from_le_bytes(header[8..12].try_into().unwrap());
+            if pos + REC_HEADER + vlen as u64 > len {
+                break; // torn tail
+            }
+            index.insert(key, (pos + REC_HEADER, vlen));
+            pos += REC_HEADER + vlen as u64;
+            file.seek(SeekFrom::Start(pos))?;
+        }
+        Ok(FileStore { file, path: path.to_path_buf(), index, end: pos })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Bytes appended to the log so far (stale versions included).
+    pub fn log_bytes(&self) -> u64 {
+        self.end
+    }
+}
+
+impl StateStore for FileStore {
+    fn put(&mut self, key: u64, value: &[u8]) -> Result<()> {
+        let vlen = u32::try_from(value.len())
+            .with_context(|| format!("state store value for key {key} exceeds u32 length"))?;
+        self.file.seek(SeekFrom::Start(self.end))?;
+        self.file.write_all(&key.to_le_bytes())?;
+        self.file.write_all(&vlen.to_le_bytes())?;
+        self.file.write_all(value)?;
+        self.index.insert(key, (self.end + REC_HEADER, vlen));
+        self.end += REC_HEADER + vlen as u64;
+        Ok(())
+    }
+
+    fn get(&mut self, key: u64) -> Result<Option<Vec<u8>>> {
+        let Some(&(off, vlen)) = self.index.get(&key) else {
+            return Ok(None);
+        };
+        self.file.seek(SeekFrom::Start(off))?;
+        let mut buf = vec![0u8; vlen as usize];
+        self.file.read_exact(&mut buf)?;
+        Ok(Some(buf))
+    }
+
+    fn contains(&self, key: u64) -> bool {
+        self.index.contains_key(&key)
+    }
+
+    fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    fn keys(&self) -> Vec<u64> {
+        self.index.keys().copied().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(store: &mut dyn StateStore) {
+        assert!(store.is_empty());
+        store.put(4, b"alpha").unwrap();
+        store.put(2, b"beta").unwrap();
+        store.put(4, b"gamma").unwrap(); // overwrite: latest wins
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.keys(), vec![2, 4]);
+        assert!(store.contains(2) && store.contains(4) && !store.contains(7));
+        assert_eq!(store.get(2).unwrap().as_deref(), Some(&b"beta"[..]));
+        assert_eq!(store.get(4).unwrap().as_deref(), Some(&b"gamma"[..]));
+        assert_eq!(store.get(9).unwrap(), None);
+    }
+
+    #[test]
+    fn mem_store_round_trips() {
+        roundtrip(&mut MemStore::new());
+    }
+
+    #[test]
+    fn file_store_round_trips_and_survives_reopen() {
+        let dir = std::env::temp_dir().join(format!("fedlama_store_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.log");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut fs = FileStore::open(&path).unwrap();
+            roundtrip(&mut fs);
+        }
+        // reopen: the index rebuilds from the log, latest-write-wins intact
+        let mut fs = FileStore::open(&path).unwrap();
+        assert_eq!(fs.len(), 2);
+        assert_eq!(fs.get(4).unwrap().as_deref(), Some(&b"gamma"[..]));
+        assert_eq!(fs.get(2).unwrap().as_deref(), Some(&b"beta"[..]));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn file_store_ignores_torn_tail() {
+        let dir = std::env::temp_dir().join(format!("fedlama_store_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("torn.log");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut fs = FileStore::open(&path).unwrap();
+            fs.put(1, b"whole").unwrap();
+        }
+        // simulate an interrupted write: a header promising more bytes
+        // than the file holds
+        {
+            use std::io::Write as _;
+            let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+            f.write_all(&9u64.to_le_bytes()).unwrap();
+            f.write_all(&100u32.to_le_bytes()).unwrap();
+            f.write_all(b"short").unwrap();
+        }
+        let mut fs = FileStore::open(&path).unwrap();
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs.get(1).unwrap().as_deref(), Some(&b"whole"[..]));
+        assert_eq!(fs.get(9).unwrap(), None);
+        // the next append lands where the torn record began and reads back
+        fs.put(9, b"redo").unwrap();
+        assert_eq!(fs.get(9).unwrap().as_deref(), Some(&b"redo"[..]));
+        std::fs::remove_file(&path).unwrap();
+    }
+}

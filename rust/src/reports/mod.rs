@@ -204,6 +204,21 @@ pub fn participants_summary(m: &RunMetrics) -> Option<String> {
         }
         s.push('\n');
     }
+    // registry-granularity totals: one aggregate over per-client counters
+    // (keyed by registered client id, so they survive sampling gaps and
+    // shard remapping — the shard rows above cannot)
+    if !m.per_client.is_empty() {
+        let updates: u64 = m.per_client.iter().map(|(_, c)| c.updates).sum();
+        let up: u64 = m.per_client.iter().map(|(_, c)| c.uplink_bytes).sum();
+        let down: u64 = m.per_client.iter().map(|(_, c)| c.downlink_bytes).sum();
+        s.push_str(&format!(
+            "  clients: {} participated  {:>5} layer updates  {:>12} B up  {:>12} B down\n",
+            m.per_client.len(),
+            updates,
+            up,
+            down
+        ));
+    }
     Some(s)
 }
 
@@ -313,6 +328,16 @@ mod tests {
         m.per_participant[1].missed_blocks = 2;
         let s = participants_summary(&m).unwrap();
         assert!(s.contains("departed x1, rejoined x1, missed 2 blocks"), "{s}");
+        // registry-granularity client totals append one aggregate line
+        m.per_client = vec![
+            (0, crate::comm::ClientComm { updates: 12, uplink_bytes: 4096, downlink_bytes: 2048 }),
+            (7, crate::comm::ClientComm { updates: 12, uplink_bytes: 4096, downlink_bytes: 2048 }),
+        ];
+        let s = participants_summary(&m).unwrap();
+        assert_eq!(s.lines().count(), 4);
+        assert!(s.contains("clients: 2 participated"), "{s}");
+        assert!(s.contains("24 layer updates"), "{s}");
+        assert!(s.contains("8192"), "{s}");
     }
 
     #[test]

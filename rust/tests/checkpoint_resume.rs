@@ -1,0 +1,183 @@
+//! Checkpoint/resume: a run interrupted at a round boundary and resumed
+//! from its `--checkpoint-dir` snapshot must be **bit-identical** to the
+//! run that was never interrupted — same curve, same global tensors, same
+//! Eq.9 ledger — because the snapshot restores the core state machine
+//! (schedule, ledger, sampler rng, registry) exactly and every
+//! participant fast-forwards its client rng streams past the committed
+//! blocks.  Exercised in-proc and over the `--workers N` stdio transport
+//! (the TCP path shares the worker-side code via the Configure frame).
+
+use std::path::PathBuf;
+
+use fedlama::aggregation::Policy;
+use fedlama::config::{Algorithm, PartitionKind, RunConfig};
+use fedlama::coordinator::Coordinator;
+use fedlama::data::DatasetKind;
+use fedlama::metrics::RunMetrics;
+
+fn ckpt_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("fedlama_ckpt_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn base_cfg() -> RunConfig {
+    RunConfig {
+        dataset: DatasetKind::Toy,
+        n_clients: 6,
+        active_ratio: 0.5,
+        partition: PartitionKind::Dirichlet { alpha: 0.3 },
+        samples: 48,
+        lr: 0.05,
+        warmup_rounds: 1,
+        iterations: 24,
+        policy: Policy::fedlama(2, 2),
+        eval_every_rounds: 2,
+        eval_examples: 128,
+        seed: 23,
+        ..Default::default()
+    }
+}
+
+fn run_cfg(cfg: RunConfig) -> (Coordinator, RunMetrics) {
+    let mut coord = Coordinator::new(cfg).unwrap();
+    let m = coord.run().unwrap();
+    (coord, m)
+}
+
+/// Everything wall-clock-independent must match exactly.
+fn assert_identical(a: &RunMetrics, b: &RunMetrics, what: &str) {
+    assert_eq!(a.curve, b.curve, "{what}: learning curve");
+    assert_eq!(a.final_acc, b.final_acc, "{what}: final_acc");
+    assert_eq!(a.final_loss, b.final_loss, "{what}: final_loss");
+    assert_eq!(a.total_comm_cost, b.total_comm_cost, "{what}: comm cost");
+    assert_eq!(a.total_syncs, b.total_syncs, "{what}: syncs");
+    assert_eq!(a.total_bytes, b.total_bytes, "{what}: bytes");
+    assert_eq!(a.per_group, b.per_group, "{what}: per-group ledger");
+    assert_eq!(a.per_client, b.per_client, "{what}: per-client ledger");
+}
+
+fn assert_resume_bit_identical(cfg: RunConfig, halt_after: usize, what: &str) {
+    let dir = ckpt_dir(what);
+
+    // the uninterrupted reference (no checkpointing in sight)
+    let (ref_coord, ref_m) = run_cfg(cfg.clone());
+
+    // interrupted run: checkpoint every round, stop after `halt_after`
+    let (_, halted) = run_cfg(RunConfig {
+        checkpoint_dir: Some(dir.clone()),
+        halt_after_rounds: halt_after,
+        ..cfg.clone()
+    });
+    assert!(
+        halted.curve.len() < ref_m.curve.len(),
+        "{what}: the interrupted run must actually stop early"
+    );
+    assert!(fedlama::registry::checkpoint::exists(&dir), "{what}: no snapshot written");
+
+    // resumed run: picks up from the snapshot and finishes the schedule
+    let (res_coord, res_m) = run_cfg(RunConfig {
+        checkpoint_dir: Some(dir.clone()),
+        resume: true,
+        ..cfg
+    });
+    assert_identical(&ref_m, &res_m, what);
+    for (gt, (a, b)) in ref_coord.global().iter().zip(res_coord.global()).enumerate() {
+        assert_eq!(a.data, b.data, "{what}: global tensor {gt} diverged after resume");
+    }
+    // the resumed process only timed the rounds it actually ran
+    assert!(
+        res_m.round_wall_secs.len() < ref_m.round_wall_secs.len(),
+        "{what}: resume re-ran rounds it should have skipped"
+    );
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Acceptance: in-proc resume after 2 of 6 rounds, with client sampling
+/// active (the sampler rng snapshot and the participant's active-set
+/// replay both matter here).
+#[test]
+fn resume_is_bit_identical_in_proc() {
+    assert_resume_bit_identical(base_cfg(), 2, "inproc");
+}
+
+/// Resume composes with heterogeneous local budgets and FedProx: the
+/// fast-forward replay must reproduce each client's per-round step budget
+/// to consume exactly the right number of data draws.
+#[test]
+fn resume_is_bit_identical_under_hetero_fedprox() {
+    let cfg = RunConfig {
+        algorithm: Algorithm::Prox { mu: 0.02 },
+        hetero_local_steps: true,
+        ..base_cfg()
+    };
+    assert_resume_bit_identical(cfg, 3, "hetero");
+}
+
+/// Resume over the multi-process transport: `resume_blocks` rides the
+/// Configure frame, so every worker subprocess fast-forwards its shard's
+/// client rngs exactly as the in-proc participant does.
+#[test]
+fn resume_is_bit_identical_with_workers() {
+    let cfg = RunConfig { workers: 2, ..base_cfg() };
+    assert_resume_bit_identical(cfg, 2, "workers");
+}
+
+/// A snapshot only resumes the configuration that wrote it; drift is
+/// refused loudly instead of silently diverging.
+#[test]
+fn resume_refuses_config_drift_and_missing_snapshots() {
+    let dir = ckpt_dir("drift");
+    let cfg = RunConfig {
+        checkpoint_dir: Some(dir.clone()),
+        halt_after_rounds: 1,
+        ..base_cfg()
+    };
+    // resume before any snapshot exists: loud error, not a fresh run
+    let err = Coordinator::new(RunConfig { resume: true, ..cfg.clone() })
+        .err()
+        .map(|e| format!("{e:#}"))
+        .expect("resume without a snapshot must fail");
+    assert!(err.contains("reading checkpoint"), "{err}");
+
+    let (_, _) = run_cfg(cfg.clone());
+
+    // same dir, different seed -> different config fingerprint
+    let err = Coordinator::new(RunConfig { resume: true, seed: 99, ..cfg.clone() })
+        .err()
+        .map(|e| format!("{e:#}"))
+        .expect("a drifted config must not resume");
+    assert!(err.contains("different run configuration"), "{err}");
+
+    // a worker-count change alters the ledger shape and is refused too
+    let err = Coordinator::new(RunConfig { resume: true, workers: 2, ..cfg })
+        .err()
+        .map(|e| format!("{e:#}"))
+        .expect("a worker-count change must not resume");
+    assert!(err.contains("--workers"), "{err}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The registry travels inside the snapshot: participation recorded
+/// before the interruption survives into the resumed run's ledger.
+#[test]
+fn registry_state_survives_resume() {
+    let dir = ckpt_dir("registry");
+    let cfg = RunConfig { checkpoint_dir: Some(dir.clone()), ..base_cfg() };
+
+    let (_, halted) = run_cfg(RunConfig { halt_after_rounds: 2, ..cfg.clone() });
+    let pre: u64 = halted.per_client.iter().map(|(_, c)| c.updates).sum();
+    assert!(pre > 0, "halted run recorded no participation");
+
+    let (_, resumed) = run_cfg(RunConfig { resume: true, ..cfg });
+    let post: u64 = resumed.per_client.iter().map(|(_, c)| c.updates).sum();
+    assert!(
+        post > pre,
+        "resumed ledger must extend the snapshot's counters ({post} !> {pre})"
+    );
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -28,6 +28,7 @@ KEYS = [
     "total_bytes",
     "per_group",
     "per_participant",
+    "per_client",
     "curve",
 ]
 

@@ -1,0 +1,90 @@
+#!/usr/bin/env python3
+"""Assert a measured `fedlama bench --scale` artifact holds the client
+registry's scalability claims.
+
+Used by the scale-smoke CI job on the `--quick` (10k registered / 100
+sampled) artifact.  Checks:
+
+  - the doc is measured and carries a `scale` section,
+  - the roster/sampling shape matches what the job requested,
+  - sampling made progress (positive rounds/s) and actually wrote
+    per-client state through the spill-to-disk store,
+  - the resident set is O(sampled): touched clients are bounded by
+    sampled x rounds, never by the registered roster,
+  - the O(sampled) memory claim: the coordinator's peak RSS (VmHWM)
+    sits inside the artifact's reported bound — a flat harness
+    allowance plus a per-touched-entry budget, independent of
+    `registered`.
+"""
+
+import argparse
+import json
+import sys
+
+
+def fail(msg):
+    print(f"FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("artifact", help="bench artifact JSON (from --scale)")
+    ap.add_argument("--registered", type=int, default=0, help="expected roster size")
+    ap.add_argument("--sampled", type=int, default=0, help="expected clients per round")
+    args = ap.parse_args()
+
+    with open(args.artifact) as f:
+        doc = json.load(f)
+
+    if doc.get("measured") is not True:
+        fail("artifact is not measured (is this the committed skeleton?)")
+    s = doc.get("scale")
+    if not isinstance(s, dict):
+        fail("no scale section in the artifact (was bench run with --scale?)")
+
+    for key in (
+        "registered",
+        "sampled",
+        "rounds",
+        "rounds_per_sec",
+        "touched_clients",
+        "spilled_controls",
+        "spill_log_bytes",
+        "peak_rss_bytes",
+        "rss_bound_bytes",
+    ):
+        v = s.get(key)
+        if not isinstance(v, (int, float)) or v <= 0:
+            fail(f"scale.{key} = {v!r} (want a positive number)")
+
+    if args.registered and s["registered"] != args.registered:
+        fail(f"scale.registered = {s['registered']}, job requested {args.registered}")
+    if args.sampled and s["sampled"] != args.sampled:
+        fail(f"scale.sampled = {s['sampled']}, job requested {args.sampled}")
+
+    touched, sampled, rounds = s["touched_clients"], s["sampled"], s["rounds"]
+    if not sampled <= touched <= sampled * rounds:
+        fail(
+            f"touched_clients {touched} outside [{sampled}, {sampled * rounds}] "
+            "— the resident set must be O(sampled x rounds), not O(registered)"
+        )
+
+    if s.get("rss_within_bound") is not True:
+        fail(
+            f"peak RSS {s['peak_rss_bytes']} B exceeds the O(sampled) bound "
+            f"{s['rss_bound_bytes']} B — coordinator memory scales with the roster?"
+        )
+    if not s["peak_rss_bytes"] <= s["rss_bound_bytes"]:
+        fail("rss_within_bound is true but the numbers disagree")
+
+    print(
+        f"OK scale: {int(s['registered'])} registered / {int(sampled)} sampled "
+        f"x {int(rounds)} rounds at {s['rounds_per_sec']:.1f} rounds/s; "
+        f"peak RSS {int(s['peak_rss_bytes'])} B <= bound {int(s['rss_bound_bytes'])} B, "
+        f"{int(touched)} touched, spill log {int(s['spill_log_bytes'])} B"
+    )
+
+
+if __name__ == "__main__":
+    main()
