@@ -1,12 +1,15 @@
 //! FedLAMA's core: layer-wise discrepancy, Algorithm 2 interval
-//! adjustment, schedule state, and the aggregation compute backends.
+//! adjustment, schedule state, the aggregation compute backends, and the
+//! Byzantine-robust reducers screening each group's fold.
 
 pub mod backend;
 pub mod discrepancy;
 pub mod interval;
 pub mod policy;
+pub mod robust;
 
 pub use backend::{aggregate_group, AggBackend, AggScratch};
 pub use discrepancy::{aggregate_native, aggregate_native_with, unit_discrepancy};
 pub use interval::{adjust_intervals, adjust_intervals_accelerate, Adjustment};
 pub use policy::{Policy, Schedule};
+pub use robust::RobustSpec;

@@ -1,0 +1,593 @@
+//! Byzantine-robust aggregation reducers.
+//!
+//! FedLAMA's layer-wise scheduling makes robustness layer-granular: each
+//! aggregation group folds at its own sync point, so each group's fold can
+//! screen corrupted updates independently.  This module provides the pure
+//! reducers; `CoordinatorCore::apply_updates_quorum` feeds them one flat
+//! vector per surviving client (the group's tensors concatenated in layer
+//! order) and charges the ledger from the returned per-update flags.
+//!
+//! A `--aggregator SPEC` is a `+`-chained pipeline of *screens* followed by
+//! one terminal *fold*:
+//!
+//! ```text
+//!   spec    := stage ('+' stage)*
+//!   stage   := 'mean' | 'median' | 'trimmed:F'
+//!            | 'normclip' [':MULT']      (default MULT 2.0)
+//!            | 'filter'   [':MULT']      (default MULT 3.0)
+//! ```
+//!
+//!   - `normclip:T` — norm-clipped mean screen: radius r = T x the median
+//!     update norm of the group; any update with norm > r is scaled down
+//!     onto the radius (direction preserved) and counted as clipped.
+//!   - `filter:T`  — distance-based outlier screen: distances are measured
+//!     from the coordinate-wise weighted median of the group; any update
+//!     farther than T x the median distance is rejected outright.
+//!   - `trimmed:F` — trimmed mean fold: the F updates farthest from the
+//!     coordinate-wise weighted median are rejected, the rest are
+//!     weight-renormalized and averaged.  Requires 2F < survivors.
+//!   - `median`    — coordinate-wise weighted median fold (no rejection).
+//!   - `mean`      — plain weighted mean (the default; also the implicit
+//!     fold when a spec is screens-only, e.g. `normclip:2`).
+//!
+//! Determinism contract: rows arrive in survivor order (the active list,
+//! never arrival order), every sort is a stable sort keyed by
+//! `(value, client id)` via `f64::total_cmp`, and all randomless reductions
+//! accumulate in row order — so the fold is bit-identical across the
+//! in-proc, `--workers N`, and TCP transports, and permutation-invariant
+//! over the order updates arrived on the wire.
+
+use anyhow::{bail, ensure, Context, Result};
+
+/// Pre-fold screen: mutates or rejects individual updates.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Screen {
+    /// Clip each update onto `mult x median-norm` of the group.
+    NormClip { mult: f32 },
+    /// Reject updates farther than `mult x median-distance` from the
+    /// coordinate-wise weighted median.
+    DistFilter { mult: f32 },
+}
+
+/// Terminal fold over the accepted updates.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Fold {
+    Mean,
+    Median,
+    /// Reject the `f` farthest-from-median updates, then mean the rest.
+    Trimmed { f: usize },
+}
+
+/// Parsed `--aggregator` spec: screens applied in order, then one fold.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RobustSpec {
+    pub screens: Vec<Screen>,
+    pub fold: Fold,
+}
+
+impl RobustSpec {
+    /// The plain weighted-mean aggregator (the default).
+    pub fn mean() -> RobustSpec {
+        RobustSpec { screens: Vec::new(), fold: Fold::Mean }
+    }
+
+    /// Is this the plain mean?  The coordinator core keeps the original
+    /// zero-copy fold for it.
+    pub fn is_mean(&self) -> bool {
+        self.screens.is_empty() && self.fold == Fold::Mean
+    }
+
+    /// Updates the fold is guaranteed to discard per group (screens reject
+    /// a data-dependent number on top).  `RunConfig::validate` checks this
+    /// against the worst-case quorum survivor count.
+    pub fn guaranteed_trim(&self) -> usize {
+        match self.fold {
+            Fold::Trimmed { f } => f,
+            _ => 0,
+        }
+    }
+
+    /// Parse an `--aggregator` spec (grammar in the module docs).
+    pub fn parse(spec: &str) -> Result<RobustSpec> {
+        let spec = spec.trim();
+        if spec.is_empty() || spec == "mean" {
+            return Ok(RobustSpec::mean());
+        }
+        let mut screens = Vec::new();
+        let mut fold: Option<Fold> = None;
+        for stage in spec.split('+') {
+            ensure!(
+                fold.is_none(),
+                "bad --aggregator {spec:?}: fold stage must be last (screens \
+                 like normclip/filter come before mean/median/trimmed)"
+            );
+            let (name, arg) = match stage.split_once(':') {
+                Some((n, a)) => (n.trim(), Some(a.trim())),
+                None => (stage.trim(), None),
+            };
+            match name {
+                "mean" => {
+                    ensure!(arg.is_none(), "bad --aggregator stage {stage:?}: mean takes no arg");
+                    fold = Some(Fold::Mean);
+                }
+                "median" => {
+                    ensure!(arg.is_none(), "bad --aggregator stage {stage:?}: median takes no arg");
+                    fold = Some(Fold::Median);
+                }
+                "trimmed" => {
+                    let f: usize = arg
+                        .context("bad --aggregator: trimmed needs a count, e.g. trimmed:1")?
+                        .parse()
+                        .with_context(|| format!("bad --aggregator stage {stage:?}"))?;
+                    ensure!(f > 0, "bad --aggregator stage {stage:?}: trim count must be > 0");
+                    fold = Some(Fold::Trimmed { f });
+                }
+                "normclip" => {
+                    let mult: f32 = match arg {
+                        Some(a) => a
+                            .parse()
+                            .with_context(|| format!("bad --aggregator stage {stage:?}"))?,
+                        None => 2.0,
+                    };
+                    ensure!(
+                        mult.is_finite() && mult > 0.0,
+                        "bad --aggregator stage {stage:?}: clip multiplier must be finite and > 0"
+                    );
+                    screens.push(Screen::NormClip { mult });
+                }
+                "filter" => {
+                    let mult: f32 = match arg {
+                        Some(a) => a
+                            .parse()
+                            .with_context(|| format!("bad --aggregator stage {stage:?}"))?,
+                        None => 3.0,
+                    };
+                    // mult >= 1 keeps the median-distance update itself in
+                    // radius, so the filter can never reject every update.
+                    ensure!(
+                        mult.is_finite() && mult >= 1.0,
+                        "bad --aggregator stage {stage:?}: filter multiplier must be >= 1"
+                    );
+                    screens.push(Screen::DistFilter { mult });
+                }
+                other => bail!(
+                    "bad --aggregator stage {other:?} in {spec:?} \
+                     (mean|median|trimmed:F|normclip[:T]|filter[:T], '+'-chained)"
+                ),
+            }
+        }
+        Ok(RobustSpec { screens, fold: fold.unwrap_or(Fold::Mean) })
+    }
+
+    /// Canonical display form (round-trips through `parse`).
+    pub fn display(&self) -> String {
+        let mut parts: Vec<String> = self
+            .screens
+            .iter()
+            .map(|s| match s {
+                Screen::NormClip { mult } => format!("normclip:{mult}"),
+                Screen::DistFilter { mult } => format!("filter:{mult}"),
+            })
+            .collect();
+        parts.push(match self.fold {
+            Fold::Mean => "mean".to_string(),
+            Fold::Median => "median".to_string(),
+            Fold::Trimmed { f } => format!("trimmed:{f}"),
+        });
+        parts.join("+")
+    }
+}
+
+/// What the reducer did to one client's update (ledger attribution).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct UpdateFlags {
+    /// Excluded from the fold (filter screen or trimmed fold).
+    pub rejected: bool,
+    /// Scaled down onto the clip radius (normclip screen).
+    pub clipped: bool,
+}
+
+/// Run the full spec over one aggregation group.
+///
+/// `rows[i]` is client `clients[i]`'s update for the group (all tensors
+/// concatenated in layer order), in survivor order; `weights[i]` its
+/// aggregation weight (already renormalized over survivors).  `out`
+/// receives the folded group vector; the return value is the group
+/// discrepancy `sum_i w'_i ||out - x_i||^2` over accepted updates with
+/// weights `w'` renormalized over the accepted set, plus per-row flags.
+pub fn reduce(
+    spec: &RobustSpec,
+    rows: &mut [Vec<f32>],
+    weights: &[f32],
+    clients: &[usize],
+    out: &mut [f32],
+) -> Result<(f64, Vec<UpdateFlags>)> {
+    let m = rows.len();
+    ensure!(m > 0, "robust reduce over zero updates");
+    ensure!(
+        weights.len() == m && clients.len() == m,
+        "robust reduce shape mismatch: {m} rows, {} weights, {} clients",
+        weights.len(),
+        clients.len()
+    );
+    let dim = out.len();
+    for (i, r) in rows.iter().enumerate() {
+        ensure!(
+            r.len() == dim,
+            "robust reduce row {i} (client {}) has {} elements, group dim is {dim}",
+            clients[i],
+            r.len()
+        );
+    }
+    let mut flags = vec![UpdateFlags::default(); m];
+
+    for screen in &spec.screens {
+        match *screen {
+            Screen::NormClip { mult } => {
+                let norms: Vec<f64> = rows
+                    .iter()
+                    .zip(&flags)
+                    .map(|(r, f)| if f.rejected { f64::NAN } else { norm(r) })
+                    .collect();
+                let radius = mult as f64 * median_with_ties(&norms, clients, &flags)?;
+                for i in 0..m {
+                    if flags[i].rejected || norms[i] <= radius || norms[i] == 0.0 {
+                        continue;
+                    }
+                    let scale = (radius / norms[i]) as f32;
+                    for x in rows[i].iter_mut() {
+                        *x *= scale;
+                    }
+                    flags[i].clipped = true;
+                }
+            }
+            Screen::DistFilter { mult } => {
+                let center = coordwise_weighted_median(rows, weights, clients, &flags, dim);
+                let dists = distances(rows, &center, &flags);
+                let threshold = mult as f64 * median_with_ties(&dists, clients, &flags)?;
+                for i in 0..m {
+                    if !flags[i].rejected && dists[i] > threshold {
+                        flags[i].rejected = true;
+                    }
+                }
+            }
+        }
+    }
+
+    let disc = match spec.fold {
+        Fold::Trimmed { f } => {
+            let survivors = flags.iter().filter(|fl| !fl.rejected).count();
+            ensure!(
+                survivors > 2 * f,
+                "trimmed:{f} needs more than {} surviving updates per group, got {survivors} \
+                 (lower the trim count or raise --quorum / --active-ratio)",
+                2 * f
+            );
+            let center = coordwise_weighted_median(rows, weights, clients, &flags, dim);
+            let dists = distances(rows, &center, &flags);
+            // Stable sort by (distance, client id): ties cannot depend on
+            // arrival order, so every transport trims the same updates.
+            let mut order: Vec<usize> = (0..m).filter(|&i| !flags[i].rejected).collect();
+            order.sort_by(|&a, &b| {
+                dists[a].total_cmp(&dists[b]).then(clients[a].cmp(&clients[b]))
+            });
+            for &i in order.iter().rev().take(f) {
+                flags[i].rejected = true;
+            }
+            weighted_mean(rows, weights, &flags, out)?
+        }
+        Fold::Mean => weighted_mean(rows, weights, &flags, out)?,
+        Fold::Median => {
+            let center = coordwise_weighted_median(rows, weights, clients, &flags, dim);
+            out.copy_from_slice(&center);
+            let renorm = renormalized(weights, &flags)?;
+            let mut disc = 0.0f64;
+            for (i, r) in rows.iter().enumerate() {
+                if flags[i].rejected {
+                    continue;
+                }
+                let mut d2 = 0.0f64;
+                for (&u, &x) in out.iter().zip(r.iter()) {
+                    let e = (u - x) as f64;
+                    d2 += e * e;
+                }
+                disc += renorm[i] as f64 * d2;
+            }
+            disc
+        }
+    };
+    Ok((disc, flags))
+}
+
+/// L2 norm of one row, accumulated in f64.
+fn norm(row: &[f32]) -> f64 {
+    row.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+}
+
+/// Distance of each accepted row to `center` (rejected rows get NaN —
+/// they are never compared).
+fn distances(rows: &[Vec<f32>], center: &[f32], flags: &[UpdateFlags]) -> Vec<f64> {
+    rows.iter()
+        .zip(flags)
+        .map(|(r, f)| {
+            if f.rejected {
+                return f64::NAN;
+            }
+            let mut d2 = 0.0f64;
+            for (&x, &c) in r.iter().zip(center.iter()) {
+                let e = (x - c) as f64;
+                d2 += e * e;
+            }
+            d2.sqrt()
+        })
+        .collect()
+}
+
+/// Lower median of the accepted values, ties broken by client id (stable
+/// under any permutation of equal values).
+fn median_with_ties(vals: &[f64], clients: &[usize], flags: &[UpdateFlags]) -> Result<f64> {
+    let mut order: Vec<usize> = (0..vals.len()).filter(|&i| !flags[i].rejected).collect();
+    ensure!(!order.is_empty(), "robust screen over zero accepted updates");
+    order.sort_by(|&a, &b| vals[a].total_cmp(&vals[b]).then(clients[a].cmp(&clients[b])));
+    Ok(vals[order[(order.len() - 1) / 2]])
+}
+
+/// Renormalize `weights` over the accepted rows (rejected rows get 0).
+fn renormalized(weights: &[f32], flags: &[UpdateFlags]) -> Result<Vec<f32>> {
+    let total: f32 =
+        weights.iter().zip(flags).filter(|(_, f)| !f.rejected).map(|(&w, _)| w).sum();
+    ensure!(
+        total > 0.0,
+        "robust fold rejected every weighted update (accepted weight sum is {total})"
+    );
+    Ok(weights
+        .iter()
+        .zip(flags)
+        .map(|(&w, f)| if f.rejected { 0.0 } else { w / total })
+        .collect())
+}
+
+/// Weighted mean over accepted rows with renormalized weights; returns the
+/// group discrepancy over the accepted set.  Rejected rows ride along with
+/// weight 0 so the shared two-pass kernel keeps its row-order accumulation.
+fn weighted_mean(
+    rows: &[Vec<f32>],
+    weights: &[f32],
+    flags: &[UpdateFlags],
+    out: &mut [f32],
+) -> Result<f64> {
+    let renorm = renormalized(weights, flags)?;
+    let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+    Ok(super::aggregate_native(&refs, &renorm, out))
+}
+
+/// Coordinate-wise weighted median over the accepted rows: per coordinate,
+/// values sort by `(value, client id)` and the median is the first value
+/// whose cumulative weight reaches half the accepted total.
+fn coordwise_weighted_median(
+    rows: &[Vec<f32>],
+    weights: &[f32],
+    clients: &[usize],
+    flags: &[UpdateFlags],
+    dim: usize,
+) -> Vec<f32> {
+    let accepted: Vec<usize> = (0..rows.len()).filter(|&i| !flags[i].rejected).collect();
+    let total: f64 = accepted.iter().map(|&i| weights[i] as f64).sum();
+    let half = total / 2.0;
+    let mut center = vec![0.0f32; dim];
+    let mut order = accepted.clone();
+    for (j, c) in center.iter_mut().enumerate() {
+        order.copy_from_slice(&accepted);
+        order.sort_by(|&a, &b| {
+            rows[a][j].total_cmp(&rows[b][j]).then(clients[a].cmp(&clients[b]))
+        });
+        let mut cum = 0.0f64;
+        let mut pick = order[order.len() - 1];
+        for &i in &order {
+            cum += weights[i] as f64;
+            if cum >= half {
+                pick = i;
+                break;
+            }
+        }
+        *c = rows[pick][j];
+    }
+    center
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn uniform(m: usize) -> Vec<f32> {
+        vec![1.0 / m as f32; m]
+    }
+
+    fn run(
+        spec: &str,
+        rows: &[Vec<f32>],
+        weights: &[f32],
+        clients: &[usize],
+    ) -> (Vec<f32>, f64, Vec<UpdateFlags>) {
+        let spec = RobustSpec::parse(spec).unwrap();
+        let mut rows = rows.to_vec();
+        let mut out = vec![0.0f32; rows[0].len()];
+        let (disc, flags) = reduce(&spec, &mut rows, weights, clients, &mut out).unwrap();
+        (out, disc, flags)
+    }
+
+    #[test]
+    fn spec_grammar_round_trips() {
+        for (s, canon) in [
+            ("mean", "mean"),
+            ("", "mean"),
+            ("median", "median"),
+            ("trimmed:2", "trimmed:2"),
+            ("normclip", "normclip:2+mean"),
+            ("normclip:1.5+trimmed:1", "normclip:1.5+trimmed:1"),
+            ("filter:4+median", "filter:4+median"),
+        ] {
+            let spec = RobustSpec::parse(s).unwrap();
+            assert_eq!(RobustSpec::parse(&spec.display()).unwrap(), spec, "{s}");
+            if !spec.is_mean() {
+                assert_eq!(spec.display(), canon, "{s}");
+            }
+        }
+        assert!(RobustSpec::parse("mean").unwrap().is_mean());
+        assert!(!RobustSpec::parse("median").unwrap().is_mean());
+        for bad in
+            ["krum", "trimmed", "trimmed:0", "trimmed:x", "mean+median", "filter:0.5", "normclip:-1", "mean:2"]
+        {
+            assert!(RobustSpec::parse(bad).is_err(), "{bad} must not parse");
+        }
+    }
+
+    #[test]
+    fn trimmed_mean_matches_hand_computed_fixture() {
+        // three honest updates near 1.0, one sign-flipped attacker at -9
+        let rows = vec![
+            vec![1.0f32, 2.0],
+            vec![1.2, 2.2],
+            vec![-9.0, -18.0],
+            vec![0.8, 1.8],
+        ];
+        let clients = [0usize, 1, 2, 3];
+        let (out, disc, flags) = run("trimmed:1", &rows, &uniform(4), &clients);
+        // the attacker (client 2) is farthest from the coordinate-wise
+        // median and gets trimmed; the rest average at weight 1/3
+        assert!(flags[2].rejected && !flags[0].rejected && !flags[1].rejected && !flags[3].rejected);
+        let want = [(1.0 + 1.2 + 0.8) / 3.0, (2.0 + 2.2 + 1.8) / 3.0];
+        for (g, w) in out.iter().zip(want) {
+            assert!((g - w).abs() < 1e-6, "{out:?} vs {want:?}");
+        }
+        assert!(disc > 0.0 && disc < 1.0, "disc over accepted only, got {disc}");
+    }
+
+    #[test]
+    fn coordinate_wise_median_matches_fixture() {
+        let rows = vec![vec![1.0f32, 5.0], vec![3.0, -1.0], vec![100.0, 3.0]];
+        let clients = [0usize, 1, 2];
+        let (out, _, flags) = run("median", &rows, &uniform(3), &clients);
+        assert_eq!(out, vec![3.0, 3.0]);
+        assert!(flags.iter().all(|f| *f == UpdateFlags::default()));
+        // weighted: client 0 carries over half the weight -> its values win
+        let (out, _, _) = run("median", &rows, &[0.6, 0.2, 0.2], &clients);
+        assert_eq!(out, vec![1.0, 5.0]);
+    }
+
+    #[test]
+    fn normclip_is_idempotent_on_in_radius_updates() {
+        let rows = vec![vec![1.0f32, 0.0], vec![0.0, 1.0], vec![0.5, 0.5]];
+        let clients = [0usize, 1, 2];
+        let (clipped, disc_c, flags) = run("normclip:2", &rows, &uniform(3), &clients);
+        let (plain, disc_p, _) = run("mean", &rows, &uniform(3), &clients);
+        assert_eq!(clipped, plain, "in-radius updates must pass through untouched");
+        assert_eq!(disc_c.to_bits(), disc_p.to_bits());
+        assert!(flags.iter().all(|f| !f.clipped && !f.rejected));
+    }
+
+    #[test]
+    fn normclip_scales_the_oversized_update_onto_the_radius() {
+        let rows = vec![vec![1.0f32, 0.0], vec![0.0, 1.0], vec![30.0, 40.0]];
+        let clients = [0usize, 1, 2];
+        let (out, _, flags) = run("normclip:1", &rows, &uniform(3), &clients);
+        assert!(flags[2].clipped && !flags[0].clipped && !flags[1].clipped);
+        // median norm is 1.0 -> client 2 (norm 50) scales by 1/50
+        let want = [(1.0 + 30.0 / 50.0) / 3.0, (1.0 + 40.0 / 50.0) / 3.0];
+        for (g, w) in out.iter().zip(want) {
+            assert!((g - w).abs() < 1e-6, "{out:?} vs {want:?}");
+        }
+    }
+
+    #[test]
+    fn distance_filter_rejects_the_outlier_and_renormalizes() {
+        let rows = vec![
+            vec![1.0f32, 1.0],
+            vec![1.1, 0.9],
+            vec![0.9, 1.1],
+            vec![-50.0, 80.0],
+        ];
+        let clients = [4usize, 7, 9, 13];
+        let (out, _, flags) = run("filter:3", &rows, &uniform(4), &clients);
+        assert!(flags[3].rejected);
+        assert_eq!(flags.iter().filter(|f| f.rejected).count(), 1);
+        let want = [(1.0 + 1.1 + 0.9) / 3.0, (1.0 + 0.9 + 1.1) / 3.0];
+        for (g, w) in out.iter().zip(want) {
+            assert!((g - w).abs() < 1e-6, "{out:?} vs {want:?}");
+        }
+    }
+
+    #[test]
+    fn screens_compose_with_folds() {
+        // the scaled attacker gets clipped back into radius, then the
+        // sign-flipped one gets trimmed
+        let rows = vec![
+            vec![1.0f32, 1.0],
+            vec![200.0, 200.0],
+            vec![-1.0, -1.0],
+            vec![1.1, 0.9],
+            vec![0.9, 1.1],
+        ];
+        let clients = [0usize, 1, 2, 3, 4];
+        let (_, _, flags) = run("normclip:1.5+trimmed:1", &rows, &uniform(5), &clients);
+        assert!(flags[1].clipped, "scaled update must clip");
+        assert!(flags[2].rejected, "sign-flipped update must trim");
+        assert_eq!(flags.iter().filter(|f| f.rejected).count(), 1);
+    }
+
+    #[test]
+    fn trimmed_needs_enough_survivors() {
+        let spec = RobustSpec::parse("trimmed:1").unwrap();
+        let mut rows = vec![vec![1.0f32], vec![2.0]];
+        let mut out = vec![0.0f32];
+        let err = reduce(&spec, &mut rows, &uniform(2), &[0, 1], &mut out).unwrap_err();
+        assert!(format!("{err:#}").contains("trimmed:1 needs"), "{err:#}");
+    }
+
+    #[test]
+    fn reducers_are_permutation_invariant_over_row_order() {
+        let base: Vec<(usize, Vec<f32>, f32)> = vec![
+            (3, vec![1.0, 2.0, 3.0], 0.4),
+            (0, vec![-9.0, 4.0, 0.5], 0.1),
+            (7, vec![1.1, 2.1, 2.9], 0.2),
+            (5, vec![0.9, 1.9, 3.1], 0.3),
+        ];
+        for spec in ["median", "trimmed:1", "normclip:1", "filter:3", "normclip:1+trimmed:1"] {
+            let perms: Vec<Vec<usize>> =
+                vec![vec![0, 1, 2, 3], vec![3, 2, 1, 0], vec![1, 3, 0, 2], vec![2, 0, 3, 1]];
+            let mut golden: Option<(Vec<u32>, u64)> = None;
+            for p in perms {
+                let rows: Vec<Vec<f32>> = p.iter().map(|&i| base[i].1.clone()).collect();
+                let weights: Vec<f32> = p.iter().map(|&i| base[i].2).collect();
+                let clients: Vec<usize> = p.iter().map(|&i| base[i].0).collect();
+                let (out, disc, _) = run(spec, &rows, &weights, &clients);
+                // compare exact bit patterns: "close enough" is not the
+                // contract, bit-identical across arrival orders is
+                let bits: Vec<u32> = out.iter().map(|x| x.to_bits()).collect();
+                match &golden {
+                    None => golden = Some((bits, disc.to_bits())),
+                    Some((gb, gd)) => {
+                        assert_eq!(&bits, gb, "{spec} out diverged under permutation {p:?}");
+                        assert_eq!(disc.to_bits(), *gd, "{spec} disc diverged under {p:?}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tie_breaking_is_by_client_id_not_position() {
+        // two identical extreme rows: trimmed:1 must always trim the one
+        // with the larger client id, wherever it sits in the row order
+        let a = vec![50.0f32, 50.0];
+        let honest = vec![1.0f32, 1.0];
+        let rows1 = vec![a.clone(), a.clone(), honest.clone(), honest.clone(), honest.clone()];
+        let clients1 = [9usize, 2, 0, 1, 3];
+        let (_, _, flags1) = run("trimmed:1", &rows1, &uniform(5), &clients1);
+        assert!(flags1[0].rejected && !flags1[1].rejected, "{flags1:?}");
+        let rows2 = vec![a.clone(), a, honest.clone(), honest.clone(), honest];
+        let clients2 = [2usize, 9, 0, 1, 3];
+        let (_, _, flags2) = run("trimmed:1", &rows2, &uniform(5), &clients2);
+        assert!(flags2[1].rejected && !flags2[0].rejected, "{flags2:?}");
+    }
+}

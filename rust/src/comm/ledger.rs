@@ -50,6 +50,12 @@ pub struct ParticipantComm {
     pub rejoins: u64,
     /// Blocks committed by quorum while this shard was absent.
     pub missed_blocks: u64,
+    /// Updates from this shard a robust aggregator excluded from the fold
+    /// (distance filter or trimmed mean) — counted per (group, client).
+    pub rejected_updates: u64,
+    /// Updates from this shard the norm-clip screen scaled down onto the
+    /// clip radius before folding.
+    pub clipped_updates: u64,
 }
 
 /// Per registered-client traffic counters, keyed by global client id.
@@ -175,6 +181,25 @@ impl CommLedger {
         }
     }
 
+    /// Charge a robust-aggregator rejection of one of `client`'s group
+    /// updates to its shard.
+    pub fn record_rejected(&mut self, client: usize) {
+        if self.participants.is_empty() {
+            return;
+        }
+        let s = self.shard_of(client);
+        self.participants[s].rejected_updates += 1;
+    }
+
+    /// Charge a norm-clip of one of `client`'s group updates to its shard.
+    pub fn record_clipped(&mut self, client: usize) {
+        if self.participants.is_empty() {
+            return;
+        }
+        let s = self.shard_of(client);
+        self.participants[s].clipped_updates += 1;
+    }
+
     /// Record one aggregation of group `g` across `m_active` clients.
     pub fn record_sync(&mut self, g: usize, m_active: usize) {
         let dense_up = self.groups[g].dim * 4;
@@ -253,6 +278,8 @@ impl CommLedger {
             e.u64(p.departures);
             e.u64(p.rejoins);
             e.u64(p.missed_blocks);
+            e.u64(p.rejected_updates);
+            e.u64(p.clipped_updates);
         }
         e.u32(self.clients.len() as u32);
         for (id, c) in &self.clients {
@@ -291,6 +318,8 @@ impl CommLedger {
                 departures: d.u64()?,
                 rejoins: d.u64()?,
                 missed_blocks: d.u64()?,
+                rejected_updates: d.u64()?,
+                clipped_updates: d.u64()?,
             });
         }
         let n_clients = d.u32()? as usize;
@@ -476,6 +505,23 @@ mod tests {
         l.record_departure(9);
     }
 
+    #[test]
+    fn robust_counters_charge_the_owning_shard() {
+        let mut l = CommLedger::with_shards(&[("g".to_string(), 10)], 3);
+        // clients fold round-robin: 4 -> shard 1, 5 -> shard 2
+        l.record_rejected(5);
+        l.record_rejected(5);
+        l.record_clipped(4);
+        assert_eq!(l.participants[2].rejected_updates, 2);
+        assert_eq!(l.participants[1].clipped_updates, 1);
+        assert_eq!(l.participants[0].rejected_updates, 0);
+        assert_eq!(l.participants[0].clipped_updates, 0);
+        // a Default-constructed ledger has no participant slots: no-op
+        let mut none = CommLedger::default();
+        none.record_rejected(0);
+        none.record_clipped(0);
+    }
+
     /// Per-client counters are keyed by the registered client id, so they
     /// accumulate across shard remappings (worker-count changes fold the
     /// same client into different shards; the client row must not care).
@@ -518,6 +564,8 @@ mod tests {
         l.record_departure(1);
         l.record_rejoin(1);
         l.record_missed_block(0);
+        l.record_rejected(5);
+        l.record_clipped(4);
         let mut e = crate::protocol::wire::Enc::new();
         l.encode(&mut e).unwrap();
         let mut d = crate::protocol::wire::Dec::new(&e.buf);

@@ -1,0 +1,409 @@
+//! Deterministic fault injection: the `--chaos SPEC` plan.
+//!
+//! A `FaultPlan` turns designated participants adversarial and injects
+//! wire-level faults into the TCP path, every injection drawn from a
+//! dedicated seeded rng stream so a chaos run is exactly replayable and
+//! bit-identical across transports with the same shard count.
+//!
+//! ```text
+//!   spec  := fault (',' fault)*
+//!   fault := 'signflip' [':N']            -- shards 0..N sign-flip uplinks
+//!          | 'scale' ':Fx' [':N']         -- shards 0..N scale uplinks by F
+//!          | 'noise' [':SIGMA'] [':N']    -- shards 0..N add N(0, SIGMA^2)
+//!          | 'stall' [':N']               -- server trickles writes to 0..N
+//!          | 'corrupt-frame' [':N']       -- server flips one bit in a frame
+//!          each optionally suffixed '@rK' -- active from round K on
+//!                                            (corrupt-frame: at round K only)
+//! ```
+//!
+//! Examples: `signflip:2@r3`, `scale:10x:1`, `noise`, `stall`,
+//! `corrupt-frame@r2`, `signflip:1,stall:1@r4`.
+//!
+//! Attackers are always the *lowest* N shard ids — a deterministic choice
+//! so two executions and two transports designate the same participants.
+//! Payload attacks (signflip/scale/noise) are produced client-side in
+//! `Participant::encode_update`, before compression, so they ride every
+//! transport identically; wire faults (stall, corrupt-frame) are injected
+//! by the TCP server's write path and are inert no-ops on the in-proc and
+//! stdio transports.
+
+use anyhow::{bail, ensure, Context, Result};
+
+/// What one fault entry does.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Negate every uplink value (a gradient-ascent Byzantine client).
+    SignFlip,
+    /// Multiply every uplink value by `factor`.
+    Scale { factor: f32 },
+    /// Add gaussian noise with this standard deviation to every uplink
+    /// value, drawn from the per-(block, group, client) chaos stream.
+    Noise { sigma: f32 },
+    /// Server trickles its writes to the shard in tiny delayed chunks
+    /// (exercises the partial-write/reassembly path; numerics untouched).
+    Stall,
+    /// Server flips one rng-chosen bit in one outbound frame body — the
+    /// peer's CRC check rejects it, the connection drops, and the shard
+    /// departs (survivable only under `--quorum Q < N`).
+    CorruptFrame,
+}
+
+impl FaultKind {
+    /// Does this fault corrupt uplink *content* (client-side)?
+    pub fn is_payload(&self) -> bool {
+        matches!(self, FaultKind::SignFlip | FaultKind::Scale { .. } | FaultKind::Noise { .. })
+    }
+}
+
+/// One parsed fault entry.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Fault {
+    pub kind: FaultKind,
+    /// Affected shards: the lowest `shards` ids.
+    pub shards: usize,
+    /// First affected round (corrupt-frame: the only affected round).
+    pub from_round: usize,
+}
+
+impl Fault {
+    fn applies(&self, shard: usize, round: usize) -> bool {
+        shard < self.shards
+            && match self.kind {
+                FaultKind::CorruptFrame => round == self.from_round,
+                _ => round >= self.from_round,
+            }
+    }
+}
+
+/// The full `--chaos` plan (empty spec = no faults).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub faults: Vec<Fault>,
+}
+
+impl FaultPlan {
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let spec = spec.trim();
+        if spec.is_empty() {
+            return Ok(FaultPlan::default());
+        }
+        let mut faults = Vec::new();
+        for entry in spec.split(',') {
+            let entry = entry.trim();
+            let (body, round) = match entry.split_once('@') {
+                Some((b, r)) => {
+                    let r = r
+                        .strip_prefix('r')
+                        .with_context(|| format!("bad --chaos round suffix in {entry:?} (use @rK)"))?;
+                    let k: usize = r
+                        .parse()
+                        .with_context(|| format!("bad --chaos round suffix in {entry:?}"))?;
+                    (b, Some(k))
+                }
+                None => (entry, None),
+            };
+            let mut parts = body.split(':');
+            let name = parts.next().unwrap_or("");
+            let args: Vec<&str> = parts.collect();
+            let parse_shards = |a: Option<&&str>| -> Result<usize> {
+                match a {
+                    Some(s) => {
+                        let n: usize = s
+                            .parse()
+                            .with_context(|| format!("bad --chaos shard count in {entry:?}"))?;
+                        ensure!(n >= 1, "bad --chaos entry {entry:?}: shard count must be >= 1");
+                        Ok(n)
+                    }
+                    None => Ok(1),
+                }
+            };
+            let (kind, shards, default_round) = match name {
+                "signflip" => {
+                    ensure!(args.len() <= 1, "bad --chaos entry {entry:?}: signflip[:N]");
+                    (FaultKind::SignFlip, parse_shards(args.first())?, 0)
+                }
+                "scale" => {
+                    ensure!(
+                        !args.is_empty() && args.len() <= 2,
+                        "bad --chaos entry {entry:?}: scale:Fx[:N]"
+                    );
+                    let f = args[0].strip_suffix('x').unwrap_or(args[0]);
+                    let factor: f32 = f
+                        .parse()
+                        .with_context(|| format!("bad --chaos scale factor in {entry:?}"))?;
+                    ensure!(
+                        factor.is_finite() && factor > 0.0,
+                        "bad --chaos entry {entry:?}: scale factor must be finite and > 0"
+                    );
+                    (FaultKind::Scale { factor }, parse_shards(args.get(1))?, 0)
+                }
+                "noise" => {
+                    ensure!(args.len() <= 2, "bad --chaos entry {entry:?}: noise[:SIGMA][:N]");
+                    let sigma: f32 = match args.first() {
+                        Some(s) => s
+                            .parse()
+                            .with_context(|| format!("bad --chaos noise sigma in {entry:?}"))?,
+                        None => 1.0,
+                    };
+                    ensure!(
+                        sigma.is_finite() && sigma > 0.0,
+                        "bad --chaos entry {entry:?}: noise sigma must be finite and > 0"
+                    );
+                    (FaultKind::Noise { sigma }, parse_shards(args.get(1))?, 0)
+                }
+                "stall" => {
+                    ensure!(args.len() <= 1, "bad --chaos entry {entry:?}: stall[:N]");
+                    (FaultKind::Stall, parse_shards(args.first())?, 0)
+                }
+                "corrupt-frame" => {
+                    ensure!(args.len() <= 1, "bad --chaos entry {entry:?}: corrupt-frame[:N]");
+                    (FaultKind::CorruptFrame, parse_shards(args.first())?, 1)
+                }
+                other => bail!(
+                    "bad --chaos fault {other:?} in {spec:?} \
+                     (signflip[:N]|scale:Fx[:N]|noise[:SIGMA][:N]|stall[:N]|corrupt-frame[:N], \
+                     each optionally @rK, comma-separated)"
+                ),
+            };
+            faults.push(Fault { kind, shards, from_round: round.unwrap_or(default_round) });
+        }
+        Ok(FaultPlan { faults })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// Largest shard count any entry designates (validation bound).
+    pub fn max_shards(&self) -> usize {
+        self.faults.iter().map(|f| f.shards).max().unwrap_or(0)
+    }
+
+    /// Does any entry inject a departing wire fault (corrupt-frame)?
+    pub fn has_corrupt_frame(&self) -> bool {
+        self.faults.iter().any(|f| f.kind == FaultKind::CorruptFrame)
+    }
+
+    /// Is `shard` a payload attacker (signflip/scale/noise) at `round`?
+    pub fn attacks_payload(&self, shard: usize, round: usize) -> bool {
+        self.faults.iter().any(|f| f.kind.is_payload() && f.applies(shard, round))
+    }
+
+    /// Should the server trickle writes to `shard` at `round`?
+    pub fn stalls(&self, shard: usize, round: usize) -> bool {
+        self.faults.iter().any(|f| f.kind == FaultKind::Stall && f.applies(shard, round))
+    }
+
+    /// Should the server corrupt one outbound frame to `shard` at `round`?
+    pub fn corrupts_frame(&self, shard: usize, round: usize) -> bool {
+        self.faults.iter().any(|f| f.kind == FaultKind::CorruptFrame && f.applies(shard, round))
+    }
+
+    /// Mangler for one (block, group, client) uplink message, or `None`
+    /// when `shard` is honest at `round`.  The rng stream is keyed by
+    /// (seed, block, group, client) — never by transport or arrival order —
+    /// so the attack bytes are identical on every transport.
+    pub fn uplink_mangler(
+        &self,
+        shard: usize,
+        round: usize,
+        seed: u64,
+        k: usize,
+        group: usize,
+        client: usize,
+    ) -> Option<UplinkMangler<'_>> {
+        let faults: Vec<&Fault> = self
+            .faults
+            .iter()
+            .filter(|f| f.kind.is_payload() && f.applies(shard, round))
+            .collect();
+        if faults.is_empty() {
+            return None;
+        }
+        Some(UplinkMangler { faults, rng: ChaosRng::new(chaos_stream_seed(seed, k, group, client)) })
+    }
+}
+
+/// Applies one message's payload faults tensor-by-tensor; the embedded rng
+/// advances across tensors in layer order, so noise draws are a pure
+/// function of (seed, block, group, client, element index).
+pub struct UplinkMangler<'a> {
+    faults: Vec<&'a Fault>,
+    rng: ChaosRng,
+}
+
+impl UplinkMangler<'_> {
+    pub fn apply(&mut self, buf: &mut [f32]) {
+        for fault in &self.faults {
+            match fault.kind {
+                FaultKind::SignFlip => {
+                    for x in buf.iter_mut() {
+                        *x = -*x;
+                    }
+                }
+                FaultKind::Scale { factor } => {
+                    for x in buf.iter_mut() {
+                        *x *= factor;
+                    }
+                }
+                FaultKind::Noise { sigma } => {
+                    for x in buf.iter_mut() {
+                        *x += sigma * self.rng.normal();
+                    }
+                }
+                // wire faults never reach the payload path
+                FaultKind::Stall | FaultKind::CorruptFrame => {}
+            }
+        }
+    }
+}
+
+/// Dedicated chaos stream seed: the same splitmix-style mixing the
+/// compressor streams use, under a distinct domain tag so chaos draws can
+/// never collide with compression draws for the same (k, group, client).
+pub fn chaos_stream_seed(seed: u64, k: usize, group: usize, client: usize) -> u64 {
+    let mut h = seed ^ 0xC4A0_5C0F_FEED_FACE;
+    for v in [k as u64, group as u64, client as u64] {
+        h = splitmix(h ^ v.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    }
+    h
+}
+
+fn splitmix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z ^= z >> 30;
+    z = z.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z ^= z >> 27;
+    z = z.wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Tiny deterministic rng for chaos draws (splitmix64 sequence).
+#[derive(Debug, Clone)]
+pub struct ChaosRng {
+    state: u64,
+}
+
+impl ChaosRng {
+    pub fn new(seed: u64) -> ChaosRng {
+        ChaosRng { state: seed }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        splitmix(self.state)
+    }
+
+    /// Uniform draw in (0, 1] (never 0, safe under `ln`).
+    fn unit(&mut self) -> f64 {
+        ((self.next_u64() >> 11) as f64 + 1.0) / (1u64 << 53) as f64
+    }
+
+    /// Standard normal via Box–Muller.  Draws a fresh pair every call (no
+    /// cached spare) so the draw count per element is always exactly two —
+    /// simpler to replay than spare-caching.
+    pub fn normal(&mut self) -> f32 {
+        let u1 = self.unit();
+        let u2 = self.unit();
+        ((-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grammar_parses_the_documented_examples() {
+        let p = FaultPlan::parse("signflip:2@r3").unwrap();
+        assert_eq!(
+            p.faults,
+            vec![Fault { kind: FaultKind::SignFlip, shards: 2, from_round: 3 }]
+        );
+        let p = FaultPlan::parse("scale:10x:1").unwrap();
+        assert_eq!(
+            p.faults,
+            vec![Fault { kind: FaultKind::Scale { factor: 10.0 }, shards: 1, from_round: 0 }]
+        );
+        let p = FaultPlan::parse("noise").unwrap();
+        assert_eq!(
+            p.faults,
+            vec![Fault { kind: FaultKind::Noise { sigma: 1.0 }, shards: 1, from_round: 0 }]
+        );
+        let p = FaultPlan::parse("stall").unwrap();
+        assert_eq!(p.faults[0].kind, FaultKind::Stall);
+        // corrupt-frame defaults to round 1, not 0: corrupting the very
+        // first assignment would kill the shard before it ever worked
+        let p = FaultPlan::parse("corrupt-frame").unwrap();
+        assert_eq!(
+            p.faults,
+            vec![Fault { kind: FaultKind::CorruptFrame, shards: 1, from_round: 1 }]
+        );
+        let p = FaultPlan::parse("signflip:1,stall:1@r4,noise:0.5:2").unwrap();
+        assert_eq!(p.faults.len(), 3);
+        assert_eq!(p.faults[2].kind, FaultKind::Noise { sigma: 0.5 });
+        assert_eq!(p.faults[2].shards, 2);
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        for bad in
+            ["bitsquat", "signflip:0", "scale", "scale:0x", "noise:-1", "signflip:1@x3", "scale:abcx"]
+        {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad} must not parse");
+        }
+    }
+
+    #[test]
+    fn applicability_windows() {
+        let p = FaultPlan::parse("signflip:2@r3,corrupt-frame:1@r5").unwrap();
+        assert!(!p.attacks_payload(0, 2));
+        assert!(p.attacks_payload(0, 3) && p.attacks_payload(1, 7));
+        assert!(!p.attacks_payload(2, 3), "only the lowest 2 shards attack");
+        // corrupt-frame is one-shot at its round, not from it onward
+        assert!(p.corrupts_frame(0, 5));
+        assert!(!p.corrupts_frame(0, 4) && !p.corrupts_frame(0, 6) && !p.corrupts_frame(1, 5));
+        assert!(p.has_corrupt_frame());
+        assert_eq!(p.max_shards(), 2);
+    }
+
+    #[test]
+    fn mangler_is_deterministic_and_transport_free() {
+        let p = FaultPlan::parse("noise:0.1,signflip:1").unwrap();
+        let mangle = |buf: &mut [f32]| {
+            let mut m = p.uplink_mangler(0, 0, 42, 6, 1, 3).expect("shard 0 attacks");
+            m.apply(buf);
+        };
+        let mut a = vec![1.0f32, -2.0, 3.0];
+        let mut b = a.clone();
+        mangle(&mut a);
+        mangle(&mut b);
+        assert_eq!(a, b, "same (seed, k, group, client) stream -> same bytes");
+        assert_ne!(a, vec![1.0, -2.0, 3.0]);
+        // a different client draws a different noise stream
+        let mut c = vec![1.0f32, -2.0, 3.0];
+        let mut m = p.uplink_mangler(0, 0, 42, 6, 1, 4).unwrap();
+        m.apply(&mut c);
+        assert_ne!(a, c);
+        // honest shards get no mangler at all
+        assert!(p.uplink_mangler(1, 0, 42, 6, 1, 3).is_none());
+    }
+
+    #[test]
+    fn signflip_is_exactly_negation() {
+        let p = FaultPlan::parse("signflip").unwrap();
+        let mut buf = vec![1.5f32, -0.25, 0.0];
+        p.uplink_mangler(0, 9, 7, 3, 0, 0).unwrap().apply(&mut buf);
+        assert_eq!(buf, vec![-1.5, 0.25, -0.0]);
+    }
+
+    #[test]
+    fn chaos_rng_normal_is_sane() {
+        let mut rng = ChaosRng::new(chaos_stream_seed(1, 2, 3, 4));
+        let n = 4096;
+        let draws: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let mean = draws.iter().map(|&x| x as f64).sum::<f64>() / n as f64;
+        let var =
+            draws.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.1, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.15, "var {var}");
+        assert!(draws.iter().all(|x| x.is_finite()));
+    }
+}

@@ -1,5 +1,6 @@
 //! Experiment configuration + presets for every paper table/figure.
 
+pub mod chaos;
 pub mod presets;
 
 use std::path::PathBuf;
@@ -136,6 +137,17 @@ pub struct RunConfig {
     /// "topP" (top-P% sparsification).  Composes with the layer-wise
     /// schedule — the paper's stated future work (§2, §7).
     pub compressor: String,
+    /// Per-group robust aggregation spec ("mean" default; see
+    /// `aggregation::robust::RobustSpec` for the grammar — e.g.
+    /// "trimmed:1", "median", "normclip:2+trimmed:1").  Applied inside
+    /// `apply_updates_quorum` at each group's sync point, with weights
+    /// renormalized over accepted updates.
+    pub aggregator: String,
+    /// Deterministic fault-injection plan ("" default = none; see
+    /// `config::chaos::FaultPlan` for the grammar — e.g. "signflip:1",
+    /// "scale:10x:1,stall").  Shipped to participants in the `Configure`
+    /// frame so designated shards turn adversarial on every transport.
+    pub chaos: String,
     pub verbose: bool,
     /// Snapshot coordinator state into this directory at every round
     /// boundary (`registry::checkpoint` format).  `None` disables
@@ -247,6 +259,62 @@ impl RunConfig {
                 self.workers
             );
         }
+        let robust = crate::aggregation::robust::RobustSpec::parse(&self.aggregator)?;
+        if !robust.is_mean() {
+            anyhow::ensure!(
+                self.backend != AggBackend::Xla,
+                "backend=xla forces the fused mean-aggregation kernel, which robust \
+                 reducers bypass — use --backend auto/native with --aggregator"
+            );
+            // Tolerance vs quorum: a trimmed fold discards exactly f updates
+            // per group, so it needs a strict majority of honest survivors
+            // even in the worst commit the quorum allows.  Survivors are
+            // *client* updates: losing a shard loses every active client it
+            // owns (round-robin, at most ceil(n/workers) each).
+            let f = robust.guaranteed_trim();
+            if f > 0 {
+                let k = (self.n_clients as f64 * self.active_ratio).round() as usize;
+                let lost_shards = if self.workers > 0 && self.quorum > 0 {
+                    self.workers - self.quorum
+                } else {
+                    0
+                };
+                let per_shard = self.n_clients.div_ceil(self.workers.max(1));
+                let min_survivors = k.saturating_sub(lost_shards * per_shard);
+                anyhow::ensure!(
+                    2 * f < min_survivors,
+                    "--aggregator trimmed:{f} needs more than {} surviving client updates \
+                     per group, but the worst quorum commit ({}/{} shards, {} active of {} \
+                     clients) guarantees only {min_survivors} — lower the trim count, raise \
+                     --quorum, or raise --active-ratio (a trim the quorum cannot cover would \
+                     silently degenerate, so it is rejected here instead)",
+                    2 * f,
+                    if self.quorum > 0 { self.quorum } else { self.workers.max(1) },
+                    self.workers.max(1),
+                    k,
+                    self.n_clients
+                );
+            }
+        }
+        let plan = chaos::FaultPlan::parse(&self.chaos)?;
+        if !plan.is_empty() {
+            anyhow::ensure!(
+                self.workers == 0 || plan.max_shards() <= self.workers,
+                "--chaos designates {} attacker shard(s) but the roster has only {} — \
+                 an attacker id that never exists would make the plan a silent no-op",
+                plan.max_shards(),
+                self.workers
+            );
+            if plan.has_corrupt_frame() && self.workers > 0 {
+                anyhow::ensure!(
+                    self.quorum > 0 && self.quorum < self.workers,
+                    "--chaos corrupt-frame departs the victim shard when its connection \
+                     drops; with a strict full roster that is fatal — run with \
+                     --quorum Q < {} so the round can commit over the survivors",
+                    self.workers
+                );
+            }
+        }
         if self.engine == EngineKind::Native {
             anyhow::ensure!(
                 crate::runtime::zoo::is_known(&self.model),
@@ -330,6 +398,8 @@ impl Default for RunConfig {
             use_chunk: true,
             hetero_local_steps: false,
             compressor: "dense".to_string(),
+            aggregator: "mean".to_string(),
+            chaos: String::new(),
             verbose: false,
             checkpoint_dir: None,
             resume: false,
@@ -546,6 +616,73 @@ mod tests {
         assert!(cfg.validate().is_err());
         let cfg = RunConfig { resume: true, checkpoint_dir: dir, ..Default::default() };
         cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn robust_aggregator_tolerance_vs_quorum() {
+        // plain robust run: trimmed:1 over 8 clients is fine
+        let cfg = RunConfig { aggregator: "trimmed:1".into(), ..Default::default() };
+        cfg.validate().unwrap();
+        // trimming more than half the active updates can silently
+        // degenerate — rejected loudly
+        let cfg = RunConfig { aggregator: "trimmed:4".into(), ..Default::default() };
+        let err = cfg.validate().unwrap_err();
+        assert!(format!("{err:#}").contains("trimmed:4"), "{err:#}");
+        // quorum survivors bound the tolerance: 8 clients over 4 shards,
+        // quorum 3 can lose one shard (2 clients) -> 6 survivors; trimmed:2
+        // needs > 4, ok; quorum 2 can lose 4 -> 4 survivors, rejected
+        let cfg = RunConfig {
+            workers: 4,
+            quorum: 3,
+            aggregator: "trimmed:2".into(),
+            ..Default::default()
+        };
+        cfg.validate().unwrap();
+        let cfg = RunConfig {
+            workers: 4,
+            quorum: 2,
+            aggregator: "trimmed:2".into(),
+            ..Default::default()
+        };
+        let err = cfg.validate().unwrap_err();
+        assert!(format!("{err:#}").contains("worst quorum commit"), "{err:#}");
+        // active-ratio shrinks the survivor pool the same way
+        let cfg = RunConfig {
+            active_ratio: 0.5,
+            aggregator: "trimmed:2".into(),
+            ..Default::default()
+        };
+        assert!(cfg.validate().is_err());
+        // unknown specs are loud
+        let cfg = RunConfig { aggregator: "krum".into(), ..Default::default() };
+        assert!(cfg.validate().is_err());
+        // screens-only specs have no guaranteed trim and pass
+        let cfg = RunConfig { aggregator: "normclip:2".into(), ..Default::default() };
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn chaos_plan_validates() {
+        let cfg = RunConfig { chaos: "signflip:1".into(), ..Default::default() };
+        cfg.validate().unwrap();
+        // more attackers than shards is a silent no-op -> rejected
+        let cfg = RunConfig { workers: 2, chaos: "signflip:3".into(), ..Default::default() };
+        let err = cfg.validate().unwrap_err();
+        assert!(format!("{err:#}").contains("attacker shard"), "{err:#}");
+        // corrupt-frame departs its victim: strict full roster would be fatal
+        let cfg = RunConfig { workers: 3, chaos: "corrupt-frame".into(), ..Default::default() };
+        let err = cfg.validate().unwrap_err();
+        assert!(format!("{err:#}").contains("quorum"), "{err:#}");
+        let cfg = RunConfig {
+            workers: 3,
+            quorum: 2,
+            chaos: "corrupt-frame".into(),
+            ..Default::default()
+        };
+        cfg.validate().unwrap();
+        // bad grammar is loud
+        let cfg = RunConfig { chaos: "bitsquat".into(), ..Default::default() };
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

@@ -75,6 +75,14 @@ fn print_help() {
                   metrics bit-identical to the uninterrupted run)]\n\
                  [--halt-after-rounds R (stop early after R completed rounds;\n\
                   pairs with --checkpoint-dir to stage an interrupted run)]\n\
+                 [--aggregator mean|median|trimmed:F|normclip[:T]|filter[:T]\n\
+                  ('+'-chained screens before one fold, e.g. normclip:2+trimmed:1;\n\
+                  Byzantine-robust per-group reducers, bit-identical across\n\
+                  transports)]\n\
+                 [--chaos signflip[:N]|scale:Fx[:N]|noise[:SIGMA][:N]|stall[:N]\n\
+                  |corrupt-frame[:N], each optionally @rK, comma-separated\n\
+                  (seeded fault injection: the lowest N shards turn adversarial;\n\
+                  stall/corrupt-frame are TCP wire faults)]\n\
          serve   --bind HOST:PORT --expect N + every train flag\n\
                  [--quorum Q (default N: strict full roster)]\n\
                  [--join-timeout 120] [--io-timeout 600] [--heartbeat-secs 2]\n\
@@ -157,6 +165,8 @@ fn cfg_from_args(args: &Args) -> Result<RunConfig> {
         use_chunk: !args.bool_or("no-chunk", false),
         hetero_local_steps: args.bool_or("hetero", false),
         compressor: args.str_or("compress", "dense"),
+        aggregator: args.str_or("aggregator", "mean"),
+        chaos: args.str_or("chaos", ""),
         verbose: args.bool_or("verbose", false),
         checkpoint_dir: args.get("checkpoint-dir").map(PathBuf::from),
         resume: args.bool_or("resume", false),

@@ -146,6 +146,8 @@ impl RunMetrics {
                         ("departures", Json::num(p.departures as f64)),
                         ("rejoins", Json::num(p.rejoins as f64)),
                         ("missed_blocks", Json::num(p.missed_blocks as f64)),
+                        ("rejected_updates", Json::num(p.rejected_updates as f64)),
+                        ("clipped_updates", Json::num(p.clipped_updates as f64)),
                     ])
                 })),
             ),
@@ -235,6 +237,8 @@ mod tests {
         assert_eq!(pp[1].get("shard").unwrap().as_usize(), Some(1));
         assert_eq!(pp[1].get("uplink_bytes").unwrap().as_usize(), Some(4096));
         assert_eq!(pp[1].get("downlink_bytes").unwrap().as_usize(), Some(2048));
+        assert_eq!(pp[1].get("rejected_updates").unwrap().as_usize(), Some(0));
+        assert_eq!(pp[1].get("clipped_updates").unwrap().as_usize(), Some(0));
         let pc = parsed.get("per_client").unwrap().as_arr().unwrap();
         assert_eq!(pc.len(), 2);
         assert_eq!(pc[0].get("client").unwrap().as_usize(), Some(3));

@@ -22,7 +22,7 @@
 
 use anyhow::{Context, Result};
 
-use crate::aggregation::Schedule;
+use crate::aggregation::{RobustSpec, Schedule};
 use crate::clients::ClientSampler;
 use crate::comm::CommLedger;
 use crate::config::{Algorithm, RunConfig};
@@ -286,6 +286,8 @@ pub struct CoordinatorCore {
     round_loss_n: usize,
     pending_new_round: bool,
     stack_scratch: Vec<f32>,
+    /// Parsed `--aggregator` spec; `mean` keeps the zero-copy fold.
+    robust: RobustSpec,
 }
 
 impl CoordinatorCore {
@@ -321,6 +323,8 @@ impl CoordinatorCore {
             round_loss_n: 0,
             pending_new_round: true,
             stack_scratch: Vec::new(),
+            robust: RobustSpec::parse(&cfg.aggregator)
+                .expect("cfg validated: --aggregator spec parses"),
             cfg: cfg.clone(),
         }
     }
@@ -503,9 +507,15 @@ impl CoordinatorCore {
 
             let all_dense =
                 per_client.iter().all(|u| u.tensors.iter().all(|p| p.as_dense().is_some()));
-            let disc = match fused.as_mut() {
-                Some(f) if all_dense => self.aggregate_group_fused(g, &per_client, &weights, f)?,
-                _ => self.aggregate_group_native(g, &per_client, &weights)?,
+            let disc = if self.robust.is_mean() {
+                match fused.as_mut() {
+                    Some(f) if all_dense => {
+                        self.aggregate_group_fused(g, &per_client, &weights, f)?
+                    }
+                    _ => self.aggregate_group_native(g, &per_client, &weights)?,
+                }
+            } else {
+                self.aggregate_group_robust(g, &per_client, &weights, &survivors)?
             };
 
             self.schedule.observe(g, disc);
@@ -603,6 +613,56 @@ impl CoordinatorCore {
             off += len;
         }
         Ok(disc as f64)
+    }
+
+    /// Robust path: decode each survivor's group tensors into one owned
+    /// flat row (layer order), run the `--aggregator` reducer pipeline,
+    /// scatter the folded vector back into the global tensors, and charge
+    /// the ledger's rejected/clipped counters from the per-row flags.
+    /// Rows are in survivor order and the reducer's tie-breaks key on
+    /// client id, so the result is independent of arrival order.
+    fn aggregate_group_robust(
+        &mut self,
+        g: usize,
+        per_client: &[&LayerUpdate],
+        weights: &[f32],
+        survivors: &[usize],
+    ) -> Result<f64> {
+        let group = self.groups[g].clone();
+        let mut rows: Vec<Vec<f32>> = Vec::with_capacity(per_client.len());
+        for u in per_client {
+            let mut row = Vec::with_capacity(group.dim);
+            for (ti, &t) in group.params.iter().enumerate() {
+                let want = self.global[t].data.len();
+                let vals = u.tensors[ti].decode()?;
+                anyhow::ensure!(
+                    vals.len() == want,
+                    "group {g} tensor {ti}: client {} sent {} values, expected {want}",
+                    u.client,
+                    vals.len()
+                );
+                row.extend_from_slice(&vals);
+            }
+            rows.push(row);
+        }
+        let mut out = vec![0.0f32; group.dim];
+        let (disc, flags) =
+            crate::aggregation::robust::reduce(&self.robust, &mut rows, weights, survivors, &mut out)?;
+        let mut off = 0;
+        for &t in &group.params {
+            let len = self.global[t].data.len();
+            self.global[t].data.copy_from_slice(&out[off..off + len]);
+            off += len;
+        }
+        for (i, fl) in flags.iter().enumerate() {
+            if fl.rejected {
+                self.ledger.record_rejected(survivors[i]);
+            }
+            if fl.clipped {
+                self.ledger.record_clipped(survivors[i]);
+            }
+        }
+        Ok(disc)
     }
 
     /// FedNova: adopt a participant-computed full-model sync and charge
@@ -1136,6 +1196,81 @@ mod tests {
         // every shard gone is fatal, not a silent no-op commit
         let err = core.apply_updates_quorum(&a, &[], &[0, 1, 2], None).unwrap_err();
         assert!(format!("{err:#}").contains("no surviving clients"), "{err:#}");
+    }
+
+    #[test]
+    fn robust_aggregator_rejects_the_outlier_and_charges_the_ledger() {
+        let cfg = RunConfig {
+            n_clients: 3,
+            policy: Policy::fedavg(6),
+            iterations: 12,
+            samples: 32,
+            warmup_rounds: 0,
+            aggregator: "trimmed:1".into(),
+            ..RunConfig::default()
+        };
+        cfg.validate().unwrap();
+        let groups = vec![
+            GroupInfo { name: "g0".into(), dim: 3, params: vec![0] },
+            GroupInfo { name: "g1".into(), dim: 2, params: vec![1] },
+        ];
+        let global = vec![
+            HostTensor::from_vec(&[3], vec![0.0; 3]),
+            HostTensor::from_vec(&[2], vec![0.0; 2]),
+        ];
+        let mut core = CoordinatorCore::new(&cfg, groups, global);
+        let a = core.begin_block().unwrap();
+        assert_eq!(a.active, vec![0, 1, 2]);
+        // client 2 is Byzantine in both groups: far from the coordinate-wise
+        // median, so trimmed:1 drops it and means the honest pair
+        let ups = vec![
+            dense_update(a.k, 0, 0, vec![vec![1.0, 2.0, 3.0]]),
+            dense_update(a.k, 0, 1, vec![vec![1.0, 2.0, 3.0]]),
+            dense_update(a.k, 0, 2, vec![vec![-9.0, -9.0, -9.0]]),
+            dense_update(a.k, 1, 0, vec![vec![5.0, 5.0]]),
+            dense_update(a.k, 1, 1, vec![vec![5.0, 5.0]]),
+            dense_update(a.k, 1, 2, vec![vec![50.0, 50.0]]),
+        ];
+        let decisions = core.apply_updates(&a, &ups, None).unwrap();
+        assert_eq!(core.global[0].data, vec![1.0, 2.0, 3.0]);
+        assert_eq!(core.global[1].data, vec![5.0, 5.0]);
+        assert_eq!(decisions[0].new_params[0], vec![1.0, 2.0, 3.0]);
+        // in-proc = one shard: both groups' rejections fold into slot 0
+        assert_eq!(core.ledger.participants[0].rejected_updates, 2);
+        assert_eq!(core.ledger.participants[0].clipped_updates, 0);
+    }
+
+    #[test]
+    fn normclip_aggregator_charges_clipped_updates() {
+        let cfg = RunConfig {
+            n_clients: 3,
+            policy: Policy::fedavg(6),
+            iterations: 6,
+            samples: 32,
+            warmup_rounds: 0,
+            aggregator: "normclip:2".into(),
+            ..RunConfig::default()
+        };
+        cfg.validate().unwrap();
+        let groups = vec![GroupInfo { name: "g0".into(), dim: 2, params: vec![0] }];
+        let global = vec![HostTensor::from_vec(&[2], vec![0.0; 2])];
+        let mut core = CoordinatorCore::new(&cfg, groups, global);
+        let a = core.begin_block().unwrap();
+        // norms 5, 5, 50: radius = 2 x median(5) = 10, so the scaled
+        // attacker is clipped onto the radius (direction preserved)
+        let ups = vec![
+            dense_update(a.k, 0, 0, vec![vec![3.0, 4.0]]),
+            dense_update(a.k, 0, 1, vec![vec![3.0, 4.0]]),
+            dense_update(a.k, 0, 2, vec![vec![30.0, 40.0]]),
+        ];
+        core.apply_updates(&a, &ups, None).unwrap();
+        assert_eq!(core.ledger.participants[0].clipped_updates, 1);
+        assert_eq!(core.ledger.participants[0].rejected_updates, 0);
+        // mean of [3,4], [3,4], and the clipped [6,8]
+        let want = [4.0f32, 16.0 / 3.0];
+        for (g, w) in core.global[0].data.iter().zip(want) {
+            assert!((g - w).abs() < 1e-5, "{:?} vs {want:?}", core.global[0].data);
+        }
     }
 
     #[test]

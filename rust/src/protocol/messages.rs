@@ -1004,6 +1004,11 @@ fn encode_cfg(e: &mut Enc, cfg: &RunConfig) -> Result<()> {
     // appended for checkpoint/resume: blocks already completed before this
     // run started, so participants fast-forward their client rng streams
     e.usize(cfg.resume_blocks);
+    // appended for robustness: the robust-aggregation spec and the fault
+    // plan — workers parse the plan to decide whether *they* are the
+    // adversary, so both must ride the Configure frame
+    e.str(&cfg.aggregator)?;
+    e.str(&cfg.chaos)?;
     Ok(())
 }
 
@@ -1069,6 +1074,8 @@ fn decode_cfg(d: &mut Dec<'_>) -> Result<RunConfig> {
         hetero_local_steps: d.bool()?,
         compressor: d.str()?,
         resume_blocks: d.usize()?,
+        aggregator: d.str()?,
+        chaos: d.str()?,
         ..RunConfig::default()
     })
 }
@@ -1165,6 +1172,8 @@ mod tests {
             hetero_local_steps: true,
             compressor: "q8".into(),
             resume_blocks: 17,
+            aggregator: "normclip:2+trimmed:1".into(),
+            chaos: "signflip:1@r2".into(),
             ..RunConfig::default()
         };
         let msg = Message::Configure(Configure {
@@ -1197,6 +1206,8 @@ mod tests {
         assert_eq!(c.cfg.hetero_local_steps, cfg.hetero_local_steps);
         assert_eq!(c.cfg.compressor, cfg.compressor);
         assert_eq!(c.cfg.resume_blocks, cfg.resume_blocks);
+        assert_eq!(c.cfg.aggregator, cfg.aggregator);
+        assert_eq!(c.cfg.chaos, cfg.chaos);
     }
 
     fn sample_update() -> LayerUpdate {

@@ -21,6 +21,7 @@ use anyhow::{Context, Result};
 
 use crate::clients::ClientState;
 use crate::comm::Spec;
+use crate::config::chaos::FaultPlan;
 use crate::config::{Algorithm, RunConfig};
 use crate::data::{partition_for, ClientData, Generator, Partition};
 use crate::runtime::{cluster, ComputeBackend, HostTensor};
@@ -46,6 +47,10 @@ pub struct Participant {
     server_control: Option<Vec<HostTensor>>,
     compressor: Spec,
     compress_enabled: bool,
+    /// Parsed `--chaos` plan; decides whether *this* shard mangles its
+    /// uplinks (payload attacks are produced client-side, pre-compression,
+    /// so they ride every transport identically).
+    chaos: FaultPlan,
 }
 
 impl Participant {
@@ -78,6 +83,7 @@ impl Participant {
     ) -> Result<Participant> {
         let compressor = Spec::parse(&cfg.compressor)
             .ok_or_else(|| anyhow::anyhow!("unknown compressor {:?}", cfg.compressor))?;
+        let chaos = FaultPlan::parse(&cfg.chaos)?;
         let mut in_shard = vec![false; cfg.n_clients];
         for &ci in &shard {
             anyhow::ensure!(ci < cfg.n_clients, "shard client {ci} >= n_clients");
@@ -103,6 +109,7 @@ impl Participant {
             server_control: None,
             compressor,
             compress_enabled: cfg.compressor != "dense",
+            chaos,
             backend,
             cfg: cfg.clone(),
         };
@@ -218,7 +225,7 @@ impl Participant {
         let mut updates = Vec::with_capacity(a.due_groups.len() * mine.len());
         for &g in &a.due_groups {
             for &ci in &mine {
-                updates.push(self.encode_update(a.k, g, ci));
+                updates.push(self.encode_update(a.k, a.round, g, ci));
             }
         }
         Ok((mine.iter().copied().zip(losses).collect(), updates))
@@ -314,16 +321,23 @@ impl Participant {
     }
 
     /// Produce one client's uplink for one group: copy its group tensors,
-    /// apply the configured lossy transform on the message-derived RNG
-    /// stream, and wrap as payloads.
-    fn encode_update(&self, k: usize, g: usize, ci: usize) -> LayerUpdate {
+    /// apply any `--chaos` payload attack (then the configured lossy
+    /// transform) on message-derived RNG streams, and wrap as payloads.
+    /// Attacks mangle the raw tensors *before* compression, so an
+    /// adversarial uplink is byte-identical on every transport.
+    fn encode_update(&self, k: usize, round: usize, g: usize, ci: usize) -> LayerUpdate {
         let group = &self.backend.manifest().groups[g];
+        let mut mangler =
+            self.chaos.uplink_mangler(self.worker_id, round, self.cfg.seed, k, g, ci);
         let tensors = group
             .params
             .iter()
             .enumerate()
             .map(|(ti, &t)| {
                 let mut buf = self.clients[ci].params[t].data.clone();
+                if let Some(m) = mangler.as_mut() {
+                    m.apply(&mut buf);
+                }
                 if self.compress_enabled {
                     // one stream per (message, tensor): transport-invariant
                     // and uncorrelated across the group's tensors

@@ -71,6 +71,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+use crate::config::chaos::{chaos_stream_seed, ChaosRng, FaultPlan};
 use crate::config::RunConfig;
 
 use super::core::{JoinAction, PeerPhase, PeerSession};
@@ -79,7 +80,7 @@ use super::messages::{
     Message, MessageStream, RoundAssignment, SyncDecision,
 };
 use super::transport::{merge_losses_absent, shard_clients, BlockResult, Transport};
-use super::wire::WIRE_VERSION;
+use super::wire::{HEADER_LEN, WIRE_VERSION};
 
 /// Timeout knobs for the coordinator side.
 #[derive(Debug, Clone)]
@@ -358,6 +359,7 @@ impl TcpServer {
                 .listener
                 .try_clone()
                 .context("retaining the listener for mid-run joins")?,
+            chaos: FaultPlan::parse(&cfg.chaos)?,
             cfg: cfg.clone(),
             n,
             opts: opts.clone(),
@@ -515,6 +517,22 @@ fn write_all_nb(peer: &mut Peer, bytes: &[u8], deadline: Instant, what: &str) ->
     Ok(())
 }
 
+/// `--chaos stall` wire fault: deliver `bytes` in tiny delayed chunks so
+/// the peer's decoder sees the frame header and body split across many
+/// partial reads.  Exercises the `FrameStatus::Truncated` reassembly path
+/// without changing a single byte — numerics are untouched.  Only the
+/// (small) assignment frames are trickled; model-sized decision fan-out
+/// keeps the normal write path so a stalled run finishes in bounded time.
+fn write_trickled_nb(peer: &mut Peer, bytes: &[u8], deadline: Instant, what: &str) -> Result<()> {
+    // deliberately unaligned with the 8-byte frame header
+    const CHUNK: usize = 7;
+    for chunk in bytes.chunks(CHUNK) {
+        write_all_nb(peer, chunk, deadline, what)?;
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    Ok(())
+}
+
 /// Absolute deadline `window` from now; zero means effectively unlimited.
 fn deadline_after(window: Duration) -> Instant {
     if window.is_zero() {
@@ -546,6 +564,10 @@ pub struct TcpTransport {
     fresh_departures: Vec<usize>,
     /// Last reported compute seconds per shard (survives departures).
     compute_secs: Vec<f64>,
+    /// Parsed `--chaos` plan: this transport injects the *wire* faults
+    /// (stall, corrupt-frame) into its own write path; payload attacks
+    /// happen client-side and just ride through.
+    chaos: FaultPlan,
 }
 
 impl TcpTransport {
@@ -613,9 +635,38 @@ impl Transport for TcpTransport {
         let deadline = deadline_after(self.opts.io_timeout);
         for s in 0..self.n {
             if self.slots[s].is_some() {
-                if let Err(e) =
+                let res = if self.chaos.corrupts_frame(s, a.round) {
+                    // flip one rng-chosen bit in the frame body: the peer's
+                    // CRC check rejects the frame, its serve loop errors
+                    // out, and the shard departs on EOF — the next block's
+                    // quorum gate decides whether the run survives
+                    let mut bad = frame.clone();
+                    let mut rng = ChaosRng::new(chaos_stream_seed(
+                        self.cfg.seed,
+                        a.k,
+                        s,
+                        usize::MAX,
+                    ));
+                    let span = bad.len() - HEADER_LEN;
+                    let byte = HEADER_LEN + rng.next_u64() as usize % span;
+                    bad[byte] ^= 1 << (rng.next_u64() % 8);
+                    eprintln!(
+                        "[serve] chaos: corrupting one bit of shard {s}'s assignment \
+                         frame at round {} (byte {byte})",
+                        a.round
+                    );
+                    write_all_nb(self.slots[s].as_mut().unwrap(), &bad, deadline, "assignment")
+                } else if self.chaos.stalls(s, a.round) {
+                    write_trickled_nb(
+                        self.slots[s].as_mut().unwrap(),
+                        &frame,
+                        deadline,
+                        "assignment",
+                    )
+                } else {
                     write_all_nb(self.slots[s].as_mut().unwrap(), &frame, deadline, "assignment")
-                {
+                };
+                if let Err(e) = res {
                     self.depart_slot(s, format!("{e:#}"));
                 }
             }

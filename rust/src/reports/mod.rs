@@ -202,6 +202,14 @@ pub fn participants_summary(m: &RunMetrics) -> Option<String> {
                 p.departures, p.rejoins, p.missed_blocks
             ));
         }
+        // robust-aggregation attribution only appears when a reducer
+        // actually screened this shard's updates
+        if p.rejected_updates + p.clipped_updates > 0 {
+            s.push_str(&format!(
+                "  [rejected {}, clipped {}]",
+                p.rejected_updates, p.clipped_updates
+            ));
+        }
         s.push('\n');
     }
     // registry-granularity totals: one aggregate over per-client counters
@@ -328,6 +336,13 @@ mod tests {
         m.per_participant[1].missed_blocks = 2;
         let s = participants_summary(&m).unwrap();
         assert!(s.contains("departed x1, rejoined x1, missed 2 blocks"), "{s}");
+        assert!(!s.contains("rejected"), "honest run hides robust counters: {s}");
+        // a shard the robust reducer screened is called out
+        m.per_participant[0].rejected_updates = 3;
+        m.per_participant[0].clipped_updates = 1;
+        let s = participants_summary(&m).unwrap();
+        assert!(s.contains("[rejected 3, clipped 1]"), "{s}");
+        assert_eq!(s.lines().count(), 3);
         // registry-granularity client totals append one aggregate line
         m.per_client = vec![
             (0, crate::comm::ClientComm { updates: 12, uplink_bytes: 4096, downlink_bytes: 2048 }),

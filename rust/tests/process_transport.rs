@@ -77,13 +77,13 @@ fn assert_workers_bit_identical(cfg: RunConfig, workers: usize, what: &str) {
     // invariant to the shard count (the fold just partitions the traffic)
     assert_eq!(m0.per_participant.len(), 1, "{what}: in-proc is one shard");
     assert_eq!(mn.per_participant.len(), workers, "{what}: one slot per worker");
-    let (_, u0, up0, down0) = m0.per_participant[0];
-    let un: u64 = mn.per_participant.iter().map(|p| p.1).sum();
-    let upn: u64 = mn.per_participant.iter().map(|p| p.2).sum();
-    let downn: u64 = mn.per_participant.iter().map(|p| p.3).sum();
-    assert_eq!(un, u0, "{what}: per-participant update total");
-    assert_eq!(upn, up0, "{what}: per-participant uplink total");
-    assert_eq!(downn, down0, "{what}: per-participant downlink total");
+    let p0 = &m0.per_participant[0];
+    let un: u64 = mn.per_participant.iter().map(|p| p.updates).sum();
+    let upn: u64 = mn.per_participant.iter().map(|p| p.uplink_bytes).sum();
+    let downn: u64 = mn.per_participant.iter().map(|p| p.downlink_bytes).sum();
+    assert_eq!(un, p0.updates, "{what}: per-participant update total");
+    assert_eq!(upn, p0.uplink_bytes, "{what}: per-participant uplink total");
+    assert_eq!(downn, p0.downlink_bytes, "{what}: per-participant downlink total");
 }
 
 #[test]

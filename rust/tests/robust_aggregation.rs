@@ -1,0 +1,210 @@
+//! Byzantine-robust aggregation across transports, and the deterministic
+//! fault-injection harness — the PR's acceptance bar:
+//!
+//!   - a robust `--aggregator` spec (screens + fold) must be
+//!     **bit-identical** across in-proc, stdio `--workers N`, and TCP
+//!     runs, because the fold orders rows by the survivor list and
+//!     breaks ties by client id, never by arrival order;
+//!   - a seeded `--chaos` payload attack is keyed by (seed, k, group,
+//!     client), so two transports with the **same shard count** produce
+//!     identical adversarial runs — including which updates the robust
+//!     fold rejects and which shard the ledger charges them to;
+//!   - wire-level faults (stall, corrupt-frame) live in the TCP write
+//!     path only: stall never changes numerics, corrupt-frame departs
+//!     exactly the attacked shard.
+//!
+//! Payload attacks key on *shard* id and the in-proc run is one shard, so
+//! chaos comparisons here always pit equal shard counts against each
+//! other (`--workers 3` vs a 3-participant TCP run); only chaos-free
+//! robust runs are compared against the in-proc reference.
+
+use std::thread;
+use std::time::Duration;
+
+use fedlama::aggregation::Policy;
+use fedlama::config::RunConfig;
+use fedlama::coordinator::Coordinator;
+use fedlama::data::DatasetKind;
+use fedlama::metrics::RunMetrics;
+use fedlama::protocol::tcp::{self, JoinOpts, TcpOpts, TcpServer};
+
+/// Point worker spawns at the fedlama binary (set once; tests share the
+/// process environment).
+fn use_test_binary() {
+    static INIT: std::sync::Once = std::sync::Once::new();
+    INIT.call_once(|| std::env::set_var("FEDLAMA_WORKER_EXE", env!("CARGO_BIN_EXE_fedlama")));
+}
+
+fn base_cfg() -> RunConfig {
+    RunConfig {
+        dataset: DatasetKind::Toy,
+        n_clients: 6,
+        samples: 64,
+        lr: 0.05,
+        warmup_rounds: 2,
+        iterations: 24,
+        policy: Policy::fedlama(6, 2),
+        eval_every_rounds: 2,
+        eval_examples: 256,
+        seed: 23,
+        ..Default::default()
+    }
+}
+
+fn fast_opts() -> TcpOpts {
+    TcpOpts {
+        join_timeout: Duration::from_secs(60),
+        io_timeout: Duration::from_secs(60),
+        heartbeat_every: Duration::from_millis(50),
+    }
+}
+
+fn join_opts() -> JoinOpts {
+    JoinOpts {
+        connect_retry: Duration::from_secs(10),
+        io_timeout: Duration::from_secs(60),
+        depart_after_blocks: None,
+    }
+}
+
+/// Run `cfg` over localhost TCP with `n` participant threads.  Joiners
+/// return `Result` so chaos tests can assert on deliberate failures.
+fn run_tcp(cfg: &RunConfig, n: usize) -> (Coordinator, RunMetrics, Vec<anyhow::Result<usize>>) {
+    let server = TcpServer::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let joins: Vec<_> = (0..n)
+        .map(|_| {
+            let a = addr.clone();
+            thread::spawn(move || tcp::join(&a, &join_opts()))
+        })
+        .collect();
+    let cfg = RunConfig { workers: n, ..cfg.clone() };
+    let mut coord = Coordinator::new(cfg).unwrap();
+    let mut transport = server.accept_participants(&coord.cfg, n, &fast_opts()).unwrap();
+    let metrics = coord.run_with_transport(&mut transport).unwrap();
+    let outcomes: Vec<_> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+    (coord, metrics, outcomes)
+}
+
+/// TCP run where every joiner must survive to Shutdown.
+fn run_tcp_clean(cfg: &RunConfig, n: usize) -> (Coordinator, RunMetrics) {
+    let (coord, metrics, outcomes) = run_tcp(cfg, n);
+    let mut shards: Vec<usize> = outcomes.into_iter().map(|r| r.unwrap()).collect();
+    shards.sort_unstable();
+    assert_eq!(shards, (0..n).collect::<Vec<_>>(), "every shard served exactly once");
+    (coord, metrics)
+}
+
+fn run_with_workers(cfg: &RunConfig, workers: usize) -> (Coordinator, RunMetrics) {
+    if workers > 0 {
+        use_test_binary();
+    }
+    let cfg = RunConfig { workers, ..cfg.clone() };
+    let mut coord = Coordinator::new(cfg).unwrap();
+    let metrics = coord.run().unwrap();
+    (coord, metrics)
+}
+
+/// Everything except wall-clock (and the shard-count-dependent
+/// per-participant table) must match exactly.
+fn assert_metrics_identical(a: &RunMetrics, b: &RunMetrics, what: &str) {
+    assert_eq!(a.tag, b.tag, "{what}: tag");
+    assert_eq!(a.curve, b.curve, "{what}: learning curve");
+    assert_eq!(a.final_acc, b.final_acc, "{what}: final_acc");
+    assert_eq!(a.final_loss, b.final_loss, "{what}: final_loss");
+    assert_eq!(a.total_comm_cost, b.total_comm_cost, "{what}: Eq.9 comm cost");
+    assert_eq!(a.total_syncs, b.total_syncs, "{what}: syncs");
+    assert_eq!(a.total_bytes, b.total_bytes, "{what}: bytes");
+    assert_eq!(a.per_group, b.per_group, "{what}: per-group ledger");
+}
+
+fn assert_globals_identical(a: &Coordinator, b: &Coordinator, what: &str) {
+    for (gt, (x, y)) in a.global().iter().zip(b.global()).enumerate() {
+        assert_eq!(x.data, y.data, "{what}: global tensor {gt} diverged");
+    }
+}
+
+#[test]
+fn trimmed_fold_bit_identical_across_all_transports() {
+    let cfg = RunConfig { aggregator: "trimmed:1".into(), ..base_cfg() };
+    let (inproc, m0) = run_with_workers(&cfg, 0);
+    let (multi, mw) = run_with_workers(&cfg, 2);
+    let (over_tcp, mt) = run_tcp_clean(&cfg, 3);
+    assert_metrics_identical(&m0, &mw, "trimmed:1 inproc vs workers=2");
+    assert_metrics_identical(&m0, &mt, "trimmed:1 inproc vs tcp=3");
+    assert_globals_identical(&inproc, &multi, "trimmed:1 workers=2");
+    assert_globals_identical(&inproc, &over_tcp, "trimmed:1 tcp=3");
+    // no attacker: the honest-majority fold still trims, but trims the
+    // same rows everywhere
+    let rej0: u64 = m0.per_participant.iter().map(|p| p.rejected_updates).sum();
+    let rejt: u64 = mt.per_participant.iter().map(|p| p.rejected_updates).sum();
+    assert_eq!(rej0, rejt, "trim charges are shard-count invariant in total");
+}
+
+#[test]
+fn screened_median_bit_identical_inproc_vs_tcp() {
+    // screens compose in front of a non-mean fold; both halves must obey
+    // the same ordering contract
+    let cfg = RunConfig { aggregator: "normclip:2+median".into(), ..base_cfg() };
+    let (inproc, m0) = run_with_workers(&cfg, 0);
+    let (over_tcp, mt) = run_tcp_clean(&cfg, 2);
+    assert_metrics_identical(&m0, &mt, "normclip:2+median inproc vs tcp=2");
+    assert_globals_identical(&inproc, &over_tcp, "normclip:2+median tcp=2");
+}
+
+#[test]
+fn payload_attack_is_transport_invariant_at_equal_shard_counts() {
+    // shard 0 (clients 0 and 3 of 6) sign-flips every uplink; trimmed:2
+    // screens both forged rows out.  The stdio and TCP runs have the same
+    // shard count, so the whole adversarial run — including the rejection
+    // ledger — must match bit for bit.
+    let cfg = RunConfig {
+        aggregator: "trimmed:2".into(),
+        chaos: "signflip:1".into(),
+        ..base_cfg()
+    };
+    let (multi, mw) = run_with_workers(&cfg, 3);
+    let (over_tcp, mt) = run_tcp_clean(&cfg, 3);
+    assert_metrics_identical(&mw, &mt, "signflip:1+trimmed:2 workers=3 vs tcp=3");
+    assert_globals_identical(&multi, &over_tcp, "signflip:1+trimmed:2 tcp=3");
+    assert_eq!(
+        mw.per_participant, mt.per_participant,
+        "per-shard tables (incl. rejections) match across transports"
+    );
+    // attribution: every rejection lands on the attacking shard
+    assert!(mt.per_participant[0].rejected_updates > 0, "attacker shard charged");
+    for p in &mt.per_participant[1..] {
+        assert_eq!(p.rejected_updates, 0, "honest shard {} never rejected", p.shard);
+    }
+}
+
+#[test]
+fn stall_wire_fault_is_numerics_inert() {
+    // stall trickles shard 0's assignment frames through the TCP write
+    // path; it may slow the run but must never change a single bit
+    let clean = base_cfg();
+    let stalled = RunConfig { chaos: "stall:1".into(), ..clean.clone() };
+    let (a, ma) = run_tcp_clean(&clean, 2);
+    let (b, mb) = run_tcp_clean(&stalled, 2);
+    assert_metrics_identical(&ma, &mb, "stall:1 vs clean over tcp=2");
+    assert_globals_identical(&a, &b, "stall:1 tcp=2");
+}
+
+#[test]
+fn corrupt_frame_departs_exactly_the_attacked_shard() {
+    // one flipped bit in shard 0's round-1 assignment frame: the peer's
+    // CRC check rejects it, the connection drops, and the quorum engine
+    // finishes the run on the surviving shard
+    let cfg = RunConfig {
+        quorum: 1,
+        chaos: "corrupt-frame:1".into(),
+        ..base_cfg()
+    };
+    let (_, m, outcomes) = run_tcp(&cfg, 2);
+    let survivors: Vec<usize> = outcomes.into_iter().filter_map(|r| r.ok()).collect();
+    assert_eq!(survivors, vec![1], "shard 1 survives to Shutdown; shard 0's join errors");
+    assert_eq!(m.per_participant[0].departures, 1, "attacked shard departs once");
+    assert!(m.per_participant[0].missed_blocks >= 1, "attacked shard misses blocks");
+    assert_eq!(m.per_participant[1].departures, 0, "surviving shard never departs");
+    assert!(m.final_loss.is_finite(), "run completes under quorum=1");
+}

@@ -1,0 +1,94 @@
+#!/usr/bin/env python3
+"""Assert the Byzantine-robustness story of an adversarial chaos run.
+
+Used by the chaos-smoke CI job's adversarial leg.  Takes three fedlama
+run reports produced from the same base flags:
+
+  clean   — no attacker, plain mean (the reference trajectory)
+  robust  — attacker active (--chaos signflip:1) but screened out by a
+            robust aggregator (--aggregator trimmed:1)
+  mean    — the same attacker with the plain mean fold (unprotected)
+
+and checks the three claims the robustness PR makes:
+
+  1. containment: the robust run's final accuracy lands within
+     --acc-tolerance of the clean run (the screen rejects the forged
+     updates, so the attacker contributes nothing but a smaller
+     renormalized quorum);
+  2. attribution: every rejected update in the robust report is charged
+     to the attacking shard (chaos turns the *lowest* N shards
+     adversarial, so shard 0 here), and honest shards are never charged;
+  3. contrast: the unprotected mean run is strictly worse than the
+     robust run on both final loss and final accuracy — if the attack
+     doesn't hurt the mean, the leg is vacuous and should fail loudly.
+"""
+
+import argparse
+import json
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("clean", help="attack-free reference report")
+    ap.add_argument("robust", help="attacked run with a robust aggregator")
+    ap.add_argument("mean", help="attacked run with the plain mean fold")
+    ap.add_argument(
+        "--acc-tolerance",
+        type=float,
+        default=0.10,
+        help="max final-accuracy shortfall of the robust run vs clean",
+    )
+    args = ap.parse_args()
+
+    clean, robust, mean = load(args.clean), load(args.robust), load(args.mean)
+
+    # 1. containment
+    gap = clean["final_acc"] - robust["final_acc"]
+    if gap > args.acc_tolerance:
+        sys.exit(
+            f"robust run lost {gap:.4f} accuracy vs clean "
+            f"({robust['final_acc']:.4f} vs {clean['final_acc']:.4f}), "
+            f"tolerance {args.acc_tolerance}"
+        )
+
+    # 2. attribution
+    parts = robust["per_participant"]
+    attacker = parts[0]
+    if attacker["shard"] != 0:
+        sys.exit(f"expected shard 0 first in per_participant, got {attacker}")
+    if attacker["rejected_updates"] == 0:
+        sys.exit(f"attacking shard was never rejected: {parts}")
+    honest_rejects = [p for p in parts[1:] if p["rejected_updates"] > 0]
+    if honest_rejects:
+        sys.exit(f"honest shards charged with rejections: {honest_rejects}")
+
+    # 3. contrast — the attack must actually bite without the screen
+    if mean["final_loss"] <= robust["final_loss"]:
+        sys.exit(
+            f"unprotected mean did not diverge: loss {mean['final_loss']:.6f} "
+            f"<= robust {robust['final_loss']:.6f} (vacuous attack?)"
+        )
+    if mean["final_acc"] >= robust["final_acc"]:
+        sys.exit(
+            f"unprotected mean did not lose accuracy: {mean['final_acc']:.4f} "
+            f">= robust {robust['final_acc']:.4f} (vacuous attack?)"
+        )
+
+    print(
+        f"robust ok: clean acc {clean['final_acc']:.4f}, "
+        f"robust-under-attack acc {robust['final_acc']:.4f} "
+        f"(gap {gap:+.4f} <= {args.acc_tolerance}), "
+        f"attacker shard 0 rejected {attacker['rejected_updates']}x, "
+        f"unprotected mean collapsed to acc {mean['final_acc']:.4f} / "
+        f"loss {mean['final_loss']:.6f}"
+    )
+
+
+if __name__ == "__main__":
+    main()
