@@ -1,5 +1,24 @@
 //! Aggregation policies: which groups sync at iteration k, and how
 //! intervals evolve (Algorithm 1's schedule state machine).
+//!
+//! Beyond the paper's FullSync/FedLAMA pair, the zoo adds two related-work
+//! policies behind the same seam:
+//!
+//!   - [`Policy::DivergenceFeedback`] (FedLDF, arXiv 2404.08324): FedLAMA
+//!     scheduling, but a group whose last *measured* unit discrepancy fell
+//!     below `threshold` skips its next mid-round uplink entirely — zero
+//!     bytes on the wire, zero Eq.9 charge.  Round boundaries still sync
+//!     every group, so the full model is synchronized once per round and
+//!     each group's discrepancy measurement refreshes at least that often
+//!     (a permanently-quiet layer can wake back up).  `threshold == 0`
+//!     never skips (discrepancies are non-negative), making the policy
+//!     byte-identical to plain FedLAMA.
+//!   - [`Policy::Personalized`] (pFedLA, arXiv 2205.03993): FullSync
+//!     scheduling, but the coordinator maintains per-client layer mixing
+//!     weights lambda updated at each sync point; clients blend the
+//!     aggregate into their local params instead of adopting it outright.
+//!     The schedule itself is plain periodic — the personalization lives
+//!     in the decision fan-out and the client registry.
 
 use super::interval::{adjust_intervals, adjust_intervals_accelerate, Adjustment};
 
@@ -11,6 +30,14 @@ pub enum Policy {
     /// FedLAMA (Algorithm 1): per-group intervals in {tau, phi*tau},
     /// re-adjusted every phi*tau iterations from observed discrepancies.
     FedLama { tau: usize, phi: usize, accelerate: bool },
+    /// FedLDF-style divergence feedback: FedLAMA intervals plus a
+    /// per-group uplink skip when the measured unit discrepancy is below
+    /// `threshold` (mid-round blocks only; round boundaries always sync).
+    DivergenceFeedback { tau: usize, phi: usize, threshold: f64 },
+    /// pFedLA-style personalized aggregation: periodic full sync with
+    /// per-client layer mixing weights, moved toward each client's
+    /// agreement with the aggregate at rate `eta` per sync.
+    Personalized { interval: usize, eta: f64 },
 }
 
 impl Policy {
@@ -20,6 +47,12 @@ impl Policy {
     pub fn fedlama(tau: usize, phi: usize) -> Policy {
         Policy::FedLama { tau, phi, accelerate: false }
     }
+    pub fn divergence_feedback(tau: usize, phi: usize, threshold: f64) -> Policy {
+        Policy::DivergenceFeedback { tau, phi, threshold }
+    }
+    pub fn personalized(interval: usize, eta: f64) -> Policy {
+        Policy::Personalized { interval, eta }
+    }
 
     /// The period after which the whole model is guaranteed synchronized
     /// (round boundary: client re-sampling + eval happen here).
@@ -27,6 +60,8 @@ impl Policy {
         match self {
             Policy::FullSync { interval } => *interval,
             Policy::FedLama { tau, phi, .. } => tau * phi,
+            Policy::DivergenceFeedback { tau, phi, .. } => tau * phi,
+            Policy::Personalized { interval, .. } => *interval,
         }
     }
 
@@ -34,6 +69,16 @@ impl Policy {
         match self {
             Policy::FullSync { interval } => *interval,
             Policy::FedLama { tau, .. } => *tau,
+            Policy::DivergenceFeedback { tau, .. } => *tau,
+            Policy::Personalized { interval, .. } => *interval,
+        }
+    }
+
+    /// The personalized mixing rate, if this policy personalizes.
+    pub fn mix_eta(&self) -> Option<f64> {
+        match self {
+            Policy::Personalized { eta, .. } => Some(*eta),
+            _ => None,
         }
     }
 }
@@ -47,6 +92,11 @@ pub struct Schedule {
     /// Latest observed unit discrepancy per group (Eq. 2), refreshed at
     /// each group sync.
     pub last_unit_disc: Vec<f64>,
+    /// Whether a group's discrepancy has ever been measured.  Divergence
+    /// feedback only trusts `last_unit_disc` once it holds a real
+    /// observation — the zero-initialized value must not suppress a
+    /// group's very first sync.
+    pub observed: Vec<bool>,
     /// Group dims (for Algorithm 2).
     dims: Vec<usize>,
     /// History of adjustments (for Figure 1 and diagnostics).
@@ -61,14 +111,32 @@ impl Schedule {
             policy,
             intervals: vec![tau; l],
             last_unit_disc: vec![0.0; l],
+            observed: vec![false; l],
             dims,
             adjustments: Vec::new(),
         }
     }
 
     /// Groups due for aggregation at iteration k (1-based, as Algorithm 1).
+    /// Under divergence feedback a group whose measured discrepancy sits
+    /// below the threshold skips mid-round syncs — it transfers zero
+    /// uplink bytes that block — but round boundaries always include it.
     pub fn due_groups(&self, k: usize) -> Vec<usize> {
-        (0..self.intervals.len()).filter(|&g| k % self.intervals[g] == 0).collect()
+        let boundary = self.is_round_boundary(k);
+        (0..self.intervals.len())
+            .filter(|&g| k % self.intervals[g] == 0)
+            .filter(|&g| boundary || !self.skips_uplink(g))
+            .collect()
+    }
+
+    /// Does group g currently skip its (mid-round) uplink?
+    pub fn skips_uplink(&self, g: usize) -> bool {
+        match self.policy {
+            Policy::DivergenceFeedback { threshold, .. } => {
+                self.observed[g] && self.last_unit_disc[g] < threshold
+            }
+            _ => false,
+        }
     }
 
     /// Is iteration k a round boundary (full model synchronized)?
@@ -81,13 +149,18 @@ impl Schedule {
     pub fn observe(&mut self, g: usize, disc: f64) {
         self.last_unit_disc[g] =
             super::discrepancy::unit_discrepancy(disc, self.intervals[g], self.dims[g]);
+        self.observed[g] = true;
     }
 
     /// Algorithm 1 line 8-9: at round boundaries, re-run Algorithm 2.
-    /// No-op for FullSync and for phi == 1.
+    /// No-op for FullSync/Personalized and for phi == 1.  Divergence
+    /// feedback keeps FedLAMA's interval adjustment (it is FedLAMA plus an
+    /// uplink skip, so threshold = 0 stays bit-identical to FedLAMA).
     pub fn maybe_adjust(&mut self, k: usize) {
-        let Policy::FedLama { tau, phi, accelerate } = self.policy else {
-            return;
+        let (tau, phi, accelerate) = match self.policy {
+            Policy::FedLama { tau, phi, accelerate } => (tau, phi, accelerate),
+            Policy::DivergenceFeedback { tau, phi, .. } => (tau, phi, false),
+            _ => return,
         };
         if phi == 1 || k % (tau * phi) != 0 {
             return;
@@ -167,5 +240,49 @@ mod tests {
         let mut s = Schedule::new(Policy::fedlama(5, 2), vec![4]);
         s.observe(0, 40.0);
         assert!((s.last_unit_disc[0] - 2.0).abs() < 1e-12); // 40/(5*4)
+    }
+
+    #[test]
+    fn divergence_feedback_skips_quiet_groups_mid_round() {
+        // tau = 3, phi = 2: groups due at k = 3 (mid-round) and k = 6
+        // (round boundary)
+        let mut s = Schedule::new(Policy::divergence_feedback(3, 2, 0.5), vec![10, 10]);
+        // never measured: nothing skips, even under the threshold default
+        assert_eq!(s.due_groups(3), vec![0, 1]);
+        s.observe(0, 3.0); // unit = 3/(3*10) = 0.1 < 0.5 -> quiet
+        s.observe(1, 300.0); // unit = 10.0 >= 0.5 -> loud
+        assert!(s.skips_uplink(0));
+        assert!(!s.skips_uplink(1));
+        assert_eq!(s.due_groups(3), vec![1], "quiet group skips mid-round");
+        assert_eq!(s.due_groups(6), vec![0, 1], "round boundary syncs everyone");
+    }
+
+    #[test]
+    fn divergence_feedback_threshold_zero_matches_fedlama() {
+        let mut fb = Schedule::new(Policy::divergence_feedback(3, 2, 0.0), vec![10, 10]);
+        let mut lama = Schedule::new(Policy::fedlama(3, 2), vec![10, 10]);
+        for (g, disc) in [(0usize, 0.0f64), (1, 0.004)] {
+            fb.observe(g, disc);
+            lama.observe(g, disc);
+        }
+        for k in 1..=24 {
+            assert_eq!(fb.due_groups(k), lama.due_groups(k), "k={k}");
+        }
+        fb.maybe_adjust(6);
+        lama.maybe_adjust(6);
+        assert_eq!(fb.intervals, lama.intervals);
+    }
+
+    #[test]
+    fn personalized_schedules_like_fullsync() {
+        let mut s = Schedule::new(Policy::personalized(6, 0.5), vec![10, 20]);
+        assert_eq!(s.policy.round_len(), 6);
+        assert_eq!(s.policy.mix_eta(), Some(0.5));
+        assert!(s.due_groups(5).is_empty());
+        assert_eq!(s.due_groups(6), vec![0, 1]);
+        s.observe(0, 1.0);
+        s.maybe_adjust(6);
+        assert!(s.adjustments.is_empty(), "personalized never adjusts intervals");
+        assert!(Policy::fedavg(6).mix_eta().is_none());
     }
 }

@@ -15,10 +15,11 @@ pub enum Algorithm {
     Sgd,
     /// FedProx: prox term mu/2 * ||x - x_round_start||^2.
     Prox { mu: f32 },
-    /// SCAFFOLD: control variates (FullSync policy only).
+    /// SCAFFOLD: control variates, refreshed at round boundaries and
+    /// folded on the coordinator from `AlgoState` wire messages.
     Scaffold,
-    /// FedNova: normalized averaging over heterogeneous local step counts
-    /// (FullSync policy only).
+    /// FedNova: normalized averaging over heterogeneous local step counts,
+    /// folded on the coordinator from `AlgoState` wire messages.
     Nova,
 }
 
@@ -49,6 +50,12 @@ pub enum PartitionKind {
     Dirichlet { alpha: f64 },
     /// FEMNIST's natural writer-based heterogeneity.
     Writers,
+    /// Extreme label skew: client c holds samples of exactly one class
+    /// (c mod num_classes) — the pathological non-IID shard.
+    SingleClass,
+    /// Extreme quantity skew: client c's data size is proportional to
+    /// (c+1)^-exponent (IID class mix within each client).
+    PowerLaw { exponent: f64 },
 }
 
 /// Which compute backend executes the model (DESIGN.md, "Execution paths").
@@ -151,8 +158,11 @@ pub struct RunConfig {
     pub verbose: bool,
     /// Snapshot coordinator state into this directory at every round
     /// boundary (`registry::checkpoint` format).  `None` disables
-    /// checkpointing.  Sgd/Prox only: the other baselines keep cross-round
-    /// client state the snapshot does not capture.
+    /// checkpointing.  Every algorithm checkpoints: SCAFFOLD control
+    /// variates and personalized mixing weights ride the registry into
+    /// the snapshot, so nothing cross-round lives outside it — except the
+    /// personalized policy's blended client replicas, which is why
+    /// `--resume` refuses that policy (see `validate`).
     pub checkpoint_dir: Option<PathBuf>,
     /// Restart from the checkpoint in `checkpoint_dir` instead of round 0.
     pub resume: bool,
@@ -198,11 +208,22 @@ impl RunConfig {
             self.n_clients
         );
         anyhow::ensure!(self.samples > 0, "samples must be > 0");
-        if matches!(self.algorithm, Algorithm::Scaffold | Algorithm::Nova) {
+        if let Policy::DivergenceFeedback { threshold, .. } = self.policy {
             anyhow::ensure!(
-                matches!(self.policy, Policy::FullSync { .. }),
-                "{} requires the FullSync policy (paper baselines use periodic full aggregation)",
-                self.algorithm.name()
+                threshold >= 0.0 && threshold.is_finite(),
+                "--threshold must be a finite non-negative unit discrepancy, got {threshold}"
+            );
+        }
+        if let Policy::Personalized { eta, .. } = self.policy {
+            anyhow::ensure!(
+                eta > 0.0 && eta <= 1.0,
+                "--mix-eta must lie in (0, 1], got {eta}"
+            );
+        }
+        if let PartitionKind::PowerLaw { exponent } = self.partition {
+            anyhow::ensure!(
+                exponent > 0.0 && exponent.is_finite(),
+                "--exponent must be a finite positive power-law exponent, got {exponent}"
             );
         }
         anyhow::ensure!(
@@ -235,18 +256,19 @@ impl RunConfig {
         if self.workers > 0 {
             self.validate_sharded("--workers")?;
         }
-        if self.checkpoint_dir.is_some() || self.resume_blocks > 0 {
-            anyhow::ensure!(
-                matches!(self.algorithm, Algorithm::Sgd | Algorithm::Prox { .. }),
-                "--checkpoint-dir requires sgd or fedprox: {} keeps cross-round client \
-                 state the round-boundary snapshot does not capture",
-                self.algorithm.name()
-            );
-        }
         anyhow::ensure!(
             !self.resume || self.checkpoint_dir.is_some(),
             "--resume needs --checkpoint-dir to know where the snapshot lives"
         );
+        if self.resume {
+            anyhow::ensure!(
+                !matches!(self.policy, Policy::Personalized { .. }),
+                "--resume with --policy personalized would silently diverge: the blended \
+                 per-client replicas live on participants and are not captured by the \
+                 snapshot (the mixing weights are, the parameters they produced are not) — \
+                 run uninterrupted or switch policies"
+            );
+        }
         if self.quorum > 0 {
             anyhow::ensure!(
                 self.workers > 0,
@@ -334,18 +356,12 @@ impl RunConfig {
     }
 
     /// Constraints every *sharded* transport shares — `--workers`
-    /// subprocesses and TCP participants alike: server-side-state
-    /// baselines (SCAFFOLD, FedNova) read raw client state the wire
-    /// protocol does not ship, and only the native engine can rebuild its
-    /// compute backend from the `Configure` frame (PJRT artifacts are not
-    /// shipped).  `transport` names the flag for the error message.
+    /// subprocesses and TCP participants alike: only the native engine can
+    /// rebuild its compute backend from the `Configure` frame (PJRT
+    /// artifacts are not shipped).  Every algorithm is transport-complete:
+    /// SCAFFOLD/FedNova state rides `AlgoState`/`ControlUpdate` frames.
+    /// `transport` names the flag for the error message.
     pub fn validate_sharded(&self, transport: &str) -> anyhow::Result<()> {
-        anyhow::ensure!(
-            matches!(self.algorithm, Algorithm::Sgd | Algorithm::Prox { .. }),
-            "{transport} requires sgd or fedprox: {} reads client state on the server at \
-             round boundaries, which sharded transports do not ship",
-            self.algorithm.name()
-        );
         anyhow::ensure!(
             self.engine == EngineKind::Native,
             "{transport} requires the native engine (participants rebuild their \
@@ -367,6 +383,12 @@ impl RunConfig {
                 } else {
                     format!("fedlama({tau},{phi})")
                 }
+            }
+            Policy::DivergenceFeedback { tau, phi, threshold } => {
+                format!("divfb({tau},{phi},{threshold})")
+            }
+            Policy::Personalized { interval, eta } => {
+                format!("personalized({interval},{eta})")
             }
         }
     }
@@ -419,20 +441,65 @@ mod tests {
     }
 
     #[test]
-    fn scaffold_requires_fullsync() {
+    fn every_algorithm_composes_with_every_policy() {
+        // the zoo is transport-complete: scaffold/fednova no longer
+        // require FullSync, and the new policies accept every optimizer
+        for algo in [
+            Algorithm::Sgd,
+            Algorithm::Prox { mu: 0.01 },
+            Algorithm::Scaffold,
+            Algorithm::Nova,
+        ] {
+            for policy in [
+                Policy::fedavg(6),
+                Policy::fedlama(6, 2),
+                Policy::divergence_feedback(6, 2, 0.5),
+                Policy::personalized(6, 0.5),
+            ] {
+                let cfg = RunConfig {
+                    algorithm: algo,
+                    policy: policy.clone(),
+                    iterations: 120,
+                    ..Default::default()
+                };
+                cfg.validate().unwrap_or_else(|e| {
+                    panic!("{}+{policy:?} should validate: {e:#}", algo.name())
+                });
+            }
+        }
+    }
+
+    #[test]
+    fn policy_and_partition_parameter_ranges() {
         let cfg = RunConfig {
-            algorithm: Algorithm::Scaffold,
-            policy: Policy::fedlama(6, 2),
-            iterations: 120,
+            policy: Policy::divergence_feedback(6, 2, -0.5),
             ..Default::default()
         };
-        assert!(cfg.validate().is_err());
-        let ok = RunConfig {
-            algorithm: Algorithm::Scaffold,
-            policy: Policy::fedavg(6),
+        let err = cfg.validate().unwrap_err();
+        assert!(format!("{err:#}").contains("--threshold"), "{err:#}");
+        for eta in [0.0, 1.5] {
+            let cfg = RunConfig { policy: Policy::personalized(6, eta), ..Default::default() };
+            let err = cfg.validate().unwrap_err();
+            assert!(format!("{err:#}").contains("--mix-eta"), "{err:#}");
+        }
+        let cfg = RunConfig {
+            partition: PartitionKind::PowerLaw { exponent: 0.0 },
             ..Default::default()
         };
-        ok.validate().unwrap();
+        let err = cfg.validate().unwrap_err();
+        assert!(format!("{err:#}").contains("--exponent"), "{err:#}");
+        let cfg = RunConfig {
+            policy: Policy::divergence_feedback(6, 2, 0.0),
+            partition: PartitionKind::SingleClass,
+            ..Default::default()
+        };
+        cfg.validate().unwrap();
+        let cfg = RunConfig {
+            policy: Policy::personalized(6, 1.0),
+            partition: PartitionKind::PowerLaw { exponent: 1.2 },
+            ..Default::default()
+        };
+        cfg.validate().unwrap();
     }
 
     #[test]
@@ -465,21 +532,20 @@ mod tests {
 
     #[test]
     fn multiprocess_transport_constraints() {
-        // workers > 0 composes with sgd and fedprox only
-        let cfg = RunConfig { workers: 2, ..Default::default() };
-        cfg.validate().unwrap();
-        let cfg = RunConfig {
-            workers: 2,
-            algorithm: Algorithm::Prox { mu: 0.01 },
-            ..Default::default()
-        };
-        cfg.validate().unwrap();
-        for algo in [Algorithm::Scaffold, Algorithm::Nova] {
+        // every algorithm is transport-complete: scaffold/fednova state
+        // rides AlgoState/ControlUpdate frames, so workers > 0 composes
+        // with the whole zoo
+        for algo in [
+            Algorithm::Sgd,
+            Algorithm::Prox { mu: 0.01 },
+            Algorithm::Scaffold,
+            Algorithm::Nova,
+        ] {
             let cfg = RunConfig { workers: 2, algorithm: algo, ..Default::default() };
-            let err = cfg.validate().unwrap_err();
-            assert!(format!("{err:#}").contains("--workers"), "{err:#}");
+            cfg.validate()
+                .unwrap_or_else(|e| panic!("{} over --workers should validate: {e:#}", algo.name()));
         }
-        // and requires the native engine
+        // but sharding still requires the native engine
         let cfg = RunConfig { workers: 2, engine: EngineKind::Pjrt, ..Default::default() };
         assert!(cfg.validate().is_err());
     }
@@ -509,6 +575,13 @@ mod tests {
             ..Default::default()
         };
         assert_eq!(c.tag(), "fedprox(6)");
+        let c = RunConfig {
+            policy: Policy::divergence_feedback(6, 4, 0.5),
+            ..Default::default()
+        };
+        assert_eq!(c.tag(), "divfb(6,4,0.5)");
+        let c = RunConfig { policy: Policy::personalized(6, 0.25), ..Default::default() };
+        assert_eq!(c.tag(), "personalized(6,0.25)");
     }
 
     #[test]
@@ -603,19 +676,45 @@ mod tests {
             ..Default::default()
         };
         cfg.validate().unwrap();
-        // server-side-state baselines cannot checkpoint at round boundaries
-        let cfg = RunConfig {
-            checkpoint_dir: dir.clone(),
-            algorithm: Algorithm::Scaffold,
-            ..Default::default()
-        };
-        let err = cfg.validate().unwrap_err();
-        assert!(format!("{err:#}").contains("checkpoint-dir"), "{err:#}");
+        // server-side-state baselines checkpoint too: control variates and
+        // step counts ride the registry snapshot
+        for algo in [Algorithm::Scaffold, Algorithm::Nova] {
+            let cfg = RunConfig {
+                checkpoint_dir: dir.clone(),
+                algorithm: algo,
+                ..Default::default()
+            };
+            cfg.validate()
+                .unwrap_or_else(|e| panic!("{} should checkpoint: {e:#}", algo.name()));
+        }
         // resume without a checkpoint dir has nowhere to read from
         let cfg = RunConfig { resume: true, ..Default::default() };
         assert!(cfg.validate().is_err());
         let cfg = RunConfig { resume: true, checkpoint_dir: dir, ..Default::default() };
         cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn personalized_resume_is_refused() {
+        // writing snapshots under the personalized policy is fine (global +
+        // lambda weights are real artifacts) ...
+        let dir = Some(PathBuf::from("/tmp/ckpt"));
+        let cfg = RunConfig {
+            checkpoint_dir: dir.clone(),
+            policy: Policy::personalized(6, 0.25),
+            ..Default::default()
+        };
+        cfg.validate().unwrap();
+        // ... but resuming would silently lose the blended client replicas,
+        // so it is refused loudly instead
+        let cfg = RunConfig {
+            checkpoint_dir: dir,
+            resume: true,
+            policy: Policy::personalized(6, 0.25),
+            ..Default::default()
+        };
+        let err = cfg.validate().unwrap_err();
+        assert!(format!("{err:#}").contains("personalized"), "{err:#}");
     }
 
     #[test]

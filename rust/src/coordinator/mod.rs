@@ -305,8 +305,10 @@ struct DriveStats {
 /// The protocol driver: pump assignments through the transport, feed
 /// results to the core, dispatch its decisions, and let `eval` answer the
 /// core's evaluation requests.  Purely mechanical — every decision lives
-/// in `CoordinatorCore`, every FLOP of model compute in the participants
-/// (or, for the two server-side-state baselines, the in-proc participant).
+/// in `CoordinatorCore`, every FLOP of model compute in the participants.
+/// SCAFFOLD and FedNova server reductions run in the core too, fed by the
+/// `AlgoState` frames participants ship at round boundaries, so every
+/// algorithm works on every transport.
 fn drive(
     cfg: &RunConfig,
     core: &mut CoordinatorCore,
@@ -314,7 +316,6 @@ fn drive(
     batch_size: usize,
     eval: &dyn Fn(&[HostTensor]) -> Result<(f64, f64)>,
 ) -> Result<DriveStats> {
-    let round_len = cfg.policy.round_len();
     let tag = cfg.tag();
     let mut stats = DriveStats { train_samples: 0, round_wall_secs: Vec::new() };
     if cfg.resume_blocks > 0 {
@@ -325,6 +326,15 @@ fn drive(
         for d in core.catchup_decisions() {
             transport.broadcast_decision(&d, &[])?;
         }
+        // SCAFFOLD resume: refresh the server-control replica and re-seed
+        // per-client control variates from the registry spill (both are
+        // None/empty for every other algorithm)
+        if let Some(cu) = core.catchup_control() {
+            transport.broadcast_control(&cu)?;
+        }
+        for s in core.catchup_algo()? {
+            transport.broadcast_algo(&s)?;
+        }
     }
     let mut rounds_done = 0usize;
     let mut round_t0 = Instant::now();
@@ -334,7 +344,9 @@ fn drive(
         // decision snapshot replica-only, and works from this round on
         if assignment.new_round && transport.has_pending_members() {
             let catchup = core.catchup_decisions();
-            for shard in transport.admit_ready_peers(&catchup)? {
+            let control = core.catchup_control();
+            let algo = core.catchup_algo()?;
+            for shard in transport.admit_ready_peers(&catchup, control.as_ref(), &algo)? {
                 core.note_rejoin(shard);
             }
         }
@@ -351,19 +363,14 @@ fn drive(
 
         let boundary = core.schedule.is_round_boundary(assignment.k);
         if cfg.algorithm == Algorithm::Nova && boundary {
-            // FedNova replaces plain averaging at the (full-sync) boundary;
-            // it reduces over raw client deltas, so it needs the in-proc
-            // participant (validation keeps it off multi-process runs).
-            let p = transport.in_proc().context("fednova requires the in-proc transport")?;
-            let new_global = p.nova_aggregate(&assignment.active)?;
-            core.adopt_full_model(new_global)?;
-        } else {
-            if cfg.algorithm == Algorithm::Scaffold && boundary {
-                // control update must read pre-aggregation client params
-                let p =
-                    transport.in_proc().context("scaffold requires the in-proc transport")?;
-                p.scaffold_update_controls(&assignment.active, round_len, assignment.lr)?;
+            // transport-complete FedNova: survivors shipped their round
+            // deltas as AlgoState frames; the coordinator's normalized
+            // fold replaces group-wise averaging and the fresh global goes
+            // out as one plain decision per group
+            for d in core.nova_fold(assignment.k, &result.algo)? {
+                transport.broadcast_decision(&d, &assignment.active)?;
             }
+        } else {
             // Backend choice for the weighted average: on CPU the native
             // path runs at memory bandwidth, so Auto resolves to native;
             // `--backend xla` forces the fused Pallas kernel (the TPU
@@ -394,6 +401,13 @@ fn drive(
             };
             for d in &decisions {
                 transport.broadcast_decision(d, &assignment.active)?;
+            }
+            if cfg.algorithm == Algorithm::Scaffold && boundary {
+                // survivors shipped their refreshed c_i+ as AlgoState
+                // frames; fold them into the server control and broadcast
+                // the fresh replica for the next round
+                let cu = core.scaffold_fold(assignment.k, &result.algo)?;
+                transport.broadcast_control(&cu)?;
             }
         }
 

@@ -1,12 +1,16 @@
 //! Federated data substrates: synthetic benchmark generators, IID /
-//! Dirichlet / writer-based partitioning, batch iterators (DESIGN.md §4).
+//! Dirichlet / writer-based partitioning plus extreme-non-IID scenarios
+//! (single-class shards, power-law sizes), batch iterators (DESIGN.md §4).
 
 pub mod batches;
 pub mod partition;
 pub mod synthetic;
 
 pub use batches::BatchSource;
-pub use partition::{dirichlet_partition, femnist_partition, iid_partition, ClientData, Partition};
+pub use partition::{
+    dirichlet_partition, femnist_partition, iid_partition, power_law_partition,
+    single_class_partition, ClientData, Partition,
+};
 pub use synthetic::{DatasetKind, Generator};
 
 use crate::config::{PartitionKind, RunConfig};
@@ -32,5 +36,11 @@ pub fn partition_for(cfg: &RunConfig) -> Partition {
             cfg.samples,
             &mut rng,
         ),
+        PartitionKind::SingleClass => {
+            single_class_partition(cfg.n_clients, classes, cfg.samples)
+        }
+        PartitionKind::PowerLaw { exponent } => {
+            power_law_partition(cfg.n_clients, classes, cfg.samples, exponent)
+        }
     }
 }

@@ -155,6 +155,54 @@ pub fn femnist_partition(
     Partition { clients, total }
 }
 
+/// Extreme label skew: client c holds `per_client` samples of exactly one
+/// class, c mod num_classes — every local gradient pulls toward a single
+/// label, the pathological case for layer-wise interval relaxation.
+pub fn single_class_partition(
+    n_clients: usize,
+    num_classes: usize,
+    per_client: usize,
+) -> Partition {
+    let clients: Vec<ClientData> = (0..n_clients)
+        .map(|i| {
+            let mut counts = vec![0usize; num_classes];
+            counts[i % num_classes] = per_client;
+            ClientData::new(counts)
+        })
+        .collect();
+    let total = clients.iter().map(|c| c.total).sum();
+    Partition { clients, total }
+}
+
+/// Extreme quantity skew: client c's data size is proportional to
+/// (c+1)^-exponent, scaled so the fleet holds ~ n_clients * per_client
+/// samples in aggregate.  Class mix within each client is IID.  Every
+/// client keeps at least one sample so every p_i > 0.
+pub fn power_law_partition(
+    n_clients: usize,
+    num_classes: usize,
+    per_client: usize,
+    exponent: f64,
+) -> Partition {
+    let raw: Vec<f64> = (0..n_clients).map(|i| ((i + 1) as f64).powf(-exponent)).collect();
+    let norm: f64 = raw.iter().sum();
+    let budget = (n_clients * per_client) as f64;
+    let clients: Vec<ClientData> = raw
+        .iter()
+        .map(|&w| {
+            let n = ((w / norm * budget).round() as usize).max(1);
+            // spread n over classes like the IID partitioner
+            let base = n / num_classes;
+            let rem = n % num_classes;
+            let counts: Vec<usize> =
+                (0..num_classes).map(|c| base + usize::from(c < rem)).collect();
+            ClientData::new(counts)
+        })
+        .collect();
+    let total = clients.iter().map(|c| c.total).sum();
+    Partition { clients, total }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -221,6 +269,37 @@ mod tests {
         let w = p.active_weights(&[0, 3, 7]);
         assert_eq!(w.len(), 3);
         assert!((w.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn single_class_is_maximally_skewed() {
+        let p = single_class_partition(12, 10, 64);
+        assert_eq!(p.total, 12 * 64);
+        for (i, c) in p.clients.iter().enumerate() {
+            assert_eq!(c.total, 64);
+            assert_eq!(c.counts[i % 10], 64, "client {i} holds exactly one class");
+            assert_eq!(c.counts.iter().filter(|&&n| n > 0).count(), 1);
+        }
+        // deterministic: no rng input at all
+        let q = single_class_partition(12, 10, 64);
+        assert_eq!(p.clients, q.clients);
+    }
+
+    #[test]
+    fn power_law_skews_sizes_and_keeps_everyone() {
+        let p = power_law_partition(16, 10, 100, 1.5);
+        // head client dominates, tail clients survive with >= 1 sample
+        assert!(p.clients[0].total > 8 * p.clients[15].total.max(1));
+        for c in &p.clients {
+            assert!(c.total >= 1, "no empty clients allowed");
+        }
+        // budget is approximately conserved (rounding + the >= 1 floor)
+        let budget = 16 * 100;
+        assert!(p.total >= budget / 2 && p.total <= budget + 16, "total {}", p.total);
+        // a gentler exponent flattens the head/tail ratio
+        let flat = power_law_partition(16, 10, 100, 0.2);
+        let ratio = |p: &Partition| p.clients[0].total as f64 / p.clients[15].total as f64;
+        assert!(ratio(&p) > ratio(&flat));
     }
 
     #[test]

@@ -62,16 +62,23 @@ fn print_help() {
         "fedlama — FedLAMA (AAAI'23) reproduction\n\n\
          USAGE: fedlama <train|serve|join|repro|figure|inspect|list|worker> [--flags]\n\n\
          train   --model mlp|femnist_cnn|cifar_cnn100|resnet20 --dataset D\n\
-                 [--policy fedavg|fedlama|fedlama-acc]\n\
+                 [--policy fedavg|fedlama|fedlama-acc|divergence-feedback\n\
+                  |personalized] [--threshold 0.05 (divergence-feedback:\n\
+                  groups under this unit discrepancy skip mid-round uplinks)]\n\
+                 [--mix-eta 0.25 (personalized: per-client layer mixing rate)]\n\
                  [--tau 6] [--phi 2] [--clients 16] [--active-ratio 1.0]\n\
-                 [--partition iid|dirichlet|writers] [--alpha 0.1] [--samples 512]\n\
+                 [--partition iid|dirichlet|writers|single-class|power-law]\n\
+                 [--alpha 0.1] [--exponent 1.5 (power-law size skew)]\n\
+                 [--samples 512]\n\
                  [--lr 0.1] [--warmup 4] [--iters 960] [--eval-every 4]\n\
                  [--algo sgd|fedprox|scaffold|fednova] [--mu 0.01] [--hetero]\n\
                  [--engine native|pjrt] [--threads 1 (0=auto)] [--workers 0]\n\
                  [--backend auto|native|xla] [--no-chunk] [--seed 1]\n\
                  [--out run.json] [--curve curve.csv] [--verbose]\n\
-                 [--checkpoint-dir D (snapshot state at each round boundary;\n\
-                  sgd/fedprox only)] [--resume (restart from D's snapshot;\n\
+                 [--checkpoint-dir D (snapshot state at each round boundary,\n\
+                  any --algo/--policy: control variates and personalized\n\
+                  mixing weights ride the registry into the snapshot)]\n\
+                 [--resume (restart from D's snapshot;\n\
                   metrics bit-identical to the uninterrupted run)]\n\
                  [--halt-after-rounds R (stop early after R completed rounds;\n\
                   pairs with --checkpoint-dir to stage an interrupted run)]\n\
@@ -126,14 +133,18 @@ fn cfg_from_args(args: &Args) -> Result<RunConfig> {
         .context("bad --dataset (toy|cifar10|cifar100|femnist)")?;
     let tau = args.usize_or("tau", 6);
     let phi = args.usize_or("phi", 2);
-    let policy = reports::policy_of(&args.str_or("policy", "fedavg"), tau, phi)
-        .context("bad --policy (fedavg|fedlama|fedlama-acc)")?;
+    let threshold = args.f64_or("threshold", 0.05);
+    let mix_eta = args.f64_or("mix-eta", 0.25);
+    let policy = reports::policy_of(&args.str_or("policy", "fedavg"), tau, phi, threshold, mix_eta)
+        .context("bad --policy (fedavg|fedlama|fedlama-acc|divergence-feedback|personalized)")?;
     let algorithm = Algorithm::parse(&args.str_or("algo", "sgd"), args.f32_or("mu", 0.01))
         .context("bad --algo (sgd|fedprox|scaffold|fednova)")?;
     let partition = match args.str_or("partition", "iid").as_str() {
         "iid" => PartitionKind::Iid,
         "dirichlet" => PartitionKind::Dirichlet { alpha: args.f64_or("alpha", 0.1) },
         "writers" => PartitionKind::Writers,
+        "single-class" => PartitionKind::SingleClass,
+        "power-law" => PartitionKind::PowerLaw { exponent: args.f64_or("exponent", 1.5) },
         p => anyhow::bail!("bad --partition {p}"),
     };
     let backend = AggBackend::parse(&args.str_or("backend", "auto"))

@@ -31,7 +31,9 @@ use crate::metrics::{CurvePoint, RunMetrics};
 use crate::registry::ClientRegistry;
 use crate::runtime::{GroupInfo, HostTensor};
 
-use super::messages::{cfg_wire_bytes, LayerUpdate, Message, RoundAssignment, SyncDecision};
+use super::messages::{
+    cfg_wire_bytes, AlgoState, ControlUpdate, LayerUpdate, Message, RoundAssignment, SyncDecision,
+};
 use super::wire::{Dec, Enc, WIRE_VERSION};
 
 /// Optional fused-aggregation hook: (stacked rows [m, dim], weights, dim)
@@ -271,6 +273,10 @@ pub struct CoordinatorCore {
     pub registry: ClientRegistry,
     /// The authoritative global model.
     pub global: Vec<HostTensor>,
+    /// SCAFFOLD server control variate `c` — the authoritative copy; the
+    /// per-round fold broadcasts it to participants as a `ControlUpdate`.
+    /// Lazily zero-initialized on the first scaffold fold.
+    server_control: Option<Vec<HostTensor>>,
     /// Learning-curve points recorded at round boundaries.
     pub curve: Vec<CurvePoint>,
     groups: Vec<GroupInfo>,
@@ -309,6 +315,7 @@ impl CoordinatorCore {
             partition: partition_for(cfg),
             registry: ClientRegistry::in_memory(cfg.n_clients, cfg.seed),
             global,
+            server_control: None,
             curve: Vec::new(),
             groups,
             active: Vec::new(),
@@ -526,12 +533,20 @@ impl CoordinatorCore {
             for &c in &survivors {
                 self.ledger.record_downlink(c, dense_down);
             }
+            // pFedLA-style personalization: refresh each survivor's layer
+            // mixing weight from its agreement with the fresh aggregate and
+            // append the weights to the decision fan-out
+            let mix = match self.cfg.policy.mix_eta() {
+                Some(eta) => self.personalized_mix(g, &per_client, &survivors, eta)?,
+                None => Vec::new(),
+            };
             let group = &self.groups[g];
             decisions.push(SyncDecision {
                 k: a.k,
                 group: g,
                 new_interval: self.schedule.intervals[g],
                 new_params: group.params.iter().map(|&t| self.global[t].data.clone()).collect(),
+                mix,
             });
         }
         // registry touch: once per surviving client per committed block,
@@ -542,6 +557,60 @@ impl CoordinatorCore {
             self.registry.note_bytes(c, reg_uplink[slot], reg_downlink)?;
         }
         Ok(decisions)
+    }
+
+    /// Personalized policy (pFedLA-style): update each survivor's mixing
+    /// weight for group `g` toward its *affinity* with the fresh aggregate
+    /// — `lambda <- (1 - eta) * lambda + eta * 1/(1 + d_c/dim)` where
+    /// `d_c` is the squared distance between the client's uplink and the
+    /// aggregate.  A client whose update agrees with the crowd drifts
+    /// toward full adoption (lambda -> 1); a divergent client keeps more
+    /// of its own params.  State persists per client in the registry
+    /// (lambda starts at 1.0 = plain FedAvg), so it survives sampling
+    /// gaps and checkpoint/resume.  All reductions are f64 per client in
+    /// survivor order — transport-invariant.
+    fn personalized_mix(
+        &mut self,
+        g: usize,
+        per_client: &[&LayerUpdate],
+        survivors: &[usize],
+        eta: f64,
+    ) -> Result<Vec<(usize, f32)>> {
+        let group = self.groups[g].clone();
+        let mut mix = Vec::with_capacity(survivors.len());
+        for (slot, &c) in survivors.iter().enumerate() {
+            let u = per_client[slot];
+            let mut d = 0.0f64;
+            for (ti, &t) in group.params.iter().enumerate() {
+                let owned;
+                let row: &[f32] = match u.tensors[ti].as_dense() {
+                    Some(r) => r,
+                    None => {
+                        owned = u.tensors[ti].decode()?;
+                        &owned
+                    }
+                };
+                for (&x, &uj) in row.iter().zip(&self.global[t].data) {
+                    let diff = (x - uj) as f64;
+                    d += diff * diff;
+                }
+            }
+            let affinity = 1.0 / (1.0 + d / group.dim.max(1) as f64);
+            let mut lam = match self.registry.mix_weights(c)? {
+                Some(l) => l,
+                None => vec![1.0f32; self.groups.len()],
+            };
+            anyhow::ensure!(
+                lam.len() == self.groups.len(),
+                "client {c} mix-weight vector has {} entries, model has {} groups",
+                lam.len(),
+                self.groups.len()
+            );
+            lam[g] = ((1.0 - eta) * lam[g] as f64 + eta * affinity) as f32;
+            self.registry.put_mix_weights(c, &lam)?;
+            mix.push((c, lam[g]));
+        }
+        Ok(mix)
     }
 
     /// Tensor-by-tensor weighted average in manifest order — the exact
@@ -688,6 +757,222 @@ impl CoordinatorCore {
         Ok(())
     }
 
+    /// FedNova normalized averaging (Wang et al. 2020) from wire-shipped
+    /// round deltas: `tau_eff = sum w_i * a_i`, then
+    /// `x <- x + tau_eff * sum w_i * d_i / a_i` folded in active order —
+    /// the exact accumulation order (and hence bits) of the historical
+    /// in-proc reduction.  `algo` holds one [`AlgoState`] per surviving
+    /// active client (quorum: clients whose shard departed simply do not
+    /// appear, and the weights renormalize over the survivors).  Returns
+    /// one catch-up [`SyncDecision`] per group carrying the new global —
+    /// the broadcast that replaces the old in-proc client pull.
+    pub fn nova_fold(&mut self, k: usize, algo: &[AlgoState]) -> Result<Vec<SyncDecision>> {
+        anyhow::ensure!(
+            self.cfg.algorithm == Algorithm::Nova,
+            "nova_fold called under {}",
+            self.cfg.algorithm.name()
+        );
+        let states = self.algo_by_survivor(k, algo)?;
+        anyhow::ensure!(!states.is_empty(), "no surviving FedNova states at k={k}");
+        let survivors: Vec<usize> = states.iter().map(|s| s.client).collect();
+        let weights = self.partition.active_weights(&survivors);
+        let tau_eff: f64 = states
+            .iter()
+            .zip(&weights)
+            .map(|(s, &w)| w as f64 * s.steps as f64)
+            .sum();
+        for t in 0..self.global.len() {
+            let len = self.global[t].data.len();
+            let mut delta = vec![0.0f64; len];
+            for (s, &w) in states.iter().zip(&weights) {
+                let a_i = s.steps.max(1) as f64;
+                let d = &s.tensors[t];
+                anyhow::ensure!(
+                    d.len() == len,
+                    "FedNova state tensor {t} from client {} has {} values, expected {len}",
+                    s.client,
+                    d.len()
+                );
+                for j in 0..len {
+                    delta[j] += w as f64 * d[j] as f64 / a_i;
+                }
+            }
+            let gdata = &mut self.global[t].data;
+            for j in 0..len {
+                gdata[j] += (tau_eff * delta[j]) as f32;
+            }
+        }
+        self.charge_full_model(&survivors)?;
+        Ok((0..self.groups.len())
+            .map(|g| {
+                SyncDecision::plain(
+                    k,
+                    g,
+                    self.schedule.intervals[g],
+                    self.groups[g]
+                        .params
+                        .iter()
+                        .map(|&t| self.global[t].data.clone())
+                        .collect(),
+                )
+            })
+            .collect())
+    }
+
+    /// SCAFFOLD server fold from wire-shipped refreshed controls: each
+    /// surviving client ships its `c_i+`; the coordinator computes
+    /// `c <- c + sum (c_i+ - c_i) / N` against the registry-spilled
+    /// previous `c_i` (zeros before first participation), spills `c_i+`
+    /// back, and returns the [`ControlUpdate`] broadcast that refreshes
+    /// every participant's replica.  Fold order is active order, so the
+    /// bytes are transport-invariant.
+    pub fn scaffold_fold(&mut self, k: usize, algo: &[AlgoState]) -> Result<ControlUpdate> {
+        anyhow::ensure!(
+            self.cfg.algorithm == Algorithm::Scaffold,
+            "scaffold_fold called under {}",
+            self.cfg.algorithm.name()
+        );
+        if self.server_control.is_none() {
+            self.server_control =
+                Some(self.global.iter().map(|t| HostTensor::zeros(&t.shape)).collect());
+        }
+        let states = self.algo_by_survivor(k, algo)?;
+        let n = self.cfg.n_clients as f32;
+        let control_bytes: u64 =
+            self.global.iter().map(|t| t.data.len() as u64 * 4).sum();
+        for s in &states {
+            let c_old = self.registry.control(s.client)?;
+            let server = self.server_control.as_mut().expect("initialized above");
+            anyhow::ensure!(
+                s.tensors.len() == server.len(),
+                "SCAFFOLD state from client {} has {} tensors, model has {}",
+                s.client,
+                s.tensors.len(),
+                server.len()
+            );
+            let mut spill = Vec::with_capacity(s.tensors.len());
+            for (t, new) in s.tensors.iter().enumerate() {
+                let len = server[t].data.len();
+                anyhow::ensure!(
+                    new.len() == len,
+                    "SCAFFOLD control tensor {t} from client {} has {} values, expected {len}",
+                    s.client,
+                    new.len()
+                );
+                let s_t = &mut server[t].data;
+                match c_old.as_ref() {
+                    Some(old) => {
+                        for j in 0..len {
+                            s_t[j] += (new[j] - old[t].data[j]) / n;
+                        }
+                    }
+                    None => {
+                        // previous c_i was implicit zeros
+                        for j in 0..len {
+                            s_t[j] += new[j] / n;
+                        }
+                    }
+                }
+                spill.push(HostTensor { shape: server[t].shape.clone(), data: new.clone() });
+            }
+            self.registry.put_control(s.client, &spill)?;
+            // control traffic: c_i+ uplink, c broadcast downlink
+            self.ledger.record_participant_bytes(
+                s.client,
+                control_bytes as usize,
+                control_bytes as usize,
+            );
+            self.registry.note_bytes(s.client, control_bytes, control_bytes)?;
+        }
+        Ok(ControlUpdate {
+            k,
+            tensors: self
+                .server_control
+                .as_ref()
+                .expect("initialized above")
+                .iter()
+                .map(|t| t.data.clone())
+                .collect(),
+        })
+    }
+
+    /// Validate a round's `AlgoState`s and order them by the active list
+    /// (arrival order must never influence a fold).  Clients outside the
+    /// active set and duplicates are protocol violations; active clients
+    /// that shipped nothing (departed shards under quorum) are skipped.
+    fn algo_by_survivor<'a>(
+        &self,
+        k: usize,
+        algo: &'a [AlgoState],
+    ) -> Result<Vec<&'a AlgoState>> {
+        let mut by_client: Vec<Option<&AlgoState>> = vec![None; self.active.len()];
+        for s in algo {
+            anyhow::ensure!(s.k == k, "algo state k={} for block k={k}", s.k);
+            let slot = self
+                .active
+                .iter()
+                .position(|&ci| ci == s.client)
+                .with_context(|| format!("algo state from inactive client {}", s.client))?;
+            anyhow::ensure!(
+                by_client[slot].is_none(),
+                "duplicate algo state from client {}",
+                s.client
+            );
+            by_client[slot] = Some(s);
+        }
+        Ok(by_client.into_iter().flatten().collect())
+    }
+
+    /// Ledger + registry accounting for one whole-model sync over
+    /// `survivors` (the FedNova round boundary: every group's params move,
+    /// dense, both directions).
+    fn charge_full_model(&mut self, survivors: &[usize]) -> Result<()> {
+        self.ledger.record_round();
+        let mut dense_total = 0u64;
+        for g in 0..self.groups.len() {
+            self.ledger.record_sync(g, survivors.len());
+            let dense = self.groups[g].dim * 4;
+            dense_total += dense as u64;
+            for &c in survivors {
+                self.ledger.record_participant_bytes(c, dense, dense);
+            }
+        }
+        for &c in survivors {
+            let data_size = self.partition.clients[c].total;
+            self.registry.note_seen(c, self.round, data_size)?;
+            self.registry.note_bytes(c, dense_total, dense_total)?;
+        }
+        Ok(())
+    }
+
+    /// The current server control variate broadcast, if one exists — the
+    /// catch-up frame a rejoining peer needs under SCAFFOLD.
+    pub fn catchup_control(&self) -> Option<ControlUpdate> {
+        self.server_control.as_ref().map(|tensors| ControlUpdate {
+            k: self.block * self.gap,
+            tensors: tensors.iter().map(|t| t.data.clone()).collect(),
+        })
+    }
+
+    /// Registry-spilled client control variates as catch-up `AlgoState`s
+    /// (ascending client id) — a rejoining peer adopts the ones in its
+    /// shard so its clients' `c_i` resume where the run left off.
+    pub fn catchup_algo(&mut self) -> Result<Vec<AlgoState>> {
+        let k = self.block * self.gap;
+        let mut out = Vec::new();
+        for id in self.registry.spilled_control_ids() {
+            let tensors = self
+                .registry
+                .control(id)?
+                .expect("listed control id must resolve")
+                .into_iter()
+                .map(|t| t.data)
+                .collect();
+            out.push(AlgoState { k, client: id, steps: 0, tensors });
+        }
+        Ok(out)
+    }
+
     /// Close the block: run Algorithm 2 at boundaries and report whether a
     /// round completed (and whether it wants an evaluation).
     pub fn end_block(&mut self, k: usize) -> BlockOutcome {
@@ -739,15 +1024,17 @@ impl CoordinatorCore {
     pub fn catchup_decisions(&self) -> Vec<SyncDecision> {
         let k = self.block * self.gap;
         (0..self.groups.len())
-            .map(|g| SyncDecision {
-                k,
-                group: g,
-                new_interval: self.schedule.intervals[g],
-                new_params: self.groups[g]
-                    .params
-                    .iter()
-                    .map(|&t| self.global[t].data.clone())
-                    .collect(),
+            .map(|g| {
+                SyncDecision::plain(
+                    k,
+                    g,
+                    self.schedule.intervals[g],
+                    self.groups[g]
+                        .params
+                        .iter()
+                        .map(|&t| self.global[t].data.clone())
+                        .collect(),
+                )
             })
             .collect()
     }
@@ -817,6 +1104,20 @@ impl CoordinatorCore {
             e.u64(p.comm_cost);
         }
         self.registry.encode_state(&mut e)?;
+        // v3 additions ride at the tail: divergence-feedback observation
+        // flags and the SCAFFOLD server control variate
+        e.u32(self.schedule.observed.len() as u32);
+        for &o in &self.schedule.observed {
+            e.bool(o);
+        }
+        e.bool(self.server_control.is_some());
+        if let Some(sc) = &self.server_control {
+            e.u32(sc.len() as u32);
+            for t in sc {
+                e.usizes(&t.shape)?;
+                e.f32s(&t.data)?;
+            }
+        }
         Ok(e.buf)
     }
 
@@ -913,6 +1214,37 @@ impl CoordinatorCore {
         }
         self.curve = curve;
         self.registry.decode_state(&mut d)?;
+        let n_obs = d.u32()? as usize;
+        anyhow::ensure!(
+            n_obs == self.schedule.observed.len(),
+            "checkpoint observation table length mismatch"
+        );
+        let mut observed = Vec::with_capacity(n_obs);
+        for _ in 0..n_obs {
+            observed.push(d.bool()?);
+        }
+        self.schedule.observed = observed;
+        if d.bool()? {
+            let n_ctl = d.u32()? as usize;
+            anyhow::ensure!(
+                n_ctl == self.global.len(),
+                "checkpoint server control holds {n_ctl} tensors, model has {}",
+                self.global.len()
+            );
+            let mut sc = Vec::with_capacity(n_ctl);
+            for (ti, t) in self.global.iter().enumerate() {
+                let shape = d.usizes()?;
+                let data = d.f32s()?;
+                anyhow::ensure!(
+                    shape == t.shape && data.len() == t.data.len(),
+                    "checkpoint server control tensor {ti} shape mismatch"
+                );
+                sc.push(HostTensor { shape, data });
+            }
+            self.server_control = Some(sc);
+        } else {
+            self.server_control = None;
+        }
         d.finish()?;
         Ok(())
     }
@@ -1372,6 +1704,142 @@ mod tests {
             format!("{err:#}").contains("different run configuration"),
             "{err:#}"
         );
+    }
+
+    fn tiny_core_with(
+        n_clients: usize,
+        policy: Policy,
+        iterations: usize,
+        algorithm: Algorithm,
+    ) -> CoordinatorCore {
+        let cfg = RunConfig {
+            n_clients,
+            policy,
+            iterations,
+            samples: 32,
+            warmup_rounds: 0,
+            algorithm,
+            ..RunConfig::default()
+        };
+        cfg.validate().unwrap();
+        let groups = vec![
+            GroupInfo { name: "g0".into(), dim: 3, params: vec![0] },
+            GroupInfo { name: "g1".into(), dim: 2, params: vec![1] },
+        ];
+        let global = vec![
+            HostTensor::from_vec(&[3], vec![0.0; 3]),
+            HostTensor::from_vec(&[2], vec![0.0; 2]),
+        ];
+        CoordinatorCore::new(&cfg, groups, global)
+    }
+
+    #[test]
+    fn nova_fold_normalizes_by_local_steps() {
+        let mut core = tiny_core_with(2, Policy::fedavg(6), 12, Algorithm::Nova);
+        let a = core.begin_block().unwrap();
+        assert!(a.due_groups.is_empty(), "FedNova rounds carry no group uplinks");
+        // uniform partition: w = 1/2 each; tau_eff = 0.5*2 + 0.5*4 = 3
+        // delta = 0.5*[2,2,2]/2 + 0.5*[8,8,8]/4 = [1.5,1.5,1.5]
+        // x <- 0 + 3 * 1.5 = 4.5 per coordinate of g0
+        let states = vec![
+            AlgoState { k: a.k, client: 0, steps: 2, tensors: vec![vec![2.0; 3], vec![2.0; 2]] },
+            AlgoState { k: a.k, client: 1, steps: 4, tensors: vec![vec![8.0; 3], vec![8.0; 2]] },
+        ];
+        let decisions = core.nova_fold(a.k, &states).unwrap();
+        for v in &core.global[0].data {
+            assert!((v - 4.5).abs() < 1e-6, "{v}");
+        }
+        // one plain decision per group carrying the fresh global
+        assert_eq!(decisions.len(), 2);
+        assert_eq!(decisions[0].new_params[0], core.global[0].data);
+        assert!(decisions[0].mix.is_empty());
+        // whole-model accounting: one round, both groups synced dense
+        assert_eq!(core.ledger.rounds, 1);
+        assert_eq!(core.ledger.total_cost(), 3 + 2);
+        // arrival order must not matter
+        let mut core2 = tiny_core_with(2, Policy::fedavg(6), 12, Algorithm::Nova);
+        let a2 = core2.begin_block().unwrap();
+        let rev: Vec<AlgoState> = states.iter().rev().cloned().collect();
+        core2.nova_fold(a2.k, &rev).unwrap();
+        assert_eq!(core.global[0].data, core2.global[0].data);
+    }
+
+    #[test]
+    fn scaffold_fold_accumulates_control_deltas_and_spills() {
+        let mut core = tiny_core_with(2, Policy::fedavg(6), 12, Algorithm::Scaffold);
+        let a = core.begin_block().unwrap();
+        let states = vec![
+            AlgoState { k: a.k, client: 0, steps: 2, tensors: vec![vec![1.0; 3], vec![1.0; 2]] },
+            AlgoState { k: a.k, client: 1, steps: 2, tensors: vec![vec![3.0; 3], vec![3.0; 2]] },
+        ];
+        let cu = core.scaffold_fold(a.k, &states).unwrap();
+        // previous c_i are implicit zeros: s = (1 + 3) / N=2 = 2.0
+        for v in &cu.tensors[0] {
+            assert!((v - 2.0).abs() < 1e-6, "{v}");
+        }
+        // refreshed c_i spilled into the registry
+        let c1 = core.registry.control(1).unwrap().unwrap();
+        assert_eq!(c1[0].data, vec![3.0; 3]);
+        // catch-up bundle replays the same state for a rejoining peer
+        let ctl = core.catchup_control().unwrap();
+        assert_eq!(ctl.tensors, cu.tensors);
+        let algo = core.catchup_algo().unwrap();
+        assert_eq!(algo.len(), 2);
+        assert_eq!(algo[1].client, 1);
+        assert_eq!(algo[1].tensors[0], vec![3.0; 3]);
+        // second fold applies deltas against the spilled previous controls:
+        // client 0 moves 1 -> 2, client 1 stays: s += (1 + 0)/2 = 0.5
+        let a2 = core.begin_block().unwrap();
+        let states2 = vec![
+            AlgoState { k: a2.k, client: 0, steps: 2, tensors: vec![vec![2.0; 3], vec![2.0; 2]] },
+            AlgoState { k: a2.k, client: 1, steps: 2, tensors: vec![vec![3.0; 3], vec![3.0; 2]] },
+        ];
+        let cu2 = core.scaffold_fold(a2.k, &states2).unwrap();
+        for v in &cu2.tensors[0] {
+            assert!((v - 2.5).abs() < 1e-6, "{v}");
+        }
+        // the server control and observation flags ride checkpoints
+        let body = core.encode_checkpoint().unwrap();
+        let mut restored = tiny_core_with(2, Policy::fedavg(6), 12, Algorithm::Scaffold);
+        restored.restore_checkpoint(&body).unwrap();
+        assert_eq!(restored.catchup_control().unwrap().tensors, cu2.tensors);
+        assert_eq!(
+            restored.registry.control(0).unwrap().unwrap()[0].data,
+            vec![2.0; 3]
+        );
+    }
+
+    #[test]
+    fn personalized_mix_rides_decisions_and_persists() {
+        let mut core = tiny_core(2, Policy::personalized(6, 0.5), 12);
+        let a = core.begin_block().unwrap();
+        let ups = vec![
+            dense_update(a.k, 0, 0, vec![vec![1.0, 1.0, 1.0]]),
+            dense_update(a.k, 0, 1, vec![vec![3.0, 3.0, 3.0]]),
+            dense_update(a.k, 1, 0, vec![vec![2.0, 2.0]]),
+            dense_update(a.k, 1, 1, vec![vec![2.0, 2.0]]),
+        ];
+        let decisions = core.apply_updates(&a, &ups, None).unwrap();
+        // every decision carries one weight per survivor
+        assert_eq!(decisions[0].mix.len(), 2);
+        assert_eq!(decisions[0].mix[0].0, 0);
+        // g0 aggregate is [2,2,2]: both clients sit at distance^2 = 3, so
+        // lambda = 0.5*1.0 + 0.5 * 1/(1 + 3/3) = 0.75 for both
+        for &(_, lam) in &decisions[0].mix {
+            assert!((lam - 0.75).abs() < 1e-6, "{lam}");
+        }
+        // g1 rows equal the aggregate: affinity 1.0 keeps lambda at 1.0
+        for &(_, lam) in &decisions[1].mix {
+            assert!((lam - 1.0).abs() < 1e-6, "{lam}");
+        }
+        // lambda persists in the registry and rides checkpoints
+        let lam0 = core.registry.mix_weights(0).unwrap().unwrap();
+        assert!((lam0[0] - 0.75).abs() < 1e-6);
+        assert!((lam0[1] - 1.0).abs() < 1e-6);
+        let body = core.encode_checkpoint().unwrap();
+        let mut restored = tiny_core(2, Policy::personalized(6, 0.5), 12);
+        restored.restore_checkpoint(&body).unwrap();
+        assert_eq!(restored.registry.mix_weights(0).unwrap().unwrap(), lam0);
     }
 
     #[test]

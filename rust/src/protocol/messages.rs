@@ -42,7 +42,19 @@
 //!   UpdateTensor  {seq, payload}      x n_tensors      kind 11
 //!   DecisionBegin {k, group, new_interval, n_tensors}  kind 12
 //!   DecisionTensor{seq, f32s}         x n_tensors      kind 13
+//!   AlgoBegin     {k, client, steps, n_tensors}        kind 16
+//!   AlgoTensor    {seq, f32s}         x n_tensors      kind 17
+//!   ControlBegin  {k, n_tensors}                       kind 18
+//!   ControlTensor {seq, f32s}         x n_tensors      kind 19
 //! ```
+//!
+//! [`AlgoState`] (kinds 14/16/17) and [`ControlUpdate`] (kinds 15/18/19)
+//! carry the server-side-algorithm reductions that used to live in-proc
+//! only: SCAFFOLD ships each owned client's refreshed control variate up
+//! and the server control `s_t` back down; FedNova ships each client's
+//! raw round delta + step count up for the normalized server fold.  Both
+//! travel as raw f32 bit patterns (never compressed — algorithm state is
+//! exact), so the reductions are bit-identical on every transport.
 //!
 //! [`Message::write_streamed`] emits tensor frames through
 //! `wire::write_frame_gather`, borrowing tensor storage (zero-copy on
@@ -419,6 +431,53 @@ pub struct SyncDecision {
     pub new_interval: usize,
     /// Aggregated tensors u_l, dense, in manifest `params` order.
     pub new_params: Vec<Vec<f32>>,
+    /// Personalized layer mixing weights `(client, lambda)` for this
+    /// group, in active order (pFedLA-style policies only; empty
+    /// otherwise).  A client applies `x = lambda*u + (1-lambda)*x`
+    /// instead of adopting `u` outright.  Appended to both wire
+    /// representations (end of the monolithic body / end of the `Begin`
+    /// body), keeping the schema append-only.
+    pub mix: Vec<(usize, f32)>,
+}
+
+impl SyncDecision {
+    /// A plain (non-personalized) decision — every client adopts the
+    /// aggregate outright.
+    pub fn plain(k: usize, group: usize, new_interval: usize, new_params: Vec<Vec<f32>>) -> Self {
+        SyncDecision { k, group, new_interval, new_params, mix: Vec::new() }
+    }
+
+    /// The mixing weight for `client`, if this decision personalizes it.
+    pub fn mix_for(&self, client: usize) -> Option<f32> {
+        self.mix.iter().find(|(c, _)| *c == client).map(|&(_, w)| w)
+    }
+}
+
+/// Participant -> coordinator: one owned client's server-side-algorithm
+/// state at a round boundary.  For SCAFFOLD the tensors are the client's
+/// refreshed control variate `c_i^+`; for FedNova they are the client's
+/// raw round delta `x_i - x_start` (computed client-side in f32, so the
+/// value is transport-invariant) with `steps` carrying its local step
+/// count `a_i`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AlgoState {
+    pub k: usize,
+    pub client: usize,
+    /// Local steps the client took this round (FedNova's a_i; SCAFFOLD
+    /// sends the count used to derive the refresh scale, informational).
+    pub steps: u64,
+    /// One dense tensor per model tensor, in manifest `params` order.
+    pub tensors: Vec<Vec<f32>>,
+}
+
+/// Coordinator -> participants: refreshed shared server-algorithm state
+/// (SCAFFOLD's server control `s_t` after folding the round's per-client
+/// refreshes).  Participants replace their local replica wholesale.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ControlUpdate {
+    pub k: usize,
+    /// One dense tensor per model tensor, in manifest `params` order.
+    pub tensors: Vec<Vec<f32>>,
 }
 
 /// Participant -> coordinator: the participant cannot continue (failed to
@@ -445,6 +504,8 @@ pub enum Message {
     Decision(SyncDecision),
     Shutdown,
     Abort(Abort),
+    Algo(AlgoState),
+    Control(ControlUpdate),
 }
 
 const KIND_HELLO: u8 = 1;
@@ -463,6 +524,14 @@ const KIND_UPDATE_BEGIN: u8 = 10;
 const KIND_UPDATE_TENSOR: u8 = 11;
 const KIND_DECISION_BEGIN: u8 = 12;
 const KIND_DECISION_TENSOR: u8 = 13;
+// server-side-algorithm state over the wire (SCAFFOLD/FedNova): monolithic
+// kinds 14/15 plus the streamed Begin/Tensor split, like Update/Decision
+const KIND_ALGO: u8 = 14;
+const KIND_CONTROL: u8 = 15;
+const KIND_ALGO_BEGIN: u8 = 16;
+const KIND_ALGO_TENSOR: u8 = 17;
+const KIND_CONTROL_BEGIN: u8 = 18;
+const KIND_CONTROL_TENSOR: u8 = 19;
 
 /// Sanity cap on per-message tensor counts (resnet20 has ~80; a corrupt
 /// count must not drive a huge allocation).
@@ -480,6 +549,8 @@ impl Message {
             Message::Decision(_) => KIND_DECISION,
             Message::Shutdown => KIND_SHUTDOWN,
             Message::Abort(_) => KIND_ABORT,
+            Message::Algo(_) => KIND_ALGO,
+            Message::Control(_) => KIND_CONTROL,
         }
     }
 
@@ -494,6 +565,8 @@ impl Message {
             Message::Decision(_) => "SyncDecision",
             Message::Shutdown => "Shutdown",
             Message::Abort(_) => "Abort",
+            Message::Algo(_) => "AlgoState",
+            Message::Control(_) => "ControlUpdate",
         }
     }
 
@@ -550,11 +623,28 @@ impl Message {
                 for t in &d.new_params {
                     e.f32s(t)?;
                 }
+                encode_mix(&mut e, &d.mix);
             }
             Message::Shutdown => {}
             Message::Abort(a) => {
                 e.usize(a.worker_id);
                 e.str(&a.reason)?;
+            }
+            Message::Algo(a) => {
+                e.usize(a.k);
+                e.usize(a.client);
+                e.u64(a.steps);
+                e.u32(a.tensors.len() as u32);
+                for t in &a.tensors {
+                    e.f32s(t)?;
+                }
+            }
+            Message::Control(c) => {
+                e.usize(c.k);
+                e.u32(c.tensors.len() as u32);
+                for t in &c.tensors {
+                    e.f32s(t)?;
+                }
             }
         }
         wire::frame(self.kind(), &e.buf)
@@ -612,10 +702,27 @@ impl Message {
                 let nt = d.u32()? as usize;
                 ensure!(nt <= MAX_TENSORS, "implausible tensor count {nt}");
                 let new_params = (0..nt).map(|_| d.f32s()).collect::<Result<_>>()?;
-                Message::Decision(SyncDecision { k, group, new_interval, new_params })
+                let mix = decode_mix(&mut d)?;
+                Message::Decision(SyncDecision { k, group, new_interval, new_params, mix })
             }
             KIND_SHUTDOWN => Message::Shutdown,
             KIND_ABORT => Message::Abort(Abort { worker_id: d.usize()?, reason: d.str()? }),
+            KIND_ALGO => {
+                let k = d.usize()?;
+                let client = d.usize()?;
+                let steps = d.u64()?;
+                let nt = d.u32()? as usize;
+                ensure!(nt <= MAX_TENSORS, "implausible tensor count {nt}");
+                let tensors = (0..nt).map(|_| d.f32s()).collect::<Result<_>>()?;
+                Message::Algo(AlgoState { k, client, steps, tensors })
+            }
+            KIND_CONTROL => {
+                let k = d.usize()?;
+                let nt = d.u32()? as usize;
+                ensure!(nt <= MAX_TENSORS, "implausible tensor count {nt}");
+                let tensors = (0..nt).map(|_| d.f32s()).collect::<Result<_>>()?;
+                Message::Control(ControlUpdate { k, tensors })
+            }
             t => bail!("unknown message kind {t}"),
         };
         d.finish()?;
@@ -684,6 +791,35 @@ impl Message {
                 }
                 Ok(())
             }
+            Message::Algo(a) => {
+                ensure!(
+                    a.tensors.len() <= MAX_TENSORS,
+                    "AlgoState tensor count {} exceeds cap {MAX_TENSORS}",
+                    a.tensors.len()
+                );
+                let mut e = Enc::new();
+                e.usize(a.k);
+                e.usize(a.client);
+                e.u64(a.steps);
+                e.u32(a.tensors.len() as u32);
+                wire::write_frame(w, KIND_ALGO_BEGIN, &e.buf).context("sending AlgoBegin")?;
+                for (seq, t) in a.tensors.iter().enumerate() {
+                    let mut g = Gather::new();
+                    g.u32(seq as u32);
+                    g.f32s(t)?;
+                    wire::write_frame_gather(w, KIND_ALGO_TENSOR, &g)
+                        .with_context(|| format!("sending AlgoTensor {seq}"))?;
+                }
+                Ok(())
+            }
+            Message::Control(c) => {
+                let mut scratch = Vec::new();
+                for idx in 0..control_frame_count(c) {
+                    encode_control_frame(c, idx, &mut scratch)?;
+                    w.write_all(&scratch).context("sending streamed ControlUpdate")?;
+                }
+                Ok(())
+            }
             other => other.write_to(w),
         }
     }
@@ -730,6 +866,7 @@ pub fn encode_decision_frame(d: &SyncDecision, idx: usize, out: &mut Vec<u8>) ->
         e.usize(d.group);
         e.usize(d.new_interval);
         e.u32(d.new_params.len() as u32);
+        encode_mix(&mut e, &d.mix);
         wire::write_frame(out, KIND_DECISION_BEGIN, &e.buf)
     } else {
         let seq = idx - 1;
@@ -740,11 +877,57 @@ pub fn encode_decision_frame(d: &SyncDecision, idx: usize, out: &mut Vec<u8>) ->
     }
 }
 
+/// Frames in the streamed representation of a [`ControlUpdate`].
+pub fn control_frame_count(c: &ControlUpdate) -> usize {
+    1 + c.tensors.len()
+}
+
+/// Encode frame `idx` (0 = `ControlBegin`, `i+1` = tensor `i`) of `c`'s
+/// streamed representation into `out` (cleared first) — the control-state
+/// twin of [`encode_decision_frame`] for frame-at-a-time fan-out.
+pub fn encode_control_frame(c: &ControlUpdate, idx: usize, out: &mut Vec<u8>) -> Result<()> {
+    out.clear();
+    if idx == 0 {
+        ensure!(
+            c.tensors.len() <= MAX_TENSORS,
+            "ControlUpdate tensor count {} exceeds cap {MAX_TENSORS}",
+            c.tensors.len()
+        );
+        let mut e = Enc::new();
+        e.usize(c.k);
+        e.u32(c.tensors.len() as u32);
+        wire::write_frame(out, KIND_CONTROL_BEGIN, &e.buf)
+    } else {
+        let seq = idx - 1;
+        let mut g = Gather::new();
+        g.u32(seq as u32);
+        g.f32s(&c.tensors[seq])?;
+        wire::write_frame_gather(out, KIND_CONTROL_TENSOR, &g)
+    }
+}
+
+/// Personalized mixing weights, appended to both decision encodings.
+fn encode_mix(e: &mut Enc, mix: &[(usize, f32)]) {
+    e.u32(mix.len() as u32);
+    for &(c, w) in mix {
+        e.usize(c);
+        e.f32(w);
+    }
+}
+
+fn decode_mix(d: &mut Dec<'_>) -> Result<Vec<(usize, f32)>> {
+    let n = d.u32()? as usize;
+    ensure!(n <= 1 << 24, "implausible mix entry count {n}");
+    (0..n).map(|_| -> Result<(usize, f32)> { Ok((d.usize()?, d.f32()?)) }).collect()
+}
+
 /// Frames [`Message::write_streamed`] emits for `m`.
 pub fn streamed_frame_count(m: &Message) -> usize {
     match m {
         Message::Update(u) => 1 + u.tensors.len(),
         Message::Decision(d) => decision_frame_count(d),
+        Message::Algo(a) => 1 + a.tensors.len(),
+        Message::Control(c) => control_frame_count(c),
         _ => 1,
     }
 }
@@ -769,8 +952,30 @@ pub fn streamed_staging_bytes(m: &Message) -> Result<usize> {
             Ok(peak)
         }
         Message::Decision(d) => {
-            let mut peak = FRAMING + 8 + 8 + 8 + 4;
+            // Begin body: k/group/interval + count + mix (count + 12B each)
+            let mut peak = FRAMING + 8 + 8 + 8 + 4 + 4 + 12 * d.mix.len();
             for (seq, t) in d.new_params.iter().enumerate() {
+                let mut g = Gather::new();
+                g.u32(seq as u32);
+                g.f32s(t)?;
+                peak = peak.max(FRAMING + g.staging_bytes());
+            }
+            Ok(peak)
+        }
+        Message::Algo(a) => {
+            // Begin body: k + client + steps (u64 each) + count (u32)
+            let mut peak = FRAMING + 8 + 8 + 8 + 4;
+            for (seq, t) in a.tensors.iter().enumerate() {
+                let mut g = Gather::new();
+                g.u32(seq as u32);
+                g.f32s(t)?;
+                peak = peak.max(FRAMING + g.staging_bytes());
+            }
+            Ok(peak)
+        }
+        Message::Control(c) => {
+            let mut peak = FRAMING + 8 + 4;
+            for (seq, t) in c.tensors.iter().enumerate() {
                 let mut g = Gather::new();
                 g.u32(seq as u32);
                 g.f32s(t)?;
@@ -801,6 +1006,8 @@ pub fn streamed_staging_bytes(m: &Message) -> Result<usize> {
 pub struct Assembler {
     upd: Option<(LayerUpdate, usize)>,
     dec: Option<(SyncDecision, usize)>,
+    algo: Option<(AlgoState, usize)>,
+    ctl: Option<(ControlUpdate, usize)>,
 }
 
 impl Assembler {
@@ -810,7 +1017,7 @@ impl Assembler {
 
     /// No streamed sequence is currently open.
     pub fn idle(&self) -> bool {
-        self.upd.is_none() && self.dec.is_none()
+        self.upd.is_none() && self.dec.is_none() && self.algo.is_none() && self.ctl.is_none()
     }
 
     /// Feed one frame; returns a message when one completes.
@@ -859,8 +1066,15 @@ impl Assembler {
                 let new_interval = d.usize()?;
                 let nt = d.u32()? as usize;
                 ensure!(nt <= MAX_TENSORS, "implausible tensor count {nt}");
+                let mix = decode_mix(&mut d)?;
                 d.finish()?;
-                let dec = SyncDecision { k, group, new_interval, new_params: Vec::with_capacity(nt) };
+                let dec = SyncDecision {
+                    k,
+                    group,
+                    new_interval,
+                    new_params: Vec::with_capacity(nt),
+                    mix,
+                };
                 if nt == 0 {
                     return Ok(Some(Message::Decision(dec)));
                 }
@@ -883,6 +1097,74 @@ impl Assembler {
                 if dc.new_params.len() == *nt {
                     let (dc, _) = self.dec.take().expect("just matched");
                     return Ok(Some(Message::Decision(dc)));
+                }
+                Ok(None)
+            }
+            KIND_ALGO_BEGIN => {
+                ensure!(self.idle(), "AlgoBegin while another streamed message is open");
+                let mut d = Dec::new(body);
+                let k = d.usize()?;
+                let client = d.usize()?;
+                let steps = d.u64()?;
+                let nt = d.u32()? as usize;
+                ensure!(nt <= MAX_TENSORS, "implausible tensor count {nt}");
+                d.finish()?;
+                let a = AlgoState { k, client, steps, tensors: Vec::with_capacity(nt) };
+                if nt == 0 {
+                    return Ok(Some(Message::Algo(a)));
+                }
+                self.algo = Some((a, nt));
+                Ok(None)
+            }
+            KIND_ALGO_TENSOR => {
+                let Some((a, nt)) = self.algo.as_mut() else {
+                    bail!("AlgoTensor without an open AlgoBegin")
+                };
+                let mut d = Dec::new(body);
+                let seq = d.u32()? as usize;
+                ensure!(
+                    seq == a.tensors.len(),
+                    "AlgoTensor out of order: seq {seq}, expected {}",
+                    a.tensors.len()
+                );
+                a.tensors.push(d.f32s()?);
+                d.finish()?;
+                if a.tensors.len() == *nt {
+                    let (a, _) = self.algo.take().expect("just matched");
+                    return Ok(Some(Message::Algo(a)));
+                }
+                Ok(None)
+            }
+            KIND_CONTROL_BEGIN => {
+                ensure!(self.idle(), "ControlBegin while another streamed message is open");
+                let mut d = Dec::new(body);
+                let k = d.usize()?;
+                let nt = d.u32()? as usize;
+                ensure!(nt <= MAX_TENSORS, "implausible tensor count {nt}");
+                d.finish()?;
+                let c = ControlUpdate { k, tensors: Vec::with_capacity(nt) };
+                if nt == 0 {
+                    return Ok(Some(Message::Control(c)));
+                }
+                self.ctl = Some((c, nt));
+                Ok(None)
+            }
+            KIND_CONTROL_TENSOR => {
+                let Some((c, nt)) = self.ctl.as_mut() else {
+                    bail!("ControlTensor without an open ControlBegin")
+                };
+                let mut d = Dec::new(body);
+                let seq = d.u32()? as usize;
+                ensure!(
+                    seq == c.tensors.len(),
+                    "ControlTensor out of order: seq {seq}, expected {}",
+                    c.tensors.len()
+                );
+                c.tensors.push(d.f32s()?);
+                d.finish()?;
+                if c.tensors.len() == *nt {
+                    let (c, _) = self.ctl.take().expect("just matched");
+                    return Ok(Some(Message::Control(c)));
                 }
                 Ok(None)
             }
@@ -962,6 +1244,9 @@ fn encode_cfg(e: &mut Enc, cfg: &RunConfig) -> Result<()> {
             e.f32(0.0);
         }
     }
+    // policy schema: tag + two usize operands + bool, with an f64 extra
+    // operand appended for tags >= 2 (per-tag layout is safe: unknown tags
+    // bail, and the wire version gates mixed builds)
     match &cfg.policy {
         Policy::FullSync { interval } => {
             e.u8(0);
@@ -974,6 +1259,20 @@ fn encode_cfg(e: &mut Enc, cfg: &RunConfig) -> Result<()> {
             e.usize(*tau);
             e.usize(*phi);
             e.bool(*accelerate);
+        }
+        Policy::DivergenceFeedback { tau, phi, threshold } => {
+            e.u8(2);
+            e.usize(*tau);
+            e.usize(*phi);
+            e.bool(false);
+            e.f64(*threshold);
+        }
+        Policy::Personalized { interval, eta } => {
+            e.u8(3);
+            e.usize(*interval);
+            e.usize(0);
+            e.bool(false);
+            e.f64(*eta);
         }
     }
     match cfg.partition {
@@ -988,6 +1287,14 @@ fn encode_cfg(e: &mut Enc, cfg: &RunConfig) -> Result<()> {
         PartitionKind::Writers => {
             e.u8(2);
             e.f64(0.0);
+        }
+        PartitionKind::SingleClass => {
+            e.u8(3);
+            e.f64(0.0);
+        }
+        PartitionKind::PowerLaw { exponent } => {
+            e.u8(4);
+            e.f64(exponent);
         }
     }
     e.usize(cfg.n_clients);
@@ -1044,6 +1351,8 @@ fn decode_cfg(d: &mut Dec<'_>) -> Result<RunConfig> {
     let policy = match pol_tag {
         0 => Policy::FullSync { interval: a },
         1 => Policy::FedLama { tau: a, phi: b, accelerate: acc },
+        2 => Policy::DivergenceFeedback { tau: a, phi: b, threshold: d.f64()? },
+        3 => Policy::Personalized { interval: a, eta: d.f64()? },
         t => bail!("unknown policy tag {t}"),
     };
     let part_tag = d.u8()?;
@@ -1052,6 +1361,8 @@ fn decode_cfg(d: &mut Dec<'_>) -> Result<RunConfig> {
         0 => PartitionKind::Iid,
         1 => PartitionKind::Dirichlet { alpha },
         2 => PartitionKind::Writers,
+        3 => PartitionKind::SingleClass,
+        4 => PartitionKind::PowerLaw { exponent: alpha },
         t => bail!("unknown partition tag {t}"),
     };
     Ok(RunConfig {
@@ -1246,6 +1557,7 @@ mod tests {
             group: 1,
             new_interval: 12,
             new_params: vec![randvec(100, 2), randvec(3, 3), Vec::new()],
+            mix: vec![(0, 0.25), (7, 1.0)],
         };
         let mut via_stream = Vec::new();
         Message::Decision(d.clone()).write_streamed(&mut via_stream).unwrap();
@@ -1328,6 +1640,122 @@ mod tests {
         assert!(peak < mono, "streamed staging {peak} must undercut monolithic {mono}");
         let n_frames = streamed_frame_count(&msg);
         assert_eq!(n_frames, 4, "Begin + 3 tensors");
+    }
+
+    #[test]
+    fn algo_state_round_trips_monolithic_and_streamed() {
+        let a = AlgoState {
+            k: 24,
+            client: 13,
+            steps: 7,
+            tensors: vec![randvec(257, 21), randvec(3, 22), Vec::new()],
+        };
+        let msg = Message::Algo(a.clone());
+        assert_eq!(msg.kind(), KIND_ALGO);
+        let frame = msg.to_frame().unwrap();
+        let (decoded, used) = Message::decode(&frame).unwrap();
+        assert_eq!(used, frame.len());
+        assert_eq!(decoded, msg);
+        // streamed path: Begin + one frame per tensor, reassembled exactly
+        let mut bytes = Vec::new();
+        msg.write_streamed(&mut bytes).unwrap();
+        assert_eq!(streamed_frame_count(&msg), 4, "Begin + 3 tensors");
+        let mut cur = std::io::Cursor::new(&bytes);
+        let mut asm = Assembler::new();
+        let got = Message::read_streamed(&mut cur, &mut asm).unwrap();
+        assert_eq!(got, msg);
+        assert!(asm.idle());
+        assert_eq!(cur.position() as usize, bytes.len(), "no trailing frames");
+        // raw f32 bit patterns survive: algorithm state is never compressed
+        let Message::Algo(back) = got else { panic!("wrong kind") };
+        for (ta, tb) in a.tensors.iter().zip(&back.tensors) {
+            for (&x, &y) in ta.iter().zip(tb) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn control_update_round_trips_and_matches_frame_helpers() {
+        let c = ControlUpdate { k: 12, tensors: vec![randvec(64, 31), randvec(9, 32)] };
+        let msg = Message::Control(c.clone());
+        assert_eq!(msg.kind(), KIND_CONTROL);
+        let frame = msg.to_frame().unwrap();
+        let (decoded, used) = Message::decode(&frame).unwrap();
+        assert_eq!(used, frame.len());
+        assert_eq!(decoded, msg);
+        // the broadcast helpers emit the exact same byte sequence as the
+        // streamed writer (same contract as decision frames)
+        let mut via_stream = Vec::new();
+        msg.write_streamed(&mut via_stream).unwrap();
+        let mut via_frames = Vec::new();
+        let mut scratch = Vec::new();
+        for idx in 0..control_frame_count(&c) {
+            encode_control_frame(&c, idx, &mut scratch).unwrap();
+            via_frames.extend_from_slice(&scratch);
+        }
+        assert_eq!(via_stream, via_frames);
+        let mut cur = std::io::Cursor::new(&via_stream);
+        let mut asm = Assembler::new();
+        assert_eq!(Message::read_streamed(&mut cur, &mut asm).unwrap(), msg);
+        assert!(asm.idle());
+    }
+
+    #[test]
+    fn decision_mix_weights_survive_both_wire_paths() {
+        let d = SyncDecision {
+            k: 18,
+            group: 0,
+            new_interval: 6,
+            new_params: vec![randvec(40, 41)],
+            mix: vec![(2, 0.75), (5, 0.125), (11, 1.0)],
+        };
+        assert_eq!(d.mix_for(5), Some(0.125));
+        assert_eq!(d.mix_for(3), None);
+        let msg = Message::Decision(d.clone());
+        let frame = msg.to_frame().unwrap();
+        let (decoded, _) = Message::decode(&frame).unwrap();
+        assert_eq!(decoded, msg, "monolithic");
+        let mut bytes = Vec::new();
+        msg.write_streamed(&mut bytes).unwrap();
+        let mut cur = std::io::Cursor::new(&bytes);
+        let mut asm = Assembler::new();
+        assert_eq!(Message::read_streamed(&mut cur, &mut asm).unwrap(), msg, "streamed");
+        // a plain decision has no mix entries for any client
+        let p = SyncDecision::plain(6, 1, 12, vec![randvec(4, 42)]);
+        assert!(p.mix.is_empty());
+        assert_eq!(p.mix_for(0), None);
+    }
+
+    #[test]
+    fn new_policy_and_partition_tags_survive_the_wire() {
+        for (policy, partition) in [
+            (
+                Policy::divergence_feedback(10, 4, 0.025),
+                PartitionKind::SingleClass,
+            ),
+            (
+                Policy::personalized(8, 0.5),
+                PartitionKind::PowerLaw { exponent: 1.6 },
+            ),
+        ] {
+            let cfg = RunConfig {
+                policy: policy.clone(),
+                partition,
+                ..RunConfig::default()
+            };
+            let msg = Message::Configure(Configure {
+                worker_id: 0,
+                n_workers: 2,
+                shard: vec![0, 2],
+                cfg,
+            });
+            let (decoded, used) = Message::decode(&msg.to_frame().unwrap()).unwrap();
+            assert_eq!(used, msg.to_frame().unwrap().len());
+            let Message::Configure(c) = decoded else { panic!("wrong kind") };
+            assert_eq!(c.cfg.policy, policy);
+            assert_eq!(c.cfg.partition, partition);
+        }
     }
 
     #[test]

@@ -50,8 +50,8 @@ pub use self::core::{
     BlockOutcome, CoordinatorCore, JoinAction, JoinHandshake, JoinPhase, PeerPhase, PeerSession,
 };
 pub use messages::{
-    Abort, Assembler, BlockDone, Configure, Heartbeat, Hello, LayerUpdate, Message, MessageStream,
-    Payload, RoundAssignment, SyncDecision,
+    Abort, AlgoState, Assembler, BlockDone, Configure, ControlUpdate, Heartbeat, Hello,
+    LayerUpdate, Message, MessageStream, Payload, RoundAssignment, SyncDecision,
 };
 pub use participant::Participant;
 pub use process::{worker_exe, ProcessTransport};

@@ -27,7 +27,8 @@ use crate::data::{partition_for, ClientData, Generator, Partition};
 use crate::runtime::{cluster, ComputeBackend, HostTensor};
 
 use super::messages::{
-    encode_tensor, update_stream_seed, LayerUpdate, RoundAssignment, SyncDecision,
+    encode_tensor, update_stream_seed, AlgoState, ControlUpdate, LayerUpdate, RoundAssignment,
+    SyncDecision,
 };
 
 pub struct Participant {
@@ -43,8 +44,14 @@ pub struct Participant {
     clients: Vec<ClientState>,
     /// Local replica of the global model (kept current by decisions).
     pub global: Vec<HostTensor>,
-    /// SCAFFOLD server control variate (in-proc transport only).
+    /// SCAFFOLD server control variate — a local replica kept current by
+    /// `ControlUpdate` broadcasts from the coordinator (the authoritative
+    /// fold lives in `CoordinatorCore::scaffold_fold`).
     server_control: Option<Vec<HostTensor>>,
+    /// Personalized policy: which owned clients already hold their
+    /// personalized params (round starts stop overwriting them with the
+    /// global replica once they do).
+    personal_init: Vec<bool>,
     compressor: Spec,
     compress_enabled: bool,
     /// Parsed `--chaos` plan; decides whether *this* shard mangles its
@@ -107,6 +114,7 @@ impl Participant {
             clients,
             global,
             server_control: None,
+            personal_init: vec![false; cfg.n_clients],
             compressor,
             compress_enabled: cfg.compressor != "dense",
             chaos,
@@ -212,11 +220,13 @@ impl Participant {
 
     /// Handle one training block: returns ((client, mean loss) pairs in
     /// active order, layer updates for every due group x owned active
-    /// client).
+    /// client, and — at round boundaries under SCAFFOLD/FedNova — one
+    /// [`AlgoState`] per owned active client carrying the state the
+    /// coordinator's server-side fold needs.
     pub fn handle_assignment(
         &mut self,
         a: &RoundAssignment,
-    ) -> Result<(Vec<(usize, f64)>, Vec<LayerUpdate>)> {
+    ) -> Result<(Vec<(usize, f64)>, Vec<LayerUpdate>, Vec<AlgoState>)> {
         let mine = self.mine(&a.active);
         if a.new_round {
             self.begin_round(&mine);
@@ -228,7 +238,12 @@ impl Participant {
                 updates.push(self.encode_update(a.k, a.round, g, ci));
             }
         }
-        Ok((mine.iter().copied().zip(losses).collect(), updates))
+        let algo = if a.k % self.cfg.policy.round_len() == 0 {
+            self.round_end_algo_states(a.k, &mine, a.lr)?
+        } else {
+            Vec::new()
+        };
+        Ok((mine.iter().copied().zip(losses).collect(), updates, algo))
     }
 
     /// Apply an aggregation decision: refresh the global replica and
@@ -253,8 +268,21 @@ impl Participant {
             );
             self.global[t].data.copy_from_slice(&d.new_params[ti]);
             for &ci in active {
-                if self.in_shard[ci] {
-                    self.clients[ci].params[t].data.copy_from_slice(&d.new_params[ti]);
+                if !self.in_shard[ci] {
+                    continue;
+                }
+                match d.mix_for(ci) {
+                    // pFedLA-style blend: the client keeps (1 - lambda) of
+                    // its own params, taking lambda of the aggregate.
+                    Some(lam) => {
+                        let x = &mut self.clients[ci].params[t].data;
+                        for (xj, &uj) in x.iter_mut().zip(&d.new_params[ti]) {
+                            *xj = lam * uj + (1.0 - lam) * *xj;
+                        }
+                    }
+                    None => {
+                        self.clients[ci].params[t].data.copy_from_slice(&d.new_params[ti]);
+                    }
                 }
             }
         }
@@ -267,11 +295,20 @@ impl Participant {
         let hetero = self.cfg.hetero_local_steps;
         let round_len = self.cfg.policy.round_len();
         let mean_n = self.partition.total as f64 / self.cfg.n_clients as f64;
+        let personalizing = self.cfg.policy.mix_eta().is_some();
         for &ci in mine {
             let need_ref = matches!(self.cfg.algorithm, Algorithm::Prox { .. } | Algorithm::Nova);
             let frac = self.partition.clients[ci].total as f64 / mean_n;
+            // Personalized policy: a client that already holds its
+            // personalized params keeps them across rounds — only its
+            // *first* activation downloads the global model.  Every other
+            // policy re-downloads at each round start.
+            let pull = !personalizing || !self.personal_init[ci];
+            self.personal_init[ci] = true;
             let c = &mut self.clients[ci];
-            c.pull(&self.global);
+            if pull {
+                c.pull(&self.global);
+            }
             c.steps_in_round = 0;
             c.local_budget = if hetero {
                 ((round_len as f64 * frac).round() as usize).clamp(1, round_len)
@@ -353,77 +390,142 @@ impl Participant {
     }
 
     // -----------------------------------------------------------------------
-    // Server-side-state baselines (in-proc transport only): these read or
-    // reduce across client states, which the wire protocol does not ship.
+    // Server-side-state baselines over the wire: each owned active client's
+    // round-end algorithm state ships to the coordinator as an `AlgoState`
+    // frame; the cross-client folds live in `CoordinatorCore` and their
+    // results come back as `SyncDecision`/`ControlUpdate` broadcasts.  All
+    // per-client math here is f32 and local to one client, so the bytes on
+    // the wire are identical on every transport.
     // -----------------------------------------------------------------------
 
-    /// FedNova normalized averaging (Wang et al. 2020) over the owned
-    /// clients — requires owning *all* active clients.  Mutates the global
-    /// replica and pulls it into the active clients; returns the new
-    /// global for the coordinator core to adopt.
-    pub fn nova_aggregate(&mut self, active: &[usize]) -> Result<Vec<HostTensor>> {
-        let weights = self.partition.active_weights(active);
-        let tau_eff: f64 = active
-            .iter()
-            .zip(&weights)
-            .map(|(&ci, &w)| w as f64 * self.clients[ci].steps_in_round as f64)
-            .sum();
-        for t in 0..self.global.len() {
-            let len = self.global[t].data.len();
-            let mut delta = vec![0.0f64; len];
-            for (&ci, &w) in active.iter().zip(&weights) {
-                let a_i = self.clients[ci].steps_in_round.max(1) as f64;
-                let start = self.clients[ci]
-                    .round_start
-                    .as_ref()
-                    .context("FedNova requires round_start")?;
-                let x = &self.clients[ci].params[t].data;
-                let s = &start[t].data;
-                for j in 0..len {
-                    delta[j] += w as f64 * (x[j] - s[j]) as f64 / a_i;
+    /// Produce the round-end `AlgoState` for every owned active client.
+    ///
+    /// FedNova ships the raw round delta `x_i - x_start` plus the local
+    /// step count (the coordinator computes tau_eff and the normalized
+    /// fold).  SCAFFOLD performs the option-II control refresh locally —
+    /// `c_i+ = c_i - c + (x_start - x_i) / (a_i * lr)` against the
+    /// round-start server control replica — adopts `c_i+`, and ships it
+    /// (the coordinator folds `c += sum (c_i+ - c_i) / N` from its
+    /// registry-spilled copy of the previous `c_i`).
+    fn round_end_algo_states(
+        &mut self,
+        k: usize,
+        mine: &[usize],
+        lr: f32,
+    ) -> Result<Vec<AlgoState>> {
+        let round_len = self.cfg.policy.round_len();
+        let mut out = Vec::new();
+        match self.cfg.algorithm {
+            Algorithm::Nova => {
+                for &ci in mine {
+                    let client = &self.clients[ci];
+                    let start = client
+                        .round_start
+                        .as_ref()
+                        .context("FedNova requires round_start")?;
+                    let tensors: Vec<Vec<f32>> = client
+                        .params
+                        .iter()
+                        .zip(start)
+                        .map(|(x, s)| {
+                            x.data.iter().zip(&s.data).map(|(&xj, &sj)| xj - sj).collect()
+                        })
+                        .collect();
+                    out.push(AlgoState {
+                        k,
+                        client: ci,
+                        steps: client.steps_in_round as u64,
+                        tensors,
+                    });
                 }
             }
-            let gdata = &mut self.global[t].data;
-            for j in 0..len {
-                gdata[j] += (tau_eff * delta[j]) as f32;
+            Algorithm::Scaffold => {
+                let server = self.server_control.as_ref().context("server control")?;
+                for &ci in mine {
+                    let client = &mut self.clients[ci];
+                    let a_i = client.steps_in_round.max(1).min(round_len) as f32;
+                    let scale = 1.0 / (a_i * lr);
+                    let control = client.control.as_mut().context("client control")?;
+                    let mut tensors = Vec::with_capacity(control.len());
+                    for t in 0..control.len() {
+                        let x = &client.params[t].data;
+                        let g = &self.global[t].data; // x_start == global at round start
+                        let c_t = &mut control[t].data;
+                        let s_t = &server[t].data;
+                        for j in 0..c_t.len() {
+                            c_t[j] = c_t[j] - s_t[j] + scale * (g[j] - x[j]);
+                        }
+                        tensors.push(c_t.clone());
+                    }
+                    out.push(AlgoState {
+                        k,
+                        client: ci,
+                        steps: client.steps_in_round as u64,
+                        tensors,
+                    });
+                }
             }
+            _ => {}
         }
-        for &ci in active {
-            let global = std::mem::take(&mut self.global);
-            self.clients[ci].pull(&global);
-            self.global = global;
-        }
-        Ok(self.global.clone())
+        Ok(out)
     }
 
-    /// SCAFFOLD option-II control update (before aggregation):
-    /// c_i+ = c_i - c + (x_start - x_i) / (a_i * lr);  c += sum dc_i / N.
-    pub fn scaffold_update_controls(
-        &mut self,
-        active: &[usize],
-        round_len: usize,
-        lr: f32,
-    ) -> Result<()> {
-        let n = self.cfg.n_clients as f32;
-        let server = self.server_control.as_mut().context("server control")?;
-        for &ci in active {
-            let a_i = self.clients[ci].steps_in_round.max(1).min(round_len) as f32;
-            let scale = 1.0 / (a_i * lr);
-            let client = &mut self.clients[ci];
-            let control = client.control.as_mut().context("client control")?;
-            for t in 0..control.len() {
-                let x = &client.params[t].data;
-                let g = &self.global[t].data; // x_start == global at round start
-                let c_t = &mut control[t].data;
-                let s_t = &mut server[t].data;
-                for j in 0..c_t.len() {
-                    let c_new = c_t[j] - s_t[j] + scale * (g[j] - x[j]);
-                    let dc = c_new - c_t[j];
-                    c_t[j] = c_new;
-                    s_t[j] += dc / n;
-                }
-            }
+    /// Adopt a broadcast server control variate (SCAFFOLD `c`), replacing
+    /// the local replica.  Shapes follow the global model.
+    pub fn set_server_control(&mut self, c: &ControlUpdate) -> Result<()> {
+        anyhow::ensure!(
+            c.tensors.len() == self.global.len(),
+            "control update carries {} tensors, model has {}",
+            c.tensors.len(),
+            self.global.len()
+        );
+        let tensors = self
+            .global
+            .iter()
+            .zip(&c.tensors)
+            .map(|(g, data)| {
+                anyhow::ensure!(
+                    data.len() == g.data.len(),
+                    "control tensor length {} != {}",
+                    data.len(),
+                    g.data.len()
+                );
+                Ok(HostTensor { shape: g.shape.clone(), data: data.clone() })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        self.server_control = Some(tensors);
+        Ok(())
+    }
+
+    /// Adopt one client's control variate from a catchup `AlgoState`
+    /// (rejoin/resume: the coordinator replays registry-spilled `c_i` so a
+    /// fresh participant's clients resume where the run left off).
+    pub fn adopt_algo_state(&mut self, a: &AlgoState) -> Result<()> {
+        anyhow::ensure!(a.client < self.cfg.n_clients, "algo state for unknown client");
+        if !self.in_shard[a.client] {
+            return Ok(());
         }
+        anyhow::ensure!(
+            a.tensors.len() == self.global.len(),
+            "algo state carries {} tensors, model has {}",
+            a.tensors.len(),
+            self.global.len()
+        );
+        let tensors = self
+            .global
+            .iter()
+            .zip(&a.tensors)
+            .map(|(g, data)| {
+                anyhow::ensure!(
+                    data.len() == g.data.len(),
+                    "algo tensor length {} != {}",
+                    data.len(),
+                    g.data.len()
+                );
+                Ok(HostTensor { shape: g.shape.clone(), data: data.clone() })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        self.clients[a.client].control = Some(tensors);
         Ok(())
     }
 }

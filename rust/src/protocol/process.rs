@@ -10,7 +10,7 @@
 //! ```text
 //!   spawn -> Configure{worker_id, shard, cfg} -> Hello{version, shard_len}
 //!         -> Heartbeat ping/echo (liveness + codec smoke)
-//!         -> per block: Assignment -> (Update* Done) -> Decision*
+//!         -> per block: Assignment -> (Update* Algo* Done) -> Decision* Control?
 //!         -> Shutdown -> wait(exit 0)
 //! ```
 //!
@@ -27,8 +27,9 @@ use anyhow::{bail, Context, Result};
 use crate::config::RunConfig;
 
 use super::messages::{
-    decision_frame_count, encode_decision_frame, Assembler, Configure, Heartbeat, Message,
-    RoundAssignment, SyncDecision,
+    control_frame_count, decision_frame_count, encode_control_frame, encode_decision_frame,
+    AlgoState, Assembler, Configure, ControlUpdate, Heartbeat, Message, RoundAssignment,
+    SyncDecision,
 };
 use super::transport::{merge_losses, shard_clients, BlockResult, Transport};
 use super::wire::WIRE_VERSION;
@@ -150,10 +151,12 @@ impl Transport for ProcessTransport {
         }
         let mut pairs = Vec::with_capacity(a.active.len());
         let mut updates = Vec::new();
+        let mut algo = Vec::new();
         for w in &mut self.workers {
             loop {
                 match w.recv()? {
                     Message::Update(u) => updates.push(u),
+                    Message::Algo(s) => algo.push(s),
                     Message::Done(d) => {
                         anyhow::ensure!(
                             d.k == a.k,
@@ -170,7 +173,7 @@ impl Transport for ProcessTransport {
                 }
             }
         }
-        Ok(BlockResult::full(merge_losses(&a.active, &pairs)?, updates))
+        Ok(BlockResult::full(merge_losses(&a.active, &pairs)?, updates, algo))
     }
 
     fn broadcast_decision(&mut self, d: &SyncDecision, _active: &[usize]) -> Result<()> {
@@ -187,6 +190,40 @@ impl Transport for ProcessTransport {
                     .write_all(&frame)
                     .with_context(|| format!("sending SyncDecision to worker {}", w.id))?;
             }
+        }
+        for w in &mut self.workers {
+            w.flush()?;
+        }
+        Ok(())
+    }
+
+    fn broadcast_control(&mut self, c: &ControlUpdate) -> Result<()> {
+        // same frame-at-a-time fan-out as decisions: one tensor staged at
+        // a time, FIFO pipes keep per-worker frame order
+        let mut frame = Vec::new();
+        for idx in 0..control_frame_count(c) {
+            encode_control_frame(c, idx, &mut frame)?;
+            for w in &mut self.workers {
+                w.tx
+                    .write_all(&frame)
+                    .with_context(|| format!("sending ControlUpdate to worker {}", w.id))?;
+            }
+        }
+        for w in &mut self.workers {
+            w.flush()?;
+        }
+        Ok(())
+    }
+
+    fn broadcast_algo(&mut self, s: &AlgoState) -> Result<()> {
+        // resume catch-up (rare): encode the monolithic frame once, fan
+        // the same bytes to every worker — each adopts the client if it
+        // owns it and skips otherwise
+        let frame = Message::Algo(s.clone()).to_frame()?;
+        for w in &mut self.workers {
+            w.tx
+                .write_all(&frame)
+                .with_context(|| format!("sending AlgoState to worker {}", w.id))?;
         }
         for w in &mut self.workers {
             w.flush()?;

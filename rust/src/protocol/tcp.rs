@@ -76,8 +76,9 @@ use crate::config::RunConfig;
 
 use super::core::{JoinAction, PeerPhase, PeerSession};
 use super::messages::{
-    decision_frame_count, encode_decision_frame, Abort, BlockDone, Configure, Heartbeat, Hello,
-    Message, MessageStream, RoundAssignment, SyncDecision,
+    control_frame_count, decision_frame_count, encode_control_frame, encode_decision_frame, Abort,
+    AlgoState, BlockDone, Configure, ControlUpdate, Heartbeat, Hello, Message, MessageStream,
+    RoundAssignment, SyncDecision,
 };
 use super::transport::{merge_losses_absent, shard_clients, BlockResult, Transport};
 use super::wire::{HEADER_LEN, WIRE_VERSION};
@@ -458,6 +459,7 @@ fn pump_block_peer(
     peer: &mut Peer,
     a: &RoundAssignment,
     updates: &mut Vec<super::messages::LayerUpdate>,
+    algo: &mut Vec<AlgoState>,
 ) -> Result<Option<BlockDone>> {
     loop {
         while let Some(msg) =
@@ -465,6 +467,7 @@ fn pump_block_peer(
         {
             match msg {
                 Message::Update(u) => updates.push(u),
+                Message::Algo(s) => algo.push(s),
                 Message::Done(d) => {
                     anyhow::ensure!(
                         d.k == a.k,
@@ -676,6 +679,8 @@ impl Transport for TcpTransport {
         let mut done = vec![false; self.n];
         let mut per_shard_updates: Vec<Vec<super::messages::LayerUpdate>> =
             (0..self.n).map(|_| Vec::new()).collect();
+        let mut per_shard_algo: Vec<Vec<AlgoState>> =
+            (0..self.n).map(|_| Vec::new()).collect();
         let mut pairs: Vec<(usize, f64)> = Vec::with_capacity(a.active.len());
         loop {
             for s in 0..self.n {
@@ -686,6 +691,7 @@ impl Transport for TcpTransport {
                     self.slots[s].as_mut().unwrap(),
                     a,
                     &mut per_shard_updates[s],
+                    &mut per_shard_algo[s],
                 ) {
                     Ok(Some(d)) => {
                         done[s] = true;
@@ -746,6 +752,12 @@ impl Transport for TcpTransport {
             .filter(|(s, _)| done[*s])
             .flat_map(|(_, u)| u)
             .collect();
+        let algo: Vec<AlgoState> = per_shard_algo
+            .into_iter()
+            .enumerate()
+            .filter(|(s, _)| done[*s])
+            .flat_map(|(_, v)| v)
+            .collect();
         let absent: Vec<usize> =
             a.active.iter().copied().filter(|&c| !done[c % self.n]).collect();
         let missed: Vec<usize> = (0..self.n).filter(|&s| !done[s]).collect();
@@ -756,6 +768,7 @@ impl Transport for TcpTransport {
             absent,
             missed,
             departed,
+            algo,
         })
     }
 
@@ -788,6 +801,49 @@ impl Transport for TcpTransport {
         Ok(())
     }
 
+    fn broadcast_control(&mut self, c: &ControlUpdate) -> Result<()> {
+        // same frame-at-a-time fan-out as decisions: one tensor staged at
+        // a time, lost peers become departures for the next quorum gate
+        let deadline = deadline_after(self.opts.io_timeout);
+        let mut frame = Vec::new();
+        for idx in 0..control_frame_count(c) {
+            encode_control_frame(c, idx, &mut frame)?;
+            for s in 0..self.n {
+                if self.slots[s].is_some() {
+                    if let Err(e) = write_all_nb(
+                        self.slots[s].as_mut().unwrap(),
+                        &frame,
+                        deadline,
+                        "ControlUpdate",
+                    ) {
+                        self.depart_slot(s, format!("{e:#}"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn broadcast_algo(&mut self, s: &AlgoState) -> Result<()> {
+        // resume catch-up (rare): monolithic frame, fanned to every live
+        // peer; a lost peer becomes a departure like any other broadcast
+        let deadline = deadline_after(self.opts.io_timeout);
+        let frame = Message::Algo(s.clone()).to_frame()?;
+        for sh in 0..self.n {
+            if self.slots[sh].is_some() {
+                if let Err(e) = write_all_nb(
+                    self.slots[sh].as_mut().unwrap(),
+                    &frame,
+                    deadline,
+                    "AlgoState",
+                ) {
+                    self.depart_slot(sh, format!("{e:#}"));
+                }
+            }
+        }
+        Ok(())
+    }
+
     fn remote_compute_secs(&self) -> f64 {
         self.compute_secs.iter().sum()
     }
@@ -797,7 +853,12 @@ impl Transport for TcpTransport {
         !self.waiting.is_empty() && self.slots.iter().any(|s| s.is_none())
     }
 
-    fn admit_ready_peers(&mut self, catchup: &[SyncDecision]) -> Result<Vec<usize>> {
+    fn admit_ready_peers(
+        &mut self,
+        catchup: &[SyncDecision],
+        control: Option<&ControlUpdate>,
+        algo: &[AlgoState],
+    ) -> Result<Vec<usize>> {
         self.accept_waiting();
         // seat parked connections in vacant shards
         let mut attached: Vec<usize> = Vec::new();
@@ -876,6 +937,23 @@ impl Transport for TcpTransport {
                         (0..decision_frame_count(d)).try_for_each(|idx| {
                             encode_decision_frame(d, idx, &mut frame)?;
                             write_all_nb(peer, &frame, io_deadline, "catch-up SyncDecision")
+                        })
+                    })
+                    // SCAFFOLD catch-up: server control replica, then the
+                    // spilled per-client controls (the peer adopts only the
+                    // ones in its shard and skips the rest)
+                    .and_then(|()| {
+                        control.map_or(Ok(()), |c| {
+                            (0..control_frame_count(c)).try_for_each(|idx| {
+                                encode_control_frame(c, idx, &mut frame)?;
+                                write_all_nb(peer, &frame, io_deadline, "catch-up ControlUpdate")
+                            })
+                        })
+                    })
+                    .and_then(|()| {
+                        algo.iter().try_for_each(|st| {
+                            let f = Message::Algo(st.clone()).to_frame()?;
+                            write_all_nb(peer, &f, io_deadline, "catch-up AlgoState")
                         })
                     })
                     .and_then(|()| peer.session.promote())

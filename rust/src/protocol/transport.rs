@@ -19,7 +19,7 @@
 
 use anyhow::{Context, Result};
 
-use super::messages::{LayerUpdate, RoundAssignment, SyncDecision};
+use super::messages::{AlgoState, ControlUpdate, LayerUpdate, RoundAssignment, SyncDecision};
 use super::participant::Participant;
 
 /// Round-robin shard map shared by every sharded transport (stdio
@@ -47,18 +47,28 @@ pub struct BlockResult {
     pub missed: Vec<usize>,
     /// Shards that departed *during* this block (subset of `missed`).
     pub departed: Vec<usize>,
+    /// Per-client algorithm state (SCAFFOLD refreshed controls, FedNova
+    /// round deltas) shipped at round boundaries; empty mid-round and for
+    /// stateless optimizers.  Any order — the core re-orders by the
+    /// active list before folding.
+    pub algo: Vec<AlgoState>,
 }
 
 impl BlockResult {
     /// A full-roster result — every shard reported (the only case the
     /// in-proc and stdio transports produce).
-    pub fn full(losses: Vec<f64>, updates: Vec<LayerUpdate>) -> BlockResult {
+    pub fn full(
+        losses: Vec<f64>,
+        updates: Vec<LayerUpdate>,
+        algo: Vec<AlgoState>,
+    ) -> BlockResult {
         BlockResult {
             losses,
             updates,
             absent: Vec::new(),
             missed: Vec::new(),
             departed: Vec::new(),
+            algo,
         }
     }
 }
@@ -116,6 +126,15 @@ pub trait Transport {
     /// `active` is the assignment's active set (the broadcast targets).
     fn broadcast_decision(&mut self, d: &SyncDecision, active: &[usize]) -> Result<()>;
 
+    /// Broadcast the refreshed SCAFFOLD server control variate to every
+    /// participant (round boundaries, after the coordinator fold).
+    fn broadcast_control(&mut self, c: &ControlUpdate) -> Result<()>;
+
+    /// Broadcast one client's algorithm catch-up state (the resume path:
+    /// registry-spilled SCAFFOLD controls).  Each participant adopts it
+    /// if it owns the client and ignores it otherwise.
+    fn broadcast_algo(&mut self, s: &AlgoState) -> Result<()>;
+
     /// Compute seconds accumulated inside remote participants (0 when the
     /// participant shares the driver's backend, as in-proc does).
     fn remote_compute_secs(&self) -> f64 {
@@ -123,9 +142,9 @@ pub trait Transport {
     }
 
     /// Direct access to the single in-proc participant, when this
-    /// transport has one.  Server-side-state baselines (SCAFFOLD,
-    /// FedNova) require it; config validation keeps them off multi-process
-    /// runs.
+    /// transport has one.  The driver uses it for eval-model access; no
+    /// algorithm requires it — SCAFFOLD/FedNova state rides the wire
+    /// (`AlgoState` / `ControlUpdate` frames) on every transport.
     fn in_proc(&mut self) -> Option<&mut Participant> {
         None
     }
@@ -140,8 +159,16 @@ pub trait Transport {
     /// Admit parked Ready peers into the block loop — called by the
     /// driver at round boundaries only.  `catchup` is the core's current
     /// per-group decision snapshot, applied replica-only by the rejoiner
-    /// before its first assignment.  Returns the admitted shard ids.
-    fn admit_ready_peers(&mut self, _catchup: &[SyncDecision]) -> Result<Vec<usize>> {
+    /// before its first assignment; `control` and `algo` carry the
+    /// SCAFFOLD catch-up state (server control broadcast + spilled
+    /// per-client controls — the rejoiner adopts the ones in its shard).
+    /// Returns the admitted shard ids.
+    fn admit_ready_peers(
+        &mut self,
+        _catchup: &[SyncDecision],
+        _control: Option<&ControlUpdate>,
+        _algo: &[AlgoState],
+    ) -> Result<Vec<usize>> {
         Ok(Vec::new())
     }
 
@@ -168,12 +195,20 @@ impl Transport for InProcTransport<'_> {
     }
 
     fn run_block(&mut self, a: &RoundAssignment) -> Result<BlockResult> {
-        let (pairs, updates) = self.participant.handle_assignment(a)?;
-        Ok(BlockResult::full(merge_losses(&a.active, &pairs)?, updates))
+        let (pairs, updates, algo) = self.participant.handle_assignment(a)?;
+        Ok(BlockResult::full(merge_losses(&a.active, &pairs)?, updates, algo))
     }
 
     fn broadcast_decision(&mut self, d: &SyncDecision, active: &[usize]) -> Result<()> {
         self.participant.apply_decision(d, active)
+    }
+
+    fn broadcast_control(&mut self, c: &ControlUpdate) -> Result<()> {
+        self.participant.set_server_control(c)
+    }
+
+    fn broadcast_algo(&mut self, s: &AlgoState) -> Result<()> {
+        self.participant.adopt_algo_state(s)
     }
 
     fn in_proc(&mut self) -> Option<&mut Participant> {

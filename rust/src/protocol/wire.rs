@@ -39,13 +39,20 @@ use anyhow::{bail, ensure, Context, Result};
 /// v1 -> v2: streamed per-layer framing (`UpdateBegin`/`UpdateTensor`,
 /// `DecisionBegin`/`DecisionTensor` kinds).  The frame layout is
 /// unchanged; v1 frames (including the monolithic `Update`/`Decision`
-/// kinds, which remain decodable) are still accepted — see
-/// [`MIN_WIRE_VERSION`].
-pub const WIRE_VERSION: u8 = 2;
+/// kinds, which remain decodable) are still accepted.
+///
+/// v2 -> v3: algorithm state rides the wire (`AlgoState`/`ControlUpdate`
+/// kinds plus their streamed framing), decisions carry per-client mixing
+/// weights, and the config codec gained policy tags 2/3 and partition
+/// tags 3/4.  Existing *bodies* changed (Decision, Configure), so v3
+/// does not accept older frames — see [`MIN_WIRE_VERSION`].
+pub const WIRE_VERSION: u8 = 3;
 
-/// Oldest frame version this build still decodes.  Kept at 1 because the
-/// v2 bump only *added* kinds: every v1 frame is also a valid v2 frame.
-pub const MIN_WIRE_VERSION: u8 = 1;
+/// Oldest frame version this build still decodes.  The v3 bump changed
+/// the bodies of existing kinds (Decision grew a mix-weight section,
+/// Configure a wider policy/partition tag space), so mixed-version runs
+/// must fail at the handshake rather than mis-decode mid-run.
+pub const MIN_WIRE_VERSION: u8 = 3;
 
 /// Frame magic: distinguishes protocol traffic from stray stdout bytes.
 pub const MAGIC: [u8; 2] = [0xF7, 0x1A];
@@ -770,9 +777,9 @@ mod tests {
     }
 
     #[test]
-    fn v1_frames_still_accepted() {
-        // the v2 bump only added kinds; a v1 frame (same layout, version
-        // byte 1 — not covered by the CRC) must decode on every path
+    fn oldest_supported_version_still_accepted() {
+        // a frame stamped with the oldest supported version byte (not
+        // covered by the CRC) must decode on every path
         let mut f = frame(4, b"legacy peer").unwrap();
         f[2] = MIN_WIRE_VERSION;
         let (kind, body, _) = deframe(&f).unwrap();

@@ -63,11 +63,17 @@ pub fn serve_loop_with_limit<R: Read, W: Write>(
     loop {
         match Message::read_streamed(&mut rx, &mut asm)? {
             Message::Assignment(a) => {
-                let (losses, updates) = p.handle_assignment(&a)?;
+                let (losses, updates, algo) = p.handle_assignment(&a)?;
                 for u in updates {
                     // streamed per-layer frames: encode borrows the tensor
                     // payloads (zero copy) and peak staging stays one layer
                     Message::Update(u).write_streamed(&mut tx)?;
+                }
+                for s in algo {
+                    // round-boundary optimizer state (SCAFFOLD controls,
+                    // FedNova deltas), streamed tensor-at-a-time like
+                    // updates
+                    Message::Algo(s).write_streamed(&mut tx)?;
                 }
                 Message::Done(BlockDone {
                     worker_id: p.worker_id,
@@ -84,6 +90,10 @@ pub fn serve_loop_with_limit<R: Read, W: Write>(
                 }
             }
             Message::Decision(d) => p.apply_decision(&d, &last_active)?,
+            // refreshed SCAFFOLD server control (round-boundary broadcast)
+            Message::Control(c) => p.set_server_control(&c)?,
+            // rejoin/resume catch-up: adopt a client's spilled control
+            Message::Algo(s) => p.adopt_algo_state(&s)?,
             Message::Heartbeat(h) => {
                 Message::Heartbeat(h).write_to(&mut tx)?;
                 tx.flush().context("flushing heartbeat echo")?;

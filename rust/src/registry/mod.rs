@@ -130,12 +130,23 @@ pub struct ClientRegistry {
     store: Box<dyn StateStore>,
 }
 
+/// High-bit namespace for personalized per-client layer mixing weights
+/// (pFedLA-style `--policy personalized` state).  Keeps the lambda blobs
+/// out of the record/control key space so roster accounting
+/// ([`ClientRegistry::touched`], [`ClientRegistry::spilled_controls`])
+/// stays honest, while still riding `encode_state` into checkpoints.
+const PERS_BIT: u64 = 1 << 63;
+
 fn rec_key(id: usize) -> u64 {
     (id as u64) << 1
 }
 
 fn ctl_key(id: usize) -> u64 {
     ((id as u64) << 1) | 1
+}
+
+fn pers_key(id: usize) -> u64 {
+    PERS_BIT | ((id as u64) << 1)
 }
 
 impl ClientRegistry {
@@ -161,12 +172,23 @@ impl ClientRegistry {
     /// Clients with at least one written record — the resident set, which
     /// stays O(sampled x rounds), not O(registered).
     pub fn touched(&self) -> usize {
-        self.store.keys().iter().filter(|k| *k % 2 == 0).count()
+        self.store.keys().iter().filter(|k| *k & PERS_BIT == 0 && *k % 2 == 0).count()
     }
 
     /// Clients with a spilled control-variate blob.
     pub fn spilled_controls(&self) -> usize {
-        self.store.keys().iter().filter(|k| *k % 2 == 1).count()
+        self.store.keys().iter().filter(|k| *k & PERS_BIT == 0 && *k % 2 == 1).count()
+    }
+
+    /// Client ids with a spilled control-variate blob, ascending — the
+    /// iteration order for rejoin/resume catchup broadcasts.
+    pub fn spilled_control_ids(&self) -> Vec<usize> {
+        self.store
+            .keys()
+            .iter()
+            .filter(|k| *k & PERS_BIT == 0 && *k % 2 == 1)
+            .map(|k| (k >> 1) as usize)
+            .collect()
     }
 
     fn check_id(&self, id: usize) -> Result<()> {
@@ -220,6 +242,30 @@ impl ClientRegistry {
         self.check_id(id)?;
         match self.store.get(ctl_key(id))? {
             Some(bytes) => Ok(Some(decode_tensors(&bytes)?)),
+            None => Ok(None),
+        }
+    }
+
+    /// Store a client's personalized per-group layer mixing weights
+    /// (lambda, one f32 per group).  Rides `encode_state` into
+    /// checkpoints like every other spilled blob.
+    pub fn put_mix_weights(&mut self, id: usize, lambda: &[f32]) -> Result<()> {
+        self.check_id(id)?;
+        let mut e = Enc::new();
+        e.f32s(lambda)?;
+        self.store.put(pers_key(id), &e.buf)
+    }
+
+    /// Load a client's personalized mixing weights, if any were stored.
+    pub fn mix_weights(&mut self, id: usize) -> Result<Option<Vec<f32>>> {
+        self.check_id(id)?;
+        match self.store.get(pers_key(id))? {
+            Some(bytes) => {
+                let mut d = Dec::new(&bytes);
+                let lambda = d.f32s()?;
+                d.finish()?;
+                Ok(Some(lambda))
+            }
             None => Ok(None),
         }
     }
@@ -329,6 +375,33 @@ mod tests {
         assert_eq!(reg.control(5).unwrap(), None);
         assert_eq!(reg.spilled_controls(), 1);
         assert_eq!(reg.touched(), 0, "control blobs are not roster records");
+    }
+
+    #[test]
+    fn mix_weights_live_in_their_own_namespace() {
+        let mut reg = ClientRegistry::in_memory(20, 11);
+        assert_eq!(reg.mix_weights(4).unwrap(), None);
+        reg.put_mix_weights(4, &[0.25, -0.0, 1.0]).unwrap();
+        reg.put_control(4, &[HostTensor { shape: vec![1], data: vec![2.0] }]).unwrap();
+        let lam = reg.mix_weights(4).unwrap().unwrap();
+        let bits: Vec<u32> = lam.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(bits, vec![0.25f32.to_bits(), (-0.0f32).to_bits(), 1.0f32.to_bits()]);
+        // lambda blobs must not pollute roster accounting
+        assert_eq!(reg.touched(), 0);
+        assert_eq!(reg.spilled_controls(), 1);
+        assert_eq!(reg.spilled_control_ids(), vec![4]);
+        // overwrite sticks
+        reg.put_mix_weights(4, &[0.5]).unwrap();
+        assert_eq!(reg.mix_weights(4).unwrap().unwrap(), vec![0.5]);
+        // and the namespace rides the checkpoint encoding
+        let mut e = Enc::new();
+        reg.encode_state(&mut e).unwrap();
+        let mut restored = ClientRegistry::in_memory(20, 11);
+        let mut d = Dec::new(&e.buf);
+        restored.decode_state(&mut d).unwrap();
+        d.finish().unwrap();
+        assert_eq!(restored.mix_weights(4).unwrap().unwrap(), vec![0.5]);
+        assert_eq!(restored.spilled_controls(), 1);
     }
 
     #[test]

@@ -246,12 +246,16 @@ pub fn tradeoff_note(
     )
 }
 
-/// Build the Policy for a figure run given CLI-ish params.
-pub fn policy_of(kind: &str, tau: usize, phi: usize) -> Option<Policy> {
+/// Build the Policy for a figure run given CLI-ish params.  `threshold`
+/// feeds divergence feedback (FedLDF uplink-skip cut-off) and `eta` the
+/// personalized mixing rate; the other policies ignore them.
+pub fn policy_of(kind: &str, tau: usize, phi: usize, threshold: f64, eta: f64) -> Option<Policy> {
     match kind {
         "fedavg" => Some(Policy::fedavg(tau)),
         "fedlama" => Some(Policy::fedlama(tau, phi)),
         "fedlama-acc" => Some(Policy::FedLama { tau, phi, accelerate: true }),
+        "divergence-feedback" => Some(Policy::divergence_feedback(tau, phi, threshold)),
+        "personalized" => Some(Policy::personalized(tau, eta)),
         _ => None,
     }
 }
@@ -357,8 +361,16 @@ mod tests {
 
     #[test]
     fn policy_parse() {
-        assert_eq!(policy_of("fedavg", 6, 2), Some(Policy::fedavg(6)));
-        assert_eq!(policy_of("fedlama", 6, 2), Some(Policy::fedlama(6, 2)));
-        assert!(policy_of("nope", 6, 2).is_none());
+        assert_eq!(policy_of("fedavg", 6, 2, 0.0, 0.0), Some(Policy::fedavg(6)));
+        assert_eq!(policy_of("fedlama", 6, 2, 0.0, 0.0), Some(Policy::fedlama(6, 2)));
+        assert_eq!(
+            policy_of("divergence-feedback", 6, 2, 0.05, 0.0),
+            Some(Policy::divergence_feedback(6, 2, 0.05))
+        );
+        assert_eq!(
+            policy_of("personalized", 6, 2, 0.0, 0.25),
+            Some(Policy::personalized(6, 0.25))
+        );
+        assert!(policy_of("nope", 6, 2, 0.0, 0.0).is_none());
     }
 }

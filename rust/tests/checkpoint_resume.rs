@@ -125,6 +125,62 @@ fn resume_is_bit_identical_with_workers() {
     assert_resume_bit_identical(cfg, 2, "workers");
 }
 
+/// Divergence-feedback's skip decision depends on discrepancies observed
+/// in earlier rounds; the snapshot carries the observation flags and last
+/// measured values, so a resumed run skips exactly the groups the
+/// uninterrupted run skips — byte totals included.
+#[test]
+fn resume_is_bit_identical_under_divergence_feedback() {
+    let cfg = RunConfig {
+        policy: Policy::divergence_feedback(2, 2, 0.05),
+        ..base_cfg()
+    };
+    assert_resume_bit_identical(cfg, 2, "divfb");
+}
+
+/// SCAFFOLD is the hard case for resume: the server control s_t and every
+/// client's control variate c_i must come back out of the snapshot (the
+/// registry spills them; the coordinator re-broadcasts both as catch-up
+/// `ControlUpdate`/`AlgoState` frames) or the resumed run drifts silently.
+#[test]
+fn resume_restores_scaffold_control_variates() {
+    let cfg = RunConfig {
+        algorithm: Algorithm::Scaffold,
+        use_chunk: false,
+        ..base_cfg()
+    };
+    assert_resume_bit_identical(cfg, 2, "scaffold");
+}
+
+/// FedNova's normalized fold is recomputed from wire state each round, so
+/// resume only needs the core snapshot — but the heterogeneous step
+/// budgets make the participant fast-forward replay earn its keep.
+#[test]
+fn resume_is_bit_identical_under_fednova() {
+    let cfg = RunConfig {
+        algorithm: Algorithm::Nova,
+        hetero_local_steps: true,
+        use_chunk: false,
+        ..base_cfg()
+    };
+    assert_resume_bit_identical(cfg, 3, "fednova");
+}
+
+/// The personalized policy keeps blended client replicas on participants —
+/// state the snapshot cannot capture — so `--resume` refuses it loudly
+/// instead of restarting every client from the restored global.
+#[test]
+fn personalized_resume_is_refused_loudly() {
+    let cfg = RunConfig {
+        policy: Policy::personalized(2, 0.25),
+        checkpoint_dir: Some(ckpt_dir("personalized-refuse")),
+        resume: true,
+        ..base_cfg()
+    };
+    let err = cfg.validate().unwrap_err();
+    assert!(format!("{err:#}").contains("personalized"), "{err:#}");
+}
+
 /// A snapshot only resumes the configuration that wrote it; drift is
 /// refused loudly instead of silently diverging.
 #[test]

@@ -144,15 +144,101 @@ fn worker_threads_compose_with_process_sharding() {
 }
 
 #[test]
-fn scaffold_and_nova_refuse_multiprocess() {
-    for algo in [Algorithm::Scaffold, Algorithm::Nova] {
-        let cfg = RunConfig {
-            algorithm: algo,
-            policy: Policy::fedavg(6),
-            workers: 2,
-            iterations: 24,
-            ..base_cfg()
-        };
-        assert!(Coordinator::new(cfg).is_err(), "{} must reject --workers", algo.name());
+fn scaffold_bit_identical_across_workers() {
+    // SCAFFOLD's control variates ride the wire as AlgoState/ControlUpdate
+    // frames and the server fold runs on the coordinator in active order,
+    // so the multiprocess run must match in-proc bit-for-bit.
+    let cfg = RunConfig {
+        algorithm: Algorithm::Scaffold,
+        policy: Policy::fedavg(6),
+        iterations: 24,
+        use_chunk: false,
+        ..base_cfg()
+    };
+    assert_workers_bit_identical(cfg, 2, "scaffold/workers=2");
+}
+
+#[test]
+fn fednova_bit_identical_across_workers() {
+    // FedNova ships each client's raw round delta + step count; the
+    // normalized fold happens coordinator-side, so sharding cannot change
+    // the numerics — even with heterogeneous local step budgets.
+    let cfg = RunConfig {
+        algorithm: Algorithm::Nova,
+        policy: Policy::fedavg(6),
+        hetero_local_steps: true,
+        iterations: 24,
+        use_chunk: false,
+        ..base_cfg()
+    };
+    assert_workers_bit_identical(cfg, 2, "fednova/hetero/workers=2");
+}
+
+#[test]
+fn divergence_feedback_bit_identical_and_cheaper_uplink() {
+    // the uplink-skip decision is coordinator state (observed
+    // discrepancies live in the schedule), so the same groups skip on
+    // every transport; a generous threshold must actually cut bytes
+    let base = RunConfig {
+        partition: PartitionKind::Dirichlet { alpha: 0.1 },
+        ..base_cfg()
+    };
+    let plain = RunConfig { policy: Policy::fedlama(6, 2), ..base.clone() };
+    let skipping = RunConfig {
+        policy: Policy::divergence_feedback(6, 2, f64::MAX),
+        ..base.clone()
+    };
+    assert_workers_bit_identical(skipping.clone(), 2, "divfb/workers=2");
+    let (_, m_plain) = run_with_workers(&plain, 0);
+    let (_, m_skip) = run_with_workers(&skipping, 0);
+    assert!(
+        m_skip.total_bytes < m_plain.total_bytes,
+        "an always-skip threshold must reduce uplink bytes: {} !< {}",
+        m_skip.total_bytes,
+        m_plain.total_bytes
+    );
+    assert!(
+        m_skip.total_comm_cost < m_plain.total_comm_cost,
+        "and the Eq.9 ledger must agree: {} !< {}",
+        m_skip.total_comm_cost,
+        m_plain.total_comm_cost
+    );
+}
+
+#[test]
+fn divergence_feedback_threshold_zero_matches_fedlama_end_to_end() {
+    // threshold 0 means no observed discrepancy can fall below it, so no
+    // group ever skips: the whole run — curve, globals, ledger — must be
+    // byte-identical to plain fedlama (only the report tag differs)
+    let base = RunConfig {
+        partition: PartitionKind::Dirichlet { alpha: 0.1 },
+        ..base_cfg()
+    };
+    let plain = RunConfig { policy: Policy::fedlama(6, 2), ..base.clone() };
+    let zeroed = RunConfig { policy: Policy::divergence_feedback(6, 2, 0.0), ..base };
+    let (c_plain, m_plain) = run_with_workers(&plain, 0);
+    let (c_zero, m_zero) = run_with_workers(&zeroed, 0);
+    assert_eq!(m_plain.curve, m_zero.curve, "threshold=0: learning curve");
+    assert_eq!(m_plain.final_acc, m_zero.final_acc, "threshold=0: final_acc");
+    assert_eq!(m_plain.final_loss, m_zero.final_loss, "threshold=0: final_loss");
+    assert_eq!(m_plain.total_comm_cost, m_zero.total_comm_cost, "threshold=0: Eq.9 cost");
+    assert_eq!(m_plain.total_syncs, m_zero.total_syncs, "threshold=0: syncs");
+    assert_eq!(m_plain.total_bytes, m_zero.total_bytes, "threshold=0: bytes");
+    assert_eq!(m_plain.per_group, m_zero.per_group, "threshold=0: per-group ledger");
+    for (gt, (a, b)) in c_plain.global().iter().zip(c_zero.global()).enumerate() {
+        assert_eq!(a.data, b.data, "threshold=0: global tensor {gt} diverged");
     }
+}
+
+#[test]
+fn personalized_bit_identical_across_workers() {
+    // per-client lambda updates fold on the coordinator (registry-backed)
+    // and ride SyncDecision.mix; participants only apply their own weight
+    let cfg = RunConfig {
+        policy: Policy::personalized(6, 0.25),
+        partition: PartitionKind::Dirichlet { alpha: 0.3 },
+        iterations: 24,
+        ..base_cfg()
+    };
+    assert_workers_bit_identical(cfg, 2, "personalized/workers=2");
 }

@@ -17,8 +17,8 @@ use fedlama::config::{Algorithm, PartitionKind, RunConfig};
 use fedlama::data::DatasetKind;
 use fedlama::protocol::messages::{encode_tensor, update_stream_seed};
 use fedlama::protocol::{
-    Abort, BlockDone, Configure, Heartbeat, Hello, LayerUpdate, Message, Payload, RoundAssignment,
-    SyncDecision,
+    Abort, AlgoState, BlockDone, Configure, ControlUpdate, Heartbeat, Hello, LayerUpdate, Message,
+    Payload, RoundAssignment, SyncDecision,
 };
 use fedlama::util::prop::{forall, Strategy};
 use fedlama::util::rng::Rng;
@@ -59,15 +59,26 @@ fn rand_cfg(rng: &mut Rng) -> RunConfig {
         2 => Algorithm::Scaffold,
         _ => Algorithm::Nova,
     };
-    let policy = if rng.below(2) == 0 {
-        Policy::fedavg(1 + rng.below(12))
-    } else {
-        Policy::FedLama { tau: 1 + rng.below(12), phi: 1 + rng.below(4), accelerate: rng.below(2) == 0 }
+    let policy = match rng.below(4) {
+        0 => Policy::fedavg(1 + rng.below(12)),
+        1 => Policy::FedLama {
+            tau: 1 + rng.below(12),
+            phi: 1 + rng.below(4),
+            accelerate: rng.below(2) == 0,
+        },
+        2 => Policy::divergence_feedback(
+            1 + rng.below(12),
+            1 + rng.below(4),
+            rng.range_f64(0.0, 1.0),
+        ),
+        _ => Policy::personalized(1 + rng.below(12), rng.range_f64(0.01, 1.0)),
     };
-    let partition = match rng.below(3) {
+    let partition = match rng.below(5) {
         0 => PartitionKind::Iid,
         1 => PartitionKind::Dirichlet { alpha: rng.range_f64(0.01, 5.0) },
-        _ => PartitionKind::Writers,
+        2 => PartitionKind::Writers,
+        3 => PartitionKind::SingleClass,
+        _ => PartitionKind::PowerLaw { exponent: rng.range_f64(0.5, 3.0) },
     };
     let compressor = ["dense", "q4", "q8", "top10"][rng.below(4)].to_string();
     RunConfig {
@@ -101,7 +112,7 @@ struct MsgStrategy;
 impl Strategy for MsgStrategy {
     type Value = Message;
     fn generate(&self, rng: &mut Rng) -> Message {
-        match rng.below(9) {
+        match rng.below(11) {
             0 => Message::Hello(Hello {
                 version: rng.below(255) as u8,
                 worker_id: rng.below(64),
@@ -146,10 +157,21 @@ impl Strategy for MsgStrategy {
                 group: rng.below(64),
                 new_interval: 1 + rng.below(64),
                 new_params: (0..1 + rng.below(3)).map(|_| rand_f32s(rng, 120)).collect(),
+                mix: (0..rng.below(8)).map(|_| (rng.below(1024), rng.f32())).collect(),
             }),
             7 => Message::Abort(Abort {
                 worker_id: rng.below(64),
                 reason: "x".repeat(rng.below(96)),
+            }),
+            8 => Message::Algo(AlgoState {
+                k: rng.below(100_000),
+                client: rng.below(1024),
+                steps: rng.next_u64() % 10_000,
+                tensors: (0..1 + rng.below(3)).map(|_| rand_f32s(rng, 120)).collect(),
+            }),
+            9 => Message::Control(ControlUpdate {
+                k: rng.below(100_000),
+                tensors: (0..1 + rng.below(3)).map(|_| rand_f32s(rng, 120)).collect(),
             }),
             _ => Message::Shutdown,
         }

@@ -89,6 +89,8 @@ fn streamed_messages_round_trip_under_arbitrary_chunking() {
                 new_interval: 6,
                 // includes an empty tensor: zero-length frames must work
                 new_params: vec![randvec(n, 5), Vec::new(), randvec(7, 6)],
+                // personalized mixing weights ride the Begin frame
+                mix: vec![(0, 0.75), (n % 7, 1.0)],
             }),
             Message::Heartbeat(Heartbeat { nonce: n as u64 }),
         ];

@@ -1,0 +1,130 @@
+#!/usr/bin/env python3
+"""Gate a fresh `fedlama bench` artifact against the committed baseline.
+
+Used by the nightly-bench workflow: the full (non --quick) bench runs on
+the scheduled runner and this script fails the job if any section
+regressed more than the tolerance (default 20%) versus the committed
+BENCH_kernels.json.
+
+The baseline starts life as an unmeasured skeleton (measured: false,
+null metrics).  Anything unmeasured is *skipped, loudly*: a null on
+either side, a whole unmeasured baseline, or an entry the other artifact
+does not carry gates nothing — but each skip is printed so a silently
+shrinking gate is visible in the job log.  The fresh artifact itself
+must be measured; an unmeasured nightly run is a broken run.
+
+Metric direction is inferred from the field name: *ns_per_iter / *_ns /
+*_secs / *_ms are times (lower is better), *_per_s / *gflops /
+*speedup* are rates (higher is better).  Deterministic fields (bytes,
+frame counts, dispatch names) are never gated — they are correctness
+surface, not performance.
+"""
+
+import argparse
+import json
+import sys
+
+LOWER_IS_BETTER = ("ns_per_iter", "_ns", "_secs", "_ms", "peak_rss_bytes")
+HIGHER_IS_BETTER = ("_per_s", "gflops", "speedup_vs_scalar")
+
+
+def direction(field):
+    for suffix in LOWER_IS_BETTER:
+        if field.endswith(suffix):
+            return "lower"
+    for suffix in HIGHER_IS_BETTER:
+        if field.endswith(suffix):
+            return "higher"
+    return None
+
+
+def identity(entry):
+    """An entry's identity is its string-valued fields (kernel, shape,
+    model, path, ...) — stable across reruns, unlike the metrics."""
+    return tuple(sorted((k, v) for k, v in entry.items() if isinstance(v, str)))
+
+
+def entries_of(doc, section):
+    val = doc.get(section)
+    if val is None:
+        return []
+    if isinstance(val, dict):  # the pool section is one flat object
+        return [val] if val else []
+    return val
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="committed BENCH_kernels.json")
+    ap.add_argument("fresh", help="artifact from this nightly run")
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=0.20,
+        help="allowed fractional regression per metric (default 0.20)",
+    )
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        base = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+
+    for name, doc in ((args.baseline, base), (args.fresh, fresh)):
+        if doc.get("schema") != 1:
+            sys.exit(f"{name}: unknown schema {doc.get('schema')!r}")
+    if fresh.get("measured") is not True:
+        sys.exit(f"{args.fresh}: nightly artifact is not measured — broken bench run")
+    if base.get("measured") is not True:
+        print(
+            f"SKIP all: {args.baseline} is an unmeasured skeleton — regenerate it "
+            "with `cargo run --release -- bench` and commit the diff to arm this gate"
+        )
+        return
+
+    regressions = []
+    compared = skipped = 0
+    for section in ("kernels", "ops", "end_to_end", "pool", "transport"):
+        base_by_id = {identity(e): e for e in entries_of(base, section)}
+        fresh_by_id = {identity(e): e for e in entries_of(fresh, section)}
+        for ident, be in base_by_id.items():
+            label = f"{section}[{', '.join(v for _, v in ident)}]" if ident else section
+            fe = fresh_by_id.get(ident)
+            if fe is None:
+                print(f"SKIP {label}: entry absent from fresh artifact")
+                skipped += 1
+                continue
+            for field, bv in be.items():
+                sense = direction(field)
+                if sense is None:
+                    continue
+                fv = fe.get(field)
+                if bv is None or fv is None:
+                    print(f"SKIP {label}.{field}: unmeasured (null)")
+                    skipped += 1
+                    continue
+                if sense == "lower":
+                    worse = fv > bv * (1.0 + args.tolerance)
+                    change = (fv - bv) / bv
+                else:
+                    worse = fv < bv * (1.0 - args.tolerance)
+                    change = (bv - fv) / bv
+                compared += 1
+                if worse:
+                    regressions.append(
+                        f"{label}.{field}: {bv} -> {fv} "
+                        f"({change:+.1%} worse, tolerance {args.tolerance:.0%})"
+                    )
+
+    print(f"compared {compared} metrics, skipped {skipped} unmeasured/missing")
+    if regressions:
+        print(f"\n{len(regressions)} regression(s) beyond tolerance:")
+        for r in regressions:
+            print(f"  REGRESSION {r}")
+        sys.exit(1)
+    if compared == 0:
+        print("note: nothing was comparable — the gate is currently a no-op")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+#!/usr/bin/env python3
+"""Assert a divergence-feedback run actually cut uplink traffic.
+
+Compares two fedlama run reports over the same scenario: `plain` (the
+FedLAMA schedule, every due group uplinks at its sync point) and
+`skipping` (divergence-feedback, under-threshold groups keep training
+and skip the uplink).  The skipping run must come in strictly below the
+plain run on *both* the measured wire bytes and the Eq.9 communication
+cost — if only one of the two drops, the ledger and the transport
+disagree about what was actually sent, which is exactly the bug this
+gate exists to catch.
+"""
+
+import argparse
+import json
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("plain", help="report of the plain FedLAMA run")
+    ap.add_argument("skipping", help="report of the divergence-feedback run")
+    args = ap.parse_args()
+
+    with open(args.plain) as f:
+        plain = json.load(f)
+    with open(args.skipping) as f:
+        skip = json.load(f)
+
+    failed = False
+    for key in ("total_bytes", "total_comm_cost"):
+        for name, doc in ((args.plain, plain), (args.skipping, skip)):
+            if key not in doc:
+                sys.exit(f"{name}: missing key {key!r}")
+        p, s = plain[key], skip[key]
+        if s < p:
+            print(f"{key}: {s} < {p} ({(1 - s / p):.1%} saved)")
+        else:
+            print(f"FAIL {key}: skipping run must be strictly cheaper: {s} !< {p}")
+            failed = True
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()
